@@ -1,0 +1,48 @@
+//! Quickstart: load the artifacts, run one confidence-aware prediction.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Walks the public API end to end: runtime -> engine -> MC-Dropout
+//! inference -> ensemble aggregation -> energy estimate.
+
+use mc_cim::bayes::ClassEnsemble;
+use mc_cim::coordinator::{EngineConfig, McDropoutEngine, NetKind};
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::runtime::Runtime;
+use mc_cim::workloads::{mnist::MnistTest, Meta, ARTIFACTS_DIR};
+
+fn main() -> anyhow::Result<()> {
+    // 1. the PJRT CPU client (python is NOT involved from here on)
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 2. artifact metadata + the compiled MNIST engine
+    let meta = Meta::load(ARTIFACTS_DIR)?;
+    let engine =
+        McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &EngineConfig::new(NetKind::Mnist))?;
+    println!("network: {:?}, MC batch {}", engine.dims(), engine.mc_batch());
+
+    // 3. one test image, 30 MC-Dropout iterations
+    let test = MnistTest::load(ARTIFACTS_DIR)?;
+    let mut dropout_bits = IdealBernoulli::new(engine.mask_keep(), 42);
+    let out = engine.infer_mc(&test.images[0], 30, &mut dropout_bits)?;
+
+    // 4. aggregate: prediction + confidence
+    let mut ensemble = ClassEnsemble::new(engine.out_dim());
+    for sample in &out.samples {
+        ensemble.add_logits(sample);
+    }
+    println!(
+        "label {} -> prediction {} | confidence {:.2} | normalized entropy {:.3}",
+        test.labels[0],
+        ensemble.prediction(),
+        ensemble.confidence(),
+        ensemble.entropy()
+    );
+    println!(
+        "modeled CIM energy for the request: {:.1} pJ ({} macro-tiled layers)",
+        out.energy_pj,
+        engine.dims().len() - 1
+    );
+    Ok(())
+}

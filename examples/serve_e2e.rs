@@ -1,0 +1,154 @@
+//! End-to-end serving driver (DESIGN.md §5, recorded in EXPERIMENTS.md).
+//!
+//!     cargo run --release --example serve_e2e [-- --workers 4 --requests 200]
+//!
+//! Starts the full coordinator (router + worker pool, each worker with
+//! its own PJRT runtime + compiled engines), submits a mixed stream of
+//! classification requests over rotated test images plus VO regression
+//! requests, and reports:
+//!
+//!   * throughput (requests/s) and p50/p95 latency,
+//!   * accuracy + mean confidence split by clean/rotated inputs
+//!     (confidence must drop on rotated inputs — that is the product),
+//!   * modeled CIM energy per request in each operating mode.
+
+use mc_cim::config::Args;
+use mc_cim::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
+use mc_cim::util::Pcg32;
+use mc_cim::workloads::vo::VoTest;
+use mc_cim::workloads::{image, mnist::MnistTest, Meta, ARTIFACTS_DIR};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let workers = args.get_usize("workers", 4).map_err(anyhow::Error::msg)?;
+    let requests = args.get_usize("requests", 200).map_err(anyhow::Error::msg)?;
+    let samples = args.get_usize("samples", 30).map_err(anyhow::Error::msg)?;
+
+    let _meta = Meta::load(ARTIFACTS_DIR)?;
+    let test = MnistTest::load(ARTIFACTS_DIR)?;
+    let vo = VoTest::load(ARTIFACTS_DIR)?;
+
+    println!("starting coordinator: {workers} workers, {requests} requests x {samples} samples");
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        ..Default::default()
+    })?;
+
+    // mixed request stream: 60% clean classify, 20% rotated classify,
+    // 20% VO regression
+    let mut rng = Pcg32::seeded(2026);
+    enum Kind {
+        Clean(usize),
+        Rotated(usize, f32),
+        Pose(usize),
+    }
+    let stream: Vec<Kind> = (0..requests)
+        .map(|_| {
+            let u = rng.f64();
+            if u < 0.6 {
+                Kind::Clean(rng.below(test.len()))
+            } else if u < 0.8 {
+                Kind::Rotated(rng.below(test.len()), rng.uniform(60.0, 150.0) as f32)
+            } else {
+                Kind::Pose(rng.below(vo.len()))
+            }
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = stream
+        .iter()
+        .map(|k| match k {
+            Kind::Clean(i) => coord.submit(Request::Classify {
+                image: test.images[*i].clone(),
+                samples,
+            }),
+            Kind::Rotated(i, deg) => coord.submit(Request::Classify {
+                image: image::rotate_pm1(&test.images[*i], 28, *deg),
+                samples,
+            }),
+            Kind::Pose(i) => coord.submit(Request::Regress {
+                features: vo.features[*i].clone(),
+                samples,
+            }),
+        })
+        .collect();
+
+    let (mut n_clean, mut ok_clean, mut conf_clean) = (0usize, 0usize, 0.0f64);
+    let (mut n_rot, mut ok_rot, mut conf_rot) = (0usize, 0usize, 0.0f64);
+    let (mut n_pose, mut var_pose) = (0usize, 0.0f64);
+    let mut energy_pj = 0.0f64;
+    for (k, rx) in stream.iter().zip(handles) {
+        match (k, rx.recv()?) {
+            (Kind::Clean(i), Response::Class(c)) => {
+                n_clean += 1;
+                conf_clean += c.confidence;
+                if c.prediction as i32 == test.labels[*i] {
+                    ok_clean += 1;
+                }
+                energy_pj += c.energy_pj;
+            }
+            (Kind::Rotated(i, _), Response::Class(c)) => {
+                n_rot += 1;
+                conf_rot += c.confidence;
+                if c.prediction as i32 == test.labels[*i] {
+                    ok_rot += 1;
+                }
+                energy_pj += c.energy_pj;
+            }
+            (Kind::Pose(_), Response::Pose { variance, energy_pj: e, .. }) => {
+                n_pose += 1;
+                var_pose += variance[..3].iter().sum::<f64>();
+                energy_pj += e;
+            }
+            (_, Response::Error(e)) => anyhow::bail!("request failed: {e}"),
+            _ => anyhow::bail!("response type mismatch"),
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("\n== e2e results ==");
+    println!(
+        "throughput: {:.1} req/s ({} requests in {:.2}s, {} MC rows total)",
+        requests as f64 / dt,
+        requests,
+        dt,
+        coord.metrics.rows()
+    );
+    println!("{}", coord.metrics.summary());
+    println!(
+        "clean classify : n={n_clean:4}  accuracy {:.3}  mean confidence {:.3}",
+        ok_clean as f64 / n_clean.max(1) as f64,
+        conf_clean / n_clean.max(1) as f64
+    );
+    println!(
+        "rotated classify: n={n_rot:4}  accuracy {:.3}  mean confidence {:.3}   <- confidence must drop",
+        ok_rot as f64 / n_rot.max(1) as f64,
+        conf_rot / n_rot.max(1) as f64
+    );
+    println!(
+        "pose regression : n={n_pose:4}  mean positional variance {:.4}",
+        var_pose / n_pose.max(1) as f64
+    );
+    println!(
+        "modeled CIM energy: {:.1} nJ total, {:.1} pJ mean/request",
+        energy_pj / 1000.0,
+        energy_pj / requests as f64
+    );
+
+    // per-mode energy context for one request (Fig. 9 scaled)
+    let em = EnergyModel::paper_default();
+    let w = LayerWorkload::paper_default();
+    println!("\nper-macro-tile 30-iteration energy by mode (Fig. 9):");
+    for m in [
+        ModeConfig::typical(),
+        ModeConfig::mf_asym_reuse(),
+        ModeConfig::mf_asym_reuse_ordered(),
+    ] {
+        println!("  {:42} {:6.1} pJ", m.label(), em.inference_energy(&w, &m).total_pj());
+    }
+    coord.shutdown();
+    Ok(())
+}

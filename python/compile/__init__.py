@@ -1,0 +1,14 @@
+"""MC-CIM build-time compile path (Layer 1 + Layer 2).
+
+Everything under this package runs ONCE, at `make artifacts` time:
+
+  * `kernels/`  — Pallas MF-operator kernel + pure-jnp oracle (L1)
+  * `model.py`  — MF-MLP networks for MNIST and visual odometry (L2)
+  * `data.py`   — synthetic digit corpus + synthetic VO trajectories
+  * `train.py`  — quantization-friendly training (hand-rolled Adam)
+  * `aot.py`    — lowers the jitted forwards to HLO *text* and dumps
+                  weights/test-sets for the rust coordinator
+
+Python never runs on the request path; the rust binary is self-contained
+once `artifacts/` is built.
+"""

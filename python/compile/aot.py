@@ -1,0 +1,124 @@
+"""AOT export: lower the L2 forwards to HLO *text* + dump artifacts.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out-dir (default ../artifacts):
+
+  mnist.hlo.txt / mnist_ref.hlo.txt    pallas-kernel / pure-jnp graphs
+  vo.hlo.txt / vo_ref.hlo.txt          (same pair for the VO net)
+  vo_thin.hlo.txt                      thin-VO ablation graph
+  mnist_weights.bin, vo_weights.bin, vo_thin_weights.bin   (MCT1)
+  mnist_test.bin     x[1000,784], y[1000]
+  mnist_rot3.bin     x[12,784] rotations of digit '3', angles[12]
+  vo_test.bin        x[868,256], poses[868,6] (normalized)
+  meta.json          dims, batch, dropout p, train metrics, pose norm
+
+Run: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, train
+from .io_utils import write_tensors
+from .model import (DROPOUT_P, MC_BATCH, MNIST_DIMS, VO_DIMS, VO_THIN_DIMS,
+                    forward_arg_specs, mnist_forward, param_names,
+                    vo_forward, vo_thin_forward)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_forward(fn, dims, path: str, *, use_pallas: bool, batch: int = MC_BATCH):
+    wrapped = functools.partial(fn, use_pallas=use_pallas)
+    specs = forward_arg_specs(dims, batch)
+    lowered = jax.jit(wrapped).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} chars, pallas={use_pallas})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--fast", action="store_true",
+                    help="short training run (smoke/CI)")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+
+    results = train.train_all(fast=args.fast)
+
+    # --- graphs -------------------------------------------------------
+    export_forward(mnist_forward, MNIST_DIMS, f"{out}/mnist.hlo.txt",
+                   use_pallas=True)
+    export_forward(mnist_forward, MNIST_DIMS, f"{out}/mnist_ref.hlo.txt",
+                   use_pallas=False)
+    export_forward(vo_forward, VO_DIMS, f"{out}/vo.hlo.txt", use_pallas=True)
+    export_forward(vo_forward, VO_DIMS, f"{out}/vo_ref.hlo.txt",
+                   use_pallas=False)
+    export_forward(vo_thin_forward, VO_THIN_DIMS, f"{out}/vo_thin.hlo.txt",
+                   use_pallas=False)
+
+    # --- weights ------------------------------------------------------
+    for key, fname in [("mnist", "mnist_weights.bin"), ("vo", "vo_weights.bin"),
+                       ("vo_thin", "vo_thin_weights.bin")]:
+        r = results[key]
+        ordered = {n: r["params"][n] for n in param_names(r["dims"])}
+        write_tensors(f"{out}/{fname}", ordered)
+        print(f"[aot] wrote {out}/{fname}")
+
+    # --- test sets ----------------------------------------------------
+    xte, yte = results["mnist"]["test"]
+    write_tensors(f"{out}/mnist_test.bin", {"x": xte, "y": yte})
+    rx, rangles = data.rotated_three_set()
+    write_tensors(f"{out}/mnist_rot3.bin", {"x": rx, "angles": rangles})
+    xv, yv = results["vo"]["test"]
+    write_tensors(f"{out}/vo_test.bin", {"x": xv, "pose": yv})
+    # front-end weights so the rust serving path can embed arbitrary poses
+    omega, phi0 = data._frontend_weights()
+    write_tensors(f"{out}/vo_frontend.bin", {"omega": omega, "phi0": phi0})
+    print(f"[aot] wrote test sets")
+
+    # --- meta ---------------------------------------------------------
+    meta = {
+        "mc_batch": MC_BATCH,
+        "dropout_p": DROPOUT_P,
+        "mnist_mask_keep": train.MNIST_MASK_KEEP,
+        "vo_mask_keep": train.VO_MASK_KEEP,
+        "mnist_dims": MNIST_DIMS,
+        "vo_dims": VO_DIMS,
+        "vo_thin_dims": VO_THIN_DIMS,
+        "mnist_acc_det": results["mnist"]["acc_det"],
+        "mnist_acc_mc": results["mnist"]["acc_mc"],
+        "vo_err": results["vo"]["err"],
+        "vo_thin_err": results["vo_thin"]["err"],
+        "pose_mean": [float(v) for v in data.POSE_MEAN],
+        "pose_scale": [float(v) for v in data.POSE_SCALE],
+        "weight_clip": train.WEIGHT_CLIP,
+    }
+    with open(f"{out}/meta.json", "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"[aot] wrote {out}/meta.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Synthetic datasets for the two benchmark applications.
+
+DESIGN.md §3 substitutions:
+
+  * MNIST [24]            -> procedural 28x28 digit corpus rendered from a
+                             5x7 stroke font with affine jitter + noise.
+                             Same 10-class task, same rotation protocol
+                             (Fig. 12 rotates digit '3' twelve times).
+  * RGB-D Scenes v2 [27]  -> a synthetic "landmark room": fixed random 3D
+                             landmarks observed by a pinhole camera moving
+                             along smooth trajectories; the 16x16 splat
+                             image is the network input, the 6-DoF pose
+                             the regression target. Scenes 1-3 train,
+                             scene 4 (868 sequential frames) tests —
+                             matching the paper's split sizes.
+
+Everything is deterministic given the seed so `make artifacts` is
+reproducible and the rust integration tests can hard-code expectations.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+# ----------------------------------------------------------------------
+# Synthetic digits
+# ----------------------------------------------------------------------
+
+# Classic 5x7 bitmap font, rows top->bottom, '#' = ink.
+_FONT = {
+    0: [".###.", "#...#", "#..##", "#.#.#", "##..#", "#...#", ".###."],
+    1: ["..#..", ".##..", "..#..", "..#..", "..#..", "..#..", ".###."],
+    2: [".###.", "#...#", "....#", "...#.", "..#..", ".#...", "#####"],
+    3: [".###.", "#...#", "....#", "..##.", "....#", "#...#", ".###."],
+    4: ["...#.", "..##.", ".#.#.", "#..#.", "#####", "...#.", "...#."],
+    5: ["#####", "#....", "####.", "....#", "....#", "#...#", ".###."],
+    6: [".###.", "#....", "#....", "####.", "#...#", "#...#", ".###."],
+    7: ["#####", "....#", "...#.", "..#..", ".#...", ".#...", ".#..."],
+    8: [".###.", "#...#", "#...#", ".###.", "#...#", "#...#", ".###."],
+    9: [".###.", "#...#", "#...#", ".####", "....#", "....#", ".###."],
+}
+
+IMG = 28  # image side
+N_CLASSES = 10
+
+
+def _glyph(digit: int) -> np.ndarray:
+    rows = _FONT[digit]
+    g = np.array([[1.0 if c == "#" else 0.0 for c in r] for r in rows], np.float32)
+    return g  # [7, 5]
+
+
+def _smooth(img: np.ndarray, passes: int = 1) -> np.ndarray:
+    """Cheap 3x3 box blur to soften the bitmap edges into pen strokes."""
+    out = img
+    for _ in range(passes):
+        p = np.pad(out, 1)
+        out = (
+            p[:-2, :-2] + p[:-2, 1:-1] + p[:-2, 2:]
+            + p[1:-1, :-2] + p[1:-1, 1:-1] + p[1:-1, 2:]
+            + p[2:, :-2] + p[2:, 1:-1] + p[2:, 2:]
+        ) / 9.0
+    return out
+
+
+def rotate_bilinear(img: np.ndarray, deg: float) -> np.ndarray:
+    """Rotate a square image about its centre with bilinear sampling.
+
+    Mirrored by `workloads/image.rs` on the rust side (integration test
+    checks agreement to 1e-5) so the serving path can rotate arbitrary
+    requests without python.
+    """
+    h, w = img.shape
+    cy, cx = (h - 1) / 2.0, (w - 1) / 2.0
+    th = np.deg2rad(deg)
+    ct, st = np.cos(th), np.sin(th)
+    ys, xs = np.mgrid[0:h, 0:w].astype(np.float32)
+    # inverse mapping: output pixel <- rotate by -theta around centre
+    sx = ct * (xs - cx) + st * (ys - cy) + cx
+    sy = -st * (xs - cx) + ct * (ys - cy) + cy
+    x0 = np.floor(sx).astype(int)
+    y0 = np.floor(sy).astype(int)
+    fx, fy = sx - x0, sy - y0
+    out = np.zeros_like(img)
+    for dy in (0, 1):
+        for dx in (0, 1):
+            xi = np.clip(x0 + dx, 0, w - 1)
+            yi = np.clip(y0 + dy, 0, h - 1)
+            wgt = (fx if dx else 1 - fx) * (fy if dy else 1 - fy)
+            valid = (sx >= -1) & (sx <= w) & (sy >= -1) & (sy <= h)
+            out += np.where(valid, img[yi, xi] * wgt, 0.0)
+    return out.astype(np.float32)
+
+
+def render_digit(digit: int, rng: np.random.Generator) -> np.ndarray:
+    """One jittered 28x28 sample of `digit`, values in [0, 1]."""
+    g = _glyph(digit)
+    # Upscale 5x7 -> 20x28-ish via nearest, then thicken/smooth.
+    scale_y = rng.uniform(2.4, 3.0)
+    scale_x = rng.uniform(2.8, 3.6)
+    hh, ww = int(7 * scale_y), int(5 * scale_x)
+    yi = np.minimum((np.arange(hh) / scale_y).astype(int), 6)
+    xi = np.minimum((np.arange(ww) / scale_x).astype(int), 4)
+    big = g[np.ix_(yi, xi)]
+    big = _smooth(big, passes=rng.integers(1, 3))
+    canvas = np.zeros((IMG, IMG), np.float32)
+    oy = (IMG - hh) // 2 + rng.integers(-2, 3)
+    ox = (IMG - ww) // 2 + rng.integers(-2, 3)
+    oy, ox = int(np.clip(oy, 0, IMG - hh)), int(np.clip(ox, 0, IMG - ww))
+    canvas[oy : oy + hh, ox : ox + ww] = big
+    canvas = rotate_bilinear(canvas, float(rng.uniform(-8.0, 8.0)))
+    canvas += rng.normal(0, 0.04, canvas.shape).astype(np.float32)
+    canvas *= float(rng.uniform(0.85, 1.15))
+    return np.clip(canvas, 0.0, 1.0)
+
+
+def digits_dataset(n: int, seed: int) -> Tuple[np.ndarray, np.ndarray]:
+    """n samples, balanced over classes. Returns (x[n,784] in [-1,1], y[n])."""
+    rng = np.random.default_rng(seed)
+    xs = np.zeros((n, IMG * IMG), np.float32)
+    ys = np.zeros((n,), np.int32)
+    for i in range(n):
+        d = i % N_CLASSES
+        xs[i] = render_digit(d, rng).reshape(-1)
+        ys[i] = d
+    perm = rng.permutation(n)
+    # Centre to [-1, 1]: sign(x) in the MF operator needs signed inputs.
+    return (xs[perm] * 2.0 - 1.0), ys[perm]
+
+
+def rotated_three_set(seed: int = 7, n_rot: int = 12) -> Tuple[np.ndarray, np.ndarray]:
+    """Fig. 12 protocol: one clean '3', rotated by increasing angles.
+
+    Returns (x[n_rot, 784] in [-1,1], angles[n_rot] degrees). Image-ID 1
+    is the unrotated original; disorientation grows with index.
+    """
+    rng = np.random.default_rng(seed)
+    base = render_digit(3, rng)
+    angles = np.linspace(0.0, 165.0, n_rot).astype(np.float32)
+    xs = np.stack([rotate_bilinear(base, float(a)).reshape(-1) for a in angles])
+    return xs * 2.0 - 1.0, angles
+
+
+# ----------------------------------------------------------------------
+# Synthetic visual odometry (landmark room)
+# ----------------------------------------------------------------------
+
+VO_IMG = 16  # input is a 16x16 landmark splat image -> 256 features
+N_LANDMARKS = 60
+ROOM = np.array([4.0, 4.0, 3.0], np.float32)  # metres
+FOCAL = 12.0  # pixels
+
+
+def landmarks(seed: int = 42) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.uniform(0.05, 0.95, size=(N_LANDMARKS, 3)) * ROOM).astype(np.float32)
+
+
+def _rot_zyx(yaw: float, pitch: float, roll: float) -> np.ndarray:
+    cy, sy = np.cos(yaw), np.sin(yaw)
+    cp, sp = np.cos(pitch), np.sin(pitch)
+    cr, sr = np.cos(roll), np.sin(roll)
+    rz = np.array([[cy, -sy, 0], [sy, cy, 0], [0, 0, 1]])
+    ry = np.array([[cp, 0, sp], [0, 1, 0], [-sp, 0, cp]])
+    rx = np.array([[1, 0, 0], [0, cr, -sr], [0, sr, cr]])
+    return (rz @ ry @ rx).astype(np.float32)
+
+
+def render_view(pose: np.ndarray, lms: np.ndarray,
+                noise: float = 0.02, rng=None) -> np.ndarray:
+    """Render the 16x16 splat image seen from `pose` = (x,y,z,yaw,pitch,roll).
+
+    Landmarks in front of the camera are projected with a pinhole model
+    and splatted as 2x2 bilinear footprints with inverse-depth intensity —
+    a stand-in for the RGB-D appearance stream that preserves what the
+    regression needs: image content that varies smoothly with pose.
+    """
+    p, ang = pose[:3], pose[3:]
+    r = _rot_zyx(*ang)
+    cam = (lms - p) @ r  # world -> camera (camera looks along +x)
+    img = np.zeros((VO_IMG, VO_IMG), np.float32)
+    c = (VO_IMG - 1) / 2.0
+    for q in cam:
+        depth = q[0]
+        if depth < 0.2:
+            continue
+        u = c + FOCAL * q[1] / depth
+        v = c + FOCAL * q[2] / depth
+        if not (-1 <= u < VO_IMG and -1 <= v < VO_IMG):
+            continue
+        u0, v0 = int(np.floor(u)), int(np.floor(v))
+        fu, fv = u - u0, v - v0
+        inten = min(1.0, 1.2 / depth)
+        for dv in (0, 1):
+            for du in (0, 1):
+                uu, vv = u0 + du, v0 + dv
+                if 0 <= uu < VO_IMG and 0 <= vv < VO_IMG:
+                    wgt = (fu if du else 1 - fu) * (fv if dv else 1 - fv)
+                    img[vv, uu] += inten * wgt
+    if noise > 0 and rng is not None:
+        img += rng.normal(0, noise, img.shape).astype(np.float32)
+    return np.clip(img, 0.0, 1.5)
+
+
+def trajectory_extended(scene: int, n_frames: int) -> np.ndarray:
+    """Test-time variant of `trajectory`: the drone's radial excursion is
+    modulated so parts of the path leave the region the training scenes
+    cover (amplitude scale 0.6..1.7 around the room centre). This is the
+    coverage gap a real train/test scene split exhibits, and it is what
+    makes the error-uncertainty correlation of Fig. 13(d) observable:
+    off-manifold segments carry both higher pose error and higher
+    MC-Dropout dispersion."""
+    p = trajectory(scene, n_frames)
+    t = np.linspace(0, 2 * np.pi, n_frames, endpoint=False)
+    s = (1.15 + 0.55 * np.sin(3.0 * t + 0.4)).astype(np.float32)[:, None]
+    centre = POSE_MEAN[None, :]
+    out = centre + (p - centre) * s
+    out[:, :3] = np.clip(out[:, :3], 0.1, ROOM - 0.1)
+    return out.astype(np.float32)
+
+
+def trajectory(scene: int, n_frames: int) -> np.ndarray:
+    """Smooth closed trajectory for scene id. Returns poses [n, 6].
+
+    Lissajous-style paths with scene-dependent phase/extent so the four
+    scenes cover the room differently (train/test generalization gap like
+    the RGB-D scenes split).
+    """
+    t = np.linspace(0, 2 * np.pi, n_frames, endpoint=False)
+    ph = 0.9 * scene
+    ax, ay = 1.2 + 0.15 * scene, 1.0 + 0.1 * scene
+    x = 2.0 + ax * np.sin(t + ph)
+    y = 2.0 + ay * np.sin(2 * t + 1.3 * ph)
+    z = 1.5 + 0.4 * np.sin(3 * t + 0.5 * ph)
+    yaw = 0.6 * np.sin(t + 0.7 * ph)
+    pitch = 0.25 * np.sin(2 * t + ph)
+    roll = 0.15 * np.sin(3 * t + 1.1 * ph)
+    return np.stack([x, y, z, yaw, pitch, roll], axis=1).astype(np.float32)
+
+
+# Pose normalization so all six targets are O(1) for the regressor;
+# mirrored in rust (workloads/vo.rs) to de-normalize predictions.
+POSE_MEAN = np.array([2.0, 2.0, 1.5, 0.0, 0.0, 0.0], np.float32)
+POSE_SCALE = np.array([1.5, 1.5, 0.5, 0.7, 0.3, 0.2], np.float32)
+
+
+# --- visual front-end -------------------------------------------------
+#
+# The paper's VO pipeline is Inception-v3 features -> PoseNet-style
+# fully-connected regression head, with MC-Dropout applied in the head.
+# We cannot train an Inception front-end at build time, so the default
+# front-end is a *random-Fourier pose embedding with measurement noise*:
+# a fixed smooth injective map phi(pose) = cos(Omega^T pose + phi0) that
+# stands in for "a good visual feature extractor evaluated at this
+# camera pose". (The raw landmark-splat renderer above remains available
+# via frontend="splat" and in unit tests; bring-up measurements showed a
+# 16x16 splat image under-determines 6-DoF pose — 1-NN localization is
+# no better than mean prediction — so it would benchmark the *task*, not
+# the paper's MC-Dropout head. See DESIGN.md §3.)
+
+VO_FEAT = 256
+_FRONTEND_SEED = 99
+_BANDWIDTH = np.array([2.0, 2.0, 2.0, 1.5, 1.5, 1.5], np.float32)
+
+
+def _frontend_weights():
+    rng = np.random.default_rng(_FRONTEND_SEED)
+    omega = rng.normal(0, 1, (6, VO_FEAT)).astype(np.float32) * _BANDWIDTH[:, None]
+    phi0 = rng.uniform(0, 2 * np.pi, VO_FEAT).astype(np.float32)
+    return omega, phi0
+
+
+_OMEGA, _PHI0 = _frontend_weights()
+
+
+def frontend_features(poses_normalized: np.ndarray, rng=None,
+                      noise: float = 0.05) -> np.ndarray:
+    """Fixed visual-front-end embedding of normalized poses [n, 6]."""
+    z = np.cos(poses_normalized @ _OMEGA + _PHI0)
+    if noise > 0 and rng is not None:
+        z = z + rng.normal(0, noise, z.shape)
+    return z.astype(np.float32)
+
+
+def vo_dataset(scenes, frames_per_scene: int, seed: int, jitter: float = 0.0,
+               frontend: str = "rff", extended: bool = False):
+    """Dataset over `scenes`. Returns (x[n,256], y[n,6] normalized poses).
+
+    jitter > 0 perturbs each trajectory pose (train-time only): the
+    regressor must generalize to the *pose manifold*, not memorize three
+    curves — the role played by the richer appearance variation of the
+    real RGB-D scenes. Position noise = jitter metres, angles jitter/3 rad.
+    """
+    rng = np.random.default_rng(seed)
+    lms = landmarks() if frontend == "splat" else None
+    xs, ys = [], []
+    traj_fn = trajectory_extended if extended else trajectory
+    for s in scenes:
+        poses = traj_fn(s, frames_per_scene)
+        for pose in poses:
+            p = pose.copy()
+            if jitter > 0:
+                p[:3] += rng.normal(0, jitter, 3).astype(np.float32)
+                p[3:] += rng.normal(0, jitter / 3.0, 3).astype(np.float32)
+                p[:3] = np.clip(p[:3], 0.2, ROOM - 0.2)
+            yn = (p - POSE_MEAN) / POSE_SCALE
+            if frontend == "splat":
+                img = render_view(p, lms, rng=rng)
+                xs.append(img.reshape(-1) * 2.0 - 1.0)
+            else:
+                xs.append(frontend_features(yn[None], rng)[0])
+            ys.append(yn)
+    return np.asarray(xs, np.float32), np.asarray(ys, np.float32)

@@ -1,0 +1,81 @@
+"""Tensor container I/O shared between the python compile path and rust.
+
+The image has no serde on the rust side and no interest in pulling a heavy
+format, so we use a tiny custom container ("MCT1"):
+
+    magic   : 4 bytes  b"MCT1"
+    count   : u32 LE   number of tensors
+    per tensor:
+        name_len : u16 LE
+        name     : utf-8 bytes
+        dtype    : u8    (0 = f32, 1 = i32)
+        ndim     : u8
+        dims     : ndim * u32 LE
+        data     : raw little-endian values, C order
+
+Rust reader lives in `rust/src/workloads/tensorfile.rs` and must be kept
+in sync with this writer (integration test `pipeline.rs` round-trips it).
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"MCT1"
+_DTYPES = {0: np.float32, 1: np.int32}
+_DTYPE_TAGS = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+
+
+def write_tensors(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    """Write a name->array dict to `path` in MCT1 format.
+
+    Arrays are converted to f32 unless they are integral, which become i32.
+    Insertion order of the dict is preserved in the file.
+    """
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.asarray(arr)
+            if np.issubdtype(arr.dtype, np.integer):
+                arr = arr.astype(np.int32)
+            else:
+                arr = arr.astype(np.float32)
+            tag = _DTYPE_TAGS[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", tag, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(np.ascontiguousarray(arr).tobytes())
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    """Read an MCT1 container back into a name->array dict."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {data[:4]!r}")
+    off = 4
+    (count,) = struct.unpack_from("<I", data, off)
+    off += 4
+    for _ in range(count):
+        (name_len,) = struct.unpack_from("<H", data, off)
+        off += 2
+        name = data[off : off + name_len].decode("utf-8")
+        off += name_len
+        tag, ndim = struct.unpack_from("<BB", data, off)
+        off += 2
+        dims = struct.unpack_from(f"<{ndim}I", data, off)
+        off += 4 * ndim
+        dt = np.dtype(_DTYPES[tag]).newbyteorder("<")
+        n = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(data, dtype=dt, count=n, offset=off).reshape(dims)
+        off += n * dt.itemsize
+        out[name] = arr.astype(_DTYPES[tag])
+    return out

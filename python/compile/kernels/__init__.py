@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels for MC-CIM.
+
+`mf_matmul` is the compute hot-spot: the multiplication-free (MF) operator
+product-sum of the paper (Eq. 1), tiled for a TPU-style memory hierarchy
+and executed in interpret mode on CPU PJRT.
+"""
+
+from .mf_matmul import mf_matmul  # noqa: F401
+from .ref import mf_matmul_ref  # noqa: F401

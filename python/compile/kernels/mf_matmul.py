@@ -1,0 +1,124 @@
+"""Pallas kernel for the multiplication-free (MF) operator product-sum.
+
+The paper's Eq. 1 correlates a weight matrix with an input batch without
+full multibit x multibit products:
+
+    out[b, n] = sum_k sign(x[b,k]) * |w[k,n]| + sign(w[k,n]) * |x[b,k]|
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper executes
+this bitplane-wise inside a 16x31 8T-SRAM array. On a TPU-shaped machine
+the analogue is a weight-stationary tile resident in VMEM with the input
+streamed through the MXU; the two sign/abs planes become two systolic
+passes over the same tile. The BlockSpec grid below expresses the
+HBM<->VMEM schedule the macro expresses with row/column activation, and
+the K-axis grid accumulation plays the role of the digital shift-add.
+
+interpret=True is mandatory in this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Interpret mode
+inlines the kernel into plain HLO, so the exported artifact runs on the
+rust CPU client with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mf_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    """One (b-tile, n-tile, k-tile) grid step.
+
+    o_ref is revisited across the K axis (its block index ignores k), so
+    we zero it on the first K step and accumulate the two sign/abs
+    matmuls afterwards — the in-VMEM accumulator pattern.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    # Two MXU passes per tile: 1-bit plane times multibit plane, twice.
+    acc = jnp.sign(x) @ jnp.abs(w) + jnp.abs(x) @ jnp.sign(w)
+    o_ref[...] += acc
+
+
+def _ceil_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k"))
+def mf_matmul(x, w, *, block_b: int = 8, block_n: int = 128, block_k: int = 128):
+    """MF-operator product-sum via a tiled Pallas kernel.
+
+    Args:
+      x: f32[B, K] input activations (quantized upstream).
+      w: f32[K, N] weights (quantized upstream).
+      block_b/n/n: tile sizes; shapes are zero-padded up to multiples.
+        Zero padding is exact for this operator: sign(0) = 0 and |0| = 0,
+        so padded rows/cols contribute nothing to the sum.
+
+    Returns:
+      f32[B, N] correlation out[b,n] = sum_k mf(x[b,k], w[k,n]).
+    """
+    B, K = x.shape
+    K2, N = w.shape
+    if K != K2:
+        raise ValueError(f"inner dims mismatch: x {x.shape} w {w.shape}")
+
+    bb = min(block_b, _ceil_to(B, 1))
+    bn = min(block_n, _ceil_to(N, 1))
+    bk = min(block_k, _ceil_to(K, 1))
+
+    Bp, Kp, Np = _ceil_to(B, bb), _ceil_to(K, bk), _ceil_to(N, bn)
+    xp = jnp.pad(x, ((0, Bp - B), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, Kp - K), (0, Np - N)))
+
+    k_steps = Kp // bk
+    grid = (Bp // bb, Np // bn, k_steps)
+
+    out = pl.pallas_call(
+        functools.partial(_mf_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Np), x.dtype),
+        interpret=True,
+    )(xp, wp)
+    return out[:B, :N]
+
+
+def vmem_footprint_bytes(block_b: int, block_n: int, block_k: int,
+                         dtype_bytes: int = 4) -> int:
+    """Estimated VMEM residency of one grid step (DESIGN.md §Perf, L1).
+
+    x-tile + w-tile + out-tile; the sign/abs planes are rematerialized by
+    the VPU, not stored. Used by the perf notes to check the default tile
+    choice stays far under the ~16 MiB/core VMEM budget.
+    """
+    return dtype_bytes * (block_b * block_k + block_k * block_n + block_b * block_n)
+
+
+def mxu_utilization_estimate(B: int, N: int, K: int, block_b: int = 8,
+                             block_n: int = 128, block_k: int = 128) -> float:
+    """Fraction of MXU lanes busy for the tile shape (128x128 systolic).
+
+    The b-tile occupies block_b of 128 rows; N/K tiles at 128 keep the
+    array full along the other axes. This is the structural estimate the
+    DESIGN.md perf section reports (interpret mode gives no TPU clock).
+    """
+    rows = min(block_b, 128) / 128.0
+    cols = min(block_n, 128) / 128.0
+    depth = min(block_k, 128) / 128.0
+    # Padding waste on ragged edges.
+    eff_b = B / _ceil_to(B, block_b)
+    eff_n = N / _ceil_to(N, block_n)
+    eff_k = K / _ceil_to(K, block_k)
+    return rows * cols * depth * eff_b * eff_n * eff_k

@@ -1,0 +1,90 @@
+"""Pure-jnp correctness oracles for the MC-CIM kernels.
+
+These definitions are the single source of truth for the semantics of the
+multiplication-free (MF) operator of the paper (Eq. 1):
+
+    w (+) x = sum_i sign(x_i) * abs(w_i) + sign(w_i) * abs(x_i)
+
+The Pallas kernel in `mf_matmul.py` must agree with `mf_matmul_ref`
+bit-for-bit on f32 up to associativity of the K reduction; pytest and
+hypothesis sweeps in `python/tests/test_kernel.py` enforce allclose.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mf_elem(x, w):
+    """Element-wise MF correlation term sign(x)*|w| + sign(w)*|x|."""
+    return jnp.sign(x) * jnp.abs(w) + jnp.sign(w) * jnp.abs(x)
+
+
+def mf_matmul_ref(x, w):
+    """MF-operator 'matmul': out[b, n] = sum_k mf_elem(x[b, k], w[k, n]).
+
+    Decomposes into two ordinary matmuls, which is exactly why the
+    operator is CIM/MXU-friendly: the multibit operand of each product is
+    multiplied by a one-bit sign plane only.
+
+        out = sign(x) @ |w| + |x| @ sign(w)
+    """
+    return jnp.sign(x) @ jnp.abs(w) + jnp.abs(x) @ jnp.sign(w)
+
+
+@jax.custom_vjp
+def mf_matmul_ste(x, w):
+    """MF product-sum with straight-through gradients for training.
+
+    Forward is *exactly* `mf_matmul_ref` (so weights trained here are
+    valid for the exported MF inference graph), but the backward pass
+    uses the dense-matmul vjp. The raw MF gradient w.r.t. the weights is
+    sign(x)*sign(w) — direction-only, magnitude-blind — which trains
+    poorly; the STE surrogate restores magnitude information while the
+    deployed operator stays multiplication-free. Training happens
+    off-macro in the paper's flow as well (Fig. 8).
+    """
+    return mf_matmul_ref(x, w)
+
+
+def _mf_ste_fwd(x, w):
+    return mf_matmul_ref(x, w), (x, w)
+
+
+def _mf_ste_bwd(res, g):
+    x, w = res
+    return g @ w.T, x.T @ g
+
+
+mf_matmul_ste.defvjp(_mf_ste_fwd, _mf_ste_bwd)
+
+
+def quantize_ref(v, bits: int):
+    """Symmetric n-bit mid-tread fake quantization (zero representable).
+
+    Mirrors `Quantizer::fake_quantize` on the rust side: values snap to
+    the grid delta * k for integer k in [-(2^(b-1)-1), 2^(b-1)-1] where
+    delta = max|v| / (2^(b-1)-1). Used for *inputs* (dropped activations
+    must stay exactly zero). bits >= 2.
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12)
+    delta = amax / qmax
+    return jnp.clip(jnp.round(v / delta), -qmax, qmax) * delta
+
+
+def quantize_midrise_ref(v, bits: int):
+    """Mid-rise n-bit fake quantization (NO zero level) for *weights*.
+
+    Mirrors `Quantizer::fake_quantize_midrise`: levels +-(k+1/2)*delta,
+    k in 0..2^(b-1). The MF operator loses the whole sign(w)*|x| term
+    when a weight rounds to zero, so sign-magnitude CIM storage keeps
+    >= 1 LSB of magnitude; this grid models that (signs of nonzero
+    weights are preserved exactly).
+    """
+    n_levels = float(2 ** (bits - 1))
+    amax = jnp.maximum(jnp.max(jnp.abs(v)), 1e-12)
+    delta = amax / n_levels
+    k = jnp.clip(jnp.floor(jnp.abs(v) / delta), 0, n_levels - 1)
+    return jnp.where(v == 0.0, 0.0, jnp.sign(v) * (k + 0.5) * delta)

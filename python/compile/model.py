@@ -1,0 +1,132 @@
+"""Layer-2 JAX models: MF-MLP networks for MNIST and visual odometry.
+
+Both networks use the paper's multiplication-free operator (Eq. 1) for
+every layer, with MC-Dropout masks passed in as *runtime parameters* so
+the rust coordinator controls the Bernoulli sampling (in-SRAM RNG model,
+compute-reuse scheduling, TSP sample ordering all live on the rust side).
+
+Exported signatures (B = MC_BATCH rows; a row is one (image, mask) pair,
+so the same executable serves 30 MC iterations of one image *or* 30
+deterministic images with all-ones masks):
+
+  mnist_forward(x[B,784], m1[B,256], m2[B,128], w1,b1,s1, w2,b2,s2,
+                w3,b3,s3) -> logits[B,10]
+  vo_forward   (x[B,256], m1[B,H1], m2[B,H2], ...same layout...)
+                -> pose[B,6]                       (xyz + euler)
+
+The `use_pallas` switch selects the L1 Pallas kernel or the pure-jnp
+oracle for the inner product-sum; both are exported so the rust side can
+benchmark the kernelized graph against the fused-matmul reference.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.mf_matmul import mf_matmul
+from .kernels.ref import mf_matmul_ref, mf_matmul_ste
+
+# Network geometry — single source of truth, mirrored into meta.json by
+# aot.py and read by rust/src/workloads/meta.rs.
+MC_BATCH = 30  # rows per executable call == paper's 30 MC-Dropout samples
+MNIST_DIMS = [784, 256, 128, 10]
+VO_DIMS = [256, 256, 128, 6]
+VO_THIN_DIMS = [256, 128, 64, 6]  # Fig. 11(c) parameter-reduction ablation
+DROPOUT_P = 0.5  # paper §III-A: p = 0.5 captures model uncertainty well
+
+
+def param_names(dims: Sequence[int]) -> List[str]:
+    """Flat parameter order used by AOT export and the rust loader."""
+    names = []
+    for i in range(len(dims) - 1):
+        names += [f"w{i + 1}", f"b{i + 1}", f"s{i + 1}"]
+    return names
+
+
+def init_params(dims: Sequence[int], seed: int) -> Dict[str, np.ndarray]:
+    """Uniform init; `s` is a learnable per-layer output scale.
+
+    `s`/`b` are the *deployment-time* per-feature affine: training uses
+    batch normalization after each MF product-sum (the AddNet/MF-Net
+    recipe — the operator's additive magnitudes need per-feature
+    re-centering to train), and `train.py` folds the BN statistics into
+    (s, b) at export. On-macro these fold into the xADC full-scale
+    calibration and the digital bias add. Init: s = 1/(a*sqrt(2*fan_in))
+    (unit-variance MF output for weights ~ U[-a, a]), b = 0.
+    """
+    a = 0.1
+    rng = np.random.default_rng(seed)
+    params: Dict[str, np.ndarray] = {}
+    for i in range(len(dims) - 1):
+        fi, fo = dims[i], dims[i + 1]
+        params[f"w{i + 1}"] = rng.uniform(-a, a, size=(fi, fo)).astype(np.float32)
+        params[f"b{i + 1}"] = np.zeros((fo,), np.float32)
+        params[f"s{i + 1}"] = np.full((fo,), 1.0 / (a * np.sqrt(2.0 * fi)),
+                                      np.float32)
+    return params
+
+
+def _layer(h, w, b, s, *, mm):
+    return mm(h, w) * s + b
+
+
+def mlp_forward(dims, x, masks, flat_params, *, p=DROPOUT_P, use_pallas=False,
+                ste=False):
+    """Generic MF-MLP forward with MC-Dropout masks on hidden layers.
+
+    masks[i] multiplies hidden activation i (inverted-dropout scaling by
+    1/(1-p) so the expectation matches the undropped net, exactly as in
+    training — the Gal & Ghahramani requirement that inference reuse the
+    training-time dropout).
+    """
+    n_layers = len(dims) - 1
+    if len(masks) != n_layers - 1:
+        raise ValueError(f"expected {n_layers - 1} masks, got {len(masks)}")
+    mm = mf_matmul_ste if ste else (mf_matmul if use_pallas else mf_matmul_ref)
+    h = x
+    it = iter(flat_params)
+    scale = 1.0 / (1.0 - p)
+    for i in range(n_layers):
+        w, b, s = next(it), next(it), next(it)
+        h = _layer(h, w, b, s, mm=mm)
+        if i < n_layers - 1:
+            # Bounded ReLU1: CIM column inputs are n-bit codes in a fixed
+            # voltage range, so activations are saturating by construction;
+            # the clip also keeps the additive MF magnitudes stable.
+            h = jnp.clip(h, 0.0, 1.0)
+            h = h * masks[i] * scale
+    return h
+
+
+def mnist_forward(x, m1, m2, *flat_params, use_pallas=False):
+    """LeNet-role classifier (DESIGN.md substitution: MF-MLP 784-256-128-10)."""
+    return mlp_forward(MNIST_DIMS, x, [m1, m2], flat_params, use_pallas=use_pallas)
+
+
+def vo_forward(x, m1, m2, *flat_params, use_pallas=False):
+    """PoseNet-lite regressor: 16x16 landmark image -> (xyz, euler)."""
+    return mlp_forward(VO_DIMS, x, [m1, m2], flat_params, use_pallas=use_pallas)
+
+
+def vo_thin_forward(x, m1, m2, *flat_params, use_pallas=False):
+    """Thin VO variant for the Fig. 11(c) parameter-reduction ablation."""
+    return mlp_forward(VO_THIN_DIMS, x, [m1, m2], flat_params, use_pallas=use_pallas)
+
+
+def forward_arg_specs(dims: Sequence[int], batch: int = MC_BATCH):
+    """ShapeDtypeStructs for jax.jit(...).lower(...) in aot.py."""
+    import jax
+
+    f32 = jnp.float32
+    specs = [jax.ShapeDtypeStruct((batch, dims[0]), f32)]
+    for h in dims[1:-1]:
+        specs.append(jax.ShapeDtypeStruct((batch, h), f32))
+    for i in range(len(dims) - 1):
+        fi, fo = dims[i], dims[i + 1]
+        specs.append(jax.ShapeDtypeStruct((fi, fo), f32))  # w
+        specs.append(jax.ShapeDtypeStruct((fo,), f32))     # b
+        specs.append(jax.ShapeDtypeStruct((fo,), f32))     # s (per-feature)
+    return specs

@@ -1,0 +1,278 @@
+"""Build-time training of the MF-MLP networks (hand-rolled Adam + BN).
+
+Training runs once per `make artifacts` (skipped when weight files are
+already present). Two tricks make the multiplication-free operator
+trainable — both standard in the MF-operator literature the paper builds
+on (its refs [11], [12] / AddNet) and both *deployment-neutral*:
+
+  * **Batch normalization** after each MF product-sum. The operator's
+    output is additive in |w| and |x|, so per-feature re-centering is
+    required for gradients to be well-conditioned. At export the BN
+    statistics fold into the per-feature (s, b) affine that the inference
+    graph already applies (`mf(h, w) * s + b`) — on-macro these are the
+    xADC full-scale calibration and the digital bias add.
+  * **True operator gradients.** With BN in place the operator's own
+    (sign-based) gradients train markedly better than a straight-through
+    dense-matmul surrogate (probed during bring-up: 0.75 vs 0.26
+    accuracy at 800 steps), so training uses the exact MF vjp. The STE
+    variant is kept in `kernels/ref.py` for reference and tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data
+from .kernels.ref import mf_matmul_ref
+from .model import (DROPOUT_P, MNIST_DIMS, VO_DIMS, VO_THIN_DIMS,
+                    init_params, mlp_forward, param_names)
+
+WEIGHT_CLIP = 1.0  # symmetric weight range; quant grid anchors to max|w|
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.99
+
+
+# ----------------------------------------------------------------------
+# BN-parameterized training forward
+# ----------------------------------------------------------------------
+
+def _bn_init(dims):
+    """Per-layer (w, gamma, beta) + running (mean, var) state."""
+    train_params, state = [], []
+    for fi, fo in zip(dims[:-1], dims[1:]):
+        train_params += [None, jnp.ones((fo,)), jnp.zeros((fo,))]  # w set later
+        state += [jnp.zeros((fo,)), jnp.ones((fo,))]
+    return train_params, state
+
+
+def _train_forward(dims, x, masks, tp, state, *, p=DROPOUT_P, update_stats=True):
+    """Forward with batch-stat normalization; returns (out, new_state).
+
+    Layer i: z = mf(h, w_i); zn = (z - mu)/sqrt(var); h = g*zn + b
+    then ReLU1 + dropout mask for hidden layers.
+    """
+    h = x
+    n_layers = len(dims) - 1
+    new_state = list(state)
+    scale = 1.0 / (1.0 - p)
+    for i in range(n_layers):
+        w, gamma, beta = tp[3 * i], tp[3 * i + 1], tp[3 * i + 2]
+        z = mf_matmul_ref(h, w)
+        mu = jnp.mean(z, axis=0)
+        var = jnp.var(z, axis=0) + BN_EPS
+        zn = (z - mu) / jnp.sqrt(var)
+        if update_stats:
+            m = BN_MOMENTUM
+            new_state[2 * i] = m * state[2 * i] + (1 - m) * mu
+            new_state[2 * i + 1] = m * state[2 * i + 1] + (1 - m) * var
+        h = gamma * zn + beta
+        if i < n_layers - 1:
+            h = jnp.clip(h, 0.0, 1.0)
+            h = h * masks[i] * scale
+    return h, new_state
+
+
+def fold_bn(dims, tp, state) -> Dict[str, np.ndarray]:
+    """Fold running BN stats into the deployment (w, b, s) layout.
+
+        y = gamma*(z - mu)/sqrt(var) + beta  ==  z*s + b
+        s = gamma/sqrt(var),  b = beta - mu*s
+    """
+    out: Dict[str, np.ndarray] = {}
+    for i in range(len(dims) - 1):
+        w, gamma, beta = tp[3 * i], tp[3 * i + 1], tp[3 * i + 2]
+        mu, var = state[2 * i], state[2 * i + 1]
+        s = gamma / jnp.sqrt(var)
+        b = beta - mu * s
+        out[f"w{i + 1}"] = np.asarray(w, np.float32)
+        out[f"b{i + 1}"] = np.asarray(b, np.float32)
+        out[f"s{i + 1}"] = np.asarray(s, np.float32)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Adam
+# ----------------------------------------------------------------------
+
+def _adam_init(flat):
+    return ([jnp.zeros_like(p) for p in flat], [jnp.zeros_like(p) for p in flat])
+
+
+def _adam_step(flat, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8,
+               clip_w=True):
+    new_flat, new_m, new_v = [], [], []
+    for j, (p, g, mi, vi) in enumerate(zip(flat, grads, m, v)):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**step)
+        vhat = vi / (1 - b2**step)
+        p = p - lr * mhat / (jnp.sqrt(vhat) + eps)
+        if clip_w and j % 3 == 0:  # weight tensors sit at stride 3
+            p = jnp.clip(p, -WEIGHT_CLIP, WEIGHT_CLIP)
+        new_flat.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_flat, new_m, new_v
+
+
+def _dropout_masks(key, dims, batch, keep):
+    """Bernoulli(keep) masks per hidden layer. NOTE: the graph's
+    inverted-dropout scale is fixed at 1/(1-DROPOUT_P) = 2; training and
+    inference only need the *same keep probability* — the constant gain
+    E[mask]*2 is absorbed by BN folding. The per-net keep ships in
+    meta.json (`*_mask_keep`) so the rust coordinator matches."""
+    keys = jax.random.split(key, len(dims) - 2)
+    return [
+        jax.random.bernoulli(k, keep, (batch, h)).astype(jnp.float32)
+        for k, h in zip(keys, dims[1:-1])
+    ]
+
+
+def _softmax_xent(logits, labels):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+# ----------------------------------------------------------------------
+# Training loop
+# ----------------------------------------------------------------------
+
+MNIST_MASK_KEEP = 0.5  # the paper's p = 0.5 for the classifier
+VO_MASK_KEEP = 0.8     # PoseNet-style lighter dropout on the regressor;
+                       # at keep=0.5 the head underfits so badly that MC
+                       # variance stops tracking error (kills Fig. 13(d))
+
+
+def train_mlp(dims, x, y, *, task: str, steps: int, batch: int, lr: float,
+              seed: int, log_every: int = 500,
+              mask_keep: float = MNIST_MASK_KEEP) -> Dict[str, np.ndarray]:
+    """Adam + BN loop. task: "cls" or "reg". Returns folded params."""
+    dims_t = tuple(dims)
+    init = init_params(dims, seed)
+    tp, state = _bn_init(dims)
+    for i in range(len(dims) - 1):
+        tp[3 * i] = jnp.asarray(init[f"w{i + 1}"])
+    m, v = _adam_init(tp)
+    key = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def loss_and_state(tp, xb, yb, masks, state):
+        out, new_state = _train_forward(list(dims_t), xb, masks, tp, state)
+        if task == "cls":
+            loss = _softmax_xent(out, yb)
+        else:
+            loss = jnp.mean((out - yb) ** 2)
+        return loss, new_state
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_and_state, has_aux=True))
+
+    n = x.shape[0]
+    rng = np.random.default_rng(seed + 1)
+    for step in range(1, steps + 1):
+        idx = rng.integers(0, n, size=batch)
+        xb = jnp.asarray(x[idx])
+        yb = jnp.asarray(y[idx])
+        key, sub = jax.random.split(key)
+        masks = _dropout_masks(sub, dims, batch, mask_keep)
+        (loss, state), grads = grad_fn(tp, xb, yb, masks, state)
+        # cosine decay to 10% of peak lr
+        lr_t = lr * (0.55 + 0.45 * np.cos(np.pi * step / steps))
+        tp, m, v = _adam_step(tp, grads, m, v, step, lr_t)
+        if log_every and step % log_every == 0:
+            print(f"    step {step:5d}  loss {float(loss):.4f}")
+    return fold_bn(dims, tp, state)
+
+
+# ----------------------------------------------------------------------
+# Evaluation on the *deployment* forward (folded params, exact MF op)
+# ----------------------------------------------------------------------
+
+def _flat(params: Dict[str, np.ndarray], dims) -> List[jnp.ndarray]:
+    return [jnp.asarray(params[n]) for n in param_names(dims)]
+
+
+def eval_classifier(params, dims, x, y, *, mc_samples: int = 0, seed: int = 0,
+                    batch: int = 200, mask_keep: float = MNIST_MASK_KEEP) -> float:
+    """Accuracy; mc_samples > 0 averages that many dropout forward passes."""
+    flat = _flat(params, dims)
+    key = jax.random.PRNGKey(seed)
+    correct = 0
+    for i in range(0, x.shape[0], batch):
+        xb = jnp.asarray(x[i : i + batch])
+        yb = y[i : i + batch]
+        if mc_samples:
+            acc = jnp.zeros((xb.shape[0], dims[-1]))
+            for _ in range(mc_samples):
+                key, sub = jax.random.split(key)
+                masks = _dropout_masks(sub, dims, xb.shape[0], mask_keep)
+                acc += jax.nn.softmax(
+                    mlp_forward(dims, xb, masks, flat), -1)
+            pred = jnp.argmax(acc, -1)
+        else:
+            masks = [jnp.full((xb.shape[0], h), mask_keep)
+                     for h in dims[1:-1]]
+            pred = jnp.argmax(mlp_forward(dims, xb, masks, flat), -1)
+        correct += int(jnp.sum(pred == jnp.asarray(yb)))
+    return correct / x.shape[0]
+
+
+def eval_regressor(params, dims, x, y, *, batch: int = 200,
+                   mask_keep: float = VO_MASK_KEEP) -> float:
+    """Deterministic (expected-mask) mean position error in pose units."""
+    flat = _flat(params, dims)
+    errs = []
+    for i in range(0, x.shape[0], batch):
+        xb = jnp.asarray(x[i : i + batch])
+        masks = [jnp.full((xb.shape[0], h), mask_keep)
+                 for h in dims[1:-1]]
+        out = mlp_forward(dims, xb, masks, flat)
+        errs.append(np.asarray(out) - y[i : i + batch])
+    e = np.concatenate(errs)
+    return float(np.sqrt((e[:, :3] ** 2).sum(-1)).mean())
+
+
+def train_all(fast: bool = False):
+    """Train MNIST + VO (+thin VO). Returns dict of results for aot.py.
+
+    fast=True shrinks steps for CI-style smoke runs (pytest uses it).
+    """
+    results = {}
+    steps_cls = 300 if fast else 9000
+    steps_reg = 300 if fast else 3000
+
+    print("[train] synthetic digits")
+    xtr, ytr = data.digits_dataset(8000, seed=1)
+    xte, yte = data.digits_dataset(1000, seed=2)
+    p_mnist = train_mlp(MNIST_DIMS, xtr, ytr, task="cls", steps=steps_cls,
+                        batch=128, lr=1e-3, seed=3)
+    acc_det = eval_classifier(p_mnist, MNIST_DIMS, xte, yte)
+    acc_mc = eval_classifier(p_mnist, MNIST_DIMS, xte, yte, mc_samples=10)
+    print(f"  accuracy: deterministic {acc_det:.4f}  mc(10) {acc_mc:.4f}")
+    results["mnist"] = dict(params=p_mnist, dims=MNIST_DIMS, acc_det=acc_det,
+                            acc_mc=acc_mc, test=(xte, yte))
+
+    print("[train] visual odometry (landmark room)")
+    xtr, ytr = data.vo_dataset(scenes=[1, 2, 3], frames_per_scene=2000,
+                               seed=5, jitter=0.35)
+    xte, yte = data.vo_dataset(scenes=[4], frames_per_scene=868, seed=6,
+                               extended=True)
+    p_vo = train_mlp(VO_DIMS, xtr, ytr, task="reg", steps=steps_reg,
+                     batch=128, lr=1e-3, seed=7, mask_keep=VO_MASK_KEEP)
+    err = eval_regressor(p_vo, VO_DIMS, xte, yte)
+    print(f"  mean position error (normalized units): {err:.4f}")
+    results["vo"] = dict(params=p_vo, dims=VO_DIMS, err=err, test=(xte, yte))
+
+    print("[train] thin VO ablation")
+    p_thin = train_mlp(VO_THIN_DIMS, xtr, ytr, task="reg", steps=steps_reg,
+                       batch=128, lr=1e-3, seed=9, mask_keep=VO_MASK_KEEP)
+    err_thin = eval_regressor(p_thin, VO_THIN_DIMS, xte, yte)
+    print(f"  thin mean position error: {err_thin:.4f}")
+    results["vo_thin"] = dict(params=p_thin, dims=VO_THIN_DIMS, err=err_thin)
+
+    return results

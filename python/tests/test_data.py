@@ -1,0 +1,77 @@
+"""Synthetic dataset tests: determinism, ranges, rotation protocol, VO."""
+
+import numpy as np
+import pytest
+
+from compile import data
+
+
+class TestDigits:
+    def test_deterministic(self):
+        x1, y1 = data.digits_dataset(50, seed=9)
+        x2, y2 = data.digits_dataset(50, seed=9)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+
+    def test_ranges_and_balance(self):
+        x, y = data.digits_dataset(100, seed=1)
+        assert x.shape == (100, 784) and y.shape == (100,)
+        assert x.min() >= -1.0 and x.max() <= 1.0
+        counts = np.bincount(y, minlength=10)
+        assert (counts == 10).all()
+
+    def test_classes_are_distinguishable(self):
+        # nearest-centroid on clean renders must beat chance by a lot —
+        # guards against a degenerate font/render pipeline
+        xtr, ytr = data.digits_dataset(500, seed=2)
+        xte, yte = data.digits_dataset(200, seed=3)
+        cents = np.stack([xtr[ytr == c].mean(0) for c in range(10)])
+        pred = np.argmin(((xte[:, None] - cents[None]) ** 2).sum(-1), axis=1)
+        assert (pred == yte).mean() > 0.7
+
+    def test_rotation_identity(self):
+        img = np.zeros((28, 28), np.float32)
+        img[10:18, 10:18] = 1.0
+        out = data.rotate_bilinear(img, 0.0)
+        np.testing.assert_allclose(out, img, atol=1e-6)
+
+    def test_rotation_90_moves_mass(self):
+        img = np.zeros((28, 28), np.float32)
+        img[2:6, 12:16] = 1.0  # blob at top
+        out = data.rotate_bilinear(img, 90.0)
+        # mass is conserved approximately and moved off the top rows
+        assert abs(out.sum() - img.sum()) / img.sum() < 0.15
+        assert out[2:6, 12:16].sum() < 0.2 * img.sum()
+
+    def test_rotated_three_set_protocol(self):
+        x, angles = data.rotated_three_set()
+        assert x.shape == (12, 784)
+        assert angles[0] == 0.0 and angles[-1] == pytest.approx(165.0)
+        assert np.all(np.diff(angles) > 0)
+
+
+class TestVO:
+    def test_trajectory_smooth_and_in_room(self):
+        poses = data.trajectory(4, 868)
+        assert poses.shape == (868, 6)
+        assert (poses[:, 0] > 0).all() and (poses[:, 0] < 4).all()
+        step = np.linalg.norm(np.diff(poses[:, :3], axis=0), axis=1)
+        assert step.max() < 0.05  # smooth camera motion
+
+    def test_render_varies_with_pose(self):
+        lms = data.landmarks()
+        a = data.render_view(np.array([2, 2, 1.5, 0, 0, 0], np.float32), lms)
+        b = data.render_view(np.array([1.2, 2.8, 1.5, 0.5, 0, 0], np.float32), lms)
+        assert a.shape == (16, 16)
+        assert np.abs(a - b).sum() > 0.5
+
+    def test_dataset_shapes_and_normalization(self):
+        x, y = data.vo_dataset(scenes=[4], frames_per_scene=50, seed=0)
+        assert x.shape == (50, 256) and y.shape == (50, 6)
+        assert np.abs(y).max() < 3.0  # normalized targets O(1)
+
+    def test_dataset_deterministic(self):
+        x1, y1 = data.vo_dataset(scenes=[2], frames_per_scene=20, seed=3)
+        x2, y2 = data.vo_dataset(scenes=[2], frames_per_scene=20, seed=3)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)

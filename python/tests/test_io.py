@@ -1,0 +1,52 @@
+"""MCT1 tensor container round-trip tests (rust reader counterpart in
+rust/src/workloads/tensorfile.rs; cross-language agreement is covered by
+the rust pipeline integration test)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.io_utils import read_tensors, write_tensors
+
+
+class TestRoundTrip:
+    def test_basic(self, tmp_path):
+        p = str(tmp_path / "t.bin")
+        t = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+             "labels": np.array([1, 2, 3], np.int64)}
+        write_tensors(p, t)
+        back = read_tensors(p)
+        np.testing.assert_array_equal(back["a"], t["a"])
+        np.testing.assert_array_equal(back["labels"],
+                                      t["labels"].astype(np.int32))
+
+    def test_scalar_and_empty_name_order(self, tmp_path):
+        p = str(tmp_path / "t.bin")
+        t = {"s": np.float32(3.5).reshape(()), "z": np.zeros((0,), np.float32)}
+        write_tensors(p, t)
+        back = read_tensors(p)
+        assert list(back.keys()) == ["s", "z"]
+        assert back["s"].shape == ()
+        assert back["z"].shape == (0,)
+
+    def test_bad_magic_raises(self, tmp_path):
+        p = str(tmp_path / "bad.bin")
+        with open(p, "wb") as f:
+            f.write(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(ValueError):
+            read_tensors(p)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(1, 4), seed=st.integers(0, 10**6))
+    def test_hypothesis_roundtrip(self, n, seed, tmp_path_factory):
+        rng = np.random.default_rng(seed)
+        t = {}
+        for i in range(n):
+            ndim = int(rng.integers(0, 4))
+            shape = tuple(int(rng.integers(0, 5)) for _ in range(ndim))
+            t[f"t{i}"] = rng.normal(size=shape).astype(np.float32)
+        p = str(tmp_path_factory.mktemp("rt") / "t.bin")
+        write_tensors(p, t)
+        back = read_tensors(p)
+        for k, v in t.items():
+            np.testing.assert_array_equal(back[k], v)

@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas MF kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the compute hot-spot: hypothesis
+sweeps shapes and block sizes; fixed cases pin the operator semantics
+(signs, zeros, padding exactness).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mf_matmul import (mf_matmul, mxu_utilization_estimate,
+                                       vmem_footprint_bytes)
+from compile.kernels.ref import (mf_elem, mf_matmul_ref, quantize_midrise_ref,
+                                 quantize_ref)
+
+
+def _rand(shape, seed):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+class TestOperatorSemantics:
+    def test_elem_matches_paper_eq1(self):
+        # mf(x, w) = sign(x)|w| + sign(w)|x|
+        assert float(mf_elem(2.0, -3.0)) == pytest.approx(1.0 * 3.0 + (-1.0) * 2.0)
+        assert float(mf_elem(-2.0, -3.0)) == pytest.approx(-3.0 - 2.0)
+        assert float(mf_elem(2.0, 3.0)) == pytest.approx(5.0)
+
+    def test_zero_annihilates(self):
+        # sign(0) = |0| = 0 -> zero operand contributes nothing; this is
+        # what makes zero-padding in the kernel exact.
+        assert float(mf_elem(0.0, 5.0)) == 0.0
+        assert float(mf_elem(5.0, 0.0)) == 0.0
+
+    def test_symmetry(self):
+        # the operator is symmetric in its operands
+        a, b = 1.7, -0.3
+        assert float(mf_elem(a, b)) == pytest.approx(float(mf_elem(b, a)))
+
+    def test_sign_flip_antisymmetry(self):
+        a, b = 1.7, 0.9
+        assert float(mf_elem(-a, -b)) == pytest.approx(-float(mf_elem(a, b)))
+
+    def test_matmul_ref_against_loop(self):
+        x, w = _rand((3, 4), 0), _rand((4, 2), 1)
+        expect = np.zeros((3, 2), np.float32)
+        for b in range(3):
+            for n in range(2):
+                for k in range(4):
+                    expect[b, n] += float(mf_elem(x[b, k], w[k, n]))
+        got = np.asarray(mf_matmul_ref(jnp.asarray(x), jnp.asarray(w)))
+        np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+
+class TestPallasKernel:
+    @pytest.mark.parametrize("shape", [(1, 1, 1), (2, 3, 5), (8, 128, 128),
+                                       (5, 37, 11), (30, 784, 256), (16, 31, 7)])
+    def test_matches_ref(self, shape):
+        b, k, n = shape
+        x, w = jnp.asarray(_rand((b, k), b)), jnp.asarray(_rand((k, n), n))
+        np.testing.assert_allclose(np.asarray(mf_matmul(x, w)),
+                                   np.asarray(mf_matmul_ref(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("blocks", [(1, 8, 8), (4, 32, 16), (8, 128, 128),
+                                        (3, 7, 5)])
+    def test_block_size_invariance(self, blocks):
+        bb, bn, bk = blocks
+        x, w = jnp.asarray(_rand((6, 20), 2)), jnp.asarray(_rand((20, 9), 3))
+        got = mf_matmul(x, w, block_b=bb, block_n=bn, block_k=bk)
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(mf_matmul_ref(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_inner_dim_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            mf_matmul(jnp.zeros((2, 3)), jnp.zeros((4, 2)))
+
+    @settings(max_examples=25, deadline=None)
+    @given(b=st.integers(1, 12), k=st.integers(1, 40), n=st.integers(1, 20),
+           seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_shape_sweep(self, b, k, n, seed):
+        x = jnp.asarray(_rand((b, k), seed))
+        w = jnp.asarray(_rand((k, n), seed + 1))
+        np.testing.assert_allclose(np.asarray(mf_matmul(x, w)),
+                                   np.asarray(mf_matmul_ref(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_quantized_inputs(self, seed):
+        # quantized operands (the deployment regime) round-trip exactly
+        x = quantize_ref(jnp.asarray(_rand((4, 16), seed)), 6)
+        w = quantize_ref(jnp.asarray(_rand((16, 8), seed + 1)), 6)
+        np.testing.assert_allclose(np.asarray(mf_matmul(x, w)),
+                                   np.asarray(mf_matmul_ref(x, w)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestQuantizer:
+    def test_levels_count(self):
+        v = jnp.linspace(-1, 1, 1001)
+        q = np.asarray(quantize_ref(v, 4))
+        assert len(np.unique(q)) <= 15  # 2^3-1 pos + neg + zero
+
+    def test_preserves_max(self):
+        v = jnp.asarray([0.3, -0.7, 0.1])
+        q = np.asarray(quantize_ref(v, 6))
+        assert np.max(np.abs(q)) == pytest.approx(0.7, rel=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+    def test_idempotent(self, bits, seed):
+        v = jnp.asarray(_rand((32,), seed))
+        q1 = quantize_ref(v, bits)
+        q2 = quantize_ref(q1, bits)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestMidriseQuantizer:
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(2, 8), seed=st.integers(0, 1000))
+    def test_signs_preserved_exactly(self, bits, seed):
+        v = jnp.asarray(_rand((64,), seed))
+        q = np.asarray(quantize_midrise_ref(v, bits))
+        np.testing.assert_array_equal(np.sign(q), np.sign(np.asarray(v)))
+
+    def test_no_zero_level_for_tiny_weights(self):
+        v = jnp.asarray([1e-7, -1e-7, 0.5, -1.0])
+        q = np.asarray(quantize_midrise_ref(v, 4))
+        assert q[0] > 0 and q[1] < 0
+
+    def test_zero_stays_zero(self):
+        q = np.asarray(quantize_midrise_ref(jnp.asarray([0.0, 1.0]), 4))
+        assert q[0] == 0.0
+
+    @settings(max_examples=20, deadline=None)
+    @given(bits=st.integers(3, 8), seed=st.integers(0, 1000))
+    def test_error_bounded_by_half_step(self, bits, seed):
+        v = np.asarray(_rand((64,), seed))
+        amax = np.abs(v).max()
+        delta = amax / 2 ** (bits - 1)
+        q = np.asarray(quantize_midrise_ref(jnp.asarray(v), bits))
+        assert np.all(np.abs(q - v) <= delta / 2 + 1e-6)
+
+
+class TestPerfEstimators:
+    def test_vmem_footprint_under_budget(self):
+        # default tiles must sit far below ~16 MiB VMEM
+        assert vmem_footprint_bytes(8, 128, 128) < 1 << 20
+
+    def test_mxu_utilization_bounds(self):
+        u = mxu_utilization_estimate(30, 256, 784)
+        assert 0.0 < u <= 1.0

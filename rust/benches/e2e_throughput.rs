@@ -1,0 +1,153 @@
+//! End-to-end coordinator throughput/latency (serving benchmark).
+//!
+//!     cargo bench --bench e2e_throughput
+//!
+//! Sweeps the worker-pool size and MC sample count, reporting req/s and
+//! p50/p95 latency, and profiles the single-request path (the L3 perf
+//! deliverable: the PJRT execute must dominate; coordinator overhead is
+//! measured as the residual). Results land in EXPERIMENTS.md §Perf.
+
+use mc_cim::coordinator::{
+    Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind, Request,
+    Response,
+};
+use mc_cim::dropout::mask::DropoutMask;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::runtime::Runtime;
+use mc_cim::workloads::{mnist::MnistTest, Meta, ARTIFACTS_DIR};
+use std::time::Instant;
+
+fn sweep(workers: usize, requests: usize, samples: usize, test: &MnistTest) -> anyhow::Result<()> {
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers,
+        ..Default::default()
+    })?;
+    // warm-up (engine compilation happens in worker start; first request
+    // still pays cache warmup)
+    for i in 0..workers {
+        let _ = coord
+            .submit(Request::Classify { image: test.images[i].clone(), samples })
+            .recv()?;
+    }
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            coord.submit(Request::Classify {
+                image: test.images[i % test.len()].clone(),
+                samples,
+            })
+        })
+        .collect();
+    for rx in rxs {
+        match rx.recv()? {
+            Response::Error(e) => anyhow::bail!(e),
+            _ => {}
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "  workers={workers} samples={samples}: {:7.1} req/s  {:7.0} rows/s  p50 {:6.2} ms  p95 {:6.2} ms",
+        requests as f64 / dt,
+        (requests * samples) as f64 / dt,
+        coord.metrics.latency_ms(0.5),
+        coord.metrics.latency_ms(0.95),
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn profile_single_path(meta: &Meta, test: &MnistTest) -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let eng =
+        McDropoutEngine::load(&rt, ARTIFACTS_DIR, meta, &EngineConfig::new(NetKind::Mnist))?;
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 1);
+    let img = &test.images[0];
+
+    // total single-request latency
+    let n = 50;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        let _ = eng.infer_mc(img, 30, &mut src)?;
+    }
+    let total = t0.elapsed().as_secs_f64() / n as f64;
+
+    // mask-generation cost alone (coordinator-side work)
+    let t1 = Instant::now();
+    for _ in 0..n {
+        for _ in 0..30 {
+            let _ = DropoutMask::sample(256, &mut src).to_f32();
+            let _ = DropoutMask::sample(128, &mut src).to_f32();
+        }
+    }
+    let maskgen = t1.elapsed().as_secs_f64() / n as f64;
+
+    // raw execute cost with pre-built rows (PJRT + packing)
+    let rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = (0..30)
+        .map(|_| {
+            (
+                img.clone(),
+                vec![
+                    DropoutMask::sample(256, &mut src).to_f32(),
+                    DropoutMask::sample(128, &mut src).to_f32(),
+                ],
+            )
+        })
+        .collect();
+    let t2 = Instant::now();
+    for _ in 0..n {
+        let _ = eng.run_rows(&rows)?;
+    }
+    let execute = t2.elapsed().as_secs_f64() / n as f64;
+
+    println!("single-request profile (30 samples, MNIST engine):");
+    println!("  total infer_mc      : {:8.3} ms", total * 1e3);
+    println!("  run_rows (PJRT+pack): {:8.3} ms ({:.0}% of total)", execute * 1e3, 100.0 * execute / total);
+    println!("  mask generation     : {:8.3} ms ({:.0}% of total)", maskgen * 1e3, 100.0 * maskgen / total);
+    println!("  coordinator residual: {:8.3} ms", (total - execute - maskgen).max(0.0) * 1e3);
+
+    // L2 comparison: fused-matmul reference graph vs the Pallas
+    // interpret-mode graph (same numerics, different lowering)
+    let mut cfg_p = EngineConfig::new(NetKind::Mnist);
+    cfg_p.pallas = true;
+    let eng_p = McDropoutEngine::load(&rt, ARTIFACTS_DIR, meta, &cfg_p)?;
+    let t3 = Instant::now();
+    for _ in 0..10 {
+        let _ = eng_p.run_rows(&rows)?;
+    }
+    let pallas = t3.elapsed().as_secs_f64() / 10.0;
+    println!("\nL2 graph comparison (30-row batch):");
+    println!("  fused ref graph     : {:8.3} ms", execute * 1e3);
+    println!(
+        "  pallas interpret    : {:8.3} ms ({:.1}x)",
+        pallas * 1e3,
+        pallas / execute
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new(ARTIFACTS_DIR).join("meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let meta = Meta::load(ARTIFACTS_DIR)?;
+    let test = MnistTest::load(ARTIFACTS_DIR)?;
+
+    if std::env::var("PROFILE_ONLY").is_ok() {
+        return profile_single_path(&meta, &test);
+    }
+
+    println!("== worker scaling (200 classify requests x 30 samples) ==");
+    for workers in [1usize, 2, 4, 8] {
+        sweep(workers, 200, 30, &test)?;
+    }
+
+    println!("\n== sample-count scaling (4 workers, 200 requests) ==");
+    for samples in [10usize, 30, 60, 120] {
+        sweep(4, 200, samples, &test)?;
+    }
+
+    println!();
+    profile_single_path(&meta, &test)?;
+    Ok(())
+}

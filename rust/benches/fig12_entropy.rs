@@ -1,0 +1,89 @@
+//! Fig. 12 — predictive entropy under disorientation + non-idealities.
+//!
+//!     cargo bench --bench fig12_entropy
+//!
+//! Machine-readable regeneration of the Fig. 12 series (the
+//! human-readable walk lives in examples/mnist_uncertainty.rs):
+//! entropy-vs-rotation under (b) ideal conditions, (c-d) Beta(a,a)
+//! dropout-bias perturbation, (e) precision sweep. Each series prints
+//! as `series <name>: h1 h2 ... h12` plus the paper's expected reading.
+
+use mc_cim::bayes::ClassEnsemble;
+use mc_cim::coordinator::{EngineConfig, McDropoutEngine, NetKind};
+use mc_cim::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
+use mc_cim::runtime::Runtime;
+use mc_cim::util::stats::pearson;
+use mc_cim::workloads::{mnist::RotatedThree, Meta, ARTIFACTS_DIR};
+
+const SAMPLES: usize = 30;
+
+fn series(
+    eng: &McDropoutEngine,
+    rot: &RotatedThree,
+    src: &mut dyn DropoutBitSource,
+) -> anyhow::Result<Vec<f64>> {
+    rot.images
+        .iter()
+        .map(|img| {
+            let out = eng.infer_mc(img, SAMPLES, src)?;
+            let mut ens = ClassEnsemble::new(10);
+            for s in &out.samples {
+                ens.add_logits(s);
+            }
+            Ok(ens.entropy())
+        })
+        .collect()
+}
+
+fn show(name: &str, hs: &[f64]) {
+    let row: String = hs.iter().map(|h| format!("{h:6.3}")).collect();
+    println!("series {name:14}: {row}");
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new(ARTIFACTS_DIR).join("meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(ARTIFACTS_DIR)?;
+    let rot = RotatedThree::load(ARTIFACTS_DIR)?;
+    let eng =
+        McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &EngineConfig::new(NetKind::Mnist))?;
+    let keep = eng.mask_keep();
+    let angles: Vec<f64> = rot.angles_deg.iter().map(|&a| a as f64).collect();
+
+    println!("== Fig 12(b): entropy vs rotation (ideal RNG, fp32) ==");
+    let mut ideal = IdealBernoulli::new(keep, 42);
+    let base = series(&eng, &rot, &mut ideal)?;
+    show("ideal", &base);
+    let r = pearson(&angles[..10], &base[..10]);
+    println!("rotation-entropy correlation over IDs 1-10: {r:+.3} (should be positive)");
+
+    println!("\n== Fig 12(c,d): Beta(a,a) dropout-bias perturbation ==");
+    for a in [10.0, 2.0, 0.7] {
+        let mut src = BetaPerturbedBernoulli::new(keep, a, 19);
+        let hs = series(&eng, &rot, &mut src)?;
+        show(&format!("beta a={a}"), &hs);
+        // deviation from the ideal curve stays bounded (paper's claim)
+        let mad: f64 = hs
+            .iter()
+            .zip(&base)
+            .map(|(x, y)| (x - y).abs())
+            .sum::<f64>()
+            / hs.len() as f64;
+        println!("  mean |delta| vs ideal: {mad:.3}");
+    }
+
+    println!("\n== Fig 12(e): precision sweep ==");
+    for bits in [8u8, 6, 4, 2] {
+        let mut cfg = EngineConfig::new(NetKind::Mnist);
+        cfg.bits = Some(bits);
+        let e = McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &cfg)?;
+        let mut src = IdealBernoulli::new(keep, 42);
+        let hs = series(&e, &rot, &mut src)?;
+        show(&format!("{bits}-bit"), &hs);
+    }
+    println!("\n(paper reading: curves are stable down to 4-bit and under heavy bias\n perturbation; 2-bit shows elevated entropy even for the clean image)");
+    Ok(())
+}

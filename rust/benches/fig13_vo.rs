@@ -1,0 +1,99 @@
+//! Fig. 13 — error-uncertainty correlation in visual odometry.
+//!
+//!     cargo bench --bench fig13_vo
+//!
+//! Machine-readable regeneration of the Fig. 13 series (the
+//! human-readable walk lives in examples/drone_vo.rs): (d) Pearson
+//! correlation between pose error and MC variance (paper: 0.31),
+//! (e) correlation vs precision, (f) correlation vs Beta(a,a)
+//! perturbation, plus trajectory mean errors for (a-c).
+
+use mc_cim::bayes::RegressionEnsemble;
+use mc_cim::coordinator::{EngineConfig, McDropoutEngine, NetKind};
+use mc_cim::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
+use mc_cim::runtime::Runtime;
+use mc_cim::util::stats::pearson;
+use mc_cim::workloads::vo::{PoseNorm, VoTest};
+use mc_cim::workloads::{Meta, ARTIFACTS_DIR};
+
+const FRAMES: usize = 300;
+const SAMPLES: usize = 30;
+
+fn mc_err_var(
+    eng: &McDropoutEngine,
+    test: &VoTest,
+    norm: &PoseNorm,
+    src: &mut dyn DropoutBitSource,
+) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
+    let mut errs = Vec::new();
+    let mut vars = Vec::new();
+    for f in 0..FRAMES.min(test.len()) {
+        let out = eng.infer_mc(&test.features[f], SAMPLES, src)?;
+        let mut ens = RegressionEnsemble::new(6);
+        for s in &out.samples {
+            ens.add_sample(s);
+        }
+        let m: Vec<f32> = ens.mean().iter().map(|&v| v as f32).collect();
+        errs.push(norm.position_error_m(&m, &test.poses[f]));
+        vars.push(ens.total_variance(3));
+    }
+    Ok((errs, vars))
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new(ARTIFACTS_DIR).join("meta.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts`");
+        return Ok(());
+    }
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(ARTIFACTS_DIR)?;
+    let test = VoTest::load(ARTIFACTS_DIR)?;
+    let norm = PoseNorm::new(&meta);
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+
+    println!("== Fig 13(a-c): mean position error over {FRAMES} frames [m] ==");
+    let eng32 =
+        McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &EngineConfig::new(NetKind::Vo))?;
+    let keep = eng32.mask_keep();
+    let mut cfg4 = EngineConfig::new(NetKind::Vo);
+    cfg4.bits = Some(4);
+    let eng4 = McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &cfg4)?;
+    let det = |e: &McDropoutEngine| -> anyhow::Result<f64> {
+        let outs = e.infer_det(&test.features[..FRAMES].to_vec())?;
+        Ok(mean(
+            &outs
+                .iter()
+                .zip(&test.poses[..FRAMES])
+                .map(|(o, p)| norm.position_error_m(o, p))
+                .collect::<Vec<_>>(),
+        ))
+    };
+    let mut src = IdealBernoulli::new(keep, 42);
+    let (mc_err, mc_var) = mc_err_var(&eng4, &test, &norm, &mut src)?;
+    println!("  det fp32 : {:.3}", det(&eng32)?);
+    println!("  det 4-bit: {:.3}", det(&eng4)?);
+    println!("  MC  4-bit: {:.3} ({} samples)", mean(&mc_err), SAMPLES);
+
+    println!("\n== Fig 13(d): error-variance Pearson r ==");
+    println!("  r = {:+.3}  (paper: 0.31)", pearson(&mc_err, &mc_var));
+
+    println!("\n== Fig 13(e): correlation vs precision ==");
+    for bits in [8u8, 6, 4, 3, 2] {
+        let mut cfg = EngineConfig::new(NetKind::Vo);
+        cfg.bits = Some(bits);
+        let eng = McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &cfg)?;
+        let mut src = IdealBernoulli::new(keep, 42);
+        let (e, v) = mc_err_var(&eng, &test, &norm, &mut src)?;
+        println!("  {bits}-bit: r = {:+.3}", pearson(&e, &v));
+    }
+    println!("  (paper: good correlation (>0.3) from 4-bit onward)");
+
+    println!("\n== Fig 13(f): correlation vs Beta(a,a) bias perturbation ==");
+    for a in [50.0, 10.0, 4.0, 2.0, 1.25] {
+        let mut src = BetaPerturbedBernoulli::new(keep, a, 23);
+        let (e, v) = mc_err_var(&eng4, &test, &norm, &mut src)?;
+        println!("  a = {a:5}: r = {:+.3}", pearson(&e, &v));
+    }
+    println!("  (paper: reasonable down to a = 2; drops at a = 1.25)");
+    Ok(())
+}

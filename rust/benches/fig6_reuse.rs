@@ -1,0 +1,65 @@
+//! Fig. 6(b) — MAC workload: typical vs compute reuse vs reuse + TSP.
+//!
+//!     cargo bench --bench fig6_reuse
+//!
+//! Regenerates the paper's 10-neuron/100-sample comparison (reuse needs
+//! ~52% of the typical MACs; reuse + optimal ordering ~20%) and sweeps
+//! the sample count and layer width to show where the savings saturate.
+//! Also times the TSP solver itself (the offline cost of §IV-B).
+
+use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
+use mc_cim::rng::IdealBernoulli;
+use std::time::Instant;
+
+fn main() {
+    println!("== Fig 6(b): 10x10 FC layer, p = 0.5 ==");
+    println!("  samples   typical-MACs  reuse%   reuse+SO%");
+    for &t in &[10usize, 30, 50, 100, 200] {
+        let mut src = IdealBernoulli::new(0.5, t as u64);
+        let sched = McSchedule::sample(t, &[10], &mut src);
+        let typ = sched.workload(&[10], ExecutionMode::Typical);
+        let cr = sched.workload(&[10], ExecutionMode::ComputeReuse);
+        let so = sched.workload(&[10], ExecutionMode::ComputeReuseOrdered);
+        println!(
+            "  {t:7}   {:12}  {:5.1}%   {:5.1}%",
+            typ.macs,
+            100.0 * cr.ratio(),
+            100.0 * so.ratio()
+        );
+    }
+    println!("  (paper at 100 samples: reuse ~52%, reuse+TSP ~20%)");
+
+    println!("\n== width sweep (100 samples): ordering gain shrinks as the mask space grows ==");
+    println!("  width   reuse%   reuse+SO%   SO-gain");
+    for &w in &[6usize, 10, 16, 31, 64] {
+        let mut src = IdealBernoulli::new(0.5, 31 + w as u64);
+        let sched = McSchedule::sample(100, &[w], &mut src);
+        let cr = sched.workload(&[w], ExecutionMode::ComputeReuse);
+        let so = sched.workload(&[w], ExecutionMode::ComputeReuseOrdered);
+        println!(
+            "  {w:5}   {:5.1}%   {:6.1}%   {:5.2}x",
+            100.0 * cr.ratio(),
+            100.0 * so.ratio(),
+            cr.ratio() / so.ratio()
+        );
+    }
+
+    println!("\n== offline TSP solver cost (NN + 2-opt) ==");
+    for &t in &[30usize, 100, 200] {
+        let mut src = IdealBernoulli::new(0.5, 77 + t as u64);
+        let sched = McSchedule::sample(t, &[31], &mut src);
+        let t0 = Instant::now();
+        let (_, order) = sched.ordered();
+        let dt = t0.elapsed();
+        println!(
+            "  {t:4} samples: {:8.2?} ({} cities, permutation ok: {})",
+            dt,
+            order.len(),
+            {
+                let mut s = order.clone();
+                s.sort_unstable();
+                s == (0..t).collect::<Vec<_>>()
+            }
+        );
+    }
+}

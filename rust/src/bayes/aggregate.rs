@@ -1,0 +1,211 @@
+//! Ensemble aggregators for MC-Dropout outputs.
+
+use crate::util::stats;
+
+/// Classification ensemble: argmax votes over T iterations.
+#[derive(Clone, Debug, Default)]
+pub struct ClassEnsemble {
+    votes: Vec<usize>,
+    n_classes: usize,
+}
+
+impl ClassEnsemble {
+    pub fn new(n_classes: usize) -> Self {
+        ClassEnsemble { votes: Vec::new(), n_classes }
+    }
+
+    /// Add one iteration's logits (vote = argmax).
+    pub fn add_logits(&mut self, logits: &[f32]) {
+        assert_eq!(logits.len(), self.n_classes);
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        self.votes.push(best);
+    }
+
+    pub fn add_vote(&mut self, class: usize) {
+        assert!(class < self.n_classes);
+        self.votes.push(class);
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.votes.len()
+    }
+
+    pub fn votes(&self) -> &[usize] {
+        &self.votes
+    }
+
+    /// Class occupancy p_i = votes_i / T (the p of Fig. 12(b)).
+    pub fn class_probs(&self) -> Vec<f64> {
+        let mut p = vec![0.0f64; self.n_classes];
+        for &v in &self.votes {
+            p[v] += 1.0;
+        }
+        let t = self.votes.len().max(1) as f64;
+        p.iter_mut().for_each(|x| *x /= t);
+        p
+    }
+
+    /// Majority-vote prediction.
+    pub fn prediction(&self) -> usize {
+        let p = self.class_probs();
+        p.iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// Normalized predictive entropy in [0, 1]: 0 = fully confident,
+    /// 1 = votes uniformly dispersed (Fig. 12(b)'s y-axis).
+    pub fn entropy(&self) -> f64 {
+        stats::entropy_normalized(&self.class_probs())
+    }
+
+    /// Confidence = occupancy of the winning class.
+    pub fn confidence(&self) -> f64 {
+        let p = self.class_probs();
+        p[self.prediction()]
+    }
+}
+
+/// Regression ensemble: per-dimension mean and variance over T samples.
+#[derive(Clone, Debug, Default)]
+pub struct RegressionEnsemble {
+    samples: Vec<Vec<f32>>,
+    dims: usize,
+}
+
+impl RegressionEnsemble {
+    pub fn new(dims: usize) -> Self {
+        RegressionEnsemble { samples: Vec::new(), dims }
+    }
+
+    pub fn add_sample(&mut self, y: &[f32]) {
+        assert_eq!(y.len(), self.dims);
+        self.samples.push(y.to_vec());
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Ensemble mean (the prediction).
+    pub fn mean(&self) -> Vec<f64> {
+        let t = self.samples.len().max(1) as f64;
+        let mut m = vec![0.0f64; self.dims];
+        for s in &self.samples {
+            for (mi, &v) in m.iter_mut().zip(s) {
+                *mi += v as f64;
+            }
+        }
+        m.iter_mut().for_each(|x| *x /= t);
+        m
+    }
+
+    /// Per-dimension predictive variance.
+    pub fn variance(&self) -> Vec<f64> {
+        let m = self.mean();
+        let t = self.samples.len().max(1) as f64;
+        let mut v = vec![0.0f64; self.dims];
+        for s in &self.samples {
+            for ((vi, &mi), &x) in v.iter_mut().zip(&m).zip(s) {
+                let d = x as f64 - mi;
+                *vi += d * d;
+            }
+        }
+        v.iter_mut().for_each(|x| *x /= t);
+        v
+    }
+
+    /// Scalar uncertainty: total variance over the first `k` dims
+    /// (Fig. 13(d) uses position variance).
+    pub fn total_variance(&self, k: usize) -> f64 {
+        self.variance().iter().take(k).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn unanimous_votes_are_confident() {
+        let mut e = ClassEnsemble::new(10);
+        for _ in 0..30 {
+            e.add_vote(3);
+        }
+        assert_eq!(e.prediction(), 3);
+        assert_eq!(e.entropy(), 0.0);
+        assert_eq!(e.confidence(), 1.0);
+    }
+
+    #[test]
+    fn dispersed_votes_have_high_entropy() {
+        let mut e = ClassEnsemble::new(10);
+        for c in 0..10 {
+            for _ in 0..3 {
+                e.add_vote(c);
+            }
+        }
+        assert!((e.entropy() - 1.0).abs() < 1e-9);
+        assert!((e.confidence() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_monotone_in_dispersion() {
+        // moving one vote away from the majority cannot decrease entropy
+        let mut prev = -1.0;
+        for minority in 0..15 {
+            let mut e = ClassEnsemble::new(10);
+            for _ in 0..(30 - minority) {
+                e.add_vote(0);
+            }
+            for i in 0..minority {
+                e.add_vote(1 + (i % 9));
+            }
+            let h = e.entropy();
+            assert!(h >= prev - 1e-12, "minority {minority}: {h} < {prev}");
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn add_logits_votes_argmax() {
+        let mut e = ClassEnsemble::new(3);
+        e.add_logits(&[0.1, 2.0, -1.0]);
+        e.add_logits(&[3.0, 2.0, -1.0]);
+        assert_eq!(e.votes(), &[1, 0]);
+    }
+
+    #[test]
+    fn regression_moments() {
+        let mut e = RegressionEnsemble::new(2);
+        e.add_sample(&[1.0, 10.0]);
+        e.add_sample(&[3.0, 10.0]);
+        let m = e.mean();
+        assert!((m[0] - 2.0).abs() < 1e-9 && (m[1] - 10.0).abs() < 1e-9);
+        let v = e.variance();
+        assert!((v[0] - 1.0).abs() < 1e-9);
+        assert!(v[1].abs() < 1e-9);
+        assert!((e.total_variance(2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variance_nonnegative_property() {
+        check("variance >= 0", 50, |rng| {
+            let mut e = RegressionEnsemble::new(4);
+            for _ in 0..10 {
+                let s: Vec<f32> =
+                    (0..4).map(|_| rng.uniform(-5.0, 5.0) as f32).collect();
+                e.add_sample(&s);
+            }
+            e.variance().iter().all(|&v| v >= 0.0)
+        });
+    }
+}

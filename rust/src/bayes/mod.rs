@@ -1,0 +1,11 @@
+//! §VI — Bayesian ensemble aggregation.
+//!
+//! MC-Dropout produces T probabilistic outputs per input; predictions
+//! come from majority vote (classification) or the sample mean
+//! (regression), and *confidence* from the ensemble dispersion:
+//! normalized class entropy (Fig. 12(b)) or predictive variance
+//! (Fig. 13(d)).
+
+pub mod aggregate;
+
+pub use aggregate::{ClassEnsemble, RegressionEnsemble};

@@ -1,0 +1,195 @@
+//! The 16x31 CIM array (Fig. 1(c)): per-cycle bitplane product with
+//! charge-averaged MAV readout and row/column dropout gating.
+//!
+//! The array is weight-stationary: one *weight row* per output neuron
+//! holds the current bitplane of that neuron's 31 weights. A compute
+//! cycle drives the 31 column lines with (sign-gated) input bits, pulses
+//! one row line, and the discharged product lines are charge-averaged on
+//! the sum line (SLL):
+//!
+//!   V_SLL = VDD - (VDD / n_cols) * sum_i x_i * w_i          (§II-B)
+//!
+//! Sign handling: the MF schedule needs *signed* plane sums. The macro
+//! realizes this differentially — positive-sign and negative-sign
+//! columns are averaged on split sum lines and the xADC digitizes the
+//! difference. The array therefore reports `(pos_count, neg_count)` per
+//! cycle; energy accounting charges one precharge per active column and
+//! one conversion per cycle, matching the differential single-conversion
+//! design.
+
+use super::cell::BitCell;
+
+/// Per-cycle electrical outcome of one row evaluation.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CycleReadout {
+    /// Columns that discharged under positive input sign.
+    pub pos_count: u32,
+    /// Columns that discharged under negative input sign.
+    pub neg_count: u32,
+    /// Columns that were driven this cycle (precharge energy scales
+    /// with this, dropout gating reduces it).
+    pub driven_cols: u32,
+}
+
+impl CycleReadout {
+    /// The signed plane sum the differential SLL pair represents.
+    pub fn signed_sum(&self) -> i32 {
+        self.pos_count as i32 - self.neg_count as i32
+    }
+}
+
+/// The CIM array: `rows x cols` bitcells plus dropout gating state.
+#[derive(Clone, Debug)]
+pub struct CimArray {
+    rows: usize,
+    cols: usize,
+    cells: Vec<BitCell>,
+}
+
+impl CimArray {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        assert!(rows > 0 && cols > 0);
+        CimArray { rows, cols, cells: vec![BitCell::default(); rows * cols] }
+    }
+
+    /// The paper's geometry: 16 x 31.
+    pub fn paper_macro() -> Self {
+        CimArray::new(crate::MACRO_ROWS, crate::MACRO_COLS)
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Write one weight bitplane into a row (WWL pulse per cell).
+    /// Returns the number of write operations (for energy accounting).
+    pub fn write_row(&mut self, row: usize, bits: &[bool]) -> usize {
+        assert!(row < self.rows, "row {row} out of range");
+        assert_eq!(bits.len(), self.cols, "bitplane width mismatch");
+        for (c, &b) in bits.iter().enumerate() {
+            self.cells[row * self.cols + c].write(b);
+        }
+        self.cols
+    }
+
+    /// Stored bit at (row, col).
+    pub fn stored(&self, row: usize, col: usize) -> bool {
+        self.cells[row * self.cols + col].stored()
+    }
+
+    /// One compute cycle on `row`.
+    ///
+    /// * `input_signs[i]` in {-1, 0, +1}: the sign-plane drive of column
+    ///   i (0 = input is zero, column not driven);
+    /// * `col_active[i]`: input-dropout gate (CL AND dropout bit);
+    /// * `row_active`: output-dropout gate (RL AND dropout bit).
+    ///
+    /// Returns the differential readout. A dropped row still consumes no
+    /// compute energy: `driven_cols` is zero when the row is gated off.
+    pub fn evaluate_row(
+        &self,
+        row: usize,
+        input_signs: &[i8],
+        col_active: &[bool],
+        row_active: bool,
+    ) -> CycleReadout {
+        assert!(row < self.rows);
+        assert_eq!(input_signs.len(), self.cols);
+        assert_eq!(col_active.len(), self.cols);
+        let mut out = CycleReadout::default();
+        if !row_active {
+            return out;
+        }
+        for c in 0..self.cols {
+            if !col_active[c] || input_signs[c] == 0 {
+                continue;
+            }
+            out.driven_cols += 1;
+            let cell = &self.cells[row * self.cols + c];
+            if cell.pl_discharges(true, true) {
+                if input_signs[c] > 0 {
+                    out.pos_count += 1;
+                } else {
+                    out.neg_count += 1;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{bool_mask, check};
+
+    fn signs(rng: &mut crate::util::Pcg32, n: usize) -> Vec<i8> {
+        (0..n)
+            .map(|_| match rng.below(3) {
+                0 => -1i8,
+                1 => 0,
+                _ => 1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn geometry_matches_paper() {
+        let a = CimArray::paper_macro();
+        assert_eq!((a.rows(), a.cols()), (16, 31));
+    }
+
+    #[test]
+    fn signed_sum_matches_reference_popcount() {
+        check("array row eval == reference", 100, |rng| {
+            let mut a = CimArray::new(4, 31);
+            let bits = bool_mask(rng, 31, 0.5);
+            a.write_row(2, &bits);
+            let s = signs(rng, 31);
+            let act = bool_mask(rng, 31, 0.7);
+            let r = a.evaluate_row(2, &s, &act, true);
+            let want: i32 = (0..31)
+                .filter(|&i| act[i] && bits[i])
+                .map(|i| s[i] as i32)
+                .sum();
+            r.signed_sum() == want
+        });
+    }
+
+    #[test]
+    fn dropped_row_is_fully_gated() {
+        let mut a = CimArray::new(2, 31);
+        a.write_row(0, &vec![true; 31]);
+        let r = a.evaluate_row(0, &vec![1i8; 31], &vec![true; 31], false);
+        assert_eq!(r.signed_sum(), 0);
+        assert_eq!(r.driven_cols, 0);
+    }
+
+    #[test]
+    fn column_dropout_reduces_driven_columns() {
+        check("driven cols == active & nonzero", 60, |rng| {
+            let mut a = CimArray::new(1, 31);
+            a.write_row(0, &bool_mask(rng, 31, 0.5));
+            let s = signs(rng, 31);
+            let act = bool_mask(rng, 31, 0.5);
+            let r = a.evaluate_row(0, &s, &act, true);
+            let want = (0..31).filter(|&i| act[i] && s[i] != 0).count() as u32;
+            r.driven_cols == want
+        });
+    }
+
+    #[test]
+    fn rewriting_row_changes_result() {
+        let mut a = CimArray::new(1, 31);
+        a.write_row(0, &vec![true; 31]);
+        let all = a.evaluate_row(0, &vec![1i8; 31], &vec![true; 31], true);
+        assert_eq!(all.signed_sum(), 31);
+        a.write_row(0, &vec![false; 31]);
+        let none = a.evaluate_row(0, &vec![1i8; 31], &vec![true; 31], true);
+        assert_eq!(none.signed_sum(), 0);
+    }
+}

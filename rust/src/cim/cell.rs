@@ -1,0 +1,68 @@
+//! The 8T-SRAM bitcell (Fig. 1(c) inset).
+//!
+//! Ports:
+//! * write word line (WWL) + left/right write bitlines (WBLL/WBLR) for
+//!   storage writes;
+//! * column line (CL) carrying the input bit and product line (PL)
+//!   evaluating the product during inference;
+//! * row line (RL) gating which row participates in a compute cycle.
+//!
+//! Compute semantics: PL is precharged each cycle and **discharges only
+//! when the input bit and the stored bit are both one** — a dynamic AND.
+
+/// One 8T bitcell.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BitCell {
+    stored: bool,
+}
+
+impl BitCell {
+    /// Write through WWL/WBL (the storage port).
+    pub fn write(&mut self, bit: bool) {
+        self.stored = bit;
+    }
+
+    /// Stored value (read port).
+    pub fn stored(&self) -> bool {
+        self.stored
+    }
+
+    /// One compute evaluation: does PL discharge this cycle?
+    ///
+    /// `row_active` models the RL gate (output-dropout masking of §III-A
+    /// disables whole rows); `input_bit` is the CL drive (input dropout
+    /// ANDs a dropout bit into this signal upstream).
+    #[inline]
+    pub fn pl_discharges(&self, input_bit: bool, row_active: bool) -> bool {
+        row_active && input_bit && self.stored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truth_table_is_dynamic_and() {
+        let mut c = BitCell::default();
+        for &stored in &[false, true] {
+            c.write(stored);
+            for &input in &[false, true] {
+                for &row in &[false, true] {
+                    assert_eq!(c.pl_discharges(input, row), stored && input && row);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn write_is_idempotent_and_overwrites() {
+        let mut c = BitCell::default();
+        c.write(true);
+        assert!(c.stored());
+        c.write(true);
+        assert!(c.stored());
+        c.write(false);
+        assert!(!c.stored());
+    }
+}

@@ -1,0 +1,289 @@
+//! The full MC-CIM macro: bitplane schedule driven through the 16x31
+//! array with the xADC in the loop (Fig. 1(c-e)).
+//!
+//! `CimMacro::correlate` computes one layer slice — up to 16 output
+//! neurons against a 31-element input vector — exactly as the hardware
+//! would: per schedule cycle it stores the relevant bitplane, drives the
+//! sign-gated column lines (input dropout ANDed in), pulses each active
+//! row (output dropout ANDed in), digitizes the differential MAV with
+//! the SAR policy, and shift-adds the digital codes.
+//!
+//! Because the SAR search is exact over the discrete plane-sum alphabet
+//! (see `xadc`), the macro result must equal the ideal
+//! `BitplaneSchedule::evaluate` — `tests` and `rust/tests/integration.rs`
+//! enforce this bit-for-bit. What the run statistics expose is the
+//! *cost*: compute cycles, driven-column events, per-conversion SAR
+//! cycles — the quantities the energy model (§V) prices.
+//!
+//! Weight loading is excluded from per-inference accounting (weights are
+//! stationary across inputs; the paper reports inference energy).
+
+use super::array::CimArray;
+use super::mav::MavModel;
+use super::xadc::{AdcKind, SarAdc};
+use crate::operator::bitplane::{BitplaneSchedule, CycleKind, OperatorKind};
+use crate::operator::quant::QuantTensor;
+
+/// Cost counters for one `correlate` call.
+#[derive(Clone, Debug, Default)]
+pub struct MacroRunStats {
+    /// Array compute cycles (one per schedule cycle per active row).
+    pub compute_cycles: u64,
+    /// Column-line drive events (precharge energy scales with these).
+    pub driven_col_cycles: u64,
+    /// ADC conversions performed.
+    pub adc_conversions: u64,
+    /// Total SAR cycles across conversions.
+    pub adc_cycles: u64,
+    /// Observed plane sums (for building empirical MAV models).
+    pub plane_sums: Vec<i32>,
+}
+
+impl MacroRunStats {
+    pub fn merge(&mut self, other: &MacroRunStats) {
+        self.compute_cycles += other.compute_cycles;
+        self.driven_col_cycles += other.driven_col_cycles;
+        self.adc_conversions += other.adc_conversions;
+        self.adc_cycles += other.adc_cycles;
+        self.plane_sums.extend_from_slice(&other.plane_sums);
+    }
+
+    /// Mean SAR cycles per conversion.
+    pub fn mean_adc_cycles(&self) -> f64 {
+        if self.adc_conversions == 0 {
+            0.0
+        } else {
+            self.adc_cycles as f64 / self.adc_conversions as f64
+        }
+    }
+}
+
+/// The macro: array + ADC policy.
+pub struct CimMacro {
+    array: CimArray,
+    adc: SarAdc,
+    kind: OperatorKind,
+}
+
+impl CimMacro {
+    /// Build with the paper geometry and an ADC trained on `mav`.
+    pub fn new(adc_kind: AdcKind, operator: OperatorKind, mav: &MavModel) -> Self {
+        assert_eq!(mav.cols(), crate::MACRO_COLS);
+        CimMacro {
+            array: CimArray::paper_macro(),
+            adc: SarAdc::new(adc_kind, mav),
+            kind: operator,
+        }
+    }
+
+    /// Default macro: MF operator, asymmetric ADC built from the
+    /// p=0.5-dropout analytic MAV model.
+    pub fn paper_default() -> Self {
+        let mav = MavModel::trinomial(crate::MACRO_COLS, 0.125, 0.125);
+        Self::new(AdcKind::AsymmetricMedian, OperatorKind::MultiplicationFree, &mav)
+    }
+
+    pub fn operator(&self) -> OperatorKind {
+        self.kind
+    }
+
+    /// Correlate `x` (31 columns) against up to 16 weight rows.
+    ///
+    /// * `col_active`: input-dropout mask over the 31 columns;
+    /// * `row_active`: output-dropout mask over the weight rows.
+    ///
+    /// Returns the per-row results and the cost counters.
+    pub fn correlate(
+        &mut self,
+        x: &QuantTensor,
+        w_rows: &[QuantTensor],
+        col_active: &[bool],
+        row_active: &[bool],
+    ) -> (Vec<f32>, MacroRunStats) {
+        let cols = self.array.cols();
+        assert_eq!(x.codes.len(), cols, "input width must match macro columns");
+        assert!(w_rows.len() <= self.array.rows(), "too many rows for macro");
+        assert_eq!(row_active.len(), w_rows.len());
+        assert_eq!(col_active.len(), cols);
+        for w in w_rows {
+            assert_eq!(w.codes.len(), cols);
+            assert_eq!(w.bits, x.bits, "macro processes equal-precision operands");
+        }
+
+        let mut stats = MacroRunStats::default();
+        let mut out = vec![0.0f32; w_rows.len()];
+
+        for (r, w) in w_rows.iter().enumerate() {
+            let sched = BitplaneSchedule::new(self.kind, x.bits, x.delta, w.delta);
+            for cyc in &sched.cycles {
+                // Decompose the cycle into (drive signs, stored bits).
+                let (signs, bits): (Vec<i8>, Vec<bool>) = match cyc.kind {
+                    CycleKind::SignXWithWPlane(p) => (
+                        (0..cols).map(|i| x.sign(i) as i8).collect(),
+                        (0..cols).map(|i| w.magnitude_bit(i, p) == 1).collect(),
+                    ),
+                    CycleKind::SignWWithXPlane(p) => (
+                        // differential sign(w) storage, x-plane drive:
+                        // equivalently drive columns with sign(w) gated
+                        // by the x magnitude bit (see array docs)
+                        (0..cols)
+                            .map(|i| {
+                                (w.sign(i) * x.magnitude_bit(i, p) as i32) as i8
+                            })
+                            .collect(),
+                        vec![true; cols],
+                    ),
+                    CycleKind::PlanePair { px, pw } => (
+                        (0..cols)
+                            .map(|i| {
+                                ((x.sign(i) * w.sign(i))
+                                    * x.magnitude_bit(i, px) as i32)
+                                    as i8
+                            })
+                            .collect(),
+                        (0..cols).map(|i| w.magnitude_bit(i, pw) == 1).collect(),
+                    ),
+                };
+                self.array.write_row(r % self.array.rows(), &bits);
+                let readout = self.array.evaluate_row(
+                    r % self.array.rows(),
+                    &signs,
+                    col_active,
+                    row_active[r],
+                );
+                if !row_active[r] {
+                    continue; // gated row: no compute, no conversion
+                }
+                stats.compute_cycles += 1;
+                stats.driven_col_cycles += readout.driven_cols as u64;
+                let (code, sar_cycles) = self.adc.convert(readout.signed_sum());
+                stats.adc_conversions += 1;
+                stats.adc_cycles += sar_cycles as u64;
+                stats.plane_sums.push(code);
+                out[r] += code as f32 * cyc.scale;
+            }
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::quant::Quantizer;
+    use crate::util::testkit::{bool_mask, check, f32_vec};
+
+    fn masked(t: &QuantTensor, active: &[bool]) -> QuantTensor {
+        QuantTensor {
+            codes: t
+                .codes
+                .iter()
+                .zip(active)
+                .map(|(&c, &a)| if a { c } else { 0 })
+                .collect(),
+            delta: t.delta,
+            bits: t.bits,
+        }
+    }
+
+    #[test]
+    fn macro_reconstructs_ideal_schedule_result() {
+        check("macro == ideal bitplane eval", 25, |rng| {
+            let bits = 3 + rng.below(4) as u8;
+            let q = Quantizer::new(bits);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let rows: Vec<QuantTensor> =
+                (0..8).map(|_| q.quantize(&f32_vec(rng, 31, 1.0))).collect();
+            let col_act = bool_mask(rng, 31, 0.5);
+            let row_act = bool_mask(rng, 8, 0.5);
+            let mut mac = CimMacro::paper_default();
+            let (out, _) = mac.correlate(&x, &rows, &col_act, &row_act);
+            for (r, w) in rows.iter().enumerate() {
+                if !row_act[r] {
+                    if out[r] != 0.0 {
+                        return false;
+                    }
+                    continue;
+                }
+                let sched = BitplaneSchedule::new(
+                    OperatorKind::MultiplicationFree,
+                    bits,
+                    x.delta,
+                    w.delta,
+                );
+                let want = sched.evaluate(&x, w, &col_act);
+                if (out[r] - want).abs() > 1e-3 {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn macro_matches_mf_dot_quant_end_to_end() {
+        check("macro == mf_dot_quant", 25, |rng| {
+            let q = Quantizer::new(6);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let w = q.quantize(&f32_vec(rng, 31, 1.0));
+            let col_act = bool_mask(rng, 31, 0.6);
+            let mut mac = CimMacro::paper_default();
+            let (out, _) = mac.correlate(&x, &[w.clone()], &col_act, &[true]);
+            let want = crate::operator::mf::mf_dot_quant(
+                &masked(&x, &col_act),
+                &masked(&w, &col_act),
+            );
+            (out[0] - want).abs() < 1e-3
+        });
+    }
+
+    #[test]
+    fn conventional_macro_matches_dot_quant() {
+        check("conv macro == dot_quant", 15, |rng| {
+            let q = Quantizer::new(4);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let w = q.quantize(&f32_vec(rng, 31, 1.0));
+            let mav = MavModel::trinomial(31, 0.125, 0.125);
+            let mut mac =
+                CimMacro::new(AdcKind::Symmetric, OperatorKind::Conventional, &mav);
+            let (out, _) =
+                mac.correlate(&x, &[w.clone()], &vec![true; 31], &[true]);
+            let want = crate::operator::mf::conventional_dot_quant(&x, &w);
+            (out[0] - want).abs() < 1e-3
+        });
+    }
+
+    #[test]
+    fn stats_account_cycles_and_conversions() {
+        let q = Quantizer::new(6);
+        let mut rng = crate::util::Pcg32::seeded(2);
+        let x = q.quantize(&f32_vec(&mut rng, 31, 1.0));
+        let rows: Vec<QuantTensor> =
+            (0..16).map(|_| q.quantize(&f32_vec(&mut rng, 31, 1.0))).collect();
+        let mut mac = CimMacro::paper_default();
+        let (_, stats) =
+            mac.correlate(&x, &rows, &vec![true; 31], &vec![true; 16]);
+        // 16 rows x 2(6-1) = 10 cycles each
+        assert_eq!(stats.compute_cycles, 160);
+        assert_eq!(stats.adc_conversions, 160);
+        assert!(stats.adc_cycles > 0);
+        assert_eq!(stats.plane_sums.len(), 160);
+    }
+
+    #[test]
+    fn dropped_rows_cost_nothing() {
+        let q = Quantizer::new(6);
+        let mut rng = crate::util::Pcg32::seeded(3);
+        let x = q.quantize(&f32_vec(&mut rng, 31, 1.0));
+        let rows: Vec<QuantTensor> =
+            (0..16).map(|_| q.quantize(&f32_vec(&mut rng, 31, 1.0))).collect();
+        let mut mac = CimMacro::paper_default();
+        let (_, all_on) =
+            mac.correlate(&x, &rows, &vec![true; 31], &vec![true; 16]);
+        let mut mac2 = CimMacro::paper_default();
+        let half: Vec<bool> = (0..16).map(|r| r % 2 == 0).collect();
+        let (_, half_on) = mac2.correlate(&x, &rows, &vec![true; 31], &half);
+        assert_eq!(half_on.compute_cycles, all_on.compute_cycles / 2);
+        assert_eq!(half_on.adc_conversions, all_on.adc_conversions / 2);
+    }
+}

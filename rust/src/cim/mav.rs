@@ -1,0 +1,185 @@
+//! Multiply-average-voltage (MAV) statistics (§II-C, Fig. 5(b-c)).
+//!
+//! The SLL voltage after a compute cycle is
+//! `V = VDD - (VDD / n) * count` for `count` discharged product lines of
+//! `n` columns. Under MC-Dropout half the inputs are gated off, so the
+//! count distribution concentrates near zero (voltage skews toward VDD)
+//! — the asymmetry the xADC's statistics-driven search exploits; compute
+//! reuse sharpens the concentration further (only mask *deltas* drive
+//! columns).
+//!
+//! [`MavModel`] is a discrete pmf over the signed plane sums in
+//! `[-cols, cols]`, built either empirically from observed cycles or
+//! analytically (signed binomial).
+
+/// Discrete distribution over signed plane sums.
+#[derive(Clone, Debug)]
+pub struct MavModel {
+    cols: usize,
+    /// pmf[k] = P(sum == k - cols), length 2*cols + 1.
+    pmf: Vec<f64>,
+}
+
+impl MavModel {
+    /// Uniform model (no prior knowledge): every level equally likely.
+    pub fn uniform(cols: usize) -> Self {
+        let n = 2 * cols + 1;
+        MavModel { cols, pmf: vec![1.0 / n as f64; n] }
+    }
+
+    /// Empirical model from observed plane sums (Laplace-smoothed so the
+    /// search tree keeps every level reachable).
+    pub fn from_samples(cols: usize, samples: &[i32]) -> Self {
+        let n = 2 * cols + 1;
+        let mut counts = vec![1.0f64; n]; // +1 smoothing
+        for &s in samples {
+            let idx = (s + cols as i32).clamp(0, n as i32 - 1) as usize;
+            counts[idx] += 1.0;
+        }
+        let total: f64 = counts.iter().sum();
+        MavModel { cols, pmf: counts.iter().map(|c| c / total).collect() }
+    }
+
+    /// Analytic model: each column independently drives +1 with
+    /// probability `p_pos`, -1 with `p_neg`, else 0. Matches the
+    /// operating point "dropout p gates half the columns, stored bits
+    /// are ~Bernoulli(1/2)" when `p_pos ≈ p_neg ≈ p_active/4`.
+    pub fn trinomial(cols: usize, p_pos: f64, p_neg: f64) -> Self {
+        assert!(p_pos >= 0.0 && p_neg >= 0.0 && p_pos + p_neg <= 1.0);
+        let n = 2 * cols + 1;
+        // dynamic programming over columns
+        let mut pmf = vec![0.0f64; n];
+        pmf[cols] = 1.0; // sum = 0
+        let p0 = 1.0 - p_pos - p_neg;
+        for _ in 0..cols {
+            let mut next = vec![0.0f64; n];
+            for (k, &p) in pmf.iter().enumerate() {
+                if p == 0.0 {
+                    continue;
+                }
+                next[k] += p * p0;
+                if k + 1 < n {
+                    next[k + 1] += p * p_pos;
+                }
+                if k >= 1 {
+                    next[k - 1] += p * p_neg;
+                }
+            }
+            pmf = next;
+        }
+        MavModel { cols, pmf }
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of representable levels.
+    pub fn levels(&self) -> usize {
+        self.pmf.len()
+    }
+
+    /// P(sum == s).
+    pub fn prob(&self, s: i32) -> f64 {
+        let idx = s + self.cols as i32;
+        if idx < 0 || idx as usize >= self.pmf.len() {
+            0.0
+        } else {
+            self.pmf[idx as usize]
+        }
+    }
+
+    /// Full pmf, index k ↦ sum k - cols.
+    pub fn pmf(&self) -> &[f64] {
+        &self.pmf
+    }
+
+    /// Distribution mean (in count units).
+    pub fn mean(&self) -> f64 {
+        self.pmf
+            .iter()
+            .enumerate()
+            .map(|(k, p)| (k as f64 - self.cols as f64) * p)
+            .sum()
+    }
+
+    /// Shannon entropy in bits — the information-theoretic floor for the
+    /// expected SAR cycle count.
+    pub fn entropy_bits(&self) -> f64 {
+        -self
+            .pmf
+            .iter()
+            .filter(|&&p| p > 0.0)
+            .map(|&p| p * p.log2())
+            .sum::<f64>()
+    }
+
+    /// SLL voltage for an (unsigned) count per §II-B.
+    pub fn voltage(&self, count: u32) -> f64 {
+        crate::VDD - crate::VDD * count as f64 / self.cols as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trinomial_sums_to_one_and_centers() {
+        let m = MavModel::trinomial(31, 0.125, 0.125);
+        let total: f64 = m.pmf().iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(m.mean().abs() < 1e-9);
+    }
+
+    #[test]
+    fn trinomial_skews_with_asymmetric_p() {
+        let m = MavModel::trinomial(31, 0.3, 0.1);
+        assert!(m.mean() > 3.0);
+    }
+
+    #[test]
+    fn sparser_activity_has_lower_entropy() {
+        // compute-reuse story: sparser drive -> tighter MAV -> fewer
+        // expected conversion cycles
+        let dense = MavModel::trinomial(31, 0.25, 0.25);
+        let sparse = MavModel::trinomial(31, 0.05, 0.05);
+        assert!(sparse.entropy_bits() < dense.entropy_bits());
+    }
+
+    #[test]
+    fn empirical_matches_source_distribution() {
+        let mut rng = crate::util::Pcg32::seeded(4);
+        let mut samples = Vec::new();
+        for _ in 0..20_000 {
+            let mut s = 0i32;
+            for _ in 0..31 {
+                let u = rng.f64();
+                if u < 0.125 {
+                    s += 1;
+                } else if u < 0.25 {
+                    s -= 1;
+                }
+            }
+            samples.push(s);
+        }
+        let emp = MavModel::from_samples(31, &samples);
+        let ana = MavModel::trinomial(31, 0.125, 0.125);
+        // total variation distance small
+        let tv: f64 = emp
+            .pmf()
+            .iter()
+            .zip(ana.pmf())
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / 2.0;
+        assert!(tv < 0.05, "tv = {tv}");
+    }
+
+    #[test]
+    fn voltage_mapping_endpoints() {
+        let m = MavModel::uniform(31);
+        assert!((m.voltage(0) - crate::VDD).abs() < 1e-12);
+        assert!(m.voltage(31).abs() < 1e-12);
+    }
+}

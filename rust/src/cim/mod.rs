@@ -1,0 +1,23 @@
+//! §II-B/C — the 8T-SRAM compute-in-memory macro and its peripherals.
+//!
+//! * [`cell`] — the 8T bitcell: storage + decoupled product port.
+//! * [`array`] — the 16x31 array: bitplane product on the product lines,
+//!   charge-averaged MAV on the sum line, row/column dropout gating.
+//! * [`mav`] — MAV voltage mapping and empirical/binomial statistics.
+//! * [`xadc`] — SRAM-immersed SAR ADC: conventional symmetric binary
+//!   search vs the paper's MAV-statistics-driven asymmetric search.
+//! * [`macro_sim`] — the full macro: schedule-driven product-sum with
+//!   the array + ADC in the loop, cycle and energy event accounting.
+
+pub mod array;
+pub mod cell;
+pub mod macro_sim;
+pub mod mav;
+pub mod timing;
+pub mod xadc;
+
+pub use array::CimArray;
+pub use cell::BitCell;
+pub use macro_sim::{CimMacro, MacroRunStats};
+pub use mav::MavModel;
+pub use xadc::{AdcKind, SarAdc};

@@ -1,0 +1,146 @@
+//! Cycle-accurate latency model of the macro (Fig. 1(e) timing flows).
+//!
+//! The paper's schedule per compute cycle: first half-clock precharges
+//! the product lines and applies the inputs on the column lines, second
+//! half pulses the row line and evaluates; the xADC then runs its SA
+//! cycles on the sampled sum line while the *next* compute cycle's
+//! precharge proceeds (the conversion of cycle t overlaps compute of
+//! t+1 when the SAR finishes within the plane period — otherwise the
+//! pipeline stalls). Dropout-bit generation is pipelined one frame
+//! ahead (§III-B), so RNG latency is hidden except for the first frame.
+//!
+//! This model turns the §V energy workloads into *time*: cycles and
+//! microseconds per MC-Dropout inference at the 1 GHz main clock, per
+//! operating mode — the throughput counterpart of Fig. 9.
+
+use crate::energy::model::{EnergyModel, LayerWorkload, ModeConfig};
+use crate::operator::bitplane::OperatorKind;
+
+/// Latency accounting for one inference workload under a mode.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyReport {
+    /// Array compute cycles (plane evaluations x rows x iterations).
+    pub compute_cycles: u64,
+    /// SAR cycles that could NOT be hidden under compute (stalls).
+    pub adc_stall_cycles: u64,
+    /// One-time RNG fill for the first frame's dropout bits.
+    pub rng_fill_cycles: u64,
+    /// Total latency in clock cycles.
+    pub total_cycles: u64,
+}
+
+impl LatencyReport {
+    pub fn micros(&self, clock_hz: f64) -> f64 {
+        self.total_cycles as f64 / clock_hz * 1e6
+    }
+
+    /// MC-Dropout inferences per second at the given clock.
+    pub fn inferences_per_sec(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.total_cycles as f64
+    }
+}
+
+/// Compute the latency of a `LayerWorkload` under `mode`.
+///
+/// Pipeline rule: each plane evaluation takes one clock; the conversion
+/// of plane t overlaps the evaluation of plane t+1. If the expected SAR
+/// cycle count exceeds one plane period, the surplus stalls the array.
+/// The RNG generates `ceil(cols / planes)` bits per clock during the
+/// previous frame (§III-B throughput matching), so only the very first
+/// frame pays a serial fill.
+pub fn latency(model: &EnergyModel, w: &LayerWorkload, mode: &ModeConfig) -> LatencyReport {
+    let planes = match mode.operator {
+        OperatorKind::MultiplicationFree => 2 * (w.bits as u64 - 1),
+        OperatorKind::Conventional => w.bits as u64 - 1,
+    };
+    let compute_cycles = planes * w.rows as u64 * w.iters as u64;
+
+    let sar = model.expected_sar_cycles(w, mode);
+    // conversion overlaps the next compute cycle: 1 cycle hidden
+    let stall_per_conv = (sar - 1.0).max(0.0);
+    let adc_stall_cycles = (stall_per_conv * compute_cycles as f64).round() as u64;
+
+    let rng_fill_cycles = if mode.execution.needs_online_rng() {
+        // parallel RNG lanes sized for m/(2(n-1)) bits/clock (§III-B):
+        // a frame's (cols + rows) bits arrive within one frame period;
+        // the first frame pays the fill serially over the lane count
+        let lanes = (w.cols as u64).div_ceil(planes).max(1);
+        ((w.cols + w.rows) as u64).div_ceil(lanes)
+    } else {
+        // precomputed schedule: one SRAM read per cycle streams ahead
+        0
+    };
+
+    LatencyReport {
+        compute_cycles,
+        adc_stall_cycles,
+        rng_fill_cycles,
+        total_cycles: compute_cycles + adc_stall_cycles + rng_fill_cycles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dropout::schedule::ExecutionMode;
+
+    fn setup() -> (EnergyModel, LayerWorkload) {
+        (EnergyModel::paper_default(), LayerWorkload::paper_default())
+    }
+
+    #[test]
+    fn compute_cycles_follow_operator_schedule() {
+        let (m, w) = setup();
+        let mf = latency(&m, &w, &ModeConfig::mf_asym_reuse());
+        let conv = latency(&m, &w, &ModeConfig::typical());
+        // MF: 2(6-1) planes vs conventional 5 planes
+        assert_eq!(mf.compute_cycles, 10 * 16 * 30);
+        assert_eq!(conv.compute_cycles, 5 * 16 * 30);
+    }
+
+    #[test]
+    fn asymmetric_adc_reduces_stalls() {
+        let (m, w) = setup();
+        let sym = ModeConfig {
+            operator: OperatorKind::MultiplicationFree,
+            adc: crate::cim::xadc::AdcKind::Symmetric,
+            execution: ExecutionMode::Typical,
+        };
+        let asym = ModeConfig {
+            operator: OperatorKind::MultiplicationFree,
+            adc: crate::cim::xadc::AdcKind::AsymmetricMedian,
+            execution: ExecutionMode::Typical,
+        };
+        let l_sym = latency(&m, &w, &sym);
+        let l_asym = latency(&m, &w, &asym);
+        assert!(l_asym.adc_stall_cycles < l_sym.adc_stall_cycles);
+        assert!(l_asym.total_cycles < l_sym.total_cycles);
+    }
+
+    #[test]
+    fn ordered_schedules_skip_the_rng_fill() {
+        let (m, w) = setup();
+        let cr = latency(&m, &w, &ModeConfig::mf_asym_reuse());
+        let so = latency(&m, &w, &ModeConfig::mf_asym_reuse_ordered());
+        assert!(cr.rng_fill_cycles > 0);
+        assert_eq!(so.rng_fill_cycles, 0);
+    }
+
+    #[test]
+    fn paper_operating_point_is_sub_10us() {
+        // 30-iteration 6-bit inference on one macro at 1 GHz should sit
+        // in the microseconds regime (4800 compute cycles + stalls)
+        let (m, w) = setup();
+        let l = latency(&m, &w, &ModeConfig::mf_asym_reuse_ordered());
+        let us = l.micros(crate::CLOCK_HZ);
+        assert!(us > 1.0 && us < 60.0, "latency {us:.2} us");
+    }
+
+    #[test]
+    fn throughput_is_reciprocal_of_latency() {
+        let (m, w) = setup();
+        let l = latency(&m, &w, &ModeConfig::mf_asym_reuse());
+        let ips = l.inferences_per_sec(1e9);
+        assert!((ips * l.total_cycles as f64 / 1e9 - 1.0).abs() < 1e-9);
+    }
+}

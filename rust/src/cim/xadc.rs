@@ -1,0 +1,296 @@
+//! SRAM-immersed SAR ADC (xADC, §II-C, Fig. 5).
+//!
+//! The xADC borrows the bitline capacitance of a neighbouring CIM array
+//! as its capacitive DAC (no dedicated DAC) and runs successive
+//! approximation. Two search policies:
+//!
+//! * **Symmetric** (conventional SAR): midpoint binary search — a fixed
+//!   `ceil(log2(levels))` cycles per conversion.
+//! * **Asymmetric** (this paper): each cycle's reference level
+//!   *iso-partitions the remaining probability mass* of the MAV
+//!   distribution, so frequent values resolve in very few cycles and the
+//!   expected cycle count approaches the distribution entropy.
+//!   An optimal-alphabetic-tree variant (Knuth DP) is included as the
+//!   best-achievable bound for the ablation benches.
+//!
+//! Conversions are exact over the discrete plane-sum alphabet — the SAR
+//! terminates when the interval narrows to one level — so digitization
+//! never perturbs the product-sum; what varies per policy is the *cycle
+//! count* (time + energy), which is what Fig. 5(d-f) reports.
+
+use super::mav::MavModel;
+
+/// Search policy of the SAR logic.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdcKind {
+    /// Conventional midpoint binary search.
+    Symmetric,
+    /// Paper's statistics-driven iso-partition search.
+    AsymmetricMedian,
+    /// Optimal alphabetic search tree (Knuth DP) — ablation bound.
+    AsymmetricOptimal,
+}
+
+/// A binary search tree over the level alphabet `[-cols, cols]`,
+/// realized as split points per interval.
+#[derive(Clone, Debug)]
+pub struct SarAdc {
+    kind: AdcKind,
+    cols: usize,
+    /// split[(lo, hi)] flattened: for interval [lo, hi] (inclusive level
+    /// indices), compare against `split` and recurse. Stored as a map
+    /// from interval to split to keep construction simple.
+    splits: std::collections::HashMap<(u16, u16), u16>,
+}
+
+impl SarAdc {
+    /// Build the ADC for a MAV model. The model is only consulted for
+    /// the asymmetric kinds; the symmetric ADC ignores it.
+    pub fn new(kind: AdcKind, model: &MavModel) -> Self {
+        let n = model.levels() as u16;
+        let mut adc = SarAdc {
+            kind,
+            cols: model.cols(),
+            splits: std::collections::HashMap::new(),
+        };
+        match kind {
+            AdcKind::Symmetric => adc.build_midpoint(0, n - 1),
+            AdcKind::AsymmetricMedian => adc.build_median(0, n - 1, model),
+            AdcKind::AsymmetricOptimal => adc.build_optimal(model),
+        }
+        adc
+    }
+
+    pub fn kind(&self) -> AdcKind {
+        self.kind
+    }
+
+    fn build_midpoint(&mut self, lo: u16, hi: u16) {
+        if lo >= hi {
+            return;
+        }
+        let mid = (lo + hi) / 2;
+        self.splits.insert((lo, hi), mid);
+        self.build_midpoint(lo, mid);
+        self.build_midpoint(mid + 1, hi);
+    }
+
+    fn build_median(&mut self, lo: u16, hi: u16, model: &MavModel) {
+        if lo >= hi {
+            return;
+        }
+        // choose split s in [lo, hi-1] so mass(lo..=s) ~ mass(s+1..=hi)
+        let pmf = model.pmf();
+        let total: f64 = pmf[lo as usize..=hi as usize].iter().sum();
+        let mut acc = 0.0;
+        let mut split = lo;
+        for s in lo..hi {
+            acc += pmf[s as usize];
+            split = s;
+            if acc >= total / 2.0 {
+                break;
+            }
+        }
+        self.splits.insert((lo, hi), split);
+        self.build_median(lo, split, model);
+        self.build_median(split + 1, hi, model);
+    }
+
+    /// Knuth O(n^2) DP for the optimal alphabetic binary search tree
+    /// over leaf weights = pmf (all queries are leaves).
+    fn build_optimal(&mut self, model: &MavModel) {
+        let pmf = model.pmf();
+        let n = pmf.len();
+        // prefix sums for O(1) interval mass
+        let mut pre = vec![0.0f64; n + 1];
+        for i in 0..n {
+            pre[i + 1] = pre[i] + pmf[i];
+        }
+        let mass = |lo: usize, hi: usize| pre[hi + 1] - pre[lo];
+        // cost[lo][hi], root[lo][hi]
+        let mut cost = vec![vec![0.0f64; n]; n];
+        let mut root = vec![vec![0usize; n]; n];
+        for lo in 0..n {
+            root[lo][lo] = lo;
+        }
+        for len in 2..=n {
+            for lo in 0..=n - len {
+                let hi = lo + len - 1;
+                // Knuth bound: optimal split is monotone
+                let r_lo = root[lo][hi - 1].max(lo);
+                let r_hi = root[lo + 1][hi].min(hi - 1);
+                let mut best = f64::INFINITY;
+                let mut best_r = r_lo;
+                for r in r_lo..=r_hi.max(r_lo) {
+                    let c = cost[lo][r] + cost[r + 1][hi];
+                    if c < best {
+                        best = c;
+                        best_r = r;
+                    }
+                }
+                cost[lo][hi] = best + mass(lo, hi);
+                root[lo][hi] = best_r;
+            }
+        }
+        // materialize splits
+        fn emit(
+            splits: &mut std::collections::HashMap<(u16, u16), u16>,
+            root: &[Vec<usize>],
+            lo: usize,
+            hi: usize,
+        ) {
+            if lo >= hi {
+                return;
+            }
+            let r = root[lo][hi];
+            splits.insert((lo as u16, hi as u16), r as u16);
+            emit(splits, root, lo, r);
+            emit(splits, root, r + 1, hi);
+        }
+        emit(&mut self.splits, &root, 0, n - 1);
+    }
+
+    /// Convert a signed plane sum. Returns `(value, sa_cycles)` — the
+    /// value is exact (see module docs), the cycle count depends on the
+    /// search policy and the value's position in the tree.
+    ///
+    /// A conventional SAR runs a fixed `ceil(log2(levels))` cycles (the
+    /// register clocks every bit regardless of the comparator outcome),
+    /// so the symmetric policy charges the fixed count even when the
+    /// midpoint tree would isolate a value one cycle early.
+    pub fn convert(&self, sum: i32) -> (i32, u32) {
+        let n_levels = (2 * self.cols + 1) as u16;
+        let target = (sum + self.cols as i32).clamp(0, n_levels as i32 - 1) as u16;
+        let (mut lo, mut hi) = (0u16, n_levels - 1);
+        let mut cycles = 0u32;
+        while lo < hi {
+            let split = *self
+                .splits
+                .get(&(lo, hi))
+                .expect("search tree covers all reachable intervals");
+            cycles += 1;
+            if target <= split {
+                hi = split;
+            } else {
+                lo = split + 1;
+            }
+        }
+        if self.kind == AdcKind::Symmetric {
+            cycles = (n_levels as f64).log2().ceil() as u32;
+        }
+        (lo as i32 - self.cols as i32, cycles)
+    }
+
+    /// Expected cycles under a (possibly different) usage distribution.
+    pub fn expected_cycles(&self, usage: &MavModel) -> f64 {
+        assert_eq!(usage.cols(), self.cols);
+        usage
+            .pmf()
+            .iter()
+            .enumerate()
+            .map(|(k, p)| {
+                let s = k as i32 - self.cols as i32;
+                p * self.convert(s).1 as f64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check;
+
+    fn paper_mav() -> MavModel {
+        // p = 0.5 input dropout, ~Bernoulli(1/2) stored bits, signed
+        // split: each column +1/-1 w.p. ~1/8 each
+        MavModel::trinomial(31, 0.125, 0.125)
+    }
+
+    #[test]
+    fn all_kinds_convert_exactly() {
+        let m = paper_mav();
+        for kind in [AdcKind::Symmetric, AdcKind::AsymmetricMedian, AdcKind::AsymmetricOptimal] {
+            let adc = SarAdc::new(kind, &m);
+            for s in -31..=31 {
+                assert_eq!(adc.convert(s).0, s, "{kind:?} at {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn symmetric_cycles_are_fixed_log2() {
+        let m = paper_mav();
+        let adc = SarAdc::new(AdcKind::Symmetric, &m);
+        // 63 levels -> ceil(log2 63) = 6 cycles for every value
+        let cycles: Vec<u32> = (-31..=31).map(|s| adc.convert(s).1).collect();
+        assert!(cycles.iter().all(|&c| c == 6), "{cycles:?}");
+    }
+
+    #[test]
+    fn asymmetric_beats_symmetric_on_skewed_mav() {
+        let m = paper_mav();
+        let sym = SarAdc::new(AdcKind::Symmetric, &m);
+        let asym = SarAdc::new(AdcKind::AsymmetricMedian, &m);
+        let opt = SarAdc::new(AdcKind::AsymmetricOptimal, &m);
+        let (es, ea, eo) = (
+            sym.expected_cycles(&m),
+            asym.expected_cycles(&m),
+            opt.expected_cycles(&m),
+        );
+        // paper: ~46% fewer cycles than conventional at the p=0.5 point
+        assert!(ea < 0.75 * es, "asym {ea:.2} vs sym {es:.2}");
+        assert!(eo <= ea + 1e-9, "optimal {eo:.2} must not lose to median {ea:.2}");
+        // information floor
+        assert!(eo >= m.entropy_bits() - 1e-6);
+    }
+
+    #[test]
+    fn sparser_usage_needs_fewer_cycles() {
+        // compute-reuse regime: deltas drive few columns
+        let build = paper_mav();
+        let sparse = MavModel::trinomial(31, 0.03, 0.03);
+        let adc = SarAdc::new(AdcKind::AsymmetricMedian, &sparse);
+        let e_sparse = adc.expected_cycles(&sparse);
+        let adc_b = SarAdc::new(AdcKind::AsymmetricMedian, &build);
+        let e_dense = adc_b.expected_cycles(&build);
+        assert!(e_sparse < e_dense, "{e_sparse:.2} vs {e_dense:.2}");
+        assert!(e_sparse < 3.0, "CR+SO regime should be ~2 cycles, got {e_sparse:.2}");
+    }
+
+    #[test]
+    fn frequent_value_resolves_fast() {
+        let m = paper_mav();
+        let adc = SarAdc::new(AdcKind::AsymmetricMedian, &m);
+        let (_, c0) = adc.convert(0);
+        let (_, c31) = adc.convert(31);
+        assert!(c0 <= 3, "mode of distribution should resolve in <=3, got {c0}");
+        assert!(c31 >= c0, "rare tail may cost more");
+    }
+
+    #[test]
+    fn expected_cycles_randomized_against_monte_carlo() {
+        check("E[cycles] matches MC", 5, |rng| {
+            let m = paper_mav();
+            let adc = SarAdc::new(AdcKind::AsymmetricMedian, &m);
+            let expect = adc.expected_cycles(&m);
+            // sample sums from the trinomial directly
+            let mut total = 0u64;
+            let n = 4000;
+            for _ in 0..n {
+                let mut s = 0i32;
+                for _ in 0..31 {
+                    let u = rng.f64();
+                    if u < 0.125 {
+                        s += 1;
+                    } else if u < 0.25 {
+                        s -= 1;
+                    }
+                }
+                total += adc.convert(s).1 as u64;
+            }
+            let mc = total as f64 / n as f64;
+            (mc - expect).abs() < 0.15
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Run configuration and CLI parsing (no clap in the image).
+//!
+//! [`Args`] is a tiny GNU-style flag parser: `--key value`,
+//! `--key=value`, boolean `--flag`, positional arguments, and generated
+//! usage text. Subcommands are handled in `main.rs` by peeling the
+//! first positional.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Self, String> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // everything after bare `--` is positional
+                    out.positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// From std::env (skips argv[0]).
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Pop the first positional (used as subcommand).
+    pub fn shift(&mut self) -> Option<String> {
+        if self.positional.is_empty() {
+            None
+        } else {
+            Some(self.positional.remove(0))
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{key}: expected number, got '{v}'")),
+        }
+    }
+
+    /// Unknown-flag guard: error if any flag is not in `allowed`.
+    pub fn ensure_known(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!(
+                    "unknown flag --{k}; allowed: {}",
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["serve", "--workers", "4", "--mode=reuse", "--verbose"]);
+        assert_eq!(a.positional(), &["serve"]);
+        assert_eq!(a.get("workers"), Some("4"));
+        assert_eq!(a.get("mode"), Some("reuse"));
+        assert!(a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn bare_flag_before_positional_greedily_takes_value() {
+        // documented greedy behaviour: `--flag value` binds; use
+        // `--flag=true` when a positional follows a boolean flag
+        let a = parse(&["--verbose", "x"]);
+        assert_eq!(a.get("verbose"), Some("x"));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["--n", "30", "--p", "0.5"]);
+        assert_eq!(a.get_usize("n", 1).unwrap(), 30);
+        assert_eq!(a.get_f64("p", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(a.get_usize("p", 1).is_err());
+    }
+
+    #[test]
+    fn shift_peels_subcommand() {
+        let mut a = parse(&["bench", "--x", "1"]);
+        assert_eq!(a.shift().as_deref(), Some("bench"));
+        assert_eq!(a.shift(), None);
+    }
+
+    #[test]
+    fn double_dash_stops_flag_parsing() {
+        let a = parse(&["--a", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["--not-a-flag"]);
+    }
+
+    #[test]
+    fn unknown_flag_guard() {
+        let a = parse(&["--good", "1", "--bad", "2"]);
+        assert!(a.ensure_known(&["good"]).is_err());
+        assert!(a.ensure_known(&["good", "bad"]).is_ok());
+    }
+}

@@ -1,0 +1,115 @@
+//! Row-granularity dynamic batching.
+//!
+//! The compiled executable has a fixed batch of B rows. Requests arrive
+//! wanting `samples` MC rows each (or 1 deterministic row); the batcher
+//! packs rows from multiple requests into full B-row executions so the
+//! PJRT call amortizes across requests — the same trick vLLM-style
+//! servers play at sequence granularity.
+
+/// One pending row: request id + row payload index within the request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowTicket {
+    pub request: usize,
+    pub row: usize,
+}
+
+/// Accumulates row tickets and emits full batches.
+#[derive(Debug)]
+pub struct RowBatcher {
+    capacity: usize,
+    pending: Vec<RowTicket>,
+}
+
+impl RowBatcher {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        RowBatcher { capacity, pending: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Enqueue all rows of a request; returns any full batches formed.
+    pub fn push_request(&mut self, request: usize, rows: usize) -> Vec<Vec<RowTicket>> {
+        let mut out = Vec::new();
+        for row in 0..rows {
+            self.pending.push(RowTicket { request, row });
+            if self.pending.len() == self.capacity {
+                out.push(std::mem::take(&mut self.pending));
+            }
+        }
+        out
+    }
+
+    /// Flush a partial batch (end of queue / deadline).
+    pub fn flush(&mut self) -> Option<Vec<RowTicket>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check;
+
+    #[test]
+    fn packs_exact_batches() {
+        let mut b = RowBatcher::new(30);
+        let batches = b.push_request(0, 30);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(batches[0].len(), 30);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn packs_across_requests() {
+        let mut b = RowBatcher::new(30);
+        assert!(b.push_request(0, 20).is_empty());
+        let batches = b.push_request(1, 20);
+        assert_eq!(batches.len(), 1);
+        // first 10 rows of request 1 complete the batch
+        assert_eq!(batches[0][19], RowTicket { request: 0, row: 19 });
+        assert_eq!(batches[0][20], RowTicket { request: 1, row: 0 });
+        assert_eq!(b.pending(), 10);
+        let tail = b.flush().unwrap();
+        assert_eq!(tail.len(), 10);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn no_rows_lost_or_duplicated() {
+        check("batcher conserves rows", 30, |rng| {
+            let mut b = RowBatcher::new(1 + rng.below(40));
+            let mut seen = Vec::new();
+            let n_req = 1 + rng.below(10);
+            let mut expect = 0usize;
+            for r in 0..n_req {
+                let rows = rng.below(50);
+                expect += rows;
+                for batch in b.push_request(r, rows) {
+                    seen.extend(batch);
+                }
+            }
+            if let Some(batch) = b.flush() {
+                seen.extend(batch);
+            }
+            if seen.len() != expect {
+                return false;
+            }
+            let mut sorted: Vec<(usize, usize)> =
+                seen.iter().map(|t| (t.request, t.row)).collect();
+            sorted.sort_unstable();
+            sorted.dedup();
+            sorted.len() == expect
+        });
+    }
+}

@@ -1,0 +1,360 @@
+//! The MC-Dropout inference engine.
+//!
+//! One engine = one compiled network graph (fixed MC batch B = 30 rows)
+//! plus its weights. A *row* is one (input, mask-set) pair, so the same
+//! executable serves:
+//!
+//! * probabilistic inference — B rows share an image, masks sampled per
+//!   row from the configured dropout-bit source (§III);
+//! * deterministic baseline — B distinct images with expected-value
+//!   masks (m = 1-p, cancelling the inverted-dropout scale).
+//!
+//! Precision sweeps fake-quantize weights at engine build and inputs per
+//! request (§V methodology, Fig. 8: downgrade a full-precision model to
+//! CIM precision). Per-request CIM energy is estimated by tiling each
+//! FC layer onto 16x31 macros and pricing them with `energy::model`.
+
+use crate::dropout::mask::DropoutMask;
+use crate::energy::{EnergyModel, LayerWorkload, ModeConfig};
+use crate::operator::quant::Quantizer;
+use crate::rng::DropoutBitSource;
+use crate::runtime::{DeviceTensor, Executable, HostTensor, Runtime};
+use crate::workloads::{Meta, TensorFile};
+use anyhow::{ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which network an engine hosts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetKind {
+    Mnist,
+    Vo,
+    VoThin,
+}
+
+impl NetKind {
+    pub fn hlo_file(&self, pallas: bool) -> &'static str {
+        match (self, pallas) {
+            (NetKind::Mnist, true) => "mnist.hlo.txt",
+            (NetKind::Mnist, false) => "mnist_ref.hlo.txt",
+            (NetKind::Vo, true) => "vo.hlo.txt",
+            (NetKind::Vo, false) => "vo_ref.hlo.txt",
+            (NetKind::VoThin, _) => "vo_thin.hlo.txt",
+        }
+    }
+
+    pub fn weights_file(&self) -> &'static str {
+        match self {
+            NetKind::Mnist => "mnist_weights.bin",
+            NetKind::Vo => "vo_weights.bin",
+            NetKind::VoThin => "vo_thin_weights.bin",
+        }
+    }
+
+    pub fn dims<'m>(&self, meta: &'m Meta) -> &'m [usize] {
+        match self {
+            NetKind::Mnist => &meta.mnist_dims,
+            NetKind::Vo => &meta.vo_dims,
+            NetKind::VoThin => &meta.vo_thin_dims,
+        }
+    }
+
+    /// Mask keep-probability this network was trained with.
+    pub fn mask_keep(&self, meta: &Meta) -> f64 {
+        match self {
+            NetKind::Mnist => meta.mnist_mask_keep,
+            NetKind::Vo | NetKind::VoThin => meta.vo_mask_keep,
+        }
+    }
+}
+
+/// Engine construction options.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub net: NetKind,
+    /// Use the Pallas-kernel graph (vs the fused-matmul reference).
+    pub pallas: bool,
+    /// Fake-quantization precision for weights + inputs (None = fp32).
+    pub bits: Option<u8>,
+    /// Operating mode used for the energy estimate.
+    pub mode: ModeConfig,
+}
+
+impl EngineConfig {
+    pub fn new(net: NetKind) -> Self {
+        EngineConfig {
+            net,
+            pallas: false,
+            bits: None,
+            mode: ModeConfig::mf_asym_reuse_ordered(),
+        }
+    }
+}
+
+/// Result of one MC inference.
+#[derive(Clone, Debug)]
+pub struct McOutput {
+    /// Per-iteration network outputs [samples][out_dim].
+    pub samples: Vec<Vec<f32>>,
+    /// Estimated CIM energy for the request (pJ).
+    pub energy_pj: f64,
+}
+
+/// The engine.
+pub struct McDropoutEngine {
+    exe: Executable,
+    dims: Vec<usize>,
+    mc_batch: usize,
+    dropout_p: f64,
+    mask_keep: f64,
+    /// w1,b1,s1, w2,b2,s2, ... pre-converted to device literals once at
+    /// load (quantized if configured) — the hot path never re-copies
+    /// the ~1 MB of weights per execute (EXPERIMENTS.md §Perf).
+    weights: Vec<DeviceTensor>,
+    quant: Option<Quantizer>,
+    energy: EnergyModel,
+    mode: ModeConfig,
+    bits_for_energy: u8,
+    /// Memoized per-request energy by sample count — the analytic model
+    /// rebuilds MAV distributions + SAR search trees, which is far too
+    /// expensive for the request path (EXPERIMENTS.md §Perf).
+    energy_cache: std::sync::Mutex<std::collections::HashMap<usize, f64>>,
+}
+
+impl McDropoutEngine {
+    /// Load and compile an engine from the artifacts directory.
+    pub fn load(
+        rt: &Runtime,
+        artifacts: impl AsRef<Path>,
+        meta: &Meta,
+        cfg: &EngineConfig,
+    ) -> Result<Self> {
+        let dir: PathBuf = artifacts.as_ref().to_path_buf();
+        let dims = cfg.net.dims(meta).to_vec();
+        let exe = rt
+            .load_hlo_text(dir.join(cfg.net.hlo_file(cfg.pallas)))
+            .context("loading network HLO")?;
+        let tf = TensorFile::load(dir.join(cfg.net.weights_file()))?;
+
+        let quant = cfg.bits.map(Quantizer::new);
+        let mut weights = Vec::new();
+        for i in 0..dims.len() - 1 {
+            for name in [format!("w{}", i + 1), format!("b{}", i + 1), format!("s{}", i + 1)] {
+                let t = tf.get(&name)?;
+                let mut data = t.f32s()?.to_vec();
+                // quantize weight matrices only (bias/scale stay
+                // digital). Weights use the mid-rise grid — the MF
+                // operator loses the whole sign(w)*|x| term when a
+                // weight rounds to zero, so the sign-magnitude storage
+                // keeps >= 1 LSB of magnitude (see operator::quant).
+                if name.starts_with('w') {
+                    if let Some(q) = &quant {
+                        q.fake_quantize_midrise(&mut data);
+                    }
+                }
+                weights.push(HostTensor::new(data, t.shape.clone()).prepare()?);
+            }
+        }
+
+        Ok(McDropoutEngine {
+            exe,
+            dims,
+            mc_batch: meta.mc_batch,
+            dropout_p: meta.dropout_p,
+            mask_keep: cfg.net.mask_keep(meta),
+            weights,
+            quant,
+            energy: EnergyModel::paper_default(),
+            mode: cfg.mode,
+            bits_for_energy: cfg.bits.unwrap_or(6),
+            energy_cache: std::sync::Mutex::new(std::collections::HashMap::new()),
+        })
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn mc_batch(&self) -> usize {
+        self.mc_batch
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// Keep-probability the masks must be sampled with for this net.
+    pub fn mask_keep(&self) -> f64 {
+        self.mask_keep
+    }
+
+    fn mask_dims(&self) -> Vec<usize> {
+        self.dims[1..self.dims.len() - 1].to_vec()
+    }
+
+    fn quantize_input(&self, x: &[f32]) -> Vec<f32> {
+        let mut v = x.to_vec();
+        if let Some(q) = &self.quant {
+            q.fake_quantize(&mut v);
+        }
+        v
+    }
+
+    /// Execute one full batch of B rows. `rows` = (input, per-layer
+    /// masks as f32). Short batches are zero-padded.
+    pub fn run_rows(&self, rows: &[(Vec<f32>, Vec<Vec<f32>>)]) -> Result<Vec<Vec<f32>>> {
+        ensure!(!rows.is_empty(), "empty batch");
+        ensure!(rows.len() <= self.mc_batch, "batch exceeds compiled B");
+        let b = self.mc_batch;
+        let in_dim = self.dims[0];
+        let mask_dims = self.mask_dims();
+
+        let mut x = vec![0.0f32; b * in_dim];
+        let mut masks: Vec<Vec<f32>> =
+            mask_dims.iter().map(|&d| vec![0.0f32; b * d]).collect();
+        for (r, (xi, ms)) in rows.iter().enumerate() {
+            ensure!(xi.len() == in_dim, "input dim mismatch");
+            ensure!(ms.len() == mask_dims.len(), "mask count mismatch");
+            x[r * in_dim..(r + 1) * in_dim].copy_from_slice(xi);
+            for (l, m) in ms.iter().enumerate() {
+                ensure!(m.len() == mask_dims[l], "mask dim mismatch");
+                masks[l][r * mask_dims[l]..(r + 1) * mask_dims[l]].copy_from_slice(m);
+            }
+        }
+
+        let mut dynamic = vec![HostTensor::new(x, vec![b, in_dim])];
+        for (l, m) in masks.into_iter().enumerate() {
+            dynamic.push(HostTensor::new(m, vec![b, mask_dims[l]]));
+        }
+
+        let out = self.exe.run_mixed(&dynamic, &self.weights)?;
+        let od = self.out_dim();
+        ensure!(out.len() == b * od, "unexpected output size");
+        Ok(rows
+            .iter()
+            .enumerate()
+            .map(|(r, _)| out[r * od..(r + 1) * od].to_vec())
+            .collect())
+    }
+
+    /// Probabilistic inference: `samples` MC iterations of one input,
+    /// masks drawn from `src`.
+    pub fn infer_mc(
+        &self,
+        x: &[f32],
+        samples: usize,
+        src: &mut dyn DropoutBitSource,
+    ) -> Result<McOutput> {
+        let b = self.mc_batch;
+        let in_dim = self.dims[0];
+        ensure!(
+            x.len() == in_dim,
+            "input width {} does not match network input dim {in_dim}",
+            x.len()
+        );
+        let xq = self.quantize_input(x);
+        let mask_dims = self.mask_dims();
+        let od = self.out_dim();
+        let mut outputs = Vec::with_capacity(samples);
+        let mut remaining = samples;
+        while remaining > 0 {
+            let chunk = remaining.min(b);
+            // pack the batch buffers directly — no per-row clones of the
+            // (shared) input vector (EXPERIMENTS.md §Perf)
+            let mut xb = vec![0.0f32; b * in_dim];
+            for r in 0..chunk {
+                xb[r * in_dim..(r + 1) * in_dim].copy_from_slice(&xq);
+            }
+            let mut dynamic = vec![HostTensor::new(xb, vec![b, in_dim])];
+            for &d in &mask_dims {
+                let mut mb = vec![0.0f32; b * d];
+                for r in 0..chunk {
+                    let m = DropoutMask::sample(d, src);
+                    for i in m.iter_active() {
+                        mb[r * d + i] = 1.0;
+                    }
+                }
+                dynamic.push(HostTensor::new(mb, vec![b, d]));
+            }
+            let out = self.exe.run_mixed(&dynamic, &self.weights)?;
+            ensure!(out.len() == b * od, "unexpected output size");
+            for r in 0..chunk {
+                outputs.push(out[r * od..(r + 1) * od].to_vec());
+            }
+            remaining -= chunk;
+        }
+        Ok(McOutput { samples: outputs, energy_pj: self.request_energy_pj(samples) })
+    }
+
+    /// Deterministic baseline: expected-value masks (m = keep matches
+    /// the training-time expectation under the graph's fixed scale),
+    /// many inputs per batch.
+    pub fn infer_det(&self, xs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let mask_dims = self.mask_dims();
+        let keep = self.mask_keep as f32;
+        let mut out = Vec::with_capacity(xs.len());
+        for chunk in xs.chunks(self.mc_batch) {
+            let rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = chunk
+                .iter()
+                .map(|x| {
+                    let masks: Vec<Vec<f32>> =
+                        mask_dims.iter().map(|&d| vec![keep; d]).collect();
+                    (self.quantize_input(x), masks)
+                })
+                .collect();
+            out.extend(self.run_rows(&rows)?);
+        }
+        Ok(out)
+    }
+
+    /// Estimated CIM energy (pJ) for a `samples`-iteration request:
+    /// each FC layer tiles onto ceil(in/31) x ceil(out/16) macros, each
+    /// priced by the §V model at the engine's mode and precision.
+    /// Memoized per sample count.
+    pub fn request_energy_pj(&self, samples: usize) -> f64 {
+        if let Some(&e) = self.energy_cache.lock().unwrap().get(&samples) {
+            return e;
+        }
+        let e = self.compute_energy_pj(samples);
+        self.energy_cache.lock().unwrap().insert(samples, e);
+        e
+    }
+
+    fn compute_energy_pj(&self, samples: usize) -> f64 {
+        let mut total = 0.0;
+        for l in 0..self.dims.len() - 1 {
+            let (fi, fo) = (self.dims[l], self.dims[l + 1]);
+            let tiles = fi.div_ceil(crate::MACRO_COLS) * fo.div_ceil(crate::MACRO_ROWS);
+            let w = LayerWorkload {
+                cols: crate::MACRO_COLS,
+                rows: crate::MACRO_ROWS,
+                iters: samples,
+                bits: self.bits_for_energy,
+                keep_p: 1.0 - self.dropout_p,
+            };
+            total += tiles as f64 * self.energy.inference_energy(&w, &self.mode).total_pj();
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn netkind_artifact_names() {
+        assert_eq!(NetKind::Mnist.hlo_file(true), "mnist.hlo.txt");
+        assert_eq!(NetKind::Mnist.hlo_file(false), "mnist_ref.hlo.txt");
+        assert_eq!(NetKind::VoThin.weights_file(), "vo_thin_weights.bin");
+    }
+
+    #[test]
+    fn engine_config_defaults() {
+        let c = EngineConfig::new(NetKind::Vo);
+        assert!(!c.pallas);
+        assert!(c.bits.is_none());
+    }
+
+    // PJRT-backed behaviour (run_rows/infer_mc/infer_det numerics) is
+    // covered by rust/tests/integration.rs against real artifacts.
+}

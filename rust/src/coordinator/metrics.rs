@@ -1,0 +1,106 @@
+//! Serving metrics: request counts, latency quantiles, executions.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics sink (cheap atomics on the hot path; latencies under
+/// a mutex, sampled per request, not per row).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    requests: AtomicU64,
+    executions: AtomicU64,
+    rows: AtomicU64,
+    errors: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency: Duration) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.latencies_us
+            .lock()
+            .unwrap()
+            .push(latency.as_micros() as u64);
+    }
+
+    pub fn record_execution(&self, rows: usize) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.requests.load(Ordering::Relaxed)
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.executions.load(Ordering::Relaxed)
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    pub fn errors(&self) -> u64 {
+        self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Latency quantile in milliseconds.
+    pub fn latency_ms(&self, q: f64) -> f64 {
+        let mut v = self.latencies_us.lock().unwrap().clone();
+        if v.is_empty() {
+            return 0.0;
+        }
+        v.sort_unstable();
+        let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
+        v[pos] as f64 / 1000.0
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} executions={} rows={} errors={} p50={:.2}ms p95={:.2}ms",
+            self.requests(),
+            self.executions(),
+            self.rows(),
+            self.errors(),
+            self.latency_ms(0.5),
+            self.latency_ms(0.95),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_quantiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i * 1000));
+        }
+        m.record_execution(30);
+        m.record_error();
+        assert_eq!(m.requests(), 100);
+        assert_eq!(m.rows(), 30);
+        assert_eq!(m.errors(), 1);
+        assert!((m.latency_ms(0.5) - 50.0).abs() <= 1.0);
+        assert!((m.latency_ms(0.95) - 95.0).abs() <= 1.0);
+        assert!(m.summary().contains("requests=100"));
+    }
+
+    #[test]
+    fn empty_latency_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_ms(0.5), 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The Layer-3 coordinator: everything between a client request and the
+//! PJRT executable.
+//!
+//! * [`engine`] — the MC-Dropout inference engine: quantization, mask
+//!   scheduling (ideal / SRAM-RNG / Beta-perturbed sources), row
+//!   batching into the fixed-B executable, ensemble aggregation, and
+//!   per-request CIM energy estimates.
+//! * [`batcher`] — row-granularity dynamic batcher: packs MC iterations
+//!   and deterministic requests into full executable batches.
+//! * [`server`] — worker-pool serving loop (std threads + mpsc; PJRT
+//!   objects are per-worker because they are not Send in this crate
+//!   version).
+//! * [`metrics`] — throughput/latency counters for the e2e driver.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::RowBatcher;
+pub use engine::{EngineConfig, McDropoutEngine, McOutput, NetKind};
+pub use metrics::Metrics;
+pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig, Request, Response};

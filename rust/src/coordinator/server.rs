@@ -1,0 +1,385 @@
+//! Worker-pool serving loop.
+//!
+//! PJRT objects are not `Send` in this crate version, so each worker
+//! thread constructs its own `Runtime` + engines and pulls jobs from a
+//! shared queue (std mpsc behind a mutex — contention is negligible
+//! next to a PJRT execute). Responses travel over per-request channels.
+//!
+//! This is the end-to-end driver's substrate: requests in, prediction +
+//! confidence + modeled CIM energy out, with metrics for
+//! throughput/latency reporting.
+
+use super::engine::{EngineConfig, McDropoutEngine, NetKind};
+use super::metrics::Metrics;
+use crate::bayes::{ClassEnsemble, RegressionEnsemble};
+use crate::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
+use crate::runtime::Runtime;
+use crate::workloads::Meta;
+use anyhow::{Context, Result};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// A serving request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Classify an image with `samples` MC-Dropout iterations.
+    Classify { image: Vec<f32>, samples: usize },
+    /// Regress a pose from front-end features.
+    Regress { features: Vec<f32>, samples: usize },
+}
+
+/// Classification response.
+#[derive(Clone, Debug)]
+pub struct ClassifyResponse {
+    pub prediction: usize,
+    pub confidence: f64,
+    pub entropy: f64,
+    pub votes: Vec<usize>,
+    pub energy_pj: f64,
+}
+
+/// Generic response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Class(ClassifyResponse),
+    Pose {
+        mean: Vec<f64>,
+        variance: Vec<f64>,
+        energy_pj: f64,
+    },
+    Error(String),
+}
+
+struct Job {
+    request: Request,
+    respond: Sender<Response>,
+}
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub artifacts: String,
+    pub workers: usize,
+    /// Precision (None = fp32 graph inputs).
+    pub bits: Option<u8>,
+    /// Dropout-bit source: None = ideal Bernoulli; Some(a) = Beta(a,a)
+    /// perturbed (the Fig. 12(c)/13(f) non-ideality study).
+    pub beta_a: Option<f64>,
+    /// Use the Pallas-kernel graph.
+    pub pallas: bool,
+    /// Pack classification rows from *multiple* queued requests into
+    /// one fixed-B execution when their MC sample counts fit (pays off
+    /// for sub-batch requests, e.g. 10-sample previews).
+    pub microbatch: bool,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            artifacts: crate::workloads::ARTIFACTS_DIR.to_string(),
+            workers: 2,
+            bits: None,
+            beta_a: None,
+            pallas: false,
+            microbatch: true,
+            seed: 7,
+        }
+    }
+}
+
+/// The running coordinator: router + worker pool.
+pub struct Coordinator {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start the worker pool. Fails fast if artifacts are missing (the
+    /// first worker validates before the pool is returned).
+    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+        // Validate artifacts on the caller thread for a clean error.
+        Meta::load(&cfg.artifacts).context("artifacts missing — run `make artifacts`")?;
+
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::new());
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                if let Err(e) = worker_loop(w, cfg, rx, metrics) {
+                    eprintln!("[worker {w}] fatal: {e:#}");
+                }
+            }));
+        }
+        Ok(Coordinator { tx: Some(tx), workers, metrics })
+    }
+
+    /// Submit a request; returns the response receiver immediately.
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        // Send failures mean the pool is shut down; the receiver will
+        // simply report disconnection to the caller.
+        let _ = self
+            .tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(Job { request, respond: rtx });
+        rrx
+    }
+
+    /// Convenience: submit and wait.
+    pub fn call(&self, request: Request) -> Result<Response> {
+        self.submit(request)
+            .recv()
+            .context("worker pool hung up")
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    worker_id: usize,
+    cfg: CoordinatorConfig,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    metrics: Arc<Metrics>,
+) -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let meta = Meta::load(&cfg.artifacts)?;
+    let mk_engine = |net: NetKind| -> Result<McDropoutEngine> {
+        let mut ec = EngineConfig::new(net);
+        ec.bits = cfg.bits;
+        ec.pallas = cfg.pallas;
+        McDropoutEngine::load(&rt, &cfg.artifacts, &meta, &ec)
+    };
+    let mnist = mk_engine(NetKind::Mnist)?;
+    let vo = mk_engine(NetKind::Vo)?;
+
+    // per-net dropout-bit sources (the nets train with different keep
+    // probabilities; see meta.json *_mask_keep)
+    let mk_src = |keep: f64, salt: u64| -> Box<dyn DropoutBitSource> {
+        match cfg.beta_a {
+            None => Box::new(IdealBernoulli::new(keep, cfg.seed + salt + worker_id as u64)),
+            Some(a) => Box::new(BetaPerturbedBernoulli::new(
+                keep,
+                a,
+                cfg.seed + salt + worker_id as u64,
+            )),
+        }
+    };
+    let mut src_mnist = mk_src(mnist.mask_keep(), 0);
+    let mut src_vo = mk_src(vo.mask_keep(), 1000);
+
+    loop {
+        // take one job (blocking), then optionally drain compatible
+        // classification jobs to micro-batch into the same execution
+        let (job, extra) = {
+            let guard = rx.lock().unwrap();
+            let first = match guard.recv() {
+                Ok(j) => j,
+                Err(_) => return Ok(()), // queue closed
+            };
+            let mut extra = Vec::new();
+            if cfg.microbatch {
+                let mut budget = match &first.request {
+                    Request::Classify { samples, .. } => {
+                        mnist.mc_batch().saturating_sub(*samples)
+                    }
+                    _ => 0,
+                };
+                while budget > 0 {
+                    match guard.try_recv() {
+                        Ok(j) => match &j.request {
+                            Request::Classify { samples, .. } if *samples <= budget => {
+                                budget -= samples;
+                                extra.push(j);
+                            }
+                            _ => {
+                                // incompatible: handle it solo afterwards
+                                extra.push(j);
+                                break;
+                            }
+                        },
+                        Err(_) => break,
+                    }
+                }
+            }
+            (first, extra)
+        };
+
+        let mut batchable = vec![job];
+        let mut solo = Vec::new();
+        for j in extra {
+            let fits = matches!(
+                (&batchable[0].request, &j.request),
+                (Request::Classify { .. }, Request::Classify { .. })
+            );
+            if fits {
+                batchable.push(j);
+            } else {
+                solo.push(j);
+            }
+        }
+
+        if batchable.len() > 1 {
+            microbatch_classify(&mnist, &mut *src_mnist, batchable, &metrics);
+        } else {
+            let job = batchable.pop().unwrap();
+            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, job, &metrics);
+        }
+        for j in solo {
+            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, j, &metrics);
+        }
+    }
+}
+
+fn respond_one(
+    mnist: &McDropoutEngine,
+    vo: &McDropoutEngine,
+    src_mnist: &mut dyn DropoutBitSource,
+    src_vo: &mut dyn DropoutBitSource,
+    job: Job,
+    metrics: &Metrics,
+) {
+    let t0 = Instant::now();
+    let response = handle(mnist, vo, src_mnist, src_vo, &job.request, metrics);
+    match &response {
+        Response::Error(_) => metrics.record_error(),
+        _ => metrics.record_request(t0.elapsed()),
+    }
+    let _ = job.respond.send(response);
+}
+
+/// Pack the MC rows of several classification requests into one
+/// fixed-B execution and fan the per-row outputs back out.
+fn microbatch_classify(
+    mnist: &McDropoutEngine,
+    src: &mut dyn DropoutBitSource,
+    jobs: Vec<Job>,
+    metrics: &Metrics,
+) {
+    use crate::dropout::mask::DropoutMask;
+    let t0 = Instant::now();
+    let mask_dims: Vec<usize> =
+        mnist.dims()[1..mnist.dims().len() - 1].to_vec();
+    let mut rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::new();
+    let mut spans = Vec::new(); // (start, len) per job
+    for job in &jobs {
+        let Request::Classify { image, samples } = &job.request else {
+            unreachable!("microbatch only packs classify jobs");
+        };
+        let start = rows.len();
+        for _ in 0..*samples {
+            let masks: Vec<Vec<f32>> = mask_dims
+                .iter()
+                .map(|&d| DropoutMask::sample(d, src).to_f32())
+                .collect();
+            rows.push((image.clone(), masks));
+        }
+        spans.push((start, *samples));
+    }
+
+    match mnist.run_rows(&rows) {
+        Ok(outs) => {
+            metrics.record_execution(rows.len());
+            for (job, (start, len)) in jobs.into_iter().zip(spans) {
+                let mut ens = ClassEnsemble::new(mnist.out_dim());
+                for o in &outs[start..start + len] {
+                    ens.add_logits(o);
+                }
+                metrics.record_request(t0.elapsed());
+                let _ = job.respond.send(Response::Class(ClassifyResponse {
+                    prediction: ens.prediction(),
+                    confidence: ens.confidence(),
+                    entropy: ens.entropy(),
+                    votes: ens.votes().to_vec(),
+                    energy_pj: mnist.request_energy_pj(len),
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for job in jobs {
+                metrics.record_error();
+                let _ = job.respond.send(Response::Error(msg.clone()));
+            }
+        }
+    }
+}
+
+fn handle(
+    mnist: &McDropoutEngine,
+    vo: &McDropoutEngine,
+    src_mnist: &mut dyn DropoutBitSource,
+    src_vo: &mut dyn DropoutBitSource,
+    request: &Request,
+    metrics: &Metrics,
+) -> Response {
+    match request {
+        Request::Classify { image, samples } => {
+            match mnist.infer_mc(image, *samples, src_mnist) {
+                Ok(out) => {
+                    metrics.record_execution(out.samples.len());
+                    let mut ens = ClassEnsemble::new(mnist.out_dim());
+                    for s in &out.samples {
+                        ens.add_logits(s);
+                    }
+                    Response::Class(ClassifyResponse {
+                        prediction: ens.prediction(),
+                        confidence: ens.confidence(),
+                        entropy: ens.entropy(),
+                        votes: ens.votes().to_vec(),
+                        energy_pj: out.energy_pj,
+                    })
+                }
+                Err(e) => Response::Error(format!("{e:#}")),
+            }
+        }
+        Request::Regress { features, samples } => {
+            match vo.infer_mc(features, *samples, src_vo) {
+                Ok(out) => {
+                    metrics.record_execution(out.samples.len());
+                    let mut ens = RegressionEnsemble::new(vo.out_dim());
+                    for s in &out.samples {
+                        ens.add_sample(s);
+                    }
+                    Response::Pose {
+                        mean: ens.mean(),
+                        variance: ens.variance(),
+                        energy_pj: out.energy_pj,
+                    }
+                }
+                Err(e) => Response::Error(format!("{e:#}")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_fails_fast() {
+        let cfg = CoordinatorConfig {
+            artifacts: "/definitely/not/here".into(),
+            ..Default::default()
+        };
+        assert!(Coordinator::start(cfg).is_err());
+    }
+
+    // Live serving behaviour is covered by rust/tests/integration.rs
+    // and examples/serve_e2e.rs against real artifacts.
+}

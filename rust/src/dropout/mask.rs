@@ -1,0 +1,197 @@
+//! Packed dropout masks.
+//!
+//! Bit `true` = neuron KEPT this iteration. Word-packed so Hamming
+//! distances (the TSP metric of §IV-B) and the `I^A`/`I^D` deltas of
+//! compute reuse (§IV-A, Fig. 7) are a few popcounts.
+
+use crate::rng::DropoutBitSource;
+
+/// A dropout mask over `len` neurons.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DropoutMask {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl DropoutMask {
+    /// All neurons kept.
+    pub fn ones(len: usize) -> Self {
+        let mut m = DropoutMask { words: vec![!0u64; len.div_ceil(64)], len };
+        m.trim();
+        m
+    }
+
+    /// All neurons dropped.
+    pub fn zeros(len: usize) -> Self {
+        DropoutMask { words: vec![0u64; len.div_ceil(64)], len }
+    }
+
+    /// From a bool slice (true = kept).
+    pub fn from_bools(bits: &[bool]) -> Self {
+        let mut m = DropoutMask::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                m.set(i, true);
+            }
+        }
+        m
+    }
+
+    /// Sample from a dropout-bit source (bit fired => neuron kept).
+    pub fn sample<S: DropoutBitSource + ?Sized>(len: usize, src: &mut S) -> Self {
+        DropoutMask::from_bools(&src.mask(len))
+    }
+
+    fn trim(&mut self) {
+        let extra = self.words.len() * 64 - self.len;
+        if extra > 0 {
+            let last = self.words.len() - 1;
+            self.words[last] &= !0u64 >> extra;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize, v: bool) {
+        assert!(i < self.len);
+        if v {
+            self.words[i / 64] |= 1 << (i % 64);
+        } else {
+            self.words[i / 64] &= !(1 << (i % 64));
+        }
+    }
+
+    /// Number of kept neurons.
+    pub fn active_count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Hamming distance — the TSP edge weight `I^A_ij + I^D_ij`.
+    pub fn hamming(&self, other: &DropoutMask) -> usize {
+        assert_eq!(self.len, other.len);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a ^ b).count_ones() as usize)
+            .sum()
+    }
+
+    /// `I^A` w.r.t. `prev`: active now, dropped before.
+    pub fn newly_active(&self, prev: &DropoutMask) -> DropoutMask {
+        assert_eq!(self.len, prev.len);
+        DropoutMask {
+            words: self
+                .words
+                .iter()
+                .zip(&prev.words)
+                .map(|(a, b)| a & !b)
+                .collect(),
+            len: self.len,
+        }
+    }
+
+    /// `I^D` w.r.t. `prev`: active before, dropped now.
+    pub fn newly_dropped(&self, prev: &DropoutMask) -> DropoutMask {
+        prev.newly_active(self)
+    }
+
+    /// Iterate indices of kept neurons.
+    pub fn iter_active(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.len).filter(move |&i| self.get(i))
+    }
+
+    /// To a bool vec (true = kept).
+    pub fn to_bools(&self) -> Vec<bool> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+
+    /// To an f32 vec (1.0 = kept) — the HLO mask-parameter encoding.
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.len).map(|i| if self.get(i) { 1.0 } else { 0.0 }).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{bool_mask, check};
+
+    #[test]
+    fn ones_zeros_counts() {
+        assert_eq!(DropoutMask::ones(100).active_count(), 100);
+        assert_eq!(DropoutMask::zeros(100).active_count(), 0);
+        assert_eq!(DropoutMask::ones(64).active_count(), 64);
+        assert_eq!(DropoutMask::ones(65).active_count(), 65);
+    }
+
+    #[test]
+    fn roundtrip_bools() {
+        check("mask roundtrip", 60, |rng| {
+            let n = 1 + rng.below(200);
+            let bits = bool_mask(rng, n, 0.5);
+            DropoutMask::from_bools(&bits).to_bools() == bits
+        });
+    }
+
+    #[test]
+    fn hamming_matches_naive() {
+        check("hamming == naive", 60, |rng| {
+            let n = 1 + rng.below(150);
+            let a = bool_mask(rng, n, 0.5);
+            let b = bool_mask(rng, n, 0.5);
+            let want = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+            DropoutMask::from_bools(&a).hamming(&DropoutMask::from_bools(&b)) == want
+        });
+    }
+
+    #[test]
+    fn delta_partition_identity() {
+        // I^A and I^D partition the symmetric difference:
+        // |I^A| + |I^D| == hamming(cur, prev)
+        check("IA+ID == hamming", 60, |rng| {
+            let n = 1 + rng.below(120);
+            let prev = DropoutMask::from_bools(&bool_mask(rng, n, 0.5));
+            let cur = DropoutMask::from_bools(&bool_mask(rng, n, 0.5));
+            let ia = cur.newly_active(&prev).active_count();
+            let id = cur.newly_dropped(&prev).active_count();
+            ia + id == cur.hamming(&prev)
+        });
+    }
+
+    #[test]
+    fn delta_reconstructs_current_from_previous() {
+        // cur = (prev \ I^D) U I^A
+        check("delta reconstructs", 40, |rng| {
+            let n = 1 + rng.below(100);
+            let prev = DropoutMask::from_bools(&bool_mask(rng, n, 0.5));
+            let cur = DropoutMask::from_bools(&bool_mask(rng, n, 0.5));
+            let ia = cur.newly_active(&prev);
+            let id = cur.newly_dropped(&prev);
+            let mut rebuilt = prev.clone();
+            for i in id.iter_active() {
+                rebuilt.set(i, false);
+            }
+            for i in ia.iter_active() {
+                rebuilt.set(i, true);
+            }
+            rebuilt == cur
+        });
+    }
+
+    #[test]
+    fn f32_encoding() {
+        let m = DropoutMask::from_bools(&[true, false, true]);
+        assert_eq!(m.to_f32(), vec![1.0, 0.0, 1.0]);
+    }
+}

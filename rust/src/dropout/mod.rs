@@ -1,0 +1,20 @@
+//! §III-A + §IV — MC-Dropout masks, schedules, compute reuse, and
+//! optimal sample ordering.
+//!
+//! * [`mask`] — packed dropout masks with Hamming/overlap algebra.
+//! * [`schedule`] — a full MC-Dropout schedule: T iterations of
+//!   per-layer masks, with MAC-workload accounting for typical,
+//!   compute-reuse, and reuse+ordering execution (Fig. 6(b)).
+//! * [`reuse`] — the delta executor of §IV-A / Fig. 7:
+//!   `P_i = P_{i-1} + W x I_i^A - W x I_i^D`, two-cycle delta logic.
+//! * [`ordering`] — TSP over masks (§IV-B): exact Held–Karp for small
+//!   T, nearest-neighbour + 2-opt for the real 30-100 sample range.
+
+pub mod mask;
+pub mod ordering;
+pub mod reuse;
+pub mod schedule;
+
+pub use mask::DropoutMask;
+pub use reuse::ReuseExecutor;
+pub use schedule::{ExecutionMode, McSchedule, WorkloadReport};

@@ -1,0 +1,10 @@
+//! §IV-B — optimal ordering of MC-Dropout samples.
+//!
+//! Iterations are cities; the distance between two samples is the
+//! Hamming distance of their concatenated layer masks (= `I^A + I^D`,
+//! the delta workload compute reuse must execute). Minimizing the total
+//! tour length minimizes the cumulative reuse workload.
+
+pub mod tsp;
+
+pub use tsp::{held_karp_path, nearest_neighbor_2opt, order_masks, path_cost};

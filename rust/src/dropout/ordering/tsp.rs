@@ -1,0 +1,271 @@
+//! Travelling-salesman solvers over dropout masks (§IV-B, Fig. 6).
+//!
+//! The problem is an *open path* (the first iteration pays its full
+//! mask, then each edge costs its Hamming delta), so we solve path-TSP:
+//!
+//! * [`held_karp_path`] — exact O(2^n n^2) DP, used for n <= 13 and as
+//!   the ground truth for heuristic tests;
+//! * [`nearest_neighbor_2opt`] — NN construction + 2-opt improvement,
+//!   the production solver for the 30-100 sample schedules (the paper
+//!   notes the schedule is computed offline and stored, §IV-B).
+
+use crate::dropout::mask::DropoutMask;
+
+/// Dense symmetric distance matrix.
+pub fn distance_matrix(masks: &[Vec<DropoutMask>]) -> Vec<Vec<usize>> {
+    let n = masks.len();
+    let mut d = vec![vec![0usize; n]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dist: usize = masks[i]
+                .iter()
+                .zip(&masks[j])
+                .map(|(a, b)| a.hamming(b))
+                .sum();
+            d[i][j] = dist;
+            d[j][i] = dist;
+        }
+    }
+    d
+}
+
+/// Total cost of visiting `order` (open path; excludes the first
+/// iteration's full-compute cost, which is order-independent).
+pub fn path_cost(d: &[Vec<usize>], order: &[usize]) -> usize {
+    order.windows(2).map(|w| d[w[0]][w[1]]).sum()
+}
+
+/// Exact open-path TSP via Held–Karp. Panics if n > 16 (memory).
+pub fn held_karp_path(d: &[Vec<usize>]) -> Vec<usize> {
+    let n = d.len();
+    assert!(n >= 1);
+    assert!(n <= 16, "Held-Karp limited to n <= 16, got {n}");
+    if n == 1 {
+        return vec![0];
+    }
+    let full = 1usize << n;
+    const INF: u64 = u64::MAX / 4;
+    // dp[mask][last] = min cost of a path visiting `mask`, ending at `last`
+    let mut dp = vec![vec![INF; n]; full];
+    let mut parent = vec![vec![usize::MAX; n]; full];
+    for s in 0..n {
+        dp[1 << s][s] = 0; // any start city is free (open path)
+    }
+    for mask in 1..full {
+        for last in 0..n {
+            if mask & (1 << last) == 0 || dp[mask][last] >= INF {
+                continue;
+            }
+            let base = dp[mask][last];
+            for next in 0..n {
+                if mask & (1 << next) != 0 {
+                    continue;
+                }
+                let nm = mask | (1 << next);
+                let nc = base + d[last][next] as u64;
+                if nc < dp[nm][next] {
+                    dp[nm][next] = nc;
+                    parent[nm][next] = last;
+                }
+            }
+        }
+    }
+    let last_mask = full - 1;
+    let mut best_end = 0;
+    for e in 1..n {
+        if dp[last_mask][e] < dp[last_mask][best_end] {
+            best_end = e;
+        }
+    }
+    // reconstruct
+    let mut order = Vec::with_capacity(n);
+    let mut mask = last_mask;
+    let mut cur = best_end;
+    while cur != usize::MAX {
+        order.push(cur);
+        let p = parent[mask][cur];
+        mask &= !(1 << cur);
+        cur = p;
+    }
+    order.reverse();
+    debug_assert_eq!(order.len(), n);
+    order
+}
+
+/// Nearest-neighbour construction from the best of `restarts` start
+/// cities, then 2-opt until no improving move (first-improvement).
+pub fn nearest_neighbor_2opt(d: &[Vec<usize>], restarts: usize) -> Vec<usize> {
+    let n = d.len();
+    if n <= 2 {
+        return (0..n).collect();
+    }
+    let mut best: Option<(usize, Vec<usize>)> = None;
+    for s in 0..restarts.max(1).min(n) {
+        let mut order = nn_from(d, s);
+        two_opt(d, &mut order);
+        let c = path_cost(d, &order);
+        if best.as_ref().map_or(true, |(bc, _)| c < *bc) {
+            best = Some((c, order));
+        }
+    }
+    best.unwrap().1
+}
+
+fn nn_from(d: &[Vec<usize>], start: usize) -> Vec<usize> {
+    let n = d.len();
+    let mut visited = vec![false; n];
+    let mut order = vec![start];
+    visited[start] = true;
+    while order.len() < n {
+        let cur = *order.last().unwrap();
+        let mut best = usize::MAX;
+        let mut best_d = usize::MAX;
+        for j in 0..n {
+            if !visited[j] && d[cur][j] < best_d {
+                best_d = d[cur][j];
+                best = j;
+            }
+        }
+        visited[best] = true;
+        order.push(best);
+    }
+    order
+}
+
+/// 2-opt for open paths: reversing order[i..=j] changes cost by
+/// removing edges (i-1,i) and (j,j+1) and adding (i-1,j) and (i,j+1).
+fn two_opt(d: &[Vec<usize>], order: &mut Vec<usize>) {
+    let n = order.len();
+    let mut improved = true;
+    while improved {
+        improved = false;
+        for i in 0..n - 1 {
+            for j in (i + 1)..n {
+                let before_i = if i == 0 { None } else { Some(order[i - 1]) };
+                let after_j = if j == n - 1 { None } else { Some(order[j + 1]) };
+                let removed = before_i.map_or(0, |p| d[p][order[i]])
+                    + after_j.map_or(0, |q| d[order[j]][q]);
+                let added = before_i.map_or(0, |p| d[p][order[j]])
+                    + after_j.map_or(0, |q| d[order[i]][q]);
+                if added < removed {
+                    order[i..=j].reverse();
+                    improved = true;
+                }
+            }
+        }
+    }
+}
+
+/// Order a per-iteration mask set (one Vec<DropoutMask> per iteration):
+/// exact for small T, heuristic beyond.
+pub fn order_masks(per_iter_masks: &[Vec<DropoutMask>]) -> Vec<usize> {
+    let d = distance_matrix(per_iter_masks);
+    if per_iter_masks.len() <= 13 {
+        held_karp_path(&d)
+    } else {
+        nearest_neighbor_2opt(&d, 8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{bool_mask, check};
+
+    fn rand_masks(
+        rng: &mut crate::util::Pcg32,
+        t: usize,
+        layers: &[usize],
+    ) -> Vec<Vec<DropoutMask>> {
+        (0..t)
+            .map(|_| {
+                layers
+                    .iter()
+                    .map(|&l| DropoutMask::from_bools(&bool_mask(rng, l, 0.5)))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn held_karp_is_optimal_vs_bruteforce() {
+        check("HK == brute force", 15, |rng| {
+            let masks = rand_masks(rng, 7, &[10]);
+            let d = distance_matrix(&masks);
+            let hk = path_cost(&d, &held_karp_path(&d));
+            // brute force all permutations of 7 cities
+            let mut idx: Vec<usize> = (0..7).collect();
+            let mut best = usize::MAX;
+            permute(&mut idx, 0, &mut |p| {
+                best = best.min(path_cost(&d, p));
+            });
+            hk == best
+        });
+    }
+
+    fn permute(v: &mut Vec<usize>, k: usize, f: &mut impl FnMut(&[usize])) {
+        if k == v.len() {
+            f(v);
+            return;
+        }
+        for i in k..v.len() {
+            v.swap(k, i);
+            permute(v, k + 1, f);
+            v.swap(k, i);
+        }
+    }
+
+    #[test]
+    fn heuristic_is_permutation_and_close_to_optimal() {
+        check("NN+2opt within 15% of HK", 10, |rng| {
+            let masks = rand_masks(rng, 11, &[10]);
+            let d = distance_matrix(&masks);
+            let opt = path_cost(&d, &held_karp_path(&d));
+            let order = nearest_neighbor_2opt(&d, 4);
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            if sorted != (0..11).collect::<Vec<_>>() {
+                return false;
+            }
+            let h = path_cost(&d, &order);
+            h <= opt + (opt / 6) + 2
+        });
+    }
+
+    #[test]
+    fn ordering_reduces_cost_vs_identity() {
+        check("ordered <= identity cost", 20, |rng| {
+            let masks = rand_masks(rng, 30, &[10, 8]);
+            let d = distance_matrix(&masks);
+            let identity: Vec<usize> = (0..30).collect();
+            let ordered = nearest_neighbor_2opt(&d, 8);
+            path_cost(&d, &ordered) <= path_cost(&d, &identity)
+        });
+    }
+
+    #[test]
+    fn paper_scale_savings_are_substantial() {
+        // Fig. 6(b) regime: 10-neuron layer, 100 samples -> expected
+        // random-neighbour delta ~ n/2 = 5; ordered should cut it a lot
+        // (the pattern space 2^10 is dense at 100 samples).
+        let mut rng = crate::util::Pcg32::seeded(99);
+        let masks = rand_masks(&mut rng, 100, &[10]);
+        let d = distance_matrix(&masks);
+        let identity: Vec<usize> = (0..100).collect();
+        let ordered = nearest_neighbor_2opt(&d, 8);
+        let c_id = path_cost(&d, &identity) as f64;
+        let c_or = path_cost(&d, &ordered) as f64;
+        assert!(
+            c_or < 0.55 * c_id,
+            "ordered {c_or} vs identity {c_id}: expected > 45% edge-cost cut"
+        );
+    }
+
+    #[test]
+    fn singleton_and_pair_paths() {
+        let m1 = vec![vec![DropoutMask::ones(4)]];
+        assert_eq!(order_masks(&m1), vec![0]);
+        let d = vec![vec![0, 3], vec![3, 0]];
+        assert_eq!(held_karp_path(&d).len(), 2);
+    }
+}

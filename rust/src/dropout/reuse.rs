@@ -1,0 +1,256 @@
+//! §IV-A — compute reuse between successive MC-Dropout iterations.
+//!
+//! The product-sum of iteration i is expressed against iteration i-1:
+//!
+//!   P_i = P_{i-1} + W x I_i^A - W x I_i^D            (Fig. 7)
+//!
+//! where `I^A` are input neurons active now but dropped before and
+//! `I^D` the converse. Execution takes two cycles: cycle 1 adds the
+//! `I^A` columns, cycle 2 subtracts the `I^D` columns. Only the *delta*
+//! columns consume MACs — the MAC counters here are what Fig. 6(b) and
+//! the §V energy model consume.
+//!
+//! "Typical" execution is the dense baseline the paper compares against:
+//! every iteration recomputes the full `W x I` with dropout applied as
+//! masking (all `n_in x n_out` MACs).
+
+use super::mask::DropoutMask;
+
+/// Reusable product-sum state for one fully-connected layer.
+///
+/// Maintains `P` for *all* output neurons (output dropout is applied
+/// downstream as masking — keeping every row in `P` is what makes the
+/// delta update exact across iterations with differing output masks).
+pub struct ReuseExecutor {
+    /// Weights, row-major [n_in, n_out].
+    w: Vec<f32>,
+    n_in: usize,
+    n_out: usize,
+    /// Current accumulated product-sum per output.
+    p: Vec<f32>,
+    /// Mask the current `p` corresponds to (None before the first run).
+    current: Option<DropoutMask>,
+    /// Lifetime MAC counter.
+    macs: u64,
+}
+
+impl ReuseExecutor {
+    pub fn new(w: Vec<f32>, n_in: usize, n_out: usize) -> Self {
+        assert_eq!(w.len(), n_in * n_out);
+        ReuseExecutor { w, n_in, n_out, p: vec![0.0; n_out], current: None, macs: 0 }
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.macs
+    }
+
+    pub fn reset_macs(&mut self) {
+        self.macs = 0;
+    }
+
+    /// Dense (typical-flow) evaluation: all n_in x n_out MACs, dropout
+    /// applied as input masking.
+    pub fn run_dense(&mut self, x: &[f32], mask: &DropoutMask) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_in);
+        assert_eq!(mask.len(), self.n_in);
+        let mut out = vec![0.0f32; self.n_out];
+        for i in 0..self.n_in {
+            let xv = if mask.get(i) { x[i] } else { 0.0 };
+            let row = &self.w[i * self.n_out..(i + 1) * self.n_out];
+            for (o, &wv) in out.iter_mut().zip(row) {
+                *o += xv * wv;
+            }
+        }
+        self.macs += (self.n_in * self.n_out) as u64;
+        out
+    }
+
+    /// Reuse evaluation per Fig. 7. The first call pays a dense pass
+    /// restricted to active columns; each subsequent call pays
+    /// `(|I^A| + |I^D|) * n_out` MACs.
+    ///
+    /// `x` must be the same input vector across the MC iterations (the
+    /// MC-Dropout setting: one input, many masks).
+    pub fn run_reuse(&mut self, x: &[f32], mask: &DropoutMask) -> Vec<f32> {
+        assert_eq!(x.len(), self.n_in);
+        assert_eq!(mask.len(), self.n_in);
+        match self.current.take() {
+            None => {
+                // first iteration: compute active columns only
+                self.p = vec![0.0; self.n_out];
+                for i in mask.iter_active() {
+                    self.add_column(i, x[i], 1.0);
+                }
+            }
+            Some(prev) => {
+                // cycle 1: add newly-active columns
+                for i in mask.newly_active(&prev).iter_active() {
+                    self.add_column(i, x[i], 1.0);
+                }
+                // cycle 2: subtract newly-dropped columns
+                for i in mask.newly_dropped(&prev).iter_active() {
+                    self.add_column(i, x[i], -1.0);
+                }
+            }
+        }
+        self.current = Some(mask.clone());
+        self.p.clone()
+    }
+
+    fn add_column(&mut self, i: usize, xv: f32, sign: f32) {
+        let row = &self.w[i * self.n_out..(i + 1) * self.n_out];
+        for (o, &wv) in self.p.iter_mut().zip(row) {
+            *o += sign * xv * wv;
+        }
+        self.macs += self.n_out as u64;
+    }
+
+    /// Forget the reuse state (new input vector arriving).
+    pub fn reset_state(&mut self) {
+        self.current = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{bool_mask, check, f32_vec};
+
+    fn dense_ref(w: &[f32], x: &[f32], mask: &DropoutMask, n_in: usize, n_out: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; n_out];
+        for i in 0..n_in {
+            if !mask.get(i) {
+                continue;
+            }
+            for j in 0..n_out {
+                out[j] += x[i] * w[i * n_out + j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn reuse_matches_dense_across_iterations() {
+        check("reuse == dense over schedule", 30, |rng| {
+            let (n_in, n_out, t) = (10, 10, 20);
+            let w = f32_vec(rng, n_in * n_out, 1.0);
+            let x = f32_vec(rng, n_in, 1.0);
+            let mut ex = ReuseExecutor::new(w.clone(), n_in, n_out);
+            for _ in 0..t {
+                let mask = DropoutMask::from_bools(&bool_mask(rng, n_in, 0.5));
+                let got = ex.run_reuse(&x, &mask);
+                let want = dense_ref(&w, &x, &mask, n_in, n_out);
+                if got
+                    .iter()
+                    .zip(&want)
+                    .any(|(a, b)| (a - b).abs() > 1e-3)
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn mac_accounting_fig6_savings() {
+        // Fig. 6(b): 10x10 FC, 100 samples, p=0.5 -> reuse needs ~52% of
+        // the typical MACs.
+        let mut rng = crate::util::Pcg32::seeded(6);
+        let (n_in, n_out, t) = (10usize, 10usize, 100usize);
+        let w = f32_vec(&mut rng, n_in * n_out, 1.0);
+        let x = f32_vec(&mut rng, n_in, 1.0);
+        let masks: Vec<DropoutMask> = (0..t)
+            .map(|_| DropoutMask::from_bools(&bool_mask(&mut rng, n_in, 0.5)))
+            .collect();
+
+        let mut dense = ReuseExecutor::new(w.clone(), n_in, n_out);
+        for m in &masks {
+            dense.run_dense(&x, m);
+        }
+        let mut reuse = ReuseExecutor::new(w, n_in, n_out);
+        for m in &masks {
+            reuse.run_reuse(&x, m);
+        }
+        let ratio = reuse.macs() as f64 / dense.macs() as f64;
+        assert!(
+            (0.40..=0.62).contains(&ratio),
+            "reuse/typical = {ratio:.3}, paper reports ~0.52"
+        );
+    }
+
+    #[test]
+    fn ordered_schedule_cuts_macs_further() {
+        // Fig. 6(b): reuse + TSP ordering -> ~80% total savings.
+        use crate::dropout::ordering::order_masks;
+        let mut rng = crate::util::Pcg32::seeded(7);
+        let (n_in, n_out, t) = (10usize, 10usize, 100usize);
+        let w = f32_vec(&mut rng, n_in * n_out, 1.0);
+        let x = f32_vec(&mut rng, n_in, 1.0);
+        let masks: Vec<DropoutMask> = (0..t)
+            .map(|_| DropoutMask::from_bools(&bool_mask(&mut rng, n_in, 0.5)))
+            .collect();
+        let per_iter: Vec<Vec<DropoutMask>> =
+            masks.iter().map(|m| vec![m.clone()]).collect();
+        let order = order_masks(&per_iter);
+
+        let mut unordered = ReuseExecutor::new(w.clone(), n_in, n_out);
+        for m in &masks {
+            unordered.run_reuse(&x, m);
+        }
+        let mut ordered = ReuseExecutor::new(w.clone(), n_in, n_out);
+        for &i in &order {
+            ordered.run_reuse(&x, &masks[i]);
+        }
+        let dense_macs = (t * n_in * n_out) as f64;
+        let r_uno = unordered.macs() as f64 / dense_macs;
+        let r_ord = ordered.macs() as f64 / dense_macs;
+        assert!(r_ord < r_uno, "ordering must help: {r_ord:.3} vs {r_uno:.3}");
+        assert!(
+            r_ord < 0.35,
+            "reuse+SO should save >65% (paper ~80%), got ratio {r_ord:.3}"
+        );
+    }
+
+    #[test]
+    fn reset_state_forces_full_recompute() {
+        let mut rng = crate::util::Pcg32::seeded(8);
+        let w = f32_vec(&mut rng, 100, 1.0);
+        let x = f32_vec(&mut rng, 10, 1.0);
+        let mut ex = ReuseExecutor::new(w, 10, 10);
+        let m = DropoutMask::from_bools(&bool_mask(&mut rng, 10, 0.5));
+        ex.run_reuse(&x, &m);
+        let macs_first = ex.macs();
+        ex.reset_state();
+        ex.run_reuse(&x, &m);
+        assert_eq!(ex.macs(), 2 * macs_first);
+    }
+
+    #[test]
+    fn results_independent_of_visit_order() {
+        // permutation invariance of final P given same final mask
+        check("P depends only on final mask", 20, |rng| {
+            let (n_in, n_out) = (12, 6);
+            let w = f32_vec(rng, n_in * n_out, 1.0);
+            let x = f32_vec(rng, n_in, 1.0);
+            let masks: Vec<DropoutMask> = (0..8)
+                .map(|_| DropoutMask::from_bools(&bool_mask(rng, n_in, 0.5)))
+                .collect();
+            let mut fwd = ReuseExecutor::new(w.clone(), n_in, n_out);
+            let mut rev = ReuseExecutor::new(w.clone(), n_in, n_out);
+            let mut last_f = Vec::new();
+            let mut last_r = Vec::new();
+            for m in &masks {
+                last_f = fwd.run_reuse(&x, m);
+            }
+            for m in masks.iter().rev() {
+                last_r = rev.run_reuse(&x, m);
+            }
+            // both end on different masks; compare against dense refs
+            let want_f = dense_ref(&w, &x, masks.last().unwrap(), n_in, n_out);
+            let want_r = dense_ref(&w, &x, &masks[0], n_in, n_out);
+            last_f.iter().zip(&want_f).all(|(a, b)| (a - b).abs() < 1e-3)
+                && last_r.iter().zip(&want_r).all(|(a, b)| (a - b).abs() < 1e-3)
+        });
+    }
+}

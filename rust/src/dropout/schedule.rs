@@ -1,0 +1,211 @@
+//! MC-Dropout schedules: T iterations of per-layer masks plus the
+//! workload accounting that feeds Fig. 6(b) and the §V energy model.
+
+use super::mask::DropoutMask;
+use super::ordering::order_masks;
+use crate::rng::DropoutBitSource;
+
+/// How the schedule is executed on the macro.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Dense recompute every iteration (baseline).
+    Typical,
+    /// Delta execution against the previous iteration (§IV-A).
+    ComputeReuse,
+    /// Delta execution over the TSP-ordered schedule (§IV-B).
+    ComputeReuseOrdered,
+}
+
+impl ExecutionMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ExecutionMode::Typical => "typical",
+            ExecutionMode::ComputeReuse => "compute-reuse",
+            ExecutionMode::ComputeReuseOrdered => "compute-reuse + sample-ordering",
+        }
+    }
+
+    /// Whether dropout bits must be generated online (ordered schedules
+    /// are precomputed offline and read from SRAM, §IV-B).
+    pub fn needs_online_rng(&self) -> bool {
+        !matches!(self, ExecutionMode::ComputeReuseOrdered)
+    }
+}
+
+/// A full MC-Dropout schedule: `masks[t][l]` = mask of layer l at
+/// iteration t, in *execution order*.
+#[derive(Clone, Debug)]
+pub struct McSchedule {
+    pub masks: Vec<Vec<DropoutMask>>,
+    pub layer_sizes: Vec<usize>,
+}
+
+/// MAC workload of one schedule under each execution mode, for a stack
+/// of FC layers `sizes[l] -> sizes[l+1]`-shaped (the mask of layer l
+/// gates the *input* columns of the l-th weight matrix).
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    pub mode: ExecutionMode,
+    pub macs: u64,
+    pub dense_macs: u64,
+}
+
+impl WorkloadReport {
+    /// Fraction of dense MACs actually executed.
+    pub fn ratio(&self) -> f64 {
+        self.macs as f64 / self.dense_macs as f64
+    }
+
+    /// Savings vs dense (the Fig. 6(b) y-axis).
+    pub fn savings(&self) -> f64 {
+        1.0 - self.ratio()
+    }
+}
+
+impl McSchedule {
+    /// Sample a schedule of `t` iterations from a dropout-bit source.
+    pub fn sample<S: DropoutBitSource + ?Sized>(
+        t: usize,
+        layer_sizes: &[usize],
+        src: &mut S,
+    ) -> Self {
+        let masks = (0..t)
+            .map(|_| {
+                layer_sizes
+                    .iter()
+                    .map(|&n| DropoutMask::sample(n, src))
+                    .collect()
+            })
+            .collect();
+        McSchedule { masks, layer_sizes: layer_sizes.to_vec() }
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.masks.len()
+    }
+
+    /// Reorder iterations by the TSP tour (returns the new schedule and
+    /// the order applied).
+    pub fn ordered(&self) -> (McSchedule, Vec<usize>) {
+        let order = order_masks(&self.masks);
+        let masks = order.iter().map(|&i| self.masks[i].clone()).collect();
+        (
+            McSchedule { masks, layer_sizes: self.layer_sizes.clone() },
+            order,
+        )
+    }
+
+    /// MAC workload for executing this schedule over FC layers with
+    /// output widths `out_sizes[l]` (len == layer_sizes.len()).
+    ///
+    /// Typical: T * sum_l n_l * m_l. Reuse: first iteration pays its
+    /// active columns, then |delta| columns, each times m_l.
+    pub fn workload(&self, out_sizes: &[usize], mode: ExecutionMode) -> WorkloadReport {
+        assert_eq!(out_sizes.len(), self.layer_sizes.len());
+        let sched;
+        let masks = match mode {
+            ExecutionMode::ComputeReuseOrdered => {
+                sched = self.ordered().0;
+                &sched.masks
+            }
+            _ => &self.masks,
+        };
+        let dense_per_iter: u64 = self
+            .layer_sizes
+            .iter()
+            .zip(out_sizes)
+            .map(|(&n, &m)| (n * m) as u64)
+            .sum();
+        let dense_macs = dense_per_iter * self.iterations() as u64;
+
+        let macs = match mode {
+            ExecutionMode::Typical => dense_macs,
+            _ => {
+                let mut total = 0u64;
+                for l in 0..self.layer_sizes.len() {
+                    let m = out_sizes[l] as u64;
+                    let mut prev: Option<&DropoutMask> = None;
+                    for it in masks.iter() {
+                        let cur = &it[l];
+                        let cols = match prev {
+                            None => cur.active_count(),
+                            Some(p) => cur.hamming(p),
+                        } as u64;
+                        total += cols * m;
+                        prev = Some(cur);
+                    }
+                }
+                total
+            }
+        };
+        WorkloadReport { mode, macs, dense_macs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::IdealBernoulli;
+
+    fn sample_sched(t: usize, sizes: &[usize], seed: u64) -> McSchedule {
+        let mut src = IdealBernoulli::new(0.5, seed);
+        McSchedule::sample(t, sizes, &mut src)
+    }
+
+    #[test]
+    fn schedule_shape() {
+        let s = sample_sched(30, &[256, 128], 1);
+        assert_eq!(s.iterations(), 30);
+        assert_eq!(s.masks[0].len(), 2);
+        assert_eq!(s.masks[0][0].len(), 256);
+        assert_eq!(s.masks[0][1].len(), 128);
+    }
+
+    #[test]
+    fn typical_workload_is_dense() {
+        let s = sample_sched(10, &[10], 2);
+        let r = s.workload(&[10], ExecutionMode::Typical);
+        assert_eq!(r.macs, 10 * 10 * 10);
+        assert_eq!(r.ratio(), 1.0);
+    }
+
+    #[test]
+    fn fig6_workload_ladder() {
+        // typical > reuse > reuse+ordered, with paper-ballpark ratios
+        let s = sample_sched(100, &[10], 3);
+        let typical = s.workload(&[10], ExecutionMode::Typical);
+        let reuse = s.workload(&[10], ExecutionMode::ComputeReuse);
+        let ordered = s.workload(&[10], ExecutionMode::ComputeReuseOrdered);
+        assert!(reuse.macs < typical.macs);
+        assert!(ordered.macs < reuse.macs);
+        assert!(
+            (0.40..=0.62).contains(&reuse.ratio()),
+            "reuse ratio {:.3} (paper ~0.52)",
+            reuse.ratio()
+        );
+        assert!(
+            ordered.savings() > 0.65,
+            "ordered savings {:.3} (paper ~0.80)",
+            ordered.savings()
+        );
+    }
+
+    #[test]
+    fn ordering_is_a_permutation_preserving_multiset() {
+        let s = sample_sched(20, &[16, 8], 4);
+        let (ordered, order) = s.ordered();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+        for (new_t, &old_t) in order.iter().enumerate() {
+            assert_eq!(ordered.masks[new_t], s.masks[old_t]);
+        }
+    }
+
+    #[test]
+    fn online_rng_requirement_per_mode() {
+        assert!(ExecutionMode::Typical.needs_online_rng());
+        assert!(ExecutionMode::ComputeReuse.needs_online_rng());
+        assert!(!ExecutionMode::ComputeReuseOrdered.needs_online_rng());
+    }
+}

@@ -1,0 +1,16 @@
+//! §V — power/performance characterization of the macro.
+//!
+//! * [`params`] — per-op energy constants (16 nm LSTP, 0.85 V, 1 GHz).
+//!   The SA-logic energies are the paper's reported RTL-extraction
+//!   numbers; the analog constants are calibrated so the three headline
+//!   totals of Fig. 9 reproduce (48.8 / 32 / 27.8 pJ for 30 iterations
+//!   at 6-bit). See EXPERIMENTS.md for the calibration note.
+//! * [`model`] — the mode-matrix energy model: operator x ADC x
+//!   execution mode, producing the component breakdown (Fig. 10) and
+//!   TOPS/W (Table I).
+
+pub mod model;
+pub mod params;
+
+pub use model::{EnergyBreakdown, EnergyModel, LayerWorkload, ModeConfig};
+pub use params::EnergyParams;

@@ -1,0 +1,368 @@
+//! The mode-matrix energy model (Fig. 9 / Fig. 10 / Table I).
+//!
+//! Energy of a 30-iteration MC-Dropout inference on the 16x31 macro is
+//! assembled from event counts:
+//!
+//! * **array**: driven-column events x e_col (+ e_dac_in for the
+//!   conventional operator, whose multibit inputs need a DAC);
+//! * **ADC**: conversions x (SAR cycles x analog + logic). SAR cycle
+//!   expectations come from the same `xadc` search trees the macro
+//!   simulator uses, evaluated on the mode's MAV distribution (dropout
+//!   sparsity for typical, delta sparsity for compute reuse, ordered
+//!   delta sparsity for reuse + sample ordering);
+//! * **RNG**: online dropout bits (or schedule SRAM reads when the
+//!   ordered schedule is precomputed offline, §IV-B);
+//! * **digital**: shift-add per cycle + reuse combines.
+//!
+//! Counts can come from the analytic expectations below (used by the
+//! benches' parameter sweeps) or from measured `MacroRunStats` /
+//! `McSchedule` workloads (used by the end-to-end examples).
+
+use super::params::EnergyParams;
+use crate::cim::mav::MavModel;
+use crate::cim::xadc::{AdcKind, SarAdc};
+use crate::dropout::schedule::ExecutionMode;
+use crate::operator::bitplane::OperatorKind;
+
+/// One macro-level workload: a `cols -> rows` FC slice executed for
+/// `iters` MC-Dropout iterations at `bits` precision.
+#[derive(Clone, Copy, Debug)]
+pub struct LayerWorkload {
+    pub cols: usize,
+    pub rows: usize,
+    pub iters: usize,
+    pub bits: u8,
+    /// Input dropout keep-probability (drives sparsity statistics).
+    pub keep_p: f64,
+}
+
+impl LayerWorkload {
+    /// The paper's characterization workload (§V-B).
+    pub fn paper_default() -> Self {
+        LayerWorkload {
+            cols: crate::MACRO_COLS,
+            rows: crate::MACRO_ROWS,
+            iters: crate::MC_SAMPLES,
+            bits: 6,
+            keep_p: 1.0 - crate::DROPOUT_P,
+        }
+    }
+}
+
+/// An operating mode of the macro.
+#[derive(Clone, Copy, Debug)]
+pub struct ModeConfig {
+    pub operator: OperatorKind,
+    pub adc: AdcKind,
+    pub execution: ExecutionMode,
+}
+
+impl ModeConfig {
+    /// Fig. 9 left bar: conventional operator, conventional ADC, dense.
+    pub fn typical() -> Self {
+        ModeConfig {
+            operator: OperatorKind::Conventional,
+            adc: AdcKind::Symmetric,
+            execution: ExecutionMode::Typical,
+        }
+    }
+
+    /// MF operator + asymmetric SA + compute reuse.
+    pub fn mf_asym_reuse() -> Self {
+        ModeConfig {
+            operator: OperatorKind::MultiplicationFree,
+            adc: AdcKind::AsymmetricMedian,
+            execution: ExecutionMode::ComputeReuse,
+        }
+    }
+
+    /// Most optimal configuration: + TSP-ordered samples.
+    pub fn mf_asym_reuse_ordered() -> Self {
+        ModeConfig {
+            operator: OperatorKind::MultiplicationFree,
+            adc: AdcKind::AsymmetricMedian,
+            execution: ExecutionMode::ComputeReuseOrdered,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}+{}+{}",
+            match self.operator {
+                OperatorKind::MultiplicationFree => "MF",
+                OperatorKind::Conventional => "conv",
+            },
+            match self.adc {
+                AdcKind::Symmetric => "symSA",
+                AdcKind::AsymmetricMedian => "asymSA",
+                AdcKind::AsymmetricOptimal => "optSA",
+            },
+            self.execution.label()
+        )
+    }
+}
+
+/// Component breakdown (femtojoules).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyBreakdown {
+    pub array_fj: f64,
+    pub adc_analog_fj: f64,
+    pub adc_logic_fj: f64,
+    pub rng_fj: f64,
+    pub digital_fj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_fj(&self) -> f64 {
+        self.array_fj + self.adc_analog_fj + self.adc_logic_fj + self.rng_fj
+            + self.digital_fj
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.total_fj() / 1000.0
+    }
+
+    pub fn adc_fj(&self) -> f64 {
+        self.adc_analog_fj + self.adc_logic_fj
+    }
+
+    /// ADC share of the total (Fig. 10's headline quantity).
+    pub fn adc_share(&self) -> f64 {
+        self.adc_fj() / self.total_fj()
+    }
+}
+
+/// The energy model.
+pub struct EnergyModel {
+    pub params: EnergyParams,
+}
+
+impl EnergyModel {
+    pub fn new(params: EnergyParams) -> Self {
+        EnergyModel { params }
+    }
+
+    pub fn paper_default() -> Self {
+        EnergyModel::new(EnergyParams::lstp_16nm())
+    }
+
+    /// Compute planes per row-correlation for an operator at `bits`.
+    fn planes(op: OperatorKind, bits: u8) -> usize {
+        match op {
+            OperatorKind::MultiplicationFree => 2 * (bits as usize - 1),
+            OperatorKind::Conventional => bits as usize - 1,
+        }
+    }
+
+    /// Expected driven columns per iteration for the execution mode.
+    ///
+    /// * Typical: the dense flow drives all columns;
+    /// * Reuse: first iteration drives the active set (keep_p * cols),
+    ///   later ones the mask delta (2 * keep_p * (1-keep_p) * cols for
+    ///   independent Bernoulli masks);
+    /// * Reuse+ordered: TSP ordering empirically cuts the delta by
+    ///   ~30% at the 30-sample/31-column operating point (measured by
+    ///   `dropout::schedule` tests; benches recompute it exactly).
+    fn driven_cols_per_iter(w: &LayerWorkload, ex: ExecutionMode) -> f64 {
+        let n = w.cols as f64;
+        match ex {
+            ExecutionMode::Typical => n,
+            ExecutionMode::ComputeReuse => {
+                let first = w.keep_p * n;
+                let delta = 2.0 * w.keep_p * (1.0 - w.keep_p) * n;
+                (first + (w.iters as f64 - 1.0) * delta) / w.iters as f64
+            }
+            ExecutionMode::ComputeReuseOrdered => {
+                let unordered =
+                    Self::driven_cols_per_iter(w, ExecutionMode::ComputeReuse);
+                0.70 * unordered
+            }
+        }
+    }
+
+    /// MAV model for the ADC expectation under a mode: driven columns
+    /// split evenly between +1 and -1 drives; stored bits ~ Bern(1/2).
+    fn mav_for(w: &LayerWorkload, ex: ExecutionMode) -> MavModel {
+        let driven = Self::driven_cols_per_iter(w, ex);
+        let p_each = (driven / w.cols as f64) * 0.5 * 0.5;
+        MavModel::trinomial(w.cols, p_each, p_each)
+    }
+
+    /// Expected SAR cycles per conversion for a mode.
+    pub fn expected_sar_cycles(&self, w: &LayerWorkload, m: &ModeConfig) -> f64 {
+        let mav = Self::mav_for(w, m.execution);
+        let adc = SarAdc::new(m.adc, &mav);
+        adc.expected_cycles(&mav)
+    }
+
+    /// Full-inference energy under a mode (analytic expectation).
+    pub fn inference_energy(&self, w: &LayerWorkload, m: &ModeConfig) -> EnergyBreakdown {
+        let p = &self.params;
+        let planes = Self::planes(m.operator, w.bits);
+        let cycles = (w.iters * w.rows * planes) as f64;
+        // The driven column set is fixed within an iteration (same mask
+        // across the planes and rows of that iteration), so total column
+        // events = per-iteration driven columns x planes x rows x iters.
+        let col_events = Self::driven_cols_per_iter(w, m.execution)
+            * (w.rows * planes * w.iters) as f64;
+
+        let e_col_unit = match m.operator {
+            OperatorKind::Conventional => p.e_col_fj + p.e_dac_in_fj,
+            OperatorKind::MultiplicationFree => p.e_col_fj,
+        };
+        let array_fj = col_events * e_col_unit;
+
+        let sar_cycles = self.expected_sar_cycles(w, m);
+        let conversions = cycles;
+        let adc_analog_fj = conversions * sar_cycles * p.e_sar_analog_fj;
+        let logic_unit = match m.adc {
+            AdcKind::Symmetric => p.e_sa_logic_sym_fj,
+            _ => p.e_sa_logic_asym_fj,
+        };
+        let adc_logic_fj = conversions * logic_unit;
+
+        let mask_bits = (w.cols + w.rows) as f64 * w.iters as f64;
+        let rng_fj = if m.execution.needs_online_rng() {
+            mask_bits * p.e_rng_bit_fj
+        } else {
+            mask_bits * p.e_sched_read_bit_fj
+        };
+
+        let mut digital_fj = cycles * p.e_shift_add_fj;
+        if !matches!(m.execution, ExecutionMode::Typical) {
+            digital_fj += (w.rows * w.iters) as f64 * p.e_reuse_combine_fj;
+        }
+
+        EnergyBreakdown { array_fj, adc_analog_fj, adc_logic_fj, rng_fj, digital_fj }
+    }
+
+    /// Effective ops-per-joule in TOPS/W: delivered dense-equivalent
+    /// ops (each MF element = 2 one-bit-x-multibit products + 2 adds =
+    /// 4 ops) over the energy spent.
+    ///
+    /// NOTE (EXPERIMENTS.md §Table-I): the paper's 27.8 pJ/30-iteration
+    /// figure and its 2.23 TOPS/W entry are mutually inconsistent by
+    /// ~3 orders of magnitude (29,760 ops / 27.8 pJ ≈ 1,070 TOPS/W); we
+    /// report raw ops/J and compare *ratios* across precisions/modes,
+    /// which is the part of Table I's story the text supports.
+    pub fn tops_per_watt(&self, w: &LayerWorkload, m: &ModeConfig) -> f64 {
+        let ops = (w.iters * w.rows * w.cols) as f64 * 4.0;
+        let e_j = self.inference_energy(w, m).total_fj() * 1e-15;
+        ops / e_j / 1e12
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper() -> (EnergyModel, LayerWorkload) {
+        (EnergyModel::paper_default(), LayerWorkload::paper_default())
+    }
+
+    /// Fig. 9 headline totals: 48.8 -> 32 -> 27.8 pJ (+-20% band for the
+    /// calibrated reproduction).
+    #[test]
+    fn fig9_headline_energies() {
+        let (m, w) = paper();
+        let e_typ = m.inference_energy(&w, &ModeConfig::typical()).total_pj();
+        let e_cr = m.inference_energy(&w, &ModeConfig::mf_asym_reuse()).total_pj();
+        let e_so =
+            m.inference_energy(&w, &ModeConfig::mf_asym_reuse_ordered()).total_pj();
+        assert!((39.0..=58.0).contains(&e_typ), "typical {e_typ:.1} pJ (paper 48.8)");
+        assert!((25.0..=39.0).contains(&e_cr), "MF+CR {e_cr:.1} pJ (paper 32)");
+        assert!((22.0..=33.0).contains(&e_so), "MF+CR+SO {e_so:.1} pJ (paper 27.8)");
+        assert!(e_typ > e_cr && e_cr > e_so, "mode ladder must be monotone");
+        let savings = 1.0 - e_so / e_typ;
+        assert!(
+            (0.30..=0.55).contains(&savings),
+            "total savings {savings:.2} (paper ~0.43)"
+        );
+    }
+
+    #[test]
+    fn mf_removes_dac_energy() {
+        let (m, w) = paper();
+        let conv = ModeConfig::typical();
+        let mf_only = ModeConfig {
+            operator: OperatorKind::MultiplicationFree,
+            adc: AdcKind::Symmetric,
+            execution: ExecutionMode::Typical,
+        };
+        let e_conv = m.inference_energy(&w, &conv);
+        let e_mf = m.inference_energy(&w, &mf_only);
+        // per column event the MF array is cheaper, even though it runs
+        // 2(n-1) planes vs n-1
+        let conv_events = (w.iters * w.rows * 5 * 31) as f64;
+        let mf_events = (w.iters * w.rows * 10 * 31) as f64;
+        assert!(e_conv.array_fj / conv_events > e_mf.array_fj / mf_events);
+    }
+
+    #[test]
+    fn sar_cycle_expectations_ladder() {
+        // Fig. 5(d): sym 6 (63 levels) > asym ~3 > asym under CR+SO ~2.x
+        let (m, w) = paper();
+        let sym = m.expected_sar_cycles(&w, &ModeConfig::typical());
+        let asym = m.expected_sar_cycles(&w, &ModeConfig::mf_asym_reuse());
+        let asym_so = m.expected_sar_cycles(&w, &ModeConfig::mf_asym_reuse_ordered());
+        assert!((sym - 6.0).abs() < 1e-9, "sym {sym}");
+        assert!(asym < 0.65 * sym, "asym {asym:.2} vs sym {sym:.2} (paper -46%)");
+        assert!(asym_so < asym, "SO must sharpen further: {asym_so:.2}");
+    }
+
+    #[test]
+    fn table1_tops_per_watt_ratios() {
+        // Table I's *relative* story: 4-bit beats 6-bit by ~1.57x
+        // (3.5/2.23), and CR+SO beats CR (3.5/3.04, 2.23/2.0). Absolute
+        // TOPS/W is reported raw (see tops_per_watt docs).
+        let m = EnergyModel::paper_default();
+        let mut w6 = LayerWorkload::paper_default();
+        w6.bits = 6;
+        let mut w4 = w6;
+        w4.bits = 4;
+        let t6 = m.tops_per_watt(&w6, &ModeConfig::mf_asym_reuse_ordered());
+        let t4 = m.tops_per_watt(&w4, &ModeConfig::mf_asym_reuse_ordered());
+        let t6_cr = m.tops_per_watt(&w6, &ModeConfig::mf_asym_reuse());
+        let ratio = t4 / t6;
+        assert!(
+            (1.2..=2.2).contains(&ratio),
+            "4-bit/6-bit efficiency ratio {ratio:.2} (paper ~1.57)"
+        );
+        assert!(t4 > t6, "lower precision must be more efficient");
+        assert!(t6 > t6_cr, "SO must improve on CR alone");
+    }
+
+    #[test]
+    fn rng_energy_switches_to_schedule_reads_under_so() {
+        let (m, w) = paper();
+        let cr = m.inference_energy(&w, &ModeConfig::mf_asym_reuse());
+        let so = m.inference_energy(&w, &ModeConfig::mf_asym_reuse_ordered());
+        assert!(so.rng_fj < cr.rng_fj);
+    }
+
+    #[test]
+    fn adc_share_decreases_from_cr_to_so() {
+        let (m, w) = paper();
+        let cr = m.inference_energy(&w, &ModeConfig::mf_asym_reuse());
+        let so = m.inference_energy(&w, &ModeConfig::mf_asym_reuse_ordered());
+        // Fig. 10 reports <21% and <16%; our decomposition puts the ADC
+        // share higher in absolute terms (see EXPERIMENTS.md note), but
+        // the *energy* ordering must hold.
+        assert!(so.adc_fj() < cr.adc_fj());
+    }
+
+    #[test]
+    fn precision_scaling_is_monotone() {
+        let m = EnergyModel::paper_default();
+        let mut prev = 0.0;
+        for bits in [2u8, 4, 6, 8] {
+            let mut w = LayerWorkload::paper_default();
+            w.bits = bits;
+            let e = m
+                .inference_energy(&w, &ModeConfig::mf_asym_reuse())
+                .total_pj();
+            assert!(e > prev, "energy must grow with precision");
+            prev = e;
+        }
+    }
+}

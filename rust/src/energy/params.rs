@@ -1,0 +1,84 @@
+//! Per-operation energy constants.
+//!
+//! Units: femtojoules per event. Sources:
+//! * `e_sa_logic_*`: paper Fig. 5(f) — RTL synthesis + extraction
+//!   (Cadence RC): 1.4 fJ/conversion typical SA, 2.1 fJ/conversion
+//!   FSM-based asymmetric SA.
+//! * everything else: calibrated against the paper's macro totals
+//!   (Fig. 9: 48.8 / 32 / 27.8 pJ for the 30-iteration, 6-bit,
+//!   16x31 workload) with magnitudes consistent with 16 nm LSTP
+//!   switched-capacitance estimates (sub-fF bitline segments at 0.85 V
+//!   give ~0.1 fJ per column event). The calibration is validated by
+//!   `model::tests::fig9_headline_energies`.
+
+/// Energy constants for the macro and peripherals.
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    /// Product-line + column-line switching per driven column per cycle.
+    pub e_col_fj: f64,
+    /// Input DAC drive per column per cycle — the overhead the MF
+    /// operator eliminates (conventional operator only).
+    pub e_dac_in_fj: f64,
+    /// ADC analog energy per SAR cycle (comparator + capacitive-DAC
+    /// precharge on the borrowed bitlines).
+    pub e_sar_analog_fj: f64,
+    /// SA control logic per *conversion*, conventional binary search.
+    pub e_sa_logic_sym_fj: f64,
+    /// SA control logic per *conversion*, FSM-based asymmetric search.
+    pub e_sa_logic_asym_fj: f64,
+    /// SRAM-embedded RNG energy per dropout bit sampled online.
+    pub e_rng_bit_fj: f64,
+    /// SRAM read per dropout bit for precomputed (ordered) schedules.
+    pub e_sched_read_bit_fj: f64,
+    /// Digital shift-add per compute cycle.
+    pub e_shift_add_fj: f64,
+    /// Reuse combine (P_{i-1} +/- delta) per output per iteration.
+    pub e_reuse_combine_fj: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            e_col_fj: 0.10,
+            e_dac_in_fj: 0.28,
+            e_sar_analog_fj: 0.60,
+            e_sa_logic_sym_fj: 1.4,
+            e_sa_logic_asym_fj: 2.1,
+            e_rng_bit_fj: 1.5,
+            e_sched_read_bit_fj: 0.6,
+            e_shift_add_fj: 0.25,
+            e_reuse_combine_fj: 0.5,
+        }
+    }
+}
+
+impl EnergyParams {
+    /// Paper operating point.
+    pub fn lstp_16nm() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_logic_numbers_are_wired_in() {
+        let p = EnergyParams::default();
+        assert_eq!(p.e_sa_logic_sym_fj, 1.4);
+        assert_eq!(p.e_sa_logic_asym_fj, 2.1);
+    }
+
+    #[test]
+    fn asym_logic_costs_more_but_analog_dominates_conversions() {
+        // the paper's §II-C argument: FSM logic is pricier per
+        // conversion, but analog (comparator + CDAC) dominates, so
+        // fewer cycles win overall.
+        let p = EnergyParams::default();
+        let sym_conv = 6.0 * p.e_sar_analog_fj + p.e_sa_logic_sym_fj;
+        let asym_conv = 2.7 * p.e_sar_analog_fj + p.e_sa_logic_asym_fj;
+        assert!(p.e_sa_logic_asym_fj > p.e_sa_logic_sym_fj);
+        assert!(asym_conv < sym_conv);
+    }
+}

@@ -1,0 +1,64 @@
+//! # MC-CIM — Compute-in-Memory with Monte-Carlo Dropouts
+//!
+//! Production-style reproduction of *"MC-CIM: Compute-in-Memory with
+//! Monte-Carlo Dropouts for Bayesian Edge Intelligence"* (Shukla et al.,
+//! 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time python): the multiplication-free operator
+//!   product-sum as a Pallas kernel (`python/compile/kernels/`).
+//! * **Layer 2** (build-time python): MF-MLP networks for MNIST and
+//!   visual odometry, AOT-lowered to HLO text (`artifacts/*.hlo.txt`).
+//! * **Layer 3** (this crate): the paper's system contribution — the
+//!   CIM macro simulator, in-SRAM dropout-bit RNG, compute-reuse +
+//!   TSP-ordered MC-Dropout scheduling, energy model, and a serving
+//!   coordinator that executes the AOT graphs via PJRT and returns
+//!   *prediction + confidence* per request.
+//!
+//! Python never runs on the request path; once `make artifacts` has been
+//! run the `mc-cim` binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | paper section | contents |
+//! |---|---|---|
+//! | [`operator`] | §II-A | fixed-point quantizer, MF operator, bitplane schedules, conventional baseline |
+//! | [`cim`] | §II-B/C | 8T bitcell, 16×31 array, MAV statistics, symmetric + asymmetric SAR xADC |
+//! | [`rng`] | §III-B | CCI electrical model, SRAM-embedded calibration, Beta-perturbed Bernoulli sources |
+//! | [`dropout`] | §III-A, §IV | masks, MC schedules, compute reuse, TSP sample ordering |
+//! | [`energy`] | §V | per-op energy parameters and the mode-matrix energy model |
+//! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
+//! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
+//! | [`coordinator`] | — | MC-Dropout engine, request router, dynamic batcher, worker pool |
+//! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
+//! | [`config`] | — | CLI/flag parsing and run configuration (no external deps) |
+//! | [`util`] | — | PCG32 PRNG, statistics, minimal JSON, test generators |
+
+pub mod bayes;
+pub mod cim;
+pub mod config;
+pub mod coordinator;
+pub mod dropout;
+pub mod energy;
+pub mod operator;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Rows in the paper's macro: 16 (output neurons / weight rows).
+pub const MACRO_ROWS: usize = 16;
+/// Columns in the paper's macro: 31 (input neurons / weight bits per row).
+pub const MACRO_COLS: usize = 31;
+
+/// Paper operating point: 0.85 V supply (§V, Table I).
+pub const VDD: f64 = 0.85;
+/// Main clock of the macro: 1 GHz (Table I).
+pub const CLOCK_HZ: f64 = 1.0e9;
+
+/// MC-Dropout samples per prediction used throughout the evaluation (§V).
+pub const MC_SAMPLES: usize = 30;
+/// Dropout probability (§III-A: p = 0.5 captures model uncertainty well).
+pub const DROPOUT_P: f64 = 0.5;

@@ -1,0 +1,295 @@
+//! mc-cim — leader binary for the MC-CIM coordinator.
+//!
+//! Subcommands:
+//!   info        artifact + platform summary
+//!   classify    MC-Dropout classification of a test image (± rotation)
+//!   vo          MC-Dropout pose regression over the scene-4 sequence
+//!   serve       demo serving run (worker pool + mixed request stream)
+//!   energy      Fig. 9 energy table across operating modes
+//!   rng         Fig. 4 RNG population statistics
+//!   adc         Fig. 5(d) SAR conversion-cycle comparison
+//!   reuse       Fig. 6(b) MAC-workload comparison
+//!
+//! All experiment *benches* (full figure regeneration) live under
+//! `cargo bench`; these subcommands are quick interactive slices.
+
+use anyhow::{anyhow, bail, Result};
+use mc_cim::bayes::ClassEnsemble;
+use mc_cim::cim::mav::MavModel;
+use mc_cim::cim::xadc::{AdcKind, SarAdc};
+use mc_cim::config::Args;
+use mc_cim::coordinator::{
+    Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind, Request,
+    Response,
+};
+use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
+use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
+use mc_cim::rng::{calibrate, estimate_p1, CciRng, IdealBernoulli, SramEmbeddedRng};
+use mc_cim::runtime::Runtime;
+use mc_cim::util::stats::std_dev;
+use mc_cim::workloads::{image, mnist::MnistTest, Meta, ARTIFACTS_DIR};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env().map_err(|e| anyhow!(e))?;
+    let cmd = args.shift().unwrap_or_else(|| "info".to_string());
+    match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "classify" => cmd_classify(&args),
+        "vo" => cmd_vo(&args),
+        "serve" => cmd_serve(&args),
+        "energy" => cmd_energy(&args),
+        "rng" => cmd_rng(&args),
+        "adc" => cmd_adc(&args),
+        "reuse" => cmd_reuse(&args),
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try `mc-cim help`)"),
+    }
+}
+
+const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
+  --artifacts DIR   artifacts directory (default: artifacts)
+  classify: --index N --samples N --bits B --rotate DEG
+  vo:       --frames N --samples N --bits B
+  serve:    --workers N --requests N --samples N --bits B
+  energy:   --bits B --iters N
+  rng:      --instances N --cols N --target P
+  adc:      (no flags)
+  reuse:    --samples N --neurons N";
+
+fn artifacts(args: &Args) -> String {
+    args.get_or("artifacts", ARTIFACTS_DIR)
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let meta = Meta::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    println!("mc-cim — MC-CIM coordinator");
+    println!("platform        : {}", rt.platform());
+    println!("artifacts       : {dir}");
+    println!("mc batch        : {}", meta.mc_batch);
+    println!("dropout p       : {}", meta.dropout_p);
+    println!("mnist dims      : {:?}", meta.mnist_dims);
+    println!("vo dims         : {:?} (thin {:?})", meta.vo_dims, meta.vo_thin_dims);
+    println!(
+        "build metrics   : mnist det {:.3} / mc {:.3}, vo err {:.3}, thin {:.3}",
+        meta.mnist_acc_det, meta.mnist_acc_mc, meta.vo_err, meta.vo_thin_err
+    );
+    Ok(())
+}
+
+fn cmd_classify(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let meta = Meta::load(&dir)?;
+    let idx = args.get_usize("index", 0).map_err(|e| anyhow!(e))?;
+    let samples = args.get_usize("samples", 30).map_err(|e| anyhow!(e))?;
+    let rotate = args.get_f64("rotate", 0.0).map_err(|e| anyhow!(e))? as f32;
+    let bits = args.get_usize("bits", 0).map_err(|e| anyhow!(e))?;
+
+    let test = MnistTest::load(&dir)?;
+    let mut img = test.images[idx % test.len()].clone();
+    if rotate != 0.0 {
+        img = image::rotate_pm1(&img, 28, rotate);
+    }
+    let rt = Runtime::cpu()?;
+    let mut ec = EngineConfig::new(NetKind::Mnist);
+    if bits > 0 {
+        ec.bits = Some(bits as u8);
+    }
+    let engine = McDropoutEngine::load(&rt, &dir, &meta, &ec)?;
+    let mut src = IdealBernoulli::new(1.0 - meta.dropout_p, 42);
+    let out = engine.infer_mc(&img, samples, &mut src)?;
+    let mut ens = ClassEnsemble::new(engine.out_dim());
+    for s in &out.samples {
+        ens.add_logits(s);
+    }
+    println!(
+        "image #{idx} (label {}) rotate {rotate}°: prediction {} confidence {:.2} entropy {:.3} energy {:.1} pJ",
+        test.labels[idx % test.len()],
+        ens.prediction(),
+        ens.confidence(),
+        ens.entropy(),
+        out.energy_pj
+    );
+    println!("votes: {:?}", ens.votes());
+    Ok(())
+}
+
+fn cmd_vo(args: &Args) -> Result<()> {
+    use mc_cim::bayes::RegressionEnsemble;
+    use mc_cim::workloads::vo::{PoseNorm, VoTest};
+    let dir = artifacts(args);
+    let meta = Meta::load(&dir)?;
+    let frames = args.get_usize("frames", 10).map_err(|e| anyhow!(e))?;
+    let samples = args.get_usize("samples", 30).map_err(|e| anyhow!(e))?;
+    let test = VoTest::load(&dir)?;
+    let rt = Runtime::cpu()?;
+    let engine = McDropoutEngine::load(&rt, &dir, &meta, &EngineConfig::new(NetKind::Vo))?;
+    let mut src = IdealBernoulli::new(engine.mask_keep(), 42);
+    let norm = PoseNorm::new(&meta);
+    println!("frame  err[m]   sqrt(var)  pose(x,y,z)");
+    for f in 0..frames.min(test.len()) {
+        let out = engine.infer_mc(&test.features[f], samples, &mut src)?;
+        let mut ens = RegressionEnsemble::new(engine.out_dim());
+        for s in &out.samples {
+            ens.add_sample(s);
+        }
+        let mean: Vec<f32> = ens.mean().iter().map(|&v| v as f32).collect();
+        let err = norm.position_error_m(&mean, &test.poses[f]);
+        let metric = norm.denormalize(&mean);
+        println!(
+            "{f:5}  {err:7.3}  {:9.4}  ({:.2}, {:.2}, {:.2})",
+            ens.total_variance(3).sqrt(),
+            metric[0],
+            metric[1],
+            metric[2]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let workers = args.get_usize("workers", 2).map_err(|e| anyhow!(e))?;
+    let requests = args.get_usize("requests", 50).map_err(|e| anyhow!(e))?;
+    let samples = args.get_usize("samples", 30).map_err(|e| anyhow!(e))?;
+    let bits = args.get_usize("bits", 0).map_err(|e| anyhow!(e))?;
+
+    let test = MnistTest::load(&dir)?;
+    let cfg = CoordinatorConfig {
+        artifacts: dir,
+        workers,
+        bits: (bits > 0).then_some(bits as u8),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg)?;
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .map(|i| {
+            coord.submit(Request::Classify {
+                image: test.images[i % test.len()].clone(),
+                samples,
+            })
+        })
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        match rx.recv()? {
+            Response::Class(c) => {
+                if c.prediction as i32 == test.labels[i % test.len()] {
+                    correct += 1;
+                }
+            }
+            Response::Error(e) => bail!("request {i}: {e}"),
+            _ => bail!("unexpected response type"),
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{requests} requests x {samples} samples on {workers} workers: {:.2} req/s, accuracy {:.3}",
+        requests as f64 / dt,
+        correct as f64 / requests as f64
+    );
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let bits = args.get_usize("bits", 6).map_err(|e| anyhow!(e))? as u8;
+    let iters = args.get_usize("iters", 30).map_err(|e| anyhow!(e))?;
+    let model = EnergyModel::paper_default();
+    let mut w = LayerWorkload::paper_default();
+    w.bits = bits;
+    w.iters = iters;
+    println!("mode                                   total[pJ]  array  adc    rng   digital  adc%");
+    for (m, paper) in [
+        (ModeConfig::typical(), Some(48.8)),
+        (ModeConfig::mf_asym_reuse(), Some(32.0)),
+        (ModeConfig::mf_asym_reuse_ordered(), Some(27.8)),
+    ] {
+        let e = model.inference_energy(&w, &m);
+        println!(
+            "{:38} {:8.1}  {:5.1}  {:5.1}  {:4.1}  {:6.1}  {:4.1}%{}",
+            m.label(),
+            e.total_pj(),
+            e.array_fj / 1000.0,
+            e.adc_fj() / 1000.0,
+            e.rng_fj / 1000.0,
+            e.digital_fj / 1000.0,
+            100.0 * e.adc_share(),
+            paper
+                .filter(|_| bits == 6 && iters == 30)
+                .map(|p| format!("   (paper {p} pJ)"))
+                .unwrap_or_default()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_rng(args: &Args) -> Result<()> {
+    let n = args.get_usize("instances", 100).map_err(|e| anyhow!(e))?;
+    let cols = args.get_usize("cols", 16).map_err(|e| anyhow!(e))?;
+    let target = args.get_f64("target", 0.5).map_err(|e| anyhow!(e))?;
+    let bare: Vec<f64> = (0..n as u64)
+        .map(|i| estimate_p1(&mut CciRng::sample_instance(i), 500))
+        .collect();
+    let emb: Vec<f64> = (0..n as u64)
+        .map(|i| {
+            let mut r = SramEmbeddedRng::sample_instance(cols, i);
+            calibrate(&mut r, target, 0.06, 4).measured_p1
+        })
+        .collect();
+    println!("bare CCI      : sigma(p1) = {:.3}  (paper 0.35)", std_dev(&bare));
+    println!(
+        "SRAM-embedded : sigma(p1) = {:.3}  (paper 0.058), target {target}",
+        std_dev(&emb)
+    );
+    Ok(())
+}
+
+fn cmd_adc(_args: &Args) -> Result<()> {
+    let dense = MavModel::trinomial(31, 0.125, 0.125);
+    let sparse = MavModel::trinomial(31, 0.06, 0.06);
+    println!("policy                 E[cycles] (p=0.5 MAV)  E[cycles] (CR+SO MAV)");
+    for kind in [AdcKind::Symmetric, AdcKind::AsymmetricMedian, AdcKind::AsymmetricOptimal] {
+        let a_dense = SarAdc::new(kind, &dense).expected_cycles(&dense);
+        let a_sparse = SarAdc::new(kind, &sparse).expected_cycles(&sparse);
+        println!("{kind:22?} {a_dense:10.2} {a_sparse:22.2}");
+    }
+    println!("(paper: symmetric 5, asymmetric ~2.7, asym+CR+SO ~2 at 5-bit)");
+    Ok(())
+}
+
+fn cmd_reuse(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", 100).map_err(|e| anyhow!(e))?;
+    let neurons = args.get_usize("neurons", 10).map_err(|e| anyhow!(e))?;
+    let mut src = IdealBernoulli::new(0.5, 11);
+    let sched = McSchedule::sample(samples, &[neurons], &mut src);
+    println!("execution mode                        MACs     vs typical");
+    for mode in [
+        ExecutionMode::Typical,
+        ExecutionMode::ComputeReuse,
+        ExecutionMode::ComputeReuseOrdered,
+    ] {
+        let r = sched.workload(&[neurons], mode);
+        println!(
+            "{:36} {:9}  {:5.1}%",
+            mode.label(),
+            r.macs,
+            100.0 * r.ratio()
+        );
+    }
+    println!("(paper Fig. 6(b): reuse ~52%, reuse+TSP ~20% of typical)");
+    Ok(())
+}

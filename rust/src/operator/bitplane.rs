@@ -1,0 +1,222 @@
+//! Digital bitplane schedules (Fig. 1(d)) and shift-add recombination.
+//!
+//! The macro processes one *bitplane of like significance* per clock
+//! cycle and recombines plane sums with a digital shift-add:
+//!
+//! * **MF operator**: the multibit operand of every product is paired
+//!   with a one-bit sign plane, so the schedule is `(n-1)` magnitude
+//!   planes of `w` against `sign(x)` plus `(n-1)` planes of `x` against
+//!   `sign(w)` — `2(n-1)` cycles total.
+//! * **Conventional operator**: every pair of magnitude planes must be
+//!   correlated — `(n-1)^2` compute cycles (the paper quotes the O(n^2)
+//!   growth; with sign-magnitude codes the magnitude work is `(n-1)^2`).
+//!
+//! Each cycle produces one signed plane sum — the quantity the 16x31
+//! array evaluates as a multiply-average voltage (MAV) on its sum line
+//! and the xADC digitizes. Here the sums are computed exactly (ideal
+//! ADC); `cim::macro_sim` reuses this schedule with the electrical MAV +
+//! SAR models in the loop and must reconstruct the same value.
+
+use super::quant::QuantTensor;
+
+/// Which operator the schedule implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperatorKind {
+    /// The paper's co-designed operator (Eq. 1): 2(n-1) cycles.
+    MultiplicationFree,
+    /// Standard multiply-accumulate: (n-1)^2 plane-pair cycles.
+    Conventional,
+}
+
+/// One schedule cycle: a plane selector plus the shift-add scale that
+/// its (integer) plane sum contributes with.
+#[derive(Clone, Copy, Debug)]
+pub struct Cycle {
+    pub kind: CycleKind,
+    /// Multiplier applied during shift-add recombination.
+    pub scale: f32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CycleKind {
+    /// sum_i sign(x_i) * w_bit(i, p) — MF, weight-magnitude side.
+    SignXWithWPlane(u8),
+    /// sum_i sign(w_i) * x_bit(i, p) — MF, input-magnitude side.
+    SignWWithXPlane(u8),
+    /// sum_i sign(x_i*w_i) * x_bit(i, px) * w_bit(i, pw) — conventional.
+    PlanePair { px: u8, pw: u8 },
+}
+
+/// The full bitplane schedule for one weight-row x input correlation.
+#[derive(Clone, Debug)]
+pub struct BitplaneSchedule {
+    pub kind: OperatorKind,
+    pub cycles: Vec<Cycle>,
+}
+
+impl BitplaneSchedule {
+    /// Build the schedule for operands quantized with the given deltas.
+    /// Both operands must share the same bit width (as in the macro).
+    pub fn new(kind: OperatorKind, bits: u8, x_delta: f32, w_delta: f32) -> Self {
+        let planes = bits - 1;
+        let mut cycles = Vec::new();
+        match kind {
+            OperatorKind::MultiplicationFree => {
+                for p in 0..planes {
+                    cycles.push(Cycle {
+                        kind: CycleKind::SignXWithWPlane(p),
+                        scale: (1u32 << p) as f32 * w_delta,
+                    });
+                }
+                for p in 0..planes {
+                    cycles.push(Cycle {
+                        kind: CycleKind::SignWWithXPlane(p),
+                        scale: (1u32 << p) as f32 * x_delta,
+                    });
+                }
+            }
+            OperatorKind::Conventional => {
+                for px in 0..planes {
+                    for pw in 0..planes {
+                        cycles.push(Cycle {
+                            kind: CycleKind::PlanePair { px, pw },
+                            scale: (1u64 << (px + pw)) as f32 * x_delta * w_delta,
+                        });
+                    }
+                }
+            }
+        }
+        BitplaneSchedule { kind, cycles }
+    }
+
+    /// Cycle count of the schedule: 2(n-1) for MF, (n-1)^2 conventional.
+    pub fn cycle_count(&self) -> usize {
+        self.cycles.len()
+    }
+
+    /// The signed plane sum for one cycle over active lanes.
+    /// `active[i] = false` models a dropped input column (§III-A).
+    pub fn plane_sum(
+        &self,
+        cycle: &Cycle,
+        x: &QuantTensor,
+        w: &QuantTensor,
+        active: &[bool],
+    ) -> i32 {
+        assert_eq!(x.codes.len(), w.codes.len());
+        assert_eq!(x.codes.len(), active.len());
+        let mut s = 0i32;
+        for i in 0..x.codes.len() {
+            if !active[i] {
+                continue;
+            }
+            s += match cycle.kind {
+                CycleKind::SignXWithWPlane(p) => {
+                    x.sign(i) * w.magnitude_bit(i, p) as i32
+                }
+                CycleKind::SignWWithXPlane(p) => {
+                    w.sign(i) * x.magnitude_bit(i, p) as i32
+                }
+                CycleKind::PlanePair { px, pw } => {
+                    (x.sign(i) * w.sign(i))
+                        * (x.magnitude_bit(i, px) * w.magnitude_bit(i, pw)) as i32
+                }
+            };
+        }
+        s
+    }
+
+    /// Execute the whole schedule with ideal digitization and shift-add
+    /// the plane sums back into the operator result.
+    pub fn evaluate(&self, x: &QuantTensor, w: &QuantTensor, active: &[bool]) -> f32 {
+        self.cycles
+            .iter()
+            .map(|c| self.plane_sum(c, x, w, active) as f32 * c.scale)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::mf::{conventional_dot_quant, mf_dot_quant};
+    use crate::operator::quant::Quantizer;
+    use crate::util::testkit::{bool_mask, check, f32_vec};
+
+    fn masked(t: &QuantTensor, active: &[bool]) -> QuantTensor {
+        QuantTensor {
+            codes: t
+                .codes
+                .iter()
+                .zip(active)
+                .map(|(&c, &a)| if a { c } else { 0 })
+                .collect(),
+            delta: t.delta,
+            bits: t.bits,
+        }
+    }
+
+    #[test]
+    fn cycle_counts_match_paper_growth() {
+        for bits in 2..=8u8 {
+            let mf = BitplaneSchedule::new(OperatorKind::MultiplicationFree, bits, 1.0, 1.0);
+            let cv = BitplaneSchedule::new(OperatorKind::Conventional, bits, 1.0, 1.0);
+            assert_eq!(mf.cycle_count(), 2 * (bits as usize - 1));
+            assert_eq!(cv.cycle_count(), (bits as usize - 1).pow(2));
+        }
+        // the paper's headline comparison at 6 bits: 10 vs ~36 cycles
+        assert_eq!(
+            BitplaneSchedule::new(OperatorKind::MultiplicationFree, 6, 1.0, 1.0).cycle_count(),
+            10
+        );
+    }
+
+    #[test]
+    fn mf_schedule_reconstructs_mf_dot() {
+        check("bitplane MF == mf_dot_quant", 60, |rng| {
+            let bits = 2 + rng.below(6) as u8;
+            let q = Quantizer::new(bits);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let w = q.quantize(&f32_vec(rng, 31, 1.0));
+            let active = bool_mask(rng, 31, 0.5);
+            let sched =
+                BitplaneSchedule::new(OperatorKind::MultiplicationFree, bits, x.delta, w.delta);
+            let got = sched.evaluate(&x, &w, &active);
+            let want = mf_dot_quant(&masked(&x, &active), &masked(&w, &active));
+            (got - want).abs() < 1e-3
+        });
+    }
+
+    #[test]
+    fn conventional_schedule_reconstructs_dot() {
+        check("bitplane conv == dot_quant", 60, |rng| {
+            let bits = 2 + rng.below(5) as u8;
+            let q = Quantizer::new(bits);
+            let x = q.quantize(&f32_vec(rng, 16, 1.0));
+            let w = q.quantize(&f32_vec(rng, 16, 1.0));
+            let active = bool_mask(rng, 16, 0.7);
+            let sched =
+                BitplaneSchedule::new(OperatorKind::Conventional, bits, x.delta, w.delta);
+            let got = sched.evaluate(&x, &w, &active);
+            let want = conventional_dot_quant(&masked(&x, &active), &masked(&w, &active));
+            (got - want).abs() < 1e-3
+        });
+    }
+
+    #[test]
+    fn plane_sums_bounded_by_active_lanes() {
+        check("plane sum bounded", 40, |rng| {
+            let q = Quantizer::new(4);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let w = q.quantize(&f32_vec(rng, 31, 1.0));
+            let active = bool_mask(rng, 31, 0.5);
+            let n_active = active.iter().filter(|&&a| a).count() as i32;
+            let sched =
+                BitplaneSchedule::new(OperatorKind::MultiplicationFree, 4, x.delta, w.delta);
+            sched
+                .cycles
+                .iter()
+                .all(|c| sched.plane_sum(c, &x, &w, &active).abs() <= n_active)
+        });
+    }
+}

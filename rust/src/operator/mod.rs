@@ -1,0 +1,18 @@
+//! §II-A — the CIM-optimized multiplication-free (MF) inference operator.
+//!
+//! * [`quant`] — symmetric n-bit fixed-point quantization (mirrors the
+//!   python `quantize_ref` used at training/eval time).
+//! * [`mf`] — the operator itself (Eq. 1), dense float and integer-code
+//!   forms, plus the conventional dot-product baseline.
+//! * [`bitplane`] — the digital bitplane schedule the macro executes:
+//!   `2(n-1)` cycles for the MF operator vs `n^2` for the conventional
+//!   one, and the shift-add recombination that proves the schedule
+//!   computes the same number as the dense form.
+
+pub mod bitplane;
+pub mod mf;
+pub mod quant;
+
+pub use bitplane::{BitplaneSchedule, OperatorKind};
+pub use mf::{conventional_dot, mf_dot, mf_matmul, mf_term};
+pub use quant::{QuantTensor, Quantizer};

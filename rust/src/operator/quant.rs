@@ -1,0 +1,245 @@
+//! Symmetric n-bit fixed-point quantization.
+//!
+//! The macro stores sign-magnitude codes: an n-bit operand is a sign bit
+//! plus an (n-1)-bit magnitude. `Quantizer` maps float tensors onto the
+//! grid `delta * k`, `k in [-(2^(n-1)-1), 2^(n-1)-1]`, with `delta`
+//! anchored to the tensor's max-abs — exactly the python
+//! `kernels.ref.quantize_ref` used when evaluating precision sweeps
+//! (Fig. 11, Fig. 12(e), Fig. 13(e)), so both layers agree bit-for-bit.
+
+/// Symmetric per-tensor quantizer for `bits >= 2`.
+#[derive(Clone, Copy, Debug)]
+pub struct Quantizer {
+    bits: u8,
+}
+
+/// A quantized tensor: integer codes plus the shared scale.
+#[derive(Clone, Debug)]
+pub struct QuantTensor {
+    /// Signed integer codes, |code| <= 2^(bits-1) - 1.
+    pub codes: Vec<i32>,
+    /// Grid step; dequantized value = code * delta.
+    pub delta: f32,
+    /// Precision in bits (sign + magnitude).
+    pub bits: u8,
+}
+
+impl Quantizer {
+    pub fn new(bits: u8) -> Self {
+        assert!((2..=16).contains(&bits), "bits must be in 2..=16, got {bits}");
+        Quantizer { bits }
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    /// Max magnitude code: 2^(bits-1) - 1.
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    /// Quantize a float slice with scale anchored to its max-abs.
+    pub fn quantize(&self, v: &[f32]) -> QuantTensor {
+        let amax = v.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        self.quantize_with_amax(v, amax)
+    }
+
+    /// Quantize with an externally fixed full-scale (used when the same
+    /// grid must be shared across tensors, e.g. activation ranges).
+    pub fn quantize_with_amax(&self, v: &[f32], amax: f32) -> QuantTensor {
+        let qmax = self.qmax() as f32;
+        let delta = amax / qmax;
+        let codes = v
+            .iter()
+            .map(|&x| (x / delta).round().clamp(-qmax, qmax) as i32)
+            .collect();
+        QuantTensor { codes, delta, bits: self.bits }
+    }
+
+    /// Fake-quantize in place: snap floats to the mid-tread grid (zero
+    /// is representable — required for *inputs*, where dropped/zero
+    /// activations must stay exactly zero).
+    pub fn fake_quantize(&self, v: &mut [f32]) {
+        let q = self.quantize(v);
+        for (x, c) in v.iter_mut().zip(&q.codes) {
+            *x = *c as f32 * q.delta;
+        }
+    }
+
+    /// Fake-quantize *weights* in place on the mid-rise grid: levels at
+    /// `±(k + 1/2) · Δ`, `k in 0..2^(b-1)`, i.e. **no zero level**.
+    ///
+    /// The MF operator is uniquely sensitive to zero-flips: a weight
+    /// rounded to zero loses its entire `sign(w)·|x|` contribution
+    /// (±|x|, independent of |w|), so a mid-tread grid collapses the
+    /// network at low precision. Sign-magnitude CIM storage keeps the
+    /// sign bit regardless of the magnitude code, and the mid-rise grid
+    /// is exactly that behaviour: every nonzero weight keeps its sign,
+    /// magnitude error stays ≤ Δ/2. (Mid-rise values are odd integer
+    /// codes at Δ/2 granularity, so the bitplane machinery still
+    /// applies with one extra magnitude bit.)
+    pub fn fake_quantize_midrise(&self, v: &mut [f32]) {
+        let n_levels = (1 << (self.bits - 1)) as f32; // magnitude levels
+        let amax = v.iter().fold(0.0f32, |a, &x| a.max(x.abs())).max(1e-12);
+        let delta = amax / n_levels;
+        for x in v.iter_mut() {
+            if *x == 0.0 {
+                continue;
+            }
+            let k = (x.abs() / delta).floor().min(n_levels - 1.0);
+            *x = x.signum() * (k + 0.5) * delta;
+        }
+    }
+}
+
+impl QuantTensor {
+    /// Dequantize back to floats.
+    pub fn dequantize(&self) -> Vec<f32> {
+        self.codes.iter().map(|&c| c as f32 * self.delta).collect()
+    }
+
+    /// Magnitude bitplane `p` (0 = LSB) of code i as 0/1.
+    #[inline]
+    pub fn magnitude_bit(&self, i: usize, p: u8) -> u8 {
+        ((self.codes[i].unsigned_abs() >> p) & 1) as u8
+    }
+
+    /// Sign of code i in {-1, 0, +1}.
+    #[inline]
+    pub fn sign(&self, i: usize) -> i32 {
+        self.codes[i].signum()
+    }
+
+    /// Number of magnitude planes: bits - 1.
+    pub fn magnitude_planes(&self) -> u8 {
+        self.bits - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::{check, f32_vec};
+
+    #[test]
+    fn grid_is_symmetric_and_bounded() {
+        let q = Quantizer::new(4);
+        let t = q.quantize(&[0.9, -0.9, 0.05, 0.0]);
+        assert_eq!(q.qmax(), 7);
+        assert!(t.codes.iter().all(|c| c.abs() <= 7));
+        assert_eq!(t.codes[0], -t.codes[1]);
+        assert_eq!(t.codes[3], 0);
+    }
+
+    #[test]
+    fn max_abs_is_preserved() {
+        let q = Quantizer::new(6);
+        let v = [0.3f32, -0.7, 0.1];
+        let d = q.quantize(&v).dequantize();
+        assert!((d[1] + 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idempotent_fake_quant() {
+        check("fake quant idempotent", 100, |rng| {
+            let bits = 2 + (rng.below(7) as u8);
+            let mut v = f32_vec(rng, 64, 1.0);
+            let q = Quantizer::new(bits);
+            q.fake_quantize(&mut v);
+            let once = v.clone();
+            q.fake_quantize(&mut v);
+            once.iter().zip(&v).all(|(a, b)| (a - b).abs() < 1e-6)
+        });
+    }
+
+    #[test]
+    fn error_bounded_by_half_delta() {
+        check("quant error <= delta/2", 100, |rng| {
+            let v = f32_vec(rng, 32, 2.0);
+            let q = Quantizer::new(6);
+            let t = q.quantize(&v);
+            let d = t.dequantize();
+            v.iter()
+                .zip(&d)
+                .all(|(a, b)| (a - b).abs() <= t.delta / 2.0 + 1e-7)
+        });
+    }
+
+    #[test]
+    fn bitplane_decomposition_reconstructs_codes() {
+        check("planes reconstruct magnitude", 50, |rng| {
+            let v = f32_vec(rng, 16, 1.0);
+            let t = Quantizer::new(5).quantize(&v);
+            (0..16).all(|i| {
+                let mag: i32 = (0..t.magnitude_planes())
+                    .map(|p| (t.magnitude_bit(i, p) as i32) << p)
+                    .sum();
+                mag == t.codes[i].abs()
+            })
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_1_bit() {
+        Quantizer::new(1);
+    }
+
+    #[test]
+    fn midrise_preserves_signs_exactly() {
+        check("midrise sign preservation", 80, |rng| {
+            let bits = 2 + rng.below(7) as u8;
+            let mut v = f32_vec(rng, 64, 1.0);
+            let orig = v.clone();
+            Quantizer::new(bits).fake_quantize_midrise(&mut v);
+            orig.iter().zip(&v).all(|(a, b)| {
+                (a.signum() - b.signum()).abs() < 1e-6 && (*a == 0.0) == (*b == 0.0)
+            })
+        });
+    }
+
+    #[test]
+    fn midrise_error_bounded_by_half_step() {
+        check("midrise |err| <= delta/2", 80, |rng| {
+            let bits = 3 + rng.below(6) as u8;
+            let mut v = f32_vec(rng, 64, 2.0);
+            let orig = v.clone();
+            let amax = orig.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let delta = amax / (1 << (bits - 1)) as f32;
+            Quantizer::new(bits).fake_quantize_midrise(&mut v);
+            orig.iter()
+                .zip(&v)
+                .all(|(a, b)| (a - b).abs() <= delta / 2.0 + 1e-6)
+        });
+    }
+
+    #[test]
+    fn midrise_has_no_zero_level() {
+        let q = Quantizer::new(4);
+        let mut v: Vec<f32> = vec![1e-6, -1e-6, 0.5, 1.0];
+        q.fake_quantize_midrise(&mut v);
+        assert!(v[0] > 0.0 && v[1] < 0.0, "tiny weights keep their sign: {v:?}");
+    }
+
+    #[test]
+    fn midrise_reapplication_drift_is_bounded() {
+        // mid-rise is not exactly idempotent (the max-abs anchor shrinks
+        // by half a step after the first pass), but re-application must
+        // stay within one original step and never flip a sign.
+        check("midrise bounded drift", 60, |rng| {
+            let bits = 3 + rng.below(5) as u8;
+            let mut v = f32_vec(rng, 32, 1.0);
+            let amax = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+            let delta = amax / (1 << (bits - 1)) as f32;
+            let q = Quantizer::new(bits);
+            q.fake_quantize_midrise(&mut v);
+            let once = v.clone();
+            q.fake_quantize_midrise(&mut v);
+            once.iter().zip(&v).all(|(a, b)| {
+                (a - b).abs() <= delta + 1e-6
+                    && (a.signum() - b.signum()).abs() < 1e-6
+            })
+        });
+    }
+}

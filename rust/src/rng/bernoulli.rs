@@ -1,0 +1,139 @@
+//! Software dropout-bit sources.
+//!
+//! * [`IdealBernoulli`] — the functional reference (what the paper's
+//!   "ideal dropout bias" rows assume).
+//! * [`BetaPerturbedBernoulli`] — the non-ideality model of Fig. 12(c):
+//!   each *instance* (one physical RNG serving a mask lane) carries a
+//!   bias sampled from a symmetric Beta(a, a); smaller `a` = larger
+//!   process-induced deviation from p = 0.5. For non-centred nominal p
+//!   the Beta sample is shifted so its mean matches the nominal.
+
+use super::DropoutBitSource;
+use crate::util::Pcg32;
+
+/// Ideal Bernoulli(p₁) source.
+#[derive(Clone, Debug)]
+pub struct IdealBernoulli {
+    p1: f64,
+    rng: Pcg32,
+}
+
+impl IdealBernoulli {
+    pub fn new(p1: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&p1));
+        IdealBernoulli { p1, rng: Pcg32::new(seed, 11) }
+    }
+}
+
+impl DropoutBitSource for IdealBernoulli {
+    fn next_bit(&mut self) -> bool {
+        self.rng.bernoulli(self.p1)
+    }
+
+    fn nominal_p1(&self) -> f64 {
+        self.p1
+    }
+}
+
+/// Beta(a, a)-perturbed Bernoulli: the instance bias is
+/// `p_inst = nominal + (B - 0.5)` with `B ~ Beta(a, a)`, clamped to
+/// (0.02, 0.98). `a -> inf` recovers the ideal source; `a = 1.25`
+/// is the strongest perturbation the paper studies (Fig. 13(f)).
+#[derive(Clone, Debug)]
+pub struct BetaPerturbedBernoulli {
+    nominal: f64,
+    a: f64,
+    instance_p1: f64,
+    rng: Pcg32,
+}
+
+impl BetaPerturbedBernoulli {
+    pub fn new(nominal_p1: f64, a: f64, seed: u64) -> Self {
+        assert!(a > 0.0);
+        let mut rng = Pcg32::new(seed, 13);
+        let b = rng.beta(a, a);
+        let instance_p1 = (nominal_p1 + (b - 0.5)).clamp(0.02, 0.98);
+        BetaPerturbedBernoulli { nominal: nominal_p1, a, instance_p1, rng }
+    }
+
+    /// The realized per-instance bias.
+    pub fn instance_p1(&self) -> f64 {
+        self.instance_p1
+    }
+
+    /// Draw a fresh instance bias (models re-sampling a new physical
+    /// RNG lane; used when each MC iteration maps to a different lane).
+    pub fn resample_instance(&mut self) {
+        let b = self.rng.beta(self.a, self.a);
+        self.instance_p1 = (self.nominal + (b - 0.5)).clamp(0.02, 0.98);
+    }
+}
+
+impl DropoutBitSource for BetaPerturbedBernoulli {
+    fn next_bit(&mut self) -> bool {
+        self.rng.bernoulli(self.instance_p1)
+    }
+
+    fn nominal_p1(&self) -> f64 {
+        self.nominal
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::estimate_p1;
+    use crate::util::stats::std_dev;
+
+    #[test]
+    fn ideal_hits_nominal() {
+        for &p in &[0.3, 0.5, 0.7] {
+            let mut s = IdealBernoulli::new(p, 42);
+            let est = estimate_p1(&mut s, 30_000);
+            assert!((est - p).abs() < 0.01, "p={p} est={est}");
+        }
+    }
+
+    #[test]
+    fn beta_instances_spread_grows_as_a_shrinks() {
+        let spread = |a: f64| {
+            let ps: Vec<f64> = (0..200)
+                .map(|i| BetaPerturbedBernoulli::new(0.5, a, i).instance_p1())
+                .collect();
+            std_dev(&ps)
+        };
+        let tight = spread(50.0);
+        let loose = spread(1.25);
+        assert!(loose > 3.0 * tight, "loose {loose} vs tight {tight}");
+        // Beta(a,a) spread analytic: sd = sqrt(1/(4(2a+1)))
+        assert!((loose - (1.0f64 / (4.0 * 3.5)).sqrt()).abs() < 0.05);
+    }
+
+    #[test]
+    fn beta_mean_tracks_nominal() {
+        for &nom in &[0.3, 0.5, 0.7] {
+            let mean: f64 = (0..400)
+                .map(|i| BetaPerturbedBernoulli::new(nom, 2.0, i).instance_p1())
+                .sum::<f64>()
+                / 400.0;
+            assert!((mean - nom).abs() < 0.03, "nom {nom} mean {mean}");
+        }
+    }
+
+    #[test]
+    fn draws_follow_instance_bias() {
+        let mut s = BetaPerturbedBernoulli::new(0.5, 1.25, 9);
+        let inst = s.instance_p1();
+        let est = estimate_p1(&mut s, 30_000);
+        assert!((est - inst).abs() < 0.01, "{est} vs {inst}");
+    }
+
+    #[test]
+    fn resample_changes_instance() {
+        let mut s = BetaPerturbedBernoulli::new(0.5, 1.25, 3);
+        let a = s.instance_p1();
+        s.resample_instance();
+        let b = s.instance_p1();
+        assert!((a - b).abs() > 1e-6);
+    }
+}

@@ -1,0 +1,139 @@
+//! The bare cross-coupled-inverter (CCI) TRNG — the baseline of
+//! Fig. 4(c).
+//!
+//! Electrical picture: both CCI nodes are precharged, then released; the
+//! metastable pair resolves to a 0/1 decided by the *sum* of a static
+//! differential offset (threshold-voltage mismatch of the two inverters,
+//! fixed per fabricated instance) and per-cycle thermal noise:
+//!
+//!   bit = (dv_offset + sigma_noise * N(0,1)) > 0
+//!
+//! so the instance's probability of producing 1 is
+//! `p1 = Phi(dv_offset / sigma_noise)`. Without calibration most
+//! instances have |dv_offset| >> sigma_noise and produce a constant
+//! stream; across instances σ(p₁) ≈ 0.35 (paper Fig. 4(c)).
+
+use super::DropoutBitSource;
+use crate::util::Pcg32;
+
+/// Mismatch σ of the CCI offset in mV — the paper's 16 nm LSTP corner;
+/// chosen together with [`NOISE_SIGMA_MV`] so the *bare* CCI population
+/// reproduces σ(p₁) ≈ 0.35 across instances.
+pub const MISMATCH_SIGMA_MV: f64 = 9.0;
+/// Thermal-noise σ at the decision node in mV.
+pub const NOISE_SIGMA_MV: f64 = 6.0;
+
+/// One fabricated CCI instance.
+#[derive(Clone, Debug)]
+pub struct CciRng {
+    /// Static differential offset (mV); sampled once per instance from
+    /// the process-mismatch distribution.
+    dv_offset_mv: f64,
+    noise_sigma_mv: f64,
+    rng: Pcg32,
+}
+
+impl CciRng {
+    /// Sample a fresh instance from the process corner. `instance_seed`
+    /// plays the role of the die position.
+    pub fn sample_instance(instance_seed: u64) -> Self {
+        let mut process = Pcg32::new(instance_seed, 101);
+        CciRng {
+            dv_offset_mv: process.normal_ms(0.0, MISMATCH_SIGMA_MV),
+            noise_sigma_mv: NOISE_SIGMA_MV,
+            rng: Pcg32::new(instance_seed, 202),
+        }
+    }
+
+    /// Build with an explicit offset (used by the SRAM-embedded wrapper
+    /// after leakage loading and calibration).
+    pub fn with_offset(dv_offset_mv: f64, noise_sigma_mv: f64, seed: u64) -> Self {
+        CciRng { dv_offset_mv, noise_sigma_mv, rng: Pcg32::new(seed, 202) }
+    }
+
+    /// The instance's true p₁ = Phi(offset / noise).
+    pub fn analytic_p1(&self) -> f64 {
+        phi(self.dv_offset_mv / self.noise_sigma_mv)
+    }
+
+    pub fn offset_mv(&self) -> f64 {
+        self.dv_offset_mv
+    }
+}
+
+impl DropoutBitSource for CciRng {
+    fn next_bit(&mut self) -> bool {
+        let v = self.dv_offset_mv + self.rng.normal_ms(0.0, self.noise_sigma_mv);
+        v > 0.0
+    }
+
+    fn nominal_p1(&self) -> f64 {
+        self.analytic_p1()
+    }
+}
+
+/// Standard normal CDF (Abramowitz–Stegun 7.1.26 via erf).
+pub fn phi(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// erf with ~1.5e-7 absolute error.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t
+            - 0.284496736)
+            * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::estimate_p1;
+    use crate::util::stats::std_dev;
+
+    #[test]
+    fn erf_reference_points() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-6);
+        assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
+        assert!((phi(0.0) - 0.5).abs() < 1e-9);
+        assert!((phi(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn empirical_p1_tracks_analytic() {
+        for seed in 0..5u64 {
+            let mut c = CciRng::sample_instance(seed);
+            let want = c.analytic_p1();
+            let got = estimate_p1(&mut c, 20_000);
+            assert!((got - want).abs() < 0.02, "seed {seed}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn bare_cci_population_is_badly_biased() {
+        // Fig. 4(c) baseline: sigma(p1) ~ 0.35 over 100 instances of 500
+        // evaluations each
+        let p1s: Vec<f64> = (0..100)
+            .map(|i| {
+                let mut c = CciRng::sample_instance(i);
+                estimate_p1(&mut c, 500)
+            })
+            .collect();
+        let sd = std_dev(&p1s);
+        assert!(
+            (0.28..=0.45).contains(&sd),
+            "bare-CCI sigma(p1) = {sd:.3}, expected ~0.35"
+        );
+        // most instances are stuck near 0 or 1
+        let stuck = p1s.iter().filter(|&&p| !(0.2..=0.8).contains(&p)).count();
+        assert!(stuck > 50, "only {stuck}/100 instances are stuck");
+    }
+}

@@ -1,0 +1,47 @@
+//! §III-B — dropout-bit generation.
+//!
+//! * [`cci`] — the bare cross-coupled-inverter TRNG: lightest-weight
+//!   design but badly biased under transistor mismatch (σ(p₁) ≈ 0.35).
+//! * [`sram_cci`] — the paper's SRAM-embedded CCI: column leakage loads
+//!   both rails, averaging mismatch while magnifying thermal noise.
+//! * [`calibration`] — the coarse calibration loop that reassigns
+//!   columns between rails until the measured bias hits the target.
+//! * [`bernoulli`] — software dropout-bit sources: ideal Bernoulli and
+//!   the Beta(a, a)-perturbed source used for the non-ideality studies
+//!   (Fig. 12(c-d), Fig. 13(f)).
+//!
+//! All sources implement [`DropoutBitSource`], the interface the
+//! coordinator's mask scheduler consumes.
+
+pub mod bernoulli;
+pub mod calibration;
+pub mod cci;
+pub mod sram_cci;
+
+pub use bernoulli::{BetaPerturbedBernoulli, IdealBernoulli};
+pub use calibration::{calibrate, CalibrationOutcome};
+pub use cci::CciRng;
+pub use sram_cci::SramEmbeddedRng;
+
+/// A source of dropout bits. `true` means the bit fired "1"; the
+/// dropout convention (keep vs drop on 1) is applied by the mask layer.
+pub trait DropoutBitSource {
+    /// Draw one bit.
+    fn next_bit(&mut self) -> bool;
+
+    /// Draw a whole mask of `len` bits where `true` = neuron KEPT.
+    /// Default: keep when the raw bit is 1.
+    fn mask(&mut self, len: usize) -> Vec<bool> {
+        (0..len).map(|_| self.next_bit()).collect()
+    }
+
+    /// The source's nominal probability of producing 1.
+    fn nominal_p1(&self) -> f64;
+}
+
+/// Estimate a source's empirical p₁ from `n` draws (the calibration
+/// loop uses 500, matching the paper's per-instance evaluation count).
+pub fn estimate_p1<S: DropoutBitSource + ?Sized>(src: &mut S, n: usize) -> f64 {
+    let ones = (0..n).filter(|_| src.next_bit()).count();
+    ones as f64 / n as f64
+}

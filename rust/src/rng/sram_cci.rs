@@ -1,0 +1,238 @@
+//! SRAM-embedded CCI RNG (Fig. 4(a)) — the paper's dropout-bit source.
+//!
+//! During inference the write wordlines are off, so every write port on
+//! a column injects subthreshold leakage plus thermal noise into its
+//! bitline. Connecting K columns to each CCI rail:
+//!
+//! * the *mismatch* part of the leakage averages: the differential
+//!   offset between rails scales like σ_leak·sqrt(2K) while the decision
+//!   threshold scales with the total current ~ I0·K, so the *relative*
+//!   offset shrinks as 1/sqrt(K);
+//! * the *noise* parts are independent per port and add in power,
+//!   magnifying the stochastic component the TRNG wants.
+//!
+//! Both bitlines (BL and BLB) of a column connect to the same rail so
+//! stored data cancels. Coarse calibration (see `calibration`) moves
+//! columns between rails — each move shifts the differential leakage by
+//! one column's worth — until the measured bias sits within tolerance of
+//! the target. Residual spread across instances: σ(p₁) ≈ 0.058
+//! (Fig. 4(c)), tunable to p₁ ∈ {0.3, 0.5, 0.7} (Fig. 4(d)).
+
+use super::cci::phi;
+use super::DropoutBitSource;
+use crate::util::Pcg32;
+
+/// Nominal per-column leakage in nA.
+pub const I_LEAK_NOM_NA: f64 = 1.0;
+/// Per-column leakage mismatch σ (nA) — V_TH mismatch induced.
+pub const I_LEAK_SIGMA_NA: f64 = 0.18;
+/// Per-column integrated noise contribution σ (nA-equivalent).
+pub const I_NOISE_SIGMA_NA: f64 = 0.35;
+/// CCI's own residual offset after embedding (nA-equivalent).
+pub const CCI_RESIDUAL_SIGMA_NA: f64 = 0.10;
+/// Quantization step of the digital threshold-trim DAC (nA). The trim
+/// is *coarse* — this is what leaves the residual σ(p₁) ≈ 0.058 of
+/// Fig. 4(c) instead of calibrating perfectly.
+pub const TRIM_STEP_NA: f64 = 0.5;
+
+/// One SRAM-embedded CCI instance with its column pool.
+#[derive(Clone, Debug)]
+pub struct SramEmbeddedRng {
+    /// Per-column static leakage (nA), fixed at "fabrication".
+    col_leak_na: Vec<f64>,
+    /// Column assignment: true = left rail, false = right rail.
+    assign_left: Vec<bool>,
+    /// Residual CCI offset (nA-equivalent).
+    residual_na: f64,
+    /// Deliberate threshold shift used to hit non-0.5 targets (nA).
+    threshold_na: f64,
+    rng: Pcg32,
+}
+
+impl SramEmbeddedRng {
+    /// Sample a fabricated instance with `n_cols` columns split evenly.
+    pub fn sample_instance(n_cols: usize, instance_seed: u64) -> Self {
+        assert!(n_cols >= 2 && n_cols % 2 == 0, "need an even column pool");
+        let mut process = Pcg32::new(instance_seed, 303);
+        let col_leak_na: Vec<f64> = (0..n_cols)
+            .map(|_| process.normal_ms(I_LEAK_NOM_NA, I_LEAK_SIGMA_NA))
+            .collect();
+        let assign_left: Vec<bool> =
+            (0..n_cols).map(|c| c < n_cols / 2).collect();
+        SramEmbeddedRng {
+            col_leak_na,
+            assign_left,
+            residual_na: process.normal_ms(0.0, CCI_RESIDUAL_SIGMA_NA),
+            threshold_na: 0.0,
+            rng: Pcg32::new(instance_seed, 404),
+        }
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.col_leak_na.len()
+    }
+
+    /// Static differential drive (left − right leakage + residual −
+    /// threshold), in nA.
+    pub fn static_offset_na(&self) -> f64 {
+        let mut diff = self.residual_na - self.threshold_na;
+        for (l, a) in self.col_leak_na.iter().zip(&self.assign_left) {
+            if *a {
+                diff += l;
+            } else {
+                diff -= l;
+            }
+        }
+        diff
+    }
+
+    /// Total integrated noise σ: per-column noise adds in power over the
+    /// whole pool (both rails contribute to the differential).
+    pub fn noise_sigma_na(&self) -> f64 {
+        I_NOISE_SIGMA_NA * (self.n_cols() as f64).sqrt()
+    }
+
+    /// Analytic p₁ = Phi(offset / noise).
+    pub fn analytic_p1(&self) -> f64 {
+        phi(self.static_offset_na() / self.noise_sigma_na())
+    }
+
+    /// Swap column `c` to the other rail (one calibration move).
+    pub fn flip_column(&mut self, c: usize) {
+        self.assign_left[c] = !self.assign_left[c];
+    }
+
+    /// Set the deliberate threshold shift (nA) used for non-0.5
+    /// targets. The trim DAC is coarse: the requested value snaps to
+    /// the nearest [`TRIM_STEP_NA`] grid point.
+    pub fn set_threshold_na(&mut self, t: f64) {
+        self.threshold_na = (t / TRIM_STEP_NA).round() * TRIM_STEP_NA;
+    }
+
+    pub fn threshold_na(&self) -> f64 {
+        self.threshold_na
+    }
+
+    /// Threshold shift that would ideally realize target p₁ given the
+    /// current assignment: offset - Phi^-1(target)*noise.
+    pub fn ideal_threshold_for(&self, target_p1: f64) -> f64 {
+        let z = probit(target_p1);
+        self.static_offset_na() + self.threshold_na - z * self.noise_sigma_na()
+    }
+}
+
+impl DropoutBitSource for SramEmbeddedRng {
+    fn next_bit(&mut self) -> bool {
+        let v = self.static_offset_na()
+            + self.rng.normal_ms(0.0, self.noise_sigma_na());
+        v > 0.0
+    }
+
+    fn nominal_p1(&self) -> f64 {
+        self.analytic_p1()
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |rel err| < 1.15e-9 on (0, 1)).
+pub fn probit(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "probit domain");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        -probit(1.0 - p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::estimate_p1;
+
+    #[test]
+    fn probit_inverts_phi() {
+        for &p in &[0.01, 0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let z = probit(p);
+            assert!((phi(z) - p).abs() < 1e-6, "p={p}");
+        }
+    }
+
+    #[test]
+    fn uncalibrated_embedded_is_less_extreme_than_bare_cci() {
+        // even before calibration, leakage averaging keeps the relative
+        // offset moderate compared to a bare CCI
+        let extremes = (0..100)
+            .filter(|&i| {
+                let r = SramEmbeddedRng::sample_instance(16, i);
+                !(0.05..=0.95).contains(&r.analytic_p1())
+            })
+            .count();
+        assert!(extremes < 70, "{extremes}/100 extreme instances");
+    }
+
+    #[test]
+    fn empirical_matches_analytic() {
+        for seed in 0..4u64 {
+            let mut r = SramEmbeddedRng::sample_instance(16, seed);
+            let want = r.analytic_p1();
+            let got = estimate_p1(&mut r, 20_000);
+            assert!((got - want).abs() < 0.02, "seed {seed}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn flipping_a_column_moves_the_offset_by_twice_its_leakage() {
+        let mut r = SramEmbeddedRng::sample_instance(8, 5);
+        let before = r.static_offset_na();
+        let leak = r.col_leak_na[3];
+        let was_left = r.assign_left[3];
+        r.flip_column(3);
+        let delta = r.static_offset_na() - before;
+        let want = if was_left { -2.0 * leak } else { 2.0 * leak };
+        assert!((delta - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_columns_mean_more_noise_power() {
+        let small = SramEmbeddedRng::sample_instance(8, 1);
+        let large = SramEmbeddedRng::sample_instance(32, 1);
+        assert!(large.noise_sigma_na() > 1.9 * small.noise_sigma_na());
+    }
+}

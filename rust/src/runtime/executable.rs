@@ -1,0 +1,137 @@
+//! Thin, typed wrapper over the `xla` crate (PJRT C API).
+//!
+//! One [`Runtime`] owns a PJRT CPU client; [`Executable`]s are compiled
+//! from HLO text files and execute on host-tensor inputs. The wrapper
+//! keeps the unsafe-ish surface of the raw crate in one module and
+//! presents plain `Vec<f32>` + shape interfaces to the coordinator.
+//!
+//! Thread-model: PJRT objects are not `Send` in this crate version, so
+//! the coordinator constructs one `Runtime` per worker thread (see
+//! `coordinator::server`).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A host-side tensor: f32 payload + shape (row-major).
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "shape/payload mismatch");
+        HostTensor { data, shape }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        let n = data.len();
+        HostTensor::new(data, vec![n])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.shape.len() == 1 {
+            return Ok(lit);
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        lit.reshape(&dims).context("reshaping input literal")
+    }
+
+    /// Pre-convert to a device literal once (hot-path optimization:
+    /// engines cache their weight tensors this way so a request only
+    /// converts its input + mask rows — see EXPERIMENTS.md §Perf).
+    pub fn prepare(&self) -> Result<DeviceTensor> {
+        Ok(DeviceTensor(self.to_literal()?))
+    }
+}
+
+/// A host tensor already converted to the XLA literal representation.
+pub struct DeviceTensor(xla::Literal);
+
+/// The PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe, name: path.display().to_string() })
+    }
+}
+
+/// A compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute on host tensors; returns the first output of the result
+    /// tuple. The AOT path lowers with `return_tuple=True`, so outputs
+    /// arrive as a 1-tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = literals.iter().collect();
+        self.run_refs(&refs)
+    }
+
+    /// Execute on a mix of freshly-converted and cached tensors: the
+    /// caller converts its dynamic inputs with [`HostTensor::prepare`]
+    /// (or lets [`Executable::run`] do it) and appends cached
+    /// [`DeviceTensor`]s without re-copying them.
+    pub fn run_mixed(&self, dynamic: &[HostTensor], cached: &[DeviceTensor]) -> Result<Vec<f32>> {
+        let fresh: Vec<xla::Literal> = dynamic
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut refs: Vec<&xla::Literal> = fresh.iter().collect();
+        refs.extend(cached.iter().map(|d| &d.0));
+        self.run_refs(&refs)
+    }
+
+    fn run_refs(&self, args: &[&xla::Literal]) -> Result<Vec<f32>> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<f32>().context("reading f32 output")
+    }
+}
+
+// No unit tests here: constructing a PJRT client in every `cargo test`
+// shard is expensive and the smoke coverage lives in
+// rust/tests/integration.rs (compiled against real artifacts).

@@ -1,0 +1,12 @@
+//! PJRT runtime — loads the AOT-compiled HLO-text artifacts and runs
+//! them on the CPU client from the request path (python never runs at
+//! serve time).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md and
+//! DESIGN.md §7).
+
+pub mod executable;
+
+pub use executable::{DeviceTensor, Executable, HostTensor, Runtime};

@@ -1,0 +1,11 @@
+//! Dependency-free utilities: PRNG, statistics, minimal JSON, and
+//! randomized-test generators (the image ships no `rand`, `serde`, or
+//! `proptest`, so these are first-class substrates of the repo).
+
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod testkit;
+
+pub use prng::Pcg32;
+pub use stats::{entropy_nats, mean, pearson, std_dev, variance};

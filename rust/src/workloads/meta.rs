@@ -1,0 +1,101 @@
+//! `artifacts/meta.json` — the contract between the python compile path
+//! and the rust coordinator (network dims, MC batch, dropout p, pose
+//! normalization, build-time training metrics).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// Parsed artifact metadata.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub mc_batch: usize,
+    pub dropout_p: f64,
+    /// Bernoulli keep-probability of the classifier masks (paper: 0.5).
+    pub mnist_mask_keep: f64,
+    /// Keep-probability of the VO regression head (PoseNet-style 0.8;
+    /// see python/compile/train.py for the rationale).
+    pub vo_mask_keep: f64,
+    pub mnist_dims: Vec<usize>,
+    pub vo_dims: Vec<usize>,
+    pub vo_thin_dims: Vec<usize>,
+    pub mnist_acc_det: f64,
+    pub mnist_acc_mc: f64,
+    pub vo_err: f64,
+    pub vo_thin_err: f64,
+    pub pose_mean: Vec<f64>,
+    pub pose_scale: Vec<f64>,
+}
+
+impl Meta {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let path = artifacts_dir.as_ref().join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let dims = |k: &str| -> Result<Vec<usize>> {
+            Ok(j.req_f64s(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .iter()
+                .map(|&v| v as usize)
+                .collect())
+        };
+        let dropout_p = j.req_f64("dropout_p").map_err(|e| anyhow!("{e}"))?;
+        let opt = |k: &str, dflt: f64| j.req_f64(k).unwrap_or(dflt);
+        Ok(Meta {
+            mc_batch: j.req_f64("mc_batch").map_err(|e| anyhow!("{e}"))? as usize,
+            dropout_p,
+            mnist_mask_keep: opt("mnist_mask_keep", 1.0 - dropout_p),
+            vo_mask_keep: opt("vo_mask_keep", 1.0 - dropout_p),
+            mnist_dims: dims("mnist_dims")?,
+            vo_dims: dims("vo_dims")?,
+            vo_thin_dims: dims("vo_thin_dims")?,
+            mnist_acc_det: j.req_f64("mnist_acc_det").map_err(|e| anyhow!("{e}"))?,
+            mnist_acc_mc: j.req_f64("mnist_acc_mc").map_err(|e| anyhow!("{e}"))?,
+            vo_err: j.req_f64("vo_err").map_err(|e| anyhow!("{e}"))?,
+            vo_thin_err: j.req_f64("vo_thin_err").map_err(|e| anyhow!("{e}"))?,
+            pose_mean: j.req_f64s("pose_mean").map_err(|e| anyhow!("{e}"))?,
+            pose_scale: j.req_f64s("pose_scale").map_err(|e| anyhow!("{e}"))?,
+        })
+    }
+
+    /// Hidden-layer sizes (the mask widths) for a dims vector.
+    pub fn mask_dims(dims: &[usize]) -> Vec<usize> {
+        dims[1..dims.len() - 1].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "mc_batch": 30, "dropout_p": 0.5,
+        "mnist_dims": [784, 256, 128, 10],
+        "vo_dims": [256, 256, 128, 6],
+        "vo_thin_dims": [256, 128, 64, 6],
+        "mnist_acc_det": 0.76, "mnist_acc_mc": 0.92,
+        "vo_err": 1.0, "vo_thin_err": 1.05,
+        "pose_mean": [2, 2, 1.5, 0, 0, 0],
+        "pose_scale": [1.5, 1.5, 0.5, 0.7, 0.3, 0.2],
+        "weight_clip": 1.0
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Meta::parse(SAMPLE).unwrap();
+        assert_eq!(m.mc_batch, 30);
+        assert_eq!(m.mnist_dims, vec![784, 256, 128, 10]);
+        assert_eq!(Meta::mask_dims(&m.mnist_dims), vec![256, 128]);
+        assert_eq!(m.pose_scale.len(), 6);
+    }
+
+    #[test]
+    fn missing_field_is_an_error() {
+        assert!(Meta::parse("{}").is_err());
+    }
+}

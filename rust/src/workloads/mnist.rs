@@ -1,0 +1,65 @@
+//! The character-recognition workload (§VI-A): test-set loader and the
+//! rotated-digit-3 protocol of Fig. 12.
+
+use super::tensorfile::TensorFile;
+use anyhow::Result;
+use std::path::Path;
+
+/// The synthetic-digit test set (x in [-1, 1], labels 0..9).
+#[derive(Debug)]
+pub struct MnistTest {
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<i32>,
+}
+
+impl MnistTest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(artifacts_dir.as_ref().join("mnist_test.bin"))?;
+        let x = tf.get("x")?;
+        let y = tf.get("y")?;
+        let (n, d) = (x.shape[0], x.shape[1]);
+        let xs = x.f32s()?;
+        let images = (0..n).map(|i| xs[i * d..(i + 1) * d].to_vec()).collect();
+        Ok(MnistTest { images, labels: y.i32s()?.to_vec() })
+    }
+
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// The twelve rotations of digit '3' (Fig. 12): images + angles.
+#[derive(Debug)]
+pub struct RotatedThree {
+    pub images: Vec<Vec<f32>>,
+    pub angles_deg: Vec<f32>,
+}
+
+impl RotatedThree {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(artifacts_dir.as_ref().join("mnist_rot3.bin"))?;
+        let x = tf.get("x")?;
+        let a = tf.get("angles")?;
+        let (n, d) = (x.shape[0], x.shape[1]);
+        let xs = x.f32s()?;
+        let images = (0..n).map(|i| xs[i * d..(i + 1) * d].to_vec()).collect();
+        Ok(RotatedThree { images, angles_deg: a.f32s()?.to_vec() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Loader behaviour on real artifacts is covered by the integration
+    // tests (they require `make artifacts`); here we check error paths.
+    #[test]
+    fn missing_dir_is_a_clean_error() {
+        assert!(MnistTest::load("/nonexistent-dir").is_err());
+        assert!(RotatedThree::load("/nonexistent-dir").is_err());
+    }
+}

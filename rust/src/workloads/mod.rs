@@ -1,0 +1,23 @@
+//! Artifact loaders and application workloads (§VI).
+//!
+//! * [`tensorfile`] — reader for the MCT1 container written by
+//!   `python/compile/io_utils.py` (weights, test sets).
+//! * [`meta`] — `artifacts/meta.json` (network dims, dropout p, pose
+//!   normalization, training metrics).
+//! * [`image`] — bilinear rotation mirroring `data.rotate_bilinear`
+//!   for the Fig. 12 disorientation protocol on the serving path.
+//! * [`mnist`] — the character-recognition workload.
+//! * [`vo`] — the visual-odometry workload: front-end embedding, pose
+//!   de-normalization, trajectory error metrics.
+
+pub mod image;
+pub mod meta;
+pub mod mnist;
+pub mod tensorfile;
+pub mod vo;
+
+pub use meta::Meta;
+pub use tensorfile::{Tensor, TensorFile};
+
+/// Default artifacts directory (overridable via --artifacts).
+pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -1,0 +1,182 @@
+//! MCT1 tensor-container reader (counterpart of
+//! `python/compile/io_utils.py`; the format is documented there and the
+//! cross-language round-trip is covered by `rust/tests/pipeline.rs`).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A loaded tensor: f32 or i32 payload plus shape.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(if self.shape.is_empty() { 1 } else { 0 })
+    }
+
+    /// f32 payload or error.
+    pub fn f32s(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => bail!("tensor is i32, expected f32"),
+        }
+    }
+
+    /// i32 payload or error.
+    pub fn i32s(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => bail!("tensor is f32, expected i32"),
+        }
+    }
+}
+
+/// A parsed MCT1 file: ordered name -> tensor map.
+#[derive(Debug, Default)]
+pub struct TensorFile {
+    tensors: BTreeMap<String, Tensor>,
+    order: Vec<String>,
+}
+
+impl TensorFile {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading tensor file {}", path.display()))?;
+        Self::parse(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<Self> {
+        let mut off = 0usize;
+        let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+            if *off + n > bytes.len() {
+                bail!("truncated tensor file at byte {}", *off);
+            }
+            let s = &bytes[*off..*off + n];
+            *off += n;
+            Ok(s)
+        };
+        if take(&mut off, 4)? != b"MCT1" {
+            bail!("bad magic (want MCT1)");
+        }
+        let count =
+            u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize;
+        let mut tf = TensorFile::default();
+        for _ in 0..count {
+            let name_len =
+                u16::from_le_bytes(take(&mut off, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut off, name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let dtype = take(&mut off, 1)?[0];
+            let ndim = take(&mut off, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(
+                    u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap()) as usize,
+                );
+            }
+            let n: usize = if ndim == 0 { 1 } else { shape.iter().product() };
+            let raw = take(&mut off, n * 4)?;
+            let data = match dtype {
+                0 => TensorData::F32(
+                    raw.chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                1 => TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                t => bail!("unknown dtype tag {t}"),
+            };
+            tf.order.push(name.clone());
+            tf.tensors.insert(name, Tensor { shape, data });
+        }
+        if off != bytes.len() {
+            bail!("{} trailing bytes", bytes.len() - off);
+        }
+        Ok(tf)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in file (have: {:?})", self.order))
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-assembled container matching the python writer byte-for-byte.
+    fn sample_bytes() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MCT1");
+        b.extend_from_slice(&2u32.to_le_bytes());
+        // "a": f32 [2,2]
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.extend_from_slice(b"a");
+        b.push(0); // f32
+        b.push(2); // ndim
+        b.extend_from_slice(&2u32.to_le_bytes());
+        b.extend_from_slice(&2u32.to_le_bytes());
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        // "y": i32 [3]
+        b.extend_from_slice(&1u16.to_le_bytes());
+        b.extend_from_slice(b"y");
+        b.push(1); // i32
+        b.push(1);
+        b.extend_from_slice(&3u32.to_le_bytes());
+        for v in [7i32, 8, 9] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parses_reference_layout() {
+        let tf = TensorFile::parse(&sample_bytes()).unwrap();
+        assert_eq!(tf.names(), &["a", "y"]);
+        let a = tf.get("a").unwrap();
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(a.f32s().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        let y = tf.get("y").unwrap();
+        assert_eq!(y.i32s().unwrap(), &[7, 8, 9]);
+        assert!(a.i32s().is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(TensorFile::parse(b"NOPE").is_err());
+        let mut b = sample_bytes();
+        b.truncate(b.len() - 2);
+        assert!(TensorFile::parse(&b).is_err());
+        b.extend_from_slice(&[0u8; 64]);
+        assert!(TensorFile::parse(&b).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_names_available() {
+        let tf = TensorFile::parse(&sample_bytes()).unwrap();
+        let err = format!("{:#}", tf.get("zzz").unwrap_err());
+        assert!(err.contains("zzz") && err.contains("a"));
+    }
+}

@@ -1,0 +1,176 @@
+//! The visual-odometry workload (§VI-B): scene-4 test trajectory,
+//! front-end embedding for arbitrary poses, pose de-normalization, and
+//! the trajectory error metrics of Fig. 13.
+
+use super::meta::Meta;
+use super::tensorfile::TensorFile;
+use anyhow::Result;
+use std::path::Path;
+
+/// The scene-4 test sequence: front-end features + normalized poses.
+#[derive(Debug)]
+pub struct VoTest {
+    pub features: Vec<Vec<f32>>,
+    /// Normalized 6-DoF poses (x, y, z, yaw, pitch, roll).
+    pub poses: Vec<Vec<f32>>,
+}
+
+impl VoTest {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(artifacts_dir.as_ref().join("vo_test.bin"))?;
+        let x = tf.get("x")?;
+        let p = tf.get("pose")?;
+        let (n, d) = (x.shape[0], x.shape[1]);
+        let (pn, pd) = (p.shape[0], p.shape[1]);
+        anyhow::ensure!(n == pn, "feature/pose count mismatch");
+        let xs = x.f32s()?;
+        let ps = p.f32s()?;
+        Ok(VoTest {
+            features: (0..n).map(|i| xs[i * d..(i + 1) * d].to_vec()).collect(),
+            poses: (0..pn).map(|i| ps[i * pd..(i + 1) * pd].to_vec()).collect(),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+}
+
+/// The visual front-end (random-Fourier pose embedding; see DESIGN.md
+/// §3): phi(pose) = cos(pose @ omega + phi0). Weights ship in
+/// `vo_frontend.bin` so serving can embed arbitrary poses.
+#[derive(Debug)]
+pub struct Frontend {
+    /// [6, F] row-major.
+    omega: Vec<f32>,
+    phi0: Vec<f32>,
+    feat: usize,
+}
+
+impl Frontend {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let tf = TensorFile::load(artifacts_dir.as_ref().join("vo_frontend.bin"))?;
+        let o = tf.get("omega")?;
+        let p = tf.get("phi0")?;
+        anyhow::ensure!(o.shape.len() == 2 && o.shape[0] == 6, "omega must be [6, F]");
+        Ok(Frontend {
+            omega: o.f32s()?.to_vec(),
+            phi0: p.f32s()?.to_vec(),
+            feat: o.shape[1],
+        })
+    }
+
+    pub fn features(&self) -> usize {
+        self.feat
+    }
+
+    /// Embed one normalized pose (optionally with measurement noise
+    /// supplied by the caller for determinism).
+    pub fn embed(&self, pose_norm: &[f32], noise: Option<&[f32]>) -> Vec<f32> {
+        assert_eq!(pose_norm.len(), 6);
+        let mut out = vec![0.0f32; self.feat];
+        for (j, o) in out.iter_mut().enumerate() {
+            let mut acc = self.phi0[j];
+            for (d, &p) in pose_norm.iter().enumerate() {
+                acc += p * self.omega[d * self.feat + j];
+            }
+            *o = acc.cos();
+            if let Some(nz) = noise {
+                *o += nz[j];
+            }
+        }
+        out
+    }
+}
+
+/// Pose (de)normalization helpers bound to meta.json.
+pub struct PoseNorm<'a> {
+    meta: &'a Meta,
+}
+
+impl<'a> PoseNorm<'a> {
+    pub fn new(meta: &'a Meta) -> Self {
+        PoseNorm { meta }
+    }
+
+    /// Normalized -> metric pose.
+    pub fn denormalize(&self, pose_norm: &[f32]) -> Vec<f64> {
+        pose_norm
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| v as f64 * self.meta.pose_scale[i] + self.meta.pose_mean[i])
+            .collect()
+    }
+
+    /// Metric position error (metres) between normalized poses.
+    pub fn position_error_m(&self, a: &[f32], b: &[f32]) -> f64 {
+        let mut s = 0.0f64;
+        for i in 0..3 {
+            let d = (a[i] as f64 - b[i] as f64) * self.meta.pose_scale[i];
+            s += d * d;
+        }
+        s.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> Meta {
+        Meta {
+            mc_batch: 30,
+            dropout_p: 0.5,
+            mnist_mask_keep: 0.5,
+            vo_mask_keep: 0.8,
+            mnist_dims: vec![784, 256, 128, 10],
+            vo_dims: vec![256, 256, 128, 6],
+            vo_thin_dims: vec![256, 128, 64, 6],
+            mnist_acc_det: 0.0,
+            mnist_acc_mc: 0.0,
+            vo_err: 0.0,
+            vo_thin_err: 0.0,
+            pose_mean: vec![2.0, 2.0, 1.5, 0.0, 0.0, 0.0],
+            pose_scale: vec![1.5, 1.5, 0.5, 0.7, 0.3, 0.2],
+        }
+    }
+
+    #[test]
+    fn denormalize_applies_mean_scale() {
+        let m = meta();
+        let pn = PoseNorm::new(&m);
+        let metric = pn.denormalize(&[1.0, 0.0, -1.0, 0.0, 0.0, 0.0]);
+        assert!((metric[0] - 3.5).abs() < 1e-9);
+        assert!((metric[1] - 2.0).abs() < 1e-9);
+        assert!((metric[2] - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn position_error_is_metric() {
+        let m = meta();
+        let pn = PoseNorm::new(&m);
+        let e = pn.position_error_m(
+            &[1.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            &[0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        );
+        assert!((e - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn frontend_embedding_is_bounded_and_pose_sensitive() {
+        // hand-built tiny frontend
+        let fe = Frontend {
+            omega: vec![1.0; 6 * 4],
+            phi0: vec![0.0; 4],
+            feat: 4,
+        };
+        let a = fe.embed(&[0.0; 6], None);
+        let b = fe.embed(&[0.5, 0.0, 0.0, 0.0, 0.0, 0.0], None);
+        assert!(a.iter().all(|v| v.abs() <= 1.0));
+        assert!(a.iter().zip(&b).any(|(x, y)| (x - y).abs() > 1e-3));
+    }
+}

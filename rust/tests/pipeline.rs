@@ -1,0 +1,201 @@
+//! Cross-layer pipeline tests: substrate-level agreement between the
+//! rust simulators and the python compile path's artifacts, plus
+//! macro-vs-operator consistency on real weight slices.
+
+use mc_cim::cim::macro_sim::CimMacro;
+use mc_cim::operator::mf::mf_dot_quant;
+use mc_cim::operator::quant::{QuantTensor, Quantizer};
+use mc_cim::workloads::image::rotate_pm1;
+use mc_cim::workloads::mnist::RotatedThree;
+use mc_cim::workloads::{Meta, TensorFile};
+
+const DIR: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(DIR).join("meta.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+#[test]
+fn rust_rotation_agrees_with_python_protocol() {
+    // artifacts/mnist_rot3.bin contains python-rotated images of the
+    // same base digit; rotating image 0 by the recorded angles in rust
+    // must land close to the python result (bilinear kernels match).
+    require_artifacts!();
+    let rot = RotatedThree::load(DIR).unwrap();
+    let base = &rot.images[0]; // angle 0 = the unrotated original
+    for k in 1..rot.images.len() {
+        let ours = rotate_pm1(base, 28, rot.angles_deg[k]);
+        let theirs = &rot.images[k];
+        let mae: f32 = ours
+            .iter()
+            .zip(theirs)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / ours.len() as f32;
+        // borders differ slightly (clamp vs zero fill); mean abs error
+        // across the image must stay small
+        assert!(
+            mae < 0.06,
+            "angle {}: rust-vs-python rotation MAE {mae}",
+            rot.angles_deg[k]
+        );
+    }
+}
+
+#[test]
+fn weight_artifacts_have_declared_geometry() {
+    require_artifacts!();
+    let meta = Meta::load(DIR).unwrap();
+    let tf = TensorFile::load(format!("{DIR}/mnist_weights.bin")).unwrap();
+    let dims = &meta.mnist_dims;
+    for i in 0..dims.len() - 1 {
+        let w = tf.get(&format!("w{}", i + 1)).unwrap();
+        assert_eq!(w.shape, vec![dims[i], dims[i + 1]]);
+        let b = tf.get(&format!("b{}", i + 1)).unwrap();
+        assert_eq!(b.shape, vec![dims[i + 1]]);
+        let s = tf.get(&format!("s{}", i + 1)).unwrap();
+        assert_eq!(s.shape, vec![dims[i + 1]]);
+        // trained weights respect the clip range used for quant grids
+        assert!(w.f32s().unwrap().iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+}
+
+#[test]
+fn macro_simulation_matches_operator_on_real_weights() {
+    // Run the bit-exact 16x31 macro on a slice of the *trained* MNIST
+    // first-layer weights and check it reconstructs the quantized MF
+    // product-sum the HLO path approximates in float.
+    require_artifacts!();
+    let tf = TensorFile::load(format!("{DIR}/mnist_weights.bin")).unwrap();
+    let w1 = tf.get("w1").unwrap();
+    let (fi, fo) = (w1.shape[0], w1.shape[1]);
+    let ws = w1.f32s().unwrap();
+
+    let q = Quantizer::new(6);
+    // first 31 inputs x first 16 outputs tile
+    let rows: Vec<QuantTensor> = (0..16)
+        .map(|r| {
+            let col: Vec<f32> = (0..31).map(|c| ws[c * fo + r]).collect();
+            q.quantize(&col)
+        })
+        .collect();
+    let _ = fi;
+    let x: Vec<f32> = (0..31).map(|i| ((i as f32) / 15.5) - 1.0).collect();
+    let xq = q.quantize(&x);
+
+    let mut mac = CimMacro::paper_default();
+    let col_active = vec![true; 31];
+    let row_active = vec![true; 16];
+    let (out, stats) = mac.correlate(&xq, &rows, &col_active, &row_active);
+    for (r, w) in rows.iter().enumerate() {
+        let want = mf_dot_quant(&xq, w);
+        assert!(
+            (out[r] - want).abs() < 1e-3,
+            "row {r}: macro {} vs operator {want}",
+            out[r]
+        );
+    }
+    // 16 rows x 2(6-1) planes
+    assert_eq!(stats.compute_cycles, 160);
+    assert!(stats.mean_adc_cycles() > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// failure injection: corrupted / mismatched artifacts must fail cleanly
+// ---------------------------------------------------------------------
+
+#[test]
+fn truncated_weight_file_is_rejected() {
+    require_artifacts!();
+    let bytes = std::fs::read(format!("{DIR}/mnist_weights.bin")).unwrap();
+    let dir = std::env::temp_dir().join("mccim_trunc_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("w.bin");
+    std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let err = TensorFile::load(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+}
+
+#[test]
+fn corrupted_magic_is_rejected() {
+    let dir = std::env::temp_dir().join("mccim_magic_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("bad.bin");
+    std::fs::write(&path, b"XXXXgarbage").unwrap();
+    assert!(TensorFile::load(&path).is_err());
+}
+
+#[test]
+fn engine_rejects_wrong_input_width() {
+    require_artifacts!();
+    use mc_cim::coordinator::{EngineConfig, McDropoutEngine, NetKind};
+    use mc_cim::rng::IdealBernoulli;
+    use mc_cim::runtime::Runtime;
+    let rt = Runtime::cpu().unwrap();
+    let meta = Meta::load(DIR).unwrap();
+    let eng =
+        McDropoutEngine::load(&rt, DIR, &meta, &EngineConfig::new(NetKind::Mnist)).unwrap();
+    let mut src = IdealBernoulli::new(0.5, 1);
+    // 100-wide input into a 784-wide network must be a clean error
+    let bad = vec![0.0f32; 100];
+    assert!(eng.infer_mc(&bad, 5, &mut src).is_err());
+}
+
+#[test]
+fn coordinator_error_responses_do_not_poison_the_pool() {
+    require_artifacts!();
+    use mc_cim::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+    use mc_cim::workloads::mnist::MnistTest;
+    let test = MnistTest::load(DIR).unwrap();
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        microbatch: false,
+        ..Default::default()
+    })
+    .unwrap();
+    // bad request (wrong width) followed by a good one
+    let bad = coord.submit(Request::Classify { image: vec![0.0; 3], samples: 5 });
+    let good = coord.submit(Request::Classify {
+        image: test.images[0].clone(),
+        samples: 5,
+    });
+    assert!(matches!(bad.recv().unwrap(), Response::Error(_)));
+    assert!(matches!(good.recv().unwrap(), Response::Class(_)),
+            "pool must keep serving after an error");
+    assert_eq!(coord.metrics.errors(), 1);
+    coord.shutdown();
+}
+
+#[test]
+fn vo_frontend_artifact_reproduces_test_features() {
+    // embed the recorded test poses with the shipped frontend weights
+    // and compare to the recorded features (they differ only by the
+    // python-side measurement noise).
+    require_artifacts!();
+    use mc_cim::workloads::vo::{Frontend, VoTest};
+    let fe = Frontend::load(DIR).unwrap();
+    let vo = VoTest::load(DIR).unwrap();
+    let mut worst: f32 = 0.0;
+    for i in (0..vo.len()).step_by(97) {
+        let clean = fe.embed(&vo.poses[i], None);
+        let noisy = &vo.features[i];
+        let mae: f32 = clean
+            .iter()
+            .zip(noisy)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / clean.len() as f32;
+        worst = worst.max(mae);
+    }
+    // python adds N(0, 0.05) noise; MAE ~ 0.04, far below signal scale
+    assert!(worst < 0.12, "frontend mismatch: worst MAE {worst}");
+}
