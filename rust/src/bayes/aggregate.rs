@@ -35,41 +35,101 @@ impl ClassEnsemble {
         self.votes.len()
     }
 
+    /// True when no MC iterations have been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.votes.is_empty()
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.n_classes
+    }
+
     pub fn votes(&self) -> &[usize] {
         &self.votes
     }
 
-    /// Class occupancy p_i = votes_i / T (the p of Fig. 12(b)).
-    pub fn class_probs(&self) -> Vec<f64> {
-        let mut p = vec![0.0f64; self.n_classes];
+    /// Raw per-class vote counts (sums to `iterations()`).
+    pub fn vote_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_classes];
         for &v in &self.votes {
-            p[v] += 1.0;
+            c[v] += 1;
         }
-        let t = self.votes.len().max(1) as f64;
-        p.iter_mut().for_each(|x| *x /= t);
-        p
+        c
     }
 
-    /// Majority-vote prediction.
+    /// Class occupancy p_i = votes_i / T (the p of Fig. 12(b)).
+    ///
+    /// # Panics
+    /// On an empty ensemble: there is no distribution over zero votes,
+    /// and the old silent all-zeros answer made downstream consumers
+    /// (`prediction()` -> class 0, `confidence()` -> 0.0, `entropy()`
+    /// -> 0.0 "fully confident") quietly wrong. Use [`Self::is_empty`]
+    /// or the `try_*` accessors when zero iterations are possible.
+    pub fn class_probs(&self) -> Vec<f64> {
+        assert!(
+            !self.votes.is_empty(),
+            "ClassEnsemble::class_probs on an empty ensemble (no MC iterations recorded)"
+        );
+        let t = self.votes.len() as f64;
+        self.vote_counts().iter().map(|&c| c as f64 / t).collect()
+    }
+
+    /// Majority-vote prediction. Exact ties break toward the lowest
+    /// class index (deterministic across platforms).
+    ///
+    /// # Panics
+    /// On an empty ensemble (see [`Self::class_probs`]); use
+    /// [`Self::try_prediction`] when zero iterations are possible.
     pub fn prediction(&self) -> usize {
-        let p = self.class_probs();
-        p.iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .map(|(i, _)| i)
-            .unwrap_or(0)
+        let counts = self.vote_counts();
+        assert!(
+            !self.votes.is_empty(),
+            "ClassEnsemble::prediction on an empty ensemble (no MC iterations recorded)"
+        );
+        let mut best = 0usize;
+        for (i, &c) in counts.iter().enumerate() {
+            if c > counts[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Non-panicking [`Self::prediction`]: `None` on an empty ensemble.
+    pub fn try_prediction(&self) -> Option<usize> {
+        if self.votes.is_empty() {
+            None
+        } else {
+            Some(self.prediction())
+        }
     }
 
     /// Normalized predictive entropy in [0, 1]: 0 = fully confident,
     /// 1 = votes uniformly dispersed (Fig. 12(b)'s y-axis).
+    ///
+    /// # Panics
+    /// On an empty ensemble (see [`Self::class_probs`]).
     pub fn entropy(&self) -> f64 {
         stats::entropy_normalized(&self.class_probs())
     }
 
     /// Confidence = occupancy of the winning class.
+    ///
+    /// # Panics
+    /// On an empty ensemble (see [`Self::class_probs`]); use
+    /// [`Self::try_confidence`] when zero iterations are possible.
     pub fn confidence(&self) -> f64 {
         let p = self.class_probs();
         p[self.prediction()]
+    }
+
+    /// Non-panicking [`Self::confidence`]: `None` on an empty ensemble.
+    pub fn try_confidence(&self) -> Option<f64> {
+        if self.votes.is_empty() {
+            None
+        } else {
+            Some(self.confidence())
+        }
     }
 }
 
@@ -94,9 +154,23 @@ impl RegressionEnsemble {
         self.samples.len()
     }
 
+    /// True when no MC samples have been recorded yet.
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
     /// Ensemble mean (the prediction).
+    ///
+    /// # Panics
+    /// On an empty ensemble (the old `.max(1)` divisor silently
+    /// returned all-zero "predictions"; same audit as
+    /// `ClassEnsemble::class_probs`).
     pub fn mean(&self) -> Vec<f64> {
-        let t = self.samples.len().max(1) as f64;
+        assert!(
+            !self.samples.is_empty(),
+            "RegressionEnsemble::mean on an empty ensemble (no MC samples recorded)"
+        );
+        let t = self.samples.len() as f64;
         let mut m = vec![0.0f64; self.dims];
         for s in &self.samples {
             for (mi, &v) in m.iter_mut().zip(s) {
@@ -107,10 +181,14 @@ impl RegressionEnsemble {
         m
     }
 
-    /// Per-dimension predictive variance.
+    /// Per-dimension predictive variance (population; exactly 0 for
+    /// T = 1 — a single sample carries no dispersion information).
+    ///
+    /// # Panics
+    /// On an empty ensemble (see [`Self::mean`]).
     pub fn variance(&self) -> Vec<f64> {
         let m = self.mean();
-        let t = self.samples.len().max(1) as f64;
+        let t = self.samples.len() as f64;
         let mut v = vec![0.0f64; self.dims];
         for s in &self.samples {
             for ((vi, &mi), &x) in v.iter_mut().zip(&m).zip(s) {
@@ -194,6 +272,72 @@ mod tests {
         assert!((v[0] - 1.0).abs() < 1e-9);
         assert!(v[1].abs() < 1e-9);
         assert!((e.total_variance(2) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tie_breaks_to_lowest_class() {
+        // 15 votes each for classes 2 and 7: the tie must break
+        // deterministically toward the lowest index
+        let mut e = ClassEnsemble::new(10);
+        for _ in 0..15 {
+            e.add_vote(7);
+            e.add_vote(2);
+        }
+        assert_eq!(e.prediction(), 2);
+        assert_eq!(e.try_prediction(), Some(2));
+        assert!((e.confidence() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn vote_counts_sum_to_iterations() {
+        let mut e = ClassEnsemble::new(4);
+        for v in [0, 1, 1, 3, 3, 3] {
+            e.add_vote(v);
+        }
+        assert_eq!(e.vote_counts(), vec![1, 2, 0, 3]);
+        assert_eq!(e.vote_counts().iter().sum::<usize>(), e.iterations());
+        assert_eq!(e.n_classes(), 4);
+    }
+
+    #[test]
+    fn empty_ensemble_is_explicit() {
+        let e = ClassEnsemble::new(10);
+        assert!(e.is_empty());
+        assert_eq!(e.try_prediction(), None);
+        assert_eq!(e.try_confidence(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty ensemble")]
+    fn empty_prediction_panics() {
+        let e = ClassEnsemble::new(10);
+        let _ = e.prediction();
+    }
+
+    #[test]
+    #[should_panic(expected = "empty ensemble")]
+    fn empty_class_probs_panics() {
+        let e = ClassEnsemble::new(10);
+        let _ = e.class_probs();
+    }
+
+    #[test]
+    #[should_panic(expected = "empty ensemble")]
+    fn empty_regression_mean_panics() {
+        let e = RegressionEnsemble::new(3);
+        let _ = e.mean();
+    }
+
+    #[test]
+    fn regression_single_sample_has_zero_variance() {
+        // T = 1: a lone sample is its own mean; dispersion is exactly 0
+        let mut e = RegressionEnsemble::new(3);
+        e.add_sample(&[4.0, -2.0, 0.5]);
+        assert!(!e.is_empty());
+        let m = e.mean();
+        assert!((m[0] - 4.0).abs() < 1e-12 && (m[2] - 0.5).abs() < 1e-12);
+        assert!(e.variance().iter().all(|&v| v == 0.0));
+        assert_eq!(e.total_variance(3), 0.0);
     }
 
     #[test]

@@ -56,6 +56,24 @@ impl RowBatcher {
     }
 }
 
+/// Chunk plan for the adaptive execution path: split a request's
+/// sample ceiling into consult-sized chunks. The engine executes one
+/// chunk per PJRT call and the sequential stopper is consulted at
+/// every boundary, so the plan *is* the set of early-exit points —
+/// e.g. `chunk_plan(30, 8) = [8, 8, 8, 6]` offers exits after 8, 16
+/// and 24 samples.
+pub fn chunk_plan(samples: usize, chunk: usize) -> Vec<usize> {
+    assert!(chunk > 0, "chunk size must be >= 1");
+    let mut plan = Vec::with_capacity(samples.div_ceil(chunk));
+    let mut left = samples;
+    while left > 0 {
+        let n = left.min(chunk);
+        plan.push(n);
+        left -= n;
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,6 +101,21 @@ mod tests {
         let tail = b.flush().unwrap();
         assert_eq!(tail.len(), 10);
         assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn chunk_plan_covers_budget_exactly() {
+        assert_eq!(chunk_plan(30, 8), vec![8, 8, 8, 6]);
+        assert_eq!(chunk_plan(30, 30), vec![30]);
+        assert_eq!(chunk_plan(30, 64), vec![30]);
+        assert_eq!(chunk_plan(0, 5), Vec::<usize>::new());
+        check("chunk plan conserves samples", 50, |rng| {
+            let samples = rng.below(100);
+            let chunk = 1 + rng.below(40);
+            let plan = chunk_plan(samples, chunk);
+            plan.iter().sum::<usize>() == samples
+                && plan.iter().all(|&c| c >= 1 && c <= chunk)
+        });
     }
 
     #[test]

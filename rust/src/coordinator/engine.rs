@@ -14,6 +14,7 @@
 //! CIM precision). Per-request CIM energy is estimated by tiling each
 //! FC layer onto 16x31 macros and pricing them with `energy::model`.
 
+use super::batcher::chunk_plan;
 use crate::dropout::mask::DropoutMask;
 use crate::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use crate::operator::quant::Quantizer;
@@ -236,6 +237,45 @@ impl McDropoutEngine {
             .collect())
     }
 
+    /// One padded execution of `n <= mc_batch` MC rows of a (already
+    /// quantized) input, masks drawn from `src`. Appends the `n` row
+    /// outputs to `outputs`.
+    fn run_mc_block(
+        &self,
+        xq: &[f32],
+        n: usize,
+        src: &mut dyn DropoutBitSource,
+        outputs: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        let b = self.mc_batch;
+        debug_assert!(n >= 1 && n <= b);
+        let in_dim = self.dims[0];
+        let od = self.out_dim();
+        // pack the batch buffers directly — no per-row clones of the
+        // (shared) input vector (EXPERIMENTS.md §Perf)
+        let mut xb = vec![0.0f32; b * in_dim];
+        for r in 0..n {
+            xb[r * in_dim..(r + 1) * in_dim].copy_from_slice(xq);
+        }
+        let mut dynamic = vec![HostTensor::new(xb, vec![b, in_dim])];
+        for &d in &self.mask_dims() {
+            let mut mb = vec![0.0f32; b * d];
+            for r in 0..n {
+                let m = DropoutMask::sample(d, src);
+                for i in m.iter_active() {
+                    mb[r * d + i] = 1.0;
+                }
+            }
+            dynamic.push(HostTensor::new(mb, vec![b, d]));
+        }
+        let out = self.exe.run_mixed(&dynamic, &self.weights)?;
+        ensure!(out.len() == b * od, "unexpected output size");
+        for r in 0..n {
+            outputs.push(out[r * od..(r + 1) * od].to_vec());
+        }
+        Ok(())
+    }
+
     /// Probabilistic inference: `samples` MC iterations of one input,
     /// masks drawn from `src`.
     pub fn infer_mc(
@@ -244,7 +284,7 @@ impl McDropoutEngine {
         samples: usize,
         src: &mut dyn DropoutBitSource,
     ) -> Result<McOutput> {
-        let b = self.mc_batch;
+        ensure!(samples > 0, "MC inference needs at least one sample");
         let in_dim = self.dims[0];
         ensure!(
             x.len() == in_dim,
@@ -252,37 +292,64 @@ impl McDropoutEngine {
             x.len()
         );
         let xq = self.quantize_input(x);
-        let mask_dims = self.mask_dims();
-        let od = self.out_dim();
         let mut outputs = Vec::with_capacity(samples);
         let mut remaining = samples;
         while remaining > 0 {
-            let chunk = remaining.min(b);
-            // pack the batch buffers directly — no per-row clones of the
-            // (shared) input vector (EXPERIMENTS.md §Perf)
-            let mut xb = vec![0.0f32; b * in_dim];
-            for r in 0..chunk {
-                xb[r * in_dim..(r + 1) * in_dim].copy_from_slice(&xq);
-            }
-            let mut dynamic = vec![HostTensor::new(xb, vec![b, in_dim])];
-            for &d in &mask_dims {
-                let mut mb = vec![0.0f32; b * d];
-                for r in 0..chunk {
-                    let m = DropoutMask::sample(d, src);
-                    for i in m.iter_active() {
-                        mb[r * d + i] = 1.0;
-                    }
-                }
-                dynamic.push(HostTensor::new(mb, vec![b, d]));
-            }
-            let out = self.exe.run_mixed(&dynamic, &self.weights)?;
-            ensure!(out.len() == b * od, "unexpected output size");
-            for r in 0..chunk {
-                outputs.push(out[r * od..(r + 1) * od].to_vec());
-            }
-            remaining -= chunk;
+            let n = remaining.min(self.mc_batch);
+            self.run_mc_block(&xq, n, src, &mut outputs)?;
+            remaining -= n;
         }
         Ok(McOutput { samples: outputs, energy_pj: self.request_energy_pj(samples) })
+    }
+
+    /// Chunked adaptive inference: execute the [`chunk_plan`] of
+    /// `max_samples` one block per PJRT call and consult `keep_going`
+    /// with *all* outputs so far between blocks; stop early when it
+    /// returns `false` (or the plan is exhausted). The uncertainty
+    /// subsystem's sequential stoppers plug in as the callback, so the
+    /// engine stays policy-agnostic.
+    ///
+    /// The modeled CIM energy prices only the samples actually
+    /// executed — on the paper's macro, MC iterations are
+    /// time-multiplexed, so a truncated request really does skip the
+    /// remaining iterations' array/ADC/RNG events. Note the *PJRT CPU
+    /// simulation* is coarser: each block executes the fixed-B
+    /// compiled graph zero-padded, so simulation wall-clock scales
+    /// with `ceil(used / chunk)` executions, not with `used` rows —
+    /// pick `chunk` (and ideally compile B = chunk) accordingly when
+    /// simulator throughput matters; the modeled hardware numbers are
+    /// unaffected.
+    pub fn infer_mc_chunked<F>(
+        &self,
+        x: &[f32],
+        chunk: usize,
+        max_samples: usize,
+        src: &mut dyn DropoutBitSource,
+        mut keep_going: F,
+    ) -> Result<McOutput>
+    where
+        F: FnMut(&[Vec<f32>]) -> bool,
+    {
+        ensure!(max_samples > 0, "MC inference needs at least one sample");
+        ensure!(chunk > 0, "chunk size must be >= 1");
+        let in_dim = self.dims[0];
+        ensure!(
+            x.len() == in_dim,
+            "input width {} does not match network input dim {in_dim}",
+            x.len()
+        );
+        let plan = chunk_plan(max_samples, chunk.min(self.mc_batch));
+        let xq = self.quantize_input(x);
+        let mut outputs = Vec::with_capacity(max_samples.min(2 * chunk));
+        let blocks = plan.len();
+        for (i, &n) in plan.iter().enumerate() {
+            self.run_mc_block(&xq, n, src, &mut outputs)?;
+            if i + 1 < blocks && !keep_going(&outputs) {
+                break;
+            }
+        }
+        let used = outputs.len();
+        Ok(McOutput { samples: outputs, energy_pj: self.request_energy_pj(used) })
     }
 
     /// Deterministic baseline: expected-value masks (m = keep matches

@@ -1,8 +1,15 @@
-//! Serving metrics: request counts, latency quantiles, executions.
+//! Serving metrics: request counts, latency quantiles, executions,
+//! and the adaptive-sampling ledger (samples used/saved, verdicts,
+//! abstention rate).
 
+use crate::uncertainty::Verdict;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Slots of the samples-used histogram: 0..=62 samples map to their
+/// own bin, everything larger lands in the last bin.
+pub const SAMPLES_HIST_BINS: usize = 64;
 
 /// Shared metrics sink (cheap atomics on the hot path; latencies under
 /// a mutex, sampled per request, not per row).
@@ -13,6 +20,20 @@ pub struct Metrics {
     rows: AtomicU64,
     errors: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
+    // -- adaptive-sampling ledger --
+    /// MC samples actually executed by policy-managed requests.
+    mc_samples_used: AtomicU64,
+    /// Samples the granted ceiling allowed minus used (early stopping:
+    /// quality preserved).
+    mc_samples_saved: AtomicU64,
+    /// Samples the budget refused to grant (load shedding: quality
+    /// degraded — kept separate from `saved` on purpose).
+    mc_samples_shed: AtomicU64,
+    accepted: AtomicU64,
+    abstained: AtomicU64,
+    escalated: AtomicU64,
+    /// Lazily sized to [`SAMPLES_HIST_BINS`] on first record.
+    samples_hist: Mutex<Vec<u64>>,
 }
 
 impl Metrics {
@@ -37,6 +58,42 @@ impl Metrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one adaptive decision: `used` MC samples executed out of
+    /// the *granted* ceiling `budget_t`, ending in `verdict`. The
+    /// difference is what early stopping saved at full quality; use
+    /// [`Self::record_load_shed`] for samples a budget refused to
+    /// grant in the first place. (`escalated` counts requests that
+    /// passed through the Escalate grey zone before their terminal
+    /// Accept/Abstain.)
+    pub fn record_adaptive(&self, used: usize, budget_t: usize, verdict: Verdict) {
+        self.mc_samples_used.fetch_add(used as u64, Ordering::Relaxed);
+        self.mc_samples_saved
+            .fetch_add(budget_t.saturating_sub(used) as u64, Ordering::Relaxed);
+        match verdict {
+            Verdict::Accept => self.accepted.fetch_add(1, Ordering::Relaxed),
+            Verdict::Abstain => self.abstained.fetch_add(1, Ordering::Relaxed),
+            Verdict::Escalate => self.escalated.fetch_add(1, Ordering::Relaxed),
+        };
+        let mut hist = self.samples_hist.lock().unwrap();
+        if hist.len() < SAMPLES_HIST_BINS {
+            hist.resize(SAMPLES_HIST_BINS, 0);
+        }
+        hist[used.min(SAMPLES_HIST_BINS - 1)] += 1;
+    }
+
+    /// Mark that a request escalated (in addition to its terminal
+    /// verdict, which is recorded by [`Self::record_adaptive`]).
+    pub fn record_escalation(&self) {
+        self.escalated.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record samples the aggregate budget declined to grant (the
+    /// request wanted T, the bucket granted fewer): load shedding,
+    /// not an early-stopping win.
+    pub fn record_load_shed(&self, samples: usize) {
+        self.mc_samples_shed.fetch_add(samples as u64, Ordering::Relaxed);
+    }
+
     pub fn requests(&self) -> u64 {
         self.requests.load(Ordering::Relaxed)
     }
@@ -53,6 +110,64 @@ impl Metrics {
         self.errors.load(Ordering::Relaxed)
     }
 
+    pub fn mc_samples_used(&self) -> u64 {
+        self.mc_samples_used.load(Ordering::Relaxed)
+    }
+
+    pub fn mc_samples_saved(&self) -> u64 {
+        self.mc_samples_saved.load(Ordering::Relaxed)
+    }
+
+    pub fn mc_samples_shed(&self) -> u64 {
+        self.mc_samples_shed.load(Ordering::Relaxed)
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    pub fn abstained(&self) -> u64 {
+        self.abstained.load(Ordering::Relaxed)
+    }
+
+    pub fn escalated(&self) -> u64 {
+        self.escalated.load(Ordering::Relaxed)
+    }
+
+    /// Adaptive decisions recorded so far (accept + abstain terminals).
+    pub fn decided(&self) -> u64 {
+        self.accepted() + self.abstained()
+    }
+
+    /// Fraction of policy-managed requests that ended in abstention.
+    pub fn abstention_rate(&self) -> f64 {
+        let d = self.decided();
+        if d == 0 {
+            0.0
+        } else {
+            self.abstained() as f64 / d as f64
+        }
+    }
+
+    /// Fraction of the fixed-T sample budget saved by early stopping.
+    pub fn samples_saved_ratio(&self) -> f64 {
+        let used = self.mc_samples_used() as f64;
+        let saved = self.mc_samples_saved() as f64;
+        if used + saved == 0.0 {
+            0.0
+        } else {
+            saved / (used + saved)
+        }
+    }
+
+    /// Histogram of samples-used per adaptive request (bin i = i
+    /// samples; last bin aggregates the overflow).
+    pub fn samples_histogram(&self) -> Vec<u64> {
+        let mut h = self.samples_hist.lock().unwrap().clone();
+        h.resize(SAMPLES_HIST_BINS, 0);
+        h
+    }
+
     /// Latency quantile in milliseconds.
     pub fn latency_ms(&self, q: f64) -> f64 {
         let mut v = self.latencies_us.lock().unwrap().clone();
@@ -66,7 +181,7 @@ impl Metrics {
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} executions={} rows={} errors={} p50={:.2}ms p95={:.2}ms",
             self.requests(),
             self.executions(),
@@ -74,7 +189,21 @@ impl Metrics {
             self.errors(),
             self.latency_ms(0.5),
             self.latency_ms(0.95),
-        )
+        );
+        if self.decided() > 0 {
+            s.push_str(&format!(
+                " | adaptive: used={} saved={} ({:.0}%) shed={} accept={} abstain={} ({:.1}%) escalate={}",
+                self.mc_samples_used(),
+                self.mc_samples_saved(),
+                100.0 * self.samples_saved_ratio(),
+                self.mc_samples_shed(),
+                self.accepted(),
+                self.abstained(),
+                100.0 * self.abstention_rate(),
+                self.escalated(),
+            ));
+        }
+        s
     }
 }
 
@@ -102,5 +231,44 @@ mod tests {
     fn empty_latency_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_ms(0.5), 0.0);
+    }
+
+    #[test]
+    fn adaptive_ledger_accumulates() {
+        let m = Metrics::new();
+        m.record_adaptive(10, 30, Verdict::Accept);
+        m.record_adaptive(30, 30, Verdict::Abstain);
+        m.record_escalation();
+        m.record_adaptive(30, 30, Verdict::Accept);
+        m.record_load_shed(12);
+        assert_eq!(m.mc_samples_used(), 70);
+        assert_eq!(m.mc_samples_saved(), 20);
+        assert_eq!(m.mc_samples_shed(), 12);
+        assert_eq!(m.accepted(), 2);
+        assert_eq!(m.abstained(), 1);
+        assert_eq!(m.escalated(), 1);
+        assert!((m.abstention_rate() - 1.0 / 3.0).abs() < 1e-12);
+        assert!((m.samples_saved_ratio() - 20.0 / 90.0).abs() < 1e-12);
+        let h = m.samples_histogram();
+        assert_eq!(h[10], 1);
+        assert_eq!(h[30], 2);
+        assert_eq!(h.iter().sum::<u64>(), 3);
+        assert!(m.summary().contains("abstain=1"));
+    }
+
+    #[test]
+    fn histogram_overflow_bin_clamps() {
+        let m = Metrics::new();
+        m.record_adaptive(500, 500, Verdict::Accept);
+        let h = m.samples_histogram();
+        assert_eq!(h[SAMPLES_HIST_BINS - 1], 1);
+    }
+
+    #[test]
+    fn no_adaptive_traffic_keeps_summary_clean() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("adaptive"));
+        assert_eq!(m.abstention_rate(), 0.0);
+        assert_eq!(m.samples_saved_ratio(), 0.0);
     }
 }

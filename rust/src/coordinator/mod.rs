@@ -3,21 +3,29 @@
 //!
 //! * [`engine`] — the MC-Dropout inference engine: quantization, mask
 //!   scheduling (ideal / SRAM-RNG / Beta-perturbed sources), row
-//!   batching into the fixed-B executable, ensemble aggregation, and
-//!   per-request CIM energy estimates.
+//!   batching into the fixed-B executable, ensemble aggregation,
+//!   per-request CIM energy estimates, and the chunked execution path
+//!   the adaptive samplers consult between chunks.
 //! * [`batcher`] — row-granularity dynamic batcher: packs MC iterations
-//!   and deterministic requests into full executable batches.
+//!   and deterministic requests into full executable batches, plus the
+//!   chunk plans of the adaptive path.
 //! * [`server`] — worker-pool serving loop (std threads + mpsc; PJRT
 //!   objects are per-worker because they are not Send in this crate
-//!   version).
-//! * [`metrics`] — throughput/latency counters for the e2e driver.
+//!   version), with optional adaptive serving: sequential stoppers,
+//!   risk-policy verdicts (accept/abstain/escalate) on every response,
+//!   and a shared sample budget for graceful degradation.
+//! * [`metrics`] — throughput/latency counters plus the adaptive
+//!   ledger: samples used/saved, verdict counts, abstention rate, and
+//!   the samples-used histogram.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod server;
 
-pub use batcher::RowBatcher;
+pub use batcher::{chunk_plan, RowBatcher};
 pub use engine::{EngineConfig, McDropoutEngine, McOutput, NetKind};
 pub use metrics::Metrics;
-pub use server::{ClassifyResponse, Coordinator, CoordinatorConfig, Request, Response};
+pub use server::{
+    AdaptiveConfig, ClassifyResponse, Coordinator, CoordinatorConfig, Request, Response,
+};

@@ -8,12 +8,29 @@
 //! This is the end-to-end driver's substrate: requests in, prediction +
 //! confidence + modeled CIM energy out, with metrics for
 //! throughput/latency reporting.
+//!
+//! ## Adaptive serving
+//!
+//! With [`CoordinatorConfig::adaptive`] set, classification and
+//! regression requests run on the chunked engine path: MC rows execute
+//! in chunks and a sequential stopper (`uncertainty::sequential`)
+//! decides between chunks whether the ensemble has converged. The
+//! risk policy then turns the (calibrated) uncertainty summary into a
+//! verdict — accept, abstain, or escalate to the remaining budget —
+//! and every [`Response`] carries that verdict plus the samples
+//! actually spent. An optional shared sample budget degrades the
+//! per-request ceiling gracefully under load.
 
 use super::engine::{EngineConfig, McDropoutEngine, NetKind};
 use super::metrics::Metrics;
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
 use crate::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
 use crate::runtime::Runtime;
+use crate::uncertainty::policy::{DecisionPolicy, RiskProfile, Verdict};
+use crate::uncertainty::sequential::{
+    ClassStopper, RegressionStopper, SequentialConfig, StopRule,
+};
+use crate::uncertainty::{SharedBudget, TemperatureScaler};
 use crate::workloads::Meta;
 use anyhow::{Context, Result};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -34,10 +51,19 @@ pub enum Request {
 #[derive(Clone, Debug)]
 pub struct ClassifyResponse {
     pub prediction: usize,
+    /// Vote share of the winning class (the paper's confidence).
     pub confidence: f64,
+    /// Temperature-calibrated mean-softmax mass of the winning class
+    /// (equals `confidence`'s role on the non-adaptive path).
+    pub calibrated_confidence: f64,
     pub entropy: f64,
     pub votes: Vec<usize>,
     pub energy_pj: f64,
+    /// MC samples actually executed (== the request's `samples` on the
+    /// fixed-T path; possibly fewer under adaptive serving).
+    pub samples_used: usize,
+    /// Risk-policy verdict (always `Accept` on the fixed-T path).
+    pub verdict: Verdict,
 }
 
 /// Generic response.
@@ -48,6 +74,10 @@ pub enum Response {
         mean: Vec<f64>,
         variance: Vec<f64>,
         energy_pj: f64,
+        /// MC samples actually executed.
+        samples_used: usize,
+        /// Risk-policy verdict (always `Accept` on the fixed-T path).
+        verdict: Verdict,
     },
     Error(String),
 }
@@ -55,6 +85,37 @@ pub enum Response {
 struct Job {
     request: Request,
     respond: Sender<Response>,
+}
+
+/// Adaptive-serving configuration: stopper + policy + calibration (+
+/// optional shared sample budget).
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    /// Early-stopping test consulted between execution chunks.
+    pub sequential: SequentialConfig,
+    /// Risk profile for the classification stream.
+    pub class_profile: RiskProfile,
+    /// Risk profile for the regression stream.
+    pub pose_profile: RiskProfile,
+    /// Softmax temperature for calibrated confidence (1.0 = raw; fit
+    /// with `uncertainty::TemperatureScaler::fit` on held-out logits).
+    pub temperature: f64,
+    /// Aggregate sample budget shared by all workers (None = no cap).
+    pub budget: Option<Arc<SharedBudget>>,
+}
+
+impl AdaptiveConfig {
+    /// Entropy-convergence stopping at the given confidence level with
+    /// the per-workload default risk profiles.
+    pub fn new(confidence: f64) -> Self {
+        AdaptiveConfig {
+            sequential: SequentialConfig::new(StopRule::EntropyConvergence, confidence),
+            class_profile: RiskProfile::mnist_classify(),
+            pose_profile: RiskProfile::vo_pose(),
+            temperature: 1.0,
+            budget: None,
+        }
+    }
 }
 
 /// Coordinator configuration.
@@ -71,8 +132,12 @@ pub struct CoordinatorConfig {
     pub pallas: bool,
     /// Pack classification rows from *multiple* queued requests into
     /// one fixed-B execution when their MC sample counts fit (pays off
-    /// for sub-batch requests, e.g. 10-sample previews).
+    /// for sub-batch requests, e.g. 10-sample previews). Ignored when
+    /// `adaptive` is set — adaptive requests are variable-length by
+    /// nature and run on the chunked path instead.
     pub microbatch: bool,
+    /// Adaptive sampling + risk policies (None = the paper's fixed-T).
+    pub adaptive: Option<AdaptiveConfig>,
     pub seed: u64,
 }
 
@@ -85,6 +150,7 @@ impl Default for CoordinatorConfig {
             beta_a: None,
             pallas: false,
             microbatch: true,
+            adaptive: None,
             seed: 7,
         }
     }
@@ -182,6 +248,10 @@ fn worker_loop(
     let mut src_mnist = mk_src(mnist.mask_keep(), 0);
     let mut src_vo = mk_src(vo.mask_keep(), 1000);
 
+    // adaptive requests are variable-length: micro-batching their rows
+    // would pin every co-batched request to the slowest stopper
+    let microbatch = cfg.microbatch && cfg.adaptive.is_none();
+
     loop {
         // take one job (blocking), then optionally drain compatible
         // classification jobs to micro-batch into the same execution
@@ -192,7 +262,7 @@ fn worker_loop(
                 Err(_) => return Ok(()), // queue closed
             };
             let mut extra = Vec::new();
-            if cfg.microbatch {
+            if microbatch {
                 let mut budget = match &first.request {
                     Request::Classify { samples, .. } => {
                         mnist.mc_batch().saturating_sub(*samples)
@@ -237,10 +307,10 @@ fn worker_loop(
             microbatch_classify(&mnist, &mut *src_mnist, batchable, &metrics);
         } else {
             let job = batchable.pop().unwrap();
-            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, job, &metrics);
+            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, job, &cfg, &metrics);
         }
         for j in solo {
-            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, j, &metrics);
+            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, j, &cfg, &metrics);
         }
     }
 }
@@ -251,10 +321,11 @@ fn respond_one(
     src_mnist: &mut dyn DropoutBitSource,
     src_vo: &mut dyn DropoutBitSource,
     job: Job,
+    cfg: &CoordinatorConfig,
     metrics: &Metrics,
 ) {
     let t0 = Instant::now();
-    let response = handle(mnist, vo, src_mnist, src_vo, &job.request, metrics);
+    let response = handle(mnist, vo, src_mnist, src_vo, &job.request, cfg, metrics);
     match &response {
         Response::Error(_) => metrics.record_error(),
         _ => metrics.record_request(t0.elapsed()),
@@ -272,6 +343,21 @@ fn microbatch_classify(
 ) {
     use crate::dropout::mask::DropoutMask;
     let t0 = Instant::now();
+    // zero-sample requests have no rows to pack and no distribution to
+    // report — answer them with an error instead of letting the empty
+    // ensemble panic the worker
+    let (jobs, empty): (Vec<Job>, Vec<Job>) = jobs.into_iter().partition(|j| {
+        !matches!(&j.request, Request::Classify { samples: 0, .. })
+    });
+    for job in empty {
+        metrics.record_error();
+        let _ = job
+            .respond
+            .send(Response::Error("MC inference needs at least one sample".into()));
+    }
+    if jobs.is_empty() {
+        return;
+    }
     let mask_dims: Vec<usize> =
         mnist.dims()[1..mnist.dims().len() - 1].to_vec();
     let mut rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::new();
@@ -303,9 +389,12 @@ fn microbatch_classify(
                 let _ = job.respond.send(Response::Class(ClassifyResponse {
                     prediction: ens.prediction(),
                     confidence: ens.confidence(),
+                    calibrated_confidence: ens.confidence(),
                     entropy: ens.entropy(),
                     votes: ens.votes().to_vec(),
                     energy_pj: mnist.request_energy_pj(len),
+                    samples_used: len,
+                    verdict: Verdict::Accept,
                 }));
             }
         }
@@ -325,11 +414,13 @@ fn handle(
     src_mnist: &mut dyn DropoutBitSource,
     src_vo: &mut dyn DropoutBitSource,
     request: &Request,
+    cfg: &CoordinatorConfig,
     metrics: &Metrics,
 ) -> Response {
     match request {
-        Request::Classify { image, samples } => {
-            match mnist.infer_mc(image, *samples, src_mnist) {
+        Request::Classify { image, samples } => match &cfg.adaptive {
+            Some(ad) => classify_adaptive(mnist, src_mnist, image, *samples, ad, metrics),
+            None => match mnist.infer_mc(image, *samples, src_mnist) {
                 Ok(out) => {
                     metrics.record_execution(out.samples.len());
                     let mut ens = ClassEnsemble::new(mnist.out_dim());
@@ -339,16 +430,20 @@ fn handle(
                     Response::Class(ClassifyResponse {
                         prediction: ens.prediction(),
                         confidence: ens.confidence(),
+                        calibrated_confidence: ens.confidence(),
                         entropy: ens.entropy(),
                         votes: ens.votes().to_vec(),
                         energy_pj: out.energy_pj,
+                        samples_used: out.samples.len(),
+                        verdict: Verdict::Accept,
                     })
                 }
                 Err(e) => Response::Error(format!("{e:#}")),
-            }
-        }
-        Request::Regress { features, samples } => {
-            match vo.infer_mc(features, *samples, src_vo) {
+            },
+        },
+        Request::Regress { features, samples } => match &cfg.adaptive {
+            Some(ad) => regress_adaptive(vo, src_vo, features, *samples, ad, metrics),
+            None => match vo.infer_mc(features, *samples, src_vo) {
                 Ok(out) => {
                     metrics.record_execution(out.samples.len());
                     let mut ens = RegressionEnsemble::new(vo.out_dim());
@@ -359,11 +454,190 @@ fn handle(
                         mean: ens.mean(),
                         variance: ens.variance(),
                         energy_pj: out.energy_pj,
+                        samples_used: out.samples.len(),
+                        verdict: Verdict::Accept,
                     }
                 }
                 Err(e) => Response::Error(format!("{e:#}")),
+            },
+        },
+    }
+}
+
+/// Grant a (possibly degraded) sample ceiling for one adaptive
+/// request; the shortfall vs `full_t` is load shedding and is
+/// recorded as such (distinct from early-stop savings).
+fn grant_ceiling(ad: &AdaptiveConfig, full_t: usize, floor: usize, metrics: &Metrics) -> usize {
+    let ceiling = match &ad.budget {
+        Some(b) => b.grant(full_t, floor),
+        None => full_t,
+    };
+    if ceiling < full_t {
+        metrics.record_load_shed(full_t - ceiling);
+    }
+    ceiling
+}
+
+/// Return the unexecuted tail of a grant to the shared budget (on
+/// early stop *and* on error paths — grants must never leak).
+fn refund_unused(ad: &AdaptiveConfig, ceiling: usize, executed: usize) {
+    if let Some(b) = &ad.budget {
+        if executed < ceiling {
+            b.release(ceiling - executed);
+        }
+    }
+}
+
+/// Adaptive classification: chunked execution consulting the stopper,
+/// then the risk policy on calibrated confidence, with a single
+/// escalate-to-ceiling retry in the grey zone.
+fn classify_adaptive(
+    engine: &McDropoutEngine,
+    src: &mut dyn DropoutBitSource,
+    image: &[f32],
+    full_t: usize,
+    ad: &AdaptiveConfig,
+    metrics: &Metrics,
+) -> Response {
+    let full_t = full_t.max(1);
+    let mut seq = ad.sequential;
+    let ceiling = grant_ceiling(ad, full_t, seq.min_samples, metrics);
+    seq.max_samples = ceiling;
+
+    let scaler = TemperatureScaler { temperature: ad.temperature };
+    let policy = DecisionPolicy::new(ad.class_profile);
+    let mut stopper = ClassStopper::new(seq);
+    let mut ens = ClassEnsemble::new(engine.out_dim());
+    let mut fed = 0usize;
+    let run = engine.infer_mc_chunked(image, seq.chunk, ceiling, src, |outs| {
+        for o in &outs[fed..] {
+            ens.add_logits(o);
+        }
+        fed = outs.len();
+        !stopper.should_stop(&ens)
+    });
+    let mut out = match run {
+        Ok(o) => o,
+        Err(e) => {
+            refund_unused(ad, ceiling, ens.iterations());
+            return Response::Error(format!("{e:#}"));
+        }
+    };
+    metrics.record_execution(out.samples.len());
+    // the final chunk is not passed through the callback — fold it in
+    for o in &out.samples[fed..] {
+        ens.add_logits(o);
+    }
+
+    let mut probs = scaler.mean_probs(&out.samples);
+    let mut calibrated = probs[ens.prediction()];
+    let mut verdict =
+        policy.decide_class(calibrated, ens.entropy(), ens.iterations() >= ceiling);
+    if verdict == Verdict::Escalate {
+        // grey zone: spend the rest of the granted budget in one shot
+        metrics.record_escalation();
+        let extra = ceiling - ens.iterations();
+        match engine.infer_mc(image, extra, src) {
+            Ok(more) => {
+                metrics.record_execution(more.samples.len());
+                for o in &more.samples {
+                    ens.add_logits(o);
+                }
+                out.samples.extend(more.samples);
+            }
+            Err(e) => {
+                refund_unused(ad, ceiling, ens.iterations());
+                return Response::Error(format!("{e:#}"));
             }
         }
+        probs = scaler.mean_probs(&out.samples);
+        calibrated = probs[ens.prediction()];
+        verdict = policy.decide_class(calibrated, ens.entropy(), true);
+    }
+
+    let used = ens.iterations();
+    refund_unused(ad, ceiling, used);
+    metrics.record_adaptive(used, ceiling, verdict);
+    Response::Class(ClassifyResponse {
+        prediction: ens.prediction(),
+        confidence: ens.confidence(),
+        calibrated_confidence: calibrated,
+        entropy: ens.entropy(),
+        votes: ens.votes().to_vec(),
+        energy_pj: engine.request_energy_pj(used),
+        samples_used: used,
+        verdict,
+    })
+}
+
+/// Adaptive pose regression: variance-convergence stopping + the
+/// regression arm of the risk policy (VO position variance).
+fn regress_adaptive(
+    engine: &McDropoutEngine,
+    src: &mut dyn DropoutBitSource,
+    features: &[f32],
+    full_t: usize,
+    ad: &AdaptiveConfig,
+    metrics: &Metrics,
+) -> Response {
+    let full_t = full_t.max(1);
+    let mut seq = ad.sequential;
+    let ceiling = grant_ceiling(ad, full_t, seq.min_samples, metrics);
+    seq.max_samples = ceiling;
+
+    let var_dims = engine.out_dim().min(3); // VO position block
+    let policy = DecisionPolicy::new(ad.pose_profile);
+    let mut stopper = RegressionStopper::new(seq, var_dims);
+    let mut ens = RegressionEnsemble::new(engine.out_dim());
+    let mut fed = 0usize;
+    let run = engine.infer_mc_chunked(features, seq.chunk, ceiling, src, |outs| {
+        for o in &outs[fed..] {
+            ens.add_sample(o);
+        }
+        fed = outs.len();
+        !stopper.should_stop(&ens)
+    });
+    let out = match run {
+        Ok(o) => o,
+        Err(e) => {
+            refund_unused(ad, ceiling, ens.iterations());
+            return Response::Error(format!("{e:#}"));
+        }
+    };
+    metrics.record_execution(out.samples.len());
+    for o in &out.samples[fed..] {
+        ens.add_sample(o);
+    }
+
+    let mut verdict = policy
+        .decide_regression(ens.total_variance(var_dims), ens.iterations() >= ceiling);
+    if verdict == Verdict::Escalate {
+        metrics.record_escalation();
+        let extra = ceiling - ens.iterations();
+        match engine.infer_mc(features, extra, src) {
+            Ok(more) => {
+                metrics.record_execution(more.samples.len());
+                for o in &more.samples {
+                    ens.add_sample(o);
+                }
+            }
+            Err(e) => {
+                refund_unused(ad, ceiling, ens.iterations());
+                return Response::Error(format!("{e:#}"));
+            }
+        }
+        verdict = policy.decide_regression(ens.total_variance(var_dims), true);
+    }
+
+    let used = ens.iterations();
+    refund_unused(ad, ceiling, used);
+    metrics.record_adaptive(used, ceiling, verdict);
+    Response::Pose {
+        mean: ens.mean(),
+        variance: ens.variance(),
+        energy_pj: engine.request_energy_pj(used),
+        samples_used: used,
+        verdict,
     }
 }
 
@@ -378,6 +652,27 @@ mod tests {
             ..Default::default()
         };
         assert!(Coordinator::start(cfg).is_err());
+    }
+
+    #[test]
+    fn default_config_is_fixed_t() {
+        let cfg = CoordinatorConfig::default();
+        assert!(cfg.adaptive.is_none());
+        assert!(cfg.microbatch);
+    }
+
+    #[test]
+    fn adaptive_config_defaults_are_sane() {
+        let ad = AdaptiveConfig::new(0.9);
+        assert_eq!(ad.sequential.rule, StopRule::EntropyConvergence);
+        assert!((ad.sequential.confidence - 0.9).abs() < 1e-9);
+        assert_eq!(ad.class_profile.name, "mnist");
+        assert_eq!(ad.pose_profile.name, "vo");
+        assert_eq!(ad.temperature, 1.0);
+        assert!(ad.budget.is_none());
+        // and it threads into the coordinator config
+        let cfg = CoordinatorConfig { adaptive: Some(ad), ..Default::default() };
+        assert!(cfg.adaptive.is_some());
     }
 
     // Live serving behaviour is covered by rust/tests/integration.rs

@@ -236,6 +236,21 @@ impl EnergyModel {
         EnergyBreakdown { array_fj, adc_analog_fj, adc_logic_fj, rng_fj, digital_fj }
     }
 
+    /// Energy saving from truncating the workload's MC budget to
+    /// `t_used` samples at the same operating mode: `1 - E(t_used) /
+    /// E(w.iters)`. This is what the adaptive serving path banks when
+    /// a sequential stopper quits early — truncation changes the
+    /// per-iteration statistics too (the first reuse iteration's full
+    /// active-set drive amortizes over fewer samples), so the saving
+    /// is slightly sub-linear in samples and must be priced by the
+    /// model, not by a `t_used/T` ratio.
+    pub fn truncation_saving(&self, w: &LayerWorkload, m: &ModeConfig, t_used: usize) -> f64 {
+        let full = self.inference_energy(w, m).total_fj();
+        let mut wu = *w;
+        wu.iters = t_used.max(1).min(w.iters);
+        1.0 - self.inference_energy(&wu, m).total_fj() / full
+    }
+
     /// Effective ops-per-joule in TOPS/W: delivered dense-equivalent
     /// ops (each MF element = 2 one-bit-x-multibit products + 2 adds =
     /// 4 ops) over the energy spent.
@@ -349,6 +364,22 @@ mod tests {
         // share higher in absolute terms (see EXPERIMENTS.md note), but
         // the *energy* ordering must hold.
         assert!(so.adc_fj() < cr.adc_fj());
+    }
+
+    #[test]
+    fn truncation_saving_is_monotone_and_substantial() {
+        let (m, w) = paper();
+        let mode = ModeConfig::mf_asym_reuse_ordered();
+        assert!(m.truncation_saving(&w, &mode, 30).abs() < 1e-12);
+        let mut prev = 0.0;
+        for t in [25, 20, 15, 10, 5] {
+            let s = m.truncation_saving(&w, &mode, t);
+            assert!(s > prev, "saving must grow as samples shrink: t={t} s={s:.3}");
+            prev = s;
+        }
+        // stopping at 15/30 should save a large chunk of the request
+        let half = m.truncation_saving(&w, &mode, 15);
+        assert!((0.30..0.60).contains(&half), "half-T saving {half:.3}");
     }
 
     #[test]

@@ -29,6 +29,7 @@
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
 //! | [`coordinator`] | — | MC-Dropout engine, request router, dynamic batcher, worker pool |
+//! | [`uncertainty`] | — | sequential early-stopping samplers, calibration (ECE / temperature scaling), risk-aware policies, sample budgets |
 //! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
 //! | [`config`] | — | CLI/flag parsing and run configuration (no external deps) |
 //! | [`util`] | — | PCG32 PRNG, statistics, minimal JSON, test generators |
@@ -42,6 +43,7 @@ pub mod energy;
 pub mod operator;
 pub mod rng;
 pub mod runtime;
+pub mod uncertainty;
 pub mod util;
 pub mod workloads;
 

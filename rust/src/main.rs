@@ -19,13 +19,16 @@ use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
 use mc_cim::config::Args;
 use mc_cim::coordinator::{
-    Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind, Request,
-    Response,
+    AdaptiveConfig, Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind,
+    Request, Response,
 };
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use mc_cim::rng::{calibrate, estimate_p1, CciRng, IdealBernoulli, SramEmbeddedRng};
 use mc_cim::runtime::Runtime;
+use mc_cim::uncertainty::policy::{DecisionPolicy, RiskProfile, Verdict};
+use mc_cim::uncertainty::sequential::{ClassStopper, SequentialConfig, StopRule};
+use mc_cim::uncertainty::{SampleBudget, SharedBudget, TemperatureScaler};
 use mc_cim::util::stats::std_dev;
 use mc_cim::workloads::{image, mnist::MnistTest, Meta, ARTIFACTS_DIR};
 
@@ -59,12 +62,63 @@ fn run() -> Result<()> {
 const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
   --artifacts DIR   artifacts directory (default: artifacts)
   classify: --index N --samples N --bits B --rotate DEG
+            --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
   vo:       --frames N --samples N --bits B
   serve:    --workers N --requests N --samples N --bits B
+            --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
+            --chunk N --min-samples N --budget-rate SAMPLES_PER_SEC
   energy:   --bits B --iters N
   rng:      --instances N --cols N --target P
   adc:      (no flags)
-  reuse:    --samples N --neurons N";
+  reuse:    --samples N --neurons N
+
+adaptive serving (see README 'Adaptive serving'):
+  --adaptive=true         stop MC sampling early once the ensemble converges
+  --rule RULE             fixed | margin | entropy        (default entropy)
+  --confidence-level P    stopping confidence in (0.5, 1) (default 0.9)
+  --risk-profile NAME     mnist | vo | strict | permissive (default mnist)
+  --chunk N               samples per stopper consultation (default 5)
+  --min-samples N         never stop before N samples      (default 6)
+  --budget-rate R         aggregate sample budget, samples/s (0 = uncapped)";
+
+/// Parse the shared adaptive-serving flags into an [`AdaptiveConfig`]
+/// (None unless `--adaptive` is set).
+fn adaptive_from_args(args: &Args) -> Result<Option<AdaptiveConfig>> {
+    if !args.get_bool("adaptive") {
+        return Ok(None);
+    }
+    let conf = args.get_f64("confidence-level", 0.9).map_err(|e| anyhow!(e))?;
+    let rule_s = args.get_or("rule", "entropy");
+    let rule = StopRule::parse(&rule_s)
+        .ok_or_else(|| anyhow!("--rule: unknown rule '{rule_s}' (fixed|margin|entropy)"))?;
+    // explicit --risk-profile applies to BOTH streams; when absent the
+    // per-workload defaults stay (mnist for classify, vo for pose)
+    let explicit_profile = match args.get("risk-profile") {
+        None => None,
+        Some(s) => Some(RiskProfile::parse(s).ok_or_else(|| {
+            anyhow!("--risk-profile: unknown profile '{s}' (mnist|vo|strict|permissive)")
+        })?),
+    };
+    let mut seq = SequentialConfig::new(rule, conf);
+    seq.chunk = args.get_usize("chunk", seq.chunk).map_err(|e| anyhow!(e))?.max(1);
+    seq.min_samples =
+        args.get_usize("min-samples", seq.min_samples).map_err(|e| anyhow!(e))?.max(1);
+    let rate = args.get_f64("budget-rate", 0.0).map_err(|e| anyhow!(e))?;
+    let mut ad = AdaptiveConfig::new(conf);
+    ad.sequential = seq;
+    if let Some(profile) = explicit_profile {
+        ad.class_profile = profile;
+        ad.pose_profile = profile;
+    }
+    if rate > 0.0 {
+        // one second of headroom in the bucket
+        let cap = (rate as usize).max(seq.min_samples);
+        ad.budget = Some(std::sync::Arc::new(SharedBudget::new(SampleBudget::new(
+            cap, rate,
+        ))));
+    }
+    Ok(Some(ad))
+}
 
 fn artifacts(args: &Args) -> String {
     args.get_or("artifacts", ARTIFACTS_DIR)
@@ -108,6 +162,63 @@ fn cmd_classify(args: &Args) -> Result<()> {
     }
     let engine = McDropoutEngine::load(&rt, &dir, &meta, &ec)?;
     let mut src = IdealBernoulli::new(1.0 - meta.dropout_p, 42);
+
+    if let Some(ad) = adaptive_from_args(args)? {
+        let mut seq = ad.sequential;
+        seq.max_samples = samples;
+        let scaler = TemperatureScaler { temperature: ad.temperature };
+        let mut stopper = ClassStopper::new(seq);
+        let mut ens = ClassEnsemble::new(engine.out_dim());
+        let mut fed = 0usize;
+        let mut out = engine.infer_mc_chunked(&img, seq.chunk, samples, &mut src, |outs| {
+            for o in &outs[fed..] {
+                ens.add_logits(o);
+            }
+            fed = outs.len();
+            !stopper.should_stop(&ens)
+        })?;
+        for o in &out.samples[fed..] {
+            ens.add_logits(o);
+        }
+        // same decision procedure as the serving path: calibrated
+        // confidence, one escalate-to-full-T retry in the grey zone
+        let policy = DecisionPolicy::new(ad.class_profile);
+        let mut calibrated = scaler.mean_probs(&out.samples)[ens.prediction()];
+        let mut verdict =
+            policy.decide_class(calibrated, ens.entropy(), ens.iterations() >= samples);
+        if verdict == Verdict::Escalate {
+            let more = engine.infer_mc(&img, samples - ens.iterations(), &mut src)?;
+            for o in &more.samples {
+                ens.add_logits(o);
+            }
+            out.samples.extend(more.samples);
+            calibrated = scaler.mean_probs(&out.samples)[ens.prediction()];
+            verdict = policy.decide_class(calibrated, ens.entropy(), true);
+        }
+        let used = ens.iterations();
+        let adaptive_energy = engine.request_energy_pj(used);
+        let fixed_energy = engine.request_energy_pj(samples);
+        println!(
+            "image #{idx} (label {}) rotate {rotate}°: prediction {} confidence {:.2} (calibrated {:.2}) entropy {:.3}",
+            test.labels[idx % test.len()],
+            ens.prediction(),
+            ens.confidence(),
+            calibrated,
+            ens.entropy(),
+        );
+        println!(
+            "adaptive [{} @ {:.2}]: verdict {} after {used}/{samples} samples — {:.1} pJ vs {:.1} pJ fixed ({:.0}% saved)",
+            seq.rule.label(),
+            seq.confidence,
+            verdict.label(),
+            adaptive_energy,
+            fixed_energy,
+            100.0 * (1.0 - adaptive_energy / fixed_energy),
+        );
+        println!("votes: {:?}", ens.votes());
+        return Ok(());
+    }
+
     let out = engine.infer_mc(&img, samples, &mut src)?;
     let mut ens = ClassEnsemble::new(engine.out_dim());
     for s in &out.samples {
@@ -166,10 +277,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bits = args.get_usize("bits", 0).map_err(|e| anyhow!(e))?;
 
     let test = MnistTest::load(&dir)?;
+    let adaptive = adaptive_from_args(args)?;
+    let is_adaptive = adaptive.is_some();
     let cfg = CoordinatorConfig {
         artifacts: dir,
         workers,
         bits: (bits > 0).then_some(bits as u8),
+        adaptive,
         ..Default::default()
     };
     let coord = Coordinator::start(cfg)?;
@@ -183,9 +297,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         })
         .collect();
     let mut correct = 0usize;
+    let mut answered = 0usize;
+    let mut abstained = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
         match rx.recv()? {
             Response::Class(c) => {
+                if c.verdict == Verdict::Abstain {
+                    abstained += 1;
+                    continue;
+                }
+                answered += 1;
                 if c.prediction as i32 == test.labels[i % test.len()] {
                     correct += 1;
                 }
@@ -196,11 +317,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "{requests} requests x {samples} samples on {workers} workers: {:.2} req/s, accuracy {:.3}",
+        "{requests} requests x {samples} samples on {workers} workers: {:.2} req/s, accuracy {:.3} ({answered} answered, {abstained} abstained)",
         requests as f64 / dt,
-        correct as f64 / requests as f64
+        correct as f64 / answered.max(1) as f64
     );
     println!("{}", coord.metrics.summary());
+    if is_adaptive {
+        let m = &coord.metrics;
+        println!(
+            "adaptive: {} MC samples executed, {} saved vs fixed T ({:.0}%), abstention rate {:.1}%",
+            m.mc_samples_used(),
+            m.mc_samples_saved(),
+            100.0 * m.samples_saved_ratio(),
+            100.0 * m.abstention_rate(),
+        );
+        let hist = m.samples_histogram();
+        let lines: Vec<String> = hist
+            .iter()
+            .enumerate()
+            .filter(|(_, &n)| n > 0)
+            .map(|(s, &n)| format!("{s}:{n}"))
+            .collect();
+        println!("samples-used histogram: {}", lines.join(" "));
+    }
     coord.shutdown();
     Ok(())
 }

@@ -6,7 +6,19 @@
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md and
 //! DESIGN.md §7).
+//!
+//! The real PJRT wrapper lives in [`executable`] and is gated behind
+//! the `pjrt` cargo feature (the `xla` crate is only vendored on
+//! provisioned machines). Without the feature, [`stub`] provides the
+//! same types with a fail-fast `Runtime::cpu()` so the simulator,
+//! uncertainty, and coordinator logic still build and test everywhere.
 
+#[cfg(feature = "pjrt")]
 pub mod executable;
+
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub as executable;
 
 pub use executable::{DeviceTensor, Executable, HostTensor, Runtime};

@@ -1,0 +1,103 @@
+//! Stub runtime used when the crate is built without the `pjrt`
+//! feature (the `xla` PJRT bindings are only vendored on provisioned
+//! machines — see Cargo.toml).
+//!
+//! The stub mirrors the public surface of [`super::executable`] so the
+//! rest of the crate type-checks unchanged: host tensors behave fully
+//! (they are plain `Vec<f32>` + shape), while creating a [`Runtime`]
+//! fails with an actionable error. All artifact-gated tests, benches
+//! and examples check for `artifacts/meta.json` *before* constructing a
+//! runtime, so the default build runs its entire simulator/uncertainty
+//! test suite without PJRT.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+/// A host-side tensor: f32 payload + shape (row-major).
+#[derive(Clone, Debug)]
+pub struct HostTensor {
+    pub data: Vec<f32>,
+    pub shape: Vec<usize>,
+}
+
+impl HostTensor {
+    pub fn new(data: Vec<f32>, shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(data.len(), n, "shape/payload mismatch");
+        HostTensor { data, shape }
+    }
+
+    pub fn vec1(data: Vec<f32>) -> Self {
+        let n = data.len();
+        HostTensor::new(data, vec![n])
+    }
+
+    /// In the stub the "device" representation is the host tensor.
+    pub fn prepare(&self) -> Result<DeviceTensor> {
+        Ok(DeviceTensor(self.clone()))
+    }
+}
+
+/// A host tensor "converted" for execution (no-op without PJRT).
+pub struct DeviceTensor(#[allow(dead_code)] HostTensor);
+
+/// The (unavailable) PJRT client.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    /// Always fails in the stub build.
+    pub fn cpu() -> Result<Self> {
+        bail!(
+            "this build has no PJRT runtime — rebuild with `--features pjrt` \
+             on a machine with the xla crate vendored (see rust/Cargo.toml)"
+        )
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load_hlo_text(&self, _path: impl AsRef<Path>) -> Result<Executable> {
+        bail!("stub runtime cannot load HLO artifacts (build with `--features pjrt`)")
+    }
+}
+
+/// A compiled computation (never constructible in the stub build).
+pub struct Executable {
+    name: String,
+}
+
+impl Executable {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn run(&self, _inputs: &[HostTensor]) -> Result<Vec<f32>> {
+        bail!("stub runtime cannot execute (build with `--features pjrt`)")
+    }
+
+    pub fn run_mixed(&self, _dynamic: &[HostTensor], _cached: &[DeviceTensor]) -> Result<Vec<f32>> {
+        bail!("stub runtime cannot execute (build with `--features pjrt`)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensors_work_without_pjrt() {
+        let t = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.shape, vec![2, 2]);
+        assert!(t.prepare().is_ok());
+        assert_eq!(HostTensor::vec1(vec![0.0; 5]).shape, vec![5]);
+    }
+
+    #[test]
+    fn runtime_fails_with_actionable_error() {
+        let err = Runtime::cpu().err().expect("stub must not create a client");
+        assert!(format!("{err:#}").contains("pjrt"));
+    }
+}

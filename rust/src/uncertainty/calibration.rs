@@ -1,0 +1,328 @@
+//! Confidence calibration: reliability bins / ECE and temperature
+//! scaling (Guo et al. 2017) fit on held-out logits.
+//!
+//! The sequential stoppers and risk policies act on *probabilities*;
+//! raw MF-MLP logits are over-confident after quantization, so the
+//! serving stack pipes every per-sample logit vector through a fitted
+//! [`TemperatureScaler`] before averaging. ECE ([`ReliabilityBins`])
+//! quantifies how trustworthy those probabilities are and is what the
+//! calibration CI check in `benches/adaptive_sampling.rs` reports.
+
+/// Temperature-scaled softmax of one logit vector (f32 logits, f64
+/// probabilities). Numerically stabilized by max subtraction.
+pub fn softmax(logits: &[f32], temperature: f64) -> Vec<f64> {
+    assert!(!logits.is_empty(), "softmax of empty logit vector");
+    let t = temperature.max(1e-6);
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+    let exps: Vec<f64> = logits.iter().map(|&z| ((z as f64 - m) / t).exp()).collect();
+    let z: f64 = exps.iter().sum();
+    exps.iter().map(|e| e / z).collect()
+}
+
+/// Mean predictive distribution of an MC ensemble: temperature-scaled
+/// softmax per sample, averaged over samples (the "MC integral" the
+/// paper's vote share approximates).
+pub fn mean_probs(samples: &[Vec<f32>], temperature: f64) -> Vec<f64> {
+    assert!(!samples.is_empty(), "mean_probs of empty ensemble");
+    let k = samples[0].len();
+    let mut acc = vec![0.0f64; k];
+    for s in samples {
+        for (a, p) in acc.iter_mut().zip(softmax(s, temperature)) {
+            *a += p;
+        }
+    }
+    let n = samples.len() as f64;
+    acc.iter_mut().for_each(|a| *a /= n);
+    acc
+}
+
+/// Fixed-width reliability bins over confidence in [0, 1].
+#[derive(Clone, Debug)]
+pub struct ReliabilityBins {
+    counts: Vec<u64>,
+    conf_sums: Vec<f64>,
+    hits: Vec<u64>,
+}
+
+/// Per-bin summary returned by [`ReliabilityBins::bins`].
+#[derive(Clone, Copy, Debug)]
+pub struct BinStats {
+    /// Bin midpoint of the confidence axis.
+    pub midpoint: f64,
+    pub count: u64,
+    /// Mean predicted confidence of the bin's members.
+    pub mean_confidence: f64,
+    /// Empirical accuracy of the bin's members.
+    pub accuracy: f64,
+}
+
+impl ReliabilityBins {
+    pub fn new(n_bins: usize) -> Self {
+        assert!(n_bins > 0, "need at least one reliability bin");
+        ReliabilityBins {
+            counts: vec![0; n_bins],
+            conf_sums: vec![0.0; n_bins],
+            hits: vec![0; n_bins],
+        }
+    }
+
+    fn bin_of(&self, confidence: f64) -> usize {
+        let n = self.counts.len();
+        ((confidence.clamp(0.0, 1.0) * n as f64) as usize).min(n - 1)
+    }
+
+    /// Record one prediction: its confidence and whether it was correct.
+    pub fn add(&mut self, confidence: f64, correct: bool) {
+        let b = self.bin_of(confidence);
+        self.counts[b] += 1;
+        self.conf_sums[b] += confidence.clamp(0.0, 1.0);
+        if correct {
+            self.hits[b] += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Expected calibration error: count-weighted mean |conf - acc|.
+    pub fn ece(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut e = 0.0;
+        for i in 0..self.counts.len() {
+            if self.counts[i] == 0 {
+                continue;
+            }
+            let n = self.counts[i] as f64;
+            let conf = self.conf_sums[i] / n;
+            let acc = self.hits[i] as f64 / n;
+            e += (conf - acc).abs() * n / total as f64;
+        }
+        e
+    }
+
+    /// The reliability curve (skips empty bins).
+    pub fn bins(&self) -> Vec<BinStats> {
+        let n = self.counts.len();
+        (0..n)
+            .filter(|&i| self.counts[i] > 0)
+            .map(|i| BinStats {
+                midpoint: (i as f64 + 0.5) / n as f64,
+                count: self.counts[i],
+                mean_confidence: self.conf_sums[i] / self.counts[i] as f64,
+                accuracy: self.hits[i] as f64 / self.counts[i] as f64,
+            })
+            .collect()
+    }
+}
+
+/// A fitted softmax temperature.
+#[derive(Clone, Copy, Debug)]
+pub struct TemperatureScaler {
+    pub temperature: f64,
+}
+
+impl TemperatureScaler {
+    /// T = 1: raw softmax.
+    pub fn identity() -> Self {
+        TemperatureScaler { temperature: 1.0 }
+    }
+
+    /// Fit on held-out (logits, label) pairs by minimizing NLL over a
+    /// log-spaced grid with one golden-section refinement. Deterministic
+    /// and dependency-free; held-out sets here are small (<= a few
+    /// thousand), so the O(grid * n) scan is fine off the hot path.
+    pub fn fit(logits: &[Vec<f32>], labels: &[usize]) -> Self {
+        assert_eq!(logits.len(), labels.len(), "logits/labels length mismatch");
+        if logits.is_empty() {
+            return Self::identity();
+        }
+        let nll = |t: f64| -> f64 {
+            let mut s = 0.0;
+            for (z, &y) in logits.iter().zip(labels) {
+                let p = softmax(z, t);
+                s -= p[y].max(1e-12).ln();
+            }
+            s / logits.len() as f64
+        };
+        // coarse log grid over [0.05, 20]
+        let mut best_t = 1.0;
+        let mut best = f64::INFINITY;
+        let (lo, hi) = (0.05f64.ln(), 20.0f64.ln());
+        const GRID: usize = 40;
+        for i in 0..=GRID {
+            let t = (lo + (hi - lo) * i as f64 / GRID as f64).exp();
+            let v = nll(t);
+            if v < best {
+                best = v;
+                best_t = t;
+            }
+        }
+        // golden-section refine around the grid winner (one bracket
+        // step on each side of the log axis)
+        let step = (hi - lo) / GRID as f64;
+        let (mut a, mut b) = (best_t.ln() - step, best_t.ln() + step);
+        const PHI: f64 = 0.618_033_988_749_894_8;
+        for _ in 0..40 {
+            let x1 = b - PHI * (b - a);
+            let x2 = a + PHI * (b - a);
+            if nll(x1.exp()) < nll(x2.exp()) {
+                b = x2;
+            } else {
+                a = x1;
+            }
+        }
+        let t = ((a + b) / 2.0).exp();
+        if nll(t) <= best {
+            best_t = t;
+        }
+        TemperatureScaler { temperature: best_t }
+    }
+
+    /// Calibrated probabilities of one logit vector.
+    pub fn probs(&self, logits: &[f32]) -> Vec<f64> {
+        softmax(logits, self.temperature)
+    }
+
+    /// Calibrated mean predictive distribution of an MC ensemble.
+    pub fn mean_probs(&self, samples: &[Vec<f32>]) -> Vec<f64> {
+        mean_probs(samples, self.temperature)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    #[test]
+    fn softmax_is_a_distribution() {
+        let p = softmax(&[1.0, 2.0, 3.0], 1.0);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[2] > p[1] && p[1] > p[0]);
+    }
+
+    #[test]
+    fn high_temperature_flattens_low_sharpens() {
+        let z = [0.0f32, 1.0, 2.0];
+        let flat = softmax(&z, 10.0);
+        let sharp = softmax(&z, 0.1);
+        let raw = softmax(&z, 1.0);
+        assert!(flat[2] < raw[2] && raw[2] < sharp[2]);
+        // very hot limit approaches uniform
+        assert!((flat[0] - 1.0 / 3.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn mean_probs_averages_samples() {
+        // two one-hot-ish samples voting for different classes average
+        // to a bimodal distribution
+        let s = vec![vec![10.0f32, 0.0, 0.0], vec![0.0f32, 10.0, 0.0]];
+        let p = mean_probs(&s, 1.0);
+        assert!((p[0] - p[1]).abs() < 1e-9);
+        assert!(p[2] < p[0]);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ece_zero_when_perfectly_calibrated_bins() {
+        let mut r = ReliabilityBins::new(10);
+        // 0.75-confidence predictions that are right 75% of the time
+        for i in 0..100 {
+            r.add(0.75, i % 4 != 0);
+        }
+        assert!(r.ece() < 1e-9, "ece {}", r.ece());
+        let bins = r.bins();
+        assert_eq!(bins.len(), 1);
+        assert_eq!(bins[0].count, 100);
+        assert!((bins[0].accuracy - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ece_detects_overconfidence() {
+        let mut r = ReliabilityBins::new(10);
+        // claims 0.95, delivers 0.5
+        for i in 0..100 {
+            r.add(0.95, i % 2 == 0);
+        }
+        assert!((r.ece() - 0.45).abs() < 1e-9, "ece {}", r.ece());
+    }
+
+    #[test]
+    fn empty_bins_are_safe() {
+        let r = ReliabilityBins::new(15);
+        assert_eq!(r.ece(), 0.0);
+        assert_eq!(r.total(), 0);
+        assert!(r.bins().is_empty());
+    }
+
+    #[test]
+    fn confidence_one_lands_in_last_bin() {
+        let mut r = ReliabilityBins::new(10);
+        r.add(1.0, true);
+        r.add(0.0, false);
+        assert_eq!(r.total(), 2);
+        assert_eq!(r.bins().len(), 2);
+    }
+
+    /// Build a synthetic over-confident classifier: logits are the true
+    /// one-hot scaled hot, but the label is only right 70% of the time.
+    fn overconfident_set(n: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<usize>) {
+        let mut rng = Pcg32::seeded(seed);
+        let mut logits = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            let pred = rng.below(10);
+            let mut z = vec![0.0f32; 10];
+            z[pred] = 8.0; // ~99.97% raw softmax confidence
+            let label = if rng.bernoulli(0.7) { pred } else { (pred + 1) % 10 };
+            logits.push(z);
+            labels.push(label);
+        }
+        (logits, labels)
+    }
+
+    #[test]
+    fn fit_raises_temperature_for_overconfident_logits() {
+        let (logits, labels) = overconfident_set(400, 11);
+        let scaler = TemperatureScaler::fit(&logits, &labels);
+        assert!(
+            scaler.temperature > 1.5,
+            "overconfident logits need T > 1, got {}",
+            scaler.temperature
+        );
+        // calibrated confidence must drop toward the true 0.7 accuracy
+        let mut raw = ReliabilityBins::new(10);
+        let mut cal = ReliabilityBins::new(10);
+        for (z, &y) in logits.iter().zip(&labels) {
+            let pr = softmax(z, 1.0);
+            let pc = scaler.probs(z);
+            let k = (0..10usize).max_by(|&a, &b| pr[a].partial_cmp(&pr[b]).unwrap()).unwrap();
+            raw.add(pr[k], k == y);
+            cal.add(pc[k], k == y);
+        }
+        assert!(
+            cal.ece() < raw.ece(),
+            "temperature scaling must reduce ECE: {} vs {}",
+            cal.ece(),
+            raw.ece()
+        );
+    }
+
+    #[test]
+    fn fit_on_empty_is_identity() {
+        let s = TemperatureScaler::fit(&[], &[]);
+        assert_eq!(s.temperature, 1.0);
+    }
+
+    #[test]
+    fn fit_is_deterministic() {
+        let (logits, labels) = overconfident_set(200, 3);
+        let a = TemperatureScaler::fit(&logits, &labels).temperature;
+        let b = TemperatureScaler::fit(&logits, &labels).temperature;
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,35 @@
+//! Acting on uncertainty: adaptive MC-sample budgeting, calibration,
+//! and risk-aware serving policies.
+//!
+//! The paper's economics minimize the *cost per MC sample* (compute
+//! reuse, sample ordering, asymmetric ADC); this subsystem minimizes
+//! the *number of samples* and then acts on what they say:
+//!
+//! * [`sequential`] — early-stopping samplers over the incremental
+//!   vote/sample stream: fixed-T baseline, SPRT-style majority-margin
+//!   test, entropy-convergence test; consulted between execution
+//!   chunks by `McDropoutEngine::infer_mc_chunked`.
+//! * [`calibration`] — reliability bins / ECE and temperature scaling
+//!   so stopping thresholds and policies operate on calibrated
+//!   probabilities rather than raw (over-confident) logit mass.
+//! * [`policy`] — risk-aware decisions: accept / abstain / escalate-
+//!   to-full-T, with per-workload [`policy::RiskProfile`]s (an MNIST
+//!   misread is cheap; a bad drone pose is not).
+//! * [`budget`] — token-bucket sample budgets so the coordinator
+//!   degrades grant sizes gracefully under load instead of queueing
+//!   unboundedly.
+//!
+//! Wiring: `coordinator::server` owns an optional `AdaptiveConfig`
+//! combining all four; `coordinator::metrics` reports samples used /
+//! saved and abstention rates; `benches/adaptive_sampling.rs`
+//! quantifies the samples-vs-agreement tradeoff against fixed T = 30.
+
+pub mod budget;
+pub mod calibration;
+pub mod policy;
+pub mod sequential;
+
+pub use budget::{BudgetStats, SampleBudget, SharedBudget};
+pub use calibration::{ReliabilityBins, TemperatureScaler};
+pub use policy::{DecisionPolicy, RiskProfile, Verdict};
+pub use sequential::{ClassStopper, RegressionStopper, SequentialConfig, StopRule};

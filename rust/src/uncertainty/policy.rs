@@ -1,0 +1,241 @@
+//! Risk-aware serving policies: turn (prediction, calibrated
+//! confidence, entropy / variance) into decisions.
+//!
+//! The paper's stated purpose for MC-Dropout confidence is "planning
+//! risk-aware actions"; this module is where the serving stack acts on
+//! the signal instead of merely reporting it. A [`DecisionPolicy`]
+//! maps the uncertainty summary of a (possibly truncated) ensemble to
+//! a [`Verdict`]:
+//!
+//! * `Accept`   — confidence clears the profile's bar: serve it;
+//! * `Escalate` — the grey zone: spend the remaining MC budget (run to
+//!   full T) before deciding;
+//! * `Abstain`  — even full-T evidence is too uncertain for this
+//!   workload's risk tolerance: tell the caller instead of guessing.
+//!
+//! Risk tolerances differ per workload — a misread MNIST digit is
+//! recoverable, a bad visual-odometry pose feeds a flight controller —
+//! so thresholds come in named [`RiskProfile`]s selectable per request
+//! stream (`--risk-profile`).
+
+/// Outcome of a policy evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// Serve the prediction.
+    Accept,
+    /// Uncertain: refuse to predict; the caller sees the uncertainty
+    /// summary and decides (retry, defer to a bigger model, ask a
+    /// human, fall back to the last good pose...).
+    Abstain,
+    /// Uncertain but promising: run the remaining MC budget to full T,
+    /// then re-evaluate (terminal verdicts are Accept/Abstain only).
+    Escalate,
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Accept => "accept",
+            Verdict::Abstain => "abstain",
+            Verdict::Escalate => "escalate",
+        }
+    }
+}
+
+/// Per-workload decision thresholds.
+#[derive(Clone, Copy, Debug)]
+pub struct RiskProfile {
+    pub name: &'static str,
+    /// Accept when calibrated confidence >= this...
+    pub accept_confidence: f64,
+    /// ...and normalized vote entropy <= this.
+    pub max_entropy: f64,
+    /// Below accept but at/above this: escalate to full T (one shot);
+    /// below this: abstain immediately.
+    pub escalate_confidence: f64,
+    /// Regression: accept when total predictive variance (position
+    /// block) <= this.
+    pub max_variance: f64,
+    /// Regression grey zone: escalate while variance <= this multiple
+    /// of `max_variance`.
+    pub escalate_variance_factor: f64,
+}
+
+impl RiskProfile {
+    /// MNIST character recognition: misreads are cheap, throughput is
+    /// the point — accept aggressively, almost never abstain.
+    pub fn mnist_classify() -> Self {
+        RiskProfile {
+            name: "mnist",
+            accept_confidence: 0.70,
+            max_entropy: 0.60,
+            escalate_confidence: 0.40,
+            max_variance: f64::INFINITY,
+            escalate_variance_factor: 1.0,
+        }
+    }
+
+    /// Visual-odometry pose for drone navigation: a bad pose is a
+    /// crash — demand tight variance, abstain readily (the autonomy
+    /// stack falls back to its IMU propagation on abstention).
+    pub fn vo_pose() -> Self {
+        RiskProfile {
+            name: "vo",
+            accept_confidence: 0.90,
+            max_entropy: 0.35,
+            escalate_confidence: 0.60,
+            max_variance: 0.02,
+            escalate_variance_factor: 5.0,
+        }
+    }
+
+    /// Paranoid profile for experiments: accept only near-certainty.
+    pub fn strict() -> Self {
+        RiskProfile {
+            name: "strict",
+            accept_confidence: 0.95,
+            max_entropy: 0.20,
+            escalate_confidence: 0.70,
+            max_variance: 0.005,
+            escalate_variance_factor: 3.0,
+        }
+    }
+
+    /// Accept everything (useful as the no-policy control arm).
+    pub fn permissive() -> Self {
+        RiskProfile {
+            name: "permissive",
+            accept_confidence: 0.0,
+            max_entropy: 1.0,
+            escalate_confidence: 0.0,
+            max_variance: f64::INFINITY,
+            escalate_variance_factor: 1.0,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mnist" | "classify" => Some(Self::mnist_classify()),
+            "vo" | "pose" => Some(Self::vo_pose()),
+            "strict" => Some(Self::strict()),
+            "permissive" | "none" => Some(Self::permissive()),
+            _ => None,
+        }
+    }
+}
+
+/// A risk profile bound to the decision procedure.
+#[derive(Clone, Copy, Debug)]
+pub struct DecisionPolicy {
+    pub profile: RiskProfile,
+}
+
+impl DecisionPolicy {
+    pub fn new(profile: RiskProfile) -> Self {
+        DecisionPolicy { profile }
+    }
+
+    /// Classification decision. `at_full_t` = the ensemble already
+    /// holds the full MC budget, so escalation has nothing left to buy
+    /// and the grey zone collapses to Abstain.
+    pub fn decide_class(&self, confidence: f64, entropy: f64, at_full_t: bool) -> Verdict {
+        let p = &self.profile;
+        if confidence >= p.accept_confidence && entropy <= p.max_entropy {
+            Verdict::Accept
+        } else if !at_full_t && confidence >= p.escalate_confidence {
+            Verdict::Escalate
+        } else {
+            Verdict::Abstain
+        }
+    }
+
+    /// Regression decision on the total predictive variance of the
+    /// dimensions that matter (e.g. VO position).
+    pub fn decide_regression(&self, total_variance: f64, at_full_t: bool) -> Verdict {
+        let p = &self.profile;
+        if total_variance <= p.max_variance {
+            Verdict::Accept
+        } else if !at_full_t
+            && total_variance <= p.max_variance * p.escalate_variance_factor
+        {
+            Verdict::Escalate
+        } else {
+            Verdict::Abstain
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confident_predictions_are_accepted() {
+        let p = DecisionPolicy::new(RiskProfile::mnist_classify());
+        assert_eq!(p.decide_class(0.95, 0.05, false), Verdict::Accept);
+        assert_eq!(p.decide_class(0.95, 0.05, true), Verdict::Accept);
+    }
+
+    #[test]
+    fn grey_zone_escalates_until_full_t() {
+        let p = DecisionPolicy::new(RiskProfile::mnist_classify());
+        let v = p.decide_class(0.55, 0.7, false);
+        assert_eq!(v, Verdict::Escalate);
+        // same evidence at full T: nothing left to buy -> abstain
+        assert_eq!(p.decide_class(0.55, 0.7, true), Verdict::Abstain);
+    }
+
+    #[test]
+    fn hopeless_inputs_abstain_immediately() {
+        let p = DecisionPolicy::new(RiskProfile::mnist_classify());
+        assert_eq!(p.decide_class(0.15, 0.95, false), Verdict::Abstain);
+    }
+
+    #[test]
+    fn entropy_gate_blocks_lucky_confidence() {
+        // high top-class share but dispersed remainder: entropy gate
+        // must veto the accept
+        let mut prof = RiskProfile::mnist_classify();
+        prof.max_entropy = 0.30;
+        let p = DecisionPolicy::new(prof);
+        assert_ne!(p.decide_class(0.75, 0.55, false), Verdict::Accept);
+    }
+
+    #[test]
+    fn vo_profile_is_stricter_than_mnist() {
+        let mnist = DecisionPolicy::new(RiskProfile::mnist_classify());
+        let vo = DecisionPolicy::new(RiskProfile::vo_pose());
+        // the same mid-confidence evidence passes mnist, not vo
+        assert_eq!(mnist.decide_class(0.80, 0.30, true), Verdict::Accept);
+        assert_eq!(vo.decide_class(0.80, 0.30, true), Verdict::Abstain);
+    }
+
+    #[test]
+    fn regression_variance_ladder() {
+        let p = DecisionPolicy::new(RiskProfile::vo_pose());
+        assert_eq!(p.decide_regression(0.01, false), Verdict::Accept);
+        assert_eq!(p.decide_regression(0.05, false), Verdict::Escalate);
+        assert_eq!(p.decide_regression(0.05, true), Verdict::Abstain);
+        assert_eq!(p.decide_regression(0.5, false), Verdict::Abstain);
+    }
+
+    #[test]
+    fn permissive_accepts_everything() {
+        let p = DecisionPolicy::new(RiskProfile::permissive());
+        assert_eq!(p.decide_class(0.0, 1.0, false), Verdict::Accept);
+        assert_eq!(p.decide_regression(1e9, true), Verdict::Accept);
+    }
+
+    #[test]
+    fn profiles_parse_by_name() {
+        for (s, name) in [
+            ("mnist", "mnist"),
+            ("vo", "vo"),
+            ("strict", "strict"),
+            ("permissive", "permissive"),
+        ] {
+            assert_eq!(RiskProfile::parse(s).unwrap().name, name);
+        }
+        assert!(RiskProfile::parse("yolo").is_none());
+    }
+}

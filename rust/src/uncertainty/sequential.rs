@@ -1,0 +1,425 @@
+//! Sequential (early-stopping) samplers over the incremental MC stream.
+//!
+//! The fixed-B engine of the paper always runs `T = 30` dropout
+//! iterations. But the vote ensemble of an easy input converges long
+//! before that: after 8 unanimous votes the remaining 22 iterations
+//! cannot change the prediction and barely move the entropy estimate.
+//! The samplers here consume the ensemble *between chunks* of the
+//! chunked execution path (`McDropoutEngine::infer_mc_chunked`) and
+//! decide whether more MC samples are worth their energy:
+//!
+//! * [`StopRule::FixedT`] — the paper's baseline: always run to
+//!   `max_samples` (useful as the control arm of every comparison);
+//! * [`StopRule::MajorityMargin`] — an SPRT-style test on the
+//!   leader-vs-runner-up vote duel: stop once the vote margin is
+//!   statistically decisive at the configured confidence level;
+//! * [`StopRule::EntropyConvergence`] — stop once the normalized
+//!   predictive-entropy estimate has stabilized (the quantity Fig. 12
+//!   actually reports), with the tolerance tied to the confidence
+//!   level.
+//!
+//! All rules respect `min_samples` (never decide on a sliver of
+//! evidence) and `max_samples` (the full-T escape hatch), and their
+//! stopping time is monotone non-decreasing in the confidence level —
+//! a property the unit tests pin down.
+
+use crate::bayes::{ClassEnsemble, RegressionEnsemble};
+
+/// Which early-stopping test to run between chunks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopRule {
+    /// No early stopping: consume the full sample budget.
+    FixedT,
+    /// SPRT-style majority-margin test on the top-two vote duel.
+    MajorityMargin,
+    /// Stop when the normalized-entropy estimate has converged.
+    EntropyConvergence,
+}
+
+impl StopRule {
+    pub fn parse(s: &str) -> Option<StopRule> {
+        match s {
+            "fixed" | "fixed-t" | "none" => Some(StopRule::FixedT),
+            "margin" | "sprt" | "majority-margin" => Some(StopRule::MajorityMargin),
+            "entropy" | "entropy-convergence" => Some(StopRule::EntropyConvergence),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            StopRule::FixedT => "fixed-t",
+            StopRule::MajorityMargin => "majority-margin",
+            StopRule::EntropyConvergence => "entropy-convergence",
+        }
+    }
+}
+
+/// Configuration shared by the sequential stoppers.
+#[derive(Clone, Copy, Debug)]
+pub struct SequentialConfig {
+    pub rule: StopRule,
+    /// Confidence level `1 - alpha` of the stopping test, in (0.5, 1).
+    /// Higher values demand more evidence before stopping.
+    pub confidence: f64,
+    /// Never stop before this many samples.
+    pub min_samples: usize,
+    /// Hard ceiling (the paper's fixed T when adaptive mode is off).
+    pub max_samples: usize,
+    /// Samples per execution chunk between stopper consultations.
+    pub chunk: usize,
+    /// Consultations the convergence window spans (>= 2).
+    pub window: usize,
+}
+
+impl SequentialConfig {
+    /// Defaults matched to the paper's operating point (T = 30).
+    pub fn new(rule: StopRule, confidence: f64) -> Self {
+        SequentialConfig {
+            rule,
+            confidence: confidence.clamp(0.5 + 1e-9, 1.0 - 1e-9),
+            min_samples: 6,
+            max_samples: crate::MC_SAMPLES,
+            chunk: 5,
+            window: 2,
+        }
+    }
+
+    /// Entropy-convergence tolerance implied by the confidence level:
+    /// at 0.9 the estimate may wander by 0.1 normalized-entropy units
+    /// across the window, at 0.99 only by 0.01.
+    pub fn entropy_tolerance(&self) -> f64 {
+        1.0 - self.confidence
+    }
+
+    /// SPRT decision threshold `ln(confidence / (1 - confidence))`.
+    pub fn sprt_threshold(&self) -> f64 {
+        (self.confidence / (1.0 - self.confidence)).ln()
+    }
+}
+
+/// Effect size assumed by the majority-margin SPRT: under H1 the
+/// leading class wins a leader-vs-runner-up duel with p = 0.5 + DELTA.
+/// 0.15 matches the empirical vote sharpness of the paper's MNIST net
+/// on in-distribution inputs.
+const SPRT_DELTA: f64 = 0.15;
+
+/// Per-net-vote log-likelihood-ratio increment of the duel SPRT.
+fn sprt_llr_per_vote() -> f64 {
+    ((0.5 + SPRT_DELTA) / (0.5 - SPRT_DELTA)).ln()
+}
+
+/// Stateful stopper over a classification ensemble.
+#[derive(Clone, Debug)]
+pub struct ClassStopper {
+    cfg: SequentialConfig,
+    /// Entropy after each consultation (the convergence trace).
+    trace: Vec<f64>,
+    stopped_at: Option<usize>,
+}
+
+impl ClassStopper {
+    pub fn new(cfg: SequentialConfig) -> Self {
+        ClassStopper { cfg, trace: Vec::new(), stopped_at: None }
+    }
+
+    pub fn config(&self) -> &SequentialConfig {
+        &self.cfg
+    }
+
+    /// Sample count at which the stopper fired, if it has.
+    pub fn stopped_at(&self) -> Option<usize> {
+        self.stopped_at
+    }
+
+    /// Reset for a new request.
+    pub fn reset(&mut self) {
+        self.trace.clear();
+        self.stopped_at = None;
+    }
+
+    /// Consult the stopper with the current ensemble state. Returns
+    /// `true` when sampling should stop. Call once per executed chunk.
+    pub fn should_stop(&mut self, ens: &ClassEnsemble) -> bool {
+        let t = ens.iterations();
+        if t == 0 {
+            return false;
+        }
+        self.trace.push(ens.entropy());
+        let stop = if t >= self.cfg.max_samples {
+            true
+        } else if t < self.cfg.min_samples {
+            false
+        } else {
+            match self.cfg.rule {
+                StopRule::FixedT => false, // only the max_samples ceiling stops it
+                StopRule::MajorityMargin => self.margin_decisive(ens),
+                StopRule::EntropyConvergence => self.entropy_converged(),
+            }
+        };
+        if stop && self.stopped_at.is_none() {
+            self.stopped_at = Some(t);
+        }
+        stop
+    }
+
+    /// SPRT on the leader-vs-runner-up duel: accumulate one LLR unit
+    /// per net vote of margin, stop when it clears the threshold.
+    fn margin_decisive(&self, ens: &ClassEnsemble) -> bool {
+        let counts = ens.vote_counts();
+        let (mut n1, mut n2) = (0usize, 0usize);
+        for &c in &counts {
+            if c >= n1 {
+                n2 = n1;
+                n1 = c;
+            } else if c > n2 {
+                n2 = c;
+            }
+        }
+        (n1 - n2) as f64 * sprt_llr_per_vote() >= self.cfg.sprt_threshold()
+    }
+
+    /// Entropy estimate stable across the last `window + 1` consults.
+    fn entropy_converged(&self) -> bool {
+        let need = self.cfg.window + 1;
+        if self.trace.len() < need {
+            return false;
+        }
+        let tail = &self.trace[self.trace.len() - need..];
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &h in tail {
+            lo = lo.min(h);
+            hi = hi.max(h);
+        }
+        hi - lo <= self.cfg.entropy_tolerance()
+    }
+}
+
+/// Stateful stopper over a regression ensemble: stop when the total
+/// predictive variance (over the first `var_dims` dimensions, e.g. the
+/// VO position block) has converged in relative terms.
+#[derive(Clone, Debug)]
+pub struct RegressionStopper {
+    cfg: SequentialConfig,
+    /// Leading dimensions whose variance is tracked (3 = VO position).
+    var_dims: usize,
+    trace: Vec<f64>,
+    stopped_at: Option<usize>,
+}
+
+impl RegressionStopper {
+    pub fn new(cfg: SequentialConfig, var_dims: usize) -> Self {
+        RegressionStopper { cfg, var_dims, trace: Vec::new(), stopped_at: None }
+    }
+
+    pub fn stopped_at(&self) -> Option<usize> {
+        self.stopped_at
+    }
+
+    pub fn reset(&mut self) {
+        self.trace.clear();
+        self.stopped_at = None;
+    }
+
+    /// Consult with the current ensemble; `true` = stop sampling.
+    /// `FixedT` runs to the ceiling; both other rules reduce to
+    /// variance convergence (votes do not exist for regression).
+    pub fn should_stop(&mut self, ens: &RegressionEnsemble) -> bool {
+        let t = ens.iterations();
+        if t == 0 {
+            return false;
+        }
+        self.trace.push(ens.total_variance(self.var_dims));
+        let stop = if t >= self.cfg.max_samples {
+            true
+        } else if t < self.cfg.min_samples || matches!(self.cfg.rule, StopRule::FixedT) {
+            false // FixedT only stops at the max_samples ceiling above
+        } else {
+            self.variance_converged()
+        };
+        if stop && self.stopped_at.is_none() {
+            self.stopped_at = Some(t);
+        }
+        stop
+    }
+
+    fn variance_converged(&self) -> bool {
+        let need = self.cfg.window + 1;
+        if self.trace.len() < need {
+            return false;
+        }
+        let tail = &self.trace[self.trace.len() - need..];
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &v in tail {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        // relative stability: the spread of the variance estimate over
+        // the window, scaled by its level (plus epsilon for the
+        // zero-variance degenerate case)
+        (hi - lo) / (hi.abs() + 1e-12) <= self.cfg.entropy_tolerance()
+    }
+}
+
+/// Replay helper for tests and benches: feed a pre-generated vote
+/// stream chunk-by-chunk through a fresh stopper and return
+/// `(samples_consumed, prediction)`. Deterministic given the stream.
+pub fn replay_votes(cfg: SequentialConfig, votes: &[usize], n_classes: usize) -> (usize, usize) {
+    let mut stopper = ClassStopper::new(cfg);
+    let mut ens = ClassEnsemble::new(n_classes);
+    let mut fed = 0usize;
+    let limit = cfg.max_samples.min(votes.len());
+    while fed < limit {
+        let take = cfg.chunk.max(1).min(limit - fed);
+        for &v in &votes[fed..fed + take] {
+            ens.add_vote(v);
+        }
+        fed += take;
+        if fed < limit && stopper.should_stop(&ens) {
+            break;
+        }
+    }
+    (ens.iterations(), ens.prediction())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Pcg32;
+
+    fn votes_with_sharpness(rng: &mut Pcg32, t: usize, p_true: f64, label: usize) -> Vec<usize> {
+        (0..t)
+            .map(|_| {
+                if rng.bernoulli(p_true) {
+                    label
+                } else {
+                    let mut c = rng.below(10);
+                    if c == label {
+                        c = (c + 1) % 10;
+                    }
+                    c
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fixed_t_consumes_full_budget() {
+        let cfg = SequentialConfig::new(StopRule::FixedT, 0.9);
+        let votes = vec![3usize; 30];
+        let (used, pred) = replay_votes(cfg, &votes, 10);
+        assert_eq!(used, 30);
+        assert_eq!(pred, 3);
+    }
+
+    #[test]
+    fn unanimous_stream_stops_early_under_both_tests() {
+        let votes = vec![7usize; 30];
+        for rule in [StopRule::MajorityMargin, StopRule::EntropyConvergence] {
+            let cfg = SequentialConfig::new(rule, 0.9);
+            let (used, pred) = replay_votes(cfg, &votes, 10);
+            assert_eq!(pred, 7, "{rule:?}");
+            assert!(used < 30, "{rule:?} must truncate a unanimous stream, used {used}");
+            assert!(used >= cfg.min_samples, "{rule:?} respects min_samples");
+        }
+    }
+
+    #[test]
+    fn dispersed_stream_runs_to_ceiling() {
+        // maximally ambiguous: round-robin votes over all classes keep
+        // both the margin at <= 1 and the entropy rising
+        let votes: Vec<usize> = (0..30).map(|i| i % 10).collect();
+        let cfg = SequentialConfig::new(StopRule::MajorityMargin, 0.95);
+        let (used, _) = replay_votes(cfg, &votes, 10);
+        assert_eq!(used, 30, "no decisive margin must mean no early stop");
+    }
+
+    #[test]
+    fn never_stops_before_min_samples() {
+        let mut cfg = SequentialConfig::new(StopRule::MajorityMargin, 0.6);
+        cfg.min_samples = 10;
+        cfg.chunk = 2;
+        let votes = vec![1usize; 30];
+        let (used, _) = replay_votes(cfg, &votes, 10);
+        assert!(used >= 10, "stopped at {used} before min_samples");
+    }
+
+    #[test]
+    fn stopping_time_monotone_in_confidence() {
+        // deterministic seeds: the same vote stream replayed at rising
+        // confidence levels must never stop *earlier*
+        for seed in 0..20u64 {
+            let mut rng = Pcg32::new(seed, 5);
+            let votes = votes_with_sharpness(&mut rng, 30, 0.9, 4);
+            for rule in [StopRule::MajorityMargin, StopRule::EntropyConvergence] {
+                let mut prev = 0usize;
+                for conf in [0.6, 0.8, 0.9, 0.95, 0.99] {
+                    let mut cfg = SequentialConfig::new(rule, conf);
+                    cfg.chunk = 1; // finest granularity exposes any inversion
+                    let (used, _) = replay_votes(cfg, &votes, 10);
+                    assert!(
+                        used >= prev,
+                        "seed {seed} {rule:?}: stop at conf {conf} used {used} < {prev}"
+                    );
+                    prev = used;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sprt_threshold_grows_with_confidence() {
+        let lo = SequentialConfig::new(StopRule::MajorityMargin, 0.8);
+        let hi = SequentialConfig::new(StopRule::MajorityMargin, 0.99);
+        assert!(hi.sprt_threshold() > lo.sprt_threshold());
+        assert!(hi.entropy_tolerance() < lo.entropy_tolerance());
+    }
+
+    #[test]
+    fn regression_stopper_truncates_degenerate_variance() {
+        // constant samples: the variance estimate is exactly 0 at every
+        // t, so the stopper must fire at the first eligible consult
+        // (window + 1 consults, past min_samples)
+        let cfg = SequentialConfig::new(StopRule::EntropyConvergence, 0.9);
+        let mut stopper = RegressionStopper::new(cfg, 3);
+        let mut ens = crate::bayes::RegressionEnsemble::new(3);
+        let mut used = 0usize;
+        for i in 0..30 {
+            ens.add_sample(&[1.0, 2.0, 3.0]);
+            used = i + 1;
+            if used % cfg.chunk == 0 && stopper.should_stop(&ens) {
+                break;
+            }
+        }
+        assert!(used < 30, "degenerate regression stream must stop early, used {used}");
+        assert_eq!(stopper.stopped_at(), Some(used));
+    }
+
+    #[test]
+    fn regression_fixed_t_runs_to_ceiling() {
+        let cfg = SequentialConfig::new(StopRule::FixedT, 0.9);
+        let mut stopper = RegressionStopper::new(cfg, 3);
+        let mut ens = crate::bayes::RegressionEnsemble::new(3);
+        let mut rng = Pcg32::seeded(3);
+        let mut used = 0usize;
+        for i in 0..30 {
+            let s: Vec<f32> = (0..3).map(|_| rng.normal() as f32).collect();
+            ens.add_sample(&s);
+            used = i + 1;
+            if used % cfg.chunk == 0 && stopper.should_stop(&ens) {
+                break;
+            }
+        }
+        assert_eq!(used, 30);
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut rng = Pcg32::new(9, 5);
+        let votes = votes_with_sharpness(&mut rng, 30, 0.85, 2);
+        let cfg = SequentialConfig::new(StopRule::EntropyConvergence, 0.9);
+        let a = replay_votes(cfg, &votes, 10);
+        let b = replay_votes(cfg, &votes, 10);
+        assert_eq!(a, b);
+    }
+}

@@ -151,6 +151,21 @@ mod tests {
     }
 
     #[test]
+    fn entropy_normalization_counts_zero_slots() {
+        // zero-probability slots still count toward k: a 2-hot vote
+        // split over a 10-class ensemble normalizes by ln(10), not
+        // ln(2) — this is what keeps ClassEnsemble::entropy() < 1 for
+        // sub-uniform dispersion
+        let two_of_ten = [0.5, 0.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let h = entropy_normalized(&two_of_ten);
+        assert!((h - 2.0f64.ln() / 10.0f64.ln()).abs() < 1e-12);
+        assert!(h < 1.0);
+        // degenerate scalar and empty inputs are defined as 0
+        assert_eq!(entropy_normalized(&[1.0]), 0.0);
+        assert_eq!(entropy_normalized(&[]), 0.0);
+    }
+
+    #[test]
     fn histogram_counts_and_clamping() {
         let h = histogram(&[-1.0, 0.1, 0.5, 0.9, 2.0], 0.0, 1.0, 2);
         assert_eq!(h, vec![2, 3]);
