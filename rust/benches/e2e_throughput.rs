@@ -7,6 +7,7 @@
 //! deliverable: the PJRT execute must dominate; coordinator overhead is
 //! measured as the residual). Results land in EXPERIMENTS.md §Perf.
 
+use mc_cim::backend::BackendKind;
 use mc_cim::coordinator::{
     Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind, Request,
     Response,
@@ -125,6 +126,45 @@ fn profile_single_path(meta: &Meta, test: &MnistTest) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Reduced sweep for the bit-exact macro simulator: one cim-sim row is
+/// ~10^4 PJRT-row-equivalents of work (every bitplane, column drive and
+/// SAR conversion is simulated), so the serving load stays tiny. The
+/// point is exercising the identical coordinator/backend path, with
+/// measured energy on every response.
+fn cim_sim_smoke(test: &MnistTest) -> anyhow::Result<()> {
+    println!("== cim-sim smoke sweep (bit-exact macro simulation, measured energy) ==");
+    let coord = Coordinator::start(CoordinatorConfig {
+        workers: 1,
+        backend: BackendKind::CimSim,
+        ..Default::default()
+    })?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            coord.submit(Request::Classify { image: test.images[i].clone(), samples: 3 })
+        })
+        .collect();
+    let mut energy = 0.0;
+    for rx in rxs {
+        match rx.recv()? {
+            Response::Class(c) => {
+                assert!(c.energy_measured, "cim-sim must measure energy");
+                energy += c.energy_pj;
+            }
+            Response::Error(e) => anyhow::bail!(e),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+    println!(
+        "  4 requests x 3 samples in {:.2}s — measured CIM energy {:.1} pJ total",
+        t0.elapsed().as_secs_f64(),
+        energy
+    );
+    println!("{}", coord.metrics.summary());
+    coord.shutdown();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     if !std::path::Path::new(ARTIFACTS_DIR).join("meta.json").exists() {
         eprintln!("artifacts missing — run `make artifacts`");
@@ -132,6 +172,14 @@ fn main() -> anyhow::Result<()> {
     }
     let meta = Meta::load(ARTIFACTS_DIR)?;
     let test = MnistTest::load(ARTIFACTS_DIR)?;
+
+    let backend = BackendKind::default();
+    println!("execution backend: {}\n", backend.label());
+    if backend != BackendKind::Pjrt || Runtime::cpu().is_err() {
+        // no PJRT here: run the macro-simulator path instead of the
+        // full-load sweep (see cim_sim_smoke docs for why it is small)
+        return cim_sim_smoke(&test);
+    }
 
     if std::env::var("PROFILE_ONLY").is_ok() {
         return profile_single_path(&meta, &test);

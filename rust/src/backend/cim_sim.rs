@@ -1,0 +1,392 @@
+//! CIM macro-simulation backend: the MF-MLP forward pass executed on
+//! the bit-exact 16×31 macro, with measured energy.
+//!
+//! Each FC layer tiles onto [`CimMacro`] calls: activations are
+//! quantized per layer on the shared mid-tread grid (one delta per
+//! layer, like the xADC full-scale calibration), weight matrices are
+//! quantized once at load, and every 31-column × ≤16-row tile runs
+//! through the macro — bitplane schedule, sign-gated column drives,
+//! SAR conversions and all. Because the SAR search is exact over the
+//! plane-sum alphabet, the result equals the ideal
+//! [`BitplaneSchedule::evaluate`](crate::operator::bitplane::BitplaneSchedule::evaluate)
+//! bit for bit (`rust/tests/backend.rs` enforces this across the whole
+//! tiled pipeline).
+//!
+//! **Quantization contract** (mirrored by the bit-exactness test):
+//! per-layer shared-delta mid-tread grids for both operands at the
+//! configured bit width; the digital chain (`*s + b`, ReLU1 clip, mask
+//! × inverted-dropout scale `1/(1-p)`) runs in f32 exactly as the
+//! compiled HLO graph does.
+//!
+//! **Dropout = gating, priced for real.** A hidden mask value of zero
+//! gates the corresponding macro *row* off (`row_active`), so a
+//! dropped neuron consumes no compute cycles and no ADC conversions —
+//! the §III energy benefit the paper claims, now visible in
+//! [`MacroRunStats`] instead of only in the analytic model. Zero
+//! activations likewise leave their column lines undriven. The
+//! returned energy is priced from the measured counters
+//! ([`EnergyModel::measured_energy`]), so a request's `energy_pj`
+//! reflects what this input, these masks, actually cost.
+
+use super::{BackendCaps, ExecOutput, ExecutionBackend, Row};
+use crate::cim::macro_sim::{CimMacro, MacroRunStats};
+use crate::cim::xadc::AdcKind;
+use crate::energy::EnergyModel;
+use crate::error::McCimError;
+use crate::model::ModelSpec;
+use crate::operator::bitplane::OperatorKind;
+use crate::operator::quant::{QuantTensor, Quantizer};
+use crate::workloads::TensorFile;
+use crate::{MACRO_COLS, MACRO_ROWS};
+use anyhow::{ensure, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Raw parameters of one FC layer (`w` row-major `[fi, fo]`).
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub s: Vec<f32>,
+}
+
+/// One layer prepared for the macro: weight columns pre-quantized and
+/// pre-sliced into 31-wide tiles.
+struct QuantLayer {
+    fi: usize,
+    fo: usize,
+    /// `tiles[col_block][out_neuron]` — 31 codes (zero-padded past fi).
+    tiles: Vec<Vec<QuantTensor>>,
+    b: Vec<f32>,
+    s: Vec<f32>,
+}
+
+/// The macro-simulation substrate.
+pub struct CimSimBackend {
+    model: String,
+    dims: Vec<usize>,
+    bits: u8,
+    quant: Quantizer,
+    /// The graph's baked inverted-dropout scale `1/(1-p)`.
+    inv_keep: f32,
+    layers: Vec<QuantLayer>,
+    /// One macro instance reused across calls (interior mutability: the
+    /// array holds mutable bitcell state while a tile executes).
+    mac: Mutex<CimMacro>,
+    energy: EnergyModel,
+}
+
+impl CimSimBackend {
+    /// Build from in-memory layer parameters (tests, synthetic models).
+    pub fn from_params(spec: &ModelSpec, layers: Vec<LayerParams>, bits: u8) -> Result<Self> {
+        ensure!(spec.dims.len() >= 2, "model needs at least two dims");
+        ensure!(
+            layers.len() == spec.n_layers(),
+            "expected {} layers, got {}",
+            spec.n_layers(),
+            layers.len()
+        );
+        let quant = Quantizer::new(bits);
+        let mut prepared = Vec::with_capacity(layers.len());
+        for (l, lp) in layers.into_iter().enumerate() {
+            let (fi, fo) = (spec.dims[l], spec.dims[l + 1]);
+            ensure!(lp.w.len() == fi * fo, "layer {l}: weight matrix must be {fi}x{fo}");
+            ensure!(lp.b.len() == fo, "layer {l}: bias must be {fo}-wide");
+            ensure!(lp.s.len() == fo, "layer {l}: scale must be {fo}-wide");
+            // one shared delta per layer weight matrix
+            let wq = quant.quantize(&lp.w);
+            let mut tiles = Vec::with_capacity(fi.div_ceil(MACRO_COLS));
+            for cb in 0..fi.div_ceil(MACRO_COLS) {
+                let lo = cb * MACRO_COLS;
+                let hi = (lo + MACRO_COLS).min(fi);
+                let mut rows = Vec::with_capacity(fo);
+                for j in 0..fo {
+                    let mut codes = vec![0i32; MACRO_COLS];
+                    for (k, i) in (lo..hi).enumerate() {
+                        codes[k] = wq.codes[i * fo + j];
+                    }
+                    rows.push(QuantTensor { codes, delta: wq.delta, bits });
+                }
+                tiles.push(rows);
+            }
+            prepared.push(QuantLayer { fi, fo, tiles, b: lp.b, s: lp.s });
+        }
+        Ok(CimSimBackend {
+            model: spec.id.clone(),
+            dims: spec.dims.clone(),
+            bits,
+            quant,
+            inv_keep: (1.0 / (1.0 - spec.dropout_p)) as f32,
+            layers: prepared,
+            mac: Mutex::new(CimMacro::paper_default()),
+            energy: EnergyModel::paper_default(),
+        })
+    }
+
+    /// Load weights from the artifacts directory (no PJRT involved).
+    pub fn load(artifacts: impl AsRef<Path>, spec: &ModelSpec, bits: u8) -> Result<Self> {
+        let tf = TensorFile::load(artifacts.as_ref().join(&spec.weights))?;
+        let mut layers = Vec::with_capacity(spec.n_layers());
+        for i in 0..spec.n_layers() {
+            layers.push(LayerParams {
+                w: tf.get(&format!("w{}", i + 1))?.f32s()?.to_vec(),
+                b: tf.get(&format!("b{}", i + 1))?.f32s()?.to_vec(),
+                s: tf.get(&format!("s{}", i + 1))?.f32s()?.to_vec(),
+            });
+        }
+        Self::from_params(spec, layers, bits)
+    }
+
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    fn mask_dims(&self) -> Vec<usize> {
+        self.dims[1..self.dims.len() - 1].to_vec()
+    }
+
+    fn err(&self, reason: String) -> McCimError {
+        McCimError::Backend { backend: "cim-sim".into(), model: self.model.clone(), reason }
+    }
+
+    /// Merge cost counters, deliberately dropping the per-conversion
+    /// `plane_sums` trace (it would grow by one entry per conversion —
+    /// tens of thousands per MNIST row).
+    fn merge_counts(dst: &mut MacroRunStats, st: &MacroRunStats) {
+        dst.compute_cycles += st.compute_cycles;
+        dst.driven_col_cycles += st.driven_col_cycles;
+        dst.adc_conversions += st.adc_conversions;
+        dst.adc_cycles += st.adc_cycles;
+    }
+
+    /// One row's forward pass on the macro. `masks` = one f32 mask per
+    /// hidden layer.
+    fn forward_row(
+        &self,
+        mac: &mut CimMacro,
+        input: &[f32],
+        masks: &[Vec<f32>],
+        stats: &mut MacroRunStats,
+    ) -> Vec<f32> {
+        let last = self.layers.len() - 1;
+        let mut h = input.to_vec();
+        for (l, layer) in self.layers.iter().enumerate() {
+            let xq = self.quant.quantize(&h);
+            let mut acc = vec![0.0f32; layer.fo];
+            // a dropped hidden neuron is a gated macro row: no compute,
+            // no conversion (the §III energy win); the output layer has
+            // no dropout
+            let row_active: Vec<bool> = if l < last {
+                masks[l].iter().map(|&m| m != 0.0).collect()
+            } else {
+                vec![true; layer.fo]
+            };
+            for (cb, wrows) in layer.tiles.iter().enumerate() {
+                let lo = cb * MACRO_COLS;
+                let hi = (lo + MACRO_COLS).min(layer.fi);
+                let mut codes = vec![0i32; MACRO_COLS];
+                codes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
+                // zero activations (dropped upstream or quantized to 0)
+                // leave their column lines undriven
+                let col_active: Vec<bool> = codes.iter().map(|&c| c != 0).collect();
+                let xt = QuantTensor { codes, delta: xq.delta, bits: self.bits };
+                for rb in (0..layer.fo).step_by(MACRO_ROWS) {
+                    let rhi = (rb + MACRO_ROWS).min(layer.fo);
+                    let (out, st) =
+                        mac.correlate(&xt, &wrows[rb..rhi], &col_active, &row_active[rb..rhi]);
+                    Self::merge_counts(stats, &st);
+                    for (k, v) in out.iter().enumerate() {
+                        acc[rb + k] += *v;
+                    }
+                }
+            }
+            // digital per-feature affine, then (hidden layers) the
+            // graph's bounded ReLU1 + mask × inverted-dropout scale
+            for j in 0..layer.fo {
+                acc[j] = acc[j] * layer.s[j] + layer.b[j];
+            }
+            if l < last {
+                for j in 0..layer.fo {
+                    acc[j] = acc[j].clamp(0.0, 1.0) * masks[l][j] * self.inv_keep;
+                }
+            }
+            h = acc;
+        }
+        h
+    }
+}
+
+impl ExecutionBackend for CimSimBackend {
+    fn name(&self) -> &'static str {
+        "cim-sim"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            max_batch: usize::MAX,
+            supports_masks: true,
+            measures_energy: true,
+            native_quantization: true,
+        }
+    }
+
+    fn execute_rows(&self, rows: &[Row<'_>]) -> Result<ExecOutput, McCimError> {
+        if rows.is_empty() {
+            return Err(self.err("empty batch".into()));
+        }
+        let in_dim = self.dims[0];
+        let mask_dims = self.mask_dims();
+        let mask_bits_per_row: usize = mask_dims.iter().sum();
+        let mut mac = self.mac.lock().unwrap_or_else(|p| p.into_inner());
+        let mut stats = MacroRunStats::default();
+        let mut outputs = Vec::with_capacity(rows.len());
+        let mut rng_bits = 0u64;
+        for row in rows {
+            if row.input.len() != in_dim {
+                return Err(self.err("input dim mismatch".into()));
+            }
+            if row.masks.len() != mask_dims.len() {
+                return Err(self.err("mask count mismatch".into()));
+            }
+            for (l, m) in row.masks.iter().enumerate() {
+                if m.len() != mask_dims[l] {
+                    return Err(self.err("mask dim mismatch".into()));
+                }
+            }
+            outputs.push(self.forward_row(&mut mac, row.input, row.masks, &mut stats));
+            // every *sampled* mask element is one RNG draw (priced
+            // online — the macro sim executes samples independently, no
+            // precomputed schedule); deterministic expected-value masks
+            // cost no RNG events
+            if row.sampled_masks {
+                rng_bits += mask_bits_per_row as u64;
+            }
+        }
+        let breakdown = self.energy.measured_energy(
+            &stats,
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+            rng_bits,
+        );
+        Ok(ExecOutput { outputs, energy_pj: Some(breakdown.total_pj()), stats: Some(stats) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::f32_vec;
+    use crate::util::Pcg32;
+
+    fn tiny(dims: Vec<usize>, seed: u64) -> (ModelSpec, CimSimBackend) {
+        let spec = ModelSpec::synthetic("tiny", dims.clone());
+        let mut rng = Pcg32::seeded(seed);
+        let layers: Vec<LayerParams> = (0..dims.len() - 1)
+            .map(|l| {
+                let (fi, fo) = (dims[l], dims[l + 1]);
+                LayerParams {
+                    w: f32_vec(&mut rng, fi * fo, 1.0),
+                    b: f32_vec(&mut rng, fo, 0.1),
+                    s: vec![0.25; fo],
+                }
+            })
+            .collect();
+        let backend = CimSimBackend::from_params(&spec, layers, 6).unwrap();
+        (spec, backend)
+    }
+
+    fn binary_masks(rng: &mut Pcg32, dims: &[usize]) -> Vec<Vec<f32>> {
+        dims.iter()
+            .map(|&d| (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
+            .collect()
+    }
+
+    #[test]
+    fn outputs_are_finite_and_shaped() {
+        let (spec, b) = tiny(vec![8, 12, 4], 3);
+        let mut rng = Pcg32::seeded(9);
+        let input = f32_vec(&mut rng, 8, 1.0);
+        let masks = binary_masks(&mut rng, &spec.mask_dims());
+        let out = b
+            .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+            .unwrap();
+        assert_eq!(out.outputs.len(), 1);
+        assert_eq!(out.outputs[0].len(), 4);
+        assert!(out.outputs[0].iter().all(|v| v.is_finite()));
+        assert!(out.energy_pj.unwrap() > 0.0);
+        let stats = out.stats.unwrap();
+        assert!(stats.compute_cycles > 0 && stats.adc_conversions > 0);
+    }
+
+    #[test]
+    fn deterministic_given_identical_rows() {
+        let (spec, b) = tiny(vec![8, 12, 4], 3);
+        let mut rng = Pcg32::seeded(11);
+        let input = f32_vec(&mut rng, 8, 1.0);
+        let masks = binary_masks(&mut rng, &spec.mask_dims());
+        let row = Row { input: &input, masks: &masks, sampled_masks: true };
+        let a = b.execute_rows(&[row]).unwrap();
+        let c = b.execute_rows(&[row]).unwrap();
+        assert_eq!(a.outputs, c.outputs, "macro state must not leak across calls");
+    }
+
+    #[test]
+    fn dropped_neurons_cost_less() {
+        let (spec, b) = tiny(vec![8, 16, 4], 5);
+        let mut rng = Pcg32::seeded(13);
+        let input = f32_vec(&mut rng, 8, 1.0);
+        let all_on: Vec<Vec<f32>> = spec.mask_dims().iter().map(|&d| vec![1.0; d]).collect();
+        let half: Vec<Vec<f32>> = spec
+            .mask_dims()
+            .iter()
+            .map(|&d| (0..d).map(|j| if j % 2 == 0 { 1.0 } else { 0.0 }).collect())
+            .collect();
+        let e_on = b
+            .execute_rows(&[Row { input: &input, masks: &all_on, sampled_masks: true }])
+            .unwrap();
+        let e_half = b
+            .execute_rows(&[Row { input: &input, masks: &half, sampled_masks: true }])
+            .unwrap();
+        assert!(
+            e_half.stats.as_ref().unwrap().adc_conversions
+                < e_on.stats.as_ref().unwrap().adc_conversions,
+            "gated rows must skip conversions"
+        );
+        assert!(e_half.energy_pj.unwrap() < e_on.energy_pj.unwrap());
+    }
+
+    #[test]
+    fn deterministic_masks_pay_no_rng_energy() {
+        let (spec, b) = tiny(vec![8, 12, 4], 21);
+        let mut rng = Pcg32::seeded(22);
+        let input = f32_vec(&mut rng, 8, 1.0);
+        let masks: Vec<Vec<f32>> =
+            spec.mask_dims().iter().map(|&d| vec![0.5; d]).collect();
+        let sampled = b
+            .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+            .unwrap();
+        let det = b
+            .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: false }])
+            .unwrap();
+        assert_eq!(sampled.outputs, det.outputs, "RNG accounting must not change numerics");
+        assert!(
+            sampled.energy_pj.unwrap() > det.energy_pj.unwrap(),
+            "expected-value masks must not be priced as RNG draws"
+        );
+    }
+
+    #[test]
+    fn validation_errors_are_typed() {
+        let (_, b) = tiny(vec![8, 12, 4], 7);
+        let bad = vec![0.0f32; 5];
+        let masks: Vec<Vec<f32>> = vec![vec![1.0; 12]];
+        let err = b
+            .execute_rows(&[Row { input: &bad, masks: &masks, sampled_masks: true }])
+            .unwrap_err();
+        assert!(matches!(err, McCimError::Backend { .. }));
+        assert!(err.to_string().contains("tiny"));
+    }
+
+    // The full-pipeline bit-exactness check against
+    // BitplaneSchedule::evaluate lives in rust/tests/backend.rs.
+}

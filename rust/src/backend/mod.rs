@@ -1,0 +1,234 @@
+//! Execution backends: the compute substrates an MC-Dropout engine can
+//! run on.
+//!
+//! The paper's core experiment is running the *same* workload on
+//! different substrates — an ideal digital path and the MC-CIM macro
+//! with its ADC/RNG machinery — and comparing accuracy and energy.
+//! [`ExecutionBackend`] is that seam: the engine owns masks, batching,
+//! chunking and ensembles; a backend only evaluates rows.
+//!
+//! Three implementations ship:
+//!
+//! * [`PjrtBackend`] — the AOT-compiled HLO graphs executed through the
+//!   PJRT runtime (float semantics; energy modeled analytically).
+//!   Compiles in every build; *runs* only with `--features pjrt`.
+//! * [`CimSimBackend`] — the MF-MLP forward pass tiled onto the
+//!   bit-exact 16×31 [`crate::cim::macro_sim::CimMacro`], with the SAR
+//!   xADC in the loop. Energy is **measured** from the actual
+//!   [`MacroRunStats`] counters, not modeled.
+//! * [`StubBackend`] — fail-fast placeholder mirroring the stub
+//!   runtime's behaviour for builds/configs with no usable substrate.
+
+pub mod cim_sim;
+pub mod pjrt;
+pub mod stub;
+
+pub use cim_sim::{CimSimBackend, LayerParams};
+pub use pjrt::PjrtBackend;
+pub use stub::StubBackend;
+
+use crate::cim::macro_sim::MacroRunStats;
+use crate::error::McCimError;
+use crate::model::ModelSpec;
+use crate::runtime::Runtime;
+
+/// One execution row: a network input plus one dropout mask per hidden
+/// layer (f32 so expected-value masks work; `0.0` = neuron dropped).
+#[derive(Clone, Copy, Debug)]
+pub struct Row<'a> {
+    pub input: &'a [f32],
+    pub masks: &'a [Vec<f32>],
+    /// Whether these masks were drawn from the dropout-bit RNG (true on
+    /// the MC path) or supplied deterministically (expected-value
+    /// baseline). Measuring backends price RNG energy only for sampled
+    /// masks.
+    pub sampled_masks: bool,
+}
+
+/// Capability metadata a backend advertises to the engine.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendCaps {
+    /// Largest row count one `execute_rows` call accepts.
+    pub max_batch: usize,
+    /// Whether per-row dropout masks are honoured (all current
+    /// backends: yes).
+    pub supports_masks: bool,
+    /// Whether [`ExecOutput::energy_pj`] carries *measured* energy
+    /// (false → the engine falls back to the analytic §V model).
+    pub measures_energy: bool,
+    /// Whether the backend quantizes operands itself (the engine skips
+    /// its input fake-quantization for natively quantized substrates).
+    pub native_quantization: bool,
+}
+
+/// Result of one `execute_rows` call.
+#[derive(Clone, Debug, Default)]
+pub struct ExecOutput {
+    /// One output vector per input row, in order.
+    pub outputs: Vec<Vec<f32>>,
+    /// Hardware cost counters, when the backend simulates them.
+    pub stats: Option<MacroRunStats>,
+    /// Measured energy (pJ) for this call, when the backend measures.
+    pub energy_pj: Option<f64>,
+}
+
+/// A compute substrate that evaluates batches of (input, masks) rows.
+///
+/// Deliberately NOT `Send`: the PJRT implementation wraps client
+/// objects that are not `Send` in this crate version, so engines (and
+/// their backends) stay thread-local, one per worker (see
+/// `coordinator::server`).
+pub trait ExecutionBackend {
+    /// Short stable name ("pjrt", "cim-sim", "stub") for errors/metrics.
+    fn name(&self) -> &'static str;
+
+    /// Capability metadata (constant per instance).
+    fn caps(&self) -> BackendCaps;
+
+    /// Evaluate `rows` and return per-row network outputs plus cost
+    /// data. `rows.len()` must be within `caps().max_batch`.
+    fn execute_rows(&self, rows: &[Row<'_>]) -> Result<ExecOutput, McCimError>;
+}
+
+/// Which backend to construct (CLI / request-level selection).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// AOT HLO graphs via PJRT (needs the `pjrt` feature + artifacts).
+    Pjrt,
+    /// Bit-exact CIM macro simulation (needs weight artifacts only).
+    CimSim,
+    /// Fail-fast placeholder.
+    Stub,
+}
+
+impl BackendKind {
+    /// The build's natural default: PJRT when compiled in, otherwise
+    /// the macro simulator (which needs no PJRT at all).
+    pub fn default_for_build() -> Self {
+        if cfg!(feature = "pjrt") {
+            BackendKind::Pjrt
+        } else {
+            BackendKind::CimSim
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "pjrt" => Some(BackendKind::Pjrt),
+            "cim-sim" | "cimsim" | "cim" | "sim" => Some(BackendKind::CimSim),
+            "stub" => Some(BackendKind::Stub),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::CimSim => "cim-sim",
+            BackendKind::Stub => "stub",
+        }
+    }
+
+    /// Whether constructing this backend needs a PJRT [`Runtime`].
+    pub fn needs_runtime(&self) -> bool {
+        matches!(self, BackendKind::Pjrt)
+    }
+}
+
+impl Default for BackendKind {
+    fn default() -> Self {
+        Self::default_for_build()
+    }
+}
+
+/// Construction options shared by the backends.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BackendOptions {
+    /// Fake-quantization (pjrt) / code precision (cim-sim). `None` =
+    /// fp32 graphs on pjrt, 6-bit codes on cim-sim.
+    pub bits: Option<u8>,
+    /// Use the Pallas-kernel HLO graph instead of the fused-matmul
+    /// reference (pjrt only).
+    pub pallas: bool,
+}
+
+/// Build a backend of `kind` for `spec` from the artifacts directory.
+///
+/// `rt` must be `Some` for [`BackendKind::Pjrt`] (the caller owns the
+/// runtime so one client can serve many engines and outlive them all).
+pub fn make_backend(
+    kind: BackendKind,
+    rt: Option<&Runtime>,
+    artifacts: &str,
+    spec: &ModelSpec,
+    opts: &BackendOptions,
+) -> Result<Box<dyn ExecutionBackend>, McCimError> {
+    match kind {
+        BackendKind::Pjrt => {
+            let rt = rt.ok_or_else(|| McCimError::BackendUnavailable {
+                backend: "pjrt".into(),
+                reason: "no PJRT runtime available (stub build or client creation failed)"
+                    .into(),
+            })?;
+            let b = PjrtBackend::load(rt, artifacts, spec, opts).map_err(|e| {
+                McCimError::BackendUnavailable {
+                    backend: "pjrt".into(),
+                    reason: format!("{e:#}"),
+                }
+            })?;
+            Ok(Box::new(b))
+        }
+        BackendKind::CimSim => {
+            let b = CimSimBackend::load(artifacts, spec, opts.bits.unwrap_or(6)).map_err(
+                |e| McCimError::BackendUnavailable {
+                    backend: "cim-sim".into(),
+                    reason: format!("{e:#}"),
+                },
+            )?;
+            Ok(Box::new(b))
+        }
+        BackendKind::Stub => Ok(Box::new(StubBackend::new(spec))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing_and_labels() {
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("cim-sim"), Some(BackendKind::CimSim));
+        assert_eq!(BackendKind::parse("cimsim"), Some(BackendKind::CimSim));
+        assert_eq!(BackendKind::parse("stub"), Some(BackendKind::Stub));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::CimSim.label(), "cim-sim");
+        assert!(BackendKind::Pjrt.needs_runtime());
+        assert!(!BackendKind::CimSim.needs_runtime());
+    }
+
+    #[test]
+    fn build_default_matches_feature() {
+        let d = BackendKind::default();
+        if cfg!(feature = "pjrt") {
+            assert_eq!(d, BackendKind::Pjrt);
+        } else {
+            assert_eq!(d, BackendKind::CimSim);
+        }
+    }
+
+    #[test]
+    fn pjrt_without_runtime_is_unavailable() {
+        let spec = crate::model::ModelSpec::synthetic("t", vec![4, 3]);
+        let err = make_backend(
+            BackendKind::Pjrt,
+            None,
+            "artifacts",
+            &spec,
+            &BackendOptions::default(),
+        )
+        .err()
+        .expect("must fail without a runtime");
+        assert!(matches!(err, McCimError::BackendUnavailable { .. }));
+    }
+}

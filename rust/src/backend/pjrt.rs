@@ -1,0 +1,163 @@
+//! PJRT execution backend: the AOT-compiled HLO graph behind the
+//! [`ExecutionBackend`] seam.
+//!
+//! This module is the only place outside `runtime/` that touches the
+//! `Executable`/`DeviceTensor` types — the engine and coordinator see
+//! backends only. It compiles in every build against the runtime
+//! facade; without the `pjrt` feature the stub `Runtime::cpu()` fails
+//! before a backend can ever be constructed.
+//!
+//! The compiled graph has a *fixed* batch of `mc_batch` rows, so short
+//! batches are zero-padded here (the engine no longer knows). Weights
+//! are pre-converted to device literals once at load — the hot path
+//! never re-copies the ~1 MB of weights per execute (EXPERIMENTS.md
+//! §Perf) — and weight matrices are fake-quantized on the mid-rise
+//! grid when a precision is configured (see `operator::quant` for why
+//! mid-rise: the MF operator loses the whole `sign(w)*|x|` term when a
+//! weight rounds to zero).
+
+use super::{BackendCaps, BackendOptions, ExecOutput, ExecutionBackend, Row};
+use crate::error::McCimError;
+use crate::model::ModelSpec;
+use crate::operator::quant::Quantizer;
+use crate::runtime::{DeviceTensor, Executable, HostTensor, Runtime};
+use crate::workloads::TensorFile;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// The PJRT-backed substrate: one compiled executable + its weights.
+pub struct PjrtBackend {
+    exe: Executable,
+    weights: Vec<DeviceTensor>,
+    model: String,
+    dims: Vec<usize>,
+    mc_batch: usize,
+}
+
+impl PjrtBackend {
+    /// Load and compile from the artifacts directory.
+    pub fn load(
+        rt: &Runtime,
+        artifacts: impl AsRef<Path>,
+        spec: &ModelSpec,
+        opts: &BackendOptions,
+    ) -> Result<Self> {
+        let dir: PathBuf = artifacts.as_ref().to_path_buf();
+        let exe = rt
+            .load_hlo_text(dir.join(spec.hlo_file(opts.pallas)))
+            .context("loading network HLO")?;
+        let tf = TensorFile::load(dir.join(&spec.weights))?;
+
+        let quant = opts.bits.map(Quantizer::new);
+        let mut weights = Vec::new();
+        for i in 0..spec.n_layers() {
+            for name in [format!("w{}", i + 1), format!("b{}", i + 1), format!("s{}", i + 1)]
+            {
+                let t = tf.get(&name)?;
+                let mut data = t.f32s()?.to_vec();
+                // quantize weight matrices only (bias/scale stay digital)
+                if name.starts_with('w') {
+                    if let Some(q) = &quant {
+                        q.fake_quantize_midrise(&mut data);
+                    }
+                }
+                weights.push(HostTensor::new(data, t.shape.clone()).prepare()?);
+            }
+        }
+
+        Ok(PjrtBackend {
+            exe,
+            weights,
+            model: spec.id.clone(),
+            dims: spec.dims.clone(),
+            mc_batch: spec.mc_batch,
+        })
+    }
+
+    pub fn executable_name(&self) -> &str {
+        self.exe.name()
+    }
+
+    fn mask_dims(&self) -> Vec<usize> {
+        self.dims[1..self.dims.len() - 1].to_vec()
+    }
+
+    fn err(&self, reason: String) -> McCimError {
+        McCimError::Backend { backend: "pjrt".into(), model: self.model.clone(), reason }
+    }
+}
+
+impl ExecutionBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            max_batch: self.mc_batch,
+            supports_masks: true,
+            measures_energy: false,
+            native_quantization: false,
+        }
+    }
+
+    /// One padded execution of the fixed-B graph.
+    fn execute_rows(&self, rows: &[Row<'_>]) -> Result<ExecOutput, McCimError> {
+        if rows.is_empty() {
+            return Err(self.err("empty batch".into()));
+        }
+        if rows.len() > self.mc_batch {
+            return Err(self.err(format!(
+                "batch of {} rows exceeds compiled B = {}",
+                rows.len(),
+                self.mc_batch
+            )));
+        }
+        let b = self.mc_batch;
+        let in_dim = self.dims[0];
+        let od = *self.dims.last().unwrap();
+        let mask_dims = self.mask_dims();
+
+        let mut x = vec![0.0f32; b * in_dim];
+        let mut masks: Vec<Vec<f32>> =
+            mask_dims.iter().map(|&d| vec![0.0f32; b * d]).collect();
+        for (r, row) in rows.iter().enumerate() {
+            if row.input.len() != in_dim {
+                return Err(self.err("input dim mismatch".into()));
+            }
+            if row.masks.len() != mask_dims.len() {
+                return Err(self.err("mask count mismatch".into()));
+            }
+            x[r * in_dim..(r + 1) * in_dim].copy_from_slice(row.input);
+            for (l, m) in row.masks.iter().enumerate() {
+                if m.len() != mask_dims[l] {
+                    return Err(self.err("mask dim mismatch".into()));
+                }
+                masks[l][r * mask_dims[l]..(r + 1) * mask_dims[l]].copy_from_slice(m);
+            }
+        }
+
+        let mut dynamic = vec![HostTensor::new(x, vec![b, in_dim])];
+        for (l, m) in masks.into_iter().enumerate() {
+            dynamic.push(HostTensor::new(m, vec![b, mask_dims[l]]));
+        }
+
+        let out = self
+            .exe
+            .run_mixed(&dynamic, &self.weights)
+            .map_err(|e| self.err(format!("{e:#}")))?;
+        if out.len() != b * od {
+            return Err(self.err("unexpected output size".into()));
+        }
+        let outputs = rows
+            .iter()
+            .enumerate()
+            .map(|(r, _)| out[r * od..(r + 1) * od].to_vec())
+            .collect();
+        Ok(ExecOutput { outputs, stats: None, energy_pj: None })
+    }
+}
+
+// PJRT-backed behaviour is covered by rust/tests/integration.rs
+// against real artifacts; without the feature there is nothing
+// constructible to unit-test here.

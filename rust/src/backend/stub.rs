@@ -1,0 +1,71 @@
+//! Fail-fast stub backend.
+//!
+//! Mirrors the stub runtime's philosophy at the backend seam: the type
+//! exists in every build so configuration and error paths are testable
+//! anywhere, but executing on it always fails with an actionable typed
+//! error. Useful as the placeholder when neither PJRT nor the macro
+//! simulator can serve (and for exercising client-side error handling
+//! without artifacts).
+
+use super::{BackendCaps, ExecOutput, ExecutionBackend, Row};
+use crate::error::McCimError;
+use crate::model::ModelSpec;
+
+/// A backend that refuses to execute.
+pub struct StubBackend {
+    model: String,
+    mc_batch: usize,
+}
+
+impl StubBackend {
+    pub fn new(spec: &ModelSpec) -> Self {
+        StubBackend { model: spec.id.clone(), mc_batch: spec.mc_batch }
+    }
+}
+
+impl ExecutionBackend for StubBackend {
+    fn name(&self) -> &'static str {
+        "stub"
+    }
+
+    fn caps(&self) -> BackendCaps {
+        BackendCaps {
+            max_batch: self.mc_batch,
+            supports_masks: true,
+            measures_energy: false,
+            native_quantization: false,
+        }
+    }
+
+    fn execute_rows(&self, _rows: &[Row<'_>]) -> Result<ExecOutput, McCimError> {
+        Err(McCimError::BackendUnavailable {
+            backend: "stub".into(),
+            reason: format!(
+                "model '{}' is bound to the stub backend — rebuild with `--features pjrt` \
+                 or select the cim-sim backend",
+                self.model
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_fast_with_typed_error() {
+        let spec = ModelSpec::synthetic("tiny", vec![4, 3]);
+        let b = StubBackend::new(&spec);
+        assert_eq!(b.name(), "stub");
+        assert!(b.caps().supports_masks);
+        let input = vec![0.0f32; 4];
+        let masks: Vec<Vec<f32>> = vec![];
+        let err = b
+            .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+            .err()
+            .expect("stub must not execute");
+        assert!(matches!(err, McCimError::BackendUnavailable { .. }));
+        assert!(err.to_string().contains("tiny"));
+    }
+}

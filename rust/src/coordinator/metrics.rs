@@ -34,6 +34,10 @@ pub struct Metrics {
     escalated: AtomicU64,
     /// Lazily sized to [`SAMPLES_HIST_BINS`] on first record.
     samples_hist: Mutex<Vec<u64>>,
+    /// Total CIM energy of answered requests, in femtojoules (integer
+    /// so a relaxed atomic suffices; measured on the cim-sim backend,
+    /// modeled elsewhere).
+    energy_fj: AtomicU64,
 }
 
 impl Metrics {
@@ -56,6 +60,14 @@ impl Metrics {
 
     pub fn record_error(&self) {
         self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Accumulate one response's CIM energy (pJ), measured or modeled.
+    pub fn record_energy(&self, pj: f64) {
+        if pj > 0.0 && pj.is_finite() {
+            self.energy_fj
+                .fetch_add((pj * 1000.0).round() as u64, Ordering::Relaxed);
+        }
     }
 
     /// Record one adaptive decision: `used` MC samples executed out of
@@ -108,6 +120,11 @@ impl Metrics {
 
     pub fn errors(&self) -> u64 {
         self.errors.load(Ordering::Relaxed)
+    }
+
+    /// Total CIM energy of answered requests (pJ).
+    pub fn energy_pj(&self) -> f64 {
+        self.energy_fj.load(Ordering::Relaxed) as f64 / 1000.0
     }
 
     pub fn mc_samples_used(&self) -> u64 {
@@ -190,6 +207,10 @@ impl Metrics {
             self.latency_ms(0.5),
             self.latency_ms(0.95),
         );
+        let e = self.energy_pj();
+        if e > 0.0 {
+            s.push_str(&format!(" energy={e:.1}pJ"));
+        }
         if self.decided() > 0 {
             s.push_str(&format!(
                 " | adaptive: used={} saved={} ({:.0}%) shed={} accept={} abstain={} ({:.1}%) escalate={}",
@@ -225,6 +246,21 @@ mod tests {
         assert!((m.latency_ms(0.5) - 50.0).abs() <= 1.0);
         assert!((m.latency_ms(0.95) - 95.0).abs() <= 1.0);
         assert!(m.summary().contains("requests=100"));
+    }
+
+    #[test]
+    fn energy_accumulates_in_picojoules() {
+        let m = Metrics::new();
+        assert_eq!(m.energy_pj(), 0.0);
+        assert!(!m.summary().contains("energy="));
+        m.record_energy(27.8);
+        m.record_energy(13.9);
+        assert!((m.energy_pj() - 41.7).abs() < 1e-3);
+        assert!(m.summary().contains("energy="));
+        // non-finite / non-positive contributions are ignored
+        m.record_energy(f64::NAN);
+        m.record_energy(-1.0);
+        assert!((m.energy_pj() - 41.7).abs() < 1e-3);
     }
 
     #[test]

@@ -1,31 +1,43 @@
-//! The Layer-3 coordinator: everything between a client request and the
-//! PJRT executable.
+//! The Layer-3 coordinator: everything between a client request and an
+//! execution backend.
 //!
-//! * [`engine`] — the MC-Dropout inference engine: quantization, mask
-//!   scheduling (ideal / SRAM-RNG / Beta-perturbed sources), row
-//!   batching into the fixed-B executable, ensemble aggregation,
-//!   per-request CIM energy estimates, and the chunked execution path
-//!   the adaptive samplers consult between chunks.
+//! * [`engine`] — the MC-Dropout inference engine: one model bound to
+//!   one [`crate::backend::ExecutionBackend`]; mask scheduling (ideal /
+//!   SRAM-RNG / Beta-perturbed sources), row batching, the chunked
+//!   execution path the adaptive samplers consult between chunks, and
+//!   per-request energy (measured on the cim-sim backend, analytic §V
+//!   model otherwise).
+//! * [`request`] — the typed serving surface: [`InferenceRequest`]
+//!   builder (model id, sample count, chunking, stop rule, risk
+//!   profile, seed, backend selection) and typed responses; errors are
+//!   [`crate::error::McCimError`] values, never strings.
 //! * [`batcher`] — row-granularity dynamic batcher: packs MC iterations
 //!   and deterministic requests into full executable batches, plus the
 //!   chunk plans of the adaptive path.
 //! * [`server`] — worker-pool serving loop (std threads + mpsc; PJRT
 //!   objects are per-worker because they are not Send in this crate
-//!   version), with optional adaptive serving: sequential stoppers,
-//!   risk-policy verdicts (accept/abstain/escalate) on every response,
-//!   and a shared sample budget for graceful degradation.
-//! * [`metrics`] — throughput/latency counters plus the adaptive
-//!   ledger: samples used/saved, verdict counts, abstention rate, and
-//!   the samples-used histogram.
+//!   version). Engines are built lazily per (model, backend); worker
+//!   panics are confined to the request that caused them. Optional
+//!   adaptive serving: sequential stoppers, risk-policy verdicts
+//!   (accept/abstain/escalate) on every response, and a shared sample
+//!   budget for graceful degradation. The legacy `Request`/`Response`
+//!   enums remain as shims.
+//! * [`metrics`] — throughput/latency counters, total request energy,
+//!   plus the adaptive ledger: samples used/saved, verdict counts,
+//!   abstention rate, and the samples-used histogram.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod request;
 pub mod server;
 
 pub use batcher::{chunk_plan, RowBatcher};
 pub use engine::{EngineConfig, McDropoutEngine, McOutput, NetKind};
 pub use metrics::Metrics;
+pub use request::{
+    ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
+};
 pub use server::{
-    AdaptiveConfig, ClassifyResponse, Coordinator, CoordinatorConfig, Request, Response,
+    serve_request, AdaptiveConfig, Coordinator, CoordinatorConfig, Request, Response,
 };

@@ -1,0 +1,267 @@
+//! Typed request/response surface of the coordinator.
+//!
+//! [`InferenceRequest`] replaces the closed `Request` enum: a request
+//! names its *model* (registry id), its *kind*, and optionally
+//! per-request serving knobs — sample count, chunking, stop rule,
+//! confidence, risk profile, RNG seed, and backend — each defaulting
+//! to the coordinator's configuration when absent. Construction is a
+//! consuming builder:
+//!
+//! ```ignore
+//! let req = InferenceRequest::classify(image)
+//!     .with_samples(30)
+//!     .with_stop_rule(StopRule::EntropyConvergence)
+//!     .with_confidence(0.95)
+//!     .with_seed(42)
+//!     .with_backend(BackendKind::CimSim);
+//! ```
+//!
+//! Responses are typed ([`InferenceResponse`]) and failures are
+//! [`McCimError`] values instead of strings. The legacy
+//! `Request`/`Response` enums survive as thin shims in
+//! `coordinator::server`.
+
+use crate::backend::BackendKind;
+use crate::error::{McCimError, RequestKind};
+use crate::uncertainty::policy::{RiskProfile, Verdict};
+use crate::uncertainty::sequential::StopRule;
+
+/// A serving request (see module docs for the builder).
+#[derive(Clone, Debug)]
+pub struct InferenceRequest {
+    /// Model registry id ("mnist", "vo", "vo-thin", or a registered
+    /// custom model).
+    pub model: String,
+    /// What to do with the outputs (vote ensemble vs mean/variance).
+    pub kind: RequestKind,
+    /// Network input (width must match the model's input dim).
+    pub input: Vec<f32>,
+    /// MC sample count — the fixed T, or the adaptive ceiling.
+    pub samples: usize,
+    /// Samples per stopper consultation (adaptive path only).
+    pub chunk: Option<usize>,
+    /// Per-request early-stopping rule (overrides the coordinator's;
+    /// `Some(_)` on a non-adaptive coordinator turns this request
+    /// adaptive).
+    pub stop_rule: Option<StopRule>,
+    /// Per-request stopping confidence in (0.5, 1).
+    pub confidence: Option<f64>,
+    /// Per-request risk profile for the accept/abstain/escalate verdict.
+    pub risk_profile: Option<RiskProfile>,
+    /// Deterministic mask RNG seed (None = the worker's shared stream).
+    pub seed: Option<u64>,
+    /// Backend override (None = the coordinator's default).
+    pub backend: Option<BackendKind>,
+}
+
+impl InferenceRequest {
+    pub fn new(model: impl Into<String>, kind: RequestKind, input: Vec<f32>) -> Self {
+        InferenceRequest {
+            model: model.into(),
+            kind,
+            input,
+            samples: crate::MC_SAMPLES,
+            chunk: None,
+            stop_rule: None,
+            confidence: None,
+            risk_profile: None,
+            seed: None,
+            backend: None,
+        }
+    }
+
+    /// Classification on the default classifier model.
+    pub fn classify(input: Vec<f32>) -> Self {
+        Self::new("mnist", RequestKind::Classify, input)
+    }
+
+    /// Pose regression on the default regression model.
+    pub fn regress(input: Vec<f32>) -> Self {
+        Self::new("vo", RequestKind::Regress, input)
+    }
+
+    pub fn with_model(mut self, model: impl Into<String>) -> Self {
+        self.model = model.into();
+        self
+    }
+
+    pub fn with_samples(mut self, samples: usize) -> Self {
+        self.samples = samples;
+        self
+    }
+
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = Some(chunk);
+        self
+    }
+
+    pub fn with_stop_rule(mut self, rule: StopRule) -> Self {
+        self.stop_rule = Some(rule);
+        self
+    }
+
+    pub fn with_confidence(mut self, confidence: f64) -> Self {
+        self.confidence = Some(confidence);
+        self
+    }
+
+    pub fn with_risk_profile(mut self, profile: RiskProfile) -> Self {
+        self.risk_profile = Some(profile);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = Some(seed);
+        self
+    }
+
+    pub fn with_backend(mut self, backend: BackendKind) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// Whether any adaptive-serving knob is set on the request itself.
+    pub fn has_adaptive_overrides(&self) -> bool {
+        self.stop_rule.is_some()
+            || self.confidence.is_some()
+            || self.chunk.is_some()
+            || self.risk_profile.is_some()
+    }
+
+    /// Whether this request carries no per-request overrides at all
+    /// (such requests are eligible for row micro-batching).
+    pub fn is_plain(&self) -> bool {
+        !self.has_adaptive_overrides() && self.seed.is_none() && self.backend.is_none()
+    }
+}
+
+/// Classification response.
+#[derive(Clone, Debug)]
+pub struct ClassifyResponse {
+    /// Model that served the request.
+    pub model: String,
+    pub prediction: usize,
+    /// Vote share of the winning class (the paper's confidence).
+    pub confidence: f64,
+    /// Temperature-calibrated mean-softmax mass of the winning class
+    /// (equals `confidence`'s role on the non-adaptive path).
+    pub calibrated_confidence: f64,
+    pub entropy: f64,
+    pub votes: Vec<usize>,
+    /// Request energy (pJ): measured macro counters on a measuring
+    /// backend (see `energy_measured`), the §V analytic model otherwise.
+    pub energy_pj: f64,
+    /// True when `energy_pj` is a measurement, not a model.
+    pub energy_measured: bool,
+    /// MC samples actually executed (== the request's `samples` on the
+    /// fixed-T path; possibly fewer under adaptive serving).
+    pub samples_used: usize,
+    /// Risk-policy verdict (always `Accept` on the fixed-T path).
+    pub verdict: Verdict,
+}
+
+/// Pose-regression response.
+#[derive(Clone, Debug)]
+pub struct PoseResponse {
+    /// Model that served the request.
+    pub model: String,
+    pub mean: Vec<f64>,
+    pub variance: Vec<f64>,
+    /// Request energy (pJ); see [`ClassifyResponse::energy_pj`].
+    pub energy_pj: f64,
+    pub energy_measured: bool,
+    /// MC samples actually executed.
+    pub samples_used: usize,
+    /// Risk-policy verdict (always `Accept` on the fixed-T path).
+    pub verdict: Verdict,
+}
+
+/// A successful typed response.
+#[derive(Clone, Debug)]
+pub enum InferenceResponse {
+    Class(ClassifyResponse),
+    Pose(PoseResponse),
+}
+
+impl InferenceResponse {
+    pub fn samples_used(&self) -> usize {
+        match self {
+            InferenceResponse::Class(c) => c.samples_used,
+            InferenceResponse::Pose(p) => p.samples_used,
+        }
+    }
+
+    pub fn verdict(&self) -> Verdict {
+        match self {
+            InferenceResponse::Class(c) => c.verdict,
+            InferenceResponse::Pose(p) => p.verdict,
+        }
+    }
+
+    pub fn energy_pj(&self) -> f64 {
+        match self {
+            InferenceResponse::Class(c) => c.energy_pj,
+            InferenceResponse::Pose(p) => p.energy_pj,
+        }
+    }
+
+    pub fn energy_measured(&self) -> bool {
+        match self {
+            InferenceResponse::Class(c) => c.energy_measured,
+            InferenceResponse::Pose(p) => p.energy_measured,
+        }
+    }
+
+    pub fn model(&self) -> &str {
+        match self {
+            InferenceResponse::Class(c) => &c.model,
+            InferenceResponse::Pose(p) => &p.model,
+        }
+    }
+}
+
+/// What the typed serving surface returns.
+pub type InferenceResult = Result<InferenceResponse, McCimError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_plain() {
+        let r = InferenceRequest::classify(vec![0.0; 4]);
+        assert_eq!(r.model, "mnist");
+        assert_eq!(r.kind, RequestKind::Classify);
+        assert_eq!(r.samples, crate::MC_SAMPLES);
+        assert!(r.is_plain());
+        assert!(!r.has_adaptive_overrides());
+    }
+
+    #[test]
+    fn builder_overrides_compose() {
+        let r = InferenceRequest::regress(vec![0.0; 8])
+            .with_model("vo-thin")
+            .with_samples(12)
+            .with_chunk(4)
+            .with_stop_rule(StopRule::MajorityMargin)
+            .with_confidence(0.95)
+            .with_risk_profile(RiskProfile::strict())
+            .with_seed(7)
+            .with_backend(BackendKind::CimSim);
+        assert_eq!(r.model, "vo-thin");
+        assert_eq!(r.samples, 12);
+        assert_eq!(r.chunk, Some(4));
+        assert_eq!(r.stop_rule, Some(StopRule::MajorityMargin));
+        assert_eq!(r.seed, Some(7));
+        assert_eq!(r.backend, Some(BackendKind::CimSim));
+        assert!(r.has_adaptive_overrides());
+        assert!(!r.is_plain());
+    }
+
+    #[test]
+    fn seed_alone_disables_microbatching_only() {
+        let r = InferenceRequest::classify(vec![0.0; 4]).with_seed(1);
+        assert!(!r.is_plain());
+        assert!(!r.has_adaptive_overrides());
+    }
+}

@@ -1,29 +1,51 @@
 //! Worker-pool serving loop.
 //!
 //! PJRT objects are not `Send` in this crate version, so each worker
-//! thread constructs its own `Runtime` + engines and pulls jobs from a
+//! thread constructs its own backends + engines and pulls jobs from a
 //! shared queue (std mpsc behind a mutex — contention is negligible
-//! next to a PJRT execute). Responses travel over per-request channels.
+//! next to an execute). Responses travel over per-request channels.
 //!
-//! This is the end-to-end driver's substrate: requests in, prediction +
-//! confidence + modeled CIM energy out, with metrics for
-//! throughput/latency reporting.
+//! ## Backends and models
+//!
+//! Workers serve [`InferenceRequest`]s: each names a model id (looked
+//! up in the [`ModelRegistry`]) and may override the backend
+//! ([`BackendKind`]). Engines are built lazily per (model, backend)
+//! pair — the default backend's `mnist`/`vo` engines are built eagerly
+//! at worker start so misconfiguration fails fast. The default backend
+//! is PJRT when the `pjrt` feature is compiled in and the bit-exact
+//! CIM macro simulator (`cim-sim`) otherwise, so the default build
+//! serves real traffic — with *measured* per-request energy — without
+//! any PJRT at all.
+//!
+//! Failures are typed [`McCimError`]s carrying the failing model id
+//! and request kind; worker panics are caught per request (the pool
+//! survives) and surface as [`McCimError::WorkerPanic`]. The legacy
+//! `Request`/`Response` enums remain as thin shims over the typed
+//! surface.
 //!
 //! ## Adaptive serving
 //!
-//! With [`CoordinatorConfig::adaptive`] set, classification and
-//! regression requests run on the chunked engine path: MC rows execute
-//! in chunks and a sequential stopper (`uncertainty::sequential`)
-//! decides between chunks whether the ensemble has converged. The
-//! risk policy then turns the (calibrated) uncertainty summary into a
-//! verdict — accept, abstain, or escalate to the remaining budget —
-//! and every [`Response`] carries that verdict plus the samples
-//! actually spent. An optional shared sample budget degrades the
-//! per-request ceiling gracefully under load.
+//! With [`CoordinatorConfig::adaptive`] set (or per-request stop-rule
+//! overrides), classification and regression requests run on the
+//! chunked engine path: MC rows execute in chunks and a sequential
+//! stopper (`uncertainty::sequential`) decides between chunks whether
+//! the ensemble has converged. The risk policy then turns the
+//! (calibrated) uncertainty summary into a verdict — accept, abstain,
+//! or escalate to the remaining budget — and every response carries
+//! that verdict plus the samples actually spent. An optional shared
+//! sample budget degrades the per-request ceiling gracefully under
+//! load.
 
-use super::engine::{EngineConfig, McDropoutEngine, NetKind};
+use super::engine::McDropoutEngine;
 use super::metrics::Metrics;
+use super::request::{
+    ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
+};
+use crate::backend::{make_backend, BackendKind, BackendOptions};
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
+use crate::energy::ModeConfig;
+use crate::error::{McCimError, RequestKind};
+use crate::model::ModelRegistry;
 use crate::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
 use crate::runtime::Runtime;
 use crate::uncertainty::policy::{DecisionPolicy, RiskProfile, Verdict};
@@ -33,12 +55,13 @@ use crate::uncertainty::sequential::{
 use crate::uncertainty::{SharedBudget, TemperatureScaler};
 use crate::workloads::Meta;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// A serving request.
+/// A serving request (legacy shim — prefer [`InferenceRequest`]).
 #[derive(Clone, Debug)]
 pub enum Request {
     /// Classify an image with `samples` MC-Dropout iterations.
@@ -47,26 +70,20 @@ pub enum Request {
     Regress { features: Vec<f32>, samples: usize },
 }
 
-/// Classification response.
-#[derive(Clone, Debug)]
-pub struct ClassifyResponse {
-    pub prediction: usize,
-    /// Vote share of the winning class (the paper's confidence).
-    pub confidence: f64,
-    /// Temperature-calibrated mean-softmax mass of the winning class
-    /// (equals `confidence`'s role on the non-adaptive path).
-    pub calibrated_confidence: f64,
-    pub entropy: f64,
-    pub votes: Vec<usize>,
-    pub energy_pj: f64,
-    /// MC samples actually executed (== the request's `samples` on the
-    /// fixed-T path; possibly fewer under adaptive serving).
-    pub samples_used: usize,
-    /// Risk-policy verdict (always `Accept` on the fixed-T path).
-    pub verdict: Verdict,
+impl From<Request> for InferenceRequest {
+    fn from(r: Request) -> Self {
+        match r {
+            Request::Classify { image, samples } => {
+                InferenceRequest::classify(image).with_samples(samples)
+            }
+            Request::Regress { features, samples } => {
+                InferenceRequest::regress(features).with_samples(samples)
+            }
+        }
+    }
 }
 
-/// Generic response.
+/// Generic response (legacy shim — prefer [`InferenceResult`]).
 #[derive(Clone, Debug)]
 pub enum Response {
     Class(ClassifyResponse),
@@ -82,9 +99,52 @@ pub enum Response {
     Error(String),
 }
 
+impl From<InferenceResponse> for Response {
+    fn from(r: InferenceResponse) -> Self {
+        match r {
+            InferenceResponse::Class(c) => Response::Class(c),
+            InferenceResponse::Pose(p) => Response::Pose {
+                mean: p.mean,
+                variance: p.variance,
+                energy_pj: p.energy_pj,
+                samples_used: p.samples_used,
+                verdict: p.verdict,
+            },
+        }
+    }
+}
+
+impl From<InferenceResult> for Response {
+    fn from(r: InferenceResult) -> Self {
+        match r {
+            Ok(resp) => resp.into(),
+            Err(e) => Response::Error(e.to_string()),
+        }
+    }
+}
+
+/// Where a job's answer goes: the typed channel or the legacy one.
+enum Responder {
+    Typed(Sender<InferenceResult>),
+    Legacy(Sender<Response>),
+}
+
+impl Responder {
+    fn send(&self, result: InferenceResult) {
+        match self {
+            Responder::Typed(tx) => {
+                let _ = tx.send(result);
+            }
+            Responder::Legacy(tx) => {
+                let _ = tx.send(result.into());
+            }
+        }
+    }
+}
+
 struct Job {
-    request: Request,
-    respond: Sender<Response>,
+    request: InferenceRequest,
+    respond: Responder,
 }
 
 /// Adaptive-serving configuration: stopper + policy + calibration (+
@@ -123,18 +183,24 @@ impl AdaptiveConfig {
 pub struct CoordinatorConfig {
     pub artifacts: String,
     pub workers: usize,
-    /// Precision (None = fp32 graph inputs).
+    /// Default execution backend for requests that don't override it.
+    pub backend: BackendKind,
+    /// Precision (None = fp32 pjrt graphs / 6-bit cim-sim codes).
     pub bits: Option<u8>,
     /// Dropout-bit source: None = ideal Bernoulli; Some(a) = Beta(a,a)
     /// perturbed (the Fig. 12(c)/13(f) non-ideality study).
     pub beta_a: Option<f64>,
-    /// Use the Pallas-kernel graph.
+    /// Use the Pallas-kernel graph (pjrt backend only).
     pub pallas: bool,
     /// Pack classification rows from *multiple* queued requests into
     /// one fixed-B execution when their MC sample counts fit (pays off
     /// for sub-batch requests, e.g. 10-sample previews). Ignored when
     /// `adaptive` is set — adaptive requests are variable-length by
-    /// nature and run on the chunked path instead.
+    /// nature and run on the chunked path instead — and on measuring
+    /// backends (cim-sim), where there is no fixed-B execution to
+    /// amortize and packing would smear per-request measured energy.
+    /// Requests carrying per-request overrides (seed, backend, stop
+    /// rule) are never micro-batched.
     pub microbatch: bool,
     /// Adaptive sampling + risk policies (None = the paper's fixed-T).
     pub adaptive: Option<AdaptiveConfig>,
@@ -146,6 +212,7 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             artifacts: crate::workloads::ARTIFACTS_DIR.to_string(),
             workers: 2,
+            backend: BackendKind::default(),
             bits: None,
             beta_a: None,
             pallas: false,
@@ -165,7 +232,8 @@ pub struct Coordinator {
 
 impl Coordinator {
     /// Start the worker pool. Fails fast if artifacts are missing (the
-    /// first worker validates before the pool is returned).
+    /// registry is validated before the pool is returned; each worker
+    /// additionally builds its default engines up front).
     pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
         // Validate artifacts on the caller thread for a clean error.
         Meta::load(&cfg.artifacts).context("artifacts missing — run `make artifacts`")?;
@@ -187,8 +255,9 @@ impl Coordinator {
         Ok(Coordinator { tx: Some(tx), workers, metrics })
     }
 
-    /// Submit a request; returns the response receiver immediately.
-    pub fn submit(&self, request: Request) -> Receiver<Response> {
+    /// Submit a typed request; returns the response receiver
+    /// immediately.
+    pub fn submit_request(&self, request: InferenceRequest) -> Receiver<InferenceResult> {
         let (rtx, rrx) = channel();
         // Send failures mean the pool is shut down; the receiver will
         // simply report disconnection to the caller.
@@ -196,11 +265,29 @@ impl Coordinator {
             .tx
             .as_ref()
             .expect("coordinator running")
-            .send(Job { request, respond: rtx });
+            .send(Job { request, respond: Responder::Typed(rtx) });
         rrx
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit a typed request and wait.
+    pub fn call_request(&self, request: InferenceRequest) -> InferenceResult {
+        self.submit_request(request)
+            .recv()
+            .unwrap_or(Err(McCimError::WorkerLost))
+    }
+
+    /// Submit a legacy request (shim over [`Self::submit_request`]).
+    pub fn submit(&self, request: Request) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        let _ = self
+            .tx
+            .as_ref()
+            .expect("coordinator running")
+            .send(Job { request: request.into(), respond: Responder::Legacy(rtx) });
+        rrx
+    }
+
+    /// Convenience: submit a legacy request and wait.
     pub fn call(&self, request: Request) -> Result<Response> {
         self.submit(request)
             .recv()
@@ -216,41 +303,126 @@ impl Coordinator {
     }
 }
 
+/// Per-worker mutable state: lazily built engines keyed by (model,
+/// backend), per-model mask sources, and the (lazily created) PJRT
+/// runtime. `engines` is declared before `rt` so engines drop first.
+struct WorkerState {
+    engines: HashMap<(String, BackendKind), McDropoutEngine>,
+    srcs: HashMap<String, Box<dyn DropoutBitSource>>,
+    rt: Option<Runtime>,
+    worker_id: usize,
+}
+
+/// Stable per-model RNG-stream salt: a function of the model id alone,
+/// so registering additional models never shifts the builtin streams
+/// (the legacy salts — mnist 0, vo 1000 — are preserved exactly).
+fn model_salt(model: &str) -> u64 {
+    match model {
+        "mnist" => 0,
+        "vo" => 1000,
+        "vo-thin" => 2000,
+        _ => {
+            // FNV-1a over the id, offset past the builtin salts
+            let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+            for b in model.bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0100_0000_01b3);
+            }
+            3000 + (h % 1_000_000) * 1000
+        }
+    }
+}
+
+fn make_source(cfg: &CoordinatorConfig, keep: f64, seed: u64) -> Box<dyn DropoutBitSource> {
+    match cfg.beta_a {
+        None => Box::new(IdealBernoulli::new(keep, seed)),
+        Some(a) => Box::new(BetaPerturbedBernoulli::new(keep, a, seed)),
+    }
+}
+
+/// Build (once) the engine for (model, kind) plus the model's shared
+/// mask source.
+fn ensure_engine(
+    state: &mut WorkerState,
+    cfg: &CoordinatorConfig,
+    registry: &ModelRegistry,
+    model: &str,
+    kind: BackendKind,
+) -> Result<(), McCimError> {
+    let key = (model.to_string(), kind);
+    if state.engines.contains_key(&key) {
+        return Ok(());
+    }
+    let spec = registry.get(model)?;
+    if kind.needs_runtime() && state.rt.is_none() {
+        state.rt = Some(Runtime::cpu().map_err(|e| McCimError::BackendUnavailable {
+            backend: kind.label().into(),
+            reason: format!("{e:#}"),
+        })?);
+    }
+    let opts = BackendOptions { bits: cfg.bits, pallas: cfg.pallas };
+    let backend = make_backend(kind, state.rt.as_ref(), &cfg.artifacts, spec, &opts)?;
+    let engine = McDropoutEngine::with_backend(
+        backend,
+        spec,
+        cfg.bits,
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .map_err(|e| McCimError::Backend {
+        backend: kind.label().into(),
+        model: model.into(),
+        reason: format!("{e:#}"),
+    })?;
+    if !state.srcs.contains_key(model) {
+        state.srcs.insert(
+            model.to_string(),
+            make_source(
+                cfg,
+                engine.mask_keep(),
+                cfg.seed + model_salt(model) + state.worker_id as u64,
+            ),
+        );
+    }
+    state.engines.insert(key, engine);
+    Ok(())
+}
+
+/// Micro-batching eligibility: a plain fixed-T classify on the default
+/// classifier with no per-request overrides.
+fn microbatchable(r: &InferenceRequest) -> bool {
+    r.kind == RequestKind::Classify && r.model == "mnist" && r.is_plain()
+}
+
 fn worker_loop(
     worker_id: usize,
     cfg: CoordinatorConfig,
     rx: Arc<Mutex<Receiver<Job>>>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
-    let rt = Runtime::cpu()?;
     let meta = Meta::load(&cfg.artifacts)?;
-    let mk_engine = |net: NetKind| -> Result<McDropoutEngine> {
-        let mut ec = EngineConfig::new(net);
-        ec.bits = cfg.bits;
-        ec.pallas = cfg.pallas;
-        McDropoutEngine::load(&rt, &cfg.artifacts, &meta, &ec)
+    let registry = ModelRegistry::builtin(&meta);
+    let mut state = WorkerState {
+        engines: HashMap::new(),
+        srcs: HashMap::new(),
+        rt: None,
+        worker_id,
     };
-    let mnist = mk_engine(NetKind::Mnist)?;
-    let vo = mk_engine(NetKind::Vo)?;
-
-    // per-net dropout-bit sources (the nets train with different keep
-    // probabilities; see meta.json *_mask_keep)
-    let mk_src = |keep: f64, salt: u64| -> Box<dyn DropoutBitSource> {
-        match cfg.beta_a {
-            None => Box::new(IdealBernoulli::new(keep, cfg.seed + salt + worker_id as u64)),
-            Some(a) => Box::new(BetaPerturbedBernoulli::new(
-                keep,
-                a,
-                cfg.seed + salt + worker_id as u64,
-            )),
-        }
-    };
-    let mut src_mnist = mk_src(mnist.mask_keep(), 0);
-    let mut src_vo = mk_src(vo.mask_keep(), 1000);
+    // fail fast: default-backend engines for both builtin workloads
+    ensure_engine(&mut state, &cfg, &registry, "mnist", cfg.backend)?;
+    ensure_engine(&mut state, &cfg, &registry, "vo", cfg.backend)?;
 
     // adaptive requests are variable-length: micro-batching their rows
-    // would pin every co-batched request to the slowest stopper
-    let microbatch = cfg.microbatch && cfg.adaptive.is_none();
+    // would pin every co-batched request to the slowest stopper. On a
+    // measuring backend packing is pointless (no fixed-B execution to
+    // amortize) and would smear each request's measured energy across
+    // its batch-mates, so those serve solo too.
+    let mnist_engine = state
+        .engines
+        .get(&("mnist".to_string(), cfg.backend))
+        .expect("mnist engine built above");
+    let microbatch =
+        cfg.microbatch && cfg.adaptive.is_none() && !mnist_engine.measures_energy();
+    let mnist_batch = mnist_engine.mc_batch();
 
     loop {
         // take one job (blocking), then optionally drain compatible
@@ -262,26 +434,20 @@ fn worker_loop(
                 Err(_) => return Ok(()), // queue closed
             };
             let mut extra = Vec::new();
-            if microbatch {
-                let mut budget = match &first.request {
-                    Request::Classify { samples, .. } => {
-                        mnist.mc_batch().saturating_sub(*samples)
-                    }
-                    _ => 0,
-                };
+            if microbatch && microbatchable(&first.request) {
+                let mut budget = mnist_batch.saturating_sub(first.request.samples);
                 while budget > 0 {
                     match guard.try_recv() {
-                        Ok(j) => match &j.request {
-                            Request::Classify { samples, .. } if *samples <= budget => {
-                                budget -= samples;
+                        Ok(j) => {
+                            if microbatchable(&j.request) && j.request.samples <= budget {
+                                budget -= j.request.samples;
                                 extra.push(j);
-                            }
-                            _ => {
+                            } else {
                                 // incompatible: handle it solo afterwards
                                 extra.push(j);
                                 break;
                             }
-                        },
+                        }
                         Err(_) => break,
                     }
                 }
@@ -291,12 +457,13 @@ fn worker_loop(
 
         let mut batchable = vec![job];
         let mut solo = Vec::new();
+        let mut packed = batchable[0].request.samples;
         for j in extra {
-            let fits = matches!(
-                (&batchable[0].request, &j.request),
-                (Request::Classify { .. }, Request::Classify { .. })
-            );
-            if fits {
+            if microbatchable(&batchable[0].request)
+                && microbatchable(&j.request)
+                && packed + j.request.samples <= mnist_batch
+            {
+                packed += j.request.samples;
                 batchable.push(j);
             } else {
                 solo.push(j);
@@ -304,164 +471,248 @@ fn worker_loop(
         }
 
         if batchable.len() > 1 {
-            microbatch_classify(&mnist, &mut *src_mnist, batchable, &metrics);
+            microbatch_classify(&mut state, &cfg, batchable, &metrics);
         } else {
             let job = batchable.pop().unwrap();
-            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, job, &cfg, &metrics);
+            process_job(&mut state, &cfg, &registry, job, &metrics);
         }
         for j in solo {
-            respond_one(&mnist, &vo, &mut *src_mnist, &mut *src_vo, j, &cfg, &metrics);
+            process_job(&mut state, &cfg, &registry, j, &metrics);
         }
     }
 }
 
-fn respond_one(
-    mnist: &McDropoutEngine,
-    vo: &McDropoutEngine,
-    src_mnist: &mut dyn DropoutBitSource,
-    src_vo: &mut dyn DropoutBitSource,
+fn process_job(
+    state: &mut WorkerState,
+    cfg: &CoordinatorConfig,
+    registry: &ModelRegistry,
     job: Job,
-    cfg: &CoordinatorConfig,
     metrics: &Metrics,
 ) {
     let t0 = Instant::now();
-    let response = handle(mnist, vo, src_mnist, src_vo, &job.request, cfg, metrics);
-    match &response {
-        Response::Error(_) => metrics.record_error(),
-        _ => metrics.record_request(t0.elapsed()),
-    }
-    let _ = job.respond.send(response);
-}
-
-/// Pack the MC rows of several classification requests into one
-/// fixed-B execution and fan the per-row outputs back out.
-fn microbatch_classify(
-    mnist: &McDropoutEngine,
-    src: &mut dyn DropoutBitSource,
-    jobs: Vec<Job>,
-    metrics: &Metrics,
-) {
-    use crate::dropout::mask::DropoutMask;
-    let t0 = Instant::now();
-    // zero-sample requests have no rows to pack and no distribution to
-    // report — answer them with an error instead of letting the empty
-    // ensemble panic the worker
-    let (jobs, empty): (Vec<Job>, Vec<Job>) = jobs.into_iter().partition(|j| {
-        !matches!(&j.request, Request::Classify { samples: 0, .. })
+    // per-request panic boundary: covers lazy engine construction,
+    // registry lookups and serving; a panic fails this request, not
+    // the worker. (The public `serve_request` itself has no guard —
+    // direct callers like tests want panics visible.)
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        execute_job(state, cfg, registry, &job.request, metrics)
+    }))
+    .unwrap_or_else(|p| {
+        Err(McCimError::WorkerPanic {
+            model: job.request.model.clone(),
+            kind: job.request.kind,
+            reason: panic_text(p),
+        })
     });
-    for job in empty {
-        metrics.record_error();
-        let _ = job
-            .respond
-            .send(Response::Error("MC inference needs at least one sample".into()));
-    }
-    if jobs.is_empty() {
-        return;
-    }
-    let mask_dims: Vec<usize> =
-        mnist.dims()[1..mnist.dims().len() - 1].to_vec();
-    let mut rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::new();
-    let mut spans = Vec::new(); // (start, len) per job
-    for job in &jobs {
-        let Request::Classify { image, samples } = &job.request else {
-            unreachable!("microbatch only packs classify jobs");
-        };
-        let start = rows.len();
-        for _ in 0..*samples {
-            let masks: Vec<Vec<f32>> = mask_dims
-                .iter()
-                .map(|&d| DropoutMask::sample(d, src).to_f32())
-                .collect();
-            rows.push((image.clone(), masks));
+    match &result {
+        Ok(r) => {
+            metrics.record_request(t0.elapsed());
+            metrics.record_energy(r.energy_pj());
         }
-        spans.push((start, *samples));
+        Err(_) => metrics.record_error(),
     }
+    job.respond.send(result);
+}
 
-    match mnist.run_rows(&rows) {
-        Ok(outs) => {
-            metrics.record_execution(rows.len());
-            for (job, (start, len)) in jobs.into_iter().zip(spans) {
-                let mut ens = ClassEnsemble::new(mnist.out_dim());
-                for o in &outs[start..start + len] {
-                    ens.add_logits(o);
-                }
-                metrics.record_request(t0.elapsed());
-                let _ = job.respond.send(Response::Class(ClassifyResponse {
-                    prediction: ens.prediction(),
-                    confidence: ens.confidence(),
-                    calibrated_confidence: ens.confidence(),
-                    entropy: ens.entropy(),
-                    votes: ens.votes().to_vec(),
-                    energy_pj: mnist.request_energy_pj(len),
-                    samples_used: len,
-                    verdict: Verdict::Accept,
-                }));
-            }
-        }
-        Err(e) => {
-            let msg = format!("{e:#}");
-            for job in jobs {
-                metrics.record_error();
-                let _ = job.respond.send(Response::Error(msg.clone()));
-            }
-        }
+fn execute_job(
+    state: &mut WorkerState,
+    cfg: &CoordinatorConfig,
+    registry: &ModelRegistry,
+    request: &InferenceRequest,
+    metrics: &Metrics,
+) -> InferenceResult {
+    let kind = request.backend.unwrap_or(cfg.backend);
+    ensure_engine(state, cfg, registry, &request.model, kind)?;
+    let engine = state
+        .engines
+        .get(&(request.model.clone(), kind))
+        .expect("engine just ensured");
+    if let Some(seed) = request.seed {
+        // per-request seed: a fresh deterministic stream, independent
+        // of worker identity
+        let mut src = make_source(cfg, engine.mask_keep(), seed);
+        serve_request(engine, src.as_mut(), request, cfg.adaptive.as_ref(), metrics)
+    } else {
+        let src = state
+            .srcs
+            .get_mut(&request.model)
+            .expect("source created with engine");
+        serve_request(engine, src.as_mut(), request, cfg.adaptive.as_ref(), metrics)
     }
 }
 
-fn handle(
-    mnist: &McDropoutEngine,
-    vo: &McDropoutEngine,
-    src_mnist: &mut dyn DropoutBitSource,
-    src_vo: &mut dyn DropoutBitSource,
-    request: &Request,
-    cfg: &CoordinatorConfig,
-    metrics: &Metrics,
-) -> Response {
-    match request {
-        Request::Classify { image, samples } => match &cfg.adaptive {
-            Some(ad) => classify_adaptive(mnist, src_mnist, image, *samples, ad, metrics),
-            None => match mnist.infer_mc(image, *samples, src_mnist) {
-                Ok(out) => {
-                    metrics.record_execution(out.samples.len());
-                    let mut ens = ClassEnsemble::new(mnist.out_dim());
-                    for s in &out.samples {
-                        ens.add_logits(s);
-                    }
-                    Response::Class(ClassifyResponse {
-                        prediction: ens.prediction(),
-                        confidence: ens.confidence(),
-                        calibrated_confidence: ens.confidence(),
-                        entropy: ens.entropy(),
-                        votes: ens.votes().to_vec(),
-                        energy_pj: out.energy_pj,
-                        samples_used: out.samples.len(),
-                        verdict: Verdict::Accept,
-                    })
-                }
-                Err(e) => Response::Error(format!("{e:#}")),
-            },
-        },
-        Request::Regress { features, samples } => match &cfg.adaptive {
-            Some(ad) => regress_adaptive(vo, src_vo, features, *samples, ad, metrics),
-            None => match vo.infer_mc(features, *samples, src_vo) {
-                Ok(out) => {
-                    metrics.record_execution(out.samples.len());
-                    let mut ens = RegressionEnsemble::new(vo.out_dim());
-                    for s in &out.samples {
-                        ens.add_sample(s);
-                    }
-                    Response::Pose {
-                        mean: ens.mean(),
-                        variance: ens.variance(),
-                        energy_pj: out.energy_pj,
-                        samples_used: out.samples.len(),
-                        verdict: Verdict::Accept,
-                    }
-                }
-                Err(e) => Response::Error(format!("{e:#}")),
-            },
-        },
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic payload".to_string()
     }
+}
+
+/// Per-request adaptive configuration: the coordinator's (if any)
+/// overlaid with the request's own stop-rule/confidence/chunk/profile
+/// overrides. A request with overrides turns adaptive even on a
+/// fixed-T coordinator.
+fn effective_adaptive(
+    request: &InferenceRequest,
+    base: Option<&AdaptiveConfig>,
+) -> Option<AdaptiveConfig> {
+    let mut ad = match (base, request.has_adaptive_overrides()) {
+        (Some(b), _) => b.clone(),
+        (None, true) => AdaptiveConfig::new(request.confidence.unwrap_or(0.9)),
+        (None, false) => return None,
+    };
+    if let Some(rule) = request.stop_rule {
+        ad.sequential.rule = rule;
+    }
+    if let Some(c) = request.confidence {
+        ad.sequential.confidence = c.clamp(0.5 + 1e-9, 1.0 - 1e-9);
+    }
+    if let Some(c) = request.chunk {
+        ad.sequential.chunk = c.max(1);
+    }
+    if let Some(p) = request.risk_profile {
+        ad.class_profile = p;
+        ad.pose_profile = p;
+    }
+    Some(ad)
+}
+
+/// Serve one typed request on an engine: THE seam the worker loop, the
+/// CLI and the tests all drive. Fixed-T or adaptive (stoppers +
+/// verdicts + budgets) is decided by `adaptive` overlaid with the
+/// request's own overrides; the backend is whatever the engine was
+/// built on — the adaptive machinery is substrate-agnostic.
+pub fn serve_request(
+    engine: &McDropoutEngine,
+    src: &mut dyn DropoutBitSource,
+    request: &InferenceRequest,
+    adaptive: Option<&AdaptiveConfig>,
+    metrics: &Metrics,
+) -> InferenceResult {
+    if request.model != engine.model_id() {
+        return Err(McCimError::InvalidRequest {
+            model: request.model.clone(),
+            kind: request.kind,
+            reason: format!(
+                "request routed to an engine for model '{}'",
+                engine.model_id()
+            ),
+        });
+    }
+    validate_request(
+        &request.model,
+        request.kind,
+        request.samples,
+        request.input.len(),
+        engine.dims()[0],
+    )?;
+    let ad = effective_adaptive(request, adaptive);
+    match (request.kind, &ad) {
+        (RequestKind::Classify, Some(ad)) => classify_adaptive(engine, src, request, ad, metrics),
+        (RequestKind::Classify, None) => classify_fixed(engine, src, request, metrics),
+        (RequestKind::Regress, Some(ad)) => regress_adaptive(engine, src, request, ad, metrics),
+        (RequestKind::Regress, None) => regress_fixed(engine, src, request, metrics),
+    }
+}
+
+/// Request validation shared by the solo and micro-batch paths: a
+/// malformed request gets one non-retryable typed error with one
+/// wording, wherever it lands.
+fn validate_request(
+    model: &str,
+    kind: RequestKind,
+    samples: usize,
+    input_len: usize,
+    in_dim: usize,
+) -> Result<(), McCimError> {
+    if samples == 0 {
+        return Err(McCimError::InvalidRequest {
+            model: model.into(),
+            kind,
+            reason: "MC inference needs at least one sample".into(),
+        });
+    }
+    if input_len != in_dim {
+        return Err(McCimError::InvalidRequest {
+            model: model.into(),
+            kind,
+            reason: format!(
+                "input width {input_len} does not match network input dim {in_dim}"
+            ),
+        });
+    }
+    Ok(())
+}
+
+/// Engine/backend failure → typed execution error carrying the
+/// request's model id and kind.
+fn exec_error(
+    engine: &McDropoutEngine,
+    request: &InferenceRequest,
+    e: anyhow::Error,
+) -> McCimError {
+    McCimError::Execution {
+        backend: engine.backend_name().into(),
+        model: request.model.clone(),
+        kind: request.kind,
+        reason: format!("{e:#}"),
+    }
+}
+
+fn classify_fixed(
+    engine: &McDropoutEngine,
+    src: &mut dyn DropoutBitSource,
+    request: &InferenceRequest,
+    metrics: &Metrics,
+) -> InferenceResult {
+    let out = engine
+        .infer_mc(&request.input, request.samples, src)
+        .map_err(|e| exec_error(engine, request, e))?;
+    metrics.record_execution(out.samples.len());
+    let mut ens = ClassEnsemble::new(engine.out_dim());
+    for s in &out.samples {
+        ens.add_logits(s);
+    }
+    Ok(InferenceResponse::Class(ClassifyResponse {
+        model: engine.model_id().to_string(),
+        prediction: ens.prediction(),
+        confidence: ens.confidence(),
+        calibrated_confidence: ens.confidence(),
+        entropy: ens.entropy(),
+        votes: ens.votes().to_vec(),
+        energy_pj: out.energy_pj,
+        energy_measured: out.energy_measured,
+        samples_used: out.samples.len(),
+        verdict: Verdict::Accept,
+    }))
+}
+
+fn regress_fixed(
+    engine: &McDropoutEngine,
+    src: &mut dyn DropoutBitSource,
+    request: &InferenceRequest,
+    metrics: &Metrics,
+) -> InferenceResult {
+    let out = engine
+        .infer_mc(&request.input, request.samples, src)
+        .map_err(|e| exec_error(engine, request, e))?;
+    metrics.record_execution(out.samples.len());
+    let mut ens = RegressionEnsemble::new(engine.out_dim());
+    for s in &out.samples {
+        ens.add_sample(s);
+    }
+    Ok(InferenceResponse::Pose(PoseResponse {
+        model: engine.model_id().to_string(),
+        mean: ens.mean(),
+        variance: ens.variance(),
+        energy_pj: out.energy_pj,
+        energy_measured: out.energy_measured,
+        samples_used: out.samples.len(),
+        verdict: Verdict::Accept,
+    }))
 }
 
 /// Grant a (possibly degraded) sample ceiling for one adaptive
@@ -494,12 +745,11 @@ fn refund_unused(ad: &AdaptiveConfig, ceiling: usize, executed: usize) {
 fn classify_adaptive(
     engine: &McDropoutEngine,
     src: &mut dyn DropoutBitSource,
-    image: &[f32],
-    full_t: usize,
+    request: &InferenceRequest,
     ad: &AdaptiveConfig,
     metrics: &Metrics,
-) -> Response {
-    let full_t = full_t.max(1);
+) -> InferenceResult {
+    let full_t = request.samples.max(1);
     let mut seq = ad.sequential;
     let ceiling = grant_ceiling(ad, full_t, seq.min_samples, metrics);
     seq.max_samples = ceiling;
@@ -509,7 +759,7 @@ fn classify_adaptive(
     let mut stopper = ClassStopper::new(seq);
     let mut ens = ClassEnsemble::new(engine.out_dim());
     let mut fed = 0usize;
-    let run = engine.infer_mc_chunked(image, seq.chunk, ceiling, src, |outs| {
+    let run = engine.infer_mc_chunked(&request.input, seq.chunk, ceiling, src, |outs| {
         for o in &outs[fed..] {
             ens.add_logits(o);
         }
@@ -520,7 +770,7 @@ fn classify_adaptive(
         Ok(o) => o,
         Err(e) => {
             refund_unused(ad, ceiling, ens.iterations());
-            return Response::Error(format!("{e:#}"));
+            return Err(exec_error(engine, request, e));
         }
     };
     metrics.record_execution(out.samples.len());
@@ -528,6 +778,8 @@ fn classify_adaptive(
     for o in &out.samples[fed..] {
         ens.add_logits(o);
     }
+    let energy_measured = out.energy_measured;
+    let mut measured_pj = out.energy_pj;
 
     let mut probs = scaler.mean_probs(&out.samples);
     let mut calibrated = probs[ens.prediction()];
@@ -537,17 +789,20 @@ fn classify_adaptive(
         // grey zone: spend the rest of the granted budget in one shot
         metrics.record_escalation();
         let extra = ceiling - ens.iterations();
-        match engine.infer_mc(image, extra, src) {
+        match engine.infer_mc(&request.input, extra, src) {
             Ok(more) => {
                 metrics.record_execution(more.samples.len());
                 for o in &more.samples {
                     ens.add_logits(o);
                 }
+                if more.energy_measured {
+                    measured_pj += more.energy_pj;
+                }
                 out.samples.extend(more.samples);
             }
             Err(e) => {
                 refund_unused(ad, ceiling, ens.iterations());
-                return Response::Error(format!("{e:#}"));
+                return Err(exec_error(engine, request, e));
             }
         }
         probs = scaler.mean_probs(&out.samples);
@@ -558,16 +813,18 @@ fn classify_adaptive(
     let used = ens.iterations();
     refund_unused(ad, ceiling, used);
     metrics.record_adaptive(used, ceiling, verdict);
-    Response::Class(ClassifyResponse {
+    Ok(InferenceResponse::Class(ClassifyResponse {
+        model: engine.model_id().to_string(),
         prediction: ens.prediction(),
         confidence: ens.confidence(),
         calibrated_confidence: calibrated,
         entropy: ens.entropy(),
         votes: ens.votes().to_vec(),
-        energy_pj: engine.request_energy_pj(used),
+        energy_pj: if energy_measured { measured_pj } else { engine.request_energy_pj(used) },
+        energy_measured,
         samples_used: used,
         verdict,
-    })
+    }))
 }
 
 /// Adaptive pose regression: variance-convergence stopping + the
@@ -575,12 +832,11 @@ fn classify_adaptive(
 fn regress_adaptive(
     engine: &McDropoutEngine,
     src: &mut dyn DropoutBitSource,
-    features: &[f32],
-    full_t: usize,
+    request: &InferenceRequest,
     ad: &AdaptiveConfig,
     metrics: &Metrics,
-) -> Response {
-    let full_t = full_t.max(1);
+) -> InferenceResult {
+    let full_t = request.samples.max(1);
     let mut seq = ad.sequential;
     let ceiling = grant_ceiling(ad, full_t, seq.min_samples, metrics);
     seq.max_samples = ceiling;
@@ -590,7 +846,7 @@ fn regress_adaptive(
     let mut stopper = RegressionStopper::new(seq, var_dims);
     let mut ens = RegressionEnsemble::new(engine.out_dim());
     let mut fed = 0usize;
-    let run = engine.infer_mc_chunked(features, seq.chunk, ceiling, src, |outs| {
+    let run = engine.infer_mc_chunked(&request.input, seq.chunk, ceiling, src, |outs| {
         for o in &outs[fed..] {
             ens.add_sample(o);
         }
@@ -601,29 +857,34 @@ fn regress_adaptive(
         Ok(o) => o,
         Err(e) => {
             refund_unused(ad, ceiling, ens.iterations());
-            return Response::Error(format!("{e:#}"));
+            return Err(exec_error(engine, request, e));
         }
     };
     metrics.record_execution(out.samples.len());
     for o in &out.samples[fed..] {
         ens.add_sample(o);
     }
+    let energy_measured = out.energy_measured;
+    let mut measured_pj = out.energy_pj;
 
     let mut verdict = policy
         .decide_regression(ens.total_variance(var_dims), ens.iterations() >= ceiling);
     if verdict == Verdict::Escalate {
         metrics.record_escalation();
         let extra = ceiling - ens.iterations();
-        match engine.infer_mc(features, extra, src) {
+        match engine.infer_mc(&request.input, extra, src) {
             Ok(more) => {
                 metrics.record_execution(more.samples.len());
                 for o in &more.samples {
                     ens.add_sample(o);
                 }
+                if more.energy_measured {
+                    measured_pj += more.energy_pj;
+                }
             }
             Err(e) => {
                 refund_unused(ad, ceiling, ens.iterations());
-                return Response::Error(format!("{e:#}"));
+                return Err(exec_error(engine, request, e));
             }
         }
         verdict = policy.decide_regression(ens.total_variance(var_dims), true);
@@ -632,12 +893,128 @@ fn regress_adaptive(
     let used = ens.iterations();
     refund_unused(ad, ceiling, used);
     metrics.record_adaptive(used, ceiling, verdict);
-    Response::Pose {
+    Ok(InferenceResponse::Pose(PoseResponse {
+        model: engine.model_id().to_string(),
         mean: ens.mean(),
         variance: ens.variance(),
-        energy_pj: engine.request_energy_pj(used),
+        energy_pj: if energy_measured { measured_pj } else { engine.request_energy_pj(used) },
+        energy_measured,
         samples_used: used,
         verdict,
+    }))
+}
+
+/// Pack the MC rows of several plain classification requests into one
+/// fixed-B execution and fan the per-row outputs back out.
+fn microbatch_classify(
+    state: &mut WorkerState,
+    cfg: &CoordinatorConfig,
+    jobs: Vec<Job>,
+    metrics: &Metrics,
+) {
+    use crate::dropout::mask::DropoutMask;
+    let engine = state
+        .engines
+        .get(&("mnist".to_string(), cfg.backend))
+        .expect("mnist engine built at worker start");
+    let src = state.srcs.get_mut("mnist").expect("mnist source");
+    let t0 = Instant::now();
+    // malformed requests (zero samples, wrong input width) get the
+    // same non-retryable typed error as the solo path and must not
+    // poison the co-batched requests
+    let in_dim = engine.dims()[0];
+    let check = |r: &InferenceRequest| {
+        validate_request(&r.model, RequestKind::Classify, r.samples, r.input.len(), in_dim)
+    };
+    let (jobs, invalid): (Vec<Job>, Vec<Job>) =
+        jobs.into_iter().partition(|j| check(&j.request).is_ok());
+    for job in invalid {
+        metrics.record_error();
+        let err = check(&job.request).expect_err("partitioned as invalid");
+        job.respond.send(Err(err));
+    }
+    if jobs.is_empty() {
+        return;
+    }
+    let mask_dims: Vec<usize> = engine.dims()[1..engine.dims().len() - 1].to_vec();
+    let mut rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::new();
+    let mut spans = Vec::new(); // (start, len) per job
+    for job in &jobs {
+        let start = rows.len();
+        for _ in 0..job.request.samples {
+            let masks: Vec<Vec<f32>> = mask_dims
+                .iter()
+                .map(|&d| DropoutMask::sample(d, src.as_mut()).to_f32())
+                .collect();
+            rows.push((job.request.input.clone(), masks));
+        }
+        spans.push((start, job.request.samples));
+    }
+
+    // same per-request panic boundary as the solo path: a panic inside
+    // the backend fails this batch's requests, not the worker
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        engine.run_rows_out(&rows)
+    }));
+    let run = match run {
+        Ok(r) => r,
+        Err(p) => {
+            let reason = panic_text(p);
+            for job in jobs {
+                metrics.record_error();
+                job.respond.send(Err(McCimError::WorkerPanic {
+                    model: job.request.model.clone(),
+                    kind: RequestKind::Classify,
+                    reason: reason.clone(),
+                }));
+            }
+            return;
+        }
+    };
+    match run {
+        Ok((outs, measured)) => {
+            metrics.record_execution(rows.len());
+            let total_rows = rows.len();
+            for (job, (start, len)) in jobs.into_iter().zip(spans) {
+                let mut ens = ClassEnsemble::new(engine.out_dim());
+                for o in &outs[start..start + len] {
+                    ens.add_logits(o);
+                }
+                // defensive fallback: worker_loop routes measuring
+                // backends around this path, but if one ever lands
+                // here, apportion by row share rather than misreport
+                let energy_pj = match measured {
+                    Some(e) => e * len as f64 / total_rows as f64,
+                    None => engine.request_energy_pj(len),
+                };
+                metrics.record_request(t0.elapsed());
+                metrics.record_energy(energy_pj);
+                job.respond.send(Ok(InferenceResponse::Class(ClassifyResponse {
+                    model: engine.model_id().to_string(),
+                    prediction: ens.prediction(),
+                    confidence: ens.confidence(),
+                    calibrated_confidence: ens.confidence(),
+                    entropy: ens.entropy(),
+                    votes: ens.votes().to_vec(),
+                    energy_pj,
+                    energy_measured: measured.is_some(),
+                    samples_used: len,
+                    verdict: Verdict::Accept,
+                })));
+            }
+        }
+        Err(e) => {
+            let reason = format!("{e:#}");
+            for job in jobs {
+                metrics.record_error();
+                job.respond.send(Err(McCimError::Execution {
+                    backend: engine.backend_name().into(),
+                    model: job.request.model.clone(),
+                    kind: RequestKind::Classify,
+                    reason: reason.clone(),
+                }));
+            }
+        }
     }
 }
 
@@ -659,6 +1036,7 @@ mod tests {
         let cfg = CoordinatorConfig::default();
         assert!(cfg.adaptive.is_none());
         assert!(cfg.microbatch);
+        assert_eq!(cfg.backend, BackendKind::default());
     }
 
     #[test]
@@ -675,6 +1053,61 @@ mod tests {
         assert!(cfg.adaptive.is_some());
     }
 
+    #[test]
+    fn legacy_requests_map_onto_the_typed_surface() {
+        let r: InferenceRequest =
+            Request::Classify { image: vec![0.0; 4], samples: 12 }.into();
+        assert_eq!(r.model, "mnist");
+        assert_eq!(r.kind, RequestKind::Classify);
+        assert_eq!(r.samples, 12);
+        assert!(r.is_plain());
+        let r: InferenceRequest =
+            Request::Regress { features: vec![0.0; 8], samples: 5 }.into();
+        assert_eq!(r.model, "vo");
+        assert_eq!(r.kind, RequestKind::Regress);
+    }
+
+    #[test]
+    fn typed_errors_stringify_into_legacy_responses() {
+        let res: InferenceResult = Err(McCimError::UnknownModel { model: "nope".into() });
+        match Response::from(res) {
+            Response::Error(s) => assert!(s.contains("nope")),
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn model_salts_are_stable_and_distinct() {
+        // legacy builtin salts preserved; custom ids hash past them and
+        // never shift when other models get registered
+        assert_eq!(model_salt("mnist"), 0);
+        assert_eq!(model_salt("vo"), 1000);
+        assert_eq!(model_salt("vo-thin"), 2000);
+        let a = model_salt("custom-a");
+        assert_eq!(a, model_salt("custom-a"));
+        assert_ne!(a, model_salt("custom-b"));
+        assert!(a >= 3000);
+    }
+
+    #[test]
+    fn request_overrides_produce_adaptive_configs() {
+        let req = InferenceRequest::classify(vec![0.0; 4])
+            .with_stop_rule(StopRule::MajorityMargin)
+            .with_confidence(0.95)
+            .with_chunk(3);
+        let ad = effective_adaptive(&req, None).expect("overrides imply adaptive");
+        assert_eq!(ad.sequential.rule, StopRule::MajorityMargin);
+        assert!((ad.sequential.confidence - 0.95).abs() < 1e-9);
+        assert_eq!(ad.sequential.chunk, 3);
+        // a plain request on a fixed-T coordinator stays fixed-T
+        assert!(effective_adaptive(&InferenceRequest::classify(vec![]), None).is_none());
+        // ...and inherits the coordinator's adaptive config when set
+        let base = AdaptiveConfig::new(0.8);
+        let ad = effective_adaptive(&InferenceRequest::classify(vec![]), Some(&base)).unwrap();
+        assert!((ad.sequential.confidence - 0.8).abs() < 1e-9);
+    }
+
     // Live serving behaviour is covered by rust/tests/integration.rs
-    // and examples/serve_e2e.rs against real artifacts.
+    // (PJRT + artifacts), rust/tests/backend.rs (CimSimBackend, no
+    // artifacts) and examples/serve_e2e.rs.
 }

@@ -19,6 +19,7 @@
 //! `McSchedule` workloads (used by the end-to-end examples).
 
 use super::params::EnergyParams;
+use crate::cim::macro_sim::MacroRunStats;
 use crate::cim::mav::MavModel;
 use crate::cim::xadc::{AdcKind, SarAdc};
 use crate::dropout::schedule::ExecutionMode;
@@ -236,6 +237,38 @@ impl EnergyModel {
         EnergyBreakdown { array_fj, adc_analog_fj, adc_logic_fj, rng_fj, digital_fj }
     }
 
+    /// Price *measured* macro counters instead of analytic
+    /// expectations: array events, SAR cycles and conversions come
+    /// straight from a [`MacroRunStats`] (the cim-sim backend's actual
+    /// run), RNG bits from the mask elements the caller sampled. This
+    /// is what makes a cim-sim response's `energy_pj` a measurement of
+    /// *this* input under *these* masks rather than a population
+    /// expectation.
+    pub fn measured_energy(
+        &self,
+        stats: &MacroRunStats,
+        operator: OperatorKind,
+        adc: AdcKind,
+        rng_bits: u64,
+    ) -> EnergyBreakdown {
+        let p = &self.params;
+        let e_col_unit = match operator {
+            OperatorKind::Conventional => p.e_col_fj + p.e_dac_in_fj,
+            OperatorKind::MultiplicationFree => p.e_col_fj,
+        };
+        let logic_unit = match adc {
+            AdcKind::Symmetric => p.e_sa_logic_sym_fj,
+            _ => p.e_sa_logic_asym_fj,
+        };
+        EnergyBreakdown {
+            array_fj: stats.driven_col_cycles as f64 * e_col_unit,
+            adc_analog_fj: stats.adc_cycles as f64 * p.e_sar_analog_fj,
+            adc_logic_fj: stats.adc_conversions as f64 * logic_unit,
+            rng_fj: rng_bits as f64 * p.e_rng_bit_fj,
+            digital_fj: stats.compute_cycles as f64 * p.e_shift_add_fj,
+        }
+    }
+
     /// Energy saving from truncating the workload's MC budget to
     /// `t_used` samples at the same operating mode: `1 - E(t_used) /
     /// E(w.iters)`. This is what the adaptive serving path banks when
@@ -380,6 +413,35 @@ mod tests {
         // stopping at 15/30 should save a large chunk of the request
         let half = m.truncation_saving(&w, &mode, 15);
         assert!((0.30..0.60).contains(&half), "half-T saving {half:.3}");
+    }
+
+    #[test]
+    fn measured_energy_prices_counters_linearly() {
+        let m = EnergyModel::paper_default();
+        let stats = MacroRunStats {
+            compute_cycles: 100,
+            driven_col_cycles: 1500,
+            adc_conversions: 100,
+            adc_cycles: 270,
+            plane_sums: Vec::new(),
+        };
+        let e = m.measured_energy(
+            &stats,
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+            40,
+        );
+        let p = EnergyParams::default();
+        assert!((e.array_fj - 1500.0 * p.e_col_fj).abs() < 1e-9);
+        assert!((e.adc_analog_fj - 270.0 * p.e_sar_analog_fj).abs() < 1e-9);
+        assert!((e.adc_logic_fj - 100.0 * p.e_sa_logic_asym_fj).abs() < 1e-9);
+        assert!((e.rng_fj - 40.0 * p.e_rng_bit_fj).abs() < 1e-9);
+        assert!((e.digital_fj - 100.0 * p.e_shift_add_fj).abs() < 1e-9);
+        // conventional operator pays the DAC on top of every column event
+        let e_conv =
+            m.measured_energy(&stats, OperatorKind::Conventional, AdcKind::Symmetric, 40);
+        assert!(e_conv.array_fj > e.array_fj);
+        assert!(e_conv.adc_logic_fj < e.adc_logic_fj, "symmetric SA logic is cheaper");
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Typed errors for the serving surface.
+//!
+//! The coordinator used to answer failures with `Response::Error(String)`
+//! — fine for a demo, useless for a client that must distinguish "this
+//! model id does not exist" (fix the request) from "the backend fell
+//! over mid-execution" (retry elsewhere) from "this build has no PJRT"
+//! (operator problem). [`McCimError`] is the typed replacement carried
+//! by every `Result` on the request path; the legacy `Response::Error`
+//! shim stringifies it via `Display` so old callers keep compiling.
+//!
+//! Execution-stage errors always carry the failing **model id** and
+//! **request kind** (and the backend that produced them) so a fleet
+//! operator can aggregate failures per (model, backend, kind) without
+//! parsing strings.
+
+use std::fmt;
+
+/// What a request asks the engine to do.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum RequestKind {
+    /// MC-Dropout classification (vote ensemble over logits).
+    Classify,
+    /// MC-Dropout regression (mean/variance ensemble).
+    Regress,
+}
+
+impl RequestKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            RequestKind::Classify => "classify",
+            RequestKind::Regress => "regress",
+        }
+    }
+}
+
+impl fmt::Display for RequestKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Typed serving error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum McCimError {
+    /// The request named a model id the registry does not know.
+    UnknownModel { model: String },
+    /// The request named a backend this build cannot parse/serve.
+    UnknownBackend { backend: String },
+    /// The backend exists but cannot run here (e.g. PJRT without the
+    /// `pjrt` feature, or construction failed).
+    BackendUnavailable { backend: String, reason: String },
+    /// The request itself is malformed (wrong input width, zero
+    /// samples, ...). Fix the request, do not retry.
+    InvalidRequest { model: String, kind: RequestKind, reason: String },
+    /// A backend-level failure below the engine (artifact load,
+    /// execution). The serving layer re-wraps this into [`Self::Execution`]
+    /// once the request kind is known.
+    Backend { backend: String, model: String, reason: String },
+    /// Execution of a specific request failed.
+    Execution { backend: String, model: String, kind: RequestKind, reason: String },
+    /// A worker panicked while serving this request (the pool survives;
+    /// the panic is confined to the request that triggered it).
+    WorkerPanic { model: String, kind: RequestKind, reason: String },
+    /// The worker pool hung up before answering.
+    WorkerLost,
+}
+
+impl McCimError {
+    /// Model id the error is about, when known.
+    pub fn model(&self) -> Option<&str> {
+        match self {
+            McCimError::UnknownModel { model }
+            | McCimError::InvalidRequest { model, .. }
+            | McCimError::Backend { model, .. }
+            | McCimError::Execution { model, .. }
+            | McCimError::WorkerPanic { model, .. } => Some(model),
+            _ => None,
+        }
+    }
+
+    /// Request kind the error is about, when known.
+    pub fn kind(&self) -> Option<RequestKind> {
+        match self {
+            McCimError::InvalidRequest { kind, .. }
+            | McCimError::Execution { kind, .. }
+            | McCimError::WorkerPanic { kind, .. } => Some(*kind),
+            _ => None,
+        }
+    }
+
+    /// True when retrying the same request cannot succeed (client bug).
+    pub fn is_invalid_request(&self) -> bool {
+        matches!(
+            self,
+            McCimError::UnknownModel { .. }
+                | McCimError::UnknownBackend { .. }
+                | McCimError::InvalidRequest { .. }
+        )
+    }
+}
+
+impl fmt::Display for McCimError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            McCimError::UnknownModel { model } => {
+                write!(f, "unknown model '{model}' (not in the model registry)")
+            }
+            McCimError::UnknownBackend { backend } => {
+                write!(f, "unknown backend '{backend}' (pjrt|cim-sim|stub)")
+            }
+            McCimError::BackendUnavailable { backend, reason } => {
+                write!(f, "backend '{backend}' unavailable: {reason}")
+            }
+            McCimError::InvalidRequest { model, kind, reason } => {
+                write!(f, "invalid {kind} request for model '{model}': {reason}")
+            }
+            McCimError::Backend { backend, model, reason } => {
+                write!(f, "backend '{backend}' failed for model '{model}': {reason}")
+            }
+            McCimError::Execution { backend, model, kind, reason } => {
+                write!(
+                    f,
+                    "{kind} request on model '{model}' failed (backend '{backend}'): {reason}"
+                )
+            }
+            McCimError::WorkerPanic { model, kind, reason } => {
+                write!(f, "worker panicked serving a {kind} request on model '{model}': {reason}")
+            }
+            McCimError::WorkerLost => write!(f, "worker pool hung up before responding"),
+        }
+    }
+}
+
+impl std::error::Error for McCimError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn execution_errors_carry_model_and_kind() {
+        let e = McCimError::Execution {
+            backend: "cim-sim".into(),
+            model: "mnist".into(),
+            kind: RequestKind::Classify,
+            reason: "boom".into(),
+        };
+        assert_eq!(e.model(), Some("mnist"));
+        assert_eq!(e.kind(), Some(RequestKind::Classify));
+        let s = e.to_string();
+        assert!(s.contains("mnist") && s.contains("classify") && s.contains("cim-sim"));
+    }
+
+    #[test]
+    fn panic_errors_carry_context() {
+        let e = McCimError::WorkerPanic {
+            model: "vo".into(),
+            kind: RequestKind::Regress,
+            reason: "index out of bounds".into(),
+        };
+        assert_eq!(e.model(), Some("vo"));
+        assert_eq!(e.kind(), Some(RequestKind::Regress));
+        assert!(e.to_string().contains("vo"));
+    }
+
+    #[test]
+    fn invalidity_classification() {
+        assert!(McCimError::UnknownModel { model: "x".into() }.is_invalid_request());
+        assert!(!McCimError::WorkerLost.is_invalid_request());
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(McCimError::WorkerLost)?
+        }
+        let err = fails().unwrap_err();
+        assert!(err.downcast_ref::<McCimError>().is_some());
+    }
+}

@@ -28,24 +28,34 @@
 //! | [`energy`] | §V | per-op energy parameters and the mode-matrix energy model |
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
-//! | [`coordinator`] | — | MC-Dropout engine, request router, dynamic batcher, worker pool |
+//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro simulation (measured energy), fail-fast stub |
+//! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob, builtin catalogue from `meta.json` |
+//! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |
+//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool |
 //! | [`uncertainty`] | — | sequential early-stopping samplers, calibration (ECE / temperature scaling), risk-aware policies, sample budgets |
 //! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
 //! | [`config`] | — | CLI/flag parsing and run configuration (no external deps) |
 //! | [`util`] | — | PCG32 PRNG, statistics, minimal JSON, test generators |
 
+pub mod backend;
 pub mod bayes;
 pub mod cim;
 pub mod config;
 pub mod coordinator;
 pub mod dropout;
 pub mod energy;
+pub mod error;
+pub mod model;
 pub mod operator;
 pub mod rng;
 pub mod runtime;
 pub mod uncertainty;
 pub mod util;
 pub mod workloads;
+
+pub use backend::{BackendKind, ExecutionBackend};
+pub use error::{McCimError, RequestKind};
+pub use model::{ModelRegistry, ModelSpec};
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

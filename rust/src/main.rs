@@ -14,16 +14,17 @@
 //! `cargo bench`; these subcommands are quick interactive slices.
 
 use anyhow::{anyhow, bail, Result};
+use mc_cim::backend::{make_backend, BackendKind, BackendOptions};
 use mc_cim::bayes::ClassEnsemble;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
 use mc_cim::config::Args;
 use mc_cim::coordinator::{
-    AdaptiveConfig, Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind,
-    Request, Response,
+    AdaptiveConfig, Coordinator, CoordinatorConfig, McDropoutEngine, Request, Response,
 };
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
+use mc_cim::model::ModelRegistry;
 use mc_cim::rng::{calibrate, estimate_p1, CciRng, IdealBernoulli, SramEmbeddedRng};
 use mc_cim::runtime::Runtime;
 use mc_cim::uncertainty::policy::{DecisionPolicy, RiskProfile, Verdict};
@@ -61,6 +62,9 @@ fn run() -> Result<()> {
 
 const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
   --artifacts DIR   artifacts directory (default: artifacts)
+  --backend NAME    execution backend: pjrt | cim-sim
+                    (default: pjrt when built with the feature, else cim-sim;
+                     cim-sim runs the bit-exact macro sim and reports MEASURED energy)
   classify: --index N --samples N --bits B --rotate DEG
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
   vo:       --frames N --samples N --bits B
@@ -124,13 +128,60 @@ fn artifacts(args: &Args) -> String {
     args.get_or("artifacts", ARTIFACTS_DIR)
 }
 
+/// Parse `--backend` (build default when absent).
+fn backend_from_args(args: &Args) -> Result<BackendKind> {
+    match args.get("backend") {
+        None => Ok(BackendKind::default()),
+        Some(s) => Ok(BackendKind::parse(s)
+            .ok_or_else(|| mc_cim::error::McCimError::UnknownBackend { backend: s.into() })?),
+    }
+}
+
+/// Build one engine for `model` on the selected backend. The caller
+/// owns the PJRT runtime (when one is needed) so it outlives the
+/// engine.
+fn build_engine(
+    dir: &str,
+    meta: &Meta,
+    model: &str,
+    kind: BackendKind,
+    bits: Option<u8>,
+    rt: Option<&Runtime>,
+) -> Result<McDropoutEngine> {
+    let registry = ModelRegistry::builtin(meta);
+    let spec = registry.get(model)?;
+    let opts = BackendOptions { bits, pallas: false };
+    let backend = make_backend(kind, rt, dir, spec, &opts)?;
+    let engine = McDropoutEngine::with_backend(
+        backend,
+        spec,
+        bits,
+        mc_cim::energy::ModeConfig::mf_asym_reuse_ordered(),
+    )?;
+    Ok(engine)
+}
+
+/// Create the PJRT runtime only when the chosen backend needs one.
+fn runtime_for(kind: BackendKind) -> Result<Option<Runtime>> {
+    if kind.needs_runtime() {
+        Ok(Some(Runtime::cpu()?))
+    } else {
+        Ok(None)
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let dir = artifacts(args);
     let meta = Meta::load(&dir)?;
-    let rt = Runtime::cpu()?;
+    let registry = ModelRegistry::builtin(&meta);
+    let platform = Runtime::cpu()
+        .map(|rt| rt.platform())
+        .unwrap_or_else(|_| "unavailable (stub build — cim-sim backend only)".to_string());
     println!("mc-cim — MC-CIM coordinator");
-    println!("platform        : {}", rt.platform());
+    println!("platform        : {platform}");
+    println!("default backend : {}", BackendKind::default().label());
     println!("artifacts       : {dir}");
+    println!("models          : {:?}", registry.ids());
     println!("mc batch        : {}", meta.mc_batch);
     println!("dropout p       : {}", meta.dropout_p);
     println!("mnist dims      : {:?}", meta.mnist_dims);
@@ -155,12 +206,17 @@ fn cmd_classify(args: &Args) -> Result<()> {
     if rotate != 0.0 {
         img = image::rotate_pm1(&img, 28, rotate);
     }
-    let rt = Runtime::cpu()?;
-    let mut ec = EngineConfig::new(NetKind::Mnist);
-    if bits > 0 {
-        ec.bits = Some(bits as u8);
-    }
-    let engine = McDropoutEngine::load(&rt, &dir, &meta, &ec)?;
+    let kind = backend_from_args(args)?;
+    let rt = runtime_for(kind)?;
+    let engine = build_engine(
+        &dir,
+        &meta,
+        "mnist",
+        kind,
+        (bits > 0).then_some(bits as u8),
+        rt.as_ref(),
+    )?;
+    println!("backend: {}", engine.backend_name());
     let mut src = IdealBernoulli::new(1.0 - meta.dropout_p, 42);
 
     if let Some(ad) = adaptive_from_args(args)? {
@@ -191,13 +247,24 @@ fn cmd_classify(args: &Args) -> Result<()> {
             for o in &more.samples {
                 ens.add_logits(o);
             }
+            if more.energy_measured {
+                out.energy_pj += more.energy_pj;
+            }
             out.samples.extend(more.samples);
             calibrated = scaler.mean_probs(&out.samples)[ens.prediction()];
             verdict = policy.decide_class(calibrated, ens.entropy(), true);
         }
         let used = ens.iterations();
-        let adaptive_energy = engine.request_energy_pj(used);
+        // measured energy (cim-sim) when available; the saving is
+        // quoted from the analytic model either way so the comparison
+        // against fixed T stays apples-to-apples
+        let modeled_used = engine.request_energy_pj(used);
         let fixed_energy = engine.request_energy_pj(samples);
+        let (adaptive_energy, tag) = if out.energy_measured {
+            (out.energy_pj, " measured")
+        } else {
+            (modeled_used, "")
+        };
         println!(
             "image #{idx} (label {}) rotate {rotate}°: prediction {} confidence {:.2} (calibrated {:.2}) entropy {:.3}",
             test.labels[idx % test.len()],
@@ -207,13 +274,13 @@ fn cmd_classify(args: &Args) -> Result<()> {
             ens.entropy(),
         );
         println!(
-            "adaptive [{} @ {:.2}]: verdict {} after {used}/{samples} samples — {:.1} pJ vs {:.1} pJ fixed ({:.0}% saved)",
+            "adaptive [{} @ {:.2}]: verdict {} after {used}/{samples} samples — {:.1} pJ{tag} vs {:.1} pJ fixed ({:.0}% modeled saving)",
             seq.rule.label(),
             seq.confidence,
             verdict.label(),
             adaptive_energy,
             fixed_energy,
-            100.0 * (1.0 - adaptive_energy / fixed_energy),
+            100.0 * (1.0 - modeled_used / fixed_energy),
         );
         println!("votes: {:?}", ens.votes());
         return Ok(());
@@ -225,12 +292,13 @@ fn cmd_classify(args: &Args) -> Result<()> {
         ens.add_logits(s);
     }
     println!(
-        "image #{idx} (label {}) rotate {rotate}°: prediction {} confidence {:.2} entropy {:.3} energy {:.1} pJ",
+        "image #{idx} (label {}) rotate {rotate}°: prediction {} confidence {:.2} entropy {:.3} energy {:.1} pJ{}",
         test.labels[idx % test.len()],
         ens.prediction(),
         ens.confidence(),
         ens.entropy(),
-        out.energy_pj
+        out.energy_pj,
+        if out.energy_measured { " (measured)" } else { "" },
     );
     println!("votes: {:?}", ens.votes());
     Ok(())
@@ -244,8 +312,10 @@ fn cmd_vo(args: &Args) -> Result<()> {
     let frames = args.get_usize("frames", 10).map_err(|e| anyhow!(e))?;
     let samples = args.get_usize("samples", 30).map_err(|e| anyhow!(e))?;
     let test = VoTest::load(&dir)?;
-    let rt = Runtime::cpu()?;
-    let engine = McDropoutEngine::load(&rt, &dir, &meta, &EngineConfig::new(NetKind::Vo))?;
+    let kind = backend_from_args(args)?;
+    let rt = runtime_for(kind)?;
+    let engine = build_engine(&dir, &meta, "vo", kind, None, rt.as_ref())?;
+    println!("backend: {}", engine.backend_name());
     let mut src = IdealBernoulli::new(engine.mask_keep(), 42);
     let norm = PoseNorm::new(&meta);
     println!("frame  err[m]   sqrt(var)  pose(x,y,z)");
@@ -279,9 +349,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let test = MnistTest::load(&dir)?;
     let adaptive = adaptive_from_args(args)?;
     let is_adaptive = adaptive.is_some();
+    let backend = backend_from_args(args)?;
+    println!("backend: {}", backend.label());
     let cfg = CoordinatorConfig {
         artifacts: dir,
         workers,
+        backend,
         bits: (bits > 0).then_some(bits as u8),
         adaptive,
         ..Default::default()

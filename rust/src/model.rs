@@ -1,0 +1,228 @@
+//! Model registry: model id → network geometry, artifact names,
+//! mask keep-probability.
+//!
+//! Replaces the closed `NetKind` enum as the source of truth for what
+//! networks the stack can serve. The three paper networks (`mnist`,
+//! `vo`, `vo-thin`) are built from `artifacts/meta.json` by
+//! [`ModelRegistry::builtin`]; additional models — synthetic test nets,
+//! new workloads — register at runtime with [`ModelRegistry::register`]
+//! without touching the engine or the serving loop.
+
+use crate::error::McCimError;
+use crate::workloads::Meta;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Everything the engines and backends need to know about one network.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    /// Registry id (the `InferenceRequest.model` field).
+    pub id: String,
+    /// Layer widths, input to output (e.g. `[784, 256, 128, 10]`).
+    pub dims: Vec<usize>,
+    /// HLO-text artifact of the Pallas-kernel graph.
+    pub hlo_pallas: String,
+    /// HLO-text artifact of the fused-matmul reference graph.
+    pub hlo_ref: String,
+    /// MCT1 weight container (`w{i}`, `b{i}`, `s{i}` per layer).
+    pub weights: String,
+    /// Bernoulli keep-probability the network trained its masks with.
+    pub mask_keep: f64,
+    /// Dropout probability baked into the graph's inverted-dropout
+    /// scale `1/(1-p)`.
+    pub dropout_p: f64,
+    /// Rows per compiled executable call (the fixed MC batch B).
+    pub mc_batch: usize,
+}
+
+impl ModelSpec {
+    pub fn in_dim(&self) -> usize {
+        self.dims[0]
+    }
+
+    pub fn out_dim(&self) -> usize {
+        *self.dims.last().expect("spec has at least two dims")
+    }
+
+    /// Hidden-layer widths — one dropout mask per entry.
+    pub fn mask_dims(&self) -> Vec<usize> {
+        self.dims[1..self.dims.len() - 1].to_vec()
+    }
+
+    /// FC layer count.
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// HLO artifact for the requested lowering.
+    pub fn hlo_file(&self, pallas: bool) -> &str {
+        if pallas {
+            &self.hlo_pallas
+        } else {
+            &self.hlo_ref
+        }
+    }
+
+    /// A spec for an in-memory model (tests, synthetic workloads): no
+    /// artifact files, paper-default batch/dropout.
+    pub fn synthetic(id: impl Into<String>, dims: Vec<usize>) -> Self {
+        assert!(dims.len() >= 2, "a model needs at least input and output dims");
+        ModelSpec {
+            id: id.into(),
+            dims,
+            hlo_pallas: String::new(),
+            hlo_ref: String::new(),
+            weights: String::new(),
+            mask_keep: 1.0 - crate::DROPOUT_P,
+            dropout_p: crate::DROPOUT_P,
+            mc_batch: crate::MC_SAMPLES,
+        }
+    }
+}
+
+/// Model id → [`ModelSpec`] lookup, the serving stack's catalogue.
+#[derive(Clone, Debug, Default)]
+pub struct ModelRegistry {
+    models: BTreeMap<String, ModelSpec>,
+}
+
+impl ModelRegistry {
+    /// An empty registry (populate with [`Self::register`]).
+    pub fn empty() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// The three paper networks, geometry and keep-probabilities from
+    /// the parsed `meta.json`.
+    pub fn builtin(meta: &Meta) -> Self {
+        let mut r = ModelRegistry::empty();
+        r.register(ModelSpec {
+            id: "mnist".into(),
+            dims: meta.mnist_dims.clone(),
+            hlo_pallas: "mnist.hlo.txt".into(),
+            hlo_ref: "mnist_ref.hlo.txt".into(),
+            weights: "mnist_weights.bin".into(),
+            mask_keep: meta.mnist_mask_keep,
+            dropout_p: meta.dropout_p,
+            mc_batch: meta.mc_batch,
+        });
+        r.register(ModelSpec {
+            id: "vo".into(),
+            dims: meta.vo_dims.clone(),
+            hlo_pallas: "vo.hlo.txt".into(),
+            hlo_ref: "vo_ref.hlo.txt".into(),
+            weights: "vo_weights.bin".into(),
+            mask_keep: meta.vo_mask_keep,
+            dropout_p: meta.dropout_p,
+            mc_batch: meta.mc_batch,
+        });
+        r.register(ModelSpec {
+            id: "vo-thin".into(),
+            dims: meta.vo_thin_dims.clone(),
+            hlo_pallas: "vo_thin.hlo.txt".into(),
+            hlo_ref: "vo_thin.hlo.txt".into(),
+            weights: "vo_thin_weights.bin".into(),
+            mask_keep: meta.vo_mask_keep,
+            dropout_p: meta.dropout_p,
+            mc_batch: meta.mc_batch,
+        });
+        r
+    }
+
+    /// Load `meta.json` from the artifacts directory and build the
+    /// builtin catalogue from it.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::builtin(&Meta::load(artifacts_dir)?))
+    }
+
+    /// Add (or replace) a model.
+    pub fn register(&mut self, spec: ModelSpec) {
+        assert!(spec.dims.len() >= 2, "a model needs at least two dims");
+        self.models.insert(spec.id.clone(), spec);
+    }
+
+    /// Typed lookup.
+    pub fn get(&self, id: &str) -> Result<&ModelSpec, McCimError> {
+        self.models
+            .get(id)
+            .ok_or_else(|| McCimError::UnknownModel { model: id.to_string() })
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.models.contains_key(id)
+    }
+
+    /// Registered ids, sorted.
+    pub fn ids(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "mc_batch": 30, "dropout_p": 0.5,
+        "mnist_dims": [784, 256, 128, 10],
+        "vo_dims": [256, 256, 128, 6],
+        "vo_thin_dims": [256, 128, 64, 6],
+        "mnist_acc_det": 0.76, "mnist_acc_mc": 0.92,
+        "vo_err": 1.0, "vo_thin_err": 1.05,
+        "pose_mean": [2, 2, 1.5, 0, 0, 0],
+        "pose_scale": [1.5, 1.5, 0.5, 0.7, 0.3, 0.2]
+    }"#;
+
+    #[test]
+    fn builtin_catalogue_matches_meta() {
+        let meta = Meta::parse(SAMPLE).unwrap();
+        let r = ModelRegistry::builtin(&meta);
+        assert_eq!(r.ids(), vec!["mnist", "vo", "vo-thin"]);
+        let m = r.get("mnist").unwrap();
+        assert_eq!(m.dims, vec![784, 256, 128, 10]);
+        assert_eq!(m.mask_dims(), vec![256, 128]);
+        assert_eq!(m.hlo_file(true), "mnist.hlo.txt");
+        assert_eq!(m.hlo_file(false), "mnist_ref.hlo.txt");
+        assert_eq!(m.mc_batch, 30);
+        let v = r.get("vo").unwrap();
+        assert!((v.mask_keep - meta.vo_mask_keep).abs() < 1e-12);
+        assert_eq!(r.len(), 3);
+    }
+
+    #[test]
+    fn unknown_model_is_a_typed_error() {
+        let meta = Meta::parse(SAMPLE).unwrap();
+        let r = ModelRegistry::builtin(&meta);
+        match r.get("resnet50") {
+            Err(McCimError::UnknownModel { model }) => assert_eq!(model, "resnet50"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn custom_models_register() {
+        let mut r = ModelRegistry::empty();
+        r.register(ModelSpec::synthetic("tiny", vec![8, 6, 3]));
+        assert!(r.contains("tiny"));
+        let t = r.get("tiny").unwrap();
+        assert_eq!(t.in_dim(), 8);
+        assert_eq!(t.out_dim(), 3);
+        assert_eq!(t.n_layers(), 2);
+        assert_eq!(t.mask_dims(), vec![6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_dims_rejected() {
+        ModelSpec::synthetic("bad", vec![5]);
+    }
+}

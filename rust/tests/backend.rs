@@ -1,0 +1,420 @@
+//! Backend-seam tests: engine + serving numerics driven end-to-end
+//! through [`CimSimBackend`] — no PJRT, no artifacts required.
+//!
+//! Two load-bearing guarantees live here:
+//!
+//! 1. **Bit-exactness**: the cim-sim backend's tiled macro execution
+//!    (16×31 tiles, SAR xADC in the loop) reconstructs the ideal
+//!    `BitplaneSchedule::evaluate` result *exactly* across the whole
+//!    multi-layer pipeline — same quantization grids, same digital
+//!    affine/clip/mask chain (to_bits equality, not an epsilon).
+//! 2. **Adaptive serving is substrate-agnostic**: stoppers, verdicts
+//!    and shared sample budgets run unchanged through the typed
+//!    request API on the macro simulator, with *measured* energy on
+//!    every response.
+
+use mc_cim::backend::{
+    BackendKind, CimSimBackend, ExecutionBackend, LayerParams, Row, StubBackend,
+};
+use mc_cim::coordinator::{
+    serve_request, AdaptiveConfig, InferenceRequest, InferenceResponse, McDropoutEngine,
+    Metrics,
+};
+use mc_cim::energy::ModeConfig;
+use mc_cim::error::{McCimError, RequestKind};
+use mc_cim::model::ModelSpec;
+use mc_cim::operator::bitplane::{BitplaneSchedule, OperatorKind};
+use mc_cim::operator::quant::{QuantTensor, Quantizer};
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::uncertainty::policy::Verdict;
+use mc_cim::uncertainty::sequential::StopRule;
+use mc_cim::uncertainty::{SampleBudget, SharedBudget};
+use mc_cim::util::testkit::f32_vec;
+use mc_cim::util::Pcg32;
+use mc_cim::{MACRO_COLS, MACRO_ROWS};
+use std::sync::Arc;
+
+/// Deterministic random layer parameters for `dims`.
+fn random_layers(dims: &[usize], seed: u64) -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..dims.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (dims[l], dims[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.2; fo],
+            }
+        })
+        .collect()
+}
+
+/// A synthetic model spec with a small MC batch (to exercise block
+/// chunking) plus its random parameters.
+fn tiny_model(dims: &[usize], seed: u64) -> (ModelSpec, Vec<LayerParams>) {
+    let mut spec = ModelSpec::synthetic("tiny", dims.to_vec());
+    spec.mc_batch = 8;
+    (spec, random_layers(dims, seed))
+}
+
+fn cim_engine(dims: &[usize], bits: u8, seed: u64) -> McDropoutEngine {
+    let (spec, layers) = tiny_model(dims, seed);
+    let backend = CimSimBackend::from_params(&spec, layers, bits).unwrap();
+    McDropoutEngine::with_backend(
+        Box::new(backend),
+        &spec,
+        Some(bits),
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap()
+}
+
+fn binary_masks(rng: &mut Pcg32, mask_dims: &[usize], keep: f64) -> Vec<Vec<f32>> {
+    mask_dims
+        .iter()
+        .map(|&d| (0..d).map(|_| if rng.bernoulli(keep) { 1.0 } else { 0.0 }).collect())
+        .collect()
+}
+
+/// Reference forward pass built directly on the ideal
+/// `BitplaneSchedule::evaluate`, mirroring the cim-sim quantization
+/// contract: per-layer shared-delta grids, 31-wide zero-padded tiles,
+/// gated rows contribute zero, then the digital `*s + b` / ReLU1 /
+/// mask × 1/(1-p) chain in f32.
+fn reference_forward(
+    dims: &[usize],
+    layers: &[LayerParams],
+    bits: u8,
+    dropout_p: f64,
+    input: &[f32],
+    masks: &[Vec<f32>],
+) -> Vec<f32> {
+    let q = Quantizer::new(bits);
+    let scale = (1.0 / (1.0 - dropout_p)) as f32;
+    let last = dims.len() - 2;
+    let mut h = input.to_vec();
+    for (l, lp) in layers.iter().enumerate() {
+        let (fi, fo) = (dims[l], dims[l + 1]);
+        let xq = q.quantize(&h);
+        let wq = q.quantize(&lp.w);
+        let row_active: Vec<bool> = if l < last {
+            masks[l].iter().map(|&m| m != 0.0).collect()
+        } else {
+            vec![true; fo]
+        };
+        let mut acc = vec![0.0f32; fo];
+        for cb in 0..fi.div_ceil(MACRO_COLS) {
+            let lo = cb * MACRO_COLS;
+            let hi = (lo + MACRO_COLS).min(fi);
+            let mut xcodes = vec![0i32; MACRO_COLS];
+            xcodes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
+            let col_active: Vec<bool> = xcodes.iter().map(|&c| c != 0).collect();
+            let xt = QuantTensor { codes: xcodes, delta: xq.delta, bits };
+            // same row-block iteration order as the macro tiling
+            for rb in (0..fo).step_by(MACRO_ROWS) {
+                for j in rb..(rb + MACRO_ROWS).min(fo) {
+                    if !row_active[j] {
+                        continue; // gated macro row: exact zero
+                    }
+                    let mut wcodes = vec![0i32; MACRO_COLS];
+                    for (k, i) in (lo..hi).enumerate() {
+                        wcodes[k] = wq.codes[i * fo + j];
+                    }
+                    let wt = QuantTensor { codes: wcodes, delta: wq.delta, bits };
+                    let sched = BitplaneSchedule::new(
+                        OperatorKind::MultiplicationFree,
+                        bits,
+                        xt.delta,
+                        wt.delta,
+                    );
+                    acc[j] += sched.evaluate(&xt, &wt, &col_active);
+                }
+            }
+        }
+        for j in 0..fo {
+            acc[j] = acc[j] * lp.s[j] + lp.b[j];
+        }
+        if l < last {
+            for j in 0..fo {
+                acc[j] = acc[j].clamp(0.0, 1.0) * masks[l][j] * scale;
+            }
+        }
+        h = acc;
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// 1. bit-exactness: CimSimBackend == BitplaneSchedule::evaluate
+// ---------------------------------------------------------------------
+
+#[test]
+fn cim_sim_is_bit_exact_against_ideal_bitplane_schedule() {
+    // multi-tile geometry: 40 inputs -> 2 column blocks, 20 hidden
+    // rows -> 2 row blocks
+    let dims = [40usize, 20, 5];
+    for bits in [4u8, 6] {
+        let (spec, layers) = tiny_model(&dims, 100 + bits as u64);
+        let backend = CimSimBackend::from_params(&spec, layers.clone(), bits).unwrap();
+        let mut rng = Pcg32::seeded(200 + bits as u64);
+        for trial in 0..8 {
+            let input = f32_vec(&mut rng, dims[0], 1.0);
+            let masks = binary_masks(&mut rng, &spec.mask_dims(), 0.5);
+            let got = backend
+                .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+                .unwrap()
+                .outputs
+                .remove(0);
+            let want =
+                reference_forward(&dims, &layers, bits, spec.dropout_p, &input, &masks);
+            assert_eq!(got.len(), want.len());
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "bits={bits} trial={trial} out[{j}]: macro {g} != ideal {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cim_sim_is_bit_exact_with_expected_value_masks() {
+    // the deterministic-baseline path uses non-binary masks (m = keep);
+    // the digital mask multiply must stay exact there too
+    let dims = [33usize, 17, 4];
+    let (spec, layers) = tiny_model(&dims, 31);
+    let backend = CimSimBackend::from_params(&spec, layers.clone(), 6).unwrap();
+    let mut rng = Pcg32::seeded(77);
+    let input = f32_vec(&mut rng, dims[0], 1.0);
+    let masks: Vec<Vec<f32>> = spec.mask_dims().iter().map(|&d| vec![0.5f32; d]).collect();
+    let got = backend
+        .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+        .unwrap()
+        .outputs
+        .remove(0);
+    let want = reference_forward(&dims, &layers, 6, spec.dropout_p, &input, &masks);
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits());
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. engine numerics through CimSimBackend (no artifacts)
+// ---------------------------------------------------------------------
+
+#[test]
+fn engine_infer_mc_measures_energy_on_cim_sim() {
+    let eng = cim_engine(&[12, 10, 4], 6, 5);
+    assert_eq!(eng.backend_name(), "cim-sim");
+    assert!(eng.measures_energy());
+    let mut rng = Pcg32::seeded(6);
+    let x = f32_vec(&mut rng, 12, 1.0);
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 9);
+    // 20 samples across a compiled B of 8 -> three blocks
+    let out = eng.infer_mc(&x, 20, &mut src).unwrap();
+    assert_eq!(out.samples.len(), 20);
+    assert!(out.samples.iter().all(|s| s.len() == 4 && s.iter().all(|v| v.is_finite())));
+    assert!(out.energy_measured, "cim-sim responses must carry measured energy");
+    assert!(out.energy_pj > 0.0);
+    // more samples must measurably cost more
+    let out10 = eng.infer_mc(&x, 10, &mut src).unwrap();
+    assert!(out.energy_pj > out10.energy_pj);
+}
+
+#[test]
+fn engine_infer_det_runs_on_cim_sim() {
+    let eng = cim_engine(&[12, 10, 4], 6, 15);
+    let mut rng = Pcg32::seeded(16);
+    let xs: Vec<Vec<f32>> = (0..11).map(|_| f32_vec(&mut rng, 12, 1.0)).collect();
+    let outs = eng.infer_det(&xs).unwrap();
+    assert_eq!(outs.len(), 11);
+    assert!(outs.iter().all(|o| o.len() == 4 && o.iter().all(|v| v.is_finite())));
+}
+
+#[test]
+fn engine_chunked_path_consults_the_callback_on_cim_sim() {
+    let eng = cim_engine(&[12, 10, 4], 6, 25);
+    let mut rng = Pcg32::seeded(26);
+    let x = f32_vec(&mut rng, 12, 1.0);
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 3);
+    // stop after the second consultation: chunk=4, ceiling=20 -> 8 rows
+    let mut consults = 0;
+    let out = eng
+        .infer_mc_chunked(&x, 4, 20, &mut src, |outs| {
+            consults += 1;
+            assert_eq!(outs.len(), 4 * consults);
+            consults < 2
+        })
+        .unwrap();
+    assert_eq!(consults, 2);
+    assert_eq!(out.samples.len(), 8);
+    assert!(out.energy_measured);
+    // truncated requests measure less energy than the full ceiling
+    let full = eng.infer_mc(&x, 20, &mut src).unwrap();
+    assert!(out.energy_pj < full.energy_pj);
+}
+
+#[test]
+fn engine_rejects_wrong_input_width_on_cim_sim() {
+    let eng = cim_engine(&[12, 10, 4], 6, 35);
+    let mut src = IdealBernoulli::new(0.5, 1);
+    assert!(eng.infer_mc(&vec![0.0f32; 5], 3, &mut src).is_err());
+}
+
+// ---------------------------------------------------------------------
+// 3. adaptive serving through the typed request API on CimSimBackend
+// ---------------------------------------------------------------------
+
+#[test]
+fn adaptive_serving_runs_end_to_end_on_cim_sim() {
+    let eng = cim_engine(&[12, 10, 4], 6, 45);
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 11);
+    let budget = Arc::new(SharedBudget::new(SampleBudget::new(1000, 0.0)));
+    let mut ad = AdaptiveConfig::new(0.9);
+    ad.budget = Some(Arc::clone(&budget));
+    let mut rng = Pcg32::seeded(46);
+    let input = f32_vec(&mut rng, 12, 1.0);
+    let req = InferenceRequest::new("tiny", RequestKind::Classify, input)
+        .with_samples(24)
+        .with_chunk(4)
+        .with_stop_rule(StopRule::EntropyConvergence);
+    let resp = serve_request(&eng, &mut src, &req, Some(&ad), &metrics).unwrap();
+    let InferenceResponse::Class(c) = resp else { panic!("expected Class response") };
+    assert_eq!(c.model, "tiny");
+    assert!(c.samples_used >= 1 && c.samples_used <= 24);
+    assert_eq!(c.votes.len(), c.samples_used);
+    assert!(matches!(c.verdict, Verdict::Accept | Verdict::Abstain));
+    assert!(c.energy_measured, "adaptive path must keep measured energy");
+    assert!(c.energy_pj > 0.0);
+    // ledger: exactly one adaptive decision, samples conserved
+    assert_eq!(metrics.decided(), 1);
+    assert_eq!(metrics.mc_samples_used() as usize, c.samples_used);
+    assert_eq!(metrics.mc_samples_used() + metrics.mc_samples_saved(), 24);
+    // budget: the grant was taken and the unexecuted tail refunded
+    let stats = budget.stats();
+    assert_eq!(stats.requested, 24);
+    assert_eq!(stats.granted, 24);
+}
+
+#[test]
+fn adaptive_regression_runs_on_cim_sim() {
+    let eng = cim_engine(&[12, 10, 4], 6, 55);
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 21);
+    let ad = AdaptiveConfig::new(0.9);
+    let mut rng = Pcg32::seeded(56);
+    let input = f32_vec(&mut rng, 12, 1.0);
+    let req = InferenceRequest::new("tiny", RequestKind::Regress, input)
+        .with_samples(16)
+        .with_chunk(4);
+    let resp = serve_request(&eng, &mut src, &req, Some(&ad), &metrics).unwrap();
+    let InferenceResponse::Pose(p) = resp else { panic!("expected Pose response") };
+    assert_eq!(p.mean.len(), 4);
+    assert!(p.variance.iter().all(|&v| v >= 0.0));
+    assert!(p.samples_used >= 1 && p.samples_used <= 16);
+    assert!(p.energy_measured);
+    assert_eq!(metrics.decided(), 1);
+}
+
+#[test]
+fn shared_budget_sheds_load_and_is_refunded() {
+    let eng = cim_engine(&[12, 10, 4], 6, 65);
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 31);
+    // bucket smaller than the request: the grant degrades toward the
+    // stopper floor and the shortfall is recorded as load shedding
+    let budget = Arc::new(SharedBudget::new(SampleBudget::new(8, 0.0)));
+    let mut ad = AdaptiveConfig::new(0.9);
+    ad.budget = Some(Arc::clone(&budget));
+    let mut rng = Pcg32::seeded(66);
+    let input = f32_vec(&mut rng, 12, 1.0);
+    let req = InferenceRequest::new("tiny", RequestKind::Classify, input).with_samples(30);
+    let resp = serve_request(&eng, &mut src, &req, Some(&ad), &metrics).unwrap();
+    assert!(resp.samples_used() <= 8, "granted ceiling was 8");
+    assert_eq!(metrics.mc_samples_shed(), 22, "30 wanted, 8 granted");
+    // early-stop refund went back to the bucket: another grant works
+    assert!(budget.stats().granted >= 8);
+}
+
+#[test]
+fn per_request_overrides_turn_a_fixed_coordinator_adaptive() {
+    let eng = cim_engine(&[12, 10, 4], 6, 75);
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(eng.mask_keep(), 41);
+    let mut rng = Pcg32::seeded(76);
+    let input = f32_vec(&mut rng, 12, 1.0);
+    // no coordinator AdaptiveConfig — the request brings its own knobs
+    let req = InferenceRequest::new("tiny", RequestKind::Classify, input.clone())
+        .with_samples(20)
+        .with_chunk(5)
+        .with_stop_rule(StopRule::MajorityMargin)
+        .with_confidence(0.8);
+    let resp = serve_request(&eng, &mut src, &req, None, &metrics).unwrap();
+    assert!(resp.samples_used() <= 20);
+    assert_eq!(metrics.decided(), 1, "override must engage the adaptive ledger");
+    // a plain request on the same engine stays fixed-T
+    let plain = InferenceRequest::new("tiny", RequestKind::Classify, input).with_samples(7);
+    let resp = serve_request(&eng, &mut src, &plain, None, &metrics).unwrap();
+    assert_eq!(resp.samples_used(), 7);
+    assert_eq!(resp.verdict(), Verdict::Accept);
+    assert_eq!(metrics.decided(), 1, "fixed-T requests stay off the adaptive ledger");
+}
+
+// ---------------------------------------------------------------------
+// 4. typed errors carry model id + request kind
+// ---------------------------------------------------------------------
+
+#[test]
+fn invalid_requests_are_typed_with_model_and_kind() {
+    let eng = cim_engine(&[12, 10, 4], 6, 85);
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(0.5, 1);
+    let bad_width = InferenceRequest::new("tiny", RequestKind::Classify, vec![0.0; 3]);
+    let err = serve_request(&eng, &mut src, &bad_width, None, &metrics).unwrap_err();
+    assert!(matches!(err, McCimError::InvalidRequest { .. }));
+    assert_eq!(err.model(), Some("tiny"));
+    assert_eq!(err.kind(), Some(RequestKind::Classify));
+
+    let zero = InferenceRequest::new("tiny", RequestKind::Regress, vec![0.0; 12])
+        .with_samples(0);
+    let err = serve_request(&eng, &mut src, &zero, None, &metrics).unwrap_err();
+    assert!(matches!(err, McCimError::InvalidRequest { .. }));
+    assert_eq!(err.kind(), Some(RequestKind::Regress));
+}
+
+#[test]
+fn stub_backend_failures_carry_context_through_the_engine() {
+    let spec = ModelSpec::synthetic("stubbed", vec![6, 4]);
+    let eng = McDropoutEngine::with_backend(
+        Box::new(StubBackend::new(&spec)),
+        &spec,
+        None,
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    assert_eq!(eng.backend_name(), "stub");
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(0.5, 1);
+    let req = InferenceRequest::new("stubbed", RequestKind::Classify, vec![0.0; 6]);
+    let err = serve_request(&eng, &mut src, &req, None, &metrics).unwrap_err();
+    match &err {
+        McCimError::Execution { backend, model, kind, .. } => {
+            assert_eq!(backend, "stub");
+            assert_eq!(model, "stubbed");
+            assert_eq!(*kind, RequestKind::Classify);
+        }
+        other => panic!("expected Execution error, got {other:?}"),
+    }
+    assert!(err.to_string().contains("stubbed"));
+}
+
+#[test]
+fn backend_kind_default_is_servable_without_pjrt() {
+    // the default build must not default to a backend that cannot run
+    if !cfg!(feature = "pjrt") {
+        assert_eq!(BackendKind::default(), BackendKind::CimSim);
+    }
+}
