@@ -1,0 +1,196 @@
+//! Delta-scheduled MC execution acceptance bench (§IV on the hot path).
+//!
+//!     cargo bench --bench delta_schedule
+//!
+//! Runs a 30-instance probabilistic request on the bit-exact macro
+//! simulator (no artifacts required) three ways — dense rows, delta
+//! schedule unordered, delta schedule TSP-ordered — and checks the §IV
+//! contract:
+//!
+//! * outputs are **bit-identical** across all three executions;
+//! * ordered delta execution **reduces measured MACs and measured pJ**
+//!   vs dense execution (the Fig. 6/Fig. 9 story, measured from real
+//!   `MacroRunStats` counters instead of the analytic model);
+//! * adaptive verdicts and samples-used are **unchanged**;
+//! * a seeded re-request is served from the ordered-schedule cache and
+//!   prices its mask bits as SRAM schedule reads.
+
+use mc_cim::backend::{CimSimBackend, LayerParams};
+use mc_cim::coordinator::{
+    serve_request, AdaptiveConfig, DeltaScheduleConfig, InferenceRequest, McDropoutEngine,
+    McOutput, Metrics,
+};
+use mc_cim::dropout::plan::{OrderingMode, ScheduleCache};
+use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
+use mc_cim::model::ModelSpec;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::f32_vec;
+use mc_cim::util::Pcg32;
+use mc_cim::RequestKind;
+use std::sync::Arc;
+
+const DIMS: [usize; 3] = [64, 24, 10];
+const SAMPLES: usize = 30;
+const SEED: u64 = 2024;
+
+fn build_engine(delta: Option<(OrderingMode, Option<Arc<ScheduleCache>>)>) -> McDropoutEngine {
+    let spec = ModelSpec::synthetic("bench", DIMS.to_vec());
+    let mut rng = Pcg32::seeded(11);
+    let layers: Vec<LayerParams> = (0..DIMS.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.2; fo],
+            }
+        })
+        .collect();
+    let backend = CimSimBackend::from_params(&spec, layers, 6).unwrap();
+    let mut engine = McDropoutEngine::with_backend(
+        Box::new(backend),
+        &spec,
+        Some(6),
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    if let Some((ordering, cache)) = delta {
+        engine.set_delta_schedule(DeltaScheduleConfig { reuse: true, ordering, cache });
+    }
+    engine
+}
+
+fn run_request(engine: &McDropoutEngine, x: &[f32]) -> McOutput {
+    let mut src = IdealBernoulli::new(engine.mask_keep(), SEED);
+    engine.infer_mc(x, SAMPLES, &mut src).unwrap()
+}
+
+fn measured_macs(out: &McOutput) -> u64 {
+    out.macro_stats.as_ref().expect("cim-sim measures").driven_col_cycles
+}
+
+fn conversions(out: &McOutput) -> u64 {
+    out.macro_stats.as_ref().expect("cim-sim measures").adc_conversions
+}
+
+fn assert_bit_identical(a: &McOutput, b: &McOutput, label: &str) {
+    assert_eq!(a.samples.len(), b.samples.len(), "{label}: sample count");
+    for (t, (ra, rb)) in a.samples.iter().zip(&b.samples).enumerate() {
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: row {t} out[{j}]");
+        }
+    }
+}
+
+fn adaptive_verdict(engine: &McDropoutEngine, x: &[f32]) -> (usize, String) {
+    let metrics = Metrics::new();
+    let mut src = IdealBernoulli::new(engine.mask_keep(), SEED);
+    let req = InferenceRequest::new("bench", RequestKind::Classify, x.to_vec())
+        .with_samples(SAMPLES)
+        .with_chunk(5);
+    let resp = serve_request(engine, &mut src, &req, Some(&AdaptiveConfig::new(0.9)), &metrics)
+        .unwrap();
+    (resp.samples_used(), format!("{:?}", resp.verdict()))
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let x = f32_vec(&mut rng, DIMS[0], 1.0);
+
+    let dense = build_engine(None);
+    let unordered = build_engine(Some((OrderingMode::None, None)));
+    let cache = Arc::new(ScheduleCache::new());
+    let ordered = build_engine(Some((OrderingMode::Nn2Opt, Some(Arc::clone(&cache)))));
+
+    let out_dense = run_request(&dense, &x);
+    let out_unord = run_request(&unordered, &x);
+    let out_ord = run_request(&ordered, &x);
+
+    // 1. identical outputs, identical masks, three execution strategies
+    assert_bit_identical(&out_dense, &out_unord, "dense vs delta-unordered");
+    assert_bit_identical(&out_dense, &out_ord, "dense vs delta-ordered");
+
+    println!(
+        "delta_schedule bench — {SAMPLES}-instance request, dims {DIMS:?}, cim-sim (measured)"
+    );
+    println!("  execution            MACs(col drives)  ADC conversions   energy[pJ]");
+    for (label, out) in [
+        ("dense rows", &out_dense),
+        ("delta, unordered", &out_unord),
+        ("delta, nn-2opt", &out_ord),
+    ] {
+        println!(
+            "  {label:20} {:>14} {:>16} {:>12.1}",
+            measured_macs(out),
+            conversions(out),
+            out.energy_pj,
+        );
+    }
+
+    // 2. the acceptance inequalities: ordered delta beats dense on
+    //    measured MACs and measured energy
+    assert!(
+        measured_macs(&out_ord) < measured_macs(&out_dense),
+        "ordered delta must reduce measured MACs: {} vs {}",
+        measured_macs(&out_ord),
+        measured_macs(&out_dense)
+    );
+    assert!(
+        out_ord.energy_pj < out_dense.energy_pj,
+        "ordered delta must reduce measured energy: {:.1} vs {:.1} pJ",
+        out_ord.energy_pj,
+        out_dense.energy_pj
+    );
+
+    // 3. plan accounting: reuse saves MACs, ordering never hurts
+    let plan = out_ord.plan.expect("delta runs report plans");
+    let plan_unord = out_unord.plan.expect("delta runs report plans");
+    assert!(plan.delta_macs_saved() > 0);
+    assert!(plan.planned_macs <= plan_unord.planned_macs);
+    println!(
+        "  plan: dense {} MACs, planned {} (saved {}), ordering gain {:.1}%",
+        plan.dense_macs,
+        plan.planned_macs,
+        plan.delta_macs_saved(),
+        plan.ordering_gain_pct(),
+    );
+
+    // 4. adaptive serving is observationally unchanged
+    let (used_dense, verdict_dense) = adaptive_verdict(&dense, &x);
+    let (used_ord, verdict_ord) = adaptive_verdict(&ordered, &x);
+    assert_eq!(used_dense, used_ord, "samples-used must be unchanged");
+    assert_eq!(verdict_dense, verdict_ord, "verdict must be unchanged");
+    println!("  adaptive: verdict {verdict_ord} after {used_ord} samples on both paths");
+
+    // 5. seeded requests hit the ordered-schedule cache; the hit
+    //    prices mask bits as SRAM schedule reads (§IV-B offline)
+    let mut src = IdealBernoulli::new(ordered.mask_keep(), 99);
+    let miss = ordered.infer_mc_cacheable(&x, SAMPLES, &mut src, Some(99)).unwrap();
+    let mut src = IdealBernoulli::new(ordered.mask_keep(), 99);
+    let hit = ordered.infer_mc_cacheable(&x, SAMPLES, &mut src, Some(99)).unwrap();
+    assert_bit_identical(&miss, &hit, "cache miss vs hit");
+    assert!(hit.energy_pj < miss.energy_pj, "schedule reads must beat RNG draws");
+    assert_eq!(cache.hits(), 1);
+    println!(
+        "  schedule cache: hit {:.1} pJ vs miss {:.1} pJ (hit rate {:.0}%)",
+        hit.energy_pj,
+        miss.energy_pj,
+        100.0 * cache.hit_rate(),
+    );
+
+    // 6. measured vs §V modeled saving, for drift visibility
+    let report = EnergyModel::paper_default().delta_vs_modeled(
+        &LayerWorkload::paper_default(),
+        out_dense.energy_pj,
+        out_ord.energy_pj,
+    );
+    println!(
+        "  saving: measured {:.0}% vs §V modeled {:.0}% (different workload shapes; \
+         directional check only)",
+        100.0 * report.measured_saving,
+        100.0 * report.modeled_saving,
+    );
+    assert!(report.measured_saving > 0.0);
+
+    println!("delta_schedule bench PASSED");
+}

@@ -16,7 +16,29 @@
 //! per-layer shared-delta mid-tread grids for both operands at the
 //! configured bit width; the digital chain (`*s + b`, ReLU1 clip, mask
 //! × inverted-dropout scale `1/(1-p)`) runs in f32 exactly as the
-//! compiled HLO graph does.
+//! compiled HLO graph does. Grid anchoring: the *network input* grid
+//! is anchored to the input's max-abs (the input is static across a
+//! request's MC rows); *hidden* activations use the static ReLU1
+//! full-scale grid `amax = 1/(1-p)` — a fixed full-scale calibration,
+//! exactly like the xADC's. A static grid is also what makes §IV-A
+//! compute reuse exact: a kept neuron's code never depends on which
+//! *other* neurons the current mask dropped, so product-sums carry
+//! across MC instances untouched.
+//!
+//! **Delta sessions** ([`ExecutionBackend::execute_plan`]): a
+//! probabilistic request can run as an ordered delta schedule. The
+//! session computes layer 0's product-sums once (the request input
+//! never changes — the degenerate reuse), keeps layer 1's plane-sums
+//! as *integers* per (output, tile, cycle) and updates only the
+//! `I^A`/`I^D` columns of each instance through the real macro
+//! (§IV-A, Fig. 7), and evaluates deeper layers densely (their inputs
+//! genuinely vary across instances). Integer plane-sum bookkeeping +
+//! a canonical shift-add reconstruction make the outputs `to_bits`
+//! -equal to the dense path; `MacroRunStats` meanwhile meter only the
+//! work actually done, so measured pJ reflect the §IV savings. A
+//! cost model picks dense fallback for layer 1 when a chunk's deltas
+//! would cost more than gated dense rows (delta passes convert every
+//! maintained row, so tiny layers with large deltas can lose).
 //!
 //! **Dropout = gating, priced for real.** A hidden mask value of zero
 //! gates the corresponding macro *row* off (`row_active`), so a
@@ -28,13 +50,14 @@
 //! ([`EnergyModel::measured_energy`]), so a request's `energy_pj`
 //! reflects what this input, these masks, actually cost.
 
-use super::{BackendCaps, ExecOutput, ExecutionBackend, Row};
+use super::{BackendCaps, ExecOutput, ExecutionBackend, ExecutionPlan, PlanRow, PlanState, Row};
 use crate::cim::macro_sim::{CimMacro, MacroRunStats};
 use crate::cim::xadc::AdcKind;
+use crate::dropout::mask::DropoutMask;
 use crate::energy::EnergyModel;
 use crate::error::McCimError;
 use crate::model::ModelSpec;
-use crate::operator::bitplane::OperatorKind;
+use crate::operator::bitplane::{BitplaneSchedule, OperatorKind};
 use crate::operator::quant::{QuantTensor, Quantizer};
 use crate::workloads::TensorFile;
 use crate::{MACRO_COLS, MACRO_ROWS};
@@ -159,6 +182,77 @@ impl CimSimBackend {
         dst.adc_cycles += st.adc_cycles;
     }
 
+    /// Quantize one layer's input: the network input on its own
+    /// max-abs grid, hidden activations on the static ReLU1 full-scale
+    /// grid (see the module docs — static grids are what make
+    /// cross-instance product-sum reuse exact).
+    fn quantize_layer_input(&self, l: usize, h: &[f32]) -> QuantTensor {
+        if l == 0 {
+            self.quant.quantize(h)
+        } else {
+            self.quant.quantize_with_amax(h, self.inv_keep)
+        }
+    }
+
+    /// The tiled macro pass of one layer: every 31-column × ≤16-row
+    /// tile through `correlate`, gated rows skipped, partial sums
+    /// accumulated in block order.
+    fn layer_matvec(
+        &self,
+        mac: &mut CimMacro,
+        layer: &QuantLayer,
+        xq: &QuantTensor,
+        row_active: &[bool],
+        stats: &mut MacroRunStats,
+    ) -> Vec<f32> {
+        let mut acc = vec![0.0f32; layer.fo];
+        for (cb, wrows) in layer.tiles.iter().enumerate() {
+            let lo = cb * MACRO_COLS;
+            let hi = (lo + MACRO_COLS).min(layer.fi);
+            let mut codes = vec![0i32; MACRO_COLS];
+            codes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
+            // zero activations (dropped upstream or quantized to 0)
+            // leave their column lines undriven
+            let col_active: Vec<bool> = codes.iter().map(|&c| c != 0).collect();
+            let xt = QuantTensor { codes, delta: xq.delta, bits: self.bits };
+            for rb in (0..layer.fo).step_by(MACRO_ROWS) {
+                let rhi = (rb + MACRO_ROWS).min(layer.fo);
+                let (out, st) =
+                    mac.correlate(&xt, &wrows[rb..rhi], &col_active, &row_active[rb..rhi]);
+                Self::merge_counts(stats, &st);
+                for (k, v) in out.iter().enumerate() {
+                    acc[rb + k] += *v;
+                }
+            }
+        }
+        acc
+    }
+
+    /// Gated-row mask for layer `l` (the output layer has no dropout).
+    fn layer_row_active(&self, l: usize, masks: &[Vec<f32>]) -> Vec<bool> {
+        let last = self.layers.len() - 1;
+        if l < last {
+            masks[l].iter().map(|&m| m != 0.0).collect()
+        } else {
+            vec![true; self.layers[l].fo]
+        }
+    }
+
+    /// Digital per-feature affine, then (hidden layers) the graph's
+    /// bounded ReLU1 + mask × inverted-dropout scale.
+    fn digital_chain(&self, l: usize, acc: &mut [f32], masks: &[Vec<f32>]) {
+        let layer = &self.layers[l];
+        let last = self.layers.len() - 1;
+        for j in 0..layer.fo {
+            acc[j] = acc[j] * layer.s[j] + layer.b[j];
+        }
+        if l < last {
+            for j in 0..layer.fo {
+                acc[j] = acc[j].clamp(0.0, 1.0) * masks[l][j] * self.inv_keep;
+            }
+        }
+    }
+
     /// One row's forward pass on the macro. `masks` = one f32 mask per
     /// hidden layer.
     fn forward_row(
@@ -168,51 +262,287 @@ impl CimSimBackend {
         masks: &[Vec<f32>],
         stats: &mut MacroRunStats,
     ) -> Vec<f32> {
-        let last = self.layers.len() - 1;
         let mut h = input.to_vec();
         for (l, layer) in self.layers.iter().enumerate() {
-            let xq = self.quant.quantize(&h);
-            let mut acc = vec![0.0f32; layer.fo];
+            let xq = self.quantize_layer_input(l, &h);
             // a dropped hidden neuron is a gated macro row: no compute,
-            // no conversion (the §III energy win); the output layer has
-            // no dropout
-            let row_active: Vec<bool> = if l < last {
-                masks[l].iter().map(|&m| m != 0.0).collect()
-            } else {
-                vec![true; layer.fo]
-            };
-            for (cb, wrows) in layer.tiles.iter().enumerate() {
-                let lo = cb * MACRO_COLS;
-                let hi = (lo + MACRO_COLS).min(layer.fi);
-                let mut codes = vec![0i32; MACRO_COLS];
-                codes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
-                // zero activations (dropped upstream or quantized to 0)
-                // leave their column lines undriven
-                let col_active: Vec<bool> = codes.iter().map(|&c| c != 0).collect();
-                let xt = QuantTensor { codes, delta: xq.delta, bits: self.bits };
-                for rb in (0..layer.fo).step_by(MACRO_ROWS) {
-                    let rhi = (rb + MACRO_ROWS).min(layer.fo);
-                    let (out, st) =
-                        mac.correlate(&xt, &wrows[rb..rhi], &col_active, &row_active[rb..rhi]);
-                    Self::merge_counts(stats, &st);
-                    for (k, v) in out.iter().enumerate() {
-                        acc[rb + k] += *v;
-                    }
-                }
-            }
-            // digital per-feature affine, then (hidden layers) the
-            // graph's bounded ReLU1 + mask × inverted-dropout scale
-            for j in 0..layer.fo {
-                acc[j] = acc[j] * layer.s[j] + layer.b[j];
-            }
-            if l < last {
-                for j in 0..layer.fo {
-                    acc[j] = acc[j].clamp(0.0, 1.0) * masks[l][j] * self.inv_keep;
-                }
-            }
+            // no conversion (the §III energy win)
+            let row_active = self.layer_row_active(l, masks);
+            let mut acc = self.layer_matvec(mac, layer, &xq, &row_active, stats);
+            self.digital_chain(l, &mut acc, masks);
             h = acc;
         }
         h
+    }
+}
+
+/// Per-request delta-session state (lives inside a [`PlanState`]).
+#[derive(Default)]
+struct CimSession {
+    /// Layer-0 macro accumulator (pre-affine), computed once — the
+    /// request input never changes across MC instances.
+    acc0: Option<Vec<f32>>,
+    /// Layer-1 integer plane-sum state (delta mode only).
+    l1: Option<L1Delta>,
+    /// Whether layer 1 runs via delta updates or per-row gated dense
+    /// evaluation (None until the first chunk's cost estimate).
+    l1_delta: Option<bool>,
+}
+
+/// Integer product-sum state of the first hidden-mask layer: exact
+/// plane sums per (output neuron, column block, schedule cycle),
+/// updated only on `I^A`/`I^D` columns (Fig. 7).
+struct L1Delta {
+    /// Static quantized layer-1 input, pre-sliced into 31-wide blocks.
+    xt: Vec<QuantTensor>,
+    /// Columns whose static code is nonzero (only these ever drive).
+    nonzero: Vec<bool>,
+    /// Shift-add scales, schedule-cycle order.
+    scales: Vec<f32>,
+    planes: usize,
+    blocks: usize,
+    fo: usize,
+    /// `sums[(j * blocks + b) * planes + c]`.
+    sums: Vec<i64>,
+    /// Mask currently reflected in `sums` (all-zeros before the first
+    /// instance, so the Full row is just a delta from nothing).
+    cur: DropoutMask,
+}
+
+impl CimSimBackend {
+    /// Static layer-1 input: the pre-mask hidden activation vector on
+    /// the shared hidden-activation grid. Instance-independent because
+    /// layer 0's accumulator is.
+    fn l1_static_input(&self, acc0: &[f32]) -> QuantTensor {
+        let layer0 = &self.layers[0];
+        let pre: Vec<f32> = acc0
+            .iter()
+            .enumerate()
+            .map(|(j, &v)| (v * layer0.s[j] + layer0.b[j]).clamp(0.0, 1.0) * self.inv_keep)
+            .collect();
+        self.quant.quantize_with_amax(&pre, self.inv_keep)
+    }
+
+    /// Initialize the layer-1 delta state from the static input.
+    fn l1_init(&self, aq: &QuantTensor) -> L1Delta {
+        let layer = &self.layers[1];
+        let blocks = layer.fi.div_ceil(MACRO_COLS);
+        let xt: Vec<QuantTensor> = (0..blocks)
+            .map(|cb| {
+                let lo = cb * MACRO_COLS;
+                let hi = (lo + MACRO_COLS).min(layer.fi);
+                let mut codes = vec![0i32; MACRO_COLS];
+                codes[..hi - lo].copy_from_slice(&aq.codes[lo..hi]);
+                QuantTensor { codes, delta: aq.delta, bits: self.bits }
+            })
+            .collect();
+        let w_delta = layer.tiles[0][0].delta;
+        let sched =
+            BitplaneSchedule::new(OperatorKind::MultiplicationFree, self.bits, aq.delta, w_delta);
+        let scales: Vec<f32> = sched.cycles.iter().map(|c| c.scale).collect();
+        let planes = scales.len();
+        L1Delta {
+            xt,
+            nonzero: aq.codes.iter().map(|&c| c != 0).collect(),
+            scales,
+            planes,
+            blocks,
+            fo: layer.fo,
+            sums: vec![0i64; layer.fo * blocks * planes],
+            cur: DropoutMask::zeros(layer.fi),
+        }
+    }
+
+    /// One delta pass (§IV-A cycle): drive only `set ∩ nonzero`
+    /// columns through the macro for every maintained row and fold the
+    /// measured integer plane sums into the state with `sign`.
+    fn l1_apply(
+        &self,
+        mac: &mut CimMacro,
+        st: &mut L1Delta,
+        set: &DropoutMask,
+        sign: i64,
+        stats: &mut MacroRunStats,
+    ) {
+        let layer = &self.layers[1];
+        for cb in 0..st.blocks {
+            let lo = cb * MACRO_COLS;
+            let hi = (lo + MACRO_COLS).min(layer.fi);
+            let mut col_active = vec![false; MACRO_COLS];
+            let mut any = false;
+            for i in lo..hi {
+                if set.get(i) && st.nonzero[i] {
+                    col_active[i - lo] = true;
+                    any = true;
+                }
+            }
+            if !any {
+                continue; // no delta columns land in this tile
+            }
+            for rb in (0..layer.fo).step_by(MACRO_ROWS) {
+                let rhi = (rb + MACRO_ROWS).min(layer.fo);
+                let all = vec![true; rhi - rb];
+                let (_, run) =
+                    mac.correlate(&st.xt[cb], &layer.tiles[cb][rb..rhi], &col_active, &all);
+                Self::merge_counts(stats, &run);
+                for (r, codes) in run.plane_sums.chunks(st.planes).enumerate() {
+                    let base = ((rb + r) * st.blocks + cb) * st.planes;
+                    for (c, &code) in codes.iter().enumerate() {
+                        st.sums[base + c] += sign * code as i64;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Shift-add the integer plane sums back into per-output partial
+    /// sums, in exactly the float-op order of the dense tile loop (per
+    /// block: cycle-order accumulation; blocks folded in order) — this
+    /// is what makes delta outputs `to_bits`-equal to dense outputs.
+    fn l1_reconstruct(&self, st: &L1Delta) -> Vec<f32> {
+        let mut acc = vec![0.0f32; st.fo];
+        for (j, slot) in acc.iter_mut().enumerate() {
+            let mut a = 0.0f32;
+            for b in 0..st.blocks {
+                let base = (j * st.blocks + b) * st.planes;
+                let mut out = 0.0f32;
+                for (c, &scale) in st.scales.iter().enumerate() {
+                    out += st.sums[base + c] as f32 * scale;
+                }
+                a += out;
+            }
+            *slot = a;
+        }
+        acc
+    }
+
+    /// Estimated measured cost (fJ-weighted conversions + column
+    /// drives) of running this chunk's layer 1 via delta updates vs
+    /// gated dense rows. Delta passes convert every maintained row, so
+    /// dense can win on small layers with large deltas; the cheaper
+    /// strategy is picked once per session.
+    fn l1_delta_pays_off(&self, plan: &ExecutionPlan, nonzero: &[bool], planes: usize) -> bool {
+        let layer = &self.layers[1];
+        let last = self.layers.len() - 1;
+        let p = &self.energy.params;
+        // one conversion ~ a few SAR cycles of analog search + logic
+        let e_conv = 3.0 * p.e_sar_analog_fj + p.e_sa_logic_asym_fj;
+        let e_drive = p.e_col_fj;
+        let fo = layer.fo as f64;
+        let planes_f = planes as f64;
+        let blocks = layer.fi.div_ceil(MACRO_COLS);
+        let profile = |mask: &DropoutMask| -> (f64, f64) {
+            let mut hit = vec![false; blocks];
+            let mut cols = 0usize;
+            for i in mask.iter_active() {
+                if nonzero[i] {
+                    cols += 1;
+                    hit[i / MACRO_COLS] = true;
+                }
+            }
+            (hit.iter().filter(|&&b| b).count() as f64, cols as f64)
+        };
+        let mut delta_cost = 0.0f64;
+        let mut dense_cost = 0.0f64;
+        for row in &plan.rows {
+            let masks = row.masks();
+            let (full_blocks, full_cols) = profile(&masks[0]);
+            let rows_active = if 1 < last { masks[1].active_count() as f64 } else { fo };
+            // dense layer_matvec runs correlate over EVERY column block
+            // (the ADC converts per active row per cycle in each of
+            // them, driven columns or not) — only the drives scale with
+            // the active column set
+            dense_cost += planes_f * rows_active * (blocks as f64 * e_conv + full_cols * e_drive);
+            let (d_blocks, d_cols) = match row {
+                PlanRow::Full { .. } => (full_blocks, full_cols),
+                PlanRow::Delta { added, dropped, .. } => {
+                    let (ab, ac) = profile(&added[0]);
+                    let (db, dc) = profile(&dropped[0]);
+                    (ab + db, ac + dc)
+                }
+            };
+            delta_cost += planes_f * fo * (d_blocks * e_conv + d_cols * e_drive);
+        }
+        delta_cost < dense_cost
+    }
+
+    /// One plan row's forward pass through the session.
+    fn forward_row_planned(
+        &self,
+        mac: &mut CimMacro,
+        sess: &mut CimSession,
+        plan: &ExecutionPlan,
+        row: &PlanRow,
+        stats: &mut MacroRunStats,
+    ) -> Result<Vec<f32>, McCimError> {
+        let masks_f32: Vec<Vec<f32>> = row.masks().iter().map(|m| m.to_f32()).collect();
+        let last = self.layers.len() - 1;
+
+        // layer 0: product-sums are request-static — pay them once
+        if sess.acc0.is_none() {
+            if !matches!(row, PlanRow::Full { .. }) {
+                return Err(self.err(
+                    "plan session must start with a Full row (fresh state got a Delta)".into(),
+                ));
+            }
+            let xq = self.quant.quantize(&plan.input);
+            let all = vec![true; self.layers[0].fo];
+            sess.acc0 = Some(self.layer_matvec(mac, &self.layers[0], &xq, &all, stats));
+        }
+        let mut acc = sess.acc0.clone().expect("acc0 just ensured");
+        self.digital_chain(0, &mut acc, &masks_f32);
+        if last == 0 {
+            return Ok(acc);
+        }
+        let mut h = acc;
+
+        // layer 1: exact delta reuse over the static pre-mask input
+        if sess.l1_delta.is_none() {
+            let aq = self.l1_static_input(sess.acc0.as_ref().expect("acc0 set above"));
+            let st = self.l1_init(&aq);
+            let use_delta = self.l1_delta_pays_off(plan, &st.nonzero, st.planes);
+            if use_delta {
+                sess.l1 = Some(st);
+            }
+            sess.l1_delta = Some(use_delta);
+        }
+        let mut acc1 = if sess.l1_delta == Some(true) {
+            let mut st = sess.l1.take().expect("delta state initialized with the decision");
+            let target = &row.masks()[0];
+            let added = target.newly_active(&st.cur);
+            let dropped = target.newly_dropped(&st.cur);
+            if let PlanRow::Delta { added: pa, dropped: pd, .. } = row {
+                debug_assert_eq!(added, pa[0], "plan deltas must chain consecutively");
+                debug_assert_eq!(dropped, pd[0], "plan deltas must chain consecutively");
+            }
+            if added.active_count() > 0 {
+                self.l1_apply(mac, &mut st, &added, 1, stats);
+            }
+            if dropped.active_count() > 0 {
+                self.l1_apply(mac, &mut st, &dropped, -1, stats);
+            }
+            st.cur = target.clone();
+            let acc1 = self.l1_reconstruct(&st);
+            sess.l1 = Some(st);
+            acc1
+        } else {
+            let xq = self.quantize_layer_input(1, &h);
+            let row_active = self.layer_row_active(1, &masks_f32);
+            self.layer_matvec(mac, &self.layers[1], &xq, &row_active, stats)
+        };
+        self.digital_chain(1, &mut acc1, &masks_f32);
+        h = acc1;
+
+        // deeper layers: inputs vary across instances — dense, exactly
+        // as the row path runs them
+        for l in 2..=last {
+            let xq = self.quantize_layer_input(l, &h);
+            let row_active = self.layer_row_active(l, &masks_f32);
+            let mut acc = self.layer_matvec(mac, &self.layers[l], &xq, &row_active, stats);
+            self.digital_chain(l, &mut acc, &masks_f32);
+            h = acc;
+        }
+        Ok(h)
     }
 }
 
@@ -227,7 +557,66 @@ impl ExecutionBackend for CimSimBackend {
             supports_masks: true,
             measures_energy: true,
             native_quantization: true,
+            plan_native: true,
         }
+    }
+
+    fn new_plan_state(&self) -> PlanState {
+        PlanState(Some(Box::new(CimSession::default())))
+    }
+
+    /// Native delta-schedule execution: stateful product-sum session,
+    /// measured energy covering only the work actually done, outputs
+    /// bit-exact against [`Self::execute_rows`] on the same masks.
+    fn execute_plan(
+        &self,
+        plan: &ExecutionPlan,
+        state: &mut PlanState,
+    ) -> Result<ExecOutput, McCimError> {
+        if plan.rows.is_empty() {
+            return Err(self.err("empty plan".into()));
+        }
+        if plan.input.len() != self.dims[0] {
+            return Err(self.err("input dim mismatch".into()));
+        }
+        let mask_dims = self.mask_dims();
+        for row in &plan.rows {
+            let masks = row.masks();
+            if masks.len() != mask_dims.len() {
+                return Err(self.err("mask count mismatch".into()));
+            }
+            for (l, m) in masks.iter().enumerate() {
+                if m.len() != mask_dims[l] {
+                    return Err(self.err("mask dim mismatch".into()));
+                }
+            }
+        }
+        if state.0.is_none() {
+            *state = self.new_plan_state();
+        }
+        let sess = state
+            .0
+            .as_mut()
+            .and_then(|s| s.downcast_mut::<CimSession>())
+            .ok_or_else(|| self.err("plan session belongs to a different backend".into()))?;
+        let mut mac = self.mac.lock().unwrap_or_else(|p| p.into_inner());
+        let mut stats = MacroRunStats::default();
+        let mut outputs = Vec::with_capacity(plan.rows.len());
+        for row in &plan.rows {
+            outputs.push(self.forward_row_planned(&mut mac, sess, plan, row, &mut stats)?);
+        }
+        // mask bits: online RNG draws, or SRAM schedule reads when the
+        // masks came from a precomputed (cached) schedule (§IV-B)
+        let mask_bits = plan.rows.len() as u64 * mask_dims.iter().sum::<usize>() as u64;
+        let (rng_bits, sched_bits) = if plan.sampled { (mask_bits, 0) } else { (0, mask_bits) };
+        let breakdown = self.energy.measured_energy_scheduled(
+            &stats,
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+            rng_bits,
+            sched_bits,
+        );
+        Ok(ExecOutput { outputs, energy_pj: Some(breakdown.total_pj()), stats: Some(stats) })
     }
 
     fn execute_rows(&self, rows: &[Row<'_>]) -> Result<ExecOutput, McCimError> {

@@ -27,10 +27,13 @@ pub use cim_sim::{CimSimBackend, LayerParams};
 pub use pjrt::PjrtBackend;
 pub use stub::StubBackend;
 
+pub use crate::dropout::plan::{ExecutionPlan, PlanRow};
+
 use crate::cim::macro_sim::MacroRunStats;
 use crate::error::McCimError;
 use crate::model::ModelSpec;
 use crate::runtime::Runtime;
+use std::any::Any;
 
 /// One execution row: a network input plus one dropout mask per hidden
 /// layer (f32 so expected-value masks work; `0.0` = neuron dropped).
@@ -59,6 +62,25 @@ pub struct BackendCaps {
     /// Whether the backend quantizes operands itself (the engine skips
     /// its input fake-quantization for natively quantized substrates).
     pub native_quantization: bool,
+    /// Whether [`ExecutionBackend::execute_plan`] runs delta schedules
+    /// natively (stateful product-sum sessions, §IV-A) rather than
+    /// lowering plan rows back to dense evaluations.
+    pub plan_native: bool,
+}
+
+/// Opaque per-request session state for [`ExecutionBackend::execute_plan`].
+///
+/// One request = one session: backends with native delta execution
+/// stash their layer product-sum state here so it survives across the
+/// request's chunks; dense-lowering backends leave it empty.
+#[derive(Default)]
+pub struct PlanState(pub(crate) Option<Box<dyn Any>>);
+
+impl PlanState {
+    /// A fresh, empty session.
+    pub fn empty() -> Self {
+        PlanState(None)
+    }
 }
 
 /// Result of one `execute_rows` call.
@@ -88,6 +110,38 @@ pub trait ExecutionBackend {
     /// Evaluate `rows` and return per-row network outputs plus cost
     /// data. `rows.len()` must be within `caps().max_batch`.
     fn execute_rows(&self, rows: &[Row<'_>]) -> Result<ExecOutput, McCimError>;
+
+    /// Create per-request session state for [`Self::execute_plan`].
+    /// The default (dense-lowering) implementation keeps no state.
+    fn new_plan_state(&self) -> PlanState {
+        PlanState::default()
+    }
+
+    /// Execute one ordered chunk of a delta schedule (§IV). Outputs
+    /// come back in the plan's *execution* order — callers restore
+    /// sampling order via `plan.order`.
+    ///
+    /// The default implementation lowers every plan row to a dense
+    /// [`Row`] and delegates to [`Self::execute_rows`], so substrates
+    /// without product-sum sessions (PJRT graphs, the stub) serve delta
+    /// schedules with identical numerics and their usual cost model.
+    fn execute_plan(
+        &self,
+        plan: &ExecutionPlan,
+        state: &mut PlanState,
+    ) -> Result<ExecOutput, McCimError> {
+        let _ = state;
+        let masks: Vec<Vec<Vec<f32>>> = plan
+            .rows
+            .iter()
+            .map(|r| r.masks().iter().map(|m| m.to_f32()).collect())
+            .collect();
+        let rows: Vec<Row<'_>> = masks
+            .iter()
+            .map(|ms| Row { input: &plan.input, masks: ms, sampled_masks: plan.sampled })
+            .collect();
+        self.execute_rows(&rows)
+    }
 }
 
 /// Which backend to construct (CLI / request-level selection).

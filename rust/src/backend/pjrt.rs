@@ -98,6 +98,8 @@ impl ExecutionBackend for PjrtBackend {
             supports_masks: true,
             measures_energy: false,
             native_quantization: false,
+            // delta schedules lower to dense fixed-B executions here
+            plan_native: false,
         }
     }
 

@@ -34,6 +34,7 @@ impl ExecutionBackend for StubBackend {
             supports_masks: true,
             measures_energy: false,
             native_quantization: false,
+            plan_native: false,
         }
     }
 

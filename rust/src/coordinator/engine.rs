@@ -20,8 +20,10 @@
 //! is kept as a thin shim over `PjrtBackend` + `ModelRegistry`.
 
 use super::batcher::chunk_plan;
-use crate::backend::{BackendOptions, ExecutionBackend, PjrtBackend, Row};
+use crate::backend::{BackendOptions, ExecutionBackend, PjrtBackend, PlanState, Row};
+use crate::cim::macro_sim::MacroRunStats;
 use crate::dropout::mask::DropoutMask;
+use crate::dropout::plan::{CachedSchedule, OrderingMode, PlanBuilder, PlanStats, ScheduleCache};
 use crate::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use crate::model::{ModelRegistry, ModelSpec};
 use crate::operator::quant::Quantizer;
@@ -30,6 +32,7 @@ use crate::runtime::Runtime;
 use crate::workloads::Meta;
 use anyhow::{ensure, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Which builtin network a legacy engine hosts.
 ///
@@ -111,10 +114,26 @@ impl EngineConfig {
     }
 }
 
+/// Delta-scheduled execution knobs (§IV wired into the serving path).
+#[derive(Clone, Debug, Default)]
+pub struct DeltaScheduleConfig {
+    /// Execute probabilistic requests as ordered delta schedules
+    /// (compute reuse, §IV-A) instead of dense per-row evaluation.
+    pub reuse: bool,
+    /// TSP ordering of the instances within a chunk (§IV-B).
+    pub ordering: OrderingMode,
+    /// Shared ordered-schedule cache; consulted only for requests with
+    /// a deterministic per-request seed (their masks are a pure
+    /// function of (model, keep-prob, samples, seed), so the schedule
+    /// is effectively precomputed offline, §IV-B).
+    pub cache: Option<Arc<ScheduleCache>>,
+}
+
 /// Result of one MC inference.
 #[derive(Clone, Debug)]
 pub struct McOutput {
-    /// Per-iteration network outputs [samples][out_dim].
+    /// Per-iteration network outputs [samples][out_dim], always in
+    /// *sampling* order (delta schedules restore it after ordering).
     pub samples: Vec<Vec<f32>>,
     /// CIM energy for the request (pJ): measured when the backend
     /// measures (see `energy_measured`), analytic §V model otherwise.
@@ -122,6 +141,55 @@ pub struct McOutput {
     /// True when `energy_pj` came from real macro counters rather than
     /// the analytic expectation.
     pub energy_measured: bool,
+    /// Delta-schedule accounting when the request ran as a plan
+    /// (None on the dense path).
+    pub plan: Option<PlanStats>,
+    /// Aggregated measured macro counters (measuring backends only).
+    pub macro_stats: Option<MacroRunStats>,
+}
+
+/// Accumulates the measured side channels of a request's executions.
+#[derive(Default)]
+struct RunAcc {
+    measured_pj: f64,
+    any_measured: bool,
+    stats: Option<MacroRunStats>,
+}
+
+impl RunAcc {
+    fn absorb(&mut self, energy_pj: Option<f64>, stats: Option<&MacroRunStats>) {
+        if let Some(e) = energy_pj {
+            self.measured_pj += e;
+            self.any_measured = true;
+        }
+        if let Some(s) = stats {
+            match &mut self.stats {
+                Some(t) => t.merge(s),
+                None => self.stats = Some(s.clone()),
+            }
+        }
+    }
+}
+
+/// One request's plan-execution context: the chunk builder (carrying
+/// masks across chunk boundaries) plus the backend session state
+/// (carrying product-sums across the same boundaries).
+struct PlannedRun {
+    builder: PlanBuilder,
+    state: PlanState,
+    stats: PlanStats,
+}
+
+/// Draw `t` instances' masks in sampling order (the same draw sequence
+/// the dense path uses, so outputs stay comparable bit for bit).
+fn sample_schedule(
+    mask_dims: &[usize],
+    t: usize,
+    src: &mut dyn DropoutBitSource,
+) -> Vec<Vec<DropoutMask>> {
+    (0..t)
+        .map(|_| mask_dims.iter().map(|&d| DropoutMask::sample(d, src)).collect())
+        .collect()
 }
 
 /// The engine.
@@ -143,6 +211,8 @@ pub struct McDropoutEngine {
     /// which is far too expensive for the request path
     /// (EXPERIMENTS.md §Perf).
     energy_cache: std::sync::Mutex<std::collections::HashMap<usize, f64>>,
+    /// Delta-scheduled execution (off by default: dense per-row rows).
+    delta: DeltaScheduleConfig,
 }
 
 impl McDropoutEngine {
@@ -174,8 +244,29 @@ impl McDropoutEngine {
             mode,
             bits_for_energy: bits.unwrap_or(6),
             energy_cache: std::sync::Mutex::new(std::collections::HashMap::new()),
+            delta: DeltaScheduleConfig::default(),
             backend,
         })
+    }
+
+    /// Switch this engine's probabilistic path between dense per-row
+    /// execution and §IV delta scheduling (reuse + ordering + cache).
+    pub fn set_delta_schedule(&mut self, delta: DeltaScheduleConfig) {
+        self.delta = delta;
+    }
+
+    pub fn delta_schedule(&self) -> &DeltaScheduleConfig {
+        &self.delta
+    }
+
+    /// Whether MC requests run as delta schedules on this engine:
+    /// requested by config *and* executable natively by the backend.
+    /// On dense-lowering backends (pjrt, stub) a plan would execute as
+    /// plain dense rows anyway, so the engine skips plan construction
+    /// entirely — no TSP work, and no schedule "savings" reported for
+    /// work that would have run dense regardless.
+    pub fn delta_enabled(&self) -> bool {
+        self.delta.reuse && self.backend.caps().plan_native
     }
 
     /// Legacy shim: load a PJRT-backed engine from the artifacts
@@ -283,14 +374,15 @@ impl McDropoutEngine {
 
     /// One execution of `n <= mc_batch` MC rows of a (already
     /// quantized) input, masks drawn from `src`. Appends the `n` row
-    /// outputs to `outputs`; returns the backend's measured energy.
+    /// outputs to `outputs` and folds measured energy/stats into `acc`.
     fn run_mc_block(
         &self,
         xq: &[f32],
         n: usize,
         src: &mut dyn DropoutBitSource,
         outputs: &mut Vec<Vec<f32>>,
-    ) -> Result<Option<f64>> {
+        acc: &mut RunAcc,
+    ) -> Result<()> {
         debug_assert!(n >= 1 && n <= self.mc_batch);
         let mask_dims = self.mask_dims();
         // the input slice is shared by reference across the batch — no
@@ -309,17 +401,98 @@ impl McDropoutEngine {
             .collect();
         let out = self.backend.execute_rows(&rows)?;
         ensure!(out.outputs.len() == n, "unexpected output size");
+        acc.absorb(out.energy_pj, out.stats.as_ref());
         outputs.extend(out.outputs);
-        Ok(out.energy_pj)
+        Ok(())
+    }
+
+    /// Fresh plan-execution context for one request.
+    fn begin_plan(&self) -> PlannedRun {
+        PlannedRun {
+            builder: PlanBuilder::new(&self.dims, self.delta.ordering),
+            state: self.backend.new_plan_state(),
+            stats: PlanStats::default(),
+        }
+    }
+
+    /// Order one block's masks, execute the plan, and append the
+    /// outputs restored to *sampling* order (so delta execution is
+    /// drop-in observationally identical to the dense path).
+    fn run_plan_block(
+        &self,
+        run: &mut PlannedRun,
+        xq: &[f32],
+        masks: Vec<Vec<DropoutMask>>,
+        sampled: bool,
+        outputs: &mut Vec<Vec<f32>>,
+        acc: &mut RunAcc,
+    ) -> Result<()> {
+        let n = masks.len();
+        debug_assert!(n >= 1 && n <= self.mc_batch);
+        let plan = run.builder.chunk(xq, masks, sampled);
+        let out = self.backend.execute_plan(&plan, &mut run.state)?;
+        ensure!(out.outputs.len() == n, "unexpected output size");
+        acc.absorb(out.energy_pj, out.stats.as_ref());
+        run.stats.merge(&plan.stats);
+        let base = outputs.len();
+        outputs.resize(base + n, Vec::new());
+        for (&pos, o) in plan.order.iter().zip(out.outputs) {
+            outputs[base + pos] = o;
+        }
+        Ok(())
+    }
+
+    /// The request's mask schedule: served from the ordered-schedule
+    /// cache when the request is deterministically seeded and a cache
+    /// is configured, sampled online otherwise. Returns the schedule
+    /// plus the cache disposition (None = cache not consulted).
+    fn resolve_schedule(
+        &self,
+        samples: usize,
+        src: &mut dyn DropoutBitSource,
+        cache_seed: Option<u64>,
+    ) -> (Arc<CachedSchedule>, Option<bool>) {
+        let mask_dims = self.mask_dims();
+        match (cache_seed, &self.delta.cache) {
+            (Some(seed), Some(cache)) => {
+                let key = (self.model_id.clone(), self.mask_keep.to_bits(), samples, seed);
+                if let Some(hit) = cache.lookup(&key) {
+                    return (hit, Some(true));
+                }
+                let sched = CachedSchedule { masks: sample_schedule(&mask_dims, samples, src) };
+                (cache.insert(key, sched), Some(false))
+            }
+            _ => (
+                Arc::new(CachedSchedule { masks: sample_schedule(&mask_dims, samples, src) }),
+                None,
+            ),
+        }
     }
 
     /// Probabilistic inference: `samples` MC iterations of one input,
-    /// masks drawn from `src`.
+    /// masks drawn from `src`. With delta scheduling enabled the rows
+    /// execute as an ordered plan (identical outputs, fewer macro
+    /// events); the dense path is unchanged.
     pub fn infer_mc(
         &self,
         x: &[f32],
         samples: usize,
         src: &mut dyn DropoutBitSource,
+    ) -> Result<McOutput> {
+        self.infer_mc_cacheable(x, samples, src, None)
+    }
+
+    /// [`Self::infer_mc`] with an optional cache identity: pass the
+    /// request's deterministic seed to let the ordered-schedule cache
+    /// serve (or store) this request's schedule. Only pass a seed when
+    /// the masks really are a pure function of (model, seed) — i.e.
+    /// `src` was freshly constructed from that seed for this request.
+    pub fn infer_mc_cacheable(
+        &self,
+        x: &[f32],
+        samples: usize,
+        src: &mut dyn DropoutBitSource,
+        cache_seed: Option<u64>,
     ) -> Result<McOutput> {
         ensure!(samples > 0, "MC inference needs at least one sample");
         let in_dim = self.dims[0];
@@ -330,21 +503,41 @@ impl McDropoutEngine {
         );
         let xq = self.quantize_input(x);
         let mut outputs = Vec::with_capacity(samples);
-        let mut measured = 0.0f64;
-        let mut any_measured = false;
-        let mut remaining = samples;
-        while remaining > 0 {
-            let n = remaining.min(self.mc_batch);
-            if let Some(e) = self.run_mc_block(&xq, n, src, &mut outputs)? {
-                measured += e;
-                any_measured = true;
+        let mut acc = RunAcc::default();
+        let mut plan_info = None;
+        if self.delta_enabled() {
+            let (schedule, from_cache) = self.resolve_schedule(samples, src, cache_seed);
+            // a cache hit is a precomputed schedule: mask bits are
+            // priced as SRAM reads, not RNG draws (§IV-B)
+            let sampled = from_cache != Some(true);
+            let mut run = self.begin_plan();
+            let mut done = 0usize;
+            while done < samples {
+                let n = (samples - done).min(self.mc_batch);
+                let rows = schedule.masks[done..done + n].to_vec();
+                self.run_plan_block(&mut run, &xq, rows, sampled, &mut outputs, &mut acc)?;
+                done += n;
             }
-            remaining -= n;
+            run.stats.from_cache = from_cache;
+            plan_info = Some(run.stats);
+        } else {
+            let mut remaining = samples;
+            while remaining > 0 {
+                let n = remaining.min(self.mc_batch);
+                self.run_mc_block(&xq, n, src, &mut outputs, &mut acc)?;
+                remaining -= n;
+            }
         }
         Ok(McOutput {
             samples: outputs,
-            energy_pj: if any_measured { measured } else { self.request_energy_pj(samples) },
-            energy_measured: any_measured,
+            energy_pj: if acc.any_measured {
+                acc.measured_pj
+            } else {
+                self.request_energy_pj(samples)
+            },
+            energy_measured: acc.any_measured,
+            plan: plan_info,
+            macro_stats: acc.stats,
         })
     }
 
@@ -387,23 +580,43 @@ impl McDropoutEngine {
         let plan = chunk_plan(max_samples, chunk.min(self.mc_batch));
         let xq = self.quantize_input(x);
         let mut outputs = Vec::with_capacity(max_samples.min(2 * chunk));
-        let mut measured = 0.0f64;
-        let mut any_measured = false;
+        let mut acc = RunAcc::default();
+        let mut plan_info = None;
         let blocks = plan.len();
-        for (i, &n) in plan.iter().enumerate() {
-            if let Some(e) = self.run_mc_block(&xq, n, src, &mut outputs)? {
-                measured += e;
-                any_measured = true;
+        if self.delta_enabled() {
+            // delta scheduling under early stopping: order within each
+            // chunk, carry mask + product-sum state across chunks. The
+            // stopper consults the same outputs at the same boundaries
+            // as the dense path, so verdicts are unchanged.
+            let mask_dims = self.mask_dims();
+            let mut run = self.begin_plan();
+            for (i, &n) in plan.iter().enumerate() {
+                let rows = sample_schedule(&mask_dims, n, src);
+                self.run_plan_block(&mut run, &xq, rows, true, &mut outputs, &mut acc)?;
+                if i + 1 < blocks && !keep_going(&outputs) {
+                    break;
+                }
             }
-            if i + 1 < blocks && !keep_going(&outputs) {
-                break;
+            plan_info = Some(run.stats);
+        } else {
+            for (i, &n) in plan.iter().enumerate() {
+                self.run_mc_block(&xq, n, src, &mut outputs, &mut acc)?;
+                if i + 1 < blocks && !keep_going(&outputs) {
+                    break;
+                }
             }
         }
         let used = outputs.len();
         Ok(McOutput {
             samples: outputs,
-            energy_pj: if any_measured { measured } else { self.request_energy_pj(used) },
-            energy_measured: any_measured,
+            energy_pj: if acc.any_measured {
+                acc.measured_pj
+            } else {
+                self.request_energy_pj(used)
+            },
+            energy_measured: acc.any_measured,
+            plan: plan_info,
+            macro_stats: acc.stats,
         })
     }
 

@@ -1,7 +1,9 @@
 //! Serving metrics: request counts, latency quantiles, executions,
-//! and the adaptive-sampling ledger (samples used/saved, verdicts,
-//! abstention rate).
+//! the adaptive-sampling ledger (samples used/saved, verdicts,
+//! abstention rate), and the delta-schedule ledger (MACs saved by
+//! compute reuse, §IV-B ordering gain, schedule-cache hit rate).
 
+use crate::dropout::plan::PlanStats;
 use crate::uncertainty::Verdict;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -38,6 +40,16 @@ pub struct Metrics {
     /// so a relaxed atomic suffices; measured on the cim-sim backend,
     /// modeled elsewhere).
     energy_fj: AtomicU64,
+    // -- delta-schedule ledger (§IV on the serving path) --
+    /// Dense-baseline MACs of plan-executed requests.
+    delta_dense_macs: AtomicU64,
+    /// MACs the delta schedules actually planned (ordered).
+    delta_planned_macs: AtomicU64,
+    /// What the same schedules would have cost unordered.
+    delta_identity_macs: AtomicU64,
+    /// Ordered-schedule cache hits / misses (consulted lookups only).
+    sched_cache_hits: AtomicU64,
+    sched_cache_misses: AtomicU64,
 }
 
 impl Metrics {
@@ -104,6 +116,19 @@ impl Metrics {
     /// not an early-stopping win.
     pub fn record_load_shed(&self, samples: usize) {
         self.mc_samples_shed.fetch_add(samples as u64, Ordering::Relaxed);
+    }
+
+    /// Record one delta-scheduled request's plan accounting (the
+    /// engine's [`PlanStats`], already summed over its chunks).
+    pub fn record_plan(&self, plan: &PlanStats) {
+        self.delta_dense_macs.fetch_add(plan.dense_macs, Ordering::Relaxed);
+        self.delta_planned_macs.fetch_add(plan.planned_macs, Ordering::Relaxed);
+        self.delta_identity_macs.fetch_add(plan.identity_macs, Ordering::Relaxed);
+        match plan.from_cache {
+            Some(true) => self.sched_cache_hits.fetch_add(1, Ordering::Relaxed),
+            Some(false) => self.sched_cache_misses.fetch_add(1, Ordering::Relaxed),
+            None => 0,
+        };
     }
 
     pub fn requests(&self) -> u64 {
@@ -177,6 +202,50 @@ impl Metrics {
         }
     }
 
+    /// MACs saved by delta-scheduled execution vs the dense baseline.
+    pub fn delta_macs_saved(&self) -> u64 {
+        self.delta_dense_macs
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.delta_planned_macs.load(Ordering::Relaxed))
+    }
+
+    /// Dense-baseline MACs of plan-executed requests (the denominator
+    /// of the saving).
+    pub fn delta_dense_macs(&self) -> u64 {
+        self.delta_dense_macs.load(Ordering::Relaxed)
+    }
+
+    /// §IV-B ordering gain: how much less the ordered schedules cost
+    /// than the same schedules in sampling order, in percent.
+    pub fn ordering_gain_pct(&self) -> f64 {
+        let id = self.delta_identity_macs.load(Ordering::Relaxed);
+        let pl = self.delta_planned_macs.load(Ordering::Relaxed);
+        if id == 0 || pl >= id {
+            0.0
+        } else {
+            100.0 * (id - pl) as f64 / id as f64
+        }
+    }
+
+    pub fn schedule_cache_hits(&self) -> u64 {
+        self.sched_cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn schedule_cache_misses(&self) -> u64 {
+        self.sched_cache_misses.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of consulted schedule-cache lookups that hit.
+    pub fn schedule_cache_hit_rate(&self) -> f64 {
+        let h = self.schedule_cache_hits() as f64;
+        let m = self.schedule_cache_misses() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
     /// Histogram of samples-used per adaptive request (bin i = i
     /// samples; last bin aggregates the overflow).
     pub fn samples_histogram(&self) -> Vec<u64> {
@@ -222,6 +291,23 @@ impl Metrics {
                 self.abstained(),
                 100.0 * self.abstention_rate(),
                 self.escalated(),
+            ));
+        }
+        let dense = self.delta_dense_macs();
+        if dense > 0 {
+            // "n/a" when the schedule cache was never consulted
+            // (unseeded traffic) — 0% would read as every lookup missing
+            let lookups = self.schedule_cache_hits() + self.schedule_cache_misses();
+            let cache_hit = if lookups == 0 {
+                "n/a".to_string()
+            } else {
+                format!("{:.0}%", 100.0 * self.schedule_cache_hit_rate())
+            };
+            s.push_str(&format!(
+                " | delta: macs_saved={} ({:.0}%) ordering_gain={:.1}% cache_hit={cache_hit}",
+                self.delta_macs_saved(),
+                100.0 * self.delta_macs_saved() as f64 / dense as f64,
+                self.ordering_gain_pct(),
             ));
         }
         s
@@ -304,7 +390,46 @@ mod tests {
     fn no_adaptive_traffic_keeps_summary_clean() {
         let m = Metrics::new();
         assert!(!m.summary().contains("adaptive"));
+        assert!(!m.summary().contains("delta"));
         assert_eq!(m.abstention_rate(), 0.0);
         assert_eq!(m.samples_saved_ratio(), 0.0);
+        assert_eq!(m.delta_macs_saved(), 0);
+        assert_eq!(m.ordering_gain_pct(), 0.0);
+        assert_eq!(m.schedule_cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn delta_ledger_appears_in_the_metrics_snapshot() {
+        let m = Metrics::new();
+        m.record_plan(&PlanStats {
+            dense_macs: 1000,
+            planned_macs: 300,
+            identity_macs: 400,
+            from_cache: Some(false),
+        });
+        m.record_plan(&PlanStats {
+            dense_macs: 1000,
+            planned_macs: 250,
+            identity_macs: 350,
+            from_cache: Some(true),
+        });
+        m.record_plan(&PlanStats {
+            dense_macs: 500,
+            planned_macs: 200,
+            identity_macs: 250,
+            from_cache: None, // cache not consulted: no hit/miss count
+        });
+        assert_eq!(m.delta_dense_macs(), 2500);
+        assert_eq!(m.delta_macs_saved(), 2500 - 750);
+        let gain = m.ordering_gain_pct();
+        assert!((gain - 100.0 * 250.0 / 1000.0).abs() < 1e-9);
+        assert_eq!(m.schedule_cache_hits(), 1);
+        assert_eq!(m.schedule_cache_misses(), 1);
+        assert!((m.schedule_cache_hit_rate() - 0.5).abs() < 1e-12);
+        // the snapshot line carries the three delta counters
+        let snap = m.summary();
+        assert!(snap.contains("macs_saved="), "snapshot missing delta MACs: {snap}");
+        assert!(snap.contains("ordering_gain="), "snapshot missing ordering gain: {snap}");
+        assert!(snap.contains("cache_hit="), "snapshot missing cache hit rate: {snap}");
     }
 }

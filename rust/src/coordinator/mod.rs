@@ -4,7 +4,9 @@
 //! * [`engine`] — the MC-Dropout inference engine: one model bound to
 //!   one [`crate::backend::ExecutionBackend`]; mask scheduling (ideal /
 //!   SRAM-RNG / Beta-perturbed sources), row batching, the chunked
-//!   execution path the adaptive samplers consult between chunks, and
+//!   execution path the adaptive samplers consult between chunks,
+//!   delta-scheduled execution (§IV compute reuse + TSP ordering via
+//!   [`DeltaScheduleConfig`], bit-exact against the dense path), and
 //!   per-request energy (measured on the cim-sim backend, analytic §V
 //!   model otherwise).
 //! * [`request`] — the typed serving surface: [`InferenceRequest`]
@@ -33,7 +35,7 @@ pub mod request;
 pub mod server;
 
 pub use batcher::{chunk_plan, RowBatcher};
-pub use engine::{EngineConfig, McDropoutEngine, McOutput, NetKind};
+pub use engine::{DeltaScheduleConfig, EngineConfig, McDropoutEngine, McOutput, NetKind};
 pub use metrics::Metrics;
 pub use request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,

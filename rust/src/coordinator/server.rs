@@ -36,13 +36,14 @@
 //! sample budget degrades the per-request ceiling gracefully under
 //! load.
 
-use super::engine::McDropoutEngine;
+use super::engine::{DeltaScheduleConfig, McDropoutEngine};
 use super::metrics::Metrics;
 use super::request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
 };
 use crate::backend::{make_backend, BackendKind, BackendOptions};
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
+use crate::dropout::plan::{OrderingMode, ScheduleCache};
 use crate::energy::ModeConfig;
 use crate::error::{McCimError, RequestKind};
 use crate::model::ModelRegistry;
@@ -204,6 +205,16 @@ pub struct CoordinatorConfig {
     pub microbatch: bool,
     /// Adaptive sampling + risk policies (None = the paper's fixed-T).
     pub adaptive: Option<AdaptiveConfig>,
+    /// Delta-scheduled MC execution (§IV-A compute reuse on the hot
+    /// path; backends without native sessions lower plans to dense
+    /// rows, so this is safe on every backend).
+    pub reuse: bool,
+    /// Instance ordering within a chunk (§IV-B; used when `reuse` is
+    /// on).
+    pub ordering: OrderingMode,
+    /// Ordered-schedule cache shared by all workers. Auto-created by
+    /// [`Coordinator::start`] when `reuse` is set and none is given.
+    pub schedule_cache: Option<Arc<ScheduleCache>>,
     pub seed: u64,
 }
 
@@ -218,6 +229,9 @@ impl Default for CoordinatorConfig {
             pallas: false,
             microbatch: true,
             adaptive: None,
+            reuse: false,
+            ordering: OrderingMode::default(),
+            schedule_cache: None,
             seed: 7,
         }
     }
@@ -234,9 +248,16 @@ impl Coordinator {
     /// Start the worker pool. Fails fast if artifacts are missing (the
     /// registry is validated before the pool is returned; each worker
     /// additionally builds its default engines up front).
-    pub fn start(cfg: CoordinatorConfig) -> Result<Self> {
+    pub fn start(mut cfg: CoordinatorConfig) -> Result<Self> {
         // Validate artifacts on the caller thread for a clean error.
         Meta::load(&cfg.artifacts).context("artifacts missing — run `make artifacts`")?;
+
+        // one ordered-schedule cache for the whole pool: a schedule
+        // computed by any worker serves every worker (§IV-B offline
+        // schedules)
+        if cfg.reuse && cfg.schedule_cache.is_none() {
+            cfg.schedule_cache = Some(Arc::new(ScheduleCache::new()));
+        }
 
         let (tx, rx) = channel::<Job>();
         let rx = Arc::new(Mutex::new(rx));
@@ -362,7 +383,7 @@ fn ensure_engine(
     }
     let opts = BackendOptions { bits: cfg.bits, pallas: cfg.pallas };
     let backend = make_backend(kind, state.rt.as_ref(), &cfg.artifacts, spec, &opts)?;
-    let engine = McDropoutEngine::with_backend(
+    let mut engine = McDropoutEngine::with_backend(
         backend,
         spec,
         cfg.bits,
@@ -373,6 +394,13 @@ fn ensure_engine(
         model: model.into(),
         reason: format!("{e:#}"),
     })?;
+    if cfg.reuse {
+        engine.set_delta_schedule(DeltaScheduleConfig {
+            reuse: true,
+            ordering: cfg.ordering,
+            cache: cfg.schedule_cache.clone(),
+        });
+    }
     if !state.srcs.contains_key(model) {
         state.srcs.insert(
             model.to_string(),
@@ -668,10 +696,15 @@ fn classify_fixed(
     request: &InferenceRequest,
     metrics: &Metrics,
 ) -> InferenceResult {
+    // a per-request seed makes the mask schedule deterministic — the
+    // only case the ordered-schedule cache may serve
     let out = engine
-        .infer_mc(&request.input, request.samples, src)
+        .infer_mc_cacheable(&request.input, request.samples, src, request.seed)
         .map_err(|e| exec_error(engine, request, e))?;
     metrics.record_execution(out.samples.len());
+    if let Some(plan) = &out.plan {
+        metrics.record_plan(plan);
+    }
     let mut ens = ClassEnsemble::new(engine.out_dim());
     for s in &out.samples {
         ens.add_logits(s);
@@ -697,9 +730,12 @@ fn regress_fixed(
     metrics: &Metrics,
 ) -> InferenceResult {
     let out = engine
-        .infer_mc(&request.input, request.samples, src)
+        .infer_mc_cacheable(&request.input, request.samples, src, request.seed)
         .map_err(|e| exec_error(engine, request, e))?;
     metrics.record_execution(out.samples.len());
+    if let Some(plan) = &out.plan {
+        metrics.record_plan(plan);
+    }
     let mut ens = RegressionEnsemble::new(engine.out_dim());
     for s in &out.samples {
         ens.add_sample(s);
@@ -774,6 +810,9 @@ fn classify_adaptive(
         }
     };
     metrics.record_execution(out.samples.len());
+    if let Some(plan) = &out.plan {
+        metrics.record_plan(plan);
+    }
     // the final chunk is not passed through the callback — fold it in
     for o in &out.samples[fed..] {
         ens.add_logits(o);
@@ -792,6 +831,9 @@ fn classify_adaptive(
         match engine.infer_mc(&request.input, extra, src) {
             Ok(more) => {
                 metrics.record_execution(more.samples.len());
+                if let Some(plan) = &more.plan {
+                    metrics.record_plan(plan);
+                }
                 for o in &more.samples {
                     ens.add_logits(o);
                 }
@@ -861,6 +903,9 @@ fn regress_adaptive(
         }
     };
     metrics.record_execution(out.samples.len());
+    if let Some(plan) = &out.plan {
+        metrics.record_plan(plan);
+    }
     for o in &out.samples[fed..] {
         ens.add_sample(o);
     }
@@ -875,6 +920,9 @@ fn regress_adaptive(
         match engine.infer_mc(&request.input, extra, src) {
             Ok(more) => {
                 metrics.record_execution(more.samples.len());
+                if let Some(plan) = &more.plan {
+                    metrics.record_plan(plan);
+                }
                 for o in &more.samples {
                     ens.add_sample(o);
                 }
@@ -1037,6 +1085,10 @@ mod tests {
         assert!(cfg.adaptive.is_none());
         assert!(cfg.microbatch);
         assert_eq!(cfg.backend, BackendKind::default());
+        // dense execution unless delta scheduling is asked for
+        assert!(!cfg.reuse);
+        assert_eq!(cfg.ordering, OrderingMode::Nn2Opt);
+        assert!(cfg.schedule_cache.is_none());
     }
 
     #[test]

@@ -9,12 +9,20 @@
 //!   `P_i = P_{i-1} + W x I_i^A - W x I_i^D`, two-cycle delta logic.
 //! * [`ordering`] — TSP over masks (§IV-B): exact Held–Karp for small
 //!   T, nearest-neighbour + 2-opt for the real 30-100 sample range.
+//! * [`plan`] — delta-scheduled execution plans for the serving hot
+//!   path: per-chunk TSP ordering with carry-over, `Full`/`Delta` plan
+//!   rows, ReuseExecutor-equivalent MAC accounting, and the offline
+//!   ordered-schedule cache.
 
 pub mod mask;
 pub mod ordering;
+pub mod plan;
 pub mod reuse;
 pub mod schedule;
 
 pub use mask::DropoutMask;
+pub use plan::{
+    CachedSchedule, ExecutionPlan, OrderingMode, PlanBuilder, PlanRow, PlanStats, ScheduleCache,
+};
 pub use reuse::ReuseExecutor;
 pub use schedule::{ExecutionMode, McSchedule, WorkloadReport};

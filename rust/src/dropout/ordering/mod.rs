@@ -7,4 +7,7 @@
 
 pub mod tsp;
 
-pub use tsp::{held_karp_path, nearest_neighbor_2opt, order_masks, path_cost};
+pub use tsp::{
+    held_karp_path, held_karp_path_from, nearest_neighbor_2opt, nearest_neighbor_2opt_from,
+    order_masks, path_cost, TspTooLarge, HELD_KARP_MAX,
+};

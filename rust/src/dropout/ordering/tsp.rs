@@ -3,13 +3,41 @@
 //! The problem is an *open path* (the first iteration pays its full
 //! mask, then each edge costs its Hamming delta), so we solve path-TSP:
 //!
-//! * [`held_karp_path`] — exact O(2^n n^2) DP, used for n <= 13 and as
-//!   the ground truth for heuristic tests;
+//! * [`held_karp_path`] — exact O(2^n n^2) DP, limited to
+//!   n <= [`HELD_KARP_MAX`] cities (it returns a typed error beyond
+//!   that instead of panicking — callers fall back to the heuristic);
 //! * [`nearest_neighbor_2opt`] — NN construction + 2-opt improvement,
 //!   the production solver for the 30-100 sample schedules (the paper
 //!   notes the schedule is computed offline and stored, §IV-B).
+//!
+//! Both solvers have `*_from` variants that pin the path's start city —
+//! the delta scheduler uses them to anchor a chunk's tour at the last
+//! mask executed by the *previous* chunk, so product-sum state carries
+//! across chunk boundaries at minimal Hamming cost.
 
 use crate::dropout::mask::DropoutMask;
+use std::fmt;
+
+/// Largest instance the exact DP accepts (2^13 x 13 table ≈ 1.7 MB).
+pub const HELD_KARP_MAX: usize = 13;
+
+/// The exact solver was asked for more cities than its DP table allows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TspTooLarge {
+    pub n: usize,
+}
+
+impl fmt::Display for TspTooLarge {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Held-Karp limited to n <= {HELD_KARP_MAX}, got {} (use nearest_neighbor_2opt)",
+            self.n
+        )
+    }
+}
+
+impl std::error::Error for TspTooLarge {}
 
 /// Dense symmetric distance matrix.
 pub fn distance_matrix(masks: &[Vec<DropoutMask>]) -> Vec<Vec<usize>> {
@@ -35,21 +63,42 @@ pub fn path_cost(d: &[Vec<usize>], order: &[usize]) -> usize {
     order.windows(2).map(|w| d[w[0]][w[1]]).sum()
 }
 
-/// Exact open-path TSP via Held–Karp. Panics if n > 16 (memory).
-pub fn held_karp_path(d: &[Vec<usize>]) -> Vec<usize> {
+/// Exact open-path TSP via Held–Karp (free start city). Returns
+/// [`TspTooLarge`] for n > [`HELD_KARP_MAX`] — oversized schedules must
+/// never panic a serving worker; fall back to
+/// [`nearest_neighbor_2opt`] instead.
+pub fn held_karp_path(d: &[Vec<usize>]) -> Result<Vec<usize>, TspTooLarge> {
+    held_karp(d, None)
+}
+
+/// [`held_karp_path`] with the path's start city pinned to `start`.
+pub fn held_karp_path_from(d: &[Vec<usize>], start: usize) -> Result<Vec<usize>, TspTooLarge> {
+    held_karp(d, Some(start))
+}
+
+fn held_karp(d: &[Vec<usize>], start: Option<usize>) -> Result<Vec<usize>, TspTooLarge> {
     let n = d.len();
     assert!(n >= 1);
-    assert!(n <= 16, "Held-Karp limited to n <= 16, got {n}");
+    if n > HELD_KARP_MAX {
+        return Err(TspTooLarge { n });
+    }
     if n == 1 {
-        return vec![0];
+        return Ok(vec![0]);
     }
     let full = 1usize << n;
     const INF: u64 = u64::MAX / 4;
     // dp[mask][last] = min cost of a path visiting `mask`, ending at `last`
     let mut dp = vec![vec![INF; n]; full];
     let mut parent = vec![vec![usize::MAX; n]; full];
-    for s in 0..n {
-        dp[1 << s][s] = 0; // any start city is free (open path)
+    match start {
+        // pinned start city (chunk carry-over anchoring)
+        Some(s) => dp[1 << s][s] = 0,
+        // any start city is free (open path)
+        None => {
+            for s in 0..n {
+                dp[1 << s][s] = 0;
+            }
+        }
     }
     for mask in 1..full {
         for last in 0..n {
@@ -89,7 +138,7 @@ pub fn held_karp_path(d: &[Vec<usize>]) -> Vec<usize> {
     }
     order.reverse();
     debug_assert_eq!(order.len(), n);
-    order
+    Ok(order)
 }
 
 /// Nearest-neighbour construction from the best of `restarts` start
@@ -102,13 +151,28 @@ pub fn nearest_neighbor_2opt(d: &[Vec<usize>], restarts: usize) -> Vec<usize> {
     let mut best: Option<(usize, Vec<usize>)> = None;
     for s in 0..restarts.max(1).min(n) {
         let mut order = nn_from(d, s);
-        two_opt(d, &mut order);
+        two_opt(d, &mut order, false);
         let c = path_cost(d, &order);
         if best.as_ref().map_or(true, |(bc, _)| c < *bc) {
             best = Some((c, order));
         }
     }
     best.unwrap().1
+}
+
+/// NN + 2-opt with the path's start city pinned to `start` (the 2-opt
+/// moves never displace position 0).
+pub fn nearest_neighbor_2opt_from(d: &[Vec<usize>], start: usize) -> Vec<usize> {
+    let n = d.len();
+    assert!(start < n);
+    if n <= 2 {
+        let mut order = vec![start];
+        order.extend((0..n).filter(|&i| i != start));
+        return order;
+    }
+    let mut order = nn_from(d, start);
+    two_opt(d, &mut order, true);
+    order
 }
 
 fn nn_from(d: &[Vec<usize>], start: usize) -> Vec<usize> {
@@ -134,12 +198,14 @@ fn nn_from(d: &[Vec<usize>], start: usize) -> Vec<usize> {
 
 /// 2-opt for open paths: reversing order[i..=j] changes cost by
 /// removing edges (i-1,i) and (j,j+1) and adding (i-1,j) and (i,j+1).
-fn two_opt(d: &[Vec<usize>], order: &mut Vec<usize>) {
+/// With `fixed_start`, position 0 is never moved (anchored tours).
+fn two_opt(d: &[Vec<usize>], order: &mut [usize], fixed_start: bool) {
     let n = order.len();
+    let first = usize::from(fixed_start);
     let mut improved = true;
     while improved {
         improved = false;
-        for i in 0..n - 1 {
+        for i in first..n - 1 {
             for j in (i + 1)..n {
                 let before_i = if i == 0 { None } else { Some(order[i - 1]) };
                 let after_j = if j == n - 1 { None } else { Some(order[j + 1]) };
@@ -157,14 +223,10 @@ fn two_opt(d: &[Vec<usize>], order: &mut Vec<usize>) {
 }
 
 /// Order a per-iteration mask set (one Vec<DropoutMask> per iteration):
-/// exact for small T, heuristic beyond.
+/// exact for small T, heuristic beyond (never panics on size).
 pub fn order_masks(per_iter_masks: &[Vec<DropoutMask>]) -> Vec<usize> {
     let d = distance_matrix(per_iter_masks);
-    if per_iter_masks.len() <= 13 {
-        held_karp_path(&d)
-    } else {
-        nearest_neighbor_2opt(&d, 8)
-    }
+    held_karp_path(&d).unwrap_or_else(|_| nearest_neighbor_2opt(&d, 8))
 }
 
 #[cfg(test)]
@@ -192,7 +254,7 @@ mod tests {
         check("HK == brute force", 15, |rng| {
             let masks = rand_masks(rng, 7, &[10]);
             let d = distance_matrix(&masks);
-            let hk = path_cost(&d, &held_karp_path(&d));
+            let hk = path_cost(&d, &held_karp_path(&d).unwrap());
             // brute force all permutations of 7 cities
             let mut idx: Vec<usize> = (0..7).collect();
             let mut best = usize::MAX;
@@ -220,7 +282,7 @@ mod tests {
         check("NN+2opt within 15% of HK", 10, |rng| {
             let masks = rand_masks(rng, 11, &[10]);
             let d = distance_matrix(&masks);
-            let opt = path_cost(&d, &held_karp_path(&d));
+            let opt = path_cost(&d, &held_karp_path(&d).unwrap());
             let order = nearest_neighbor_2opt(&d, 4);
             let mut sorted = order.clone();
             sorted.sort_unstable();
@@ -266,6 +328,42 @@ mod tests {
         let m1 = vec![vec![DropoutMask::ones(4)]];
         assert_eq!(order_masks(&m1), vec![0]);
         let d = vec![vec![0, 3], vec![3, 0]];
-        assert_eq!(held_karp_path(&d).len(), 2);
+        assert_eq!(held_karp_path(&d).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn oversized_exact_instances_error_instead_of_panicking() {
+        let n = HELD_KARP_MAX + 3;
+        let d = vec![vec![1usize; n]; n];
+        let err = held_karp_path(&d).unwrap_err();
+        assert_eq!(err.n, n);
+        assert!(err.to_string().contains("Held-Karp"));
+        // order_masks on the same size falls back to the heuristic
+        let mut rng = crate::util::Pcg32::seeded(123);
+        let masks = rand_masks(&mut rng, n, &[10]);
+        let mut order = order_masks(&masks);
+        order.sort_unstable();
+        assert_eq!(order, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn anchored_solvers_pin_the_start_city() {
+        check("anchored tours start where told", 15, |rng| {
+            let masks = rand_masks(rng, 9, &[12]);
+            let d = distance_matrix(&masks);
+            let start = rng.below(9);
+            let hk = held_karp_path_from(&d, start).unwrap();
+            let nn = nearest_neighbor_2opt_from(&d, start);
+            let mut hk_s = hk.clone();
+            let mut nn_s = nn.clone();
+            hk_s.sort_unstable();
+            nn_s.sort_unstable();
+            hk[0] == start
+                && nn[0] == start
+                && hk_s == (0..9).collect::<Vec<_>>()
+                && nn_s == (0..9).collect::<Vec<_>>()
+                // anchored exact <= anchored heuristic
+                && path_cost(&d, &hk) <= path_cost(&d, &nn)
+        });
     }
 }

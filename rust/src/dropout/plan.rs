@@ -1,0 +1,652 @@
+//! Delta-scheduled execution plans (§IV-A + §IV-B on the serving path).
+//!
+//! A probabilistic request used to evaluate every MC row densely; this
+//! module turns the same rows into a **delta schedule**: the engine
+//! samples a chunk's masks up front, orders them with the path-TSP
+//! solver so consecutive instances differ in as few columns as
+//! possible, and emits an [`ExecutionPlan`] whose rows are
+//! [`PlanRow::Full`] (the session's first instance pays its active
+//! column set) or [`PlanRow::Delta`] (only the `I^A`/`I^D` column sets
+//! of Fig. 7 are executed). Backends with product-sum sessions
+//! (`CimSimBackend`) execute the deltas natively and bit-exactly;
+//! dense-only backends lower the rows back to full evaluations.
+//!
+//! Chunk carry-over: adaptive requests execute chunk by chunk, so the
+//! builder orders *within* a chunk but anchors each chunk's tour at
+//! the last mask executed by the previous one — product-sum state
+//! survives the chunk boundary and the cross-chunk edge is priced as a
+//! delta, not a fresh full compute.
+//!
+//! [`ScheduleCache`] memoizes ordered schedules per
+//! `(model, keep-prob, samples, seed)` — the paper computes schedules
+//! offline and reads them from SRAM (§IV-B), so a cache hit prices
+//! mask bits as schedule reads instead of online RNG draws.
+
+use super::mask::DropoutMask;
+use super::ordering::tsp::{
+    distance_matrix, held_karp_path, held_karp_path_from, nearest_neighbor_2opt,
+    nearest_neighbor_2opt_from,
+};
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex};
+
+/// How the plan builder orders instances within a chunk (§IV-B).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OrderingMode {
+    /// Keep sampling order (compute reuse only, §IV-A).
+    None,
+    /// NN construction + 2-opt — the production solver.
+    #[default]
+    Nn2Opt,
+    /// Held–Karp exact DP, auto-falling back to NN+2-opt past
+    /// [`crate::dropout::ordering::HELD_KARP_MAX`] cities.
+    Exact,
+}
+
+impl OrderingMode {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" | "identity" => Some(OrderingMode::None),
+            "nn-2opt" | "nn2opt" | "heuristic" => Some(OrderingMode::Nn2Opt),
+            "exact" | "held-karp" => Some(OrderingMode::Exact),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            OrderingMode::None => "none",
+            OrderingMode::Nn2Opt => "nn-2opt",
+            OrderingMode::Exact => "exact",
+        }
+    }
+}
+
+/// One instance of the plan, in *execution* order.
+#[derive(Clone, Debug)]
+pub enum PlanRow {
+    /// First instance of a session: pay the full active column set.
+    Full {
+        /// One mask per hidden layer.
+        masks: Vec<DropoutMask>,
+    },
+    /// Delta against the previously executed instance (Fig. 7): per
+    /// hidden layer, the columns to add (`I^A`) and to drop (`I^D`).
+    Delta {
+        masks: Vec<DropoutMask>,
+        added: Vec<DropoutMask>,
+        dropped: Vec<DropoutMask>,
+    },
+}
+
+impl PlanRow {
+    /// The instance's full per-layer masks (row gating still needs
+    /// them; the delta sets only describe the *column* work).
+    pub fn masks(&self) -> &[DropoutMask] {
+        match self {
+            PlanRow::Full { masks } => masks,
+            PlanRow::Delta { masks, .. } => masks,
+        }
+    }
+}
+
+/// ReuseExecutor-equivalent MAC accounting for a plan: what the §IV
+/// schedule *plans* to execute vs the typical dense baseline. The
+/// numbers are mask algebra (active counts and Hamming deltas times
+/// fan-out), exactly what [`crate::dropout::ReuseExecutor`] would
+/// meter executing the same mask sequence. This is schedule-level
+/// accounting; the *realized* hardware cost of a cim-sim run —
+/// including any per-layer dense fallback its session's cost model
+/// chose — is measured separately in
+/// [`crate::cim::macro_sim::MacroRunStats`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanStats {
+    /// Typical-flow baseline: every instance recomputes every layer.
+    pub dense_macs: u64,
+    /// Delta-schedule MACs in the plan's (ordered) execution order.
+    pub planned_macs: u64,
+    /// Delta-schedule MACs had the chunk kept its sampling order —
+    /// the §IV-B ordering gain is `identity - planned`.
+    pub identity_macs: u64,
+    /// Whether the schedule came from the [`ScheduleCache`]
+    /// (`None` = the cache was not consulted).
+    pub from_cache: Option<bool>,
+}
+
+impl PlanStats {
+    /// MACs the delta schedule avoids vs the dense baseline.
+    pub fn delta_macs_saved(&self) -> u64 {
+        self.dense_macs.saturating_sub(self.planned_macs)
+    }
+
+    /// §IV-B ordering gain as a percentage of the unordered delta
+    /// workload (0 when ordering is off or changes nothing).
+    pub fn ordering_gain_pct(&self) -> f64 {
+        if self.identity_macs == 0 || self.planned_macs >= self.identity_macs {
+            0.0
+        } else {
+            100.0 * (self.identity_macs - self.planned_macs) as f64 / self.identity_macs as f64
+        }
+    }
+
+    /// Fold another chunk's accounting into a per-request total
+    /// (`from_cache` is sticky on the first chunk that consulted it).
+    pub fn merge(&mut self, other: &PlanStats) {
+        self.dense_macs += other.dense_macs;
+        self.planned_macs += other.planned_macs;
+        self.identity_macs += other.identity_macs;
+        if self.from_cache.is_none() {
+            self.from_cache = other.from_cache;
+        }
+    }
+}
+
+/// One ordered chunk of a delta-scheduled request, ready for
+/// [`crate::backend::ExecutionBackend::execute_plan`].
+#[derive(Clone, Debug)]
+pub struct ExecutionPlan {
+    /// The request's (already quantized) network input, shared by
+    /// every row — the MC-Dropout setting this whole reformulation
+    /// rests on.
+    pub input: Vec<f32>,
+    /// Instances in execution order.
+    pub rows: Vec<PlanRow>,
+    /// `order[exec_pos]` = the instance's index in *sampling* order
+    /// within this chunk (callers restore output order with this).
+    pub order: Vec<usize>,
+    /// Whether the masks were drawn online from the dropout-bit RNG
+    /// (false = precomputed schedule read back from the cache; priced
+    /// as SRAM schedule reads, §IV-B).
+    pub sampled: bool,
+    pub stats: PlanStats,
+}
+
+/// Builds the per-chunk [`ExecutionPlan`]s of one request, carrying
+/// the last executed masks across chunk boundaries.
+#[derive(Clone, Debug)]
+pub struct PlanBuilder {
+    dims: Vec<usize>,
+    ordering: OrderingMode,
+    /// Masks of the last executed instance (None until the session's
+    /// first chunk is built).
+    carry: Option<Vec<DropoutMask>>,
+}
+
+impl PlanBuilder {
+    /// `dims` are the model's layer widths (input..output); masks are
+    /// expected one per hidden layer.
+    pub fn new(dims: &[usize], ordering: OrderingMode) -> Self {
+        assert!(dims.len() >= 2, "a model needs at least two dims");
+        PlanBuilder { dims: dims.to_vec(), ordering, carry: None }
+    }
+
+    /// Hidden-layer widths (one mask per entry).
+    pub fn mask_dims(&self) -> &[usize] {
+        &self.dims[1..self.dims.len() - 1]
+    }
+
+    /// Order one chunk of sampled masks and emit its plan. `masks` are
+    /// in sampling order, one `Vec<DropoutMask>` (per hidden layer)
+    /// per instance.
+    pub fn chunk(
+        &mut self,
+        input: &[f32],
+        masks: Vec<Vec<DropoutMask>>,
+        sampled: bool,
+    ) -> ExecutionPlan {
+        assert!(!masks.is_empty(), "a plan chunk needs at least one instance");
+        for m in &masks {
+            assert_eq!(m.len(), self.mask_dims().len(), "mask count mismatch");
+        }
+        let (order, planned_macs, identity_macs) = self.order_chunk(&masks);
+        let stats = PlanStats {
+            dense_macs: self.dense_macs(masks.len()),
+            planned_macs,
+            identity_macs,
+            from_cache: None,
+        };
+        let mut rows = Vec::with_capacity(masks.len());
+        // take the carry so `prev` can borrow masks without pinning self
+        let carry = self.carry.take();
+        let mut prev: Option<&[DropoutMask]> = carry.as_deref();
+        for &i in &order {
+            let cur = &masks[i];
+            rows.push(match prev {
+                None => PlanRow::Full { masks: cur.clone() },
+                Some(p) => {
+                    let added: Vec<DropoutMask> =
+                        cur.iter().zip(p).map(|(c, q)| c.newly_active(q)).collect();
+                    let dropped: Vec<DropoutMask> =
+                        cur.iter().zip(p).map(|(c, q)| c.newly_dropped(q)).collect();
+                    PlanRow::Delta { masks: cur.clone(), added, dropped }
+                }
+            });
+            prev = Some(cur.as_slice());
+        }
+        self.carry = Some(masks[*order.last().expect("chunk is non-empty")].clone());
+        ExecutionPlan { input: input.to_vec(), rows, order, sampled, stats }
+    }
+
+    /// TSP order for the chunk, anchored at the carry mask when one
+    /// exists (the carry is a virtual start city that is then dropped).
+    /// The solver's tour is kept only when it beats sampling order on
+    /// the *actual* reuse objective (first-instance active columns +
+    /// Hamming deltas) — 2-opt is a local optimum and must never add
+    /// delta work. Returns `(order, planned_macs, identity_macs)` so
+    /// the accounting is computed exactly once per candidate.
+    fn order_chunk(&self, masks: &[Vec<DropoutMask>]) -> (Vec<usize>, u64, u64) {
+        let n = masks.len();
+        let identity: Vec<usize> = (0..n).collect();
+        let identity_macs = self.reuse_macs(masks, &identity);
+        if self.ordering == OrderingMode::None || n <= 1 {
+            return (identity, identity_macs, identity_macs);
+        }
+        let tour: Vec<usize> = match &self.carry {
+            None => {
+                let d = distance_matrix(masks);
+                match self.ordering {
+                    OrderingMode::Exact => {
+                        held_karp_path(&d).unwrap_or_else(|_| nearest_neighbor_2opt(&d, 8))
+                    }
+                    _ => nearest_neighbor_2opt(&d, 8),
+                }
+            }
+            Some(carry) => {
+                // node 0 = the carried mask; nodes 1..=n = the chunk
+                let d = self.extended_matrix(carry, masks);
+                let anchored = match self.ordering {
+                    OrderingMode::Exact => held_karp_path_from(&d, 0)
+                        .unwrap_or_else(|_| nearest_neighbor_2opt_from(&d, 0)),
+                    _ => nearest_neighbor_2opt_from(&d, 0),
+                };
+                debug_assert_eq!(anchored[0], 0);
+                anchored[1..].iter().map(|&i| i - 1).collect()
+            }
+        };
+        let tour_macs = self.reuse_macs(masks, &tour);
+        if tour_macs <= identity_macs {
+            (tour, tour_macs, identity_macs)
+        } else {
+            (identity, identity_macs, identity_macs)
+        }
+    }
+
+    fn extended_matrix(
+        &self,
+        carry: &[DropoutMask],
+        masks: &[Vec<DropoutMask>],
+    ) -> Vec<Vec<usize>> {
+        let n = masks.len();
+        let inner = distance_matrix(masks);
+        let mut d = vec![vec![0usize; n + 1]; n + 1];
+        for (j, m) in masks.iter().enumerate() {
+            let dist: usize = carry.iter().zip(m).map(|(a, b)| a.hamming(b)).sum();
+            d[0][j + 1] = dist;
+            d[j + 1][0] = dist;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                d[i + 1][j + 1] = inner[i][j];
+            }
+        }
+        d
+    }
+
+    /// Typical dense baseline: every instance recomputes every layer.
+    fn dense_macs(&self, instances: usize) -> u64 {
+        let per_iter: u64 = self.dims.windows(2).map(|w| (w[0] * w[1]) as u64).sum();
+        per_iter * instances as u64
+    }
+
+    /// Delta-schedule MACs for executing `masks` in `order`, matching
+    /// `ReuseExecutor` accounting per layer:
+    ///
+    /// * layer 0's input never changes across MC instances (no input
+    ///   dropout), so its product-sums are computed once per session —
+    ///   the degenerate all-ones-mask reuse;
+    /// * each hidden mask gates the *input columns* of the next weight
+    ///   matrix: the first instance pays its active columns, each
+    ///   subsequent one the Hamming delta, times that layer's fan-out.
+    fn reuse_macs(&self, masks: &[Vec<DropoutMask>], order: &[usize]) -> u64 {
+        let mut total = 0u64;
+        if self.carry.is_none() {
+            total += (self.dims[0] * self.dims[1]) as u64;
+        }
+        for (l, _) in self.mask_dims().iter().enumerate() {
+            let fan_out = self.dims[l + 2] as u64;
+            let mut prev: Option<&DropoutMask> = self.carry.as_ref().map(|c| &c[l]);
+            for &i in order {
+                let cur = &masks[i][l];
+                let cols = match prev {
+                    None => cur.active_count(),
+                    Some(p) => cur.hamming(p),
+                } as u64;
+                total += cols * fan_out;
+                prev = Some(cur);
+            }
+        }
+        total
+    }
+}
+
+/// Key of one cached schedule: (model id, keep-prob bits, samples,
+/// request seed). The masks a seed produces are a pure function of the
+/// engine's model + source configuration, so two requests with the
+/// same key would sample the identical schedule anyway — the cache
+/// just skips the draws and prices them as SRAM schedule reads.
+pub type ScheduleKey = (String, u64, usize, u64);
+
+/// A precomputed mask schedule in *sampling* order (ordering is
+/// recomputed deterministically per chunk when the plan is built).
+#[derive(Clone, Debug)]
+pub struct CachedSchedule {
+    pub masks: Vec<Vec<DropoutMask>>,
+}
+
+/// Default [`ScheduleCache`] capacity: enough for every (model,
+/// samples) working set a pool realistically serves, small enough
+/// that a schedule per entry (~T × Σ hidden bits) stays in the
+/// low megabytes.
+pub const SCHEDULE_CACHE_CAPACITY: usize = 1024;
+
+/// Per-model ordered-schedule cache (the paper computes schedules
+/// offline and stores them, §IV-B). Shared across workers via `Arc`.
+/// Bounded: once `capacity` entries are stored, the oldest insertion
+/// is evicted (FIFO) — seeded request streams with ever-fresh seeds
+/// must not grow worker memory without limit.
+pub struct ScheduleCache {
+    map: Mutex<CacheState>,
+    capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+#[derive(Default)]
+struct CacheState {
+    entries: HashMap<ScheduleKey, Arc<CachedSchedule>>,
+    /// Insertion order for FIFO eviction.
+    order: std::collections::VecDeque<ScheduleKey>,
+}
+
+impl Default for ScheduleCache {
+    fn default() -> Self {
+        Self::with_capacity(SCHEDULE_CACHE_CAPACITY)
+    }
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A cache bounded to `capacity` schedules (FIFO eviction).
+    pub fn with_capacity(capacity: usize) -> Self {
+        ScheduleCache {
+            map: Mutex::new(CacheState::default()),
+            capacity: capacity.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look a schedule up, recording a hit or miss.
+    pub fn lookup(&self, key: &ScheduleKey) -> Option<Arc<CachedSchedule>> {
+        let state = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        let found = state.entries.get(key).cloned();
+        match found {
+            Some(s) => {
+                self.hits.fetch_add(1, AtomicOrdering::Relaxed);
+                Some(s)
+            }
+            None => {
+                self.misses.fetch_add(1, AtomicOrdering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Store a freshly sampled schedule (last writer wins on races —
+    /// both writers sampled identical masks by construction), evicting
+    /// the oldest entry when the cache is full.
+    pub fn insert(&self, key: ScheduleKey, schedule: CachedSchedule) -> Arc<CachedSchedule> {
+        let entry = Arc::new(schedule);
+        let mut state = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        if state.entries.insert(key.clone(), Arc::clone(&entry)).is_none() {
+            state.order.push_back(key);
+            while state.entries.len() > self.capacity {
+                match state.order.pop_front() {
+                    Some(old) => {
+                        state.entries.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+        }
+        entry
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(AtomicOrdering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Fraction of lookups served from the cache.
+    pub fn hit_rate(&self) -> f64 {
+        let h = self.hits() as f64;
+        let m = self.misses() as f64;
+        if h + m == 0.0 {
+            0.0
+        } else {
+            h / (h + m)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap_or_else(|p| p.into_inner()).entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl fmt::Debug for ScheduleCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ScheduleCache")
+            .field("entries", &self.len())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::IdealBernoulli;
+
+    fn sample_chunk(
+        src: &mut IdealBernoulli,
+        t: usize,
+        mask_dims: &[usize],
+    ) -> Vec<Vec<DropoutMask>> {
+        (0..t)
+            .map(|_| mask_dims.iter().map(|&d| DropoutMask::sample(d, src)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn ordering_modes_parse_and_label() {
+        assert_eq!(OrderingMode::parse("none"), Some(OrderingMode::None));
+        assert_eq!(OrderingMode::parse("nn-2opt"), Some(OrderingMode::Nn2Opt));
+        assert_eq!(OrderingMode::parse("exact"), Some(OrderingMode::Exact));
+        assert_eq!(OrderingMode::parse("magic"), None);
+        assert_eq!(OrderingMode::Exact.label(), "exact");
+        assert_eq!(OrderingMode::default(), OrderingMode::Nn2Opt);
+    }
+
+    #[test]
+    fn first_chunk_starts_full_then_deltas() {
+        let mut b = PlanBuilder::new(&[8, 10, 4], OrderingMode::Nn2Opt);
+        let mut src = IdealBernoulli::new(0.5, 3);
+        let masks = sample_chunk(&mut src, 6, &[10]);
+        let plan = b.chunk(&[0.0; 8], masks, true);
+        assert_eq!(plan.rows.len(), 6);
+        assert!(matches!(plan.rows[0], PlanRow::Full { .. }));
+        assert!(plan.rows[1..].iter().all(|r| matches!(r, PlanRow::Delta { .. })));
+        // order is a permutation
+        let mut sorted = plan.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..6).collect::<Vec<_>>());
+        // deltas reconstruct each row's mask from its predecessor
+        for w in plan.rows.windows(2) {
+            let prev = w[0].masks();
+            match &w[1] {
+                PlanRow::Delta { masks, added, dropped } => {
+                    for l in 0..masks.len() {
+                        assert_eq!(added[l], masks[l].newly_active(&prev[l]));
+                        assert_eq!(dropped[l], masks[l].newly_dropped(&prev[l]));
+                    }
+                }
+                PlanRow::Full { .. } => panic!("expected delta row"),
+            }
+        }
+    }
+
+    #[test]
+    fn later_chunks_carry_over_instead_of_recomputing() {
+        let mut b = PlanBuilder::new(&[8, 10, 4], OrderingMode::Nn2Opt);
+        let mut src = IdealBernoulli::new(0.5, 4);
+        let first = b.chunk(&[0.0; 8], sample_chunk(&mut src, 4, &[10]), true);
+        let second = b.chunk(&[0.0; 8], sample_chunk(&mut src, 4, &[10]), true);
+        assert!(matches!(first.rows[0], PlanRow::Full { .. }));
+        // every row of the second chunk is a delta (state carried over)
+        assert!(second.rows.iter().all(|r| matches!(r, PlanRow::Delta { .. })));
+        // and its first delta is taken against the first chunk's last row
+        let carry = first.rows.last().unwrap().masks();
+        let PlanRow::Delta { masks, added, .. } = &second.rows[0] else { unreachable!() };
+        assert_eq!(added[0], masks[0].newly_active(&carry[0]));
+        // layer-0 full compute is charged exactly once per session
+        let l0 = (8 * 10) as u64;
+        assert!(first.stats.planned_macs >= l0);
+        assert!(second.stats.planned_macs < second.stats.dense_macs);
+    }
+
+    #[test]
+    fn planned_macs_match_reuse_executor_accounting() {
+        // the PlanStats contract: mask-algebra MACs == what a
+        // ReuseExecutor meters executing the same sequence
+        use crate::dropout::ReuseExecutor;
+        let dims = [6usize, 10, 8, 3];
+        let mut b = PlanBuilder::new(&dims, OrderingMode::Nn2Opt);
+        let mut src = IdealBernoulli::new(0.5, 9);
+        let mut total_planned = 0u64;
+        let mut execs: Vec<ReuseExecutor> = (0..2)
+            .map(|l| {
+                let (n_in, n_out) = (dims[l + 1], dims[l + 2]);
+                ReuseExecutor::new(vec![0.0; n_in * n_out], n_in, n_out)
+            })
+            .collect();
+        let xs: Vec<Vec<f32>> = vec![vec![0.0; 10], vec![0.0; 8]];
+        for _ in 0..3 {
+            let plan = b.chunk(&[0.0; 6], sample_chunk(&mut src, 5, &[10, 8]), true);
+            total_planned += plan.stats.planned_macs;
+            for row in &plan.rows {
+                for (l, ex) in execs.iter_mut().enumerate() {
+                    ex.run_reuse(&xs[l], &row.masks()[l]);
+                }
+            }
+        }
+        let layer0_once = (dims[0] * dims[1]) as u64;
+        let metered: u64 = execs.iter().map(|e| e.macs()).sum();
+        assert_eq!(total_planned, layer0_once + metered);
+    }
+
+    #[test]
+    fn ordering_never_costs_more_than_identity() {
+        let mut src = IdealBernoulli::new(0.5, 11);
+        let masks = sample_chunk(&mut src, 20, &[12]);
+        let mut ordered = PlanBuilder::new(&[8, 12, 4], OrderingMode::Nn2Opt);
+        let mut identity = PlanBuilder::new(&[8, 12, 4], OrderingMode::None);
+        let p_ord = ordered.chunk(&[0.0; 8], masks.clone(), true);
+        let p_id = identity.chunk(&[0.0; 8], masks, true);
+        assert!(p_ord.stats.planned_macs <= p_id.stats.planned_macs);
+        assert_eq!(p_ord.stats.identity_macs, p_id.stats.planned_macs);
+        assert_eq!(p_id.stats.ordering_gain_pct(), 0.0);
+        assert!(p_ord.stats.ordering_gain_pct() >= 0.0);
+        assert!(p_ord.stats.delta_macs_saved() >= p_id.stats.delta_macs_saved());
+    }
+
+    #[test]
+    fn exact_ordering_handles_oversized_chunks() {
+        // 20 > HELD_KARP_MAX: must fall back, never panic
+        let mut b = PlanBuilder::new(&[8, 10, 4], OrderingMode::Exact);
+        let mut src = IdealBernoulli::new(0.5, 13);
+        let plan = b.chunk(&[0.0; 8], sample_chunk(&mut src, 20, &[10]), true);
+        let mut sorted = plan.order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..20).collect::<Vec<_>>());
+        // and again with carry (21 nodes with the anchor)
+        let plan2 = b.chunk(&[0.0; 8], sample_chunk(&mut src, 20, &[10]), true);
+        assert_eq!(plan2.rows.len(), 20);
+    }
+
+    #[test]
+    fn schedule_cache_counts_hits_and_misses() {
+        let cache = ScheduleCache::new();
+        let key: ScheduleKey = ("mnist".into(), 0.5f64.to_bits(), 30, 7);
+        assert!(cache.lookup(&key).is_none());
+        let mut src = IdealBernoulli::new(0.5, 7);
+        cache.insert(key.clone(), CachedSchedule { masks: sample_chunk(&mut src, 3, &[4]) });
+        assert!(cache.lookup(&key).is_some());
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert!((cache.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(cache.len(), 1);
+        assert!(!cache.is_empty());
+    }
+
+    #[test]
+    fn schedule_cache_is_bounded_with_fifo_eviction() {
+        let cache = ScheduleCache::with_capacity(2);
+        let mut src = IdealBernoulli::new(0.5, 1);
+        let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed) };
+        for seed in 0..3u64 {
+            cache.insert(key(seed), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
+        }
+        assert_eq!(cache.len(), 2, "capacity must bound the cache");
+        assert!(cache.lookup(&key(0)).is_none(), "oldest entry evicted first");
+        assert!(cache.lookup(&key(1)).is_some());
+        assert!(cache.lookup(&key(2)).is_some());
+        // re-inserting an existing key must not duplicate its FIFO slot
+        cache.insert(key(2), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn stats_merge_accumulates_and_keeps_cache_flag() {
+        let mut a = PlanStats {
+            dense_macs: 100,
+            planned_macs: 40,
+            identity_macs: 60,
+            from_cache: Some(true),
+        };
+        let b = PlanStats {
+            dense_macs: 50,
+            planned_macs: 30,
+            identity_macs: 30,
+            from_cache: None,
+        };
+        a.merge(&b);
+        assert_eq!(a.dense_macs, 150);
+        assert_eq!(a.planned_macs, 70);
+        assert_eq!(a.delta_macs_saved(), 80);
+        assert_eq!(a.from_cache, Some(true));
+        assert!(a.ordering_gain_pct() > 0.0);
+    }
+}

@@ -12,5 +12,5 @@
 pub mod model;
 pub mod params;
 
-pub use model::{EnergyBreakdown, EnergyModel, LayerWorkload, ModeConfig};
+pub use model::{DeltaScheduleReport, EnergyBreakdown, EnergyModel, LayerWorkload, ModeConfig};
 pub use params::EnergyParams;

@@ -24,11 +24,11 @@
 //! | [`operator`] | §II-A | fixed-point quantizer, MF operator, bitplane schedules, conventional baseline |
 //! | [`cim`] | §II-B/C | 8T bitcell, 16×31 array, MAV statistics, symmetric + asymmetric SAR xADC |
 //! | [`rng`] | §III-B | CCI electrical model, SRAM-embedded calibration, Beta-perturbed Bernoulli sources |
-//! | [`dropout`] | §III-A, §IV | masks, MC schedules, compute reuse, TSP sample ordering |
-//! | [`energy`] | §V | per-op energy parameters and the mode-matrix energy model |
+//! | [`dropout`] | §III-A, §IV | masks, MC schedules, compute reuse, TSP sample ordering, delta-scheduled execution plans + ordered-schedule cache (`dropout::plan`) |
+//! | [`energy`] | §V | per-op energy parameters, the mode-matrix energy model, measured-vs-modeled delta-schedule reporting |
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
-//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro simulation (measured energy), fail-fast stub |
+//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro simulation (measured energy, native delta-plan sessions), fail-fast stub; dense-only backends lower plans to rows |
 //! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob, builtin catalogue from `meta.json` |
 //! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |
 //! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool |

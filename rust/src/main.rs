@@ -20,8 +20,10 @@ use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
 use mc_cim::config::Args;
 use mc_cim::coordinator::{
-    AdaptiveConfig, Coordinator, CoordinatorConfig, McDropoutEngine, Request, Response,
+    AdaptiveConfig, Coordinator, CoordinatorConfig, DeltaScheduleConfig, McDropoutEngine,
+    Request, Response,
 };
+use mc_cim::dropout::plan::OrderingMode;
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use mc_cim::model::ModelRegistry;
@@ -67,10 +69,12 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
                      cim-sim runs the bit-exact macro sim and reports MEASURED energy)
   classify: --index N --samples N --bits B --rotate DEG
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
-  vo:       --frames N --samples N --bits B
+            --reuse=true --ordering MODE
+  vo:       --frames N --samples N --bits B --reuse=true --ordering MODE
   serve:    --workers N --requests N --samples N --bits B
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --chunk N --min-samples N --budget-rate SAMPLES_PER_SEC
+            --reuse=true --ordering MODE
   energy:   --bits B --iters N
   rng:      --instances N --cols N --target P
   adc:      (no flags)
@@ -83,7 +87,13 @@ adaptive serving (see README 'Adaptive serving'):
   --risk-profile NAME     mnist | vo | strict | permissive (default mnist)
   --chunk N               samples per stopper consultation (default 5)
   --min-samples N         never stop before N samples      (default 6)
-  --budget-rate R         aggregate sample budget, samples/s (0 = uncapped)";
+  --budget-rate R         aggregate sample budget, samples/s (0 = uncapped)
+
+delta-scheduled execution (see README 'Delta-scheduled MC execution'):
+  --reuse=true            run MC rows as a delta schedule (§IV-A compute
+                          reuse; bit-exact, measured savings on cim-sim)
+  --ordering MODE         none | nn-2opt | exact          (default nn-2opt;
+                          §IV-B TSP sample ordering within each chunk)";
 
 /// Parse the shared adaptive-serving flags into an [`AdaptiveConfig`]
 /// (None unless `--adaptive` is set).
@@ -126,6 +136,27 @@ fn adaptive_from_args(args: &Args) -> Result<Option<AdaptiveConfig>> {
 
 fn artifacts(args: &Args) -> String {
     args.get_or("artifacts", ARTIFACTS_DIR)
+}
+
+/// Parse the delta-scheduling flags: `--reuse` and `--ordering MODE`.
+fn delta_from_args(args: &Args) -> Result<(bool, OrderingMode)> {
+    let reuse = args.get_bool("reuse");
+    let ordering = match args.get("ordering") {
+        None => OrderingMode::default(),
+        Some(s) => OrderingMode::parse(s)
+            .ok_or_else(|| anyhow!("--ordering: unknown mode '{s}' (none|nn-2opt|exact)"))?,
+    };
+    Ok((reuse, ordering))
+}
+
+/// Apply the delta-scheduling flags to a freshly built engine.
+fn apply_delta(engine: &mut McDropoutEngine, reuse: bool, ordering: OrderingMode) {
+    if reuse {
+        // no schedule cache here: the one-shot CLI paths never pass a
+        // per-request seed, so a cache could never be consulted (the
+        // serving pool builds its own pool-wide cache instead)
+        engine.set_delta_schedule(DeltaScheduleConfig { reuse: true, ordering, cache: None });
+    }
 }
 
 /// Parse `--backend` (build default when absent).
@@ -208,7 +239,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
     }
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
-    let engine = build_engine(
+    let mut engine = build_engine(
         &dir,
         &meta,
         "mnist",
@@ -216,6 +247,8 @@ fn cmd_classify(args: &Args) -> Result<()> {
         (bits > 0).then_some(bits as u8),
         rt.as_ref(),
     )?;
+    let (reuse, ordering) = delta_from_args(args)?;
+    apply_delta(&mut engine, reuse, ordering);
     println!("backend: {}", engine.backend_name());
     let mut src = IdealBernoulli::new(1.0 - meta.dropout_p, 42);
 
@@ -314,7 +347,9 @@ fn cmd_vo(args: &Args) -> Result<()> {
     let test = VoTest::load(&dir)?;
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
-    let engine = build_engine(&dir, &meta, "vo", kind, None, rt.as_ref())?;
+    let mut engine = build_engine(&dir, &meta, "vo", kind, None, rt.as_ref())?;
+    let (reuse, ordering) = delta_from_args(args)?;
+    apply_delta(&mut engine, reuse, ordering);
     println!("backend: {}", engine.backend_name());
     let mut src = IdealBernoulli::new(engine.mask_keep(), 42);
     let norm = PoseNorm::new(&meta);
@@ -350,13 +385,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let adaptive = adaptive_from_args(args)?;
     let is_adaptive = adaptive.is_some();
     let backend = backend_from_args(args)?;
+    let (reuse, ordering) = delta_from_args(args)?;
     println!("backend: {}", backend.label());
+    if reuse {
+        println!("delta schedule: reuse on, ordering {}", ordering.label());
+    }
     let cfg = CoordinatorConfig {
         artifacts: dir,
         workers,
         backend,
         bits: (bits > 0).then_some(bits as u8),
         adaptive,
+        reuse,
+        ordering,
         ..Default::default()
     };
     let coord = Coordinator::start(cfg)?;

@@ -78,9 +78,11 @@ fn binary_masks(rng: &mut Pcg32, mask_dims: &[usize], keep: f64) -> Vec<Vec<f32>
 
 /// Reference forward pass built directly on the ideal
 /// `BitplaneSchedule::evaluate`, mirroring the cim-sim quantization
-/// contract: per-layer shared-delta grids, 31-wide zero-padded tiles,
-/// gated rows contribute zero, then the digital `*s + b` / ReLU1 /
-/// mask × 1/(1-p) chain in f32.
+/// contract: the input grid anchored on the input's max-abs, hidden
+/// activations on the static ReLU1 full-scale grid `1/(1-p)` (fixed
+/// full-scale calibration — also what makes §IV-A delta reuse exact),
+/// 31-wide zero-padded tiles, gated rows contribute zero, then the
+/// digital `*s + b` / ReLU1 / mask × 1/(1-p) chain in f32.
 fn reference_forward(
     dims: &[usize],
     layers: &[LayerParams],
@@ -95,7 +97,7 @@ fn reference_forward(
     let mut h = input.to_vec();
     for (l, lp) in layers.iter().enumerate() {
         let (fi, fo) = (dims[l], dims[l + 1]);
-        let xq = q.quantize(&h);
+        let xq = if l == 0 { q.quantize(&h) } else { q.quantize_with_amax(&h, scale) };
         let wq = q.quantize(&lp.w);
         let row_active: Vec<bool> = if l < last {
             masks[l].iter().map(|&m| m != 0.0).collect()
