@@ -1,0 +1,226 @@
+//! Streaming VO session acceptance bench (cross-frame §IV reuse).
+//!
+//!     cargo bench --bench stream_vo
+//!
+//! Drives a synthetic temporally-correlated VO sequence (24 frames,
+//! 30 MC instances each — artifact-free) through the bit-exact macro
+//! simulator two ways — every frame as an independent dense request,
+//! and all frames as ONE streaming session — and checks the contract:
+//!
+//! * with ε = 0, session outputs are **bit-identical** to the
+//!   independent per-frame path, and risk verdicts are unchanged;
+//! * the session **reduces measured MACs and measured pJ**: the mask
+//!   schedule + TSP tour are paid once, warm frames price mask bits as
+//!   SRAM schedule reads, and layer-0 product-sums are updated only on
+//!   input columns whose quantized code changed;
+//! * session metrics (frames, schedule reuses, input columns skipped)
+//!   appear in the coordinator metrics snapshot;
+//! * ε > 0 monotonically skips more input columns (the energy-for-
+//!   exactness trade documented in the README).
+
+use mc_cim::backend::{CimSimBackend, LayerParams};
+use mc_cim::coordinator::{serve_stream_request, InferenceRequest, McDropoutEngine, Metrics};
+use mc_cim::coordinator::{DeltaScheduleConfig, McOutput};
+use mc_cim::dropout::plan::OrderingMode;
+use mc_cim::energy::EnergyModel;
+use mc_cim::model::ModelSpec;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::uncertainty::policy::{DecisionPolicy, RiskProfile};
+use mc_cim::util::testkit::f32_vec;
+use mc_cim::util::Pcg32;
+use mc_cim::workloads::vo::SyntheticVoStream;
+use mc_cim::RequestKind;
+
+const DIMS: [usize; 3] = [64, 24, 6];
+const FRAMES: usize = 24;
+const SAMPLES: usize = 30;
+const SEED: u64 = 4242;
+
+fn build_engine(delta: bool) -> McDropoutEngine {
+    let spec = ModelSpec::synthetic("vo-bench", DIMS.to_vec());
+    let mut rng = Pcg32::seeded(17);
+    let layers: Vec<LayerParams> = (0..DIMS.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.2; fo],
+            }
+        })
+        .collect();
+    let backend = CimSimBackend::from_params(&spec, layers, 6).unwrap();
+    let mut engine = McDropoutEngine::with_backend(
+        Box::new(backend),
+        &spec,
+        Some(6),
+        mc_cim::energy::ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    if delta {
+        engine.set_delta_schedule(DeltaScheduleConfig {
+            reuse: true,
+            ordering: OrderingMode::Nn2Opt,
+            cache: None,
+        });
+    }
+    engine
+}
+
+fn macs(out: &McOutput) -> u64 {
+    out.macro_stats.as_ref().expect("cim-sim measures").driven_col_cycles
+}
+
+fn verdict(engine: &McDropoutEngine, out: &McOutput) -> String {
+    use mc_cim::bayes::RegressionEnsemble;
+    let mut ens = RegressionEnsemble::new(engine.out_dim());
+    for s in &out.samples {
+        ens.add_sample(s);
+    }
+    let policy = DecisionPolicy::new(RiskProfile::vo_pose());
+    format!("{:?}", policy.decide_regression(ens.total_variance(3), true))
+}
+
+fn main() {
+    // the correlated frame stream (drone-like pose random walk)
+    let frames = SyntheticVoStream::new(DIMS[0], SEED, 0.04).frames(FRAMES);
+    assert!(frames.len() >= 20, "acceptance needs a real sequence");
+
+    let dense = build_engine(false);
+    let streamed = build_engine(true);
+    let metrics = Metrics::new();
+
+    let mut dense_outs = Vec::new();
+    let mut stream_outs = Vec::new();
+    let mut dense_macs = 0u64;
+    let mut stream_macs = 0u64;
+    let mut dense_pj = 0.0f64;
+    let mut frame_pjs = Vec::new();
+    let mut sess = streamed.begin_session(0.0);
+    for x in &frames {
+        // independent path: every frame re-seeds and re-samples its
+        // masks and rebuilds every product-sum from scratch
+        let mut src = IdealBernoulli::new(dense.mask_keep(), SEED);
+        let d = dense.infer_mc(x, SAMPLES, &mut src).unwrap();
+        dense_macs += macs(&d);
+        dense_pj += d.energy_pj;
+        dense_outs.push(d);
+        // session path: frame 0 draws the same masks from the same
+        // seed; later frames replay the stored ordered schedule
+        let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+        let s = streamed.infer_mc_stream(x, SAMPLES, &mut src, &mut sess).unwrap();
+        stream_macs += macs(&s);
+        frame_pjs.push(s.energy_pj);
+        metrics.record_execution(s.samples.len());
+        if let Some(plan) = &s.plan {
+            metrics.record_plan(plan);
+        }
+        metrics.record_stream(s.stream.as_ref().expect("session frames report"), s.energy_pj);
+        stream_outs.push(s);
+    }
+    let stream_pj: f64 = frame_pjs.iter().sum();
+
+    // 1. ε = 0 exactness: bit-identical outputs, unchanged verdicts
+    for (t, (d, s)) in dense_outs.iter().zip(&stream_outs).enumerate() {
+        assert_eq!(d.samples.len(), s.samples.len(), "frame {t}: sample count");
+        for (r, (rd, rs)) in d.samples.iter().zip(&s.samples).enumerate() {
+            for (j, (vd, vs)) in rd.iter().zip(rs).enumerate() {
+                assert_eq!(
+                    vd.to_bits(),
+                    vs.to_bits(),
+                    "frame {t} row {r} out[{j}]: session must be bit-exact at eps=0"
+                );
+            }
+        }
+        assert_eq!(
+            verdict(&dense, d),
+            verdict(&streamed, s),
+            "frame {t}: risk verdict must be unchanged"
+        );
+    }
+
+    // 2. the acceptance inequalities, measured (not modeled)
+    println!("stream_vo bench — {FRAMES} frames x {SAMPLES} instances, dims {DIMS:?}, cim-sim");
+    println!(
+        "  independent frames: {dense_macs:>12} MACs(col drives)  {dense_pj:>10.1} pJ"
+    );
+    println!(
+        "  streaming session : {stream_macs:>12} MACs(col drives)  {stream_pj:>10.1} pJ"
+    );
+    assert!(
+        stream_macs < dense_macs,
+        "session must reduce measured MACs: {stream_macs} vs {dense_macs}"
+    );
+    assert!(
+        stream_pj < dense_pj,
+        "session must reduce measured energy: {stream_pj:.1} vs {dense_pj:.1} pJ"
+    );
+
+    // 3. cross-frame reuse really engaged: warm frames replayed the
+    //    schedule and skipped unchanged layer-0 input columns
+    for (t, s) in stream_outs.iter().enumerate().skip(1) {
+        let fs = s.stream.as_ref().unwrap();
+        assert!(fs.schedule_reused, "frame {t} must replay the stored schedule");
+    }
+    let skipped: u64 = stream_outs
+        .iter()
+        .filter_map(|s| s.stream.as_ref().and_then(|f| f.input_delta.as_ref()))
+        .map(|d| d.cols_skipped)
+        .sum();
+    assert!(skipped > 0, "correlated frames must carry input columns over");
+    let report = EnergyModel::paper_default().streaming_report(&frame_pjs);
+    println!(
+        "  per-frame: cold {:.1} pJ, steady {:.1} pJ ({:.0}% saved in-session), \
+         {skipped} input columns carried over",
+        report.first_frame_pj,
+        report.steady_frame_pj,
+        100.0 * report.steady_saving,
+    );
+
+    // 4. session metrics surface in the coordinator snapshot
+    let snap = metrics.summary();
+    assert!(snap.contains("stream: frames="), "snapshot missing stream ledger: {snap}");
+    assert!(snap.contains("sched_reuse="), "{snap}");
+    assert!(snap.contains("input_cols_skipped="), "{snap}");
+    println!("  snapshot: {}", snap.split(" | ").last().unwrap_or(&snap));
+
+    // 5. the typed serving seam carries the frame echo
+    let serve_metrics = Metrics::new();
+    let mut sess2 = streamed.begin_session(0.0);
+    for (t, x) in frames.iter().take(3).enumerate() {
+        let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+        let req = InferenceRequest::new("vo-bench", RequestKind::Regress, x.clone())
+            .with_samples(SAMPLES)
+            .with_session("drone-0", t as u64);
+        let resp =
+            serve_stream_request(&streamed, &mut sess2, &mut src, &req, &serve_metrics)
+                .unwrap();
+        let info = resp.stream().expect("session frames echo stream info").clone();
+        assert_eq!(info.session, "drone-0");
+        assert_eq!(info.frame, t as u64);
+        assert_eq!(info.schedule_reused, t > 0);
+    }
+
+    // 6. ε > 0 skips at least as many input columns as ε = 0
+    let eps_engine = build_engine(true);
+    let mut eps_sess = eps_engine.begin_session(0.05);
+    let mut eps_skipped = 0u64;
+    let mut eps_pj = 0.0f64;
+    for x in &frames {
+        let mut src = IdealBernoulli::new(eps_engine.mask_keep(), SEED);
+        let out = eps_engine.infer_mc_stream(x, SAMPLES, &mut src, &mut eps_sess).unwrap();
+        eps_pj += out.energy_pj;
+        if let Some(d) = out.stream.as_ref().and_then(|f| f.input_delta.as_ref()) {
+            eps_skipped += d.cols_skipped;
+        }
+    }
+    assert!(
+        eps_skipped >= skipped,
+        "eps=0.05 must not update more columns than eps=0 ({eps_skipped} vs {skipped})"
+    );
+    println!(
+        "  eps=0.05: {eps_skipped} columns carried over (vs {skipped} at eps=0), {eps_pj:.1} pJ"
+    );
+
+    println!("stream_vo bench PASSED");
+}

@@ -40,6 +40,21 @@
 //! would cost more than gated dense rows (delta passes convert every
 //! maintained row, so tiny layers with large deltas can lose).
 //!
+//! **Streaming sessions** (cross-frame input deltas): when the same
+//! [`PlanState`] is handed back for a *new* input (a later frame of a
+//! VO stream), the session re-quantizes the frame on its own max-abs
+//! grid and updates layer-0 product-sums only for input columns whose
+//! quantized *code* changed — codes are grid-free, so a moved grid
+//! step alone only re-derives the shift-add scales. Layer 1's static
+//! hidden codes are resynced the same way against the maintained mask
+//! state. With the plan's `epsilon == 0` this is exact: a session
+//! frame's outputs are `to_bits`-identical to executing the frame as
+//! an independent request; `epsilon > 0` trades exactness for energy
+//! by letting near-still columns keep stale codes. A measured-cost
+//! model falls back to dense layer-0 recompute when the frame diff is
+//! large. Per-frame [`InputDeltaStats`] report columns skipped vs
+//! re-driven.
+//!
 //! **Dropout = gating, priced for real.** A hidden mask value of zero
 //! gates the corresponding macro *row* off (`row_active`), so a
 //! dropped neuron consumes no compute cycles and no ADC conversions —
@@ -50,7 +65,10 @@
 //! ([`EnergyModel::measured_energy`]), so a request's `energy_pj`
 //! reflects what this input, these masks, actually cost.
 
-use super::{BackendCaps, ExecOutput, ExecutionBackend, ExecutionPlan, PlanRow, PlanState, Row};
+use super::{
+    BackendCaps, ExecOutput, ExecutionBackend, ExecutionPlan, InputDeltaStats, PlanRow,
+    PlanState, Row,
+};
 use crate::cim::macro_sim::{CimMacro, MacroRunStats};
 use crate::cim::xadc::AdcKind;
 use crate::dropout::mask::DropoutMask;
@@ -276,11 +294,18 @@ impl CimSimBackend {
     }
 }
 
-/// Per-request delta-session state (lives inside a [`PlanState`]).
+/// Per-request / per-session delta state (lives inside a
+/// [`PlanState`]). A one-shot request drops it with the request; a
+/// streaming session (`McDropoutEngine::infer_mc_stream`) keeps it
+/// across frames, so layer-0 product-sums survive the frame boundary
+/// and are re-driven only for input columns whose quantized code
+/// actually changed.
 #[derive(Default)]
 struct CimSession {
-    /// Layer-0 macro accumulator (pre-affine), computed once — the
-    /// request input never changes across MC instances.
+    /// Layer-0 integer plane-sum state + current input codes.
+    l0: Option<L0State>,
+    /// Layer-0 macro accumulator (pre-affine), reconstructed from
+    /// `l0` — the input is static within a frame's MC instances.
     acc0: Option<Vec<f32>>,
     /// Layer-1 integer plane-sum state (delta mode only).
     l1: Option<L1Delta>,
@@ -289,23 +314,43 @@ struct CimSession {
     l1_delta: Option<bool>,
 }
 
-/// Integer product-sum state of the first hidden-mask layer: exact
-/// plane sums per (output neuron, column block, schedule cycle),
-/// updated only on `I^A`/`I^D` columns (Fig. 7).
-struct L1Delta {
-    /// Static quantized layer-1 input, pre-sliced into 31-wide blocks.
+/// Integer plane-sum state shared by the delta-maintained layers:
+/// exact plane sums per (output neuron, column block, schedule cycle),
+/// valid for the codes currently stored in `xt`. Plane sums are
+/// additive over disjoint column sets and the SAR search is exact, so
+/// incremental column updates keep `sums` bit-equivalent to a fresh
+/// dense pass over the current codes; the grid step only enters at
+/// shift-add time through `scales`.
+struct PlaneSums {
+    /// Quantized layer input, pre-sliced into 31-wide blocks.
     xt: Vec<QuantTensor>,
-    /// Columns whose static code is nonzero (only these ever drive).
-    nonzero: Vec<bool>,
-    /// Shift-add scales, schedule-cycle order.
+    /// Shift-add scales, schedule-cycle order (re-derived when the
+    /// input grid moves; the integer sums themselves are grid-free).
     scales: Vec<f32>,
     planes: usize,
     blocks: usize,
     fo: usize,
     /// `sums[(j * blocks + b) * planes + c]`.
     sums: Vec<i64>,
-    /// Mask currently reflected in `sums` (all-zeros before the first
-    /// instance, so the Full row is just a delta from nothing).
+}
+
+/// Layer-0 session state: plane sums of the network input (static
+/// within a frame, delta-updated across frames of a streaming
+/// session) against the first weight matrix.
+struct L0State {
+    ps: PlaneSums,
+}
+
+/// Integer product-sum state of the first hidden-mask layer: plane
+/// sums of the static pre-mask hidden activations, updated on
+/// `I^A`/`I^D` *mask* columns within a frame (Fig. 7) and on changed
+/// hidden *codes* across frames of a session.
+struct L1Delta {
+    ps: PlaneSums,
+    /// Columns whose static code is nonzero (only these ever drive).
+    nonzero: Vec<bool>,
+    /// Mask currently reflected in the sums (all-zeros before the
+    /// first instance, so the Full row is just a delta from nothing).
     cur: DropoutMask,
 }
 
@@ -323,9 +368,20 @@ impl CimSimBackend {
         self.quant.quantize_with_amax(&pre, self.inv_keep)
     }
 
-    /// Initialize the layer-1 delta state from the static input.
-    fn l1_init(&self, aq: &QuantTensor) -> L1Delta {
-        let layer = &self.layers[1];
+    /// Shift-add scales of one layer's schedule for an input grid step
+    /// `x_delta` (the weight grid is fixed at load).
+    fn shift_add_scales(&self, layer: &QuantLayer, x_delta: f32) -> Vec<f32> {
+        let w_delta = layer.tiles[0][0].delta;
+        BitplaneSchedule::new(OperatorKind::MultiplicationFree, self.bits, x_delta, w_delta)
+            .cycles
+            .iter()
+            .map(|c| c.scale)
+            .collect()
+    }
+
+    /// Fresh plane-sum state for `layer` under quantized input `aq`:
+    /// codes sliced into 31-wide blocks, sums zeroed (nothing driven).
+    fn plane_sums_init(&self, layer: &QuantLayer, aq: &QuantTensor) -> PlaneSums {
         let blocks = layer.fi.div_ceil(MACRO_COLS);
         let xt: Vec<QuantTensor> = (0..blocks)
             .map(|cb| {
@@ -336,42 +392,47 @@ impl CimSimBackend {
                 QuantTensor { codes, delta: aq.delta, bits: self.bits }
             })
             .collect();
-        let w_delta = layer.tiles[0][0].delta;
-        let sched =
-            BitplaneSchedule::new(OperatorKind::MultiplicationFree, self.bits, aq.delta, w_delta);
-        let scales: Vec<f32> = sched.cycles.iter().map(|c| c.scale).collect();
+        let scales = self.shift_add_scales(layer, aq.delta);
         let planes = scales.len();
-        L1Delta {
+        PlaneSums {
             xt,
-            nonzero: aq.codes.iter().map(|&c| c != 0).collect(),
             scales,
             planes,
             blocks,
             fo: layer.fo,
             sums: vec![0i64; layer.fo * blocks * planes],
+        }
+    }
+
+    /// Initialize the layer-1 delta state from the static input.
+    fn l1_init(&self, aq: &QuantTensor) -> L1Delta {
+        let layer = &self.layers[1];
+        L1Delta {
+            ps: self.plane_sums_init(layer, aq),
+            nonzero: aq.codes.iter().map(|&c| c != 0).collect(),
             cur: DropoutMask::zeros(layer.fi),
         }
     }
 
-    /// One delta pass (§IV-A cycle): drive only `set ∩ nonzero`
-    /// columns through the macro for every maintained row and fold the
-    /// measured integer plane sums into the state with `sign`.
-    fn l1_apply(
+    /// One delta pass (§IV-A cycle): drive `set`'s nonzero-coded
+    /// columns through the macro for every maintained row of `layer`
+    /// and fold the measured integer plane sums into `ps` with `sign`.
+    fn plane_apply(
         &self,
         mac: &mut CimMacro,
-        st: &mut L1Delta,
+        layer: &QuantLayer,
+        ps: &mut PlaneSums,
         set: &DropoutMask,
         sign: i64,
         stats: &mut MacroRunStats,
     ) {
-        let layer = &self.layers[1];
-        for cb in 0..st.blocks {
+        for cb in 0..ps.blocks {
             let lo = cb * MACRO_COLS;
             let hi = (lo + MACRO_COLS).min(layer.fi);
             let mut col_active = vec![false; MACRO_COLS];
             let mut any = false;
             for i in lo..hi {
-                if set.get(i) && st.nonzero[i] {
+                if set.get(i) && ps.xt[cb].codes[i - lo] != 0 {
                     col_active[i - lo] = true;
                     any = true;
                 }
@@ -383,12 +444,12 @@ impl CimSimBackend {
                 let rhi = (rb + MACRO_ROWS).min(layer.fo);
                 let all = vec![true; rhi - rb];
                 let (_, run) =
-                    mac.correlate(&st.xt[cb], &layer.tiles[cb][rb..rhi], &col_active, &all);
+                    mac.correlate(&ps.xt[cb], &layer.tiles[cb][rb..rhi], &col_active, &all);
                 Self::merge_counts(stats, &run);
-                for (r, codes) in run.plane_sums.chunks(st.planes).enumerate() {
-                    let base = ((rb + r) * st.blocks + cb) * st.planes;
+                for (r, codes) in run.plane_sums.chunks(ps.planes).enumerate() {
+                    let base = ((rb + r) * ps.blocks + cb) * ps.planes;
                     for (c, &code) in codes.iter().enumerate() {
-                        st.sums[base + c] += sign * code as i64;
+                        ps.sums[base + c] += sign * code as i64;
                     }
                 }
             }
@@ -399,21 +460,218 @@ impl CimSimBackend {
     /// sums, in exactly the float-op order of the dense tile loop (per
     /// block: cycle-order accumulation; blocks folded in order) — this
     /// is what makes delta outputs `to_bits`-equal to dense outputs.
-    fn l1_reconstruct(&self, st: &L1Delta) -> Vec<f32> {
-        let mut acc = vec![0.0f32; st.fo];
+    fn plane_reconstruct(ps: &PlaneSums) -> Vec<f32> {
+        let mut acc = vec![0.0f32; ps.fo];
         for (j, slot) in acc.iter_mut().enumerate() {
             let mut a = 0.0f32;
-            for b in 0..st.blocks {
-                let base = (j * st.blocks + b) * st.planes;
+            for b in 0..ps.blocks {
+                let base = (j * ps.blocks + b) * ps.planes;
                 let mut out = 0.0f32;
-                for (c, &scale) in st.scales.iter().enumerate() {
-                    out += st.sums[base + c] as f32 * scale;
+                for (c, &scale) in ps.scales.iter().enumerate() {
+                    out += ps.sums[base + c] as f32 * scale;
                 }
                 a += out;
             }
             *slot = a;
         }
         acc
+    }
+
+    /// Frame-0 layer-0 build: one full pass driving every nonzero
+    /// input column, producing the session's integer plane sums plus
+    /// the reconstructed accumulator (bit-equal to a dense pass over
+    /// the same codes — the sums after one pass ARE its ADC codes).
+    fn l0_init(
+        &self,
+        mac: &mut CimMacro,
+        input: &[f32],
+        stats: &mut MacroRunStats,
+    ) -> (L0State, Vec<f32>) {
+        let layer = &self.layers[0];
+        let xq = self.quant.quantize(input);
+        let mut ps = self.plane_sums_init(layer, &xq);
+        self.plane_apply(mac, layer, &mut ps, &DropoutMask::ones(layer.fi), 1, stats);
+        let acc0 = Self::plane_reconstruct(&ps);
+        (L0State { ps }, acc0)
+    }
+
+    /// Measured-cost estimate for a frame's layer-0 update: the two
+    /// delta passes (subtract old codes, add new) vs a dense recompute
+    /// driving every nonzero column once. Delta passes convert every
+    /// row for each touched block, so a near-total frame diff loses to
+    /// recomputing — the cost-model fallback of the streaming path.
+    fn l0_delta_pays_off(
+        &self,
+        ps: &PlaneSums,
+        sub: &DropoutMask,
+        add: &DropoutMask,
+        new_codes: &[i32],
+    ) -> bool {
+        let p = &self.energy.params;
+        // one conversion ~ a few SAR cycles of analog search + logic
+        let e_conv = 3.0 * p.e_sar_analog_fj + p.e_sa_logic_asym_fj;
+        let e_drive = p.e_col_fj;
+        let planes_f = ps.planes as f64;
+        let fo = ps.fo as f64;
+        let fi = new_codes.len();
+        let code_at = |i: usize| ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS];
+        let (sb, sc) =
+            block_profile(ps.blocks, (0..fi).filter(|&i| sub.get(i) && code_at(i) != 0));
+        let (ab, ac) =
+            block_profile(ps.blocks, (0..fi).filter(|&i| add.get(i) && new_codes[i] != 0));
+        let (fb, fc) = block_profile(ps.blocks, (0..fi).filter(|&i| new_codes[i] != 0));
+        let cost = |blocks: f64, cols: f64| planes_f * fo * (blocks * e_conv + cols * e_drive);
+        cost(sb, sc) + cost(ab, ac) < cost(fb, fc)
+    }
+
+    /// Cross-frame layer-0 sync: re-quantize the frame's input on its
+    /// own max-abs grid and bring the session's integer sums to the
+    /// new codes. Codes are grid-free, so columns whose code did not
+    /// change carry over exactly even when the grid step moved (only
+    /// the shift-add scales are re-derived then). With `epsilon == 0`
+    /// every changed code is updated and the synced state is
+    /// bit-identical to a fresh session on this input; `epsilon > 0`
+    /// lets a column keep its stale code when the value error that
+    /// introduces on the new grid (`|Δcode| · Δ_new`) is at most ε —
+    /// approximate, cheaper, and ε-bounded per column. Returns the
+    /// delta accounting plus whether the accumulator must be rebuilt.
+    fn l0_sync(
+        &self,
+        mac: &mut CimMacro,
+        l0: &mut L0State,
+        input: &[f32],
+        epsilon: f32,
+        stats: &mut MacroRunStats,
+    ) -> (InputDeltaStats, bool) {
+        let layer = &self.layers[0];
+        let fi = layer.fi;
+        let xq = self.quant.quantize(input);
+        let old_delta = l0.ps.xt[0].delta;
+        let grid_rescaled = xq.delta.to_bits() != old_delta.to_bits();
+        let mut sub = DropoutMask::zeros(fi);
+        let mut add = DropoutMask::zeros(fi);
+        let mut changed: Vec<usize> = Vec::new();
+        for i in 0..fi {
+            let old_c = l0.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS];
+            let new_c = xq.codes[i];
+            if old_c == new_c {
+                continue;
+            }
+            if epsilon > 0.0 {
+                // bound the error the stale code actually introduces
+                // *on the new grid* — comparing old vs new dequantized
+                // values instead would let a perfectly still column
+                // drift by the grid ratio under a rescale
+                let introduced = (new_c - old_c).unsigned_abs() as f32 * xq.delta;
+                if introduced <= epsilon {
+                    continue; // ε-still column: stale code carried over
+                }
+            }
+            changed.push(i);
+            if old_c != 0 {
+                sub.set(i, true);
+            }
+            if new_c != 0 {
+                add.set(i, true);
+            }
+        }
+        let mut ds = InputDeltaStats {
+            cols_total: fi as u64,
+            cols_updated: changed.len() as u64,
+            cols_skipped: (fi - changed.len()) as u64,
+            full_recompute: false,
+            grid_rescaled,
+        };
+        if changed.is_empty() && !grid_rescaled {
+            return (ds, false); // still frame: nothing to do at all
+        }
+        if changed.is_empty() {
+            // identical codes on a moved grid: the integer sums stay
+            // valid, only the shift-add scales change
+            l0.ps.scales = self.shift_add_scales(layer, xq.delta);
+            for t in &mut l0.ps.xt {
+                t.delta = xq.delta;
+            }
+            return (ds, true);
+        }
+        if self.l0_delta_pays_off(&l0.ps, &sub, &add, &xq.codes) {
+            self.plane_apply(mac, layer, &mut l0.ps, &sub, -1, stats);
+            for &i in &changed {
+                l0.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] = xq.codes[i];
+            }
+            if grid_rescaled {
+                l0.ps.scales = self.shift_add_scales(layer, xq.delta);
+            }
+            for t in &mut l0.ps.xt {
+                t.delta = xq.delta;
+            }
+            self.plane_apply(mac, layer, &mut l0.ps, &add, 1, stats);
+        } else {
+            // frame diff too large: dense recompute is cheaper
+            l0.ps = self.plane_sums_init(layer, &xq);
+            self.plane_apply(mac, layer, &mut l0.ps, &DropoutMask::ones(fi), 1, stats);
+            ds.full_recompute = true;
+            ds.cols_updated = fi as u64;
+            ds.cols_skipped = 0;
+        }
+        (ds, true)
+    }
+
+    /// Cross-frame layer-1 resync: the static pre-mask hidden input
+    /// moved with the frame, so bring the plane sums to the new hidden
+    /// codes. The hidden grid is the static ReLU1 full-scale grid
+    /// (`1/(1-p)`), so codes are directly comparable across frames and
+    /// the scales never move. Only codes that changed *and* are active
+    /// under the currently maintained mask hold contributions in the
+    /// sums; when most of that state would churn, resetting and
+    /// letting the next instance rebuild from zeros is cheaper.
+    fn l1_sync(
+        &self,
+        mac: &mut CimMacro,
+        st: &mut L1Delta,
+        acc0: &[f32],
+        stats: &mut MacroRunStats,
+    ) {
+        let layer = &self.layers[1];
+        let fi = layer.fi;
+        let aq = self.l1_static_input(acc0);
+        let mut changed: Vec<usize> = Vec::new();
+        for i in 0..fi {
+            if st.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] != aq.codes[i] {
+                changed.push(i);
+            }
+        }
+        if changed.is_empty() {
+            return;
+        }
+        let mut sub = DropoutMask::zeros(fi);
+        let mut add = DropoutMask::zeros(fi);
+        let mut touched = 0usize;
+        for &i in &changed {
+            if !st.cur.get(i) {
+                continue; // masked-off column: the sums hold nothing
+            }
+            touched += 1;
+            if st.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] != 0 {
+                sub.set(i, true);
+            }
+            if aq.codes[i] != 0 {
+                add.set(i, true);
+            }
+        }
+        // rebuilding from zero pays the full active set on the next
+        // instance; in-place update pays two passes over the churned
+        // active columns
+        if 2 * touched < st.cur.active_count() {
+            self.plane_apply(mac, layer, &mut st.ps, &sub, -1, stats);
+            for &i in &changed {
+                st.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] = aq.codes[i];
+                st.nonzero[i] = aq.codes[i] != 0;
+            }
+            self.plane_apply(mac, layer, &mut st.ps, &add, 1, stats);
+        } else {
+            *st = self.l1_init(&aq);
+        }
     }
 
     /// Estimated measured cost (fJ-weighted conversions + column
@@ -478,18 +736,12 @@ impl CimSimBackend {
         let masks_f32: Vec<Vec<f32>> = row.masks().iter().map(|m| m.to_f32()).collect();
         let last = self.layers.len() - 1;
 
-        // layer 0: product-sums are request-static — pay them once
-        if sess.acc0.is_none() {
-            if !matches!(row, PlanRow::Full { .. }) {
-                return Err(self.err(
-                    "plan session must start with a Full row (fresh state got a Delta)".into(),
-                ));
-            }
-            let xq = self.quant.quantize(&plan.input);
-            let all = vec![true; self.layers[0].fo];
-            sess.acc0 = Some(self.layer_matvec(mac, &self.layers[0], &xq, &all, stats));
-        }
-        let mut acc = sess.acc0.clone().expect("acc0 just ensured");
+        // layer 0: product-sums are frame-static — built (or synced to
+        // this frame's input) by `execute_plan` before the row loop
+        let mut acc = sess
+            .acc0
+            .clone()
+            .ok_or_else(|| self.err("plan session has no layer-0 state".into()))?;
         self.digital_chain(0, &mut acc, &masks_f32);
         if last == 0 {
             return Ok(acc);
@@ -500,7 +752,7 @@ impl CimSimBackend {
         if sess.l1_delta.is_none() {
             let aq = self.l1_static_input(sess.acc0.as_ref().expect("acc0 set above"));
             let st = self.l1_init(&aq);
-            let use_delta = self.l1_delta_pays_off(plan, &st.nonzero, st.planes);
+            let use_delta = self.l1_delta_pays_off(plan, &st.nonzero, st.ps.planes);
             if use_delta {
                 sess.l1 = Some(st);
             }
@@ -508,21 +760,21 @@ impl CimSimBackend {
         }
         let mut acc1 = if sess.l1_delta == Some(true) {
             let mut st = sess.l1.take().expect("delta state initialized with the decision");
+            // deltas are taken against the *maintained* mask (the
+            // previous row within a frame, the previous frame's last
+            // row across a session boundary), not against the plan's
+            // precomputed sets — a replayed schedule chains exactly
             let target = &row.masks()[0];
             let added = target.newly_active(&st.cur);
             let dropped = target.newly_dropped(&st.cur);
-            if let PlanRow::Delta { added: pa, dropped: pd, .. } = row {
-                debug_assert_eq!(added, pa[0], "plan deltas must chain consecutively");
-                debug_assert_eq!(dropped, pd[0], "plan deltas must chain consecutively");
-            }
             if added.active_count() > 0 {
-                self.l1_apply(mac, &mut st, &added, 1, stats);
+                self.plane_apply(mac, &self.layers[1], &mut st.ps, &added, 1, stats);
             }
             if dropped.active_count() > 0 {
-                self.l1_apply(mac, &mut st, &dropped, -1, stats);
+                self.plane_apply(mac, &self.layers[1], &mut st.ps, &dropped, -1, stats);
             }
             st.cur = target.clone();
-            let acc1 = self.l1_reconstruct(&st);
+            let acc1 = Self::plane_reconstruct(&st.ps);
             sess.l1 = Some(st);
             acc1
         } else {
@@ -601,6 +853,33 @@ impl ExecutionBackend for CimSimBackend {
             .ok_or_else(|| self.err("plan session belongs to a different backend".into()))?;
         let mut mac = self.mac.lock().unwrap_or_else(|p| p.into_inner());
         let mut stats = MacroRunStats::default();
+        // layer-0 session state: built on the session's first chunk,
+        // synced to the (possibly changed) input on later frames — the
+        // streaming input-delta path (§IV applied across frames)
+        let mut input_delta = None;
+        if sess.l0.is_none() {
+            if !matches!(plan.rows[0], PlanRow::Full { .. }) {
+                return Err(self.err(
+                    "plan session must start with a Full row (fresh state got a Delta)".into(),
+                ));
+            }
+            let (l0, acc0) = self.l0_init(&mut mac, &plan.input, &mut stats);
+            sess.l0 = Some(l0);
+            sess.acc0 = Some(acc0);
+        } else {
+            let l0 = sess.l0.as_mut().expect("checked above");
+            let (ds, acc0_stale) =
+                self.l0_sync(&mut mac, l0, &plan.input, plan.epsilon, &mut stats);
+            if acc0_stale {
+                let acc0 = Self::plane_reconstruct(&l0.ps);
+                if sess.l1_delta == Some(true) {
+                    let st = sess.l1.as_mut().expect("delta state follows the decision");
+                    self.l1_sync(&mut mac, st, &acc0, &mut stats);
+                }
+                sess.acc0 = Some(acc0);
+            }
+            input_delta = Some(ds);
+        }
         let mut outputs = Vec::with_capacity(plan.rows.len());
         for row in &plan.rows {
             outputs.push(self.forward_row_planned(&mut mac, sess, plan, row, &mut stats)?);
@@ -616,7 +895,12 @@ impl ExecutionBackend for CimSimBackend {
             rng_bits,
             sched_bits,
         );
-        Ok(ExecOutput { outputs, energy_pj: Some(breakdown.total_pj()), stats: Some(stats) })
+        Ok(ExecOutput {
+            outputs,
+            energy_pj: Some(breakdown.total_pj()),
+            stats: Some(stats),
+            input_delta,
+        })
     }
 
     fn execute_rows(&self, rows: &[Row<'_>]) -> Result<ExecOutput, McCimError> {
@@ -657,8 +941,25 @@ impl ExecutionBackend for CimSimBackend {
             AdcKind::AsymmetricMedian,
             rng_bits,
         );
-        Ok(ExecOutput { outputs, energy_pj: Some(breakdown.total_pj()), stats: Some(stats) })
+        Ok(ExecOutput {
+            outputs,
+            energy_pj: Some(breakdown.total_pj()),
+            stats: Some(stats),
+            input_delta: None,
+        })
     }
+}
+
+/// (blocks touched, columns) of a driven-column index set — the two
+/// quantities the delta-vs-dense cost estimates price.
+fn block_profile(blocks: usize, cols: impl Iterator<Item = usize>) -> (f64, f64) {
+    let mut hit = vec![false; blocks];
+    let mut n = 0usize;
+    for i in cols {
+        n += 1;
+        hit[i / MACRO_COLS] = true;
+    }
+    (hit.iter().filter(|&&b| b).count() as f64, n as f64)
 }
 
 #[cfg(test)]

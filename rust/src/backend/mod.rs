@@ -83,6 +83,27 @@ impl PlanState {
     }
 }
 
+/// Cross-frame input-delta accounting of one streaming-session
+/// `execute_plan` call (None on the first frame and on backends
+/// without product-sum sessions): how many layer-0 input columns the
+/// session re-drove vs carried over from the previous frame.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct InputDeltaStats {
+    /// Layer-0 input columns considered (the model's input dim).
+    pub cols_total: u64,
+    /// Columns re-driven through the macro this frame.
+    pub cols_updated: u64,
+    /// Columns whose product-sums carried over unchanged (or within
+    /// the frame's ε tolerance).
+    pub cols_skipped: u64,
+    /// The cost model judged the frame diff too large for delta
+    /// updates and recomputed layer 0 densely instead.
+    pub full_recompute: bool,
+    /// The input quantization grid moved with this frame's max-abs
+    /// (shift-add scales were re-derived; integer sums stay valid).
+    pub grid_rescaled: bool,
+}
+
 /// Result of one `execute_rows` call.
 #[derive(Clone, Debug, Default)]
 pub struct ExecOutput {
@@ -92,6 +113,9 @@ pub struct ExecOutput {
     pub stats: Option<MacroRunStats>,
     /// Measured energy (pJ) for this call, when the backend measures.
     pub energy_pj: Option<f64>,
+    /// Streaming input-delta accounting (sessions on measuring
+    /// backends only; see [`InputDeltaStats`]).
+    pub input_delta: Option<InputDeltaStats>,
 }
 
 /// A compute substrate that evaluates batches of (input, masks) rows.

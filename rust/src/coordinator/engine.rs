@@ -20,10 +20,14 @@
 //! is kept as a thin shim over `PjrtBackend` + `ModelRegistry`.
 
 use super::batcher::chunk_plan;
-use crate::backend::{BackendOptions, ExecutionBackend, PjrtBackend, PlanState, Row};
+use crate::backend::{
+    BackendOptions, ExecutionBackend, InputDeltaStats, PjrtBackend, PlanState, Row,
+};
 use crate::cim::macro_sim::MacroRunStats;
 use crate::dropout::mask::DropoutMask;
-use crate::dropout::plan::{CachedSchedule, OrderingMode, PlanBuilder, PlanStats, ScheduleCache};
+use crate::dropout::plan::{
+    CachedSchedule, ExecutionPlan, OrderingMode, PlanBuilder, PlanStats, ScheduleCache,
+};
 use crate::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use crate::model::{ModelRegistry, ModelSpec};
 use crate::operator::quant::Quantizer;
@@ -142,10 +146,28 @@ pub struct McOutput {
     /// the analytic expectation.
     pub energy_measured: bool,
     /// Delta-schedule accounting when the request ran as a plan
-    /// (None on the dense path).
+    /// (None on the dense path, and on streaming frames after the
+    /// first — their schedule accounting was already reported once).
     pub plan: Option<PlanStats>,
+    /// Streaming-session accounting when the request was a session
+    /// frame ([`McDropoutEngine::infer_mc_stream`]).
+    pub stream: Option<StreamFrameStats>,
     /// Aggregated measured macro counters (measuring backends only).
     pub macro_stats: Option<MacroRunStats>,
+}
+
+/// Temporal-reuse accounting of one streaming-session frame.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamFrameStats {
+    /// 0-based index of this frame within the session's lifetime.
+    pub frame: u64,
+    /// The frame replayed the session's stored ordered schedule (mask
+    /// bits priced as SRAM schedule reads, §IV-B — false only on the
+    /// session's first frame, which pays RNG + TSP ordering once).
+    pub schedule_reused: bool,
+    /// Layer-0 cross-frame column accounting (measuring backends with
+    /// native sessions only; None elsewhere and on the first frame).
+    pub input_delta: Option<InputDeltaStats>,
 }
 
 /// Accumulates the measured side channels of a request's executions.
@@ -178,6 +200,48 @@ struct PlannedRun {
     builder: PlanBuilder,
     state: PlanState,
     stats: PlanStats,
+}
+
+/// One stored chunk of a streaming session's schedule: the chunk's
+/// [`ExecutionPlan`] built once on the cold frame and re-executed in
+/// place on every warm frame (only its `input` is refreshed — the
+/// rows, order and masks are the frame-invariant part).
+struct SessionChunk {
+    plan: ExecutionPlan,
+}
+
+/// Cross-frame state of one streaming session (see
+/// [`McDropoutEngine::begin_session`]): the ordered mask schedule
+/// (paid once), the backend's product-sum [`PlanState`], and the
+/// frame counter. Owned by the serving layer — typically a
+/// coordinator worker's session table — and handed back to
+/// [`McDropoutEngine::infer_mc_stream`] for every frame. Must only be
+/// used with the engine that created it.
+pub struct EngineSession {
+    chunks: Vec<SessionChunk>,
+    state: PlanState,
+    /// Schedule-level accounting of the cold frame (reported once).
+    stats: PlanStats,
+    epsilon: f32,
+    samples: usize,
+    frames: u64,
+}
+
+impl EngineSession {
+    /// Frames served through this session so far.
+    pub fn frames(&self) -> u64 {
+        self.frames
+    }
+
+    /// The session's layer-0 input-delta tolerance (0 = exact).
+    pub fn epsilon(&self) -> f32 {
+        self.epsilon
+    }
+
+    /// MC samples per frame (fixed by the first frame).
+    pub fn samples(&self) -> usize {
+        self.samples
+    }
 }
 
 /// Draw `t` instances' masks in sampling order (the same draw sequence
@@ -537,6 +601,7 @@ impl McDropoutEngine {
             },
             energy_measured: acc.any_measured,
             plan: plan_info,
+            stream: None,
             macro_stats: acc.stats,
         })
     }
@@ -616,6 +681,143 @@ impl McDropoutEngine {
             },
             energy_measured: acc.any_measured,
             plan: plan_info,
+            stream: None,
+            macro_stats: acc.stats,
+        })
+    }
+
+    /// Open a streaming-session handle for a sequence of temporally
+    /// correlated inputs (a VO frame stream). The session persists the
+    /// backend's [`PlanState`] *and* the ordered mask schedule across
+    /// frames: the first frame pays mask RNG and TSP ordering once,
+    /// every later frame replays the stored schedule (priced as SRAM
+    /// schedule reads) against product-sum state carried over from the
+    /// previous frame. `epsilon` is the layer-0 input-delta tolerance:
+    /// `0.0` keeps session outputs `to_bits`-identical to independent
+    /// per-frame execution; `> 0` lets near-still input columns keep
+    /// stale codes (approximate, cheaper).
+    pub fn begin_session(&self, epsilon: f32) -> EngineSession {
+        EngineSession {
+            chunks: Vec::new(),
+            state: self.backend.new_plan_state(),
+            stats: PlanStats::default(),
+            epsilon: epsilon.max(0.0),
+            samples: 0,
+            frames: 0,
+        }
+    }
+
+    /// One frame of a streaming session: `samples` MC iterations of
+    /// this frame's input, reusing the session's schedule and compute
+    /// state (see [`Self::begin_session`]). `src` is consulted only on
+    /// the session's first frame — the schedule is frame-invariant for
+    /// a fixed (keep-prob, samples), so later frames draw nothing.
+    /// Backends without native plan sessions lower every frame to
+    /// dense rows (identical numerics, no carry-over savings).
+    pub fn infer_mc_stream(
+        &self,
+        x: &[f32],
+        samples: usize,
+        src: &mut dyn DropoutBitSource,
+        sess: &mut EngineSession,
+    ) -> Result<McOutput> {
+        ensure!(samples > 0, "MC inference needs at least one sample");
+        let in_dim = self.dims[0];
+        ensure!(
+            x.len() == in_dim,
+            "input width {} does not match network input dim {in_dim}",
+            x.len()
+        );
+        if sess.frames > 0 {
+            ensure!(
+                samples == sess.samples,
+                "session frames must keep their sample count (schedule is \
+                 frame-invariant): frame 0 ran {} samples, this frame asks {samples}",
+                sess.samples
+            );
+        }
+        let xq = self.quantize_input(x);
+        let mut outputs = Vec::with_capacity(samples);
+        let mut acc = RunAcc::default();
+        let mut input_delta: Option<InputDeltaStats> = None;
+        let mut plan_info = None;
+        if sess.frames == 0 {
+            // cold frame: sample + order the schedule once, store it.
+            // A previous frame-0 attempt may have failed mid-frame:
+            // drop any partially stored chunks so a retry cannot stack
+            // a second schedule on top of them (the backend state is
+            // delta-chained and self-consistent either way).
+            sess.chunks.clear();
+            sess.stats = PlanStats::default();
+            // ordering only pays off on backends that execute plans
+            // natively; dense-lowering substrates skip the TSP work
+            let ordering = if self.backend.caps().plan_native {
+                self.delta.ordering
+            } else {
+                OrderingMode::None
+            };
+            let mask_dims = self.mask_dims();
+            let mut builder = PlanBuilder::new(&self.dims, ordering);
+            let mut done = 0usize;
+            while done < samples {
+                let n = (samples - done).min(self.mc_batch);
+                let masks = sample_schedule(&mask_dims, n, src);
+                let mut plan = builder.chunk(&xq, masks, true);
+                plan.epsilon = sess.epsilon;
+                let out = self.backend.execute_plan(&plan, &mut sess.state)?;
+                ensure!(out.outputs.len() == n, "unexpected output size");
+                acc.absorb(out.energy_pj, out.stats.as_ref());
+                sess.stats.merge(&plan.stats);
+                let base = outputs.len();
+                outputs.resize(base + n, Vec::new());
+                for (&pos, o) in plan.order.iter().zip(out.outputs) {
+                    outputs[base + pos] = o;
+                }
+                // stored for replay: warm frames only swap the input
+                plan.sampled = false;
+                sess.chunks.push(SessionChunk { plan });
+                done += n;
+            }
+            sess.samples = samples;
+            plan_info = Some(sess.stats);
+        } else {
+            // warm frame: replay the stored ordered schedule in place
+            // against the carried-over session state — no schedule
+            // clone, no RNG; masks are priced as SRAM schedule reads
+            for chunk in &mut sess.chunks {
+                chunk.plan.input.clone_from(&xq);
+                let out = self.backend.execute_plan(&chunk.plan, &mut sess.state)?;
+                let n = chunk.plan.rows.len();
+                ensure!(out.outputs.len() == n, "unexpected output size");
+                acc.absorb(out.energy_pj, out.stats.as_ref());
+                // the frame's input sync happens on its first chunk;
+                // later chunks see unchanged codes and report nothing
+                if input_delta.is_none() {
+                    input_delta = out.input_delta;
+                }
+                let base = outputs.len();
+                outputs.resize(base + n, Vec::new());
+                for (&pos, o) in chunk.plan.order.iter().zip(out.outputs) {
+                    outputs[base + pos] = o;
+                }
+            }
+        }
+        let stream = StreamFrameStats {
+            frame: sess.frames,
+            schedule_reused: sess.frames > 0,
+            input_delta,
+        };
+        sess.frames += 1;
+        Ok(McOutput {
+            samples: outputs,
+            energy_pj: if acc.any_measured {
+                acc.measured_pj
+            } else {
+                self.request_energy_pj(samples)
+            },
+            energy_measured: acc.any_measured,
+            plan: plan_info,
+            stream: Some(stream),
             macro_stats: acc.stats,
         })
     }

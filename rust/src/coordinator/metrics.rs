@@ -1,8 +1,16 @@
 //! Serving metrics: request counts, latency quantiles, executions,
 //! the adaptive-sampling ledger (samples used/saved, verdicts,
-//! abstention rate), and the delta-schedule ledger (MACs saved by
-//! compute reuse, §IV-B ordering gain, schedule-cache hit rate).
+//! abstention rate), the delta-schedule ledger (MACs saved by compute
+//! reuse, §IV-B ordering gain, schedule-cache hit rate), and the
+//! streaming-session ledger (frames, schedule reuses, input columns
+//! skipped by cross-frame reuse, per-frame energy).
+//!
+//! Latencies live in a bounded ring of the most recent
+//! [`LATENCY_WINDOW`] samples — a long-running pool must not grow
+//! memory per request — and quantiles are computed from one sorted
+//! snapshot per call (`summary()` sorts exactly once).
 
+use super::engine::StreamFrameStats;
 use crate::dropout::plan::PlanStats;
 use crate::uncertainty::Verdict;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -13,6 +21,30 @@ use std::time::Duration;
 /// own bin, everything larger lands in the last bin.
 pub const SAMPLES_HIST_BINS: usize = 64;
 
+/// Latency samples retained for quantiles (most recent wins): enough
+/// for stable p95s, small enough to clone + sort per snapshot without
+/// blinking.
+pub const LATENCY_WINDOW: usize = 4096;
+
+/// Fixed-capacity ring of the most recent latency samples.
+#[derive(Debug, Default)]
+struct LatencyRing {
+    buf: Vec<u64>,
+    /// Next overwrite position once the buffer is full.
+    next: usize,
+}
+
+impl LatencyRing {
+    fn push(&mut self, us: u64) {
+        if self.buf.len() < LATENCY_WINDOW {
+            self.buf.push(us);
+        } else {
+            self.buf[self.next] = us;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+    }
+}
+
 /// Shared metrics sink (cheap atomics on the hot path; latencies under
 /// a mutex, sampled per request, not per row).
 #[derive(Debug, Default)]
@@ -21,7 +53,7 @@ pub struct Metrics {
     executions: AtomicU64,
     rows: AtomicU64,
     errors: AtomicU64,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies_us: Mutex<LatencyRing>,
     // -- adaptive-sampling ledger --
     /// MC samples actually executed by policy-managed requests.
     mc_samples_used: AtomicU64,
@@ -50,6 +82,22 @@ pub struct Metrics {
     /// Ordered-schedule cache hits / misses (consulted lookups only).
     sched_cache_hits: AtomicU64,
     sched_cache_misses: AtomicU64,
+    // -- streaming-session ledger (cross-frame reuse) --
+    /// Session frames served.
+    stream_frames: AtomicU64,
+    /// Frames that replayed a stored ordered schedule (mask bits paid
+    /// as SRAM reads instead of RNG draws; every frame but a session's
+    /// first — or first-after-eviction).
+    stream_schedule_reuses: AtomicU64,
+    /// Layer-0 input columns re-driven across all session frames.
+    stream_input_cols_updated: AtomicU64,
+    /// Layer-0 input columns carried over unchanged (the §IV-A win
+    /// applied across frames).
+    stream_input_cols_skipped: AtomicU64,
+    /// Frames whose diff was big enough for the dense fallback.
+    stream_full_recomputes: AtomicU64,
+    /// Energy of session frames, femtojoules (for per-frame pJ).
+    stream_energy_fj: AtomicU64,
 }
 
 impl Metrics {
@@ -61,7 +109,7 @@ impl Metrics {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.latencies_us
             .lock()
-            .unwrap()
+            .unwrap_or_else(|p| p.into_inner())
             .push(latency.as_micros() as u64);
     }
 
@@ -129,6 +177,26 @@ impl Metrics {
             Some(false) => self.sched_cache_misses.fetch_add(1, Ordering::Relaxed),
             None => 0,
         };
+    }
+
+    /// Record one streaming-session frame: the engine's per-frame
+    /// stream accounting plus the frame's energy (pJ).
+    pub fn record_stream(&self, frame: &StreamFrameStats, energy_pj: f64) {
+        self.stream_frames.fetch_add(1, Ordering::Relaxed);
+        if frame.schedule_reused {
+            self.stream_schedule_reuses.fetch_add(1, Ordering::Relaxed);
+        }
+        if let Some(d) = &frame.input_delta {
+            self.stream_input_cols_updated.fetch_add(d.cols_updated, Ordering::Relaxed);
+            self.stream_input_cols_skipped.fetch_add(d.cols_skipped, Ordering::Relaxed);
+            if d.full_recompute {
+                self.stream_full_recomputes.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        if energy_pj > 0.0 && energy_pj.is_finite() {
+            self.stream_energy_fj
+                .fetch_add((energy_pj * 1000.0).round() as u64, Ordering::Relaxed);
+        }
     }
 
     pub fn requests(&self) -> u64 {
@@ -254,27 +322,91 @@ impl Metrics {
         h
     }
 
-    /// Latency quantile in milliseconds.
-    pub fn latency_ms(&self, q: f64) -> f64 {
-        let mut v = self.latencies_us.lock().unwrap().clone();
-        if v.is_empty() {
+    pub fn stream_frames(&self) -> u64 {
+        self.stream_frames.load(Ordering::Relaxed)
+    }
+
+    pub fn stream_schedule_reuses(&self) -> u64 {
+        self.stream_schedule_reuses.load(Ordering::Relaxed)
+    }
+
+    pub fn stream_input_cols_updated(&self) -> u64 {
+        self.stream_input_cols_updated.load(Ordering::Relaxed)
+    }
+
+    pub fn stream_input_cols_skipped(&self) -> u64 {
+        self.stream_input_cols_skipped.load(Ordering::Relaxed)
+    }
+
+    pub fn stream_full_recomputes(&self) -> u64 {
+        self.stream_full_recomputes.load(Ordering::Relaxed)
+    }
+
+    /// Fraction of considered layer-0 input columns the streaming path
+    /// carried over instead of re-driving.
+    pub fn stream_input_skip_ratio(&self) -> f64 {
+        let u = self.stream_input_cols_updated() as f64;
+        let s = self.stream_input_cols_skipped() as f64;
+        if u + s == 0.0 {
+            0.0
+        } else {
+            s / (u + s)
+        }
+    }
+
+    /// Mean measured/modeled energy per session frame (pJ).
+    pub fn stream_frame_energy_pj(&self) -> f64 {
+        let frames = self.stream_frames();
+        if frames == 0 {
             return 0.0;
         }
+        self.stream_energy_fj.load(Ordering::Relaxed) as f64 / 1000.0 / frames as f64
+    }
+
+    /// Sorted snapshot of the retained latency window (µs).
+    fn latency_snapshot_us(&self) -> Vec<u64> {
+        let mut v = self
+            .latencies_us
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .buf
+            .clone();
         v.sort_unstable();
-        let pos = (q.clamp(0.0, 1.0) * (v.len() - 1) as f64).round() as usize;
-        v[pos] as f64 / 1000.0
+        v
+    }
+
+    fn quantile_ms(sorted_us: &[u64], q: f64) -> f64 {
+        if sorted_us.is_empty() {
+            return 0.0;
+        }
+        let pos = (q.clamp(0.0, 1.0) * (sorted_us.len() - 1) as f64).round() as usize;
+        sorted_us[pos] as f64 / 1000.0
+    }
+
+    /// Latency quantile in milliseconds (over the retained window).
+    pub fn latency_ms(&self, q: f64) -> f64 {
+        Self::quantile_ms(&self.latency_snapshot_us(), q)
+    }
+
+    /// Several latency quantiles from ONE sorted snapshot — what
+    /// `summary()` uses so a snapshot costs one sort, not one per
+    /// quantile.
+    pub fn latency_quantiles_ms(&self, qs: &[f64]) -> Vec<f64> {
+        let sorted = self.latency_snapshot_us();
+        qs.iter().map(|&q| Self::quantile_ms(&sorted, q)).collect()
     }
 
     /// One-line summary for logs.
     pub fn summary(&self) -> String {
+        let lat = self.latency_quantiles_ms(&[0.5, 0.95]);
         let mut s = format!(
             "requests={} executions={} rows={} errors={} p50={:.2}ms p95={:.2}ms",
             self.requests(),
             self.executions(),
             self.rows(),
             self.errors(),
-            self.latency_ms(0.5),
-            self.latency_ms(0.95),
+            lat[0],
+            lat[1],
         );
         let e = self.energy_pj();
         if e > 0.0 {
@@ -308,6 +440,18 @@ impl Metrics {
                 self.delta_macs_saved(),
                 100.0 * self.delta_macs_saved() as f64 / dense as f64,
                 self.ordering_gain_pct(),
+            ));
+        }
+        if self.stream_frames() > 0 {
+            s.push_str(&format!(
+                " | stream: frames={} sched_reuse={} input_cols_skipped={} ({:.0}%) \
+                 full_recompute={} frame_pj={:.1}",
+                self.stream_frames(),
+                self.stream_schedule_reuses(),
+                self.stream_input_cols_skipped(),
+                100.0 * self.stream_input_skip_ratio(),
+                self.stream_full_recomputes(),
+                self.stream_frame_energy_pj(),
             ));
         }
         s
@@ -353,6 +497,89 @@ mod tests {
     fn empty_latency_is_zero() {
         let m = Metrics::new();
         assert_eq!(m.latency_ms(0.5), 0.0);
+        assert_eq!(m.latency_quantiles_ms(&[0.5, 0.95]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn latency_buffer_is_bounded_and_keeps_recent_samples() {
+        let m = Metrics::new();
+        // overfill the window: the first (slow) epoch must be evicted
+        for _ in 0..LATENCY_WINDOW {
+            m.record_request(Duration::from_millis(500));
+        }
+        for _ in 0..LATENCY_WINDOW {
+            m.record_request(Duration::from_millis(1));
+        }
+        assert_eq!(m.requests(), 2 * LATENCY_WINDOW as u64);
+        let held = m.latencies_us.lock().unwrap().buf.len();
+        assert_eq!(held, LATENCY_WINDOW, "ring must stay bounded");
+        // only the recent 1ms epoch remains in the window
+        assert!((m.latency_ms(0.5) - 1.0).abs() < 0.5);
+        assert!((m.latency_ms(0.99) - 1.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn quantiles_from_one_snapshot_match_per_call_quantiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i * 1000));
+        }
+        let qs = m.latency_quantiles_ms(&[0.5, 0.95]);
+        assert_eq!(qs[0], m.latency_ms(0.5));
+        assert_eq!(qs[1], m.latency_ms(0.95));
+    }
+
+    #[test]
+    fn stream_ledger_accumulates_and_shows_in_summary() {
+        use crate::backend::InputDeltaStats;
+        use crate::coordinator::engine::StreamFrameStats;
+        let m = Metrics::new();
+        assert!(!m.summary().contains("stream:"));
+        // cold frame: no reuse, no input delta
+        m.record_stream(
+            &StreamFrameStats { frame: 0, schedule_reused: false, input_delta: None },
+            20.0,
+        );
+        // warm frames: schedule replay + input-delta accounting
+        m.record_stream(
+            &StreamFrameStats {
+                frame: 1,
+                schedule_reused: true,
+                input_delta: Some(InputDeltaStats {
+                    cols_total: 64,
+                    cols_updated: 4,
+                    cols_skipped: 60,
+                    full_recompute: false,
+                    grid_rescaled: false,
+                }),
+            },
+            10.0,
+        );
+        m.record_stream(
+            &StreamFrameStats {
+                frame: 2,
+                schedule_reused: true,
+                input_delta: Some(InputDeltaStats {
+                    cols_total: 64,
+                    cols_updated: 64,
+                    cols_skipped: 0,
+                    full_recompute: true,
+                    grid_rescaled: true,
+                }),
+            },
+            18.0,
+        );
+        assert_eq!(m.stream_frames(), 3);
+        assert_eq!(m.stream_schedule_reuses(), 2);
+        assert_eq!(m.stream_input_cols_updated(), 68);
+        assert_eq!(m.stream_input_cols_skipped(), 60);
+        assert_eq!(m.stream_full_recomputes(), 1);
+        assert!((m.stream_input_skip_ratio() - 60.0 / 128.0).abs() < 1e-12);
+        assert!((m.stream_frame_energy_pj() - 16.0).abs() < 1e-9);
+        let snap = m.summary();
+        assert!(snap.contains("stream: frames=3"), "missing stream ledger: {snap}");
+        assert!(snap.contains("sched_reuse=2"), "{snap}");
+        assert!(snap.contains("input_cols_skipped=60"), "{snap}");
     }
 
     #[test]

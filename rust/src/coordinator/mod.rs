@@ -11,8 +11,12 @@
 //!   model otherwise).
 //! * [`request`] — the typed serving surface: [`InferenceRequest`]
 //!   builder (model id, sample count, chunking, stop rule, risk
-//!   profile, seed, backend selection) and typed responses; errors are
-//!   [`crate::error::McCimError`] values, never strings.
+//!   profile, seed, backend selection, streaming-session membership)
+//!   and typed responses (session frames echo a [`StreamFrameInfo`]);
+//!   errors are [`crate::error::McCimError`] values, never strings.
+//! * [`queue`] — the pool's work queue: a shared lane plus one pinned
+//!   lane per worker (session affinity), claimed-job requeue, and the
+//!   [`SessionRouter`] that pins streaming sessions to workers.
 //! * [`batcher`] — row-granularity dynamic batcher: packs MC iterations
 //!   and deterministic requests into full executable batches, plus the
 //!   chunk plans of the adaptive path.
@@ -24,22 +28,31 @@
 //!   (accept/abstain/escalate) on every response, and a shared sample
 //!   budget for graceful degradation. The legacy `Request`/`Response`
 //!   enums remain as shims.
-//! * [`metrics`] — throughput/latency counters, total request energy,
-//!   plus the adaptive ledger: samples used/saved, verdict counts,
-//!   abstention rate, and the samples-used histogram.
+//! * [`metrics`] — throughput/latency counters (bounded latency
+//!   window, one sort per snapshot), total request energy, the
+//!   adaptive ledger (samples used/saved, verdict counts, abstention
+//!   rate, samples-used histogram), and the streaming ledger (frames,
+//!   schedule reuses, input columns skipped, per-frame pJ).
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod queue;
 pub mod request;
 pub mod server;
 
 pub use batcher::{chunk_plan, RowBatcher};
-pub use engine::{DeltaScheduleConfig, EngineConfig, McDropoutEngine, McOutput, NetKind};
+pub use engine::{
+    DeltaScheduleConfig, EngineConfig, EngineSession, McDropoutEngine, McOutput, NetKind,
+    StreamFrameStats,
+};
 pub use metrics::Metrics;
+pub use queue::{SessionRouter, WorkQueue};
 pub use request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
+    StreamFrameInfo, StreamSession,
 };
 pub use server::{
-    serve_request, AdaptiveConfig, Coordinator, CoordinatorConfig, Request, Response,
+    serve_request, serve_stream_request, AdaptiveConfig, Coordinator, CoordinatorConfig,
+    Request, Response,
 };

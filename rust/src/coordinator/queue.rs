@@ -1,0 +1,316 @@
+//! The coordinator's work queue: a shared lane every worker steals
+//! from, plus one pinned lane per worker for jobs with worker affinity
+//! (streaming-session frames must reach the worker holding their
+//! session state).
+//!
+//! Built on a mutex + condvar instead of `mpsc` for three properties
+//! the serving loop needs and channels don't give:
+//!
+//! * **affinity**: `push_to(worker, job)` targets one worker's lane;
+//!   `pop(worker)` drains that lane before stealing shared work;
+//! * **requeue**: a worker that claimed an incompatible job during a
+//!   micro-batch drain can hand it back to the *front* of the shared
+//!   lane for any idle worker, instead of serving it serially after
+//!   its batch (the head-of-line-blocking fix);
+//! * **graceful close**: after [`WorkQueue::close`], workers finish
+//!   everything already queued (shared and pinned) before exiting.
+//!
+//! [`SessionRouter`] assigns sessions to workers round-robin on first
+//! sight and remembers the assignment (bounded, FIFO eviction) so
+//! every later frame of the session lands on the same lane.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+/// Multi-lane MPMC job queue (see module docs).
+pub struct WorkQueue<T> {
+    state: Mutex<QueueState<T>>,
+    cv: Condvar,
+}
+
+struct QueueState<T> {
+    shared: VecDeque<T>,
+    lanes: Vec<VecDeque<T>>,
+    closed: bool,
+}
+
+impl<T> WorkQueue<T> {
+    /// A queue with one pinned lane per worker.
+    pub fn new(workers: usize) -> Self {
+        WorkQueue {
+            state: Mutex::new(QueueState {
+                shared: VecDeque::new(),
+                lanes: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.lock().lanes.len()
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState<T>> {
+        self.state.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enqueue on the shared lane (any worker may take it). Returns
+    /// false — dropping the item — when the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut s = self.lock();
+        if s.closed {
+            return false;
+        }
+        s.shared.push_back(item);
+        drop(s);
+        self.cv.notify_one();
+        true
+    }
+
+    /// Enqueue on `worker`'s pinned lane (affinity dispatch). Returns
+    /// false when the queue is closed.
+    pub fn push_to(&self, worker: usize, item: T) -> bool {
+        let mut s = self.lock();
+        if s.closed {
+            return false;
+        }
+        let lane = worker % s.lanes.len();
+        s.lanes[lane].push_back(item);
+        drop(s);
+        // the pinned worker might be the one waiting — wake everyone,
+        // non-targets re-check and sleep again
+        self.cv.notify_all();
+        true
+    }
+
+    /// Hand a claimed-but-unwanted job back to the *front* of the
+    /// shared lane so any idle worker picks it up next (accepted even
+    /// while closing — a claimed job must not be lost on shutdown).
+    pub fn requeue(&self, item: T) {
+        let mut s = self.lock();
+        s.shared.push_front(item);
+        drop(s);
+        self.cv.notify_one();
+    }
+
+    /// Blocking pop for `worker`: pinned lane first, then the shared
+    /// lane. Returns None once the queue is closed *and* both lanes
+    /// this worker serves are drained.
+    pub fn pop(&self, worker: usize) -> Option<T> {
+        let mut s = self.lock();
+        let lane = worker % s.lanes.len();
+        loop {
+            if let Some(item) = s.lanes[lane].pop_front() {
+                return Some(item);
+            }
+            if let Some(item) = s.shared.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.cv.wait(s).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Non-blocking pop from the shared lane only (the micro-batch
+    /// drain: pinned jobs are never co-batched).
+    pub fn try_pop_shared(&self) -> Option<T> {
+        self.lock().shared.pop_front()
+    }
+
+    /// Close the queue: producers are refused, consumers drain what is
+    /// left and then observe `None`.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Jobs currently queued across all lanes.
+    pub fn len(&self) -> usize {
+        let s = self.lock();
+        s.shared.len() + s.lanes.iter().map(|l| l.len()).sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Maximum remembered session→worker assignments. Assignments are
+/// evicted least-recently-routed first — matching the workers' own
+/// LRU session tables, so an actively streaming session never loses
+/// its route to a flood of short-lived newcomers. A re-appearing
+/// evicted session is simply re-assigned.
+pub const SESSION_ROUTES_CAPACITY: usize = 4096;
+
+/// Pins streaming sessions to workers: first frame assigns the
+/// session round-robin, every later frame routes to the same worker.
+pub struct SessionRouter {
+    inner: Mutex<RouterState>,
+    workers: usize,
+}
+
+struct RouterState {
+    map: HashMap<String, usize>,
+    order: VecDeque<String>,
+    next: usize,
+    capacity: usize,
+}
+
+impl SessionRouter {
+    pub fn new(workers: usize) -> Self {
+        Self::with_capacity(workers, SESSION_ROUTES_CAPACITY)
+    }
+
+    pub fn with_capacity(workers: usize, capacity: usize) -> Self {
+        SessionRouter {
+            inner: Mutex::new(RouterState {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                next: 0,
+                capacity: capacity.max(1),
+            }),
+            workers: workers.max(1),
+        }
+    }
+
+    /// Worker index for `session`, assigning round-robin on first
+    /// sight. A hit refreshes the session's recency so eviction is
+    /// LRU, not insertion order.
+    pub fn route(&self, session: &str) -> usize {
+        let mut s = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if let Some(&w) = s.map.get(session) {
+            if let Some(pos) = s.order.iter().position(|id| id.as_str() == session) {
+                let id = s.order.remove(pos).expect("position just found");
+                s.order.push_back(id);
+            }
+            return w;
+        }
+        let w = s.next % self.workers;
+        s.next = s.next.wrapping_add(1);
+        s.map.insert(session.to_string(), w);
+        s.order.push_back(session.to_string());
+        while s.map.len() > s.capacity {
+            match s.order.pop_front() {
+                Some(old) => {
+                    s.map.remove(&old);
+                }
+                None => break,
+            }
+        }
+        w
+    }
+
+    /// Remembered assignments (tests / observability).
+    pub fn routes(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).map.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn pinned_lane_beats_shared_and_close_drains() {
+        let q = WorkQueue::new(2);
+        assert!(q.push(1));
+        assert!(q.push_to(0, 2));
+        assert!(q.push(3));
+        // worker 0 sees its pinned job first, then steals shared work
+        assert_eq!(q.pop(0), Some(2));
+        assert_eq!(q.pop(0), Some(1));
+        q.close();
+        assert!(!q.push(9), "closed queue refuses producers");
+        // queued work survives the close
+        assert_eq!(q.pop(1), Some(3));
+        assert_eq!(q.pop(1), None);
+        assert_eq!(q.pop(0), None);
+    }
+
+    #[test]
+    fn requeue_goes_to_the_front_of_the_shared_lane() {
+        let q = WorkQueue::new(1);
+        q.push(1);
+        q.push(2);
+        let claimed = q.try_pop_shared().unwrap();
+        assert_eq!(claimed, 1);
+        q.requeue(claimed);
+        // the requeued job is next again — no tail-of-queue demotion
+        assert_eq!(q.pop(0), Some(1));
+        assert_eq!(q.pop(0), Some(2));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumers_drain_everything() {
+        let q = Arc::new(WorkQueue::new(3));
+        let n_per = 200usize;
+        let producers: Vec<_> = (0..3)
+            .map(|p| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    for i in 0..n_per {
+                        q.push(p * n_per + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|w| {
+                let q = Arc::clone(&q);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = q.pop(w) {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..3 * n_per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn router_is_sticky_and_bounded() {
+        let r = SessionRouter::with_capacity(3, 4);
+        let a = r.route("a");
+        assert_eq!(r.route("a"), a, "assignments are sticky");
+        let b = r.route("b");
+        assert_ne!(a, b, "round-robin spreads fresh sessions");
+        for id in ["c", "d", "e", "f"] {
+            r.route(id);
+        }
+        assert!(r.routes() <= 4, "router memory is bounded");
+        // every route stays in range
+        for id in ["a", "b", "zzz"] {
+            assert!(r.route(id) < 3);
+        }
+    }
+
+    #[test]
+    fn router_eviction_is_lru_not_fifo() {
+        // 5 workers so a reassignment is observably different from a
+        // kept route (round-robin would hand out a fresh worker id)
+        let r = SessionRouter::with_capacity(5, 2);
+        assert_eq!(r.route("hot"), 0);
+        assert_eq!(r.route("b"), 1);
+        // an active stream keeps routing; newcomers must evict the
+        // stale "b", never the just-refreshed "hot"
+        assert_eq!(r.route("hot"), 0);
+        assert_eq!(r.route("c"), 2); // evicts "b"
+        assert_eq!(r.route("hot"), 0, "hot session must keep its worker");
+        // "b" was evicted: it gets a fresh round-robin assignment
+        assert_eq!(r.route("b"), 3);
+    }
+}

@@ -52,6 +52,27 @@ pub struct InferenceRequest {
     pub seed: Option<u64>,
     /// Backend override (None = the coordinator's default).
     pub backend: Option<BackendKind>,
+    /// Streaming-session membership: this request is frame `frame` of
+    /// session `id`. The coordinator pins all frames of a session to
+    /// one worker (that worker holds the session's compute state) and
+    /// serves them on the fixed-T streaming path — adaptive overrides
+    /// are rejected on session frames.
+    pub session: Option<StreamSession>,
+}
+
+/// Identifies one frame of a streaming inference session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamSession {
+    /// Caller-chosen session id; frames with the same id share state.
+    pub id: String,
+    /// 0-based frame index (observability only — frames are served in
+    /// arrival order; submit them in order, one at a time per session).
+    pub frame: u64,
+    /// Layer-0 input-delta tolerance: 0.0 = exact (session outputs
+    /// `to_bits`-identical to independent per-frame requests); > 0
+    /// trades exactness for energy on near-still input columns. Fixed
+    /// by the session's first frame.
+    pub epsilon: f32,
 }
 
 impl InferenceRequest {
@@ -67,6 +88,7 @@ impl InferenceRequest {
             risk_profile: None,
             seed: None,
             backend: None,
+            session: None,
         }
     }
 
@@ -120,6 +142,22 @@ impl InferenceRequest {
         self
     }
 
+    /// Mark this request as frame `frame` of streaming session `id`
+    /// (exact input-delta reuse, ε = 0; see [`StreamSession`]).
+    pub fn with_session(mut self, id: impl Into<String>, frame: u64) -> Self {
+        self.session = Some(StreamSession { id: id.into(), frame, epsilon: 0.0 });
+        self
+    }
+
+    /// Set the session's input-delta tolerance (must follow
+    /// [`Self::with_session`]; only the first frame's value sticks).
+    pub fn with_stream_epsilon(mut self, epsilon: f32) -> Self {
+        if let Some(s) = &mut self.session {
+            s.epsilon = epsilon.max(0.0);
+        }
+        self
+    }
+
     /// Whether any adaptive-serving knob is set on the request itself.
     pub fn has_adaptive_overrides(&self) -> bool {
         self.stop_rule.is_some()
@@ -129,10 +167,36 @@ impl InferenceRequest {
     }
 
     /// Whether this request carries no per-request overrides at all
-    /// (such requests are eligible for row micro-batching).
+    /// (such requests are eligible for row micro-batching). Session
+    /// frames are never plain — they are pinned to their worker.
     pub fn is_plain(&self) -> bool {
-        !self.has_adaptive_overrides() && self.seed.is_none() && self.backend.is_none()
+        !self.has_adaptive_overrides()
+            && self.seed.is_none()
+            && self.backend.is_none()
+            && self.session.is_none()
     }
+}
+
+/// Streaming-session echo on a response: which frame this was and how
+/// much of the previous frame's compute it reused.
+#[derive(Clone, Debug, Default)]
+pub struct StreamFrameInfo {
+    /// Session id the frame belongs to.
+    pub session: String,
+    /// Frame index as submitted by the client.
+    pub frame: u64,
+    /// The worker replayed the session's stored ordered schedule
+    /// (false on a session's first frame — or on a frame that found
+    /// its session state evicted and had to rebuild it).
+    pub schedule_reused: bool,
+    /// Layer-0 input columns re-driven this frame (measuring
+    /// backends; 0 when the backend keeps no session state).
+    pub input_cols_updated: u64,
+    /// Layer-0 input columns carried over from the previous frame.
+    pub input_cols_skipped: u64,
+    /// The frame diff was large enough that the cost model recomputed
+    /// layer 0 densely instead of applying deltas.
+    pub input_full_recompute: bool,
 }
 
 /// Classification response.
@@ -158,6 +222,8 @@ pub struct ClassifyResponse {
     pub samples_used: usize,
     /// Risk-policy verdict (always `Accept` on the fixed-T path).
     pub verdict: Verdict,
+    /// Set when this request was a streaming-session frame.
+    pub stream: Option<StreamFrameInfo>,
 }
 
 /// Pose-regression response.
@@ -174,6 +240,8 @@ pub struct PoseResponse {
     pub samples_used: usize,
     /// Risk-policy verdict (always `Accept` on the fixed-T path).
     pub verdict: Verdict,
+    /// Set when this request was a streaming-session frame.
+    pub stream: Option<StreamFrameInfo>,
 }
 
 /// A successful typed response.
@@ -216,6 +284,14 @@ impl InferenceResponse {
         match self {
             InferenceResponse::Class(c) => &c.model,
             InferenceResponse::Pose(p) => &p.model,
+        }
+    }
+
+    /// Streaming-session echo (None on non-session requests).
+    pub fn stream(&self) -> Option<&StreamFrameInfo> {
+        match self {
+            InferenceResponse::Class(c) => c.stream.as_ref(),
+            InferenceResponse::Pose(p) => p.stream.as_ref(),
         }
     }
 }
@@ -263,5 +339,25 @@ mod tests {
         let r = InferenceRequest::classify(vec![0.0; 4]).with_seed(1);
         assert!(!r.is_plain());
         assert!(!r.has_adaptive_overrides());
+    }
+
+    #[test]
+    fn session_frames_are_pinned_and_not_plain() {
+        let r = InferenceRequest::regress(vec![0.0; 8])
+            .with_session("drone-7", 3)
+            .with_stream_epsilon(0.05);
+        let s = r.session.as_ref().expect("session set");
+        assert_eq!(s.id, "drone-7");
+        assert_eq!(s.frame, 3);
+        assert!((s.epsilon - 0.05).abs() < 1e-9);
+        assert!(!r.is_plain(), "session frames must never micro-batch");
+        assert!(!r.has_adaptive_overrides());
+        // epsilon without a session is a no-op, and negatives clamp
+        let r = InferenceRequest::classify(vec![]).with_stream_epsilon(1.0);
+        assert!(r.session.is_none());
+        let r = InferenceRequest::classify(vec![])
+            .with_session("s", 0)
+            .with_stream_epsilon(-3.0);
+        assert_eq!(r.session.unwrap().epsilon, 0.0);
     }
 }

@@ -1,9 +1,26 @@
 //! Worker-pool serving loop.
 //!
 //! PJRT objects are not `Send` in this crate version, so each worker
-//! thread constructs its own backends + engines and pulls jobs from a
-//! shared queue (std mpsc behind a mutex — contention is negligible
-//! next to an execute). Responses travel over per-request channels.
+//! thread constructs its own backends + engines and pulls jobs from
+//! the pool's [`WorkQueue`]: a shared lane any worker steals from plus
+//! one pinned lane per worker for jobs with affinity. Responses travel
+//! over per-request channels.
+//!
+//! ## Streaming sessions
+//!
+//! A request carrying a [`super::request::StreamSession`] is one frame
+//! of a temporally correlated stream (the paper's drone-VO workload).
+//! The coordinator pins every frame of a session to one worker (the
+//! [`SessionRouter`] assigns round-robin on first sight), and that
+//! worker keeps the session's [`EngineSession`] — the ordered mask
+//! schedule plus the backend's product-sum state — in an LRU-bounded
+//! table. Frame 0 pays mask RNG and TSP ordering once; every later
+//! frame replays the stored schedule (priced as SRAM schedule reads)
+//! and, on the cim-sim backend, re-drives only the layer-0 input
+//! columns whose quantized code changed since the previous frame.
+//! Sessions always serve fixed-T; responses carry a
+//! [`StreamFrameInfo`] echo and the metrics snapshot grows a stream
+//! ledger (frames, schedule reuses, input columns skipped).
 //!
 //! ## Backends and models
 //!
@@ -36,10 +53,12 @@
 //! sample budget degrades the per-request ceiling gracefully under
 //! load.
 
-use super::engine::{DeltaScheduleConfig, McDropoutEngine};
+use super::engine::{DeltaScheduleConfig, EngineSession, McDropoutEngine};
 use super::metrics::Metrics;
+use super::queue::{SessionRouter, WorkQueue};
 use super::request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
+    StreamFrameInfo,
 };
 use crate::backend::{make_backend, BackendKind, BackendOptions};
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
@@ -58,7 +77,7 @@ use crate::workloads::Meta;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -239,7 +258,8 @@ impl Default for CoordinatorConfig {
 
 /// The running coordinator: router + worker pool.
 pub struct Coordinator {
-    tx: Option<Sender<Job>>,
+    queue: Arc<WorkQueue<Job>>,
+    router: Arc<SessionRouter>,
     workers: Vec<JoinHandle<()>>,
     pub metrics: Arc<Metrics>,
 }
@@ -259,34 +279,46 @@ impl Coordinator {
             cfg.schedule_cache = Some(Arc::new(ScheduleCache::new()));
         }
 
-        let (tx, rx) = channel::<Job>();
-        let rx = Arc::new(Mutex::new(rx));
+        let n = cfg.workers.max(1);
+        let queue = Arc::new(WorkQueue::new(n));
+        let router = Arc::new(SessionRouter::new(n));
         let metrics = Arc::new(Metrics::new());
         let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
-            let rx = Arc::clone(&rx);
+        for w in 0..n {
+            let queue = Arc::clone(&queue);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
             workers.push(std::thread::spawn(move || {
-                if let Err(e) = worker_loop(w, cfg, rx, metrics) {
+                if let Err(e) = worker_loop(w, cfg, queue, metrics) {
                     eprintln!("[worker {w}] fatal: {e:#}");
                 }
             }));
         }
-        Ok(Coordinator { tx: Some(tx), workers, metrics })
+        Ok(Coordinator { queue, router, workers, metrics })
+    }
+
+    /// Dispatch one job: session frames are pinned to their session's
+    /// worker (that worker holds the schedule + product-sum state);
+    /// everything else goes to the shared lane. A refused push (pool
+    /// shutting down) drops the job — its response channel reports
+    /// disconnection to the caller.
+    fn dispatch(&self, job: Job) {
+        match &job.request.session {
+            Some(s) => {
+                let worker = self.router.route(&s.id);
+                let _ = self.queue.push_to(worker, job);
+            }
+            None => {
+                let _ = self.queue.push(job);
+            }
+        }
     }
 
     /// Submit a typed request; returns the response receiver
     /// immediately.
     pub fn submit_request(&self, request: InferenceRequest) -> Receiver<InferenceResult> {
         let (rtx, rrx) = channel();
-        // Send failures mean the pool is shut down; the receiver will
-        // simply report disconnection to the caller.
-        let _ = self
-            .tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(Job { request, respond: Responder::Typed(rtx) });
+        self.dispatch(Job { request, respond: Responder::Typed(rtx) });
         rrx
     }
 
@@ -300,11 +332,7 @@ impl Coordinator {
     /// Submit a legacy request (shim over [`Self::submit_request`]).
     pub fn submit(&self, request: Request) -> Receiver<Response> {
         let (rtx, rrx) = channel();
-        let _ = self
-            .tx
-            .as_ref()
-            .expect("coordinator running")
-            .send(Job { request: request.into(), respond: Responder::Legacy(rtx) });
+        self.dispatch(Job { request: request.into(), respond: Responder::Legacy(rtx) });
         rrx
     }
 
@@ -315,21 +343,41 @@ impl Coordinator {
             .context("worker pool hung up")
     }
 
-    /// Graceful shutdown: close the queue and join workers.
+    /// Graceful shutdown: close the queue (already-queued jobs are
+    /// still served) and join workers.
     pub fn shutdown(mut self) {
-        self.tx.take();
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// Most streaming sessions one worker keeps alive; beyond this the
+/// least-recently-used session is evicted (its next frame rebuilds
+/// state from scratch and reports `schedule_reused: false`).
+pub const MAX_WORKER_SESSIONS: usize = 64;
+
+/// One live streaming session on a worker: the engine-level state plus
+/// the identity it was opened with (later frames must match it).
+struct WorkerSession {
+    model: String,
+    backend: BackendKind,
+    samples: usize,
+    session: EngineSession,
+    last_used: Instant,
+}
+
 /// Per-worker mutable state: lazily built engines keyed by (model,
-/// backend), per-model mask sources, and the (lazily created) PJRT
-/// runtime. `engines` is declared before `rt` so engines drop first.
+/// backend), mask sources keyed the same way — a request that
+/// overrides the backend must draw from its own engine's stream, not
+/// whichever backend's engine was built first — live streaming
+/// sessions, and the (lazily created) PJRT runtime. `engines` is
+/// declared before `rt` so engines drop first.
 struct WorkerState {
     engines: HashMap<(String, BackendKind), McDropoutEngine>,
-    srcs: HashMap<String, Box<dyn DropoutBitSource>>,
+    srcs: HashMap<(String, BackendKind), Box<dyn DropoutBitSource>>,
+    sessions: HashMap<String, WorkerSession>,
     rt: Option<Runtime>,
     worker_id: usize,
 }
@@ -401,9 +449,15 @@ fn ensure_engine(
             cache: cfg.schedule_cache.clone(),
         });
     }
-    if !state.srcs.contains_key(model) {
+    // one source per (model, backend): keyed like the engines, so a
+    // backend-override request draws from its own stream with its own
+    // engine's keep-probability — it neither consumes nor perturbs the
+    // default backend's mask sequence. The seed is a function of the
+    // model alone, so the same model produces the same stream on every
+    // backend.
+    if !state.srcs.contains_key(&key) {
         state.srcs.insert(
-            model.to_string(),
+            key.clone(),
             make_source(
                 cfg,
                 engine.mask_keep(),
@@ -424,7 +478,7 @@ fn microbatchable(r: &InferenceRequest) -> bool {
 fn worker_loop(
     worker_id: usize,
     cfg: CoordinatorConfig,
-    rx: Arc<Mutex<Receiver<Job>>>,
+    queue: Arc<WorkQueue<Job>>,
     metrics: Arc<Metrics>,
 ) -> Result<()> {
     let meta = Meta::load(&cfg.artifacts)?;
@@ -432,6 +486,7 @@ fn worker_loop(
     let mut state = WorkerState {
         engines: HashMap::new(),
         srcs: HashMap::new(),
+        sessions: HashMap::new(),
         rt: None,
         worker_id,
     };
@@ -453,59 +508,40 @@ fn worker_loop(
     let mnist_batch = mnist_engine.mc_batch();
 
     loop {
-        // take one job (blocking), then optionally drain compatible
-        // classification jobs to micro-batch into the same execution
-        let (job, extra) = {
-            let guard = rx.lock().unwrap();
-            let first = match guard.recv() {
-                Ok(j) => j,
-                Err(_) => return Ok(()), // queue closed
-            };
-            let mut extra = Vec::new();
-            if microbatch && microbatchable(&first.request) {
-                let mut budget = mnist_batch.saturating_sub(first.request.samples);
-                while budget > 0 {
-                    match guard.try_recv() {
-                        Ok(j) => {
-                            if microbatchable(&j.request) && j.request.samples <= budget {
-                                budget -= j.request.samples;
-                                extra.push(j);
-                            } else {
-                                // incompatible: handle it solo afterwards
-                                extra.push(j);
-                                break;
-                            }
-                        }
-                        Err(_) => break,
+        // take one job (pinned session frames first, then shared work;
+        // blocks until work arrives or the queue closes and drains)
+        let job = match queue.pop(worker_id) {
+            Some(j) => j,
+            None => return Ok(()),
+        };
+        let mut batch = vec![job];
+        if microbatch && microbatchable(&batch[0].request) {
+            // drain compatible classification jobs into one execution.
+            // An incompatible drained job goes BACK to the front of the
+            // shared lane — another (possibly idle) worker serves it
+            // now, instead of waiting behind this worker's batch.
+            let mut budget = mnist_batch.saturating_sub(batch[0].request.samples);
+            while budget > 0 {
+                match queue.try_pop_shared() {
+                    Some(j)
+                        if microbatchable(&j.request) && j.request.samples <= budget =>
+                    {
+                        budget -= j.request.samples;
+                        batch.push(j);
                     }
+                    Some(j) => {
+                        queue.requeue(j);
+                        break;
+                    }
+                    None => break,
                 }
             }
-            (first, extra)
-        };
-
-        let mut batchable = vec![job];
-        let mut solo = Vec::new();
-        let mut packed = batchable[0].request.samples;
-        for j in extra {
-            if microbatchable(&batchable[0].request)
-                && microbatchable(&j.request)
-                && packed + j.request.samples <= mnist_batch
-            {
-                packed += j.request.samples;
-                batchable.push(j);
-            } else {
-                solo.push(j);
-            }
         }
-
-        if batchable.len() > 1 {
-            microbatch_classify(&mut state, &cfg, batchable, &metrics);
+        if batch.len() > 1 {
+            microbatch_classify(&mut state, &cfg, batch, &metrics);
         } else {
-            let job = batchable.pop().unwrap();
+            let job = batch.pop().expect("batch holds the popped job");
             process_job(&mut state, &cfg, &registry, job, &metrics);
-        }
-        for j in solo {
-            process_job(&mut state, &cfg, &registry, j, &metrics);
         }
     }
 }
@@ -551,6 +587,9 @@ fn execute_job(
 ) -> InferenceResult {
     let kind = request.backend.unwrap_or(cfg.backend);
     ensure_engine(state, cfg, registry, &request.model, kind)?;
+    if request.session.is_some() {
+        return execute_session_frame(state, cfg, request, kind, metrics);
+    }
     let engine = state
         .engines
         .get(&(request.model.clone(), kind))
@@ -563,10 +602,97 @@ fn execute_job(
     } else {
         let src = state
             .srcs
-            .get_mut(&request.model)
+            .get_mut(&(request.model.clone(), kind))
             .expect("source created with engine");
         serve_request(engine, src.as_mut(), request, cfg.adaptive.as_ref(), metrics)
     }
+}
+
+/// One frame of a streaming session on this worker: resolve (or open)
+/// the session's engine state, then serve the frame on the fixed-T
+/// streaming path. The worker's session table is LRU-bounded — an
+/// evicted session's next frame transparently rebuilds state (and
+/// honestly reports `schedule_reused: false`).
+fn execute_session_frame(
+    state: &mut WorkerState,
+    cfg: &CoordinatorConfig,
+    request: &InferenceRequest,
+    kind: BackendKind,
+    metrics: &Metrics,
+) -> InferenceResult {
+    let stream = request.session.as_ref().expect("caller checked");
+    if request.has_adaptive_overrides() {
+        return Err(McCimError::InvalidRequest {
+            model: request.model.clone(),
+            kind: request.kind,
+            reason: "session frames serve on the fixed-T streaming path; adaptive \
+                     overrides are not supported"
+                .into(),
+        });
+    }
+    // split the borrows: engines (shared) vs sessions + srcs (mutable)
+    let WorkerState { engines, srcs, sessions, .. } = state;
+    let engine = engines
+        .get(&(request.model.clone(), kind))
+        .expect("engine ensured by execute_job");
+    if let Some(ws) = sessions.get(&stream.id) {
+        // frames of one session must keep their identity — the stored
+        // schedule and product-sums are only valid for it
+        if ws.model != request.model || ws.backend != kind || ws.samples != request.samples
+        {
+            return Err(McCimError::InvalidRequest {
+                model: request.model.clone(),
+                kind: request.kind,
+                reason: format!(
+                    "session '{}' was opened as (model {}, backend {}, {} samples); \
+                     frames cannot change it",
+                    stream.id,
+                    ws.model,
+                    ws.backend.label(),
+                    ws.samples
+                ),
+            });
+        }
+    } else {
+        if sessions.len() >= MAX_WORKER_SESSIONS {
+            // LRU eviction keeps worker memory bounded under many
+            // concurrent streams
+            if let Some(oldest) = sessions
+                .iter()
+                .min_by_key(|(_, ws)| ws.last_used)
+                .map(|(id, _)| id.clone())
+            {
+                sessions.remove(&oldest);
+            }
+        }
+        sessions.insert(
+            stream.id.clone(),
+            WorkerSession {
+                model: request.model.clone(),
+                backend: kind,
+                samples: request.samples,
+                session: engine.begin_session(stream.epsilon),
+                last_used: Instant::now(),
+            },
+        );
+    }
+    let ws = sessions.get_mut(&stream.id).expect("present or just inserted");
+    ws.last_used = Instant::now();
+    let result = if let Some(seed) = request.seed {
+        let mut src = make_source(cfg, engine.mask_keep(), seed);
+        serve_stream_request(engine, &mut ws.session, src.as_mut(), request, metrics)
+    } else {
+        let src = srcs
+            .get_mut(&(request.model.clone(), kind))
+            .expect("source created with engine");
+        serve_stream_request(engine, &mut ws.session, src.as_mut(), request, metrics)
+    };
+    // a session whose FIRST frame failed holds no state worth pinning;
+    // drop it so the id isn't bricked to the failed request's identity
+    if result.is_err() && ws.session.frames() == 0 {
+        sessions.remove(&stream.id);
+    }
+    result
 }
 
 fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
@@ -646,6 +772,98 @@ pub fn serve_request(
     }
 }
 
+/// Serve one streaming-session frame: the session twin of
+/// [`serve_request`]. The caller owns the [`EngineSession`] (the
+/// worker loop keeps one per live session, pinned to this worker) and
+/// must pass it back for every frame; `src` is only drawn from on the
+/// session's first frame. Always fixed-T — the frame executes exactly
+/// `request.samples` MC instances from the session's stored schedule.
+pub fn serve_stream_request(
+    engine: &McDropoutEngine,
+    session: &mut EngineSession,
+    src: &mut dyn DropoutBitSource,
+    request: &InferenceRequest,
+    metrics: &Metrics,
+) -> InferenceResult {
+    let stream = request.session.as_ref().ok_or_else(|| McCimError::InvalidRequest {
+        model: request.model.clone(),
+        kind: request.kind,
+        reason: "the streaming path needs a session id on the request".into(),
+    })?;
+    if request.model != engine.model_id() {
+        return Err(McCimError::InvalidRequest {
+            model: request.model.clone(),
+            kind: request.kind,
+            reason: format!(
+                "request routed to an engine for model '{}'",
+                engine.model_id()
+            ),
+        });
+    }
+    validate_request(
+        &request.model,
+        request.kind,
+        request.samples,
+        request.input.len(),
+        engine.dims()[0],
+    )?;
+    let out = engine
+        .infer_mc_stream(&request.input, request.samples, src, session)
+        .map_err(|e| exec_error(engine, request, e))?;
+    metrics.record_execution(out.samples.len());
+    if let Some(plan) = &out.plan {
+        metrics.record_plan(plan);
+    }
+    let fstats = out.stream.unwrap_or_default();
+    metrics.record_stream(&fstats, out.energy_pj);
+    let d = fstats.input_delta.unwrap_or_default();
+    let info = StreamFrameInfo {
+        session: stream.id.clone(),
+        frame: stream.frame,
+        schedule_reused: fstats.schedule_reused,
+        input_cols_updated: d.cols_updated,
+        input_cols_skipped: d.cols_skipped,
+        input_full_recompute: d.full_recompute,
+    };
+    match request.kind {
+        RequestKind::Classify => {
+            let mut ens = ClassEnsemble::new(engine.out_dim());
+            for s in &out.samples {
+                ens.add_logits(s);
+            }
+            Ok(InferenceResponse::Class(ClassifyResponse {
+                model: engine.model_id().to_string(),
+                prediction: ens.prediction(),
+                confidence: ens.confidence(),
+                calibrated_confidence: ens.confidence(),
+                entropy: ens.entropy(),
+                votes: ens.votes().to_vec(),
+                energy_pj: out.energy_pj,
+                energy_measured: out.energy_measured,
+                samples_used: out.samples.len(),
+                verdict: Verdict::Accept,
+                stream: Some(info),
+            }))
+        }
+        RequestKind::Regress => {
+            let mut ens = RegressionEnsemble::new(engine.out_dim());
+            for s in &out.samples {
+                ens.add_sample(s);
+            }
+            Ok(InferenceResponse::Pose(PoseResponse {
+                model: engine.model_id().to_string(),
+                mean: ens.mean(),
+                variance: ens.variance(),
+                energy_pj: out.energy_pj,
+                energy_measured: out.energy_measured,
+                samples_used: out.samples.len(),
+                verdict: Verdict::Accept,
+                stream: Some(info),
+            }))
+        }
+    }
+}
+
 /// Request validation shared by the solo and micro-batch paths: a
 /// malformed request gets one non-retryable typed error with one
 /// wording, wherever it lands.
@@ -720,6 +938,7 @@ fn classify_fixed(
         energy_measured: out.energy_measured,
         samples_used: out.samples.len(),
         verdict: Verdict::Accept,
+        stream: None,
     }))
 }
 
@@ -748,6 +967,7 @@ fn regress_fixed(
         energy_measured: out.energy_measured,
         samples_used: out.samples.len(),
         verdict: Verdict::Accept,
+        stream: None,
     }))
 }
 
@@ -866,6 +1086,7 @@ fn classify_adaptive(
         energy_measured,
         samples_used: used,
         verdict,
+        stream: None,
     }))
 }
 
@@ -949,6 +1170,7 @@ fn regress_adaptive(
         energy_measured,
         samples_used: used,
         verdict,
+        stream: None,
     }))
 }
 
@@ -965,7 +1187,10 @@ fn microbatch_classify(
         .engines
         .get(&("mnist".to_string(), cfg.backend))
         .expect("mnist engine built at worker start");
-    let src = state.srcs.get_mut("mnist").expect("mnist source");
+    let src = state
+        .srcs
+        .get_mut(&("mnist".to_string(), cfg.backend))
+        .expect("mnist source");
     let t0 = Instant::now();
     // malformed requests (zero samples, wrong input width) get the
     // same non-retryable typed error as the solo path and must not
@@ -1048,6 +1273,7 @@ fn microbatch_classify(
                     energy_measured: measured.is_some(),
                     samples_used: len,
                     verdict: Verdict::Accept,
+                    stream: None,
                 })));
             }
         }

@@ -157,9 +157,17 @@ pub struct ExecutionPlan {
     /// within this chunk (callers restore output order with this).
     pub order: Vec<usize>,
     /// Whether the masks were drawn online from the dropout-bit RNG
-    /// (false = precomputed schedule read back from the cache; priced
-    /// as SRAM schedule reads, §IV-B).
+    /// (false = precomputed schedule read back from the cache or a
+    /// streaming session's stored schedule; priced as SRAM schedule
+    /// reads, §IV-B).
     pub sampled: bool,
+    /// Streaming input-delta tolerance: on a session frame, a layer-0
+    /// input column whose dequantized value moved by at most `epsilon`
+    /// since the previous frame keeps its stale code instead of being
+    /// re-driven. `0.0` (the default) means exact: a column is updated
+    /// whenever its quantized code changed at all, and session outputs
+    /// are `to_bits`-identical to independent per-frame execution.
+    pub epsilon: f32,
     pub stats: PlanStats,
 }
 
@@ -226,7 +234,7 @@ impl PlanBuilder {
             prev = Some(cur.as_slice());
         }
         self.carry = Some(masks[*order.last().expect("chunk is non-empty")].clone());
-        ExecutionPlan { input: input.to_vec(), rows, order, sampled, stats }
+        ExecutionPlan { input: input.to_vec(), rows, order, sampled, epsilon: 0.0, stats }
     }
 
     /// TSP order for the chunk, anchored at the carry mask when one

@@ -12,5 +12,8 @@
 pub mod model;
 pub mod params;
 
-pub use model::{DeltaScheduleReport, EnergyBreakdown, EnergyModel, LayerWorkload, ModeConfig};
+pub use model::{
+    DeltaScheduleReport, EnergyBreakdown, EnergyModel, LayerWorkload, ModeConfig,
+    StreamingReport,
+};
 pub use params::EnergyParams;

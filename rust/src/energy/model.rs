@@ -143,6 +143,20 @@ pub struct DeltaScheduleReport {
     pub modeled_saving: f64,
 }
 
+/// Per-frame energy summary of a streaming session (see
+/// [`EnergyModel::streaming_report`]).
+#[derive(Clone, Copy, Debug)]
+pub struct StreamingReport {
+    /// Measured pJ of the session's cold first frame.
+    pub first_frame_pj: f64,
+    /// Mean measured pJ of the warm frames (== first when there are
+    /// none).
+    pub steady_frame_pj: f64,
+    /// `1 - steady / first`: the per-frame saving of staying in the
+    /// session instead of re-running frames independently.
+    pub steady_saving: f64,
+}
+
 /// The energy model.
 pub struct EnergyModel {
     pub params: EnergyParams,
@@ -342,6 +356,29 @@ impl EnergyModel {
         }
     }
 
+    /// Summarize the measured per-frame energy of a streaming session:
+    /// the cold first frame (RNG + full layer-0 build) vs the mean of
+    /// the warm frames (schedule reads + input deltas). The steady
+    /// saving is what cross-frame reuse banks per frame relative to
+    /// re-running every frame as an independent request, assuming the
+    /// independent frame costs what the cold frame cost — on a
+    /// temporally correlated stream that is the right baseline, since
+    /// every frame would pay the cold price without a session.
+    pub fn streaming_report(&self, frame_pjs: &[f64]) -> StreamingReport {
+        let first = frame_pjs.first().copied().unwrap_or(0.0);
+        let warm = &frame_pjs[frame_pjs.len().min(1)..];
+        let steady = if warm.is_empty() {
+            first
+        } else {
+            warm.iter().sum::<f64>() / warm.len() as f64
+        };
+        StreamingReport {
+            first_frame_pj: first,
+            steady_frame_pj: steady,
+            steady_saving: if first > 0.0 { 1.0 - steady / first } else { 0.0 },
+        }
+    }
+
     /// Effective ops-per-joule in TOPS/W: delivered dense-equivalent
     /// ops (each MF element = 2 one-bit-x-multibit products + 2 adds =
     /// 4 ops) over the energy spent.
@@ -524,6 +561,22 @@ mod tests {
         assert!((online.rng_fj - 100.0 * p.e_rng_bit_fj).abs() < 1e-9);
         assert!((offline.rng_fj - 100.0 * p.e_sched_read_bit_fj).abs() < 1e-9);
         assert!(offline.rng_fj < online.rng_fj, "schedule reads must beat RNG draws");
+    }
+
+    #[test]
+    fn streaming_report_prices_warm_frames_against_the_cold_one() {
+        let m = EnergyModel::paper_default();
+        let r = m.streaming_report(&[100.0, 40.0, 20.0, 30.0]);
+        assert!((r.first_frame_pj - 100.0).abs() < 1e-12);
+        assert!((r.steady_frame_pj - 30.0).abs() < 1e-12);
+        assert!((r.steady_saving - 0.7).abs() < 1e-12);
+        // degenerate inputs stay sane
+        let one = m.streaming_report(&[50.0]);
+        assert_eq!(one.steady_frame_pj, 50.0);
+        assert_eq!(one.steady_saving, 0.0);
+        let none = m.streaming_report(&[]);
+        assert_eq!(none.first_frame_pj, 0.0);
+        assert_eq!(none.steady_saving, 0.0);
     }
 
     #[test]

@@ -28,10 +28,10 @@
 //! | [`energy`] | §V | per-op energy parameters, the mode-matrix energy model, measured-vs-modeled delta-schedule reporting |
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
-//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro simulation (measured energy, native delta-plan sessions), fail-fast stub; dense-only backends lower plans to rows |
+//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro simulation (measured energy, native delta-plan sessions with cross-frame input deltas for streaming), fail-fast stub; dense-only backends lower plans to rows |
 //! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob, builtin catalogue from `meta.json` |
 //! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |
-//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool |
+//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool with affinity lanes, streaming VO sessions (`StreamSession` → per-worker `EngineSession`: schedule + product-sums persist across frames) |
 //! | [`uncertainty`] | — | sequential early-stopping samplers, calibration (ECE / temperature scaling), risk-aware policies, sample budgets |
 //! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
 //! | [`config`] | — | CLI/flag parsing and run configuration (no external deps) |

@@ -71,6 +71,7 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --reuse=true --ordering MODE
   vo:       --frames N --samples N --bits B --reuse=true --ordering MODE
+            --stream=true --epsilon E
   serve:    --workers N --requests N --samples N --bits B
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --chunk N --min-samples N --budget-rate SAMPLES_PER_SEC
@@ -93,7 +94,15 @@ delta-scheduled execution (see README 'Delta-scheduled MC execution'):
   --reuse=true            run MC rows as a delta schedule (§IV-A compute
                           reuse; bit-exact, measured savings on cim-sim)
   --ordering MODE         none | nn-2opt | exact          (default nn-2opt;
-                          §IV-B TSP sample ordering within each chunk)";
+                          §IV-B TSP sample ordering within each chunk)
+
+streaming VO sessions (see README 'Streaming inference sessions'):
+  --stream=true           serve the frame sequence as ONE session: the
+                          mask schedule + TSP tour are paid once, layer-0
+                          product-sums carry across frames (input deltas)
+  --epsilon E             input-delta tolerance; 0 (default) = bit-exact
+                          vs independent frames, >0 trades exactness for
+                          energy on near-still input columns";
 
 /// Parse the shared adaptive-serving flags into an [`AdaptiveConfig`]
 /// (None unless `--adaptive` is set).
@@ -344,6 +353,8 @@ fn cmd_vo(args: &Args) -> Result<()> {
     let meta = Meta::load(&dir)?;
     let frames = args.get_usize("frames", 10).map_err(|e| anyhow!(e))?;
     let samples = args.get_usize("samples", 30).map_err(|e| anyhow!(e))?;
+    let stream = args.get_bool("stream");
+    let epsilon = args.get_f64("epsilon", 0.0).map_err(|e| anyhow!(e))? as f32;
     let test = VoTest::load(&dir)?;
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
@@ -351,11 +362,24 @@ fn cmd_vo(args: &Args) -> Result<()> {
     let (reuse, ordering) = delta_from_args(args)?;
     apply_delta(&mut engine, reuse, ordering);
     println!("backend: {}", engine.backend_name());
+    if stream {
+        println!(
+            "streaming session: schedule + product-sums persist across frames (epsilon {epsilon})"
+        );
+    }
     let mut src = IdealBernoulli::new(engine.mask_keep(), 42);
+    let mut session = stream.then(|| engine.begin_session(epsilon));
+    let mut frame_pjs = Vec::new();
     let norm = PoseNorm::new(&meta);
     println!("frame  err[m]   sqrt(var)  pose(x,y,z)");
     for f in 0..frames.min(test.len()) {
-        let out = engine.infer_mc(&test.features[f], samples, &mut src)?;
+        let out = match session.as_mut() {
+            // streaming: one session carries schedule + compute state
+            // from frame to frame (the drone's correlated stream)
+            Some(sess) => engine.infer_mc_stream(&test.features[f], samples, &mut src, sess)?,
+            None => engine.infer_mc(&test.features[f], samples, &mut src)?,
+        };
+        frame_pjs.push(out.energy_pj);
         let mut ens = RegressionEnsemble::new(engine.out_dim());
         for s in &out.samples {
             ens.add_sample(s);
@@ -363,12 +387,27 @@ fn cmd_vo(args: &Args) -> Result<()> {
         let mean: Vec<f32> = ens.mean().iter().map(|&v| v as f32).collect();
         let err = norm.position_error_m(&mean, &test.poses[f]);
         let metric = norm.denormalize(&mean);
+        let reuse_note = match out.stream.as_ref().and_then(|s| s.input_delta.as_ref()) {
+            Some(d) if d.full_recompute => "  [input: full recompute]".to_string(),
+            Some(d) => format!("  [input cols: {} reused / {}]", d.cols_skipped, d.cols_total),
+            None => String::new(),
+        };
         println!(
-            "{f:5}  {err:7.3}  {:9.4}  ({:.2}, {:.2}, {:.2})",
+            "{f:5}  {err:7.3}  {:9.4}  ({:.2}, {:.2}, {:.2})  {:8.1} pJ{reuse_note}",
             ens.total_variance(3).sqrt(),
             metric[0],
             metric[1],
-            metric[2]
+            metric[2],
+            out.energy_pj,
+        );
+    }
+    if stream && frame_pjs.len() > 1 {
+        let r = EnergyModel::paper_default().streaming_report(&frame_pjs);
+        println!(
+            "stream: first frame {:.1} pJ, steady {:.1} pJ/frame ({:.0}% saved by staying in-session)",
+            r.first_frame_pj,
+            r.steady_frame_pj,
+            100.0 * r.steady_saving,
         );
     }
     Ok(())

@@ -8,11 +8,16 @@
 //!   for the Fig. 12 disorientation protocol on the serving path.
 //! * [`mnist`] — the character-recognition workload.
 //! * [`vo`] — the visual-odometry workload: front-end embedding, pose
-//!   de-normalization, trajectory error metrics.
+//!   de-normalization, trajectory error metrics, and the synthetic
+//!   correlated frame stream driving the streaming-session benches.
+//! * [`synthetic`] — artifact-free artifact writer: tiny deterministic
+//!   meta.json + weight files so the full coordinator pool (and CI)
+//!   can run without the python compile path.
 
 pub mod image;
 pub mod meta;
 pub mod mnist;
+pub mod synthetic;
 pub mod tensorfile;
 pub mod vo;
 

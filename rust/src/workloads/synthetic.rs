@@ -1,0 +1,119 @@
+//! Synthetic artifacts: a tiny, deterministic artifacts directory
+//! (meta.json + weight containers for the builtin models) written from
+//! pure Rust.
+//!
+//! The real artifacts come out of the python compile path
+//! (`make artifacts`) and are absent in CI and fresh checkouts. The
+//! coordinator pool, however, validates `meta.json` and eagerly builds
+//! its default engines at startup — so end-to-end pool behaviour
+//! (worker affinity, streaming sessions, backend overrides, queue
+//! semantics) was untestable without the toolchain. This module closes
+//! that gap: [`write_synthetic_artifacts`] produces a miniature but
+//! fully valid artifacts directory (builtin dims scaled down, weights
+//! from a seeded PCG32) that `CimSimBackend::load` and
+//! `Coordinator::start` consume exactly like the real thing. PJRT
+//! still needs real HLO artifacts; synthetic directories serve the
+//! cim-sim and stub backends.
+
+use super::meta::Meta;
+use super::tensorfile::{Tensor, TensorFile};
+use crate::util::testkit::f32_vec;
+use crate::util::Pcg32;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Dims of the synthetic builtin models — deliberately tiny so pool
+/// tests stay fast, but multi-layer so masks, delta schedules and
+/// streaming sessions all engage.
+pub const SYNTH_MNIST_DIMS: [usize; 3] = [16, 12, 10];
+pub const SYNTH_VO_DIMS: [usize; 3] = [12, 10, 6];
+pub const SYNTH_VO_THIN_DIMS: [usize; 3] = [12, 8, 6];
+
+/// MC batch of the synthetic meta (small, so multi-chunk requests are
+/// exercised at low cost).
+pub const SYNTH_MC_BATCH: usize = 10;
+
+fn write_weights(dir: &Path, file: &str, dims: &[usize], rng: &mut Pcg32) -> Result<()> {
+    let mut tf = TensorFile::default();
+    for l in 0..dims.len() - 1 {
+        let (fi, fo) = (dims[l], dims[l + 1]);
+        tf.insert(format!("w{}", l + 1), Tensor::f32(vec![fi, fo], f32_vec(rng, fi * fo, 1.0)));
+        tf.insert(format!("b{}", l + 1), Tensor::f32(vec![fo], f32_vec(rng, fo, 0.1)));
+        tf.insert(format!("s{}", l + 1), Tensor::f32(vec![fo], vec![0.25; fo]));
+    }
+    tf.save(dir.join(file))
+}
+
+fn dims_json(dims: &[usize]) -> String {
+    let inner: Vec<String> = dims.iter().map(|d| d.to_string()).collect();
+    format!("[{}]", inner.join(", "))
+}
+
+/// Write a complete synthetic artifacts directory (created if needed)
+/// and return its parsed [`Meta`]. Deterministic in `seed`.
+pub fn write_synthetic_artifacts(dir: impl AsRef<Path>, seed: u64) -> Result<Meta> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating synthetic artifacts dir {}", dir.display()))?;
+    let mut rng = Pcg32::seeded(seed);
+    write_weights(dir, "mnist_weights.bin", &SYNTH_MNIST_DIMS, &mut rng)?;
+    write_weights(dir, "vo_weights.bin", &SYNTH_VO_DIMS, &mut rng)?;
+    write_weights(dir, "vo_thin_weights.bin", &SYNTH_VO_THIN_DIMS, &mut rng)?;
+    let meta = format!(
+        r#"{{
+  "mc_batch": {mc}, "dropout_p": 0.5,
+  "mnist_mask_keep": 0.5, "vo_mask_keep": 0.8,
+  "mnist_dims": {mnist}, "vo_dims": {vo}, "vo_thin_dims": {thin},
+  "mnist_acc_det": 0.0, "mnist_acc_mc": 0.0, "vo_err": 0.0, "vo_thin_err": 0.0,
+  "pose_mean": [2.0, 2.0, 1.5, 0.0, 0.0, 0.0],
+  "pose_scale": [1.5, 1.5, 0.5, 0.7, 0.3, 0.2]
+}}"#,
+        mc = SYNTH_MC_BATCH,
+        mnist = dims_json(&SYNTH_MNIST_DIMS),
+        vo = dims_json(&SYNTH_VO_DIMS),
+        thin = dims_json(&SYNTH_VO_THIN_DIMS),
+    );
+    let path = dir.join("meta.json");
+    std::fs::write(&path, &meta).with_context(|| format!("writing {}", path.display()))?;
+    Meta::load(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::CimSimBackend;
+    use crate::model::ModelRegistry;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("mc-cim-synth-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn synthetic_artifacts_load_like_the_real_thing() {
+        let dir = tmp_dir("load");
+        let meta = write_synthetic_artifacts(&dir, 7).unwrap();
+        assert_eq!(meta.mc_batch, SYNTH_MC_BATCH);
+        assert_eq!(meta.mnist_dims, SYNTH_MNIST_DIMS.to_vec());
+        assert!((meta.vo_mask_keep - 0.8).abs() < 1e-12);
+        // the real backend loader consumes them directly
+        let registry = ModelRegistry::builtin(&meta);
+        for id in ["mnist", "vo", "vo-thin"] {
+            let spec = registry.get(id).unwrap();
+            let b = CimSimBackend::load(&dir, spec, 6).unwrap();
+            assert_eq!(b.bits(), 6);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn synthetic_artifacts_are_deterministic_in_the_seed() {
+        let (d1, d2) = (tmp_dir("det-a"), tmp_dir("det-b"));
+        write_synthetic_artifacts(&d1, 42).unwrap();
+        write_synthetic_artifacts(&d2, 42).unwrap();
+        let a = std::fs::read(d1.join("vo_weights.bin")).unwrap();
+        let b = std::fs::read(d2.join("vo_weights.bin")).unwrap();
+        assert_eq!(a, b);
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+}

@@ -1,6 +1,8 @@
-//! MCT1 tensor-container reader (counterpart of
+//! MCT1 tensor-container reader *and writer* (counterpart of
 //! `python/compile/io_utils.py`; the format is documented there and the
 //! cross-language round-trip is covered by `rust/tests/pipeline.rs`).
+//! The writer exists so tests and benches can synthesize tiny artifact
+//! directories (`workloads::synthetic`) without the python toolchain.
 
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -20,6 +22,20 @@ pub enum TensorData {
 }
 
 impl Tensor {
+    /// An f32 tensor (shape must cover `data`).
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let n: usize = if shape.is_empty() { 1 } else { shape.iter().product() };
+        assert_eq!(n, data.len(), "shape {shape:?} does not cover {} values", data.len());
+        Tensor { shape, data: TensorData::F32(data) }
+    }
+
+    /// An i32 tensor (shape must cover `data`).
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        let n: usize = if shape.is_empty() { 1 } else { shape.iter().product() };
+        assert_eq!(n, data.len(), "shape {shape:?} does not cover {} values", data.len());
+        Tensor { shape, data: TensorData::I32(data) }
+    }
+
     pub fn numel(&self) -> usize {
         self.shape.iter().product::<usize>().max(if self.shape.is_empty() { 1 } else { 0 })
     }
@@ -118,6 +134,56 @@ impl TensorFile {
     pub fn names(&self) -> &[String] {
         &self.order
     }
+
+    /// Insert (or replace) a tensor; first insertion fixes its
+    /// position in the container's order.
+    pub fn insert(&mut self, name: impl Into<String>, tensor: Tensor) {
+        let name = name.into();
+        if self.tensors.insert(name.clone(), tensor).is_none() {
+            self.order.push(name);
+        }
+    }
+
+    /// Serialize to the MCT1 byte layout (exactly what
+    /// `io_utils.save_tensors` writes; [`Self::parse`] round-trips it).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(b"MCT1");
+        b.extend_from_slice(&(self.order.len() as u32).to_le_bytes());
+        for name in &self.order {
+            let t = &self.tensors[name];
+            b.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            b.extend_from_slice(name.as_bytes());
+            match &t.data {
+                TensorData::F32(_) => b.push(0),
+                TensorData::I32(_) => b.push(1),
+            }
+            b.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                b.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        b.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        b.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        b
+    }
+
+    /// Write the container to disk.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing tensor file {}", path.display()))
+    }
 }
 
 #[cfg(test)]
@@ -178,5 +244,22 @@ mod tests {
         let tf = TensorFile::parse(&sample_bytes()).unwrap();
         let err = format!("{:#}", tf.get("zzz").unwrap_err());
         assert!(err.contains("zzz") && err.contains("a"));
+    }
+
+    #[test]
+    fn writer_matches_reference_layout_and_round_trips() {
+        let mut tf = TensorFile::default();
+        tf.insert("a", Tensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]));
+        tf.insert("y", Tensor::i32(vec![3], vec![7, 8, 9]));
+        // byte-for-byte what the python writer produces
+        assert_eq!(tf.to_bytes(), sample_bytes());
+        let back = TensorFile::parse(&tf.to_bytes()).unwrap();
+        assert_eq!(back.names(), &["a", "y"]);
+        assert_eq!(back.get("a").unwrap().f32s().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        // replacement keeps the original slot
+        tf.insert("a", Tensor::f32(vec![1], vec![5.0]));
+        let back = TensorFile::parse(&tf.to_bytes()).unwrap();
+        assert_eq!(back.names(), &["a", "y"]);
+        assert_eq!(back.get("a").unwrap().f32s().unwrap(), &[5.0]);
     }
 }

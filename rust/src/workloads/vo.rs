@@ -1,9 +1,13 @@
 //! The visual-odometry workload (§VI-B): scene-4 test trajectory,
-//! front-end embedding for arbitrary poses, pose de-normalization, and
-//! the trajectory error metrics of Fig. 13.
+//! front-end embedding for arbitrary poses, pose de-normalization, the
+//! trajectory error metrics of Fig. 13 — and the synthetic correlated
+//! frame stream ([`SyntheticVoStream`]) that drives the streaming-
+//! session benches without artifacts.
 
 use super::meta::Meta;
 use super::tensorfile::TensorFile;
+use crate::util::testkit::f32_vec;
+use crate::util::Pcg32;
 use anyhow::Result;
 use std::path::Path;
 
@@ -52,6 +56,18 @@ pub struct Frontend {
 }
 
 impl Frontend {
+    /// Artifact-free frontend with random Fourier weights (benches,
+    /// tests): same embedding family as the trained artifact, weights
+    /// drawn deterministically from `seed`.
+    pub fn synthetic(feat: usize, seed: u64) -> Self {
+        let mut rng = Pcg32::seeded(seed);
+        Frontend {
+            omega: f32_vec(&mut rng, 6 * feat, 1.5),
+            phi0: f32_vec(&mut rng, feat, std::f64::consts::PI),
+            feat,
+        }
+    }
+
     pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
         let tf = TensorFile::load(artifacts_dir.as_ref().join("vo_frontend.bin"))?;
         let o = tf.get("omega")?;
@@ -84,6 +100,56 @@ impl Frontend {
             }
         }
         out
+    }
+}
+
+/// Synthetic correlated VO frame stream: a smooth random-walk pose
+/// embedded through a fixed [`Frontend`], so consecutive frames are
+/// temporally correlated exactly like a drone's camera stream — the
+/// input statistics the streaming-session path (§IV applied across
+/// frames) is built for. Artifact-free and deterministic in the seed.
+pub struct SyntheticVoStream {
+    frontend: Frontend,
+    pose: Vec<f32>,
+    /// Per-frame pose step scale (0 = a perfectly still scene).
+    step: f32,
+    rng: Pcg32,
+}
+
+impl SyntheticVoStream {
+    /// A stream emitting `feat`-wide frames; `step` controls how far
+    /// the pose random-walks between frames (≈0.02–0.1 is drone-like).
+    pub fn new(feat: usize, seed: u64, step: f32) -> Self {
+        SyntheticVoStream {
+            frontend: Frontend::synthetic(feat, seed),
+            pose: vec![0.0; 6],
+            step,
+            rng: Pcg32::seeded(seed ^ 0x5eed_f00d),
+        }
+    }
+
+    /// Feature width of the emitted frames.
+    pub fn features(&self) -> usize {
+        self.frontend.features()
+    }
+
+    /// The current (normalized) pose driving the stream.
+    pub fn pose(&self) -> &[f32] {
+        &self.pose
+    }
+
+    /// Advance the pose one step and embed the next frame.
+    pub fn next_frame(&mut self) -> Vec<f32> {
+        let d = f32_vec(&mut self.rng, 6, self.step as f64);
+        for (p, dv) in self.pose.iter_mut().zip(d) {
+            *p = (*p + dv).clamp(-1.0, 1.0);
+        }
+        self.frontend.embed(&self.pose, None)
+    }
+
+    /// The next `n` frames.
+    pub fn frames(&mut self, n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|_| self.next_frame()).collect()
     }
 }
 
@@ -158,6 +224,27 @@ mod tests {
             &[0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
         );
         assert!((e - 1.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn synthetic_stream_is_correlated_and_deterministic() {
+        let mut a = SyntheticVoStream::new(16, 9, 0.05);
+        let mut b = SyntheticVoStream::new(16, 9, 0.05);
+        let fa = a.frames(5);
+        let fb = b.frames(5);
+        assert_eq!(fa, fb, "same seed, same stream");
+        assert_eq!(fa[0].len(), 16);
+        // consecutive frames are much closer than distant ones
+        let dist = |x: &[f32], y: &[f32]| -> f32 {
+            x.iter().zip(y).map(|(u, v)| (u - v).abs()).sum()
+        };
+        let near = dist(&fa[0], &fa[1]);
+        let mut c = SyntheticVoStream::new(16, 10, 0.05);
+        let far = dist(&fa[0], &c.next_frame());
+        assert!(near < far, "stream must be temporally correlated ({near} vs {far})");
+        // a zero step is a perfectly still scene
+        let mut s = SyntheticVoStream::new(8, 3, 0.0);
+        assert_eq!(s.next_frame(), s.next_frame());
     }
 
     #[test]

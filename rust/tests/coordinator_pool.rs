@@ -1,0 +1,271 @@
+//! Worker-pool behaviour end to end — on synthetic artifacts, so no
+//! PJRT and no python toolchain (`workloads::synthetic` writes a tiny
+//! but fully valid artifacts directory into a temp dir).
+//!
+//! Covers the coordinator-level guarantees PR-level unit tests can't:
+//!
+//! * per-request backend overrides draw from their own (model,
+//!   backend) mask stream — an override request neither consumes nor
+//!   perturbs the default backend's sequence (the `WorkerState.srcs`
+//!   keying regression);
+//! * streaming sessions have worker affinity: every frame of a
+//!   session reaches the worker holding its state, frames observe the
+//!   persisted schedule (`schedule_reused`), interleaved sessions
+//!   don't cross-contaminate, and session metrics appear in the
+//!   pool's snapshot;
+//! * session identity is enforced across frames.
+
+use mc_cim::backend::{BackendKind, CimSimBackend};
+use mc_cim::coordinator::{
+    serve_stream_request, Coordinator, CoordinatorConfig, DeltaScheduleConfig,
+    InferenceRequest, InferenceResponse, McDropoutEngine, Metrics, PoseResponse,
+};
+use mc_cim::error::McCimError;
+use mc_cim::model::ModelRegistry;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::f32_vec;
+use mc_cim::util::Pcg32;
+use mc_cim::workloads::synthetic::{write_synthetic_artifacts, SYNTH_MNIST_DIMS};
+use mc_cim::workloads::vo::SyntheticVoStream;
+use mc_cim::workloads::Meta;
+use std::path::PathBuf;
+
+const ARTIFACT_SEED: u64 = 11;
+
+fn pool_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mc-cim-pool-{tag}-{}", std::process::id()))
+}
+
+fn pool_config(dir: &std::path::Path, workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        workers,
+        backend: BackendKind::CimSim,
+        reuse: true,
+        ..Default::default()
+    }
+}
+
+fn image() -> Vec<f32> {
+    let mut rng = Pcg32::seeded(21);
+    f32_vec(&mut rng, SYNTH_MNIST_DIMS[0], 1.0)
+}
+
+fn classify_fingerprint(resp: InferenceResponse) -> (usize, Vec<usize>, u64) {
+    match resp {
+        InferenceResponse::Class(c) => (c.prediction, c.votes, c.confidence.to_bits()),
+        other => panic!("expected a classification, got {other:?}"),
+    }
+}
+
+#[test]
+fn backend_override_requests_use_their_own_mask_stream() {
+    let dir = pool_dir("srcs");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+
+    // run A: plain cim-sim classifications only
+    let coord = Coordinator::start(pool_config(&dir, 1)).unwrap();
+    let baseline: Vec<_> = (0..4)
+        .map(|_| {
+            classify_fingerprint(
+                coord
+                    .call_request(InferenceRequest::classify(image()).with_samples(6))
+                    .unwrap(),
+            )
+        })
+        .collect();
+    coord.shutdown();
+
+    // run B: identical plain requests, but stub-backend overrides
+    // interleaved between them. The overrides fail (stub refuses to
+    // execute) — the point is that they must draw their masks from
+    // the (mnist, stub) stream, leaving the (mnist, cim-sim) stream
+    // exactly where run A had it.
+    let coord = Coordinator::start(pool_config(&dir, 1)).unwrap();
+    let mut replayed = Vec::new();
+    for _ in 0..4 {
+        let err = coord
+            .call_request(
+                InferenceRequest::classify(image())
+                    .with_samples(6)
+                    .with_backend(BackendKind::Stub),
+            )
+            .unwrap_err();
+        assert!(matches!(err, McCimError::Execution { .. } | McCimError::Backend { .. }));
+        replayed.push(classify_fingerprint(
+            coord
+                .call_request(InferenceRequest::classify(image()).with_samples(6))
+                .unwrap(),
+        ));
+    }
+    coord.shutdown();
+    assert_eq!(
+        baseline, replayed,
+        "a backend-override request must not consume the default backend's mask stream"
+    );
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Reference VO engine built from the same synthetic artifacts the
+/// pool loads, configured exactly like a pool worker's (cim-sim,
+/// default bits, delta scheduling on).
+fn reference_vo_engine(dir: &std::path::Path) -> McDropoutEngine {
+    let meta = Meta::load(dir).unwrap();
+    let registry = ModelRegistry::builtin(&meta);
+    let spec = registry.get("vo").unwrap();
+    let backend = CimSimBackend::load(dir, spec, 6).unwrap();
+    let mut engine = McDropoutEngine::with_backend(
+        Box::new(backend),
+        spec,
+        None,
+        mc_cim::energy::ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    engine.set_delta_schedule(DeltaScheduleConfig {
+        reuse: true,
+        ordering: Default::default(),
+        cache: None,
+    });
+    engine
+}
+
+fn pose(resp: InferenceResponse) -> PoseResponse {
+    match resp {
+        InferenceResponse::Pose(p) => p,
+        other => panic!("expected a pose, got {other:?}"),
+    }
+}
+
+#[test]
+fn sessions_have_affinity_persist_state_and_do_not_cross_contaminate() {
+    let dir = pool_dir("sessions");
+    let meta = write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let in_dim = meta.vo_dims[0];
+    let frames_a = SyntheticVoStream::new(in_dim, 1, 0.05).frames(4);
+    let frames_b = SyntheticVoStream::new(in_dim, 2, 0.05).frames(4);
+    const SEED_A: u64 = 1001;
+    const SEED_B: u64 = 1002;
+    let samples = 12usize;
+
+    let coord = std::sync::Arc::new(Coordinator::start(pool_config(&dir, 2)).unwrap());
+    // drive both sessions AND unrelated classify noise from separate
+    // threads concurrently: frames of each session are submitted in
+    // order by their own thread, and affinity must still route every
+    // frame to the worker holding that session's state
+    let drive = |frames: Vec<Vec<f32>>, seed: u64, id: &'static str| {
+        let coord = std::sync::Arc::clone(&coord);
+        std::thread::spawn(move || -> Vec<PoseResponse> {
+            frames
+                .iter()
+                .enumerate()
+                .map(|(t, x)| {
+                    pose(
+                        coord
+                            .call_request(
+                                InferenceRequest::regress(x.clone())
+                                    .with_samples(samples)
+                                    .with_seed(seed)
+                                    .with_session(id, t as u64),
+                            )
+                            .unwrap(),
+                    )
+                })
+                .collect()
+        })
+    };
+    let ha = drive(frames_a.clone(), SEED_A, "session-a");
+    let hb = drive(frames_b.clone(), SEED_B, "session-b");
+    let noise = {
+        let coord = std::sync::Arc::clone(&coord);
+        std::thread::spawn(move || {
+            for _ in 0..6 {
+                coord
+                    .call_request(InferenceRequest::classify(image()).with_samples(4))
+                    .unwrap();
+            }
+        })
+    };
+    let got_a = ha.join().unwrap();
+    let got_b = hb.join().unwrap();
+    noise.join().unwrap();
+    // every frame after the first found its session's persisted state
+    for (t, (a, b)) in got_a.iter().zip(&got_b).enumerate() {
+        let ia = a.stream.as_ref().expect("session frames echo stream info");
+        let ib = b.stream.as_ref().expect("session frames echo stream info");
+        assert_eq!(ia.session, "session-a");
+        assert_eq!(ib.session, "session-b");
+        assert_eq!(
+            ia.schedule_reused,
+            t > 0,
+            "frame {t} of session-a missed its worker-affine state"
+        );
+        assert_eq!(ib.schedule_reused, t > 0);
+    }
+    assert_eq!(coord.metrics.stream_frames(), 8);
+    assert_eq!(coord.metrics.stream_schedule_reuses(), 6);
+    assert!(coord.metrics.summary().contains("stream: frames=8"));
+    std::sync::Arc::try_unwrap(coord)
+        .unwrap_or_else(|_| panic!("coordinator still shared after joins"))
+        .shutdown();
+
+    // replay session A solo against a reference engine: interleaving
+    // session B (and the noise) must not have perturbed it
+    let engine = reference_vo_engine(&dir);
+    let metrics = Metrics::new();
+    let mut sess = engine.begin_session(0.0);
+    for (t, x) in frames_a.iter().enumerate() {
+        let req = InferenceRequest::regress(x.clone())
+            .with_samples(samples)
+            .with_seed(SEED_A)
+            .with_session("session-a", t as u64);
+        let mut src = IdealBernoulli::new(engine.mask_keep(), SEED_A);
+        let want = pose(
+            serve_stream_request(&engine, &mut sess, &mut src, &req, &metrics).unwrap(),
+        );
+        assert_eq!(want.mean, got_a[t].mean, "frame {t}: session-a mean drifted");
+        assert_eq!(want.variance, got_a[t].variance, "frame {t}: variance drifted");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn session_identity_is_enforced_across_frames() {
+    let dir = pool_dir("identity");
+    let meta = write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let in_dim = meta.vo_dims[0];
+    let coord = Coordinator::start(pool_config(&dir, 2)).unwrap();
+    let x = vec![0.25f32; in_dim];
+    coord
+        .call_request(
+            InferenceRequest::regress(x.clone())
+                .with_samples(8)
+                .with_seed(5)
+                .with_session("fixed", 0),
+        )
+        .unwrap();
+    // a later frame must not change the session's sample count
+    let err = coord
+        .call_request(
+            InferenceRequest::regress(x.clone())
+                .with_samples(9)
+                .with_seed(5)
+                .with_session("fixed", 1),
+        )
+        .unwrap_err();
+    assert!(matches!(err, McCimError::InvalidRequest { .. }), "got: {err}");
+    // ...nor its adaptive mode: session frames are fixed-T only
+    let err = coord
+        .call_request(
+            InferenceRequest::regress(x)
+                .with_samples(8)
+                .with_seed(5)
+                .with_confidence(0.9)
+                .with_session("fixed", 2),
+        )
+        .unwrap_err();
+    assert!(matches!(err, McCimError::InvalidRequest { .. }), "got: {err}");
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

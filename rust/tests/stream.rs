@@ -1,0 +1,261 @@
+//! Streaming-session properties on the cim-sim backend — no PJRT, no
+//! artifacts.
+//!
+//! The load-bearing guarantee: with ε = 0, a session frame's outputs
+//! are `to_bits`-identical to executing the same frame (same masks) as
+//! an independent request — across frame boundaries, chunk boundaries,
+//! grid rescales, deeper-than-two-layer models, and the cost-model
+//! dense fallback. Everything the session saves must be visible only
+//! in the measured cost counters, never in the numerics.
+
+use mc_cim::backend::{CimSimBackend, LayerParams};
+use mc_cim::coordinator::{
+    serve_stream_request, DeltaScheduleConfig, InferenceRequest, McDropoutEngine, McOutput,
+    Metrics,
+};
+use mc_cim::dropout::plan::OrderingMode;
+use mc_cim::error::{McCimError, RequestKind};
+use mc_cim::model::ModelSpec;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::f32_vec;
+use mc_cim::util::Pcg32;
+use mc_cim::workloads::vo::SyntheticVoStream;
+
+const SEED: u64 = 99;
+
+fn random_layers(dims: &[usize], seed: u64) -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..dims.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (dims[l], dims[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.2; fo],
+            }
+        })
+        .collect()
+}
+
+/// Engine on a synthetic cim-sim model; `mc_batch` small enough that a
+/// 30-sample frame spans several chunks.
+fn engine(dims: &[usize], seed: u64, delta: bool) -> McDropoutEngine {
+    let mut spec = ModelSpec::synthetic("stream-test", dims.to_vec());
+    spec.mc_batch = 8;
+    let backend = CimSimBackend::from_params(&spec, random_layers(dims, seed), 6).unwrap();
+    let mut e = McDropoutEngine::with_backend(
+        Box::new(backend),
+        &spec,
+        Some(6),
+        mc_cim::energy::ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    if delta {
+        e.set_delta_schedule(DeltaScheduleConfig {
+            reuse: true,
+            ordering: OrderingMode::Nn2Opt,
+            cache: None,
+        });
+    }
+    e
+}
+
+fn assert_bits_equal(a: &McOutput, b: &McOutput, label: &str) {
+    assert_eq!(a.samples.len(), b.samples.len(), "{label}: sample count");
+    for (r, (ra, rb)) in a.samples.iter().zip(&b.samples).enumerate() {
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "{label}: row {r} out[{j}]");
+        }
+    }
+}
+
+/// Session frames vs per-frame independent requests, bit for bit. The
+/// independent path re-seeds per frame, so both sides run the exact
+/// same masks — any difference would be session state leaking.
+fn check_stream_exactness(dims: &[usize], samples: usize, frames: usize, step: f32) {
+    let dense = engine(dims, 5, false);
+    let streamed = engine(dims, 5, true);
+    let mut sess = streamed.begin_session(0.0);
+    let mut stream = SyntheticVoStream::new(dims[0], SEED, step);
+    for t in 0..frames {
+        let x = stream.next_frame();
+        let mut src = IdealBernoulli::new(dense.mask_keep(), SEED);
+        let d = dense.infer_mc(&x, samples, &mut src).unwrap();
+        let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+        let s = streamed.infer_mc_stream(&x, samples, &mut src, &mut sess).unwrap();
+        assert_bits_equal(&d, &s, &format!("frame {t} (dims {dims:?})"));
+        let fs = s.stream.expect("session frames carry stream stats");
+        assert_eq!(fs.frame, t as u64);
+        assert_eq!(fs.schedule_reused, t > 0);
+    }
+}
+
+#[test]
+fn session_frames_match_independent_requests_bit_for_bit() {
+    // two-layer (both reuse layers engaged), multi-chunk frames
+    check_stream_exactness(&[24, 20, 5], 30, 6, 0.05);
+}
+
+#[test]
+fn deeper_models_stay_exact_through_the_session() {
+    // three layers: the dense deeper-layer path must chain correctly
+    // off the session-maintained layers
+    check_stream_exactness(&[20, 16, 12, 4], 20, 4, 0.08);
+}
+
+#[test]
+fn large_frame_jumps_stay_exact_via_the_dense_fallback() {
+    // step so large that consecutive frames share almost nothing: the
+    // cost model should recompute, and numerics must not care
+    check_stream_exactness(&[24, 20, 5], 16, 4, 1.5);
+}
+
+#[test]
+fn still_scene_skips_every_input_column() {
+    let streamed = engine(&[24, 20, 5], 5, true);
+    let mut sess = streamed.begin_session(0.0);
+    let x = {
+        let mut rng = Pcg32::seeded(3);
+        f32_vec(&mut rng, 24, 1.0)
+    };
+    let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+    let first = streamed.infer_mc_stream(&x, 12, &mut src, &mut sess).unwrap();
+    let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+    let second = streamed.infer_mc_stream(&x, 12, &mut src, &mut sess).unwrap();
+    // identical input, identical schedule => identical outputs...
+    assert_bits_equal(&first, &second, "still scene");
+    // ...and the warm frame re-drives nothing at all
+    let d = second.stream.unwrap().input_delta.expect("warm frames report input delta");
+    assert_eq!(d.cols_updated, 0);
+    assert_eq!(d.cols_skipped, d.cols_total);
+    assert!(!d.full_recompute);
+    assert!(
+        second.energy_pj < first.energy_pj,
+        "a still frame must be far cheaper than the cold one ({} vs {})",
+        second.energy_pj,
+        first.energy_pj
+    );
+}
+
+#[test]
+fn sign_flipped_input_triggers_the_full_recompute_fallback() {
+    let streamed = engine(&[31, 16, 4], 5, true);
+    let mut sess = streamed.begin_session(0.0);
+    let x: Vec<f32> = {
+        let mut rng = Pcg32::seeded(8);
+        f32_vec(&mut rng, 31, 1.0).iter().map(|v| v.abs() + 0.05).collect()
+    };
+    let flipped: Vec<f32> = x.iter().map(|v| -v).collect();
+    let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+    streamed.infer_mc_stream(&x, 10, &mut src, &mut sess).unwrap();
+    // every code flips sign: two delta passes would cost ~2x a dense
+    // rebuild, so the cost model must recompute — and stay exact
+    let dense = engine(&[31, 16, 4], 5, false);
+    let mut src = IdealBernoulli::new(dense.mask_keep(), SEED);
+    let want = dense.infer_mc(&flipped, 10, &mut src).unwrap();
+    let mut src = IdealBernoulli::new(streamed.mask_keep(), SEED);
+    let got = streamed.infer_mc_stream(&flipped, 10, &mut src, &mut sess).unwrap();
+    assert_bits_equal(&want, &got, "sign-flipped frame");
+    let d = got.stream.unwrap().input_delta.unwrap();
+    assert!(d.full_recompute, "total frame diff must take the dense fallback: {d:?}");
+}
+
+#[test]
+fn epsilon_trades_exactness_for_fewer_updates() {
+    let dims = [24, 20, 5];
+    let exact = engine(&dims, 5, true);
+    let approx = engine(&dims, 5, true);
+    let mut sess_exact = exact.begin_session(0.0);
+    let mut sess_approx = approx.begin_session(0.25);
+    let mut stream = SyntheticVoStream::new(dims[0], SEED, 0.03);
+    let (mut upd_exact, mut upd_approx) = (0u64, 0u64);
+    for _ in 0..6 {
+        let x = stream.next_frame();
+        let mut src = IdealBernoulli::new(exact.mask_keep(), SEED);
+        let a = exact.infer_mc_stream(&x, 12, &mut src, &mut sess_exact).unwrap();
+        let mut src = IdealBernoulli::new(approx.mask_keep(), SEED);
+        let b = approx.infer_mc_stream(&x, 12, &mut src, &mut sess_approx).unwrap();
+        if let Some(d) = a.stream.unwrap().input_delta {
+            upd_exact += d.cols_updated;
+        }
+        if let Some(d) = b.stream.unwrap().input_delta {
+            upd_approx += d.cols_updated;
+        }
+        // outputs stay finite and shaped even when approximate
+        assert!(b.samples.iter().all(|r| r.iter().all(|v| v.is_finite())));
+    }
+    assert!(
+        upd_approx <= upd_exact,
+        "a loose epsilon must never re-drive more columns ({upd_approx} vs {upd_exact})"
+    );
+}
+
+#[test]
+fn interleaved_sessions_do_not_cross_contaminate() {
+    let shared = engine(&[24, 20, 5], 5, true);
+    let solo = engine(&[24, 20, 5], 5, true);
+    let mut stream_a = SyntheticVoStream::new(24, 1, 0.05);
+    let mut stream_b = SyntheticVoStream::new(24, 2, 0.05);
+    let frames_a = stream_a.frames(4);
+    let frames_b = stream_b.frames(4);
+    // solo run of session A on its own engine
+    let mut sess_ref = solo.begin_session(0.0);
+    let reference: Vec<McOutput> = frames_a
+        .iter()
+        .map(|x| {
+            let mut src = IdealBernoulli::new(solo.mask_keep(), SEED);
+            solo.infer_mc_stream(x, 10, &mut src, &mut sess_ref).unwrap()
+        })
+        .collect();
+    // interleaved A/B on one engine, two session handles
+    let mut sess_a = shared.begin_session(0.0);
+    let mut sess_b = shared.begin_session(0.0);
+    for (t, (xa, xb)) in frames_a.iter().zip(&frames_b).enumerate() {
+        let mut src = IdealBernoulli::new(shared.mask_keep(), SEED);
+        let a = shared.infer_mc_stream(xa, 10, &mut src, &mut sess_a).unwrap();
+        let mut src = IdealBernoulli::new(shared.mask_keep(), SEED + 1);
+        let _b = shared.infer_mc_stream(xb, 10, &mut src, &mut sess_b).unwrap();
+        assert_bits_equal(&reference[t], &a, &format!("interleaved frame {t}"));
+    }
+}
+
+#[test]
+fn sessions_reject_changing_sample_counts() {
+    let e = engine(&[24, 20, 5], 5, true);
+    let mut sess = e.begin_session(0.0);
+    let x = vec![0.25f32; 24];
+    let mut src = IdealBernoulli::new(e.mask_keep(), SEED);
+    e.infer_mc_stream(&x, 10, &mut src, &mut sess).unwrap();
+    let err = e.infer_mc_stream(&x, 12, &mut src, &mut sess).unwrap_err();
+    assert!(err.to_string().contains("sample count"), "got: {err}");
+}
+
+#[test]
+fn serve_stream_request_echoes_frame_info_and_records_metrics() {
+    let e = engine(&[24, 20, 5], 5, true);
+    let metrics = Metrics::new();
+    let mut sess = e.begin_session(0.0);
+    let mut stream = SyntheticVoStream::new(24, 4, 0.05);
+    for t in 0..3u64 {
+        let req =
+            InferenceRequest::new("stream-test", RequestKind::Regress, stream.next_frame())
+                .with_samples(10)
+                .with_session("drone-1", t);
+        let mut src = IdealBernoulli::new(e.mask_keep(), SEED);
+        let resp = serve_stream_request(&e, &mut sess, &mut src, &req, &metrics).unwrap();
+        let info = resp.stream().expect("frame echo");
+        assert_eq!(info.session, "drone-1");
+        assert_eq!(info.frame, t);
+        assert_eq!(info.schedule_reused, t > 0);
+        assert!(resp.energy_measured());
+    }
+    assert_eq!(metrics.stream_frames(), 3);
+    assert_eq!(metrics.stream_schedule_reuses(), 2);
+    assert!(metrics.summary().contains("stream: frames=3"));
+    // a session request without a session id is a typed error
+    let req = InferenceRequest::new("stream-test", RequestKind::Regress, vec![0.0; 24]);
+    let err =
+        serve_stream_request(&e, &mut sess, &mut IdealBernoulli::new(0.5, 1), &req, &metrics)
+            .unwrap_err();
+    assert!(matches!(err, McCimError::InvalidRequest { .. }));
+}
