@@ -1,16 +1,33 @@
 //! CIM macro-simulation backend: the MF-MLP forward pass executed on
-//! the bit-exact 16×31 macro, with measured energy.
+//! a grid of bit-exact 16×31 macros, with measured energy.
 //!
-//! Each FC layer tiles onto [`CimMacro`] calls: activations are
+//! Each FC layer tiles onto [`CimMacro`](crate::cim::macro_sim::CimMacro)
+//! calls: activations are
 //! quantized per layer on the shared mid-tread grid (one delta per
 //! layer, like the xADC full-scale calibration), weight matrices are
 //! quantized once at load, and every 31-column × ≤16-row tile runs
-//! through the macro — bitplane schedule, sign-gated column drives,
+//! through a macro — bitplane schedule, sign-gated column drives,
 //! SAR conversions and all. Because the SAR search is exact over the
 //! plane-sum alphabet, the result equals the ideal
 //! [`BitplaneSchedule::evaluate`](crate::operator::bitplane::BitplaneSchedule::evaluate)
 //! bit for bit (`rust/tests/backend.rs` enforces this across the whole
 //! tiled pipeline).
+//!
+//! **The macro grid.** The chip is a [`MacroGrid`]: `M` independent
+//! macros with the model's weight tiles placed **weight-stationary**
+//! (each resident tile's bitplanes stored once, at placement time —
+//! loads priced once, reloads priced only when a model spills the
+//! grid's capacity). A multi-row `execute_rows` call fans independent
+//! MC rows across the grid ([`TileScheduler`]); single-row and delta
+//! paths fan a layer's tile calls instead. Per-tile results are merged
+//! in deterministic tile-index order, so outputs are `to_bits`-equal
+//! to the single-macro substrate for every `M`, strategy, and thread
+//! interleaving (`rust/tests/grid.rs`). Each call additionally reports
+//! [`GridExecStats`](crate::cim::grid::GridExecStats) (busy/span
+//! cycles, utilization, reloads), and
+//! [`ExecutionBackend::chip_report`] prices the whole grid: per-macro
+//! dynamic pJ, one-time weight loads, spill reloads, idle-macro LSTP
+//! leakage.
 //!
 //! **Quantization contract** (mirrored by the bit-exactness test):
 //! per-layer shared-delta mid-tread grids for both operands at the
@@ -64,15 +81,21 @@
 //! returned energy is priced from the measured counters
 //! ([`EnergyModel::measured_energy`]), so a request's `energy_pj`
 //! reflects what this input, these masks, actually cost.
+//!
+//! **Threading note.** One backend instance is driven by one engine
+//! (one worker thread); the only concurrency is the backend's *own*
+//! scoped fan-out, which joins before the call returns. The per-call
+//! grid snapshots rely on that.
 
 use super::{
-    BackendCaps, ExecOutput, ExecutionBackend, ExecutionPlan, InputDeltaStats, PlanRow,
-    PlanState, Row,
+    BackendCaps, ExecOutput, ExecutionBackend, ExecutionPlan, GridConfig, InputDeltaStats,
+    PlanRow, PlanState, Row,
 };
-use crate::cim::macro_sim::{CimMacro, MacroRunStats};
+use crate::cim::grid::{LayerTiles, MacroGrid, TileScheduler};
+use crate::cim::macro_sim::MacroRunStats;
 use crate::cim::xadc::AdcKind;
 use crate::dropout::mask::DropoutMask;
-use crate::energy::EnergyModel;
+use crate::energy::{ChipEnergyReport, EnergyModel};
 use crate::error::McCimError;
 use crate::model::ModelSpec;
 use crate::operator::bitplane::{BitplaneSchedule, OperatorKind};
@@ -81,7 +104,6 @@ use crate::workloads::TensorFile;
 use crate::{MACRO_COLS, MACRO_ROWS};
 use anyhow::{ensure, Result};
 use std::path::Path;
-use std::sync::Mutex;
 
 /// Raw parameters of one FC layer (`w` row-major `[fi, fo]`).
 #[derive(Clone, Debug)]
@@ -91,16 +113,34 @@ pub struct LayerParams {
     pub s: Vec<f32>,
 }
 
-/// One layer prepared for the macro: weight columns pre-quantized and
-/// pre-sliced into 31-wide tiles.
+/// One layer's digital-side parameters; the quantized weight tiles
+/// themselves live stationary on the [`MacroGrid`].
 struct QuantLayer {
     fi: usize,
     fo: usize,
-    /// `tiles[col_block][out_neuron]` — 31 codes (zero-padded past fi).
-    tiles: Vec<Vec<QuantTensor>>,
+    /// Shared grid step of the layer's weight matrix (the tiles carry
+    /// it too; kept here for shift-add scale derivation).
+    w_delta: f32,
     b: Vec<f32>,
     s: Vec<f32>,
 }
+
+impl QuantLayer {
+    fn col_blocks(&self) -> usize {
+        self.fi.div_ceil(MACRO_COLS)
+    }
+
+    fn row_blocks(&self) -> usize {
+        self.fo.div_ceil(MACRO_ROWS)
+    }
+}
+
+/// Minimum tile jobs *per grid macro* before a call fans out across
+/// scoped threads. One tile call is only a few µs of macro work —
+/// comparable to a thread spawn — so tiny batches (a warm stream
+/// frame's few delta columns, a small layer's couple of tiles) run
+/// inline instead of paying spawn/join per call.
+const FAN_MIN_JOBS_PER_MACRO: usize = 2;
 
 /// The macro-simulation substrate.
 pub struct CimSimBackend {
@@ -111,15 +151,30 @@ pub struct CimSimBackend {
     /// The graph's baked inverted-dropout scale `1/(1-p)`.
     inv_keep: f32,
     layers: Vec<QuantLayer>,
-    /// One macro instance reused across calls (interior mutability: the
-    /// array holds mutable bitcell state while a tile executes).
-    mac: Mutex<CimMacro>,
+    /// The simulated chip: `M` concurrent macros holding the model's
+    /// weight tiles stationary.
+    grid: MacroGrid,
+    /// Fans rows / tile calls across the grid, order-preserving.
+    sched: TileScheduler,
     energy: EnergyModel,
 }
 
 impl CimSimBackend {
-    /// Build from in-memory layer parameters (tests, synthetic models).
+    /// Build from in-memory layer parameters on a single-macro grid
+    /// (tests, synthetic models, the legacy substrate).
     pub fn from_params(spec: &ModelSpec, layers: Vec<LayerParams>, bits: u8) -> Result<Self> {
+        Self::from_params_grid(spec, layers, bits, GridConfig::default())
+    }
+
+    /// Build from in-memory layer parameters on a configured macro
+    /// grid: weights are quantized once, sliced into 31×16 tiles, and
+    /// placed weight-stationary across the grid's macros.
+    pub fn from_params_grid(
+        spec: &ModelSpec,
+        layers: Vec<LayerParams>,
+        bits: u8,
+        grid_cfg: GridConfig,
+    ) -> Result<Self> {
         ensure!(spec.dims.len() >= 2, "model needs at least two dims");
         ensure!(
             layers.len() == spec.n_layers(),
@@ -129,6 +184,7 @@ impl CimSimBackend {
         );
         let quant = Quantizer::new(bits);
         let mut prepared = Vec::with_capacity(layers.len());
+        let mut tile_sets = Vec::with_capacity(layers.len());
         for (l, lp) in layers.into_iter().enumerate() {
             let (fi, fo) = (spec.dims[l], spec.dims[l + 1]);
             ensure!(lp.w.len() == fi * fo, "layer {l}: weight matrix must be {fi}x{fo}");
@@ -150,8 +206,11 @@ impl CimSimBackend {
                 }
                 tiles.push(rows);
             }
-            prepared.push(QuantLayer { fi, fo, tiles, b: lp.b, s: lp.s });
+            tile_sets.push(LayerTiles { fo, tiles });
+            prepared.push(QuantLayer { fi, fo, w_delta: wq.delta, b: lp.b, s: lp.s });
         }
+        let grid = MacroGrid::place(&grid_cfg, &tile_sets);
+        let sched = TileScheduler::new(grid.macros());
         Ok(CimSimBackend {
             model: spec.id.clone(),
             dims: spec.dims.clone(),
@@ -159,13 +218,25 @@ impl CimSimBackend {
             quant,
             inv_keep: (1.0 / (1.0 - spec.dropout_p)) as f32,
             layers: prepared,
-            mac: Mutex::new(CimMacro::paper_default()),
+            grid,
+            sched,
             energy: EnergyModel::paper_default(),
         })
     }
 
-    /// Load weights from the artifacts directory (no PJRT involved).
+    /// Load weights from the artifacts directory (no PJRT involved)
+    /// onto a single-macro grid.
     pub fn load(artifacts: impl AsRef<Path>, spec: &ModelSpec, bits: u8) -> Result<Self> {
+        Self::load_with_grid(artifacts, spec, bits, GridConfig::default())
+    }
+
+    /// [`Self::load`] onto a configured macro grid.
+    pub fn load_with_grid(
+        artifacts: impl AsRef<Path>,
+        spec: &ModelSpec,
+        bits: u8,
+        grid_cfg: GridConfig,
+    ) -> Result<Self> {
         let tf = TensorFile::load(artifacts.as_ref().join(&spec.weights))?;
         let mut layers = Vec::with_capacity(spec.n_layers());
         for i in 0..spec.n_layers() {
@@ -175,11 +246,16 @@ impl CimSimBackend {
                 s: tf.get(&format!("s{}", i + 1))?.f32s()?.to_vec(),
             });
         }
-        Self::from_params(spec, layers, bits)
+        Self::from_params_grid(spec, layers, bits, grid_cfg)
     }
 
     pub fn bits(&self) -> u8 {
         self.bits
+    }
+
+    /// The simulated chip.
+    pub fn grid(&self) -> &MacroGrid {
+        &self.grid
     }
 
     fn mask_dims(&self) -> Vec<usize> {
@@ -188,16 +264,6 @@ impl CimSimBackend {
 
     fn err(&self, reason: String) -> McCimError {
         McCimError::Backend { backend: "cim-sim".into(), model: self.model.clone(), reason }
-    }
-
-    /// Merge cost counters, deliberately dropping the per-conversion
-    /// `plane_sums` trace (it would grow by one entry per conversion —
-    /// tens of thousands per MNIST row).
-    fn merge_counts(dst: &mut MacroRunStats, st: &MacroRunStats) {
-        dst.compute_cycles += st.compute_cycles;
-        dst.driven_col_cycles += st.driven_col_cycles;
-        dst.adc_conversions += st.adc_conversions;
-        dst.adc_cycles += st.adc_cycles;
     }
 
     /// Quantize one layer's input: the network input on its own
@@ -213,34 +279,59 @@ impl CimSimBackend {
     }
 
     /// The tiled macro pass of one layer: every 31-column × ≤16-row
-    /// tile through `correlate`, gated rows skipped, partial sums
-    /// accumulated in block order.
+    /// tile through the grid, gated rows skipped, partial sums folded
+    /// in (col-block, row-block) order — the same float accumulation
+    /// order as the single-macro loop, so outputs never depend on `M`.
+    /// `fan` spreads the tile calls across grid macros via the
+    /// scheduler (off inside an outer row-level fan, to keep one level
+    /// of threading).
     fn layer_matvec(
         &self,
-        mac: &mut CimMacro,
-        layer: &QuantLayer,
+        l: usize,
         xq: &QuantTensor,
         row_active: &[bool],
         stats: &mut MacroRunStats,
+        fan: bool,
     ) -> Vec<f32> {
+        let layer = &self.layers[l];
+        // per column block: the 31-wide input slice and its drive gate
+        // (zero activations — dropped upstream or quantized to 0 —
+        // leave their column lines undriven)
+        let blocks: Vec<(QuantTensor, Vec<bool>)> = (0..layer.col_blocks())
+            .map(|cb| {
+                let lo = cb * MACRO_COLS;
+                let hi = (lo + MACRO_COLS).min(layer.fi);
+                let mut codes = vec![0i32; MACRO_COLS];
+                codes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
+                let col_active: Vec<bool> = codes.iter().map(|&c| c != 0).collect();
+                (QuantTensor { codes, delta: xq.delta, bits: self.bits }, col_active)
+            })
+            .collect();
+        let mut jobs = Vec::with_capacity(layer.col_blocks() * layer.row_blocks());
+        for cb in 0..layer.col_blocks() {
+            for rb in 0..layer.row_blocks() {
+                jobs.push((cb, rb));
+            }
+        }
+        let run = |_: usize, &(cb, rb): &(usize, usize)| {
+            let (xt, col_active) = &blocks[cb];
+            let r0 = rb * MACRO_ROWS;
+            let r1 = (r0 + MACRO_ROWS).min(layer.fo);
+            self.grid.run_tile(l, cb, rb, xt, col_active, &row_active[r0..r1])
+        };
+        // `fan = false` keeps threading single-level when an outer
+        // row fan is already running; small tile batches run inline
+        // (spawns would cost more than the macro work)
+        let results = if fan && jobs.len() >= FAN_MIN_JOBS_PER_MACRO * self.grid.macros() {
+            self.sched.map(&jobs, run)
+        } else {
+            jobs.iter().enumerate().map(|(i, j)| run(i, j)).collect()
+        };
         let mut acc = vec![0.0f32; layer.fo];
-        for (cb, wrows) in layer.tiles.iter().enumerate() {
-            let lo = cb * MACRO_COLS;
-            let hi = (lo + MACRO_COLS).min(layer.fi);
-            let mut codes = vec![0i32; MACRO_COLS];
-            codes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
-            // zero activations (dropped upstream or quantized to 0)
-            // leave their column lines undriven
-            let col_active: Vec<bool> = codes.iter().map(|&c| c != 0).collect();
-            let xt = QuantTensor { codes, delta: xq.delta, bits: self.bits };
-            for rb in (0..layer.fo).step_by(MACRO_ROWS) {
-                let rhi = (rb + MACRO_ROWS).min(layer.fo);
-                let (out, st) =
-                    mac.correlate(&xt, &wrows[rb..rhi], &col_active, &row_active[rb..rhi]);
-                Self::merge_counts(stats, &st);
-                for (k, v) in out.iter().enumerate() {
-                    acc[rb + k] += *v;
-                }
+        for (&(_, rb), (out, st)) in jobs.iter().zip(&results) {
+            stats.merge_counts(st);
+            for (k, v) in out.iter().enumerate() {
+                acc[rb * MACRO_ROWS + k] += *v;
             }
         }
         acc
@@ -271,22 +362,23 @@ impl CimSimBackend {
         }
     }
 
-    /// One row's forward pass on the macro. `masks` = one f32 mask per
-    /// hidden layer.
+    /// One row's forward pass on the grid. `masks` = one f32 mask per
+    /// hidden layer. `fan_tiles` spreads each layer's tiles across
+    /// macros (off when the caller already fans at row granularity).
     fn forward_row(
         &self,
-        mac: &mut CimMacro,
         input: &[f32],
         masks: &[Vec<f32>],
         stats: &mut MacroRunStats,
+        fan_tiles: bool,
     ) -> Vec<f32> {
         let mut h = input.to_vec();
-        for (l, layer) in self.layers.iter().enumerate() {
+        for l in 0..self.layers.len() {
             let xq = self.quantize_layer_input(l, &h);
             // a dropped hidden neuron is a gated macro row: no compute,
             // no conversion (the §III energy win)
             let row_active = self.layer_row_active(l, masks);
-            let mut acc = self.layer_matvec(mac, layer, &xq, &row_active, stats);
+            let mut acc = self.layer_matvec(l, &xq, &row_active, stats, fan_tiles);
             self.digital_chain(l, &mut acc, masks);
             h = acc;
         }
@@ -371,8 +463,7 @@ impl CimSimBackend {
     /// Shift-add scales of one layer's schedule for an input grid step
     /// `x_delta` (the weight grid is fixed at load).
     fn shift_add_scales(&self, layer: &QuantLayer, x_delta: f32) -> Vec<f32> {
-        let w_delta = layer.tiles[0][0].delta;
-        BitplaneSchedule::new(OperatorKind::MultiplicationFree, self.bits, x_delta, w_delta)
+        BitplaneSchedule::new(OperatorKind::MultiplicationFree, self.bits, x_delta, layer.w_delta)
             .cycles
             .iter()
             .map(|c| c.scale)
@@ -415,17 +506,24 @@ impl CimSimBackend {
     }
 
     /// One delta pass (§IV-A cycle): drive `set`'s nonzero-coded
-    /// columns through the macro for every maintained row of `layer`
+    /// columns through the grid for every maintained row of layer `l`
     /// and fold the measured integer plane sums into `ps` with `sign`.
+    /// Tile calls fan across macros (the integer sums are additive, so
+    /// folding in tile-index order is exact regardless of which macro
+    /// served which tile).
     fn plane_apply(
         &self,
-        mac: &mut CimMacro,
-        layer: &QuantLayer,
+        l: usize,
         ps: &mut PlaneSums,
         set: &DropoutMask,
         sign: i64,
         stats: &mut MacroRunStats,
     ) {
+        let layer = &self.layers[l];
+        let row_blocks = layer.row_blocks();
+        // one drive gate per touched column block (shared by its row
+        // blocks — no per-job clones on the delta hot path)
+        let mut active_blocks: Vec<(usize, Vec<bool>)> = Vec::new();
         for cb in 0..ps.blocks {
             let lo = cb * MACRO_COLS;
             let hi = (lo + MACRO_COLS).min(layer.fi);
@@ -437,20 +535,41 @@ impl CimSimBackend {
                     any = true;
                 }
             }
-            if !any {
-                continue; // no delta columns land in this tile
+            if any {
+                active_blocks.push((cb, col_active));
             }
-            for rb in (0..layer.fo).step_by(MACRO_ROWS) {
-                let rhi = (rb + MACRO_ROWS).min(layer.fo);
-                let all = vec![true; rhi - rb];
-                let (_, run) =
-                    mac.correlate(&ps.xt[cb], &layer.tiles[cb][rb..rhi], &col_active, &all);
-                Self::merge_counts(stats, &run);
-                for (r, codes) in run.plane_sums.chunks(ps.planes).enumerate() {
-                    let base = ((rb + r) * ps.blocks + cb) * ps.planes;
-                    for (c, &code) in codes.iter().enumerate() {
-                        ps.sums[base + c] += sign * code as i64;
-                    }
+        }
+        if active_blocks.is_empty() {
+            return; // no delta columns at all
+        }
+        let mut jobs = Vec::with_capacity(active_blocks.len() * row_blocks);
+        for bi in 0..active_blocks.len() {
+            for rb in 0..row_blocks {
+                jobs.push((bi, rb));
+            }
+        }
+        let run = |_: usize, &(bi, rb): &(usize, usize)| {
+            let (cb, col_active) = &active_blocks[bi];
+            let r0 = rb * MACRO_ROWS;
+            let r1 = (r0 + MACRO_ROWS).min(layer.fo);
+            let all = vec![true; r1 - r0];
+            self.grid.run_tile(l, *cb, rb, &ps.xt[*cb], col_active, &all)
+        };
+        // a warm stream frame's delta set can be a couple of columns —
+        // not worth spawning threads for (see FAN_MIN_JOBS_PER_MACRO)
+        let results = if jobs.len() >= FAN_MIN_JOBS_PER_MACRO * self.grid.macros() {
+            self.sched.map(&jobs, run)
+        } else {
+            jobs.iter().enumerate().map(|(i, j)| run(i, j)).collect()
+        };
+        for (&(bi, rb), (_, run_stats)) in jobs.iter().zip(&results) {
+            stats.merge_counts(run_stats);
+            let cb = active_blocks[bi].0;
+            let r0 = rb * MACRO_ROWS;
+            for (r, codes) in run_stats.plane_sums.chunks(ps.planes).enumerate() {
+                let base = ((r0 + r) * ps.blocks + cb) * ps.planes;
+                for (c, &code) in codes.iter().enumerate() {
+                    ps.sums[base + c] += sign * code as i64;
                 }
             }
         }
@@ -481,16 +600,11 @@ impl CimSimBackend {
     /// input column, producing the session's integer plane sums plus
     /// the reconstructed accumulator (bit-equal to a dense pass over
     /// the same codes — the sums after one pass ARE its ADC codes).
-    fn l0_init(
-        &self,
-        mac: &mut CimMacro,
-        input: &[f32],
-        stats: &mut MacroRunStats,
-    ) -> (L0State, Vec<f32>) {
+    fn l0_init(&self, input: &[f32], stats: &mut MacroRunStats) -> (L0State, Vec<f32>) {
         let layer = &self.layers[0];
         let xq = self.quant.quantize(input);
         let mut ps = self.plane_sums_init(layer, &xq);
-        self.plane_apply(mac, layer, &mut ps, &DropoutMask::ones(layer.fi), 1, stats);
+        self.plane_apply(0, &mut ps, &DropoutMask::ones(layer.fi), 1, stats);
         let acc0 = Self::plane_reconstruct(&ps);
         (L0State { ps }, acc0)
     }
@@ -537,7 +651,6 @@ impl CimSimBackend {
     /// delta accounting plus whether the accumulator must be rebuilt.
     fn l0_sync(
         &self,
-        mac: &mut CimMacro,
         l0: &mut L0State,
         input: &[f32],
         epsilon: f32,
@@ -595,7 +708,7 @@ impl CimSimBackend {
             return (ds, true);
         }
         if self.l0_delta_pays_off(&l0.ps, &sub, &add, &xq.codes) {
-            self.plane_apply(mac, layer, &mut l0.ps, &sub, -1, stats);
+            self.plane_apply(0, &mut l0.ps, &sub, -1, stats);
             for &i in &changed {
                 l0.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] = xq.codes[i];
             }
@@ -605,11 +718,11 @@ impl CimSimBackend {
             for t in &mut l0.ps.xt {
                 t.delta = xq.delta;
             }
-            self.plane_apply(mac, layer, &mut l0.ps, &add, 1, stats);
+            self.plane_apply(0, &mut l0.ps, &add, 1, stats);
         } else {
             // frame diff too large: dense recompute is cheaper
             l0.ps = self.plane_sums_init(layer, &xq);
-            self.plane_apply(mac, layer, &mut l0.ps, &DropoutMask::ones(fi), 1, stats);
+            self.plane_apply(0, &mut l0.ps, &DropoutMask::ones(fi), 1, stats);
             ds.full_recompute = true;
             ds.cols_updated = fi as u64;
             ds.cols_skipped = 0;
@@ -625,13 +738,7 @@ impl CimSimBackend {
     /// under the currently maintained mask hold contributions in the
     /// sums; when most of that state would churn, resetting and
     /// letting the next instance rebuild from zeros is cheaper.
-    fn l1_sync(
-        &self,
-        mac: &mut CimMacro,
-        st: &mut L1Delta,
-        acc0: &[f32],
-        stats: &mut MacroRunStats,
-    ) {
+    fn l1_sync(&self, st: &mut L1Delta, acc0: &[f32], stats: &mut MacroRunStats) {
         let layer = &self.layers[1];
         let fi = layer.fi;
         let aq = self.l1_static_input(acc0);
@@ -663,12 +770,12 @@ impl CimSimBackend {
         // instance; in-place update pays two passes over the churned
         // active columns
         if 2 * touched < st.cur.active_count() {
-            self.plane_apply(mac, layer, &mut st.ps, &sub, -1, stats);
+            self.plane_apply(1, &mut st.ps, &sub, -1, stats);
             for &i in &changed {
                 st.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] = aq.codes[i];
                 st.nonzero[i] = aq.codes[i] != 0;
             }
-            self.plane_apply(mac, layer, &mut st.ps, &add, 1, stats);
+            self.plane_apply(1, &mut st.ps, &add, 1, stats);
         } else {
             *st = self.l1_init(&aq);
         }
@@ -727,7 +834,6 @@ impl CimSimBackend {
     /// One plan row's forward pass through the session.
     fn forward_row_planned(
         &self,
-        mac: &mut CimMacro,
         sess: &mut CimSession,
         plan: &ExecutionPlan,
         row: &PlanRow,
@@ -768,10 +874,10 @@ impl CimSimBackend {
             let added = target.newly_active(&st.cur);
             let dropped = target.newly_dropped(&st.cur);
             if added.active_count() > 0 {
-                self.plane_apply(mac, &self.layers[1], &mut st.ps, &added, 1, stats);
+                self.plane_apply(1, &mut st.ps, &added, 1, stats);
             }
             if dropped.active_count() > 0 {
-                self.plane_apply(mac, &self.layers[1], &mut st.ps, &dropped, -1, stats);
+                self.plane_apply(1, &mut st.ps, &dropped, -1, stats);
             }
             st.cur = target.clone();
             let acc1 = Self::plane_reconstruct(&st.ps);
@@ -780,7 +886,7 @@ impl CimSimBackend {
         } else {
             let xq = self.quantize_layer_input(1, &h);
             let row_active = self.layer_row_active(1, &masks_f32);
-            self.layer_matvec(mac, &self.layers[1], &xq, &row_active, stats)
+            self.layer_matvec(1, &xq, &row_active, stats, true)
         };
         self.digital_chain(1, &mut acc1, &masks_f32);
         h = acc1;
@@ -790,7 +896,7 @@ impl CimSimBackend {
         for l in 2..=last {
             let xq = self.quantize_layer_input(l, &h);
             let row_active = self.layer_row_active(l, &masks_f32);
-            let mut acc = self.layer_matvec(mac, &self.layers[l], &xq, &row_active, stats);
+            let mut acc = self.layer_matvec(l, &xq, &row_active, stats, true);
             self.digital_chain(l, &mut acc, &masks_f32);
             h = acc;
         }
@@ -815,6 +921,14 @@ impl ExecutionBackend for CimSimBackend {
 
     fn new_plan_state(&self) -> PlanState {
         PlanState(Some(Box::new(CimSession::default())))
+    }
+
+    fn chip_report(&self) -> Option<ChipEnergyReport> {
+        Some(self.energy.chip_report(
+            &self.grid.stats(),
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+        ))
     }
 
     /// Native delta-schedule execution: stateful product-sum session,
@@ -851,7 +965,7 @@ impl ExecutionBackend for CimSimBackend {
             .as_mut()
             .and_then(|s| s.downcast_mut::<CimSession>())
             .ok_or_else(|| self.err("plan session belongs to a different backend".into()))?;
-        let mut mac = self.mac.lock().unwrap_or_else(|p| p.into_inner());
+        let grid_before = self.grid.stats();
         let mut stats = MacroRunStats::default();
         // layer-0 session state: built on the session's first chunk,
         // synced to the (possibly changed) input on later frames — the
@@ -863,18 +977,17 @@ impl ExecutionBackend for CimSimBackend {
                     "plan session must start with a Full row (fresh state got a Delta)".into(),
                 ));
             }
-            let (l0, acc0) = self.l0_init(&mut mac, &plan.input, &mut stats);
+            let (l0, acc0) = self.l0_init(&plan.input, &mut stats);
             sess.l0 = Some(l0);
             sess.acc0 = Some(acc0);
         } else {
             let l0 = sess.l0.as_mut().expect("checked above");
-            let (ds, acc0_stale) =
-                self.l0_sync(&mut mac, l0, &plan.input, plan.epsilon, &mut stats);
+            let (ds, acc0_stale) = self.l0_sync(l0, &plan.input, plan.epsilon, &mut stats);
             if acc0_stale {
                 let acc0 = Self::plane_reconstruct(&l0.ps);
                 if sess.l1_delta == Some(true) {
                     let st = sess.l1.as_mut().expect("delta state follows the decision");
-                    self.l1_sync(&mut mac, st, &acc0, &mut stats);
+                    self.l1_sync(st, &acc0, &mut stats);
                 }
                 sess.acc0 = Some(acc0);
             }
@@ -882,24 +995,30 @@ impl ExecutionBackend for CimSimBackend {
         }
         let mut outputs = Vec::with_capacity(plan.rows.len());
         for row in &plan.rows {
-            outputs.push(self.forward_row_planned(&mut mac, sess, plan, row, &mut stats)?);
+            outputs.push(self.forward_row_planned(sess, plan, row, &mut stats)?);
         }
         // mask bits: online RNG draws, or SRAM schedule reads when the
         // masks came from a precomputed (cached) schedule (§IV-B)
         let mask_bits = plan.rows.len() as u64 * mask_dims.iter().sum::<usize>() as u64;
         let (rng_bits, sched_bits) = if plan.sampled { (mask_bits, 0) } else { (0, mask_bits) };
-        let breakdown = self.energy.measured_energy_scheduled(
+        let gx = self.grid.stats().exec_delta(&grid_before);
+        let mut breakdown = self.energy.measured_energy_scheduled(
             &stats,
             OperatorKind::MultiplicationFree,
             AdcKind::AsymmetricMedian,
             rng_bits,
             sched_bits,
         );
+        // spilled tiles re-stored their bitplanes during this call —
+        // price the re-stores (zero on a fitting placement)
+        breakdown.weights_fj =
+            gx.weight_reload_bits as f64 * self.energy.params.e_weight_store_bit_fj;
         Ok(ExecOutput {
             outputs,
             energy_pj: Some(breakdown.total_pj()),
             stats: Some(stats),
             input_delta,
+            grid: Some(gx),
         })
     }
 
@@ -910,10 +1029,8 @@ impl ExecutionBackend for CimSimBackend {
         let in_dim = self.dims[0];
         let mask_dims = self.mask_dims();
         let mask_bits_per_row: usize = mask_dims.iter().sum();
-        let mut mac = self.mac.lock().unwrap_or_else(|p| p.into_inner());
-        let mut stats = MacroRunStats::default();
-        let mut outputs = Vec::with_capacity(rows.len());
-        let mut rng_bits = 0u64;
+        // validate everything up front: the parallel fan below must
+        // only ever see well-formed rows
         for row in rows {
             if row.input.len() != in_dim {
                 return Err(self.err("input dim mismatch".into()));
@@ -926,7 +1043,24 @@ impl ExecutionBackend for CimSimBackend {
                     return Err(self.err("mask dim mismatch".into()));
                 }
             }
-            outputs.push(self.forward_row(&mut mac, row.input, row.masks, &mut stats));
+        }
+        let grid_before = self.grid.stats();
+        // MC rows are independent: with a multi-macro grid they fan out
+        // across rows (replicated placement lets the same tile run
+        // concurrently); a lone row fans its tiles instead. The
+        // scheduler inlines the single-macro / single-row cases.
+        let row_fan = self.grid.macros() > 1 && rows.len() > 1;
+        let results: Vec<(Vec<f32>, MacroRunStats)> = self.sched.map(rows, |_, row| {
+            let mut st = MacroRunStats::default();
+            let out = self.forward_row(row.input, row.masks, &mut st, !row_fan);
+            (out, st)
+        });
+        let mut stats = MacroRunStats::default();
+        let mut outputs = Vec::with_capacity(rows.len());
+        let mut rng_bits = 0u64;
+        for (row, (out, st)) in rows.iter().zip(results) {
+            stats.merge_counts(&st);
+            outputs.push(out);
             // every *sampled* mask element is one RNG draw (priced
             // online — the macro sim executes samples independently, no
             // precomputed schedule); deterministic expected-value masks
@@ -935,17 +1069,21 @@ impl ExecutionBackend for CimSimBackend {
                 rng_bits += mask_bits_per_row as u64;
             }
         }
-        let breakdown = self.energy.measured_energy(
+        let gx = self.grid.stats().exec_delta(&grid_before);
+        let mut breakdown = self.energy.measured_energy(
             &stats,
             OperatorKind::MultiplicationFree,
             AdcKind::AsymmetricMedian,
             rng_bits,
         );
+        breakdown.weights_fj =
+            gx.weight_reload_bits as f64 * self.energy.params.e_weight_store_bit_fj;
         Ok(ExecOutput {
             outputs,
             energy_pj: Some(breakdown.total_pj()),
             stats: Some(stats),
             input_delta: None,
+            grid: Some(gx),
         })
     }
 }
@@ -965,10 +1103,19 @@ fn block_profile(blocks: usize, cols: impl Iterator<Item = usize>) -> (f64, f64)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::testkit::f32_vec;
+    use crate::cim::grid::PlacementStrategy;
+    use crate::util::testkit::{binary_masks, f32_vec};
     use crate::util::Pcg32;
 
     fn tiny(dims: Vec<usize>, seed: u64) -> (ModelSpec, CimSimBackend) {
+        tiny_grid(dims, seed, GridConfig::default())
+    }
+
+    fn tiny_grid(
+        dims: Vec<usize>,
+        seed: u64,
+        grid: GridConfig,
+    ) -> (ModelSpec, CimSimBackend) {
         let spec = ModelSpec::synthetic("tiny", dims.clone());
         let mut rng = Pcg32::seeded(seed);
         let layers: Vec<LayerParams> = (0..dims.len() - 1)
@@ -981,14 +1128,8 @@ mod tests {
                 }
             })
             .collect();
-        let backend = CimSimBackend::from_params(&spec, layers, 6).unwrap();
+        let backend = CimSimBackend::from_params_grid(&spec, layers, 6, grid).unwrap();
         (spec, backend)
-    }
-
-    fn binary_masks(rng: &mut Pcg32, dims: &[usize]) -> Vec<Vec<f32>> {
-        dims.iter()
-            .map(|&d| (0..d).map(|_| if rng.bernoulli(0.5) { 1.0 } else { 0.0 }).collect())
-            .collect()
     }
 
     #[test]
@@ -996,7 +1137,7 @@ mod tests {
         let (spec, b) = tiny(vec![8, 12, 4], 3);
         let mut rng = Pcg32::seeded(9);
         let input = f32_vec(&mut rng, 8, 1.0);
-        let masks = binary_masks(&mut rng, &spec.mask_dims());
+        let masks = binary_masks(&mut rng, &spec.mask_dims(), 0.5);
         let out = b
             .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
             .unwrap();
@@ -1006,6 +1147,10 @@ mod tests {
         assert!(out.energy_pj.unwrap() > 0.0);
         let stats = out.stats.unwrap();
         assert!(stats.compute_cycles > 0 && stats.adc_conversions > 0);
+        let gx = out.grid.unwrap();
+        assert_eq!(gx.macros, 1);
+        assert_eq!(gx.weight_reloads, 0, "resident tiles must not reload");
+        assert_eq!(gx.busy_cycles, stats.compute_cycles + stats.adc_cycles);
     }
 
     #[test]
@@ -1013,11 +1158,53 @@ mod tests {
         let (spec, b) = tiny(vec![8, 12, 4], 3);
         let mut rng = Pcg32::seeded(11);
         let input = f32_vec(&mut rng, 8, 1.0);
-        let masks = binary_masks(&mut rng, &spec.mask_dims());
+        let masks = binary_masks(&mut rng, &spec.mask_dims(), 0.5);
         let row = Row { input: &input, masks: &masks, sampled_masks: true };
         let a = b.execute_rows(&[row]).unwrap();
         let c = b.execute_rows(&[row]).unwrap();
         assert_eq!(a.outputs, c.outputs, "macro state must not leak across calls");
+    }
+
+    #[test]
+    fn multi_macro_grid_is_bit_exact_and_reports_utilization() {
+        // the substrate is a performance/placement choice, never a
+        // numerics one: a 4-macro replicated grid must produce the
+        // byte-identical outputs of the single-macro chip
+        let dims = vec![40, 24, 6];
+        let (spec, single) = tiny(dims.clone(), 17);
+        let (_, gridded) = tiny_grid(
+            dims,
+            17,
+            GridConfig::with_macros(4, PlacementStrategy::Replicated),
+        );
+        let mut rng = Pcg32::seeded(19);
+        let input = f32_vec(&mut rng, 40, 1.0);
+        let masks: Vec<Vec<Vec<f32>>> =
+            (0..6).map(|_| binary_masks(&mut rng, &spec.mask_dims(), 0.5)).collect();
+        let rows: Vec<Row<'_>> = masks
+            .iter()
+            .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+            .collect();
+        let a = single.execute_rows(&rows).unwrap();
+        let b = gridded.execute_rows(&rows).unwrap();
+        for (ra, rb) in a.outputs.iter().zip(&b.outputs) {
+            for (va, vb) in ra.iter().zip(rb) {
+                assert_eq!(va.to_bits(), vb.to_bits());
+            }
+        }
+        let (sa, sb) = (a.stats.unwrap(), b.stats.unwrap());
+        assert_eq!(sa.compute_cycles, sb.compute_cycles);
+        assert_eq!(sa.adc_conversions, sb.adc_conversions);
+        assert_eq!(sa.driven_col_cycles, sb.driven_col_cycles);
+        assert_eq!(a.energy_pj.unwrap().to_bits(), b.energy_pj.unwrap().to_bits());
+        let gx = b.grid.unwrap();
+        assert_eq!(gx.macros, 4);
+        assert!(gx.utilization() > 0.0 && gx.utilization() <= 1.0);
+        assert!(gx.span_cycles <= gx.busy_cycles);
+        let report = gridded.chip_report().expect("cim-sim reports chip energy");
+        assert_eq!(report.macros, 4);
+        assert!(report.weight_load_pj > 0.0, "placement loads are priced once");
+        assert_eq!(report.weight_reload_pj, 0.0, "no spill, no reloads");
     }
 
     #[test]
@@ -1078,5 +1265,7 @@ mod tests {
     }
 
     // The full-pipeline bit-exactness check against
-    // BitplaneSchedule::evaluate lives in rust/tests/backend.rs.
+    // BitplaneSchedule::evaluate lives in rust/tests/backend.rs; the
+    // M ∈ {1, 2, 4} dense/plan/stream equality matrix in
+    // rust/tests/grid.rs.
 }

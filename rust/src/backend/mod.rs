@@ -12,10 +12,13 @@
 //! * [`PjrtBackend`] — the AOT-compiled HLO graphs executed through the
 //!   PJRT runtime (float semantics; energy modeled analytically).
 //!   Compiles in every build; *runs* only with `--features pjrt`.
-//! * [`CimSimBackend`] — the MF-MLP forward pass tiled onto the
-//!   bit-exact 16×31 [`crate::cim::macro_sim::CimMacro`], with the SAR
-//!   xADC in the loop. Energy is **measured** from the actual
-//!   [`MacroRunStats`] counters, not modeled.
+//! * [`CimSimBackend`] — the MF-MLP forward pass tiled onto a
+//!   **grid** of bit-exact 16×31 [`crate::cim::macro_sim::CimMacro`]s
+//!   ([`crate::cim::grid::MacroGrid`], `--macros N --placement S`):
+//!   weight tiles stay stationary per macro, independent MC rows and
+//!   tile calls fan out across macros, and energy is **measured** from
+//!   the actual [`MacroRunStats`] counters (plus grid-level weight
+//!   load/reload and utilization accounting), not modeled.
 //! * [`StubBackend`] — fail-fast placeholder mirroring the stub
 //!   runtime's behaviour for builds/configs with no usable substrate.
 
@@ -27,9 +30,11 @@ pub use cim_sim::{CimSimBackend, LayerParams};
 pub use pjrt::PjrtBackend;
 pub use stub::StubBackend;
 
+pub use crate::cim::grid::{GridConfig, GridExecStats, PlacementStrategy};
 pub use crate::dropout::plan::{ExecutionPlan, PlanRow};
 
 use crate::cim::macro_sim::MacroRunStats;
+use crate::energy::ChipEnergyReport;
 use crate::error::McCimError;
 use crate::model::ModelSpec;
 use crate::runtime::Runtime;
@@ -116,6 +121,9 @@ pub struct ExecOutput {
     /// Streaming input-delta accounting (sessions on measuring
     /// backends only; see [`InputDeltaStats`]).
     pub input_delta: Option<InputDeltaStats>,
+    /// Macro-grid accounting of this call (grid-executing backends
+    /// only): busy/span cycles, utilization, spilled-tile reloads.
+    pub grid: Option<GridExecStats>,
 }
 
 /// A compute substrate that evaluates batches of (input, masks) rows.
@@ -139,6 +147,14 @@ pub trait ExecutionBackend {
     /// The default (dense-lowering) implementation keeps no state.
     fn new_plan_state(&self) -> PlanState {
         PlanState::default()
+    }
+
+    /// Chip-level energy report of the backend's macro grid: per-macro
+    /// dynamic pJ, one-time weight-stationary loads, spill reloads,
+    /// idle-macro LSTP leakage, utilization. `None` on substrates
+    /// without a simulated grid (PJRT, stub).
+    fn chip_report(&self) -> Option<ChipEnergyReport> {
+        None
     }
 
     /// Execute one ordered chunk of a delta schedule (§IV). Outputs
@@ -220,7 +236,7 @@ impl Default for BackendKind {
 }
 
 /// Construction options shared by the backends.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug)]
 pub struct BackendOptions {
     /// Fake-quantization (pjrt) / code precision (cim-sim). `None` =
     /// fp32 graphs on pjrt, 6-bit codes on cim-sim.
@@ -228,6 +244,22 @@ pub struct BackendOptions {
     /// Use the Pallas-kernel HLO graph instead of the fused-matmul
     /// reference (pjrt only).
     pub pallas: bool,
+    /// Concurrent macros of the simulated chip (cim-sim only; 1 = the
+    /// legacy single-macro substrate).
+    pub macros: usize,
+    /// Weight-stationary tile placement strategy (cim-sim only).
+    pub placement: PlacementStrategy,
+}
+
+impl Default for BackendOptions {
+    fn default() -> Self {
+        BackendOptions {
+            bits: None,
+            pallas: false,
+            macros: 1,
+            placement: PlacementStrategy::Packed,
+        }
+    }
 }
 
 /// Build a backend of `kind` for `spec` from the artifacts directory.
@@ -257,12 +289,12 @@ pub fn make_backend(
             Ok(Box::new(b))
         }
         BackendKind::CimSim => {
-            let b = CimSimBackend::load(artifacts, spec, opts.bits.unwrap_or(6)).map_err(
-                |e| McCimError::BackendUnavailable {
+            let grid = GridConfig::with_macros(opts.macros, opts.placement);
+            let b = CimSimBackend::load_with_grid(artifacts, spec, opts.bits.unwrap_or(6), grid)
+                .map_err(|e| McCimError::BackendUnavailable {
                     backend: "cim-sim".into(),
                     reason: format!("{e:#}"),
-                },
-            )?;
+                })?;
             Ok(Box::new(b))
         }
         BackendKind::Stub => Ok(Box::new(StubBackend::new(spec))),

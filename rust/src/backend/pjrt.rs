@@ -156,7 +156,7 @@ impl ExecutionBackend for PjrtBackend {
             .enumerate()
             .map(|(r, _)| out[r * od..(r + 1) * od].to_vec())
             .collect();
-        Ok(ExecOutput { outputs, stats: None, energy_pj: None, input_delta: None })
+        Ok(ExecOutput { outputs, stats: None, energy_pj: None, input_delta: None, grid: None })
     }
 }
 

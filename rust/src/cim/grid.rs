@@ -1,0 +1,782 @@
+//! The macro grid: many concurrent CIM macros with weight-stationary
+//! tile placement.
+//!
+//! The paper's chip is not one 16×31 macro but an **array of macros**
+//! operating concurrently, each holding a slice of the model's weights
+//! stationary in its local SRAM. [`MacroGrid`] reproduces that
+//! organization for the simulator: `M` independent [`CimMacro`]
+//! instances plus a [`Placement`] that maps every (layer, row-block,
+//! col-block) weight tile to the macro(s) holding it resident.
+//!
+//! **Weight-stationary accounting.** A resident tile's bitplanes are
+//! stored into its macro's local SRAM exactly once, at placement time
+//! — [`GridRunStats::weight_load_bits`] prices that once per copy, and
+//! inference calls pay nothing to re-store them (the per-cycle plane
+//! drive inside [`CimMacro::correlate`] is the macro streaming its own
+//! local SRAM, already part of array energy). Only when a model's tile
+//! count **spills** the grid's capacity does a tile lose residency:
+//! every execution of a spilled tile then re-writes its bitplanes into
+//! its home macro and is metered as a weight *reload*
+//! ([`GridRunStats::weight_reloads`]).
+//!
+//! **Placement strategies** ([`PlacementStrategy`]):
+//!
+//! * `packed` — exactly one resident copy per tile, round-robin across
+//!   macros (balances tiles and lets one row's tile calls fan out);
+//! * `replicated` — after the packed pass, remaining capacity is
+//!   filled with **replicas** of hot tiles (lower layers first), so
+//!   independent MC samples / stream frames executing the *same* tile
+//!   land on different macros concurrently instead of serializing on
+//!   one lock.
+//!
+//! **Determinism.** Each `correlate` call is a pure function of its
+//! operands (the array is rewritten every cycle), so which replica
+//! serves a call never changes its result — only the per-macro cost
+//! attribution. Callers merge per-tile results in tile-index order
+//! (see [`TileScheduler`]), which keeps float accumulation order — and
+//! therefore outputs, `to_bits`-exactly — independent of `M`, the
+//! strategy, and thread interleaving.
+
+use super::macro_sim::{CimMacro, MacroRunStats};
+use crate::operator::quant::QuantTensor;
+use crate::MACRO_ROWS;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, TryLockError};
+
+/// Default resident tile slots per macro. Generous on purpose: the
+/// paper's chip holds entire models across its macro array, so the
+/// builtin networks must stay fully resident even on a single-macro
+/// grid (weight loads priced once, zero reloads). Shrink
+/// [`GridConfig::capacity`] explicitly to study spill/reload behaviour.
+pub const DEFAULT_MACRO_TILE_SLOTS: usize = 512;
+
+/// Identity of one weight tile on the grid.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileId {
+    /// FC layer index.
+    pub layer: usize,
+    /// Row block (output neurons `row_block * 16 ..`).
+    pub row_block: usize,
+    /// Column block (input columns `col_block * 31 ..`).
+    pub col_block: usize,
+}
+
+/// How tiles map onto the grid's macros.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// One resident copy per tile, round-robin across macros.
+    #[default]
+    Packed,
+    /// Packed, then leftover capacity filled with replicas of
+    /// hot-layer tiles so concurrent MC samples don't serialize.
+    Replicated,
+}
+
+impl PlacementStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "packed" => Some(PlacementStrategy::Packed),
+            "replicated" | "replica" => Some(PlacementStrategy::Replicated),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PlacementStrategy::Packed => "packed",
+            PlacementStrategy::Replicated => "replicated",
+        }
+    }
+}
+
+/// Grid construction knobs (CLI: `--macros N --placement STRATEGY`).
+#[derive(Clone, Copy, Debug)]
+pub struct GridConfig {
+    /// Number of concurrent macros (1 = the legacy single-macro chip).
+    pub macros: usize,
+    pub placement: PlacementStrategy,
+    /// Resident tile slots per macro (its local weight SRAM).
+    pub capacity: usize,
+}
+
+impl Default for GridConfig {
+    fn default() -> Self {
+        GridConfig {
+            macros: 1,
+            placement: PlacementStrategy::Packed,
+            capacity: DEFAULT_MACRO_TILE_SLOTS,
+        }
+    }
+}
+
+impl GridConfig {
+    /// A grid of `macros` macros with the default capacity.
+    pub fn with_macros(macros: usize, placement: PlacementStrategy) -> Self {
+        GridConfig { macros: macros.max(1), placement, ..Default::default() }
+    }
+}
+
+/// One layer's quantized weight tiles as the backend prepares them:
+/// `tiles[col_block][output_neuron]` — 31-wide codes, zero-padded past
+/// the layer's fan-in.
+pub struct LayerTiles {
+    /// The layer's fan-out (output neuron count).
+    pub fo: usize,
+    pub tiles: Vec<Vec<QuantTensor>>,
+}
+
+/// One weight tile's stationary storage: its (≤16) weight rows plus
+/// where they live. Replicas share this one in-memory copy — only the
+/// *accounting* prices a load per resident copy.
+struct GridTile {
+    id: TileId,
+    rows: Vec<QuantTensor>,
+    /// Stored weight bits (codes × precision) — the unit the load and
+    /// reload energies price.
+    bits: u64,
+    /// Macros holding this tile resident (empty = spilled).
+    replicas: Vec<usize>,
+    /// Macro that serves the tile when it is spilled.
+    home: usize,
+}
+
+/// One macro plus its cumulative cost ledger (counts only — the ledger
+/// never collects the per-conversion trace).
+struct MacroUnit {
+    mac: CimMacro,
+    ledger: MacroRunStats,
+}
+
+/// Cumulative grid counters at one point in time (see
+/// [`MacroGrid::stats`]). Counters only ever grow, so two snapshots
+/// diff into a per-call [`GridExecStats`] via [`Self::exec_delta`].
+#[derive(Clone, Debug, Default)]
+pub struct GridRunStats {
+    /// Per-macro cumulative cost counters (counts only).
+    pub per_macro: Vec<MacroRunStats>,
+    /// Weight bits stored at placement time (each resident copy priced
+    /// once — the weight-stationary contract).
+    pub weight_load_bits: u64,
+    /// Executions of spilled tiles (each re-stored its bitplanes).
+    pub weight_reloads: u64,
+    /// Weight bits re-stored by those reloads.
+    pub weight_reload_bits: u64,
+    /// Tiles without residency (capacity overflow).
+    pub spilled_tiles: usize,
+}
+
+impl GridRunStats {
+    pub fn macros(&self) -> usize {
+        self.per_macro.len()
+    }
+
+    /// Busy cycles of one macro: compute cycles plus SAR cycles (the
+    /// macro's pipeline serializes drive and conversion).
+    pub fn busy_cycles(&self, m: usize) -> u64 {
+        self.per_macro[m].compute_cycles + self.per_macro[m].adc_cycles
+    }
+
+    /// Critical path: the busiest macro's cycles (concurrent macros
+    /// overlap, so the chip's span is the max, not the sum).
+    pub fn span_cycles(&self) -> u64 {
+        (0..self.macros()).map(|m| self.busy_cycles(m)).max().unwrap_or(0)
+    }
+
+    /// Total busy cycles across the grid.
+    pub fn total_busy_cycles(&self) -> u64 {
+        (0..self.macros()).map(|m| self.busy_cycles(m)).sum()
+    }
+
+    /// Mean busy fraction over the span: `Σ busy / (M · span)`. 1.0 =
+    /// perfectly balanced, `1/M` = one macro did all the work.
+    pub fn utilization(&self) -> f64 {
+        let span = self.span_cycles();
+        if span == 0 || self.per_macro.is_empty() {
+            return 0.0;
+        }
+        self.total_busy_cycles() as f64 / (self.macros() as f64 * span as f64)
+    }
+
+    /// Sum of the per-macro counters (counts only).
+    pub fn total(&self) -> MacroRunStats {
+        let mut t = MacroRunStats::default();
+        for m in &self.per_macro {
+            t.merge_counts(m);
+        }
+        t
+    }
+
+    /// The work between an `earlier` snapshot and this one, as the
+    /// per-call accounting a backend attaches to its output.
+    pub fn exec_delta(&self, earlier: &GridRunStats) -> GridExecStats {
+        let mut busy = 0u64;
+        let mut span = 0u64;
+        for m in 0..self.macros() {
+            let b = self
+                .busy_cycles(m)
+                .saturating_sub(if m < earlier.macros() { earlier.busy_cycles(m) } else { 0 });
+            busy += b;
+            span = span.max(b);
+        }
+        GridExecStats {
+            macros: self.macros() as u32,
+            busy_cycles: busy,
+            span_cycles: span,
+            weight_reloads: self.weight_reloads.saturating_sub(earlier.weight_reloads),
+            weight_reload_bits: self
+                .weight_reload_bits
+                .saturating_sub(earlier.weight_reload_bits),
+        }
+    }
+}
+
+/// Grid accounting of one backend call (carried on
+/// [`crate::backend::ExecOutput::grid`] and folded per request): how
+/// busy the macros were, the call's critical path, and any weight
+/// reloads spilled tiles forced.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GridExecStats {
+    /// Macros in the grid that served the call.
+    pub macros: u32,
+    /// Total busy cycles across all macros.
+    pub busy_cycles: u64,
+    /// Busiest macro's cycles — the call's wall-clock on the chip.
+    pub span_cycles: u64,
+    /// Spilled-tile executions (each re-stored its bitplanes).
+    pub weight_reloads: u64,
+    /// Weight bits those reloads re-stored.
+    pub weight_reload_bits: u64,
+}
+
+impl GridExecStats {
+    /// `Σ busy / (M · span)` of this call (0 when nothing ran).
+    pub fn utilization(&self) -> f64 {
+        if self.span_cycles == 0 || self.macros == 0 {
+            return 0.0;
+        }
+        self.busy_cycles as f64 / (self.macros as f64 * self.span_cycles as f64)
+    }
+
+    /// Fold another call's accounting into a request/ledger total
+    /// (sequential calls: spans add, macro count is the grid's).
+    pub fn merge(&mut self, other: &GridExecStats) {
+        self.macros = self.macros.max(other.macros);
+        self.busy_cycles += other.busy_cycles;
+        self.span_cycles += other.span_cycles;
+        self.weight_reloads += other.weight_reloads;
+        self.weight_reload_bits += other.weight_reload_bits;
+    }
+}
+
+/// The placement decision: which macro(s) hold each tile.
+pub struct Placement {
+    strategy: PlacementStrategy,
+    capacity: usize,
+    /// `resident[m]` = tiles held by macro `m`.
+    resident: Vec<Vec<usize>>,
+}
+
+impl Placement {
+    /// Assign `tiles` to `macros` macros. The packed pass gives tile
+    /// `t` its home `t % macros` and residency while slots last (round
+    /// robin distributes evenly, so overflow only happens when the
+    /// model genuinely exceeds `macros × capacity`); the replicated
+    /// pass then fills leftover slots with copies of resident tiles in
+    /// tile-index order — lower layers (the delta-maintained hot ones)
+    /// first — skipping macros that already hold the tile.
+    fn build(cfg: &GridConfig, tiles: &mut [GridTile]) -> Placement {
+        let m = cfg.macros.max(1);
+        let cap = cfg.capacity.max(1);
+        let mut resident: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (t, tile) in tiles.iter_mut().enumerate() {
+            tile.home = t % m;
+            if resident[tile.home].len() < cap {
+                tile.replicas.push(tile.home);
+                resident[tile.home].push(t);
+            }
+        }
+        if cfg.placement == PlacementStrategy::Replicated {
+            // Keep adding one replica per resident tile per pass until
+            // no slot accepts one; a tile never lands twice on a macro,
+            // so replication is capped at one copy per macro.
+            loop {
+                let mut placed = false;
+                for (t, tile) in tiles.iter_mut().enumerate() {
+                    if tile.replicas.is_empty() {
+                        continue; // spilled: never replicate
+                    }
+                    if let Some(free) = (0..m).find(|&u| {
+                        resident[u].len() < cap && !tile.replicas.contains(&u)
+                    }) {
+                        tile.replicas.push(free);
+                        resident[free].push(t);
+                        placed = true;
+                    }
+                }
+                if !placed {
+                    break;
+                }
+            }
+        }
+        Placement { strategy: cfg.placement, capacity: cap, resident }
+    }
+
+    pub fn strategy(&self) -> PlacementStrategy {
+        self.strategy
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Resident tile count per macro.
+    pub fn resident_per_macro(&self) -> Vec<usize> {
+        self.resident.iter().map(Vec::len).collect()
+    }
+}
+
+/// The grid: `M` lockable macros, the stationary tiles, and the
+/// placement binding them.
+pub struct MacroGrid {
+    units: Vec<Mutex<MacroUnit>>,
+    tiles: Vec<GridTile>,
+    placement: Placement,
+    /// `tile_index(l, cb, rb) = layer_base[l] + cb * row_blocks[l] + rb`.
+    layer_base: Vec<usize>,
+    layer_row_blocks: Vec<usize>,
+    weight_load_bits: u64,
+    spilled: usize,
+    weight_reloads: AtomicU64,
+    weight_reload_bits: AtomicU64,
+}
+
+impl MacroGrid {
+    /// Build the grid and place every layer's tiles weight-stationary.
+    /// Each macro is a fresh [`CimMacro::paper_default`]; each resident
+    /// copy is accounted as one weight load.
+    pub fn place(cfg: &GridConfig, layers: &[LayerTiles]) -> Self {
+        let m = cfg.macros.max(1);
+        let mut tiles = Vec::new();
+        let mut layer_base = Vec::with_capacity(layers.len());
+        let mut layer_row_blocks = Vec::with_capacity(layers.len());
+        for (l, layer) in layers.iter().enumerate() {
+            let row_blocks = layer.fo.div_ceil(MACRO_ROWS);
+            layer_base.push(tiles.len());
+            layer_row_blocks.push(row_blocks);
+            for (cb, wrows) in layer.tiles.iter().enumerate() {
+                debug_assert_eq!(wrows.len(), layer.fo, "tile column must cover the fan-out");
+                for rb in 0..row_blocks {
+                    let r0 = rb * MACRO_ROWS;
+                    let r1 = (r0 + MACRO_ROWS).min(layer.fo);
+                    let rows: Vec<QuantTensor> = wrows[r0..r1].to_vec();
+                    let bits: u64 = rows
+                        .iter()
+                        .map(|r| (r.codes.len() * r.bits as usize) as u64)
+                        .sum();
+                    tiles.push(GridTile {
+                        id: TileId { layer: l, row_block: rb, col_block: cb },
+                        rows,
+                        bits,
+                        replicas: Vec::new(),
+                        home: 0,
+                    });
+                }
+            }
+        }
+        let placement = Placement::build(cfg, &mut tiles);
+        let weight_load_bits: u64 = tiles
+            .iter()
+            .map(|t| t.bits * t.replicas.len() as u64)
+            .sum();
+        let spilled = tiles.iter().filter(|t| t.replicas.is_empty()).count();
+        let units = (0..m)
+            .map(|_| {
+                Mutex::new(MacroUnit {
+                    mac: CimMacro::paper_default(),
+                    ledger: MacroRunStats::default(),
+                })
+            })
+            .collect();
+        MacroGrid {
+            units,
+            tiles,
+            placement,
+            layer_base,
+            layer_row_blocks,
+            weight_load_bits,
+            spilled,
+            weight_reloads: AtomicU64::new(0),
+            weight_reload_bits: AtomicU64::new(0),
+        }
+    }
+
+    pub fn macros(&self) -> usize {
+        self.units.len()
+    }
+
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Identity of tile `idx` (tiles are indexed layer-major, then
+    /// col-block, then row-block).
+    pub fn tile_id(&self, idx: usize) -> TileId {
+        self.tiles[idx].id
+    }
+
+    /// Macros holding tile `idx` resident (empty = spilled).
+    pub fn tile_replicas(&self, idx: usize) -> &[usize] {
+        &self.tiles[idx].replicas
+    }
+
+    /// Tiles that lost residency to capacity overflow.
+    pub fn spilled_tiles(&self) -> usize {
+        self.spilled
+    }
+
+    fn tile_index(&self, layer: usize, col_block: usize, row_block: usize) -> usize {
+        self.layer_base[layer] + col_block * self.layer_row_blocks[layer] + row_block
+    }
+
+    /// Lock a macro for the tile: the first un-contended replica wins
+    /// (replication is what makes concurrent callers of the same tile
+    /// not serialize); when all replicas are busy, block on the first.
+    /// Spilled tiles always use their home macro and meter a reload.
+    fn lock_for(&self, tile: &GridTile) -> MutexGuard<'_, MacroUnit> {
+        if tile.replicas.is_empty() {
+            self.weight_reloads.fetch_add(1, Ordering::Relaxed);
+            self.weight_reload_bits.fetch_add(tile.bits, Ordering::Relaxed);
+            return self.units[tile.home].lock().unwrap_or_else(|p| p.into_inner());
+        }
+        for &r in &tile.replicas {
+            match self.units[r].try_lock() {
+                Ok(g) => return g,
+                Err(TryLockError::Poisoned(p)) => return p.into_inner(),
+                Err(TryLockError::WouldBlock) => continue,
+            }
+        }
+        self.units[tile.replicas[0]].lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Execute one tile: correlate `x` against the tile's stationary
+    /// weight rows on whichever macro holds it (see [`Self::lock_for`]).
+    /// Returns the per-row partial sums and the call's cost counters
+    /// (including the per-conversion trace the delta executor needs);
+    /// the counters are also folded into the serving macro's ledger.
+    pub fn run_tile(
+        &self,
+        layer: usize,
+        col_block: usize,
+        row_block: usize,
+        x: &QuantTensor,
+        col_active: &[bool],
+        row_active: &[bool],
+    ) -> (Vec<f32>, MacroRunStats) {
+        let tile = &self.tiles[self.tile_index(layer, col_block, row_block)];
+        debug_assert_eq!(row_active.len(), tile.rows.len(), "row gate must match the tile");
+        let mut unit = self.lock_for(tile);
+        let (out, stats) = unit.mac.correlate(x, &tile.rows, col_active, row_active);
+        unit.ledger.merge_counts(&stats);
+        (out, stats)
+    }
+
+    /// Snapshot the cumulative grid counters (cheap: counts only).
+    pub fn stats(&self) -> GridRunStats {
+        GridRunStats {
+            per_macro: self
+                .units
+                .iter()
+                .map(|u| u.lock().unwrap_or_else(|p| p.into_inner()).ledger.clone())
+                .collect(),
+            weight_load_bits: self.weight_load_bits,
+            weight_reloads: self.weight_reloads.load(Ordering::Relaxed),
+            weight_reload_bits: self.weight_reload_bits.load(Ordering::Relaxed),
+            spilled_tiles: self.spilled,
+        }
+    }
+}
+
+/// Order-preserving parallel map over tile (or row) jobs.
+///
+/// Jobs are **striped** across up to `workers` scoped threads (worker
+/// `w` takes jobs `w, w+W, w+2W, …`), which lines consecutive jobs up
+/// with consecutive macros under round-robin placement — minimal lock
+/// contention. Results come back in **job order** regardless of thread
+/// interleaving, so a caller folding them sequentially gets the exact
+/// float accumulation order of the single-macro loop (`to_bits`-equal
+/// outputs). Runs inline (no threads) for a single worker or job.
+pub struct TileScheduler {
+    workers: usize,
+}
+
+impl TileScheduler {
+    pub fn new(workers: usize) -> Self {
+        TileScheduler { workers: workers.max(1) }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Map `f` over `jobs`, returning results in job order. `f` gets
+    /// `(job_index, &job)`.
+    pub fn map<T, R, F>(&self, jobs: &[T], f: F) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+        F: Fn(usize, &T) -> R + Sync,
+    {
+        let w = self.workers.min(jobs.len());
+        if w <= 1 {
+            return jobs.iter().enumerate().map(|(i, j)| f(i, j)).collect();
+        }
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(jobs.len());
+        slots.resize_with(jobs.len(), || None);
+        std::thread::scope(|s| {
+            let f = &f;
+            let handles: Vec<_> = (0..w)
+                .map(|t| {
+                    s.spawn(move || {
+                        let mut got = Vec::new();
+                        let mut i = t;
+                        while i < jobs.len() {
+                            got.push((i, f(i, &jobs[i])));
+                            i += w;
+                        }
+                        got
+                    })
+                })
+                .collect();
+            for h in handles {
+                match h.join() {
+                    Ok(part) => {
+                        for (i, r) in part {
+                            slots[i] = Some(r);
+                        }
+                    }
+                    Err(p) => std::panic::resume_unwind(p),
+                }
+            }
+        });
+        slots
+            .into_iter()
+            .map(|r| r.expect("every job produced a result"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::quant::Quantizer;
+    use crate::util::testkit::f32_vec;
+    use crate::util::Pcg32;
+    use crate::MACRO_COLS;
+
+    /// A small two-layer tile set: dims `fi -> fo` per layer.
+    fn layer_tiles(dims: &[usize], seed: u64) -> Vec<LayerTiles> {
+        let q = Quantizer::new(6);
+        let mut rng = Pcg32::seeded(seed);
+        dims.windows(2)
+            .map(|w| {
+                let (fi, fo) = (w[0], w[1]);
+                let wq = q.quantize(&f32_vec(&mut rng, fi * fo, 1.0));
+                let blocks = fi.div_ceil(MACRO_COLS);
+                let tiles: Vec<Vec<QuantTensor>> = (0..blocks)
+                    .map(|cb| {
+                        let lo = cb * MACRO_COLS;
+                        let hi = (lo + MACRO_COLS).min(fi);
+                        (0..fo)
+                            .map(|j| {
+                                let mut codes = vec![0i32; MACRO_COLS];
+                                for (k, i) in (lo..hi).enumerate() {
+                                    codes[k] = wq.codes[i * fo + j];
+                                }
+                                QuantTensor { codes, delta: wq.delta, bits: 6 }
+                            })
+                            .collect()
+                    })
+                    .collect();
+                LayerTiles { fo, tiles }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn strategy_parsing_and_labels() {
+        assert_eq!(PlacementStrategy::parse("packed"), Some(PlacementStrategy::Packed));
+        assert_eq!(
+            PlacementStrategy::parse("replicated"),
+            Some(PlacementStrategy::Replicated)
+        );
+        assert_eq!(PlacementStrategy::parse("magic"), None);
+        assert_eq!(PlacementStrategy::Replicated.label(), "replicated");
+        assert_eq!(PlacementStrategy::default(), PlacementStrategy::Packed);
+    }
+
+    #[test]
+    fn packed_places_each_tile_once_round_robin() {
+        let layers = layer_tiles(&[40, 33, 6], 3);
+        let cfg = GridConfig::with_macros(3, PlacementStrategy::Packed);
+        let grid = MacroGrid::place(&cfg, &layers);
+        // 40 -> 33: 2 col blocks x 3 row blocks; 33 -> 6: 2 x 1
+        assert_eq!(grid.tile_count(), 2 * 3 + 2);
+        assert_eq!(grid.spilled_tiles(), 0);
+        for t in 0..grid.tile_count() {
+            assert_eq!(grid.tile_replicas(t), &[t % 3], "tile {t}");
+        }
+        let per = grid.placement().resident_per_macro();
+        assert_eq!(per.iter().sum::<usize>(), grid.tile_count());
+    }
+
+    #[test]
+    fn replicated_fills_leftover_capacity_without_duplicates() {
+        let layers = layer_tiles(&[31, 16, 4], 5); // 1 + 1 = 2 tiles
+        let cfg = GridConfig {
+            macros: 4,
+            placement: PlacementStrategy::Replicated,
+            capacity: 2,
+        };
+        let grid = MacroGrid::place(&cfg, &layers);
+        assert_eq!(grid.spilled_tiles(), 0);
+        for t in 0..grid.tile_count() {
+            let reps = grid.tile_replicas(t);
+            assert!(!reps.is_empty());
+            let mut sorted = reps.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), reps.len(), "no macro holds tile {t} twice");
+        }
+        // 8 slots, 2 tiles: replication fills every slot
+        let per = grid.placement().resident_per_macro();
+        assert!(per.iter().all(|&n| n <= 2));
+        assert_eq!(per.iter().sum::<usize>(), 8);
+    }
+
+    #[test]
+    fn overflow_tiles_spill_and_meter_reloads() {
+        let layers = layer_tiles(&[62, 33, 6], 7); // 2x3 + 2x1 = 8 tiles
+        let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 2 };
+        let grid = MacroGrid::place(&cfg, &layers);
+        assert_eq!(grid.spilled_tiles(), 8 - 4);
+        let q = Quantizer::new(6);
+        let mut rng = Pcg32::seeded(11);
+        let x = q.quantize(&f32_vec(&mut rng, MACRO_COLS, 1.0));
+        let col = vec![true; MACRO_COLS];
+        // tile 0 is resident, the last tile is spilled
+        let resident_rows = grid.tiles[0].rows.len();
+        let spilled_idx = grid.tile_count() - 1;
+        assert!(grid.tile_replicas(spilled_idx).is_empty());
+        let id = grid.tile_id(spilled_idx);
+        let spilled_rows = grid.tiles[spilled_idx].rows.len();
+        grid.run_tile(0, 0, 0, &x, &col, &vec![true; resident_rows]);
+        assert_eq!(grid.stats().weight_reloads, 0, "resident tiles never reload");
+        grid.run_tile(
+            id.layer,
+            id.col_block,
+            id.row_block,
+            &x,
+            &col,
+            &vec![true; spilled_rows],
+        );
+        let st = grid.stats();
+        assert_eq!(st.weight_reloads, 1, "spilled tiles reload per execution");
+        assert!(st.weight_reload_bits > 0);
+        assert!(st.weight_load_bits > 0);
+    }
+
+    #[test]
+    fn per_macro_ledgers_sum_to_the_call_totals() {
+        let layers = layer_tiles(&[40, 20, 4], 9);
+        let grid = MacroGrid::place(
+            &GridConfig::with_macros(3, PlacementStrategy::Packed),
+            &layers,
+        );
+        let q = Quantizer::new(6);
+        let mut rng = Pcg32::seeded(13);
+        let mut total = MacroRunStats::default();
+        for cb in 0..2 {
+            for rb in 0..2 {
+                let x = q.quantize(&f32_vec(&mut rng, MACRO_COLS, 1.0));
+                let rows = grid.tiles[grid.tile_index(0, cb, rb)].rows.len();
+                let (_, st) =
+                    grid.run_tile(0, cb, rb, &x, &vec![true; MACRO_COLS], &vec![true; rows]);
+                total.merge_counts(&st);
+            }
+        }
+        let snap = grid.stats();
+        let summed = snap.total();
+        assert_eq!(summed.compute_cycles, total.compute_cycles);
+        assert_eq!(summed.adc_conversions, total.adc_conversions);
+        assert_eq!(summed.driven_col_cycles, total.driven_col_cycles);
+        assert_eq!(summed.adc_cycles, total.adc_cycles);
+        assert!(snap.utilization() > 0.0 && snap.utilization() <= 1.0);
+        assert!(snap.span_cycles() <= snap.total_busy_cycles());
+    }
+
+    #[test]
+    fn exec_delta_diffs_snapshots() {
+        let layers = layer_tiles(&[31, 16, 4], 15);
+        let grid = MacroGrid::place(
+            &GridConfig::with_macros(2, PlacementStrategy::Packed),
+            &layers,
+        );
+        let before = grid.stats();
+        let q = Quantizer::new(6);
+        let mut rng = Pcg32::seeded(17);
+        let x = q.quantize(&f32_vec(&mut rng, MACRO_COLS, 1.0));
+        let (_, st) = grid.run_tile(0, 0, 0, &x, &vec![true; MACRO_COLS], &vec![true; 16]);
+        let gx = grid.stats().exec_delta(&before);
+        assert_eq!(gx.macros, 2);
+        assert_eq!(gx.busy_cycles, st.compute_cycles + st.adc_cycles);
+        assert_eq!(gx.span_cycles, gx.busy_cycles, "one tile runs on one macro");
+        assert_eq!(gx.weight_reloads, 0);
+        assert!(gx.utilization() > 0.0);
+        // merge: sequential calls chain spans
+        let mut acc = gx;
+        acc.merge(&gx);
+        assert_eq!(acc.busy_cycles, 2 * gx.busy_cycles);
+        assert_eq!(acc.span_cycles, 2 * gx.span_cycles);
+    }
+
+    #[test]
+    fn scheduler_preserves_job_order() {
+        let sched = TileScheduler::new(4);
+        let jobs: Vec<usize> = (0..23).collect();
+        let out = sched.map(&jobs, |i, &j| {
+            assert_eq!(i, j);
+            j * 2
+        });
+        assert_eq!(out, (0..23).map(|j| j * 2).collect::<Vec<_>>());
+        // inline path (single worker) agrees
+        let inline = TileScheduler::new(1).map(&jobs, |_, &j| j * 2);
+        assert_eq!(out, inline);
+    }
+
+    #[test]
+    fn grid_outputs_match_a_dedicated_macro() {
+        // the same tile through the grid and through a private CimMacro
+        // must agree bit for bit — the substrate never changes numerics
+        let layers = layer_tiles(&[31, 16], 21);
+        let grid = MacroGrid::place(
+            &GridConfig::with_macros(2, PlacementStrategy::Replicated),
+            &layers,
+        );
+        let q = Quantizer::new(6);
+        let mut rng = Pcg32::seeded(23);
+        let x = q.quantize(&f32_vec(&mut rng, MACRO_COLS, 1.0));
+        let col: Vec<bool> = (0..MACRO_COLS).map(|i| i % 3 != 0).collect();
+        let row: Vec<bool> = (0..16).map(|r| r % 2 == 0).collect();
+        let (got, _) = grid.run_tile(0, 0, 0, &x, &col, &row);
+        let mut mac = CimMacro::paper_default();
+        let (want, _) = mac.correlate(&x, &grid.tiles[0].rows, &col, &row);
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.to_bits(), w.to_bits());
+        }
+    }
+}

@@ -24,6 +24,12 @@ use super::xadc::{AdcKind, SarAdc};
 use crate::operator::bitplane::{BitplaneSchedule, CycleKind, OperatorKind};
 use crate::operator::quant::QuantTensor;
 
+/// Most plane-sum trace entries a **merged** accumulator retains (see
+/// [`MacroRunStats::merge`]). Per-call traces are never truncated —
+/// the delta executor and the MAV-calibration path read them straight
+/// off individual `correlate` results.
+pub const PLANE_SUMS_RESERVOIR: usize = 4096;
+
 /// Cost counters for one `correlate` call.
 #[derive(Clone, Debug, Default)]
 pub struct MacroRunStats {
@@ -40,12 +46,27 @@ pub struct MacroRunStats {
 }
 
 impl MacroRunStats {
+    /// Fold another run into this accumulator. The plane-sum trace is
+    /// kept only up to [`PLANE_SUMS_RESERVOIR`] entries: long-lived
+    /// accumulators (streaming sessions, serving ledgers) merge one
+    /// trace per conversion and would otherwise grow without bound,
+    /// while a bounded prefix is all the empirical-MAV consumers need.
+    /// Use [`Self::merge_counts`] when the trace is not wanted at all.
     pub fn merge(&mut self, other: &MacroRunStats) {
+        self.merge_counts(other);
+        let room = PLANE_SUMS_RESERVOIR.saturating_sub(self.plane_sums.len());
+        let take = other.plane_sums.len().min(room);
+        self.plane_sums.extend_from_slice(&other.plane_sums[..take]);
+    }
+
+    /// Fold only the cost counters, dropping the per-conversion trace
+    /// (which would grow by one entry per conversion — tens of
+    /// thousands per MNIST row).
+    pub fn merge_counts(&mut self, other: &MacroRunStats) {
         self.compute_cycles += other.compute_cycles;
         self.driven_col_cycles += other.driven_col_cycles;
         self.adc_conversions += other.adc_conversions;
         self.adc_cycles += other.adc_cycles;
-        self.plane_sums.extend_from_slice(&other.plane_sums);
     }
 
     /// Mean SAR cycles per conversion.
@@ -268,6 +289,28 @@ mod tests {
         assert_eq!(stats.adc_conversions, 160);
         assert!(stats.adc_cycles > 0);
         assert_eq!(stats.plane_sums.len(), 160);
+    }
+
+    #[test]
+    fn merged_plane_sum_traces_stay_bounded() {
+        // long-running accumulators (sessions, ledgers) merge stats per
+        // conversion forever; the trace must not grow without bound
+        let mut acc = MacroRunStats::default();
+        let chunk = MacroRunStats {
+            compute_cycles: 10,
+            plane_sums: vec![1; 1000],
+            ..Default::default()
+        };
+        for _ in 0..100 {
+            acc.merge(&chunk);
+        }
+        assert_eq!(acc.compute_cycles, 1000, "counts always accumulate");
+        assert_eq!(acc.plane_sums.len(), super::PLANE_SUMS_RESERVOIR);
+        // counts-only merge keeps the trace empty
+        let mut counts = MacroRunStats::default();
+        counts.merge_counts(&chunk);
+        assert_eq!(counts.compute_cycles, 10);
+        assert!(counts.plane_sums.is_empty());
     }
 
     #[test]

@@ -8,9 +8,14 @@
 //!   search vs the paper's MAV-statistics-driven asymmetric search.
 //! * [`macro_sim`] — the full macro: schedule-driven product-sum with
 //!   the array + ADC in the loop, cycle and energy event accounting.
+//! * [`grid`] — the multi-macro chip: `M` concurrent macros with
+//!   weight-stationary tile placement (`packed`/`replicated`), the
+//!   order-preserving [`grid::TileScheduler`], per-macro cost ledgers,
+//!   and spill/reload accounting.
 
 pub mod array;
 pub mod cell;
+pub mod grid;
 pub mod macro_sim;
 pub mod mav;
 pub mod timing;
@@ -18,6 +23,10 @@ pub mod xadc;
 
 pub use array::CimArray;
 pub use cell::BitCell;
+pub use grid::{
+    GridConfig, GridExecStats, GridRunStats, LayerTiles, MacroGrid, PlacementStrategy,
+    TileId, TileScheduler,
+};
 pub use macro_sim::{CimMacro, MacroRunStats};
 pub use mav::MavModel;
 pub use xadc::{AdcKind, SarAdc};

@@ -21,7 +21,8 @@
 
 use super::batcher::chunk_plan;
 use crate::backend::{
-    BackendOptions, ExecutionBackend, InputDeltaStats, PjrtBackend, PlanState, Row,
+    BackendOptions, ExecutionBackend, GridExecStats, InputDeltaStats, PjrtBackend, PlanState,
+    Row,
 };
 use crate::cim::macro_sim::MacroRunStats;
 use crate::dropout::mask::DropoutMask;
@@ -154,6 +155,10 @@ pub struct McOutput {
     pub stream: Option<StreamFrameStats>,
     /// Aggregated measured macro counters (measuring backends only).
     pub macro_stats: Option<MacroRunStats>,
+    /// Macro-grid accounting summed over the request's backend calls
+    /// (grid-executing backends only): busy/span cycles, utilization,
+    /// spilled-tile weight reloads.
+    pub grid: Option<GridExecStats>,
 }
 
 /// Temporal-reuse accounting of one streaming-session frame.
@@ -176,18 +181,25 @@ struct RunAcc {
     measured_pj: f64,
     any_measured: bool,
     stats: Option<MacroRunStats>,
+    grid: Option<GridExecStats>,
 }
 
 impl RunAcc {
-    fn absorb(&mut self, energy_pj: Option<f64>, stats: Option<&MacroRunStats>) {
-        if let Some(e) = energy_pj {
+    fn absorb(&mut self, out: &crate::backend::ExecOutput) {
+        if let Some(e) = out.energy_pj {
             self.measured_pj += e;
             self.any_measured = true;
         }
-        if let Some(s) = stats {
+        if let Some(s) = &out.stats {
             match &mut self.stats {
                 Some(t) => t.merge(s),
                 None => self.stats = Some(s.clone()),
+            }
+        }
+        if let Some(g) = &out.grid {
+            match &mut self.grid {
+                Some(t) => t.merge(g),
+                None => self.grid = Some(*g),
             }
         }
     }
@@ -343,7 +355,7 @@ impl McDropoutEngine {
     ) -> Result<Self> {
         let registry = ModelRegistry::builtin(meta);
         let spec = registry.get(cfg.net.id())?;
-        let opts = BackendOptions { bits: cfg.bits, pallas: cfg.pallas };
+        let opts = BackendOptions { bits: cfg.bits, pallas: cfg.pallas, ..Default::default() };
         let backend = PjrtBackend::load(rt, artifacts, spec, &opts)?;
         Self::with_backend(Box::new(backend), spec, cfg.bits, cfg.mode)
     }
@@ -360,6 +372,13 @@ impl McDropoutEngine {
     /// Whether responses carry measured (vs modeled) energy.
     pub fn measures_energy(&self) -> bool {
         self.backend.caps().measures_energy
+    }
+
+    /// Chip-level energy report of the backend's macro grid (cim-sim
+    /// only): per-macro dynamic pJ, one-time weight-stationary loads,
+    /// spill reloads, idle-macro leakage, utilization.
+    pub fn chip_report(&self) -> Option<crate::energy::ChipEnergyReport> {
+        self.backend.chip_report()
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -465,7 +484,7 @@ impl McDropoutEngine {
             .collect();
         let out = self.backend.execute_rows(&rows)?;
         ensure!(out.outputs.len() == n, "unexpected output size");
-        acc.absorb(out.energy_pj, out.stats.as_ref());
+        acc.absorb(&out);
         outputs.extend(out.outputs);
         Ok(())
     }
@@ -496,7 +515,7 @@ impl McDropoutEngine {
         let plan = run.builder.chunk(xq, masks, sampled);
         let out = self.backend.execute_plan(&plan, &mut run.state)?;
         ensure!(out.outputs.len() == n, "unexpected output size");
-        acc.absorb(out.energy_pj, out.stats.as_ref());
+        acc.absorb(&out);
         run.stats.merge(&plan.stats);
         let base = outputs.len();
         outputs.resize(base + n, Vec::new());
@@ -603,6 +622,7 @@ impl McDropoutEngine {
             plan: plan_info,
             stream: None,
             macro_stats: acc.stats,
+            grid: acc.grid,
         })
     }
 
@@ -683,6 +703,7 @@ impl McDropoutEngine {
             plan: plan_info,
             stream: None,
             macro_stats: acc.stats,
+            grid: acc.grid,
         })
     }
 
@@ -766,7 +787,7 @@ impl McDropoutEngine {
                 plan.epsilon = sess.epsilon;
                 let out = self.backend.execute_plan(&plan, &mut sess.state)?;
                 ensure!(out.outputs.len() == n, "unexpected output size");
-                acc.absorb(out.energy_pj, out.stats.as_ref());
+                acc.absorb(&out);
                 sess.stats.merge(&plan.stats);
                 let base = outputs.len();
                 outputs.resize(base + n, Vec::new());
@@ -789,7 +810,7 @@ impl McDropoutEngine {
                 let out = self.backend.execute_plan(&chunk.plan, &mut sess.state)?;
                 let n = chunk.plan.rows.len();
                 ensure!(out.outputs.len() == n, "unexpected output size");
-                acc.absorb(out.energy_pj, out.stats.as_ref());
+                acc.absorb(&out);
                 // the frame's input sync happens on its first chunk;
                 // later chunks see unchanged codes and report nothing
                 if input_delta.is_none() {
@@ -819,6 +840,7 @@ impl McDropoutEngine {
             plan: plan_info,
             stream: Some(stream),
             macro_stats: acc.stats,
+            grid: acc.grid,
         })
     }
 

@@ -1,9 +1,11 @@
 //! Serving metrics: request counts, latency quantiles, executions,
 //! the adaptive-sampling ledger (samples used/saved, verdicts,
 //! abstention rate), the delta-schedule ledger (MACs saved by compute
-//! reuse, §IV-B ordering gain, schedule-cache hit rate), and the
+//! reuse, §IV-B ordering gain, schedule-cache hit rate), the
 //! streaming-session ledger (frames, schedule reuses, input columns
-//! skipped by cross-frame reuse, per-frame energy).
+//! skipped by cross-frame reuse, per-frame energy), and the macro-grid
+//! ledger (utilization of the simulated chip's macros, spilled-tile
+//! weight reloads).
 //!
 //! Latencies live in a bounded ring of the most recent
 //! [`LATENCY_WINDOW`] samples — a long-running pool must not grow
@@ -11,6 +13,7 @@
 //! snapshot per call (`summary()` sorts exactly once).
 
 use super::engine::StreamFrameStats;
+use crate::backend::GridExecStats;
 use crate::dropout::plan::PlanStats;
 use crate::uncertainty::Verdict;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -98,6 +101,15 @@ pub struct Metrics {
     stream_full_recomputes: AtomicU64,
     /// Energy of session frames, femtojoules (for per-frame pJ).
     stream_energy_fj: AtomicU64,
+    // -- macro-grid ledger (multi-macro cim-sim execution) --
+    /// Busy macro-cycles across all grid-executed requests.
+    grid_busy_cycles: AtomicU64,
+    /// Σ per-call span cycles (the chip's serialized critical path).
+    grid_span_cycles: AtomicU64,
+    /// Σ macros × span per call — the utilization denominator.
+    grid_macro_span_cycles: AtomicU64,
+    /// Spilled-tile weight reloads (0 when every model fits the grid).
+    weight_reloads: AtomicU64,
 }
 
 impl Metrics {
@@ -197,6 +209,16 @@ impl Metrics {
             self.stream_energy_fj
                 .fetch_add((energy_pj * 1000.0).round() as u64, Ordering::Relaxed);
         }
+    }
+
+    /// Record one request's macro-grid accounting (the engine's
+    /// [`GridExecStats`], already summed over its backend calls).
+    pub fn record_grid(&self, g: &GridExecStats) {
+        self.grid_busy_cycles.fetch_add(g.busy_cycles, Ordering::Relaxed);
+        self.grid_span_cycles.fetch_add(g.span_cycles, Ordering::Relaxed);
+        self.grid_macro_span_cycles
+            .fetch_add(g.macros as u64 * g.span_cycles, Ordering::Relaxed);
+        self.weight_reloads.fetch_add(g.weight_reloads, Ordering::Relaxed);
     }
 
     pub fn requests(&self) -> u64 {
@@ -354,6 +376,24 @@ impl Metrics {
         }
     }
 
+    /// Mean busy fraction of the simulated chip's macros over grid-
+    /// executed requests: `Σ busy / Σ (macros · span)`. 1.0 = every
+    /// macro busy for every request's whole span; `1/M` = the grid ran
+    /// single-macro-serial.
+    pub fn macro_utilization(&self) -> f64 {
+        let denom = self.grid_macro_span_cycles.load(Ordering::Relaxed);
+        if denom == 0 {
+            0.0
+        } else {
+            self.grid_busy_cycles.load(Ordering::Relaxed) as f64 / denom as f64
+        }
+    }
+
+    /// Spilled-tile weight reloads across grid-executed requests.
+    pub fn weight_reloads(&self) -> u64 {
+        self.weight_reloads.load(Ordering::Relaxed)
+    }
+
     /// Mean measured/modeled energy per session frame (pJ).
     pub fn stream_frame_energy_pj(&self) -> f64 {
         let frames = self.stream_frames();
@@ -452,6 +492,13 @@ impl Metrics {
                 100.0 * self.stream_input_skip_ratio(),
                 self.stream_full_recomputes(),
                 self.stream_frame_energy_pj(),
+            ));
+        }
+        if self.grid_span_cycles.load(Ordering::Relaxed) > 0 {
+            s.push_str(&format!(
+                " | grid: macro_utilization={:.0}% weight_reloads={}",
+                100.0 * self.macro_utilization(),
+                self.weight_reloads(),
             ));
         }
         s
@@ -580,6 +627,36 @@ mod tests {
         assert!(snap.contains("stream: frames=3"), "missing stream ledger: {snap}");
         assert!(snap.contains("sched_reuse=2"), "{snap}");
         assert!(snap.contains("input_cols_skipped=60"), "{snap}");
+    }
+
+    #[test]
+    fn grid_ledger_appears_in_the_metrics_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("grid:"), "no grid traffic, no grid line");
+        assert_eq!(m.macro_utilization(), 0.0);
+        assert_eq!(m.weight_reloads(), 0);
+        // a perfectly balanced 4-macro request, then a skewed one
+        m.record_grid(&GridExecStats {
+            macros: 4,
+            busy_cycles: 4000,
+            span_cycles: 1000,
+            weight_reloads: 0,
+            weight_reload_bits: 0,
+        });
+        assert!((m.macro_utilization() - 1.0).abs() < 1e-12);
+        m.record_grid(&GridExecStats {
+            macros: 4,
+            busy_cycles: 1000,
+            span_cycles: 1000,
+            weight_reloads: 3,
+            weight_reload_bits: 900,
+        });
+        // Σ busy = 5000 over Σ macros·span = 8000
+        assert!((m.macro_utilization() - 5000.0 / 8000.0).abs() < 1e-12);
+        assert_eq!(m.weight_reloads(), 3);
+        let snap = m.summary();
+        assert!(snap.contains("macro_utilization="), "snapshot missing utilization: {snap}");
+        assert!(snap.contains("weight_reloads=3"), "snapshot missing reloads: {snap}");
     }
 
     #[test]

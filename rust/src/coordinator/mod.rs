@@ -31,8 +31,10 @@
 //! * [`metrics`] — throughput/latency counters (bounded latency
 //!   window, one sort per snapshot), total request energy, the
 //!   adaptive ledger (samples used/saved, verdict counts, abstention
-//!   rate, samples-used histogram), and the streaming ledger (frames,
-//!   schedule reuses, input columns skipped, per-frame pJ).
+//!   rate, samples-used histogram), the streaming ledger (frames,
+//!   schedule reuses, input columns skipped, per-frame pJ), and the
+//!   macro-grid ledger (chip utilization, spilled-tile weight
+//!   reloads; fed by `CoordinatorConfig::{macros, placement}`).
 
 pub mod batcher;
 pub mod engine;

@@ -60,7 +60,7 @@ use super::request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
     StreamFrameInfo,
 };
-use crate::backend::{make_backend, BackendKind, BackendOptions};
+use crate::backend::{make_backend, BackendKind, BackendOptions, PlacementStrategy};
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
 use crate::dropout::plan::{OrderingMode, ScheduleCache};
 use crate::energy::ModeConfig;
@@ -207,6 +207,13 @@ pub struct CoordinatorConfig {
     pub backend: BackendKind,
     /// Precision (None = fp32 pjrt graphs / 6-bit cim-sim codes).
     pub bits: Option<u8>,
+    /// Concurrent macros of the simulated chip (cim-sim backend only;
+    /// 1 = the legacy single-macro substrate).
+    pub macros: usize,
+    /// Weight-stationary tile placement across the grid's macros
+    /// (cim-sim only; `replicated` lets independent MC samples of the
+    /// same tile run on different macros concurrently).
+    pub placement: PlacementStrategy,
     /// Dropout-bit source: None = ideal Bernoulli; Some(a) = Beta(a,a)
     /// perturbed (the Fig. 12(c)/13(f) non-ideality study).
     pub beta_a: Option<f64>,
@@ -244,6 +251,8 @@ impl Default for CoordinatorConfig {
             workers: 2,
             backend: BackendKind::default(),
             bits: None,
+            macros: 1,
+            placement: PlacementStrategy::default(),
             beta_a: None,
             pallas: false,
             microbatch: true,
@@ -429,7 +438,12 @@ fn ensure_engine(
             reason: format!("{e:#}"),
         })?);
     }
-    let opts = BackendOptions { bits: cfg.bits, pallas: cfg.pallas };
+    let opts = BackendOptions {
+        bits: cfg.bits,
+        pallas: cfg.pallas,
+        macros: cfg.macros,
+        placement: cfg.placement,
+    };
     let backend = make_backend(kind, state.rt.as_ref(), &cfg.artifacts, spec, &opts)?;
     let mut engine = McDropoutEngine::with_backend(
         backend,
@@ -814,6 +828,9 @@ pub fn serve_stream_request(
     if let Some(plan) = &out.plan {
         metrics.record_plan(plan);
     }
+    if let Some(g) = &out.grid {
+        metrics.record_grid(g);
+    }
     let fstats = out.stream.unwrap_or_default();
     metrics.record_stream(&fstats, out.energy_pj);
     let d = fstats.input_delta.unwrap_or_default();
@@ -923,6 +940,9 @@ fn classify_fixed(
     if let Some(plan) = &out.plan {
         metrics.record_plan(plan);
     }
+    if let Some(g) = &out.grid {
+        metrics.record_grid(g);
+    }
     let mut ens = ClassEnsemble::new(engine.out_dim());
     for s in &out.samples {
         ens.add_logits(s);
@@ -954,6 +974,9 @@ fn regress_fixed(
     metrics.record_execution(out.samples.len());
     if let Some(plan) = &out.plan {
         metrics.record_plan(plan);
+    }
+    if let Some(g) = &out.grid {
+        metrics.record_grid(g);
     }
     let mut ens = RegressionEnsemble::new(engine.out_dim());
     for s in &out.samples {
@@ -1033,6 +1056,9 @@ fn classify_adaptive(
     if let Some(plan) = &out.plan {
         metrics.record_plan(plan);
     }
+    if let Some(g) = &out.grid {
+        metrics.record_grid(g);
+    }
     // the final chunk is not passed through the callback — fold it in
     for o in &out.samples[fed..] {
         ens.add_logits(o);
@@ -1053,6 +1079,9 @@ fn classify_adaptive(
                 metrics.record_execution(more.samples.len());
                 if let Some(plan) = &more.plan {
                     metrics.record_plan(plan);
+                }
+                if let Some(g) = &more.grid {
+                    metrics.record_grid(g);
                 }
                 for o in &more.samples {
                     ens.add_logits(o);
@@ -1127,6 +1156,9 @@ fn regress_adaptive(
     if let Some(plan) = &out.plan {
         metrics.record_plan(plan);
     }
+    if let Some(g) = &out.grid {
+        metrics.record_grid(g);
+    }
     for o in &out.samples[fed..] {
         ens.add_sample(o);
     }
@@ -1143,6 +1175,9 @@ fn regress_adaptive(
                 metrics.record_execution(more.samples.len());
                 if let Some(plan) = &more.plan {
                     metrics.record_plan(plan);
+                }
+                if let Some(g) = &more.grid {
+                    metrics.record_grid(g);
                 }
                 for o in &more.samples {
                     ens.add_sample(o);
@@ -1311,6 +1346,9 @@ mod tests {
         assert!(cfg.adaptive.is_none());
         assert!(cfg.microbatch);
         assert_eq!(cfg.backend, BackendKind::default());
+        // the legacy single-macro chip unless a grid is asked for
+        assert_eq!(cfg.macros, 1);
+        assert_eq!(cfg.placement, PlacementStrategy::Packed);
         // dense execution unless delta scheduling is asked for
         assert!(!cfg.reuse);
         assert_eq!(cfg.ordering, OrderingMode::Nn2Opt);

@@ -13,7 +13,7 @@ pub mod model;
 pub mod params;
 
 pub use model::{
-    DeltaScheduleReport, EnergyBreakdown, EnergyModel, LayerWorkload, ModeConfig,
-    StreamingReport,
+    ChipEnergyReport, DeltaScheduleReport, EnergyBreakdown, EnergyModel, LayerWorkload,
+    ModeConfig, StreamingReport,
 };
 pub use params::EnergyParams;

@@ -111,12 +111,16 @@ pub struct EnergyBreakdown {
     pub adc_logic_fj: f64,
     pub rng_fj: f64,
     pub digital_fj: f64,
+    /// Weight bitplane (re)stores — zero on the weight-stationary fast
+    /// path; nonzero only when spilled tiles reloaded during the run.
+    pub weights_fj: f64,
 }
 
 impl EnergyBreakdown {
     pub fn total_fj(&self) -> f64 {
         self.array_fj + self.adc_analog_fj + self.adc_logic_fj + self.rng_fj
             + self.digital_fj
+            + self.weights_fj
     }
 
     pub fn total_pj(&self) -> f64 {
@@ -155,6 +159,40 @@ pub struct StreamingReport {
     /// `1 - steady / first`: the per-frame saving of staying in the
     /// session instead of re-running frames independently.
     pub steady_saving: f64,
+}
+
+/// Chip-level energy report of a [`MacroGrid`](crate::cim::grid::MacroGrid)
+/// run (see [`EnergyModel::chip_report`]): per-macro dynamic energy
+/// from measured counters, the one-time weight-stationary placement
+/// loads, spill reloads, and LSTP leakage of macros idling while the
+/// busiest one finishes.
+#[derive(Clone, Debug, Default)]
+pub struct ChipEnergyReport {
+    /// Macros in the grid.
+    pub macros: usize,
+    /// Dynamic (measured-counter) energy per macro, pJ.
+    pub per_macro_pj: Vec<f64>,
+    /// Sum of `per_macro_pj`.
+    pub dynamic_pj: f64,
+    /// Weight bits stored at placement time — priced **once**, not per
+    /// call (the weight-stationary contract).
+    pub weight_load_pj: f64,
+    /// Spilled-tile re-stores across the run.
+    pub weight_reload_pj: f64,
+    /// Leakage of idle macro-cycles over the chip's span.
+    pub idle_leakage_pj: f64,
+    /// The busiest macro's cycles (the chip's critical path).
+    pub span_cycles: u64,
+    /// `Σ busy / (M · span)` — 1.0 = perfectly balanced grid.
+    pub utilization: f64,
+}
+
+impl ChipEnergyReport {
+    /// Everything the chip spent: dynamic + weight loads + reloads +
+    /// idle leakage.
+    pub fn total_pj(&self) -> f64 {
+        self.dynamic_pj + self.weight_load_pj + self.weight_reload_pj + self.idle_leakage_pj
+    }
 }
 
 /// The energy model.
@@ -258,7 +296,14 @@ impl EnergyModel {
             digital_fj += (w.rows * w.iters) as f64 * p.e_reuse_combine_fj;
         }
 
-        EnergyBreakdown { array_fj, adc_analog_fj, adc_logic_fj, rng_fj, digital_fj }
+        EnergyBreakdown {
+            array_fj,
+            adc_analog_fj,
+            adc_logic_fj,
+            rng_fj,
+            digital_fj,
+            weights_fj: 0.0,
+        }
     }
 
     /// Price *measured* macro counters instead of analytic
@@ -308,7 +353,15 @@ impl EnergyModel {
             rng_fj: rng_bits as f64 * p.e_rng_bit_fj
                 + sched_read_bits as f64 * p.e_sched_read_bit_fj,
             digital_fj: stats.compute_cycles as f64 * p.e_shift_add_fj,
+            weights_fj: 0.0,
         }
+    }
+
+    /// Energy of storing `bits` weight bits into macro SRAM (pJ): the
+    /// unit both the one-time placement loads and the spilled-tile
+    /// reloads are priced in.
+    pub fn weight_store_pj(&self, bits: u64) -> f64 {
+        bits as f64 * self.params.e_weight_store_bit_fj / 1000.0
     }
 
     /// Energy saving from truncating the workload's MC budget to
@@ -376,6 +429,46 @@ impl EnergyModel {
             first_frame_pj: first,
             steady_frame_pj: steady,
             steady_saving: if first > 0.0 { 1.0 - steady / first } else { 0.0 },
+        }
+    }
+
+    /// Chip-level report for a macro grid's cumulative counters: each
+    /// macro's dynamic energy priced from its *measured* ledger, the
+    /// weight-stationary placement loads priced exactly once, spill
+    /// reloads priced per re-store, and LSTP leakage priced for every
+    /// cycle a macro sat idle while the busiest one was still working
+    /// (`(M · span − Σ busy) / f_clk × P_leak`). RNG/schedule-read
+    /// energy is request-level, not macro-level, and is deliberately
+    /// absent here — the per-request breakdowns already carry it.
+    pub fn chip_report(
+        &self,
+        grid: &crate::cim::grid::GridRunStats,
+        operator: OperatorKind,
+        adc: AdcKind,
+    ) -> ChipEnergyReport {
+        let per_macro_pj: Vec<f64> = grid
+            .per_macro
+            .iter()
+            .map(|st| self.measured_energy(st, operator, adc, 0).total_pj())
+            .collect();
+        let dynamic_pj: f64 = per_macro_pj.iter().sum();
+        let span = grid.span_cycles();
+        let idle_cycles =
+            (grid.macros() as u64 * span).saturating_sub(grid.total_busy_cycles());
+        // cycles / f_clk seconds × nW → pJ (1 nW·s = 1e3 pJ... spelled
+        // out: s × (nW·1e-9 W) × 1e12 pJ/J)
+        let idle_leakage_pj = idle_cycles as f64 / crate::CLOCK_HZ
+            * (self.params.p_macro_leak_nw * 1e-9)
+            * 1e12;
+        ChipEnergyReport {
+            macros: grid.macros(),
+            per_macro_pj,
+            dynamic_pj,
+            weight_load_pj: self.weight_store_pj(grid.weight_load_bits),
+            weight_reload_pj: self.weight_store_pj(grid.weight_reload_bits),
+            idle_leakage_pj,
+            span_cycles: span,
+            utilization: grid.utilization(),
         }
     }
 
@@ -588,6 +681,81 @@ mod tests {
         // degenerate dense measurement: no division by zero
         let z = m.delta_vs_modeled(&LayerWorkload::paper_default(), 0.0, 60.0);
         assert_eq!(z.measured_saving, 0.0);
+    }
+
+    #[test]
+    fn chip_report_prices_loads_once_and_idle_leakage() {
+        use crate::cim::grid::GridRunStats;
+        let m = EnergyModel::paper_default();
+        let busy = MacroRunStats {
+            compute_cycles: 1000,
+            driven_col_cycles: 20_000,
+            adc_conversions: 1000,
+            adc_cycles: 2700,
+            plane_sums: Vec::new(),
+        };
+        let grid = GridRunStats {
+            per_macro: vec![busy.clone(), MacroRunStats::default()],
+            weight_load_bits: 10_000,
+            weight_reloads: 3,
+            weight_reload_bits: 600,
+            spilled_tiles: 1,
+        };
+        let r = m.chip_report(
+            &grid,
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+        );
+        assert_eq!(r.macros, 2);
+        assert_eq!(r.per_macro_pj.len(), 2);
+        assert!(r.per_macro_pj[0] > 0.0 && r.per_macro_pj[1] == 0.0);
+        assert!((r.dynamic_pj - r.per_macro_pj[0]).abs() < 1e-12);
+        // loads priced once from placement bits, reloads from re-stored
+        // bits — NOT from call counts
+        let p = EnergyParams::default();
+        assert!((r.weight_load_pj - 10_000.0 * p.e_weight_store_bit_fj / 1000.0).abs() < 1e-9);
+        assert!((r.weight_reload_pj - 600.0 * p.e_weight_store_bit_fj / 1000.0).abs() < 1e-9);
+        // one macro did everything: span = its busy cycles, the other
+        // macro leaked for exactly that long, utilization = 1/2
+        assert_eq!(r.span_cycles, 1000 + 2700);
+        let want_leak = 3700.0 / crate::CLOCK_HZ * (p.p_macro_leak_nw * 1e-9) * 1e12;
+        assert!((r.idle_leakage_pj - want_leak).abs() < 1e-15);
+        assert!(r.idle_leakage_pj > 0.0);
+        assert!((r.utilization - 0.5).abs() < 1e-12);
+        assert!(r.total_pj() > r.dynamic_pj);
+        // a perfectly balanced grid leaks nothing and reports util 1.0
+        let balanced = GridRunStats {
+            per_macro: vec![busy.clone(), busy],
+            weight_load_bits: 10_000,
+            weight_reloads: 0,
+            weight_reload_bits: 0,
+            spilled_tiles: 0,
+        };
+        let rb = m.chip_report(
+            &balanced,
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+        );
+        assert_eq!(rb.idle_leakage_pj, 0.0);
+        assert!((rb.utilization - 1.0).abs() < 1e-12);
+        assert_eq!(rb.weight_reload_pj, 0.0);
+    }
+
+    #[test]
+    fn weight_store_energy_lands_in_the_total() {
+        let m = EnergyModel::paper_default();
+        let mut e = m.measured_energy(
+            &MacroRunStats::default(),
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+            0,
+        );
+        assert_eq!(e.weights_fj, 0.0, "stationary path pays no re-stores");
+        let base = e.total_fj();
+        e.weights_fj = 50.0;
+        assert!((e.total_fj() - base - 50.0).abs() < 1e-12);
+        let per_kbit = EnergyParams::default().e_weight_store_bit_fj;
+        assert!((m.weight_store_pj(1000) - per_kbit).abs() < 1e-12);
     }
 
     #[test]

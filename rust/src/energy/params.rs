@@ -34,6 +34,15 @@ pub struct EnergyParams {
     pub e_shift_add_fj: f64,
     /// Reuse combine (P_{i-1} +/- delta) per output per iteration.
     pub e_reuse_combine_fj: f64,
+    /// SRAM write per *weight bit* stored into a macro: paid once per
+    /// resident copy at placement time (weight-stationary mapping) and
+    /// again on every spilled-tile reload.
+    pub e_weight_store_bit_fj: f64,
+    /// Standby leakage power of one idle macro, nanowatts. LSTP 16 nm
+    /// is chosen *because* this is tiny — idle macros on a wide grid
+    /// cost almost nothing — but the chip-level report prices it
+    /// explicitly instead of pretending it is zero.
+    pub p_macro_leak_nw: f64,
 }
 
 impl Default for EnergyParams {
@@ -48,6 +57,8 @@ impl Default for EnergyParams {
             e_sched_read_bit_fj: 0.6,
             e_shift_add_fj: 0.25,
             e_reuse_combine_fj: 0.5,
+            e_weight_store_bit_fj: 1.0,
+            p_macro_leak_nw: 5.0,
         }
     }
 }

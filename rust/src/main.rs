@@ -14,7 +14,7 @@
 //! `cargo bench`; these subcommands are quick interactive slices.
 
 use anyhow::{anyhow, bail, Result};
-use mc_cim::backend::{make_backend, BackendKind, BackendOptions};
+use mc_cim::backend::{make_backend, BackendKind, BackendOptions, PlacementStrategy};
 use mc_cim::bayes::ClassEnsemble;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
@@ -67,6 +67,9 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
   --backend NAME    execution backend: pjrt | cim-sim
                     (default: pjrt when built with the feature, else cim-sim;
                      cim-sim runs the bit-exact macro sim and reports MEASURED energy)
+  --macros N        concurrent macros of the simulated chip (cim-sim; default 1)
+  --placement S     weight-stationary tile placement: packed | replicated
+                    (cim-sim; replicated runs independent MC samples in parallel)
   classify: --index N --samples N --bits B --rotate DEG
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --reuse=true --ordering MODE
@@ -95,6 +98,14 @@ delta-scheduled execution (see README 'Delta-scheduled MC execution'):
                           reuse; bit-exact, measured savings on cim-sim)
   --ordering MODE         none | nn-2opt | exact          (default nn-2opt;
                           §IV-B TSP sample ordering within each chunk)
+
+macro-grid execution (see README 'Scaling out the simulated chip'):
+  --macros N              run the cim-sim chip as N concurrent macros with
+                          weight-stationary tiles (outputs bit-identical to
+                          --macros 1; wall-clock and utilization change)
+  --placement S           packed (one copy per tile) | replicated (leftover
+                          macro SRAM holds hot-tile replicas, so MC samples
+                          fan out without serializing)
 
 streaming VO sessions (see README 'Streaming inference sessions'):
   --stream=true           serve the frame sequence as ONE session: the
@@ -177,6 +188,44 @@ fn backend_from_args(args: &Args) -> Result<BackendKind> {
     }
 }
 
+/// Parse the macro-grid flags: `--macros N --placement STRATEGY`.
+fn grid_from_args(args: &Args) -> Result<(usize, PlacementStrategy)> {
+    let macros = args.get_usize("macros", 1).map_err(|e| anyhow!(e))?.max(1);
+    let placement = match args.get("placement") {
+        None => PlacementStrategy::default(),
+        Some(s) => PlacementStrategy::parse(s).ok_or_else(|| {
+            anyhow!("--placement: unknown strategy '{s}' (packed|replicated)")
+        })?,
+    };
+    Ok((macros, placement))
+}
+
+/// Grid half of the backend banner — only the cim-sim backend runs on
+/// the simulated macro grid; pjrt/stub silently ignore those options.
+fn grid_banner(kind: BackendKind, grid: (usize, PlacementStrategy)) -> String {
+    if kind == BackendKind::CimSim {
+        format!(" ({} macro(s), {})", grid.0, grid.1.label())
+    } else {
+        String::new()
+    }
+}
+
+/// Print the chip-level grid energy report after a cim-sim run.
+fn print_chip_report(engine: &McDropoutEngine) {
+    if let Some(r) = engine.chip_report() {
+        println!(
+            "chip: {} macro(s), utilization {:.0}%, dynamic {:.1} pJ | weights loaded once \
+             {:.2} pJ, reloads {:.2} pJ, idle leakage {:.4} pJ",
+            r.macros,
+            100.0 * r.utilization,
+            r.dynamic_pj,
+            r.weight_load_pj,
+            r.weight_reload_pj,
+            r.idle_leakage_pj,
+        );
+    }
+}
+
 /// Build one engine for `model` on the selected backend. The caller
 /// owns the PJRT runtime (when one is needed) so it outlives the
 /// engine.
@@ -187,10 +236,11 @@ fn build_engine(
     kind: BackendKind,
     bits: Option<u8>,
     rt: Option<&Runtime>,
+    grid: (usize, PlacementStrategy),
 ) -> Result<McDropoutEngine> {
     let registry = ModelRegistry::builtin(meta);
     let spec = registry.get(model)?;
-    let opts = BackendOptions { bits, pallas: false };
+    let opts = BackendOptions { bits, pallas: false, macros: grid.0, placement: grid.1 };
     let backend = make_backend(kind, rt, dir, spec, &opts)?;
     let engine = McDropoutEngine::with_backend(
         backend,
@@ -248,6 +298,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
     }
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
+    let grid = grid_from_args(args)?;
     let mut engine = build_engine(
         &dir,
         &meta,
@@ -255,10 +306,11 @@ fn cmd_classify(args: &Args) -> Result<()> {
         kind,
         (bits > 0).then_some(bits as u8),
         rt.as_ref(),
+        grid,
     )?;
     let (reuse, ordering) = delta_from_args(args)?;
     apply_delta(&mut engine, reuse, ordering);
-    println!("backend: {}", engine.backend_name());
+    println!("backend: {}{}", engine.backend_name(), grid_banner(kind, grid));
     let mut src = IdealBernoulli::new(1.0 - meta.dropout_p, 42);
 
     if let Some(ad) = adaptive_from_args(args)? {
@@ -325,6 +377,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
             100.0 * (1.0 - modeled_used / fixed_energy),
         );
         println!("votes: {:?}", ens.votes());
+        print_chip_report(&engine);
         return Ok(());
     }
 
@@ -343,6 +396,7 @@ fn cmd_classify(args: &Args) -> Result<()> {
         if out.energy_measured { " (measured)" } else { "" },
     );
     println!("votes: {:?}", ens.votes());
+    print_chip_report(&engine);
     Ok(())
 }
 
@@ -358,10 +412,11 @@ fn cmd_vo(args: &Args) -> Result<()> {
     let test = VoTest::load(&dir)?;
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
-    let mut engine = build_engine(&dir, &meta, "vo", kind, None, rt.as_ref())?;
+    let grid = grid_from_args(args)?;
+    let mut engine = build_engine(&dir, &meta, "vo", kind, None, rt.as_ref(), grid)?;
     let (reuse, ordering) = delta_from_args(args)?;
     apply_delta(&mut engine, reuse, ordering);
-    println!("backend: {}", engine.backend_name());
+    println!("backend: {}{}", engine.backend_name(), grid_banner(kind, grid));
     if stream {
         println!(
             "streaming session: schedule + product-sums persist across frames (epsilon {epsilon})"
@@ -410,6 +465,7 @@ fn cmd_vo(args: &Args) -> Result<()> {
             100.0 * r.steady_saving,
         );
     }
+    print_chip_report(&engine);
     Ok(())
 }
 
@@ -425,7 +481,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let is_adaptive = adaptive.is_some();
     let backend = backend_from_args(args)?;
     let (reuse, ordering) = delta_from_args(args)?;
-    println!("backend: {}", backend.label());
+    let (macros, placement) = grid_from_args(args)?;
+    println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement)));
     if reuse {
         println!("delta schedule: reuse on, ordering {}", ordering.label());
     }
@@ -434,6 +491,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers,
         backend,
         bits: (bits > 0).then_some(bits as u8),
+        macros,
+        placement,
         adaptive,
         reuse,
         ordering,

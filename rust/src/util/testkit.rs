@@ -55,6 +55,14 @@ pub fn bool_mask(rng: &mut Pcg32, len: usize, p_true: f64) -> Vec<bool> {
     (0..len).map(|_| rng.bernoulli(p_true)).collect()
 }
 
+/// Generate one {0.0, 1.0} dropout mask per hidden-layer width — the
+/// shape engines/backends expect on a [`crate::backend::Row`].
+pub fn binary_masks(rng: &mut Pcg32, dims: &[usize], keep: f64) -> Vec<Vec<f32>> {
+    dims.iter()
+        .map(|&d| (0..d).map(|_| if rng.bernoulli(keep) { 1.0 } else { 0.0 }).collect())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

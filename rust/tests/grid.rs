@@ -1,0 +1,302 @@
+//! Macro-grid property tests: placement invariants, `to_bits`
+//! equality of grid execution against the single-macro substrate
+//! across `M ∈ {1, 2, 4}` on the dense, plan/delta and streaming
+//! paths, and per-macro stats consistency. No artifacts needed.
+
+use mc_cim::backend::{CimSimBackend, ExecutionBackend, GridConfig, LayerParams, Row};
+use mc_cim::cim::grid::PlacementStrategy;
+use mc_cim::coordinator::{DeltaScheduleConfig, McDropoutEngine, McOutput};
+use mc_cim::dropout::plan::OrderingMode;
+use mc_cim::energy::ModeConfig;
+use mc_cim::model::ModelSpec;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::{binary_masks, f32_vec};
+use mc_cim::util::Pcg32;
+
+const DIMS: [usize; 4] = [40, 24, 12, 6];
+const SEED: u64 = 77;
+
+fn layer_params(dims: &[usize], seed: u64) -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..dims.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (dims[l], dims[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.25; fo],
+            }
+        })
+        .collect()
+}
+
+fn backend(dims: &[usize], grid: GridConfig) -> CimSimBackend {
+    let spec = ModelSpec::synthetic("grid-test", dims.to_vec());
+    CimSimBackend::from_params_grid(&spec, layer_params(dims, SEED), 6, grid).unwrap()
+}
+
+fn engine(dims: &[usize], grid: GridConfig, reuse: bool) -> McDropoutEngine {
+    let spec = ModelSpec::synthetic("grid-test", dims.to_vec());
+    let b = CimSimBackend::from_params_grid(&spec, layer_params(dims, SEED), 6, grid).unwrap();
+    let mut e = McDropoutEngine::with_backend(
+        Box::new(b),
+        &spec,
+        Some(6),
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    if reuse {
+        e.set_delta_schedule(DeltaScheduleConfig {
+            reuse: true,
+            ordering: OrderingMode::Nn2Opt,
+            cache: None,
+        });
+    }
+    e
+}
+
+fn mask_dims(dims: &[usize]) -> Vec<usize> {
+    dims[1..dims.len() - 1].to_vec()
+}
+
+fn assert_outputs_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: row count");
+    for (r, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{label}: row {r} width");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: row {r} out[{j}] differs ({va} vs {vb})"
+            );
+        }
+    }
+}
+
+fn grid_variants() -> Vec<GridConfig> {
+    let mut v = Vec::new();
+    for macros in [1usize, 2, 4] {
+        for placement in [PlacementStrategy::Packed, PlacementStrategy::Replicated] {
+            v.push(GridConfig::with_macros(macros, placement));
+        }
+    }
+    v
+}
+
+// ---------------------------------------------------------------
+// 1. placement invariants
+// ---------------------------------------------------------------
+
+#[test]
+fn every_tile_is_placed_exactly_once_within_capacity() {
+    for cfg in grid_variants() {
+        let b = backend(&DIMS, cfg);
+        let grid = b.grid();
+        assert_eq!(grid.macros(), cfg.macros);
+        // 40->24: 2x2, 24->12: 1x1, 12->6: 1x1
+        assert_eq!(grid.tile_count(), 6);
+        assert_eq!(grid.spilled_tiles(), 0, "default capacity must fit the model");
+        let per_macro = grid.placement().resident_per_macro();
+        assert!(per_macro.iter().all(|&n| n <= grid.placement().capacity()));
+        let mut copies = 0usize;
+        for t in 0..grid.tile_count() {
+            let reps = grid.tile_replicas(t);
+            assert!(!reps.is_empty(), "tile {t} must be resident somewhere");
+            // a tile never lands on one macro twice
+            let mut sorted = reps.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), reps.len(), "tile {t} duplicated on a macro");
+            if cfg.placement == PlacementStrategy::Packed {
+                assert_eq!(reps.len(), 1, "packed places tile {t} exactly once");
+            }
+            copies += reps.len();
+        }
+        assert_eq!(copies, per_macro.iter().sum::<usize>());
+        assert!(copies <= cfg.macros * grid.placement().capacity());
+        if cfg.placement == PlacementStrategy::Replicated && cfg.macros > 1 {
+            assert!(
+                copies > grid.tile_count(),
+                "replication must use leftover capacity ({copies} copies)"
+            );
+        }
+    }
+}
+
+#[test]
+fn capacity_overflow_spills_and_prices_reloads() {
+    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 1 };
+    let b = backend(&DIMS, cfg);
+    assert_eq!(b.grid().spilled_tiles(), 6 - 2);
+    let mut rng = Pcg32::seeded(5);
+    let input = f32_vec(&mut rng, DIMS[0], 1.0);
+    let masks = binary_masks(&mut rng, &mask_dims(&DIMS), 0.5);
+    let out = b
+        .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+        .unwrap();
+    let gx = out.grid.unwrap();
+    assert!(gx.weight_reloads > 0, "spilled tiles must meter reloads");
+    assert!(gx.weight_reload_bits > 0);
+    let report = b.chip_report().unwrap();
+    assert!(report.weight_reload_pj > 0.0);
+    // the fitting grid reloads nothing, ever
+    let fitting = backend(&DIMS, GridConfig::with_macros(2, PlacementStrategy::Packed));
+    let out2 = fitting
+        .execute_rows(&[Row { input: &input, masks: &masks, sampled_masks: true }])
+        .unwrap();
+    assert_eq!(out2.grid.unwrap().weight_reloads, 0);
+    assert_eq!(fitting.chip_report().unwrap().weight_reload_pj, 0.0);
+}
+
+// ---------------------------------------------------------------
+// 2. to_bits equality across M — dense path
+// ---------------------------------------------------------------
+
+#[test]
+fn dense_outputs_bit_equal_across_grid_sizes() {
+    let reference = backend(&DIMS, GridConfig::with_macros(1, PlacementStrategy::Packed));
+    let mut rng = Pcg32::seeded(9);
+    let input = f32_vec(&mut rng, DIMS[0], 1.0);
+    let masks: Vec<Vec<Vec<f32>>> =
+        (0..8).map(|_| binary_masks(&mut rng, &mask_dims(&DIMS), 0.5)).collect();
+    let rows: Vec<Row<'_>> = masks
+        .iter()
+        .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+        .collect();
+    let want = reference.execute_rows(&rows).unwrap();
+    let want_stats = want.stats.as_ref().unwrap();
+    for cfg in grid_variants() {
+        let b = backend(&DIMS, cfg);
+        let got = b.execute_rows(&rows).unwrap();
+        let label = format!("M={} {}", cfg.macros, cfg.placement.label());
+        assert_outputs_bit_equal(&want.outputs, &got.outputs, &label);
+        let st = got.stats.as_ref().unwrap();
+        assert_eq!(st.compute_cycles, want_stats.compute_cycles, "{label}");
+        assert_eq!(st.adc_conversions, want_stats.adc_conversions, "{label}");
+        assert_eq!(st.adc_cycles, want_stats.adc_cycles, "{label}");
+        assert_eq!(st.driven_col_cycles, want_stats.driven_col_cycles, "{label}");
+        assert_eq!(
+            got.energy_pj.unwrap().to_bits(),
+            want.energy_pj.unwrap().to_bits(),
+            "{label}: measured energy must not depend on the grid"
+        );
+    }
+}
+
+// ---------------------------------------------------------------
+// 3. to_bits equality across M — plan/delta path
+// ---------------------------------------------------------------
+
+fn run_planned(dims: &[usize], cfg: GridConfig, samples: usize) -> McOutput {
+    let e = engine(dims, cfg, true);
+    let mut rng = Pcg32::seeded(31);
+    let input = f32_vec(&mut rng, dims[0], 1.0);
+    let mut src = IdealBernoulli::new(e.mask_keep(), 4242);
+    e.infer_mc(&input, samples, &mut src).unwrap()
+}
+
+#[test]
+fn plan_outputs_bit_equal_across_grid_sizes() {
+    let want = run_planned(&DIMS, GridConfig::with_macros(1, PlacementStrategy::Packed), 12);
+    assert!(want.plan.is_some(), "reuse engine must run planned");
+    for cfg in grid_variants() {
+        let got = run_planned(&DIMS, cfg, 12);
+        let label = format!("plan M={} {}", cfg.macros, cfg.placement.label());
+        assert_outputs_bit_equal(&want.samples, &got.samples, &label);
+        assert_eq!(
+            want.energy_pj.to_bits(),
+            got.energy_pj.to_bits(),
+            "{label}: measured energy must not depend on the grid"
+        );
+    }
+    // and the plan path agrees with the dense path on the same masks
+    let e_dense = engine(&DIMS, GridConfig::with_macros(4, PlacementStrategy::Replicated), false);
+    let mut rng = Pcg32::seeded(31);
+    let input = f32_vec(&mut rng, DIMS[0], 1.0);
+    let mut src = IdealBernoulli::new(e_dense.mask_keep(), 4242);
+    let dense = e_dense.infer_mc(&input, 12, &mut src).unwrap();
+    assert_outputs_bit_equal(&want.samples, &dense.samples, "plan vs dense");
+}
+
+// ---------------------------------------------------------------
+// 4. to_bits equality across M — streaming path
+// ---------------------------------------------------------------
+
+fn drifting_frames(dims: &[usize], n: usize) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(51);
+    let mut x = f32_vec(&mut rng, dims[0], 1.0);
+    let mut frames = Vec::with_capacity(n);
+    for _ in 0..n {
+        frames.push(x.clone());
+        for v in x.iter_mut() {
+            // small correlated drift, like consecutive VO frames
+            *v = (*v + 0.03 * (rng.uniform(-1.0, 1.0) as f32)).clamp(-1.0, 1.0);
+        }
+    }
+    frames
+}
+
+fn run_stream(dims: &[usize], cfg: GridConfig, frames: &[Vec<f32>]) -> Vec<McOutput> {
+    let e = engine(dims, cfg, true);
+    let mut sess = e.begin_session(0.0);
+    let mut src = IdealBernoulli::new(e.mask_keep(), 4242);
+    frames
+        .iter()
+        .map(|x| e.infer_mc_stream(x, 10, &mut src, &mut sess).unwrap())
+        .collect()
+}
+
+#[test]
+fn stream_outputs_bit_equal_across_grid_sizes() {
+    let frames = drifting_frames(&DIMS, 5);
+    let want = run_stream(&DIMS, GridConfig::with_macros(1, PlacementStrategy::Packed), &frames);
+    for cfg in grid_variants() {
+        let got = run_stream(&DIMS, cfg, &frames);
+        for (f, (w, g)) in want.iter().zip(&got).enumerate() {
+            let label =
+                format!("stream frame {f} M={} {}", cfg.macros, cfg.placement.label());
+            assert_outputs_bit_equal(&w.samples, &g.samples, &label);
+        }
+        // warm frames really exercised the cross-frame delta path
+        let warm = got.last().unwrap().stream.as_ref().unwrap();
+        assert!(warm.schedule_reused);
+    }
+}
+
+// ---------------------------------------------------------------
+// 5. per-macro stats sum to the single-macro totals
+// ---------------------------------------------------------------
+
+#[test]
+fn per_macro_ledgers_sum_to_single_macro_totals() {
+    let single = backend(&DIMS, GridConfig::with_macros(1, PlacementStrategy::Packed));
+    let gridded = backend(&DIMS, GridConfig::with_macros(4, PlacementStrategy::Replicated));
+    let mut rng = Pcg32::seeded(13);
+    let input = f32_vec(&mut rng, DIMS[0], 1.0);
+    let masks: Vec<Vec<Vec<f32>>> =
+        (0..10).map(|_| binary_masks(&mut rng, &mask_dims(&DIMS), 0.5)).collect();
+    let rows: Vec<Row<'_>> = masks
+        .iter()
+        .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+        .collect();
+    single.execute_rows(&rows).unwrap();
+    gridded.execute_rows(&rows).unwrap();
+    let a = single.grid().stats();
+    let b = gridded.grid().stats();
+    let (ta, tb) = (a.total(), b.total());
+    assert_eq!(ta.compute_cycles, tb.compute_cycles);
+    assert_eq!(ta.driven_col_cycles, tb.driven_col_cycles);
+    assert_eq!(ta.adc_conversions, tb.adc_conversions);
+    assert_eq!(ta.adc_cycles, tb.adc_cycles);
+    // the single-macro grid is one busy macro; the 4-macro grid spread
+    // the same work (span can only shrink)
+    assert_eq!(a.span_cycles(), a.total_busy_cycles());
+    assert!(b.span_cycles() <= a.span_cycles());
+    assert!(b.utilization() > 0.0 && b.utilization() <= 1.0);
+    // per-macro dynamic energies in the chip report sum to the total
+    let report = gridded.chip_report().unwrap();
+    let sum: f64 = report.per_macro_pj.iter().sum();
+    assert!((sum - report.dynamic_pj).abs() < 1e-9);
+    assert_eq!(report.macros, 4);
+    assert!(report.weight_load_pj > 0.0);
+}
