@@ -16,6 +16,9 @@
 //!      trinomial vs empirical macro samples (does the analytic model
 //!      used by the fast path match the bit-exact simulator?).
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::cim::macro_sim::CimMacro;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
@@ -29,25 +32,30 @@ use mc_cim::util::stats::{mean, std_dev};
 use mc_cim::util::Pcg32;
 use std::time::Instant;
 
-fn ablation_adc() {
+/// Returns the worst median-split gap to the optimal tree (percent).
+fn ablation_adc() -> f64 {
     println!("== A. ADC search policy (expected SAR cycles) ==");
     println!("  sparsity(p_each)  midpoint  median-split  optimal  median gap to optimal");
+    let mut worst_gap = 0.0f64;
     for &p in &[0.25, 0.125, 0.08, 0.04] {
         let m = MavModel::trinomial(31, p, p);
         let sym = SarAdc::new(AdcKind::Symmetric, &m).expected_cycles(&m);
         let med = SarAdc::new(AdcKind::AsymmetricMedian, &m).expected_cycles(&m);
         let opt = SarAdc::new(AdcKind::AsymmetricOptimal, &m).expected_cycles(&m);
-        println!(
-            "  {p:16.3} {sym:9.2} {med:13.2} {opt:8.2} {:8.1}%",
-            100.0 * (med - opt) / opt
-        );
+        let gap = 100.0 * (med - opt) / opt;
+        worst_gap = worst_gap.max(gap);
+        println!("  {p:16.3} {sym:9.2} {med:13.2} {opt:8.2} {gap:8.1}%");
     }
     println!("  -> the iso-partition (median) rule stays within a few % of the DP-optimal tree\n");
+    worst_gap
 }
 
-fn ablation_tsp() {
+/// Returns the NN+2opt tour-cost improvement over identity order at
+/// T=30 (percent).
+fn ablation_tsp() -> f64 {
     println!("== B. TSP solver quality (31-bit masks) ==");
     println!("  T    identity  NN-only  NN+2opt  exact    2opt time");
+    let mut improvement_t30 = 0.0f64;
     for &t in &[8usize, 11, 30, 100] {
         let mut src = IdealBernoulli::new(0.5, 40 + t as u64);
         let masks: Vec<Vec<DropoutMask>> =
@@ -70,14 +78,19 @@ fn ablation_tsp() {
             Ok(order) => format!("{}", path_cost(&d, &order)),
             Err(_) => "-".into(), // past HELD_KARP_MAX: heuristic only
         };
+        if t == 30 {
+            improvement_t30 = 100.0 * (1.0 - c_full as f64 / c_id.max(1) as f64);
+        }
         println!(
             "  {t:3} {c_id:9} {c_nn:8} {c_full:8} {exact:>6}   {dt:9.2?}"
         );
     }
     println!("  -> 2-opt with restarts tracks the exact optimum on small instances\n");
+    improvement_t30
 }
 
-fn ablation_rng() {
+/// Returns (sigma with rail balancing only, sigma with threshold trim).
+fn ablation_rng() -> (f64, f64) {
     println!("== C. RNG calibration strategy (100 instances, target 0.5) ==");
     // balancing only: skip the threshold trim by calibrating to the
     // rail-balanced natural point
@@ -108,9 +121,11 @@ fn ablation_rng() {
         std_dev(&full)
     );
     println!("  -> the coarse trim step is what centres the population\n");
+    (std_dev(&bal_only), std_dev(&full))
 }
 
-fn ablation_mav_source() {
+/// Returns (empirical, analytic) expected SAR cycles.
+fn ablation_mav_source() -> (f64, f64) {
     println!("== D. analytic vs empirical MAV model (ADC expectation) ==");
     // run the bit-exact macro on random quantized workloads and collect
     // its observed plane sums; compare expected SAR cycles against the
@@ -130,15 +145,20 @@ fn ablation_mav_source() {
     }
     let empirical = MavModel::from_samples(31, &sums);
     let analytic = MavModel::trinomial(31, 0.125, 0.125);
-    for (label, m) in [("empirical (macro sim)", &empirical), ("analytic (energy model)", &analytic)] {
-        let adc = SarAdc::new(AdcKind::AsymmetricMedian, m);
+    let expected = |m: &MavModel| SarAdc::new(AdcKind::AsymmetricMedian, m).expected_cycles(m);
+    let cycles = (expected(&empirical), expected(&analytic));
+    for (label, m, c) in [
+        ("empirical (macro sim)", &empirical, cycles.0),
+        ("analytic (energy model)", &analytic, cycles.1),
+    ] {
         println!(
             "  {label:24}: entropy {:.2} bits, E[SAR cycles] {:.2}",
             m.entropy_bits(),
-            adc.expected_cycles(m)
+            c
         );
     }
     println!("  -> the fast analytic model prices the ADC within ~10% of the bit-exact macro");
+    cycles
 }
 
 fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
@@ -146,8 +166,18 @@ fn rand_vec(rng: &mut Pcg32, n: usize) -> Vec<f32> {
 }
 
 fn main() {
-    ablation_adc();
-    ablation_tsp();
-    ablation_rng();
-    ablation_mav_source();
+    let adc_gap = ablation_adc();
+    let tsp_gain = ablation_tsp();
+    let (sigma_balance_only, sigma_trimmed) = ablation_rng();
+    let (cycles_empirical, cycles_analytic) = ablation_mav_source();
+
+    let mut report = BenchReport::new("ablations");
+    report
+        .num("adc_median_gap_worst_pct", adc_gap)
+        .num("tsp_2opt_gain_t30_pct", tsp_gain)
+        .num("rng_sigma_balance_only", sigma_balance_only)
+        .num("rng_sigma_trimmed", sigma_trimmed)
+        .num("mav_cycles_empirical", cycles_empirical)
+        .num("mav_cycles_analytic", cycles_analytic);
+    report.write();
 }

@@ -19,6 +19,9 @@
 //! sharpness: most inputs near-unanimous, a minority ambiguous) and
 //! the numbers answer the same question about the stoppers.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::bayes::ClassEnsemble;
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use mc_cim::uncertainty::calibration::ReliabilityBins;
@@ -236,6 +239,19 @@ fn main() -> anyhow::Result<()> {
         "fixed-T agreement {:.4} below the 99% bar",
         h.agreement
     );
+
+    let mut report = BenchReport::new("adaptive_sampling");
+    report
+        .int("inputs", streams.len() as u64)
+        .num("ece", bins.ece())
+        .num("mean_used", h.mean_used)
+        .num("mean_used_highconf", h.mean_used_highconf)
+        .num("highconf_saving_pct", 100.0 * hc_saving)
+        .num("agreement_pct", 100.0 * h.agreement)
+        .num("accuracy_pct", 100.0 * h.accuracy)
+        .num("energy_saving_pct", 100.0 * h.energy_saving);
+    report.write();
+
     println!("PASS: >=30% samples saved on high-confidence inputs at >=99% agreement");
     Ok(())
 }

@@ -15,6 +15,9 @@
 //! * a seeded re-request is served from the ordered-schedule cache and
 //!   prices its mask bits as SRAM schedule reads.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::backend::{CimSimBackend, LayerParams};
 use mc_cim::coordinator::{
     serve_request, AdaptiveConfig, DeltaScheduleConfig, InferenceRequest, McDropoutEngine,
@@ -143,6 +146,7 @@ fn main() {
     );
 
     // 3. plan accounting: reuse saves MACs, ordering never hurts
+    let (dense_macs, ordered_macs) = (measured_macs(&out_dense), measured_macs(&out_ord));
     let plan = out_ord.plan.expect("delta runs report plans");
     let plan_unord = out_unord.plan.expect("delta runs report plans");
     assert!(plan.delta_macs_saved() > 0);
@@ -191,6 +195,20 @@ fn main() {
         100.0 * report.modeled_saving,
     );
     assert!(report.measured_saving > 0.0);
+
+    let mut out = BenchReport::new("delta_schedule");
+    out.int("dense_macs", dense_macs)
+        .int("ordered_macs", ordered_macs)
+        .num("dense_pj", out_dense.energy_pj)
+        .num("ordered_pj", out_ord.energy_pj)
+        .num("measured_saving_pct", 100.0 * report.measured_saving)
+        .num("modeled_saving_pct", 100.0 * report.modeled_saving)
+        .num("ordering_gain_pct", plan.ordering_gain_pct())
+        .int("plan_macs_saved", plan.delta_macs_saved())
+        .num("cache_hit_pj", hit.energy_pj)
+        .num("cache_miss_pj", miss.energy_pj)
+        .int("adaptive_samples_used", used_ord as u64);
+    out.write();
 
     println!("delta_schedule bench PASSED");
 }

@@ -7,6 +7,9 @@
 //! deliverable: the PJRT execute must dominate; coordinator overhead is
 //! measured as the residual). Results land in EXPERIMENTS.md §Perf.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::backend::BackendKind;
 use mc_cim::coordinator::{
     Coordinator, CoordinatorConfig, EngineConfig, McDropoutEngine, NetKind, Request,
@@ -18,7 +21,13 @@ use mc_cim::runtime::Runtime;
 use mc_cim::workloads::{mnist::MnistTest, Meta, ARTIFACTS_DIR};
 use std::time::Instant;
 
-fn sweep(workers: usize, requests: usize, samples: usize, test: &MnistTest) -> anyhow::Result<()> {
+fn sweep(
+    workers: usize,
+    requests: usize,
+    samples: usize,
+    test: &MnistTest,
+    report: &mut BenchReport,
+) -> anyhow::Result<()> {
     let coord = Coordinator::start(CoordinatorConfig {
         workers,
         ..Default::default()
@@ -46,6 +55,10 @@ fn sweep(workers: usize, requests: usize, samples: usize, test: &MnistTest) -> a
         }
     }
     let dt = t0.elapsed().as_secs_f64();
+    report
+        .num(&format!("w{workers}_s{samples}_req_s"), requests as f64 / dt)
+        .num(&format!("w{workers}_s{samples}_p50_ms"), coord.metrics.latency_ms(0.5))
+        .num(&format!("w{workers}_s{samples}_p95_ms"), coord.metrics.latency_ms(0.95));
     println!(
         "  workers={workers} samples={samples}: {:7.1} req/s  {:7.0} rows/s  p50 {:6.2} ms  p95 {:6.2} ms",
         requests as f64 / dt,
@@ -131,7 +144,7 @@ fn profile_single_path(meta: &Meta, test: &MnistTest) -> anyhow::Result<()> {
 /// SAR conversion is simulated), so the serving load stays tiny. The
 /// point is exercising the identical coordinator/backend path, with
 /// measured energy on every response.
-fn cim_sim_smoke(test: &MnistTest) -> anyhow::Result<()> {
+fn cim_sim_smoke(test: &MnistTest, report: &mut BenchReport) -> anyhow::Result<()> {
     println!("== cim-sim smoke sweep (bit-exact macro simulation, measured energy) ==");
     let coord = Coordinator::start(CoordinatorConfig {
         workers: 1,
@@ -160,6 +173,10 @@ fn cim_sim_smoke(test: &MnistTest) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64(),
         energy
     );
+    report
+        .text("mode", "cim_sim_smoke")
+        .num("smoke_secs", t0.elapsed().as_secs_f64())
+        .num("smoke_energy_pj", energy);
     println!("{}", coord.metrics.summary());
     coord.shutdown();
     Ok(())
@@ -175,10 +192,14 @@ fn main() -> anyhow::Result<()> {
 
     let backend = BackendKind::default();
     println!("execution backend: {}\n", backend.label());
+    let mut report = BenchReport::new("e2e_throughput");
+    report.text("backend", backend.label());
     if backend != BackendKind::Pjrt || Runtime::cpu().is_err() {
         // no PJRT here: run the macro-simulator path instead of the
         // full-load sweep (see cim_sim_smoke docs for why it is small)
-        return cim_sim_smoke(&test);
+        cim_sim_smoke(&test, &mut report)?;
+        report.write();
+        return Ok(());
     }
 
     if std::env::var("PROFILE_ONLY").is_ok() {
@@ -187,15 +208,16 @@ fn main() -> anyhow::Result<()> {
 
     println!("== worker scaling (200 classify requests x 30 samples) ==");
     for workers in [1usize, 2, 4, 8] {
-        sweep(workers, 200, 30, &test)?;
+        sweep(workers, 200, 30, &test, &mut report)?;
     }
 
     println!("\n== sample-count scaling (4 workers, 200 requests) ==");
     for samples in [10usize, 30, 60, 120] {
-        sweep(4, 200, samples, &test)?;
+        sweep(4, 200, samples, &test, &mut report)?;
     }
 
     println!();
     profile_single_path(&meta, &test)?;
+    report.write();
     Ok(())
 }

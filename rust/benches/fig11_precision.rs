@@ -11,6 +11,9 @@
 //! low precision (the paper's §V-C synergy), a knee at 4 bits, 2-bit
 //! breakdown.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::bayes::{ClassEnsemble, RegressionEnsemble};
 use mc_cim::coordinator::{EngineConfig, McDropoutEngine, NetKind};
 use mc_cim::rng::IdealBernoulli;
@@ -106,12 +109,17 @@ fn main() -> anyhow::Result<()> {
     let vo = VoTest::load(ARTIFACTS_DIR)?;
     let precisions: [Option<u8>; 5] = [None, Some(8), Some(6), Some(4), Some(2)];
     let label = |b: &Option<u8>| b.map(|v| format!("{v}-bit")).unwrap_or("fp32".into());
+    let key = |b: &Option<u8>| b.map(|v| format!("b{v}")).unwrap_or("fp32".into());
+    let mut report = BenchReport::new("fig11_precision");
 
     println!("== Fig 11(a): classifier accuracy vs precision ({N_IMAGES} images) ==");
     println!("{:>7} {:>12} {:>14}", "prec", "determin.", "MC-Dropout(30)");
     for b in &precisions {
         let det = mnist_acc(&rt, &meta, &test, *b, false)?;
         let mc = mnist_acc(&rt, &meta, &test, *b, true)?;
+        report
+            .num(&format!("mnist_{}_det_acc", key(b)), det)
+            .num(&format!("mnist_{}_mc_acc", key(b)), mc);
         println!("{:>7} {det:12.3} {mc:14.3}", label(b));
     }
 
@@ -120,19 +128,26 @@ fn main() -> anyhow::Result<()> {
     for b in &precisions {
         let det = vo_err(&rt, &meta, &vo, NetKind::Vo, *b, false)?;
         let mc = vo_err(&rt, &meta, &vo, NetKind::Vo, *b, true)?;
+        report
+            .num(&format!("vo_{}_det_err_m", key(b)), det)
+            .num(&format!("vo_{}_mc_err_m", key(b)), mc);
         println!("{:>7} {det:12.3} {mc:14.3}", label(b));
     }
 
     println!("\n== Fig 11(c): parameter-reduction ablation (fp32 / 4-bit) ==");
-    for (name, net) in [("full VO", NetKind::Vo), ("thin VO", NetKind::VoThin)] {
+    for (name, tag, net) in
+        [("full VO", "full", NetKind::Vo), ("thin VO", "thin", NetKind::VoThin)]
+    {
         let det32 = vo_err(&rt, &meta, &vo, net, None, false)?;
         let det4 = vo_err(&rt, &meta, &vo, net, Some(4), false)?;
         let mc4 = vo_err(&rt, &meta, &vo, net, Some(4), true)?;
+        report.num(&format!("{tag}_vo_b4_mc_advantage_m"), det4 - mc4);
         println!(
             "  {name:8}: det-fp32 {det32:.3}  det-4bit {det4:.3}  mc-4bit {mc4:.3}  (MC advantage {:+.3})",
             det4 - mc4
         );
     }
     println!("\n(shape targets: MC >= det at low precision; 2-bit breaks; thin net\n degrades less under MC than under deterministic inference)");
+    report.write();
     Ok(())
 }

@@ -8,6 +8,9 @@
 //! (e) correlation vs precision, (f) correlation vs Beta(a,a)
 //! perturbation, plus trajectory mean errors for (a-c).
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::bayes::RegressionEnsemble;
 use mc_cim::coordinator::{EngineConfig, McDropoutEngine, NetKind};
 use mc_cim::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
@@ -70,12 +73,20 @@ fn main() -> anyhow::Result<()> {
     };
     let mut src = IdealBernoulli::new(keep, 42);
     let (mc_err, mc_var) = mc_err_var(&eng4, &test, &norm, &mut src)?;
-    println!("  det fp32 : {:.3}", det(&eng32)?);
-    println!("  det 4-bit: {:.3}", det(&eng4)?);
+    let (det32, det4) = (det(&eng32)?, det(&eng4)?);
+    println!("  det fp32 : {det32:.3}");
+    println!("  det 4-bit: {det4:.3}");
     println!("  MC  4-bit: {:.3} ({} samples)", mean(&mc_err), SAMPLES);
+
+    let mut report = BenchReport::new("fig13_vo");
+    report
+        .num("det_fp32_err_m", det32)
+        .num("det_b4_err_m", det4)
+        .num("mc_b4_err_m", mean(&mc_err));
 
     println!("\n== Fig 13(d): error-variance Pearson r ==");
     println!("  r = {:+.3}  (paper: 0.31)", pearson(&mc_err, &mc_var));
+    report.num("err_var_pearson_b4", pearson(&mc_err, &mc_var));
 
     println!("\n== Fig 13(e): correlation vs precision ==");
     for bits in [8u8, 6, 4, 3, 2] {
@@ -84,6 +95,7 @@ fn main() -> anyhow::Result<()> {
         let eng = McDropoutEngine::load(&rt, ARTIFACTS_DIR, &meta, &cfg)?;
         let mut src = IdealBernoulli::new(keep, 42);
         let (e, v) = mc_err_var(&eng, &test, &norm, &mut src)?;
+        report.num(&format!("b{bits}_pearson"), pearson(&e, &v));
         println!("  {bits}-bit: r = {:+.3}", pearson(&e, &v));
     }
     println!("  (paper: good correlation (>0.3) from 4-bit onward)");
@@ -92,8 +104,10 @@ fn main() -> anyhow::Result<()> {
     for a in [50.0, 10.0, 4.0, 2.0, 1.25] {
         let mut src = BetaPerturbedBernoulli::new(keep, a, 23);
         let (e, v) = mc_err_var(&eng4, &test, &norm, &mut src)?;
+        report.num(&format!("beta_a{a}_pearson"), pearson(&e, &v));
         println!("  a = {a:5}: r = {:+.3}", pearson(&e, &v));
     }
     println!("  (paper: reasonable down to a = 2; drops at a = 1.25)");
+    report.write();
     Ok(())
 }

@@ -7,6 +7,9 @@
 //! 0.058); (d) calibration to targets 0.3 / 0.5 / 0.7. Plus the
 //! column-pool power-scaling ablation feeding Fig. 12(c).
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::rng::{calibrate, estimate_p1, CciRng, SramEmbeddedRng};
 use mc_cim::util::stats::{histogram, mean, std_dev};
 
@@ -42,6 +45,12 @@ fn main() {
         .collect();
     print_hist("SRAM-embedded CCI (paper sigma ~0.058)", &embedded);
 
+    let mut report = BenchReport::new("fig4_rng");
+    report
+        .num("bare_sigma", std_dev(&bare))
+        .num("embedded_sigma", std_dev(&embedded))
+        .num("embedded_mean", mean(&embedded));
+
     println!("\n== Fig 4(d): calibration targets ==");
     for &target in &[0.3, 0.5, 0.7] {
         let p1s: Vec<f64> = (0..N)
@@ -50,6 +59,9 @@ fn main() {
                 calibrate(&mut r, target, 0.06, 4).measured_p1
             })
             .collect();
+        report
+            .num(&format!("t{:02}_mean", (target * 100.0) as u32), mean(&p1s))
+            .num(&format!("t{:02}_sigma", (target * 100.0) as u32), std_dev(&p1s));
         println!(
             "  target {target}: mean {:.3} sigma {:.3}",
             mean(&p1s),
@@ -66,7 +78,9 @@ fn main() {
                 r.analytic_p1()
             })
             .collect();
+        report.num(&format!("pool{cols}_sigma"), std_dev(&p1s));
         println!("  {cols:2} columns: sigma(p1) {:.4}", std_dev(&p1s));
     }
     println!("\n(shape target: embedded sigma << bare sigma; spread grows as the pool shrinks)");
+    report.write();
 }

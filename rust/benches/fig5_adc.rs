@@ -7,6 +7,9 @@
 //! symmetric vs asymmetric search under typical / CR / CR+SO sparsity;
 //! (f) per-conversion SA logic + analog energy.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
 use mc_cim::energy::EnergyParams;
@@ -48,17 +51,23 @@ fn main() {
         }
     }
 
+    let mut report = BenchReport::new("fig5_adc");
+
     println!("\n== Fig 5(d): expected SAR cycles per conversion ==");
     println!("  operating point        levels  sym   asym-median  asym-optimal  savings");
-    for (label, p_each) in [
-        ("typical (p=0.5 drive)", 0.125),
-        ("compute reuse", 0.08),
-        ("reuse + ordering", 0.055),
+    for (tag, label, p_each) in [
+        ("typical", "typical (p=0.5 drive)", 0.125),
+        ("reuse", "compute reuse", 0.08),
+        ("reuse_ordered", "reuse + ordering", 0.055),
     ] {
         let m = MavModel::trinomial(31, p_each, p_each);
         let sym = SarAdc::new(AdcKind::Symmetric, &m).expected_cycles(&m);
         let med = SarAdc::new(AdcKind::AsymmetricMedian, &m).expected_cycles(&m);
         let opt = SarAdc::new(AdcKind::AsymmetricOptimal, &m).expected_cycles(&m);
+        report
+            .num(&format!("{tag}_sym_cycles"), sym)
+            .num(&format!("{tag}_asym_cycles"), med)
+            .num(&format!("{tag}_saving_pct"), 100.0 * (1.0 - med / sym));
         println!(
             "  {label:22} {:5}  {sym:4.2}  {med:11.2}  {opt:12.2}  {:5.1}%",
             m.levels(),
@@ -69,16 +78,18 @@ fn main() {
 
     println!("\n== Fig 5(f): per-conversion energy ==");
     let p = EnergyParams::lstp_16nm();
-    for (label, cycles, logic) in [
-        ("symmetric SA", 6.0, p.e_sa_logic_sym_fj),
-        ("asymmetric SA (typical MAV)", 3.6, p.e_sa_logic_asym_fj),
-        ("asymmetric SA (CR+SO MAV)", 3.1, p.e_sa_logic_asym_fj),
+    for (tag, label, cycles, logic) in [
+        ("sym", "symmetric SA", 6.0, p.e_sa_logic_sym_fj),
+        ("asym_typical", "asymmetric SA (typical MAV)", 3.6, p.e_sa_logic_asym_fj),
+        ("asym_crso", "asymmetric SA (CR+SO MAV)", 3.1, p.e_sa_logic_asym_fj),
     ] {
         let analog = cycles * p.e_sar_analog_fj;
+        report.num(&format!("{tag}_conversion_fj"), logic + analog);
         println!(
             "  {label:30} logic {logic:.1} fJ + analog {analog:.1} fJ = {:.1} fJ",
             logic + analog
         );
     }
     println!("  (paper: logic 1.4 vs 2.1 fJ/op; asymmetric wins overall — analog dominates)");
+    report.write();
 }

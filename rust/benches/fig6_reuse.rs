@@ -7,11 +7,15 @@
 //! the sample count and layer width to show where the savings saturate.
 //! Also times the TSP solver itself (the offline cost of §IV-B).
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
 use mc_cim::rng::IdealBernoulli;
 use std::time::Instant;
 
 fn main() {
+    let mut report = BenchReport::new("fig6_reuse");
     println!("== Fig 6(b): 10x10 FC layer, p = 0.5 ==");
     println!("  samples   typical-MACs  reuse%   reuse+SO%");
     for &t in &[10usize, 30, 50, 100, 200] {
@@ -20,6 +24,12 @@ fn main() {
         let typ = sched.workload(&[10], ExecutionMode::Typical);
         let cr = sched.workload(&[10], ExecutionMode::ComputeReuse);
         let so = sched.workload(&[10], ExecutionMode::ComputeReuseOrdered);
+        if t == 100 {
+            report
+                .int("t100_typical_macs", typ.macs)
+                .num("t100_reuse_pct", 100.0 * cr.ratio())
+                .num("t100_reuse_ordered_pct", 100.0 * so.ratio());
+        }
         println!(
             "  {t:7}   {:12}  {:5.1}%   {:5.1}%",
             typ.macs,
@@ -51,6 +61,7 @@ fn main() {
         let t0 = Instant::now();
         let (_, order) = sched.ordered();
         let dt = t0.elapsed();
+        report.num(&format!("tsp_t{t}_solve_ms"), dt.as_secs_f64() * 1e3);
         println!(
             "  {t:4} samples: {:8.2?} ({} cities, permutation ok: {})",
             dt,
@@ -62,4 +73,5 @@ fn main() {
             }
         );
     }
+    report.write();
 }

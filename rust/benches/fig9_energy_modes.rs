@@ -8,6 +8,9 @@
 //! as the ablation DESIGN.md calls out, plus precision & iteration
 //! scaling sweeps.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::cim::xadc::AdcKind;
 use mc_cim::dropout::schedule::ExecutionMode;
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
@@ -58,6 +61,11 @@ fn main() {
         "end-to-end savings: {:.1}% (paper ~43%)",
         100.0 * (1.0 - last / first)
     );
+    let mut report = BenchReport::new("fig9_energy_modes");
+    report
+        .num("typical_pj", first)
+        .num("reuse_ordered_pj", last)
+        .num("ladder_saving_pct", 100.0 * (1.0 - last / first));
 
     println!("\n== Fig 10: component breakdown ==");
     println!(
@@ -89,6 +97,7 @@ fn main() {
         let mut wb = w;
         wb.bits = bits;
         let e = model.inference_energy(&wb, &ModeConfig::mf_asym_reuse_ordered());
+        report.num(&format!("b{bits}_pj"), e.total_pj());
         println!("  {bits}-bit: {:6.1} pJ", e.total_pj());
     }
 
@@ -125,4 +134,5 @@ fn main() {
         println!("  {iters:4} iterations: {e:7.1} pJ{marginal}");
         prev = e;
     }
+    report.write();
 }

@@ -22,6 +22,9 @@
 //! Artifact-free: weights come from seeded PCG32 params plus a
 //! synthetic artifacts directory.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::backend::{
     CimSimBackend, ExecutionBackend, GridConfig, LayerParams, PlacementStrategy, Row,
 };
@@ -232,6 +235,21 @@ fn main() {
     assert!(snap.contains("macro_utilization="), "snapshot missing grid ledger: {snap}");
     assert!(snap.contains("weight_reloads="), "{snap}");
     println!("  snapshot: {}", snap.split(" | ").last().unwrap_or(&snap));
+
+    let mut report = BenchReport::new("grid_throughput");
+    report
+        .num("m1_ms", t1.as_secs_f64() * 1e3)
+        .num("m4_packed_ms", t4p.as_secs_f64() * 1e3)
+        .num("m4_replicated_ms", t4.as_secs_f64() * 1e3)
+        .num("m4_speedup", t1.as_secs_f64() / t4.as_secs_f64().max(1e-12))
+        .int("cores", cores as u64)
+        .num("request_pj", out1.energy_pj)
+        .num("utilization_pct", 100.0 * after.utilization)
+        .num("dynamic_pj", after.dynamic_pj)
+        .num("weight_load_pj", after.weight_load_pj)
+        .num("idle_leakage_pj", after.idle_leakage_pj)
+        .int("weight_reloads", g.weight_reloads);
+    report.write();
 
     println!("grid_throughput bench PASSED");
 }

@@ -1,0 +1,110 @@
+//! Shared bench-report harness (`mod harness;` from every bench).
+//!
+//! Each bench collects its headline numbers into a [`BenchReport`] and
+//! writes them to `BENCH_<name>.json` in the package root at the end
+//! of the run, so the perf trajectory (throughput, p50/p95 latency,
+//! measured pJ, samples saved, utilization) is machine-diffable across
+//! commits instead of living in scraped stdout. The files use the
+//! in-repo `util::json` writer — `BTreeMap`-backed, so key order is
+//! stable and diffs stay clean.
+//!
+//! Keys are flat by convention: sweep points prefix their parameters
+//! (`w4_req_s` = 4 workers), units go in the suffix (`_ms`, `_pj`,
+//! `_pct`, `_req_s`).
+
+// each bench pulls in the slice of this module it needs
+#![allow(dead_code)]
+
+use mc_cim::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One bench run's machine-readable results.
+pub struct BenchReport {
+    name: String,
+    obj: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str(name.into()));
+        BenchReport { name: name.into(), obj }
+    }
+
+    pub fn num(&mut self, key: &str, v: f64) -> &mut Self {
+        self.obj.insert(key.into(), Json::Num(v));
+        self
+    }
+
+    pub fn int(&mut self, key: &str, v: u64) -> &mut Self {
+        self.num(key, v as f64)
+    }
+
+    pub fn text(&mut self, key: &str, v: &str) -> &mut Self {
+        self.obj.insert(key.into(), Json::Str(v.into()));
+        self
+    }
+
+    pub fn flag(&mut self, key: &str, v: bool) -> &mut Self {
+        self.obj.insert(key.into(), Json::Bool(v));
+        self
+    }
+
+    pub fn nums(&mut self, key: &str, vs: &[f64]) -> &mut Self {
+        self.obj
+            .insert(key.into(), Json::Arr(vs.iter().map(|&v| Json::Num(v)).collect()));
+        self
+    }
+
+    /// Write `BENCH_<name>.json` into the bench's working directory
+    /// (the package root under `cargo bench`). Failing to write is
+    /// fatal: a perf trajectory with silent gaps is worse than a red
+    /// bench.
+    pub fn write(&self) {
+        let path = format!("BENCH_{}.json", self.name);
+        let body = Json::Obj(self.obj.clone()).to_string();
+        std::fs::write(&path, body + "\n").unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("wrote {path}");
+    }
+}
+
+/// Client-side latency recorder: push per-request milliseconds, read
+/// nearest-rank percentiles at the end.
+#[derive(Default)]
+pub struct Latencies {
+    ms: Vec<f64>,
+}
+
+impl Latencies {
+    pub fn new() -> Latencies {
+        Latencies::default()
+    }
+
+    pub fn push_ms(&mut self, ms: f64) {
+        self.ms.push(ms);
+    }
+
+    pub fn push_since(&mut self, t0: Instant) {
+        self.ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+
+    pub fn merge(&mut self, other: Latencies) {
+        self.ms.extend(other.ms);
+    }
+
+    pub fn count(&self) -> usize {
+        self.ms.len()
+    }
+
+    /// Nearest-rank quantile (0 when nothing was recorded).
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        if self.ms.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.ms.clone();
+        sorted.sort_by(f64::total_cmp);
+        let idx = ((sorted.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        sorted[idx]
+    }
+}

@@ -18,6 +18,9 @@
 //! * ε > 0 monotonically skips more input columns (the energy-for-
 //!   exactness trade documented in the README).
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::backend::{CimSimBackend, LayerParams};
 use mc_cim::coordinator::{serve_stream_request, InferenceRequest, McDropoutEngine, Metrics};
 use mc_cim::coordinator::{DeltaScheduleConfig, McOutput};
@@ -221,6 +224,20 @@ fn main() {
     println!(
         "  eps=0.05: {eps_skipped} columns carried over (vs {skipped} at eps=0), {eps_pj:.1} pJ"
     );
+
+    let mut out = BenchReport::new("stream_vo");
+    out.int("frames", FRAMES as u64)
+        .int("dense_macs", dense_macs)
+        .int("stream_macs", stream_macs)
+        .num("dense_pj", dense_pj)
+        .num("stream_pj", stream_pj)
+        .num("cold_frame_pj", report.first_frame_pj)
+        .num("steady_frame_pj", report.steady_frame_pj)
+        .num("steady_saving_pct", 100.0 * report.steady_saving)
+        .int("input_cols_skipped", skipped)
+        .int("eps005_input_cols_skipped", eps_skipped)
+        .num("eps005_pj", eps_pj);
+    out.write();
 
     println!("stream_vo bench PASSED");
 }

@@ -11,6 +11,9 @@
 //! the *ratios* (4-bit/6-bit ~1.57x, SO/CR ~1.12x) are the
 //! reproduction targets.
 
+mod harness;
+
+use harness::BenchReport;
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use mc_cim::workloads::Meta;
 
@@ -39,17 +42,19 @@ fn main() {
     println!("\nefficiency (30 MC-Dropout iterations per prediction):");
     println!("{:>6} {:>28} {:>14} {:>12}", "bits", "mode", "ops/J [T]", "paper TOPS/W");
     let rows = [
-        (4u8, ModeConfig::mf_asym_reuse(), 3.04),
-        (6u8, ModeConfig::mf_asym_reuse(), 2.0),
-        (4u8, ModeConfig::mf_asym_reuse_ordered(), 3.5),
-        (6u8, ModeConfig::mf_asym_reuse_ordered(), 2.23),
+        ("b4_cr", 4u8, ModeConfig::mf_asym_reuse(), 3.04),
+        ("b6_cr", 6u8, ModeConfig::mf_asym_reuse(), 2.0),
+        ("b4_crso", 4u8, ModeConfig::mf_asym_reuse_ordered(), 3.5),
+        ("b6_crso", 6u8, ModeConfig::mf_asym_reuse_ordered(), 2.23),
     ];
+    let mut report = BenchReport::new("table1");
     let mut ours = Vec::new();
-    for (bits, mode, paper) in rows {
+    for (tag, bits, mode, paper) in rows {
         let mut w = LayerWorkload::paper_default();
         w.bits = bits;
         let t = model.tops_per_watt(&w, &mode);
         ours.push(t);
+        report.num(&format!("{tag}_tops_w"), t);
         println!("{bits:>6} {:>28} {t:14.0} {paper:12.2}", mode.label());
     }
     println!("\nreproduction ratios (ours vs paper):");
@@ -68,4 +73,9 @@ fn main() {
         ours[3] / ours[1],
         2.23 / 2.0
     );
+    report
+        .num("ratio_b4_b6_cr", ours[0] / ours[1])
+        .num("ratio_b4_b6_crso", ours[2] / ours[3])
+        .num("ratio_so_cr_b6", ours[3] / ours[1]);
+    report.write();
 }

@@ -110,6 +110,18 @@ pub struct Metrics {
     grid_macro_span_cycles: AtomicU64,
     /// Spilled-tile weight reloads (0 when every model fits the grid).
     weight_reloads: AtomicU64,
+    // -- network front-door ledger (`net` module) --
+    /// TCP connections accepted onto a connection thread.
+    conns_opened: AtomicU64,
+    /// Connections torn down (any reason: client close, idle timeout,
+    /// protocol error, server drain).
+    conns_closed: AtomicU64,
+    /// Requests refused by admission control with an `Overloaded`
+    /// frame (max-inflight, connection cap, or credit window).
+    overload_rejections: AtomicU64,
+    /// Frames that failed to decode (the connection is torn down after
+    /// the first one).
+    malformed_frames: AtomicU64,
 }
 
 impl Metrics {
@@ -219,6 +231,26 @@ impl Metrics {
         self.grid_macro_span_cycles
             .fetch_add(g.macros as u64 * g.span_cycles, Ordering::Relaxed);
         self.weight_reloads.fetch_add(g.weight_reloads, Ordering::Relaxed);
+    }
+
+    /// Record one accepted network connection.
+    pub fn record_conn_open(&self) {
+        self.conns_opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one network connection teardown.
+    pub fn record_conn_close(&self) {
+        self.conns_closed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one admission-control rejection (`Overloaded` frame).
+    pub fn record_overload_rejection(&self) {
+        self.overload_rejections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one undecodable frame from a client.
+    pub fn record_malformed_frame(&self) {
+        self.malformed_frames.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn requests(&self) -> u64 {
@@ -403,6 +435,27 @@ impl Metrics {
         self.stream_energy_fj.load(Ordering::Relaxed) as f64 / 1000.0 / frames as f64
     }
 
+    pub fn conns_opened(&self) -> u64 {
+        self.conns_opened.load(Ordering::Relaxed)
+    }
+
+    pub fn conns_closed(&self) -> u64 {
+        self.conns_closed.load(Ordering::Relaxed)
+    }
+
+    /// Connections currently live (opened minus closed).
+    pub fn conns_active(&self) -> u64 {
+        self.conns_opened().saturating_sub(self.conns_closed())
+    }
+
+    pub fn overload_rejections(&self) -> u64 {
+        self.overload_rejections.load(Ordering::Relaxed)
+    }
+
+    pub fn malformed_frames(&self) -> u64 {
+        self.malformed_frames.load(Ordering::Relaxed)
+    }
+
     /// Sorted snapshot of the retained latency window (µs).
     fn latency_snapshot_us(&self) -> Vec<u64> {
         let mut v = self
@@ -499,6 +552,15 @@ impl Metrics {
                 " | grid: macro_utilization={:.0}% weight_reloads={}",
                 100.0 * self.macro_utilization(),
                 self.weight_reloads(),
+            ));
+        }
+        if self.conns_opened() > 0 {
+            s.push_str(&format!(
+                " | net: conns={} active={} overloaded={} malformed={}",
+                self.conns_opened(),
+                self.conns_active(),
+                self.overload_rejections(),
+                self.malformed_frames(),
             ));
         }
         s
@@ -657,6 +719,25 @@ mod tests {
         let snap = m.summary();
         assert!(snap.contains("macro_utilization="), "snapshot missing utilization: {snap}");
         assert!(snap.contains("weight_reloads=3"), "snapshot missing reloads: {snap}");
+    }
+
+    #[test]
+    fn net_ledger_accumulates_and_shows_in_summary() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("net:"), "no net traffic, no net line");
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_close();
+        m.record_overload_rejection();
+        m.record_malformed_frame();
+        assert_eq!(m.conns_opened(), 2);
+        assert_eq!(m.conns_closed(), 1);
+        assert_eq!(m.conns_active(), 1);
+        assert_eq!(m.overload_rejections(), 1);
+        assert_eq!(m.malformed_frames(), 1);
+        let snap = m.summary();
+        assert!(snap.contains("net: conns=2 active=1"), "{snap}");
+        assert!(snap.contains("overloaded=1"), "{snap}");
     }
 
     #[test]

@@ -26,8 +26,14 @@
 //!   panics are confined to the request that caused them. Optional
 //!   adaptive serving: sequential stoppers, risk-policy verdicts
 //!   (accept/abstain/escalate) on every response, and a shared sample
-//!   budget for graceful degradation. The legacy `Request`/`Response`
-//!   enums remain as shims.
+//!   budget for graceful degradation. Answers can go to a typed
+//!   channel or an arbitrary callback
+//!   ([`Coordinator::submit_request_with`] — the `net` front door's
+//!   path), a vanished caller never wedges a worker, and shutdown
+//!   drains queued jobs against a deadline
+//!   ([`Coordinator::shutdown_with_deadline`]), answering stragglers
+//!   with `ShuttingDown` instead of dropping them. The legacy
+//!   `Request`/`Response` enums remain as shims.
 //! * [`metrics`] — throughput/latency counters (bounded latency
 //!   window, one sort per snapshot), total request energy, the
 //!   adaptive ledger (samples used/saved, verdict counts, abstention
@@ -56,5 +62,5 @@ pub use request::{
 };
 pub use server::{
     serve_request, serve_stream_request, AdaptiveConfig, Coordinator, CoordinatorConfig,
-    Request, Response,
+    Request, Response, DEFAULT_DRAIN_DEADLINE,
 };

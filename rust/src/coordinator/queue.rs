@@ -55,25 +55,26 @@ impl<T> WorkQueue<T> {
         self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// Enqueue on the shared lane (any worker may take it). Returns
-    /// false — dropping the item — when the queue is closed.
-    pub fn push(&self, item: T) -> bool {
+    /// Enqueue on the shared lane (any worker may take it). A closed
+    /// queue refuses the item and hands it back so the producer can
+    /// answer the caller instead of silently dropping the job.
+    pub fn push(&self, item: T) -> Result<(), T> {
         let mut s = self.lock();
         if s.closed {
-            return false;
+            return Err(item);
         }
         s.shared.push_back(item);
         drop(s);
         self.cv.notify_one();
-        true
+        Ok(())
     }
 
-    /// Enqueue on `worker`'s pinned lane (affinity dispatch). Returns
-    /// false when the queue is closed.
-    pub fn push_to(&self, worker: usize, item: T) -> bool {
+    /// Enqueue on `worker`'s pinned lane (affinity dispatch). A closed
+    /// queue refuses and returns the item.
+    pub fn push_to(&self, worker: usize, item: T) -> Result<(), T> {
         let mut s = self.lock();
         if s.closed {
-            return false;
+            return Err(item);
         }
         let lane = worker % s.lanes.len();
         s.lanes[lane].push_back(item);
@@ -81,7 +82,7 @@ impl<T> WorkQueue<T> {
         // the pinned worker might be the one waiting — wake everyone,
         // non-targets re-check and sleep again
         self.cv.notify_all();
-        true
+        Ok(())
     }
 
     /// Hand a claimed-but-unwanted job back to the *front* of the
@@ -125,6 +126,19 @@ impl<T> WorkQueue<T> {
     pub fn close(&self) {
         self.lock().closed = true;
         self.cv.notify_all();
+    }
+
+    /// Remove and return every queued job across all lanes (shared
+    /// first, then pinned lanes in worker order). The drain deadline
+    /// path uses this to answer stranded jobs explicitly instead of
+    /// dropping their responders on the floor.
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut s = self.lock();
+        let mut out: Vec<T> = s.shared.drain(..).collect();
+        for lane in s.lanes.iter_mut() {
+            out.extend(lane.drain(..));
+        }
+        out
     }
 
     /// Jobs currently queued across all lanes.
@@ -217,14 +231,15 @@ mod tests {
     #[test]
     fn pinned_lane_beats_shared_and_close_drains() {
         let q = WorkQueue::new(2);
-        assert!(q.push(1));
-        assert!(q.push_to(0, 2));
-        assert!(q.push(3));
+        assert!(q.push(1).is_ok());
+        assert!(q.push_to(0, 2).is_ok());
+        assert!(q.push(3).is_ok());
         // worker 0 sees its pinned job first, then steals shared work
         assert_eq!(q.pop(0), Some(2));
         assert_eq!(q.pop(0), Some(1));
         q.close();
-        assert!(!q.push(9), "closed queue refuses producers");
+        assert_eq!(q.push(9), Err(9), "closed queue hands the item back");
+        assert_eq!(q.push_to(1, 9), Err(9));
         // queued work survives the close
         assert_eq!(q.pop(1), Some(3));
         assert_eq!(q.pop(1), None);
@@ -234,8 +249,8 @@ mod tests {
     #[test]
     fn requeue_goes_to_the_front_of_the_shared_lane() {
         let q = WorkQueue::new(1);
-        q.push(1);
-        q.push(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
         let claimed = q.try_pop_shared().unwrap();
         assert_eq!(claimed, 1);
         q.requeue(claimed);
@@ -243,6 +258,20 @@ mod tests {
         assert_eq!(q.pop(0), Some(1));
         assert_eq!(q.pop(0), Some(2));
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drain_all_empties_every_lane() {
+        let q = WorkQueue::new(2);
+        q.push(1).unwrap();
+        q.push_to(0, 2).unwrap();
+        q.push_to(1, 3).unwrap();
+        q.close();
+        let mut drained = q.drain_all();
+        drained.sort_unstable();
+        assert_eq!(drained, vec![1, 2, 3]);
+        assert!(q.is_empty());
+        assert_eq!(q.pop(0), None);
     }
 
     #[test]
@@ -254,7 +283,7 @@ mod tests {
                 let q = Arc::clone(&q);
                 std::thread::spawn(move || {
                     for i in 0..n_per {
-                        q.push(p * n_per + i);
+                        q.push(p * n_per + i).unwrap();
                     }
                 })
             })

@@ -179,7 +179,7 @@ impl InferenceRequest {
 
 /// Streaming-session echo on a response: which frame this was and how
 /// much of the previous frame's compute it reused.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct StreamFrameInfo {
     /// Session id the frame belongs to.
     pub session: String,
@@ -200,7 +200,7 @@ pub struct StreamFrameInfo {
 }
 
 /// Classification response.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ClassifyResponse {
     /// Model that served the request.
     pub model: String,
@@ -227,7 +227,7 @@ pub struct ClassifyResponse {
 }
 
 /// Pose-regression response.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct PoseResponse {
     /// Model that served the request.
     pub model: String,
@@ -245,7 +245,7 @@ pub struct PoseResponse {
 }
 
 /// A successful typed response.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum InferenceResponse {
     Class(ClassifyResponse),
     Pose(PoseResponse),

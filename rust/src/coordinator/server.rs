@@ -79,7 +79,7 @@ use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A serving request (legacy shim — prefer [`InferenceRequest`]).
 #[derive(Clone, Debug)]
@@ -143,14 +143,22 @@ impl From<InferenceResult> for Response {
     }
 }
 
-/// Where a job's answer goes: the typed channel or the legacy one.
+/// Where a job's answer goes: the typed channel, the legacy one, or an
+/// arbitrary callback (the network front door encodes the result onto
+/// the connection's writer).
 enum Responder {
     Typed(Sender<InferenceResult>),
     Legacy(Sender<Response>),
+    Callback(Box<dyn FnOnce(InferenceResult) + Send + 'static>),
 }
 
 impl Responder {
-    fn send(&self, result: InferenceResult) {
+    /// Deliver the result. Consuming by design (a job is answered
+    /// exactly once), and infallible from the worker's point of view:
+    /// a caller that hung up (dropped `Receiver`, vanished TCP client)
+    /// must not panic or wedge the worker — the send result is
+    /// discarded and the job stays fully metered.
+    fn send(self, result: InferenceResult) {
         match self {
             Responder::Typed(tx) => {
                 let _ = tx.send(result);
@@ -158,6 +166,7 @@ impl Responder {
             Responder::Legacy(tx) => {
                 let _ = tx.send(result.into());
             }
+            Responder::Callback(f) => f(result),
         }
     }
 }
@@ -309,17 +318,18 @@ impl Coordinator {
     /// Dispatch one job: session frames are pinned to their session's
     /// worker (that worker holds the schedule + product-sum state);
     /// everything else goes to the shared lane. A refused push (pool
-    /// shutting down) drops the job — its response channel reports
-    /// disconnection to the caller.
+    /// shutting down) answers the job with [`McCimError::ShuttingDown`]
+    /// instead of dropping it silently.
     fn dispatch(&self, job: Job) {
-        match &job.request.session {
+        let refused = match &job.request.session {
             Some(s) => {
                 let worker = self.router.route(&s.id);
-                let _ = self.queue.push_to(worker, job);
+                self.queue.push_to(worker, job)
             }
-            None => {
-                let _ = self.queue.push(job);
-            }
+            None => self.queue.push(job),
+        };
+        if let Err(job) = refused {
+            job.respond.send(Err(McCimError::ShuttingDown));
         }
     }
 
@@ -329,6 +339,17 @@ impl Coordinator {
         let (rtx, rrx) = channel();
         self.dispatch(Job { request, respond: Responder::Typed(rtx) });
         rrx
+    }
+
+    /// Submit a typed request whose answer is delivered to `respond`
+    /// (exactly once, from whichever thread finishes the job). This is
+    /// the network path: the callback encodes the result straight onto
+    /// the connection's writer without an intermediate channel.
+    pub fn submit_request_with<F>(&self, request: InferenceRequest, respond: F)
+    where
+        F: FnOnce(InferenceResult) + Send + 'static,
+    {
+        self.dispatch(Job { request, respond: Responder::Callback(Box::new(respond)) });
     }
 
     /// Convenience: submit a typed request and wait.
@@ -352,15 +373,42 @@ impl Coordinator {
             .context("worker pool hung up")
     }
 
-    /// Graceful shutdown: close the queue (already-queued jobs are
-    /// still served) and join workers.
-    pub fn shutdown(mut self) {
+    /// Graceful shutdown with the default drain deadline (see
+    /// [`Self::shutdown_with_deadline`]).
+    pub fn shutdown(self) {
+        self.shutdown_with_deadline(DEFAULT_DRAIN_DEADLINE);
+    }
+
+    /// Graceful shutdown: close the queue (producers are refused and
+    /// answered [`McCimError::ShuttingDown`]), give the workers up to
+    /// `deadline` to flush everything already queued, then answer any
+    /// still-stranded jobs explicitly and join. Returns the number of
+    /// jobs that missed the deadline (0 on a clean drain).
+    pub fn shutdown_with_deadline(mut self, deadline: Duration) -> usize {
         self.queue.close();
+        let t0 = Instant::now();
+        while !self.queue.is_empty() && t0.elapsed() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // past the deadline: pull the stragglers out so the workers'
+        // post-close drain loop terminates, and answer each one rather
+        // than letting its responder vanish with the queue
+        let stranded = self.queue.drain_all();
+        let missed = stranded.len();
+        for job in stranded {
+            self.metrics.record_load_shed(job.request.samples);
+            job.respond.send(Err(McCimError::ShuttingDown));
+        }
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+        missed
     }
 }
+
+/// How long [`Coordinator::shutdown`] waits for queued jobs to flush
+/// before answering the remainder with `ShuttingDown`.
+pub const DEFAULT_DRAIN_DEADLINE: Duration = Duration::from_secs(10);
 
 /// Most streaming sessions one worker keeps alive; beyond this the
 /// least-recently-used session is evicted (its next frame rebuilds

@@ -63,6 +63,13 @@ pub enum McCimError {
     WorkerPanic { model: String, kind: RequestKind, reason: String },
     /// The worker pool hung up before answering.
     WorkerLost,
+    /// The coordinator refused the request because it is draining
+    /// (graceful shutdown). Retry against another instance.
+    ShuttingDown,
+    /// Admission control refused the request before it touched the
+    /// queue (max-inflight reached, credit window exhausted). The
+    /// request itself is fine — retry after backoff.
+    Overloaded { reason: String },
 }
 
 impl McCimError {
@@ -127,6 +134,12 @@ impl fmt::Display for McCimError {
                 write!(f, "worker panicked serving a {kind} request on model '{model}': {reason}")
             }
             McCimError::WorkerLost => write!(f, "worker pool hung up before responding"),
+            McCimError::ShuttingDown => {
+                write!(f, "coordinator is shutting down; request refused")
+            }
+            McCimError::Overloaded { reason } => {
+                write!(f, "overloaded: {reason}")
+            }
         }
     }
 }
@@ -167,6 +180,9 @@ mod tests {
     fn invalidity_classification() {
         assert!(McCimError::UnknownModel { model: "x".into() }.is_invalid_request());
         assert!(!McCimError::WorkerLost.is_invalid_request());
+        // load-shed and drain refusals are retryable, not client bugs
+        assert!(!McCimError::ShuttingDown.is_invalid_request());
+        assert!(!McCimError::Overloaded { reason: "inflight cap".into() }.is_invalid_request());
     }
 
     #[test]

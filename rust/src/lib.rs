@@ -31,7 +31,8 @@
 //! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro-grid simulation (`--macros N --placement S`; measured energy + grid utilization, native delta-plan sessions with cross-frame input deltas for streaming), fail-fast stub; dense-only backends lower plans to rows |
 //! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob, builtin catalogue from `meta.json` |
 //! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |
-//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool with affinity lanes, streaming VO sessions (`StreamSession` → per-worker `EngineSession`: schedule + product-sums persist across frames) |
+//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool with affinity lanes, streaming VO sessions (`StreamSession` → per-worker `EngineSession`: schedule + product-sums persist across frames), graceful drain with a deadline |
+//! | [`net`] | — | network front door: versioned binary wire protocol, bounded acceptor with reader/writer-split connections, admission control (max-inflight, connection caps, per-connection credit windows) answering `Overloaded` instead of queueing, session-sticky remote streams, blocking pipelining client |
 //! | [`uncertainty`] | — | sequential early-stopping samplers, calibration (ECE / temperature scaling), risk-aware policies, sample budgets |
 //! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
 //! | [`config`] | — | CLI/flag parsing and run configuration (no external deps) |
@@ -46,6 +47,7 @@ pub mod dropout;
 pub mod energy;
 pub mod error;
 pub mod model;
+pub mod net;
 pub mod operator;
 pub mod rng;
 pub mod runtime;

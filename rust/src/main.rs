@@ -4,7 +4,9 @@
 //!   info        artifact + platform summary
 //!   classify    MC-Dropout classification of a test image (± rotation)
 //!   vo          MC-Dropout pose regression over the scene-4 sequence
-//!   serve       demo serving run (worker pool + mixed request stream)
+//!   serve       demo serving run (worker pool + mixed request stream);
+//!               with --listen ADDR it becomes the network front door
+//!   client      wire-protocol client for a `serve --listen` server
 //!   energy      Fig. 9 energy table across operating modes
 //!   rng         Fig. 4 RNG population statistics
 //!   adc         Fig. 5(d) SAR conversion-cycle comparison
@@ -26,14 +28,21 @@ use mc_cim::coordinator::{
 use mc_cim::dropout::plan::OrderingMode;
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
+use mc_cim::error::RequestKind;
 use mc_cim::model::ModelRegistry;
+use mc_cim::net::{
+    AdmissionConfig, ErrorCode, NetServer, NetServerConfig, WireCall, WireClient, WireReply,
+    WireStreamCall,
+};
 use mc_cim::rng::{calibrate, estimate_p1, CciRng, IdealBernoulli, SramEmbeddedRng};
 use mc_cim::runtime::Runtime;
 use mc_cim::uncertainty::policy::{DecisionPolicy, RiskProfile, Verdict};
 use mc_cim::uncertainty::sequential::{ClassStopper, SequentialConfig, StopRule};
 use mc_cim::uncertainty::{SampleBudget, SharedBudget, TemperatureScaler};
+use mc_cim::util::prng::Pcg32;
 use mc_cim::util::stats::std_dev;
 use mc_cim::workloads::{image, mnist::MnistTest, Meta, ARTIFACTS_DIR};
+use std::time::{Duration, Instant};
 
 fn main() {
     if let Err(e) = run() {
@@ -50,6 +59,7 @@ fn run() -> Result<()> {
         "classify" => cmd_classify(&args),
         "vo" => cmd_vo(&args),
         "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "energy" => cmd_energy(&args),
         "rng" => cmd_rng(&args),
         "adc" => cmd_adc(&args),
@@ -62,7 +72,7 @@ fn run() -> Result<()> {
     }
 }
 
-const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
+const HELP: &str = "mc-cim <info|classify|vo|serve|client|energy|rng|adc|reuse> [flags]
   --artifacts DIR   artifacts directory (default: artifacts)
   --backend NAME    execution backend: pjrt | cim-sim
                     (default: pjrt when built with the feature, else cim-sim;
@@ -79,6 +89,12 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|energy|rng|adc|reuse> [flags]
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --chunk N --min-samples N --budget-rate SAMPLES_PER_SEC
             --reuse=true --ordering MODE
+            --listen ADDR --max-inflight N --max-conns N
+            --conn-rate REQ_PER_SEC --conn-burst N --idle-ms MS
+            --drain-secs S --duration-secs S
+  client:   --connect ADDR --kind classify|regress|stream --requests N
+            --samples N --model NAME --seed N --session ID --epsilon E
+            --dim N --timeout-ms MS
   energy:   --bits B --iters N
   rng:      --instances N --cols N --target P
   adc:      (no flags)
@@ -113,7 +129,22 @@ streaming VO sessions (see README 'Streaming inference sessions'):
                           product-sums carry across frames (input deltas)
   --epsilon E             input-delta tolerance; 0 (default) = bit-exact
                           vs independent frames, >0 trades exactness for
-                          energy on near-still input columns";
+                          energy on near-still input columns
+
+serving over the network (see README 'Serving over the network'):
+  --listen ADDR           serve requests over TCP instead of the in-process
+                          demo stream (e.g. 127.0.0.1:7878; port 0 picks
+                          an ephemeral port and prints it)
+  --max-inflight N        admitted-but-unanswered request cap  (default 256)
+  --max-conns N           simultaneous connection cap          (default 1024)
+  --conn-rate R           per-connection request credits per second
+                          (0 = per-connection windows disabled)
+  --conn-burst N          credit-window burst (0 = derive from --conn-rate)
+  --idle-ms MS            idle-connection timeout              (default 30000)
+  --drain-secs S          shutdown drain deadline              (default 10)
+  --duration-secs S       serve for S seconds then drain (0 = until killed)
+  client: --connect ADDR, --kind classify|regress|stream; stream sends
+  --requests frames of one session so the server reuses cross-frame state";
 
 /// Parse the shared adaptive-serving flags into an [`AdaptiveConfig`]
 /// (None unless `--adaptive` is set).
@@ -470,6 +501,9 @@ fn cmd_vo(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    if args.get("listen").is_some() {
+        return cmd_serve_net(args);
+    }
     let dir = artifacts(args);
     let workers = args.get_usize("workers", 2).map_err(|e| anyhow!(e))?;
     let requests = args.get_usize("requests", 50).map_err(|e| anyhow!(e))?;
@@ -554,6 +588,229 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     coord.shutdown();
     Ok(())
+}
+
+/// `serve --listen`: the network front door. Builds the same worker
+/// pool as the in-process demo, then serves the wire protocol until
+/// `--duration-secs` elapses (0 = until the process is killed).
+fn cmd_serve_net(args: &Args) -> Result<()> {
+    let dir = artifacts(args);
+    let workers = args.get_usize("workers", 2).map_err(|e| anyhow!(e))?;
+    let bits = args.get_usize("bits", 0).map_err(|e| anyhow!(e))?;
+    let adaptive = adaptive_from_args(args)?;
+    let backend = backend_from_args(args)?;
+    let (reuse, ordering) = delta_from_args(args)?;
+    let (macros, placement) = grid_from_args(args)?;
+    let listen = args.get_or("listen", "127.0.0.1:7878");
+    let admission = AdmissionConfig {
+        max_inflight: args.get_usize("max-inflight", 256).map_err(|e| anyhow!(e))?,
+        max_connections: args.get_usize("max-conns", 1024).map_err(|e| anyhow!(e))?,
+        conn_rate: args.get_f64("conn-rate", 0.0).map_err(|e| anyhow!(e))?,
+        conn_burst: args.get_usize("conn-burst", 0).map_err(|e| anyhow!(e))?,
+    };
+    let idle_ms = args.get_usize("idle-ms", 30_000).map_err(|e| anyhow!(e))?;
+    let drain_secs = args.get_usize("drain-secs", 10).map_err(|e| anyhow!(e))?;
+    let duration_secs = args.get_usize("duration-secs", 0).map_err(|e| anyhow!(e))?;
+
+    println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement)));
+    if reuse {
+        println!("delta schedule: reuse on, ordering {}", ordering.label());
+    }
+    let cfg = CoordinatorConfig {
+        artifacts: dir,
+        workers,
+        backend,
+        bits: (bits > 0).then_some(bits as u8),
+        macros,
+        placement,
+        adaptive,
+        reuse,
+        ordering,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(cfg)?;
+    let server = NetServer::start(
+        coord,
+        NetServerConfig {
+            listen,
+            admission: admission.clone(),
+            idle_timeout: Duration::from_millis(idle_ms as u64),
+            drain_deadline: Duration::from_secs(drain_secs as u64),
+        },
+    )?;
+    println!(
+        "listening on {} ({} workers; max inflight {}, max conns {}{})",
+        server.local_addr(),
+        workers,
+        admission.max_inflight,
+        admission.max_connections,
+        if admission.conn_rate > 0.0 {
+            format!(", {}/s per-connection credits", admission.conn_rate)
+        } else {
+            String::new()
+        },
+    );
+    if duration_secs == 0 {
+        println!("serving until the process is killed (pass --duration-secs N for a timed run)");
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(duration_secs as u64));
+    println!("{}", server.metrics().summary());
+    let missed = server.shutdown();
+    if missed > 0 {
+        println!("drain: {missed} queued job(s) missed the {drain_secs}s deadline");
+    }
+    Ok(())
+}
+
+/// Wire-protocol client: drives a `serve --listen` server with
+/// synthetic inputs and reports verdicts, latency percentiles and
+/// overload counts.
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get_or("connect", "127.0.0.1:7878");
+    let kind = args.get_or("kind", "classify");
+    let requests = args.get_usize("requests", 10).map_err(|e| anyhow!(e))?;
+    let samples = args.get_usize("samples", 30).map_err(|e| anyhow!(e))? as u32;
+    let seed = match args.get("seed") {
+        None => None,
+        Some(s) => Some(
+            s.parse::<u64>().map_err(|_| anyhow!("--seed: expected integer, got '{s}'"))?,
+        ),
+    };
+    let session = args.get_or("session", "cli");
+    let epsilon = args.get_f64("epsilon", 0.0).map_err(|e| anyhow!(e))? as f32;
+    let timeout_ms = args.get_usize("timeout-ms", 30_000).map_err(|e| anyhow!(e))?;
+    let default_model = if kind == "classify" { "mnist" } else { "vo" };
+    let model = args.get_or("model", default_model);
+    let mut dim = args.get_usize("dim", 0).map_err(|e| anyhow!(e))?;
+    if dim == 0 {
+        // a co-located client can read the input width off the
+        // artifacts; a remote one passes --dim explicitly
+        let meta = Meta::load(&artifacts(args)).map_err(|e| {
+            anyhow!("--dim not given and artifacts meta unavailable ({e}); pass --dim N")
+        })?;
+        dim = if model == "mnist" { meta.mnist_dims[0] } else { meta.vo_dims[0] };
+    }
+
+    let mut client = WireClient::connect(&addr)?;
+    client.set_timeout(Some(Duration::from_millis(timeout_ms as u64)))?;
+    let t_ping = Instant::now();
+    let nonce = client.send_ping()?;
+    match client.recv_matching(nonce)? {
+        WireReply::Pong(_) => println!(
+            "connected to {addr}: ping {:.2} ms",
+            t_ping.elapsed().as_secs_f64() * 1e3
+        ),
+        other => bail!("expected a pong, got {other:?}"),
+    }
+
+    let mut rng = Pcg32::new(seed.unwrap_or(7), 1);
+    let base: Vec<f32> = (0..dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let mut latencies_ms = Vec::with_capacity(requests);
+    let (mut ok, mut overloaded, mut failed) = (0usize, 0usize, 0usize);
+    let t0 = Instant::now();
+    for i in 0..requests {
+        // stream frames drift one column per frame (the correlated
+        // sensor stream the reuse path exists for); one-shot requests
+        // get an independent input each
+        let input: Vec<f32> = if kind == "stream" {
+            let mut f = base.clone();
+            f[i % dim] += 0.05 * ((i / dim) + 1) as f32;
+            f
+        } else {
+            (0..dim).map(|_| rng.uniform(-1.0, 1.0) as f32).collect()
+        };
+        let t = Instant::now();
+        let id = match kind.as_str() {
+            "classify" => client.send_classify(&model, samples, seed, input)?,
+            "regress" => client.send_regress(&model, samples, seed, input)?,
+            "stream" => client.send_stream_frame(WireStreamCall {
+                call: WireCall { id: 0, model: model.clone(), samples, seed, input },
+                kind: if model == "mnist" {
+                    RequestKind::Classify
+                } else {
+                    RequestKind::Regress
+                },
+                session: session.clone(),
+                frame: i as u64,
+                epsilon,
+            })?,
+            other => bail!("--kind: unknown kind '{other}' (classify|regress|stream)"),
+        };
+        let reply = client.recv_matching(id)?;
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        latencies_ms.push(ms);
+        match reply {
+            WireReply::Class(c) => {
+                ok += 1;
+                println!(
+                    "#{i}: prediction {} confidence {:.2} ({}) after {} samples, {:.1} pJ{} — {ms:.2} ms",
+                    c.prediction,
+                    c.confidence,
+                    c.verdict.label(),
+                    c.samples_used,
+                    c.energy_pj,
+                    if c.energy_measured { " measured" } else { "" },
+                );
+            }
+            WireReply::Pose(p) => {
+                ok += 1;
+                let echo = match p.stream.as_ref() {
+                    Some(s) if s.input_full_recompute => {
+                        format!("  [session {} frame {}: full recompute]", s.session, s.frame)
+                    }
+                    Some(s) => format!(
+                        "  [session {} frame {}: schedule {} | input cols {} reused / {} updated]",
+                        s.session,
+                        s.frame,
+                        if s.schedule_reused { "reused" } else { "built" },
+                        s.input_cols_skipped,
+                        s.input_cols_updated,
+                    ),
+                    None => String::new(),
+                };
+                println!(
+                    "#{i}: pose mean ({:.3}, {:.3}, {:.3}) ({}) after {} samples, {:.1} pJ{}{echo} — {ms:.2} ms",
+                    p.mean.first().copied().unwrap_or(0.0),
+                    p.mean.get(1).copied().unwrap_or(0.0),
+                    p.mean.get(2).copied().unwrap_or(0.0),
+                    p.verdict.label(),
+                    p.samples_used,
+                    p.energy_pj,
+                    if p.energy_measured { " measured" } else { "" },
+                );
+            }
+            WireReply::Error(e) if e.code == ErrorCode::Overloaded => {
+                overloaded += 1;
+                println!("#{i}: overloaded ({}) — retry after backoff", e.message);
+            }
+            WireReply::Error(e) => {
+                failed += 1;
+                println!("#{i}: error {}: {}", e.code.label(), e.message);
+            }
+            WireReply::Pong(_) => bail!("unsolicited pong"),
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    latencies_ms.sort_by(|a, b| a.total_cmp(b));
+    println!(
+        "{requests} {kind} request(s) in {dt:.2}s: {:.1} req/s, p50 {:.2} ms, p95 {:.2} ms ({ok} ok, {overloaded} overloaded, {failed} failed)",
+        requests as f64 / dt.max(1e-9),
+        pctl(&latencies_ms, 0.50),
+        pctl(&latencies_ms, 0.95),
+    );
+    Ok(())
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {

@@ -1,0 +1,295 @@
+//! Admission control for the network front door.
+//!
+//! The worker pool's queue is intentionally unbounded for in-process
+//! callers — but a socket fans in the open internet, and "accept
+//! everything, queue forever" turns overload into latency collapse and
+//! OOM. [`AdmissionController`] gates every wire request *before* it
+//! touches the queue:
+//!
+//! * a **global max-inflight** cap — requests admitted but not yet
+//!   answered — sized to what the pool can have in flight without the
+//!   queue growing without bound;
+//! * a **connection cap** on simultaneously accepted sockets;
+//! * an optional **per-connection credit window**: a
+//!   [`SharedBudget`] token bucket (the same primitive the adaptive
+//!   path uses for MC-sample budgets, `uncertainty/budget.rs`)
+//!   denominated in requests and refilled at a configured rate, so one
+//!   chatty client cannot starve the rest.
+//!
+//! Refusals are crisp: the caller immediately gets an `Overloaded`
+//! error frame (retryable) instead of a slot in an ever-deeper queue.
+//! Admission is RAII — dropping the returned [`Permit`] (whenever and
+//! however the request ends, including client disconnect) releases the
+//! inflight slot, and dropping a [`ConnSlot`] releases the connection.
+
+use crate::uncertainty::{SampleBudget, SharedBudget};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Admission limits of a [`super::NetServer`].
+#[derive(Clone, Debug)]
+pub struct AdmissionConfig {
+    /// Requests admitted but not yet answered, across all connections.
+    pub max_inflight: usize,
+    /// Simultaneously accepted connections.
+    pub max_connections: usize,
+    /// Per-connection request credits refilled per second
+    /// (0.0 disables per-connection windows).
+    pub conn_rate: f64,
+    /// Burst size of the per-connection window (0 = derive from
+    /// `conn_rate`, minimum 1).
+    pub conn_burst: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            max_inflight: 256,
+            max_connections: 1024,
+            conn_rate: 0.0,
+            conn_burst: 0,
+        }
+    }
+}
+
+/// Why a request (or connection) was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionRejection {
+    /// The global inflight cap is reached.
+    Inflight,
+    /// This connection's credit window is exhausted.
+    CreditWindow,
+}
+
+impl AdmissionRejection {
+    /// Human-readable reason carried in the `Overloaded` frame.
+    pub fn reason(&self) -> &'static str {
+        match self {
+            AdmissionRejection::Inflight => "max inflight requests reached",
+            AdmissionRejection::CreditWindow => "per-connection credit window exhausted",
+        }
+    }
+}
+
+/// Shared admission state (one per server, shared by all connections).
+#[derive(Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    inflight: AtomicUsize,
+    connections: AtomicUsize,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: AdmissionConfig) -> Arc<Self> {
+        Arc::new(AdmissionController {
+            cfg,
+            inflight: AtomicUsize::new(0),
+            connections: AtomicUsize::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+        })
+    }
+
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
+    }
+
+    /// Build one connection's credit window (None when per-connection
+    /// windows are disabled). The bucket starts full, so a fresh
+    /// connection gets its burst immediately.
+    pub fn conn_window(&self) -> Option<SharedBudget> {
+        if self.cfg.conn_rate <= 0.0 {
+            return None;
+        }
+        let burst = if self.cfg.conn_burst > 0 {
+            self.cfg.conn_burst
+        } else {
+            (self.cfg.conn_rate.ceil() as usize).max(1)
+        };
+        Some(SharedBudget::new(SampleBudget::new(burst, self.cfg.conn_rate)))
+    }
+
+    /// Try to admit one request: global inflight gate first, then the
+    /// connection's credit window (one credit per request). On success
+    /// the returned [`Permit`] holds the inflight slot until dropped.
+    pub fn try_admit(
+        self: &Arc<Self>,
+        window: Option<&SharedBudget>,
+    ) -> Result<Permit, AdmissionRejection> {
+        let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.cfg.max_inflight {
+            self.inflight.fetch_sub(1, Ordering::AcqRel);
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmissionRejection::Inflight);
+        }
+        if let Some(w) = window {
+            if !w.try_take(1) {
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(AdmissionRejection::CreditWindow);
+            }
+        }
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Permit { ctl: Arc::clone(self) })
+    }
+
+    /// Try to claim a connection slot (None = at the connection cap).
+    pub fn try_open_conn(self: &Arc<Self>) -> Option<ConnSlot> {
+        let prev = self.connections.fetch_add(1, Ordering::AcqRel);
+        if prev >= self.cfg.max_connections {
+            self.connections.fetch_sub(1, Ordering::AcqRel);
+            return None;
+        }
+        Some(ConnSlot { ctl: Arc::clone(self) })
+    }
+
+    /// Requests currently admitted and unanswered.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Connections currently holding a slot.
+    pub fn connections(&self) -> usize {
+        self.connections.load(Ordering::Acquire)
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII inflight slot: dropping it (response sent, client vanished,
+/// encode failed — any path) releases the admission.
+#[derive(Debug)]
+pub struct Permit {
+    ctl: Arc<AdmissionController>,
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        self.ctl.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// RAII connection slot.
+#[derive(Debug)]
+pub struct ConnSlot {
+    ctl: Arc<AdmissionController>,
+}
+
+impl Drop for ConnSlot {
+    fn drop(&mut self) {
+        self.ctl.connections.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(max_inflight: usize) -> Arc<AdmissionController> {
+        AdmissionController::new(AdmissionConfig {
+            max_inflight,
+            ..AdmissionConfig::default()
+        })
+    }
+
+    #[test]
+    fn inflight_cap_is_enforced_and_released_on_drop() {
+        let c = ctl(2);
+        let p1 = c.try_admit(None).unwrap();
+        let p2 = c.try_admit(None).unwrap();
+        assert_eq!(c.inflight(), 2);
+        assert_eq!(c.try_admit(None).unwrap_err(), AdmissionRejection::Inflight);
+        drop(p1);
+        // a released slot is immediately reusable
+        let p3 = c.try_admit(None).unwrap();
+        assert_eq!(c.inflight(), 2);
+        drop(p2);
+        drop(p3);
+        assert_eq!(c.inflight(), 0);
+        assert_eq!(c.admitted(), 3);
+        assert_eq!(c.rejected(), 1);
+    }
+
+    #[test]
+    fn zero_inflight_rejects_everything() {
+        let c = ctl(0);
+        assert!(c.try_admit(None).is_err());
+        assert_eq!(c.inflight(), 0, "a refused admit must not leak a slot");
+    }
+
+    #[test]
+    fn credit_window_refuses_without_touching_the_global_gate() {
+        let c = AdmissionController::new(AdmissionConfig {
+            max_inflight: 100,
+            conn_rate: 1.0,
+            conn_burst: 2,
+            ..AdmissionConfig::default()
+        });
+        let w = c.conn_window().expect("windows enabled");
+        let _p1 = c.try_admit(Some(&w)).unwrap();
+        let _p2 = c.try_admit(Some(&w)).unwrap();
+        // burst exhausted: the window refuses, and the global inflight
+        // slot taken during the attempt is given back
+        assert_eq!(
+            c.try_admit(Some(&w)).unwrap_err(),
+            AdmissionRejection::CreditWindow
+        );
+        assert_eq!(c.inflight(), 2);
+        // a different connection's window is unaffected
+        let w2 = c.conn_window().unwrap();
+        assert!(c.try_admit(Some(&w2)).is_ok());
+    }
+
+    #[test]
+    fn conn_windows_disabled_by_default() {
+        let c = ctl(4);
+        assert!(c.conn_window().is_none());
+    }
+
+    #[test]
+    fn connection_cap_is_enforced_and_released() {
+        let c = AdmissionController::new(AdmissionConfig {
+            max_connections: 1,
+            ..AdmissionConfig::default()
+        });
+        let s1 = c.try_open_conn().unwrap();
+        assert!(c.try_open_conn().is_none());
+        assert_eq!(c.connections(), 1);
+        drop(s1);
+        assert_eq!(c.connections(), 0);
+        assert!(c.try_open_conn().is_some());
+    }
+
+    #[test]
+    fn contended_admission_never_exceeds_the_cap() {
+        let c = ctl(8);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let hs: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let peak = Arc::clone(&peak);
+                std::thread::spawn(move || {
+                    for _ in 0..500 {
+                        if let Ok(p) = c.try_admit(None) {
+                            peak.fetch_max(c.inflight(), Ordering::AcqRel);
+                            drop(p);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(peak.load(Ordering::Acquire) <= 8);
+        assert_eq!(c.inflight(), 0);
+    }
+}

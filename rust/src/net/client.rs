@@ -1,0 +1,191 @@
+//! Blocking wire-protocol client (CLI `mc-cim client`, tests, and the
+//! `serve_net` load generator).
+//!
+//! One [`WireClient`] wraps one TCP connection. Requests are
+//! fire-and-forget sends returning the correlation id; responses are
+//! read with [`WireClient::recv`] (next frame, any id) or
+//! [`WireClient::recv_matching`] (a specific id — out-of-order
+//! arrivals are stashed and handed out later), so a client may
+//! pipeline any number of requests on one socket.
+
+use super::wire::{write_frame, Frame, FrameReader, ReadEvent, WireError, WireStreamCall};
+use crate::coordinator::{ClassifyResponse, PoseResponse};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// A frame the server can answer with.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireReply {
+    Class(ClassifyResponse),
+    Pose(PoseResponse),
+    Pong(u64),
+    Error(WireError),
+}
+
+impl WireReply {
+    /// True for terminal per-request answers (everything but Pong).
+    pub fn is_response(&self) -> bool {
+        !matches!(self, WireReply::Pong(_))
+    }
+}
+
+/// Blocking client over one connection (see module docs).
+pub struct WireClient {
+    stream: TcpStream,
+    reader: FrameReader,
+    next_id: u64,
+    /// Replies received while waiting for a different id.
+    stashed: VecDeque<(u64, WireReply)>,
+}
+
+impl WireClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to the mc-cim server")?;
+        Ok(WireClient {
+            stream,
+            reader: FrameReader::new(),
+            next_id: 1,
+            stashed: VecDeque::new(),
+        })
+    }
+
+    /// Bound every receive: [`Self::recv`] fails instead of blocking
+    /// forever (None removes the bound).
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout).context("setting the read timeout")
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send a classify request; returns its correlation id.
+    pub fn send_classify(
+        &mut self,
+        model: &str,
+        samples: u32,
+        seed: Option<u64>,
+        input: Vec<f32>,
+    ) -> Result<u64> {
+        let id = self.fresh_id();
+        let call =
+            super::wire::WireCall { id, model: model.to_string(), samples, seed, input };
+        write_frame(&mut self.stream, &Frame::Classify(call)).context("sending classify")?;
+        Ok(id)
+    }
+
+    /// Send a regression request; returns its correlation id.
+    pub fn send_regress(
+        &mut self,
+        model: &str,
+        samples: u32,
+        seed: Option<u64>,
+        input: Vec<f32>,
+    ) -> Result<u64> {
+        let id = self.fresh_id();
+        let call =
+            super::wire::WireCall { id, model: model.to_string(), samples, seed, input };
+        write_frame(&mut self.stream, &Frame::Regress(call)).context("sending regress")?;
+        Ok(id)
+    }
+
+    /// Send one frame of a streaming session (the call's id field is
+    /// overwritten with a fresh correlation id, which is returned).
+    pub fn send_stream_frame(&mut self, mut frame: WireStreamCall) -> Result<u64> {
+        let id = self.fresh_id();
+        frame.call.id = id;
+        write_frame(&mut self.stream, &Frame::StreamFrame(frame))
+            .context("sending stream frame")?;
+        Ok(id)
+    }
+
+    /// Send a ping; returns the nonce the pong will echo.
+    pub fn send_ping(&mut self) -> Result<u64> {
+        let nonce = self.fresh_id();
+        write_frame(&mut self.stream, &Frame::Ping(nonce)).context("sending ping")?;
+        Ok(nonce)
+    }
+
+    /// Receive the next reply (stashed out-of-order replies first).
+    pub fn recv(&mut self) -> Result<(u64, WireReply)> {
+        if let Some(r) = self.stashed.pop_front() {
+            return Ok(r);
+        }
+        loop {
+            match self.reader.next(&mut self.stream) {
+                Ok(ReadEvent::Frame(f)) => return reply_of(f),
+                Ok(ReadEvent::Idle) => bail!("timed out waiting for a frame"),
+                Ok(ReadEvent::Eof) => bail!("server closed the connection"),
+                Err(e) => bail!("wire error: {e}"),
+            }
+        }
+    }
+
+    /// Receive the reply carrying correlation id `want`; replies for
+    /// other ids are stashed for later [`Self::recv`] calls.
+    pub fn recv_matching(&mut self, want: u64) -> Result<WireReply> {
+        if let Some(pos) = self.stashed.iter().position(|(id, _)| *id == want) {
+            return Ok(self.stashed.remove(pos).expect("position just found").1);
+        }
+        loop {
+            match self.reader.next(&mut self.stream) {
+                Ok(ReadEvent::Frame(f)) => {
+                    let (id, reply) = reply_of(f)?;
+                    if id == want {
+                        return Ok(reply);
+                    }
+                    self.stashed.push_back((id, reply));
+                }
+                Ok(ReadEvent::Idle) => bail!("timed out waiting for reply {want}"),
+                Ok(ReadEvent::Eof) => bail!("server closed the connection"),
+                Err(e) => bail!("wire error: {e}"),
+            }
+        }
+    }
+
+    /// Convenience: send one classify and wait for its reply.
+    pub fn classify(
+        &mut self,
+        model: &str,
+        samples: u32,
+        seed: Option<u64>,
+        input: Vec<f32>,
+    ) -> Result<ClassifyResponse> {
+        let id = self.send_classify(model, samples, seed, input)?;
+        match self.recv_matching(id)? {
+            WireReply::Class(c) => Ok(c),
+            WireReply::Error(e) => bail!("server error ({}): {}", e.code.label(), e.message),
+            other => bail!("unexpected reply to a classify: {other:?}"),
+        }
+    }
+
+    /// Convenience: send one regress and wait for its reply.
+    pub fn regress(
+        &mut self,
+        model: &str,
+        samples: u32,
+        seed: Option<u64>,
+        input: Vec<f32>,
+    ) -> Result<PoseResponse> {
+        let id = self.send_regress(model, samples, seed, input)?;
+        match self.recv_matching(id)? {
+            WireReply::Pose(p) => Ok(p),
+            WireReply::Error(e) => bail!("server error ({}): {}", e.code.label(), e.message),
+            other => bail!("unexpected reply to a regress: {other:?}"),
+        }
+    }
+}
+
+fn reply_of(frame: Frame) -> Result<(u64, WireReply)> {
+    Ok(match frame {
+        Frame::ClassifyResp { id, resp } => (id, WireReply::Class(resp)),
+        Frame::PoseResp { id, resp } => (id, WireReply::Pose(resp)),
+        Frame::Error { id, err } => (id, WireReply::Error(err)),
+        Frame::Pong(nonce) => (nonce, WireReply::Pong(nonce)),
+        other => bail!("server sent a client-only frame: {other:?}"),
+    })
+}

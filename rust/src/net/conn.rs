@@ -1,0 +1,421 @@
+//! Connection management: the TCP front door in front of the
+//! coordinator's worker pool.
+//!
+//! One acceptor thread owns the listener; every accepted socket gets a
+//! **reader thread** (owns the stream, decodes frames, submits jobs)
+//! and a **writer thread** (owns a cloned handle, serializes response
+//! frames from an mpsc channel — workers finish jobs in arbitrary
+//! order, so responses are funneled through one writer instead of
+//! letting worker threads interleave partial writes on the socket).
+//!
+//! Every request frame passes the [`AdmissionController`] *before*
+//! touching the pool's queue; refusals answer with a retryable
+//! `Overloaded` error frame immediately. Admitted jobs ride
+//! [`Coordinator::submit_request_with`] — the callback runs on
+//! whichever worker finishes the job and pushes the pre-encoded
+//! response onto the connection's writer. A client that vanishes
+//! mid-request costs nothing beyond its inflight permits: the
+//! callback's channel send fails silently, the permit drops, the
+//! worker moves on.
+//!
+//! Remote streaming sessions keep the coordinator's worker affinity:
+//! wire session ids are namespaced per connection (`c<conn>:<id>`)
+//! before they reach the [`SessionRouter`], so two clients using the
+//! same session name never share compute state, and responses echo the
+//! client's own id back.
+//!
+//! Reads use a short timeout so the reader loop can notice server
+//! shutdown and idle expiry without losing a half-received frame
+//! ([`FrameReader`] keeps the partial prefix across timeouts). On
+//! teardown — client EOF, protocol error, idle timeout, or drain — the
+//! reader sends a goodbye frame where one applies, closes the writer
+//! channel, and joins the writer so every already-finished response is
+//! flushed before the socket dies.
+
+use super::admission::{AdmissionConfig, AdmissionController};
+use super::wire::{encode_frame, Frame, FrameReader, ReadEvent, WireCall, WireError};
+use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
+use crate::error::RequestKind;
+use crate::uncertainty::SharedBudget;
+use anyhow::{Context, Result};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Poll interval of connection reader loops: short enough that
+/// shutdown and idle expiry are noticed promptly, long enough to cost
+/// nothing (a waiting read wakes early the moment bytes arrive).
+const READ_TIMEOUT: Duration = Duration::from_millis(50);
+
+/// Network front-door configuration.
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Listen address (`127.0.0.1:0` binds an ephemeral port — read it
+    /// back with [`NetServer::local_addr`]).
+    pub listen: String,
+    /// Admission limits shared by all connections.
+    pub admission: AdmissionConfig,
+    /// Tear a connection down after this long with no frames and no
+    /// requests in flight.
+    pub idle_timeout: Duration,
+    /// Forwarded to [`Coordinator::shutdown_with_deadline`] when the
+    /// server shuts down.
+    pub drain_deadline: Duration,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            listen: "127.0.0.1:0".into(),
+            admission: AdmissionConfig::default(),
+            idle_timeout: Duration::from_secs(30),
+            drain_deadline: crate::coordinator::DEFAULT_DRAIN_DEADLINE,
+        }
+    }
+}
+
+/// Everything one connection's reader needs, bundled (the reader,
+/// frame handler and response callbacks all share it).
+struct ConnCtx {
+    conn_id: u64,
+    coord: Arc<Coordinator>,
+    admission: Arc<AdmissionController>,
+    /// This connection's credit window (None = windows disabled).
+    window: Option<SharedBudget>,
+    /// Pre-encoded frames headed for the writer thread.
+    wtx: Sender<Vec<u8>>,
+    /// Requests admitted on this connection and not yet answered.
+    inflight: Arc<AtomicUsize>,
+}
+
+impl ConnCtx {
+    fn metrics(&self) -> &Metrics {
+        &self.coord.metrics
+    }
+
+    fn send_frame(&self, f: &Frame) {
+        let _ = self.wtx.send(encode_frame(f));
+    }
+}
+
+/// The running TCP front door. Owns the acceptor, every connection
+/// thread, and the coordinator itself (shutting the server down drains
+/// the pool).
+pub struct NetServer {
+    addr: SocketAddr,
+    shutting_down: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    coord: Arc<Coordinator>,
+    admission: Arc<AdmissionController>,
+    drain_deadline: Duration,
+}
+
+impl NetServer {
+    /// Bind the listener and start accepting. The coordinator must
+    /// already be running; the server takes ownership and drains it on
+    /// [`Self::shutdown`].
+    pub fn start(coord: Coordinator, cfg: NetServerConfig) -> Result<Self> {
+        let listener = TcpListener::bind(&cfg.listen)
+            .with_context(|| format!("binding {}", cfg.listen))?;
+        let addr = listener.local_addr().context("reading the bound address")?;
+        let coord = Arc::new(coord);
+        let admission = AdmissionController::new(cfg.admission.clone());
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+
+        let acceptor = {
+            let coord = Arc::clone(&coord);
+            let admission = Arc::clone(&admission);
+            let shutting_down = Arc::clone(&shutting_down);
+            let conns = Arc::clone(&conns);
+            let idle_timeout = cfg.idle_timeout;
+            std::thread::spawn(move || {
+                let mut next_conn: u64 = 0;
+                for stream in listener.incoming() {
+                    if shutting_down.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => continue, // transient accept failure
+                    };
+                    let Some(slot) = admission.try_open_conn() else {
+                        // connection cap: answer and hang up without
+                        // spending a thread
+                        coord.metrics.record_overload_rejection();
+                        let mut s = stream;
+                        let goodbye = Frame::Error {
+                            id: 0,
+                            err: WireError::overloaded("connection limit reached"),
+                        };
+                        let _ = std::io::Write::write_all(&mut s, &encode_frame(&goodbye));
+                        let _ = s.shutdown(Shutdown::Both);
+                        continue;
+                    };
+                    let conn_id = next_conn;
+                    next_conn += 1;
+                    coord.metrics.record_conn_open();
+                    let ctx_coord = Arc::clone(&coord);
+                    let ctx_admission = Arc::clone(&admission);
+                    let ctx_shutdown = Arc::clone(&shutting_down);
+                    let handle = std::thread::spawn(move || {
+                        conn_loop(
+                            stream,
+                            conn_id,
+                            ctx_coord,
+                            ctx_admission,
+                            ctx_shutdown,
+                            idle_timeout,
+                        );
+                        drop(slot);
+                    });
+                    conns.lock().unwrap_or_else(|p| p.into_inner()).push(handle);
+                }
+            })
+        };
+
+        Ok(NetServer {
+            addr,
+            shutting_down,
+            acceptor: Some(acceptor),
+            conns,
+            coord,
+            admission,
+            drain_deadline: cfg.drain_deadline,
+        })
+    }
+
+    /// The address the listener actually bound (resolves `:0`).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The pool's metrics sink (shared with every worker).
+    pub fn metrics(&self) -> &Metrics {
+        &self.coord.metrics
+    }
+
+    /// The server's admission state (observability / tests).
+    pub fn admission(&self) -> &AdmissionController {
+        &self.admission
+    }
+
+    /// Graceful shutdown: stop accepting, let every connection notice
+    /// the drain (each sends a `ShuttingDown` goodbye and flushes its
+    /// in-flight responses), then drain the coordinator with the
+    /// configured deadline. Returns the number of queued jobs that
+    /// missed the deadline (0 on a clean drain).
+    pub fn shutdown(mut self) -> usize {
+        self.shutting_down.store(true, Ordering::Release);
+        // unblock the acceptor's blocking accept with a throwaway
+        // connection (it checks the flag before serving it)
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conns.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let coord = Arc::try_unwrap(self.coord).unwrap_or_else(|_| {
+            panic!("all connection threads joined; the coordinator must have one owner")
+        });
+        coord.shutdown_with_deadline(self.drain_deadline)
+    }
+}
+
+/// One connection's reader loop (runs on its own thread; owns the
+/// read half of the stream and the writer thread's lifetime).
+fn conn_loop(
+    stream: TcpStream,
+    conn_id: u64,
+    coord: Arc<Coordinator>,
+    admission: Arc<AdmissionController>,
+    shutting_down: Arc<AtomicBool>,
+    idle_timeout: Duration,
+) {
+    let metrics = Arc::clone(&coord.metrics);
+    let _ = stream.set_read_timeout(Some(READ_TIMEOUT));
+    let write_half = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => {
+            metrics.record_conn_close();
+            return;
+        }
+    };
+    let (wtx, wrx) = channel::<Vec<u8>>();
+    let writer = std::thread::spawn(move || writer_loop(write_half, wrx));
+
+    let ctx = ConnCtx {
+        conn_id,
+        coord,
+        admission: Arc::clone(&admission),
+        window: admission.conn_window(),
+        wtx,
+        inflight: Arc::new(AtomicUsize::new(0)),
+    };
+
+    let mut reader = FrameReader::new();
+    let mut stream = stream;
+    let mut last_activity = Instant::now();
+    loop {
+        if shutting_down.load(Ordering::Acquire) {
+            ctx.send_frame(&Frame::Error { id: 0, err: WireError::shutting_down() });
+            break;
+        }
+        match reader.next(&mut stream) {
+            Ok(ReadEvent::Frame(frame)) => {
+                last_activity = Instant::now();
+                if let Err(violation) = handle_frame(&ctx, frame) {
+                    metrics.record_malformed_frame();
+                    ctx.send_frame(&Frame::Error {
+                        id: 0,
+                        err: WireError::malformed(violation),
+                    });
+                    break;
+                }
+            }
+            Ok(ReadEvent::Idle) => {
+                if ctx.inflight.load(Ordering::Acquire) > 0 {
+                    // a connection waiting on its own requests is not
+                    // idle — the clock starts after the last answer
+                    last_activity = Instant::now();
+                } else if last_activity.elapsed() >= idle_timeout {
+                    break;
+                }
+            }
+            Ok(ReadEvent::Eof) => break, // clean client close
+            Err(e) => {
+                // undecodable bytes or a mid-frame disconnect: answer
+                // if anyone is still listening, then hang up
+                metrics.record_malformed_frame();
+                ctx.send_frame(&Frame::Error {
+                    id: 0,
+                    err: WireError::malformed(e.to_string()),
+                });
+                break;
+            }
+        }
+    }
+
+    // stop reading, flush everything: dropping our sender leaves the
+    // writer alive until the last in-flight callback drops its clone,
+    // so already-admitted requests still get their responses out
+    // before the socket closes (unless the client is already gone).
+    let _ = stream.shutdown(Shutdown::Read);
+    drop(ctx);
+    let _ = writer.join();
+    metrics.record_conn_close();
+}
+
+/// Serialize pre-encoded frames onto the socket. Exits when every
+/// sender (reader + in-flight callbacks) is gone. After the first
+/// write failure the channel is drained without writing — a vanished
+/// client must not wedge worker callbacks behind a dead socket.
+fn writer_loop(mut stream: TcpStream, wrx: Receiver<Vec<u8>>) {
+    use std::io::Write;
+    let mut dead = false;
+    while let Ok(buf) = wrx.recv() {
+        if !dead && stream.write_all(&buf).is_err() {
+            dead = true;
+        }
+    }
+    if !dead {
+        let _ = stream.flush();
+    }
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+/// Handle one decoded frame. `Err` is a protocol violation (client
+/// sent a server-only frame) — the connection is torn down.
+fn handle_frame(ctx: &ConnCtx, frame: Frame) -> std::result::Result<(), String> {
+    match frame {
+        Frame::Ping(nonce) => {
+            ctx.send_frame(&Frame::Pong(nonce));
+            Ok(())
+        }
+        Frame::Classify(call) => {
+            let req = build_call(&call, RequestKind::Classify);
+            submit(ctx, call.id, req, None);
+            Ok(())
+        }
+        Frame::Regress(call) => {
+            let req = build_call(&call, RequestKind::Regress);
+            submit(ctx, call.id, req, None);
+            Ok(())
+        }
+        Frame::StreamFrame(s) => {
+            // namespace the session per connection: two clients using
+            // the same stream id must not share worker compute state
+            let namespaced = format!("c{}:{}", ctx.conn_id, s.session);
+            let req = build_call(&s.call, s.kind)
+                .with_session(namespaced, s.frame)
+                .with_stream_epsilon(s.epsilon);
+            submit(ctx, s.call.id, req, Some(s.session));
+            Ok(())
+        }
+        Frame::Pong(_) | Frame::ClassifyResp { .. } | Frame::PoseResp { .. } => {
+            Err("client sent a server-only frame".into())
+        }
+        Frame::Error { err, .. } => {
+            Err(format!("client sent an error frame ({})", err.code.label()))
+        }
+    }
+}
+
+fn build_call(call: &WireCall, kind: RequestKind) -> InferenceRequest {
+    let mut req = InferenceRequest::new(call.model.clone(), kind, call.input.clone())
+        .with_samples(call.samples as usize);
+    if let Some(seed) = call.seed {
+        req = req.with_seed(seed);
+    }
+    req
+}
+
+/// Admission-gate one request and submit it to the pool. The response
+/// callback runs on a worker thread: it rewrites the stream echo back
+/// to the client's own session id, encodes the frame, and hands it to
+/// the connection's writer.
+fn submit(ctx: &ConnCtx, id: u64, req: InferenceRequest, client_session: Option<String>) {
+    let permit = match ctx.admission.try_admit(ctx.window.as_ref()) {
+        Ok(p) => p,
+        Err(rejection) => {
+            ctx.metrics().record_overload_rejection();
+            ctx.send_frame(&Frame::Error {
+                id,
+                err: WireError::overloaded(rejection.reason()),
+            });
+            return;
+        }
+    };
+    ctx.inflight.fetch_add(1, Ordering::AcqRel);
+    let wtx = ctx.wtx.clone();
+    let inflight = Arc::clone(&ctx.inflight);
+    ctx.coord.submit_request_with(req, move |result| {
+        let frame = match result {
+            Ok(InferenceResponse::Class(mut c)) => {
+                if let (Some(s), Some(orig)) = (c.stream.as_mut(), client_session.as_ref()) {
+                    s.session = orig.clone();
+                }
+                Frame::ClassifyResp { id, resp: c }
+            }
+            Ok(InferenceResponse::Pose(mut p)) => {
+                if let (Some(s), Some(orig)) = (p.stream.as_mut(), client_session.as_ref()) {
+                    s.session = orig.clone();
+                }
+                Frame::PoseResp { id, resp: p }
+            }
+            Err(e) => Frame::Error { id, err: WireError::from(&e) },
+        };
+        // a vanished client means a closed channel — ignored, the job
+        // stays metered and the permit still releases
+        let _ = wtx.send(encode_frame(&frame));
+        inflight.fetch_sub(1, Ordering::AcqRel);
+        drop(permit);
+    });
+}

@@ -1,0 +1,35 @@
+//! Network-native serving: the TCP front door in front of the
+//! coordinator's worker pool.
+//!
+//! | Piece | What it owns |
+//! |---|---|
+//! | [`wire`] | versioned length-prefixed binary protocol: typed frames, defensive codec, incremental [`FrameReader`] |
+//! | [`admission`] | max-inflight + connection caps + per-connection credit windows (token buckets from `uncertainty/budget.rs`); RAII permits |
+//! | [`conn`] | acceptor, per-connection reader/writer threads, idle timeouts, graceful drain ([`NetServer`]) |
+//! | [`client`] | blocking pipelining client ([`WireClient`]) for the CLI, tests, and the load-generator bench |
+//!
+//! The wire surface *is* the serving surface: responses carry verdict,
+//! samples used, measured energy and the streaming echo exactly as the
+//! in-process `InferenceResponse` does, and remote stream sessions map
+//! onto the coordinator's `SessionRouter` pinned lanes (namespaced per
+//! connection), so a drone streaming VO frames over TCP keeps the
+//! cross-frame compute reuse of PR 4. Overload answers with explicit
+//! retryable `Overloaded` frames instead of unbounded queueing.
+//!
+//! `std::net` + threads only — the crate stays anyhow-only.
+
+pub mod admission;
+pub mod client;
+pub mod conn;
+pub mod wire;
+
+pub use admission::{
+    AdmissionConfig, AdmissionController, AdmissionRejection, ConnSlot, Permit,
+};
+pub use client::{WireClient, WireReply};
+pub use conn::{NetServer, NetServerConfig};
+pub use wire::{
+    decode_frame, encode_frame, write_frame, ErrorCode, Frame, FrameReader, ReadEvent,
+    WireCall, WireDecodeError, WireError, WireStreamCall, HEADER_LEN, MAX_PAYLOAD,
+    WIRE_MAGIC, WIRE_VERSION,
+};

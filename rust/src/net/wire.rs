@@ -1,0 +1,1014 @@
+//! Versioned length-prefixed binary wire protocol of the network front
+//! door.
+//!
+//! Every frame is `[magic "MC"][version][type][payload_len: u32 BE]`
+//! followed by `payload_len` bytes of payload. Request frames carry a
+//! client-chosen correlation id echoed on the matching response, so a
+//! client may pipeline freely; responses reuse the coordinator's typed
+//! [`ClassifyResponse`]/[`PoseResponse`] structs verbatim (the wire
+//! surface *is* the serving surface — verdict, samples used, measured
+//! energy and the streaming echo all cross the socket). Failures map
+//! [`McCimError`] onto numeric [`ErrorCode`]s plus a retryable flag so
+//! remote clients can distinguish "fix the request" from "retry
+//! elsewhere" without parsing strings.
+//!
+//! Decoding is defensive by construction: the payload length is capped
+//! at [`MAX_PAYLOAD`] *before* any allocation, element counts inside a
+//! payload are validated against the bytes actually present, and every
+//! malformed input returns a [`WireDecodeError`] — never a panic (see
+//! the corruption fuzz loop in `rust/tests/net.rs`).
+//!
+//! [`FrameReader`] adapts the codec to a byte stream: it buffers reads
+//! across arbitrary fragmentation and surfaces read timeouts as
+//! [`ReadEvent::Idle`] so a connection loop can interleave idle checks
+//! without losing a half-received frame.
+
+use crate::coordinator::request::{ClassifyResponse, PoseResponse, StreamFrameInfo};
+use crate::error::{McCimError, RequestKind};
+use crate::uncertainty::policy::Verdict;
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// First two bytes of every frame.
+pub const WIRE_MAGIC: [u8; 2] = *b"MC";
+/// Protocol version this build speaks.
+pub const WIRE_VERSION: u8 = 1;
+/// Fixed frame-header length (magic + version + type + payload len).
+pub const HEADER_LEN: usize = 8;
+/// Hard ceiling on a single frame's payload: a corrupt or hostile
+/// length prefix must never drive an unbounded allocation.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+
+// Frame type bytes (requests low, responses from 16).
+const T_CLASSIFY: u8 = 1;
+const T_REGRESS: u8 = 2;
+const T_STREAM_FRAME: u8 = 3;
+const T_PING: u8 = 4;
+const T_PONG: u8 = 5;
+const T_CLASSIFY_RESP: u8 = 16;
+const T_POSE_RESP: u8 = 17;
+const T_ERROR: u8 = 18;
+
+fn is_known_type(ty: u8) -> bool {
+    matches!(
+        ty,
+        T_CLASSIFY
+            | T_REGRESS
+            | T_STREAM_FRAME
+            | T_PING
+            | T_PONG
+            | T_CLASSIFY_RESP
+            | T_POSE_RESP
+            | T_ERROR
+    )
+}
+
+/// Why a byte buffer failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireDecodeError {
+    /// Not enough bytes yet for a complete frame (stream readers treat
+    /// this as "read more"; it is fatal only at end-of-input).
+    Truncated,
+    /// The first two bytes are not [`WIRE_MAGIC`].
+    BadMagic([u8; 2]),
+    /// The peer speaks a protocol version this build does not.
+    BadVersion(u8),
+    /// The frame-type byte is not part of the protocol.
+    UnknownFrameType(u8),
+    /// The length prefix exceeds [`MAX_PAYLOAD`].
+    Oversized(u32),
+    /// The payload is internally inconsistent (bad counts, trailing
+    /// bytes, invalid UTF-8, unknown enum tags, I/O failure).
+    Malformed(String),
+}
+
+impl fmt::Display for WireDecodeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireDecodeError::Truncated => write!(f, "frame truncated (need more bytes)"),
+            WireDecodeError::BadMagic(m) => {
+                write!(f, "bad frame magic {:02x}{:02x} (want \"MC\")", m[0], m[1])
+            }
+            WireDecodeError::BadVersion(v) => {
+                write!(f, "unsupported protocol version {v} (this build speaks {WIRE_VERSION})")
+            }
+            WireDecodeError::UnknownFrameType(t) => write!(f, "unknown frame type {t}"),
+            WireDecodeError::Oversized(n) => {
+                write!(f, "frame payload of {n} bytes exceeds the {MAX_PAYLOAD}-byte cap")
+            }
+            WireDecodeError::Malformed(why) => write!(f, "malformed frame: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for WireDecodeError {}
+
+/// Numeric error codes carried by [`Frame::Error`] (stable wire values;
+/// append-only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    UnknownModel = 1,
+    UnknownBackend = 2,
+    BackendUnavailable = 3,
+    InvalidRequest = 4,
+    Backend = 5,
+    Execution = 6,
+    WorkerPanic = 7,
+    WorkerLost = 8,
+    ShuttingDown = 9,
+    Overloaded = 10,
+    Malformed = 11,
+}
+
+impl ErrorCode {
+    pub fn from_u8(v: u8) -> Option<Self> {
+        Some(match v {
+            1 => ErrorCode::UnknownModel,
+            2 => ErrorCode::UnknownBackend,
+            3 => ErrorCode::BackendUnavailable,
+            4 => ErrorCode::InvalidRequest,
+            5 => ErrorCode::Backend,
+            6 => ErrorCode::Execution,
+            7 => ErrorCode::WorkerPanic,
+            8 => ErrorCode::WorkerLost,
+            9 => ErrorCode::ShuttingDown,
+            10 => ErrorCode::Overloaded,
+            11 => ErrorCode::Malformed,
+            _ => return None,
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ErrorCode::UnknownModel => "unknown-model",
+            ErrorCode::UnknownBackend => "unknown-backend",
+            ErrorCode::BackendUnavailable => "backend-unavailable",
+            ErrorCode::InvalidRequest => "invalid-request",
+            ErrorCode::Backend => "backend",
+            ErrorCode::Execution => "execution",
+            ErrorCode::WorkerPanic => "worker-panic",
+            ErrorCode::WorkerLost => "worker-lost",
+            ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::Malformed => "malformed",
+        }
+    }
+}
+
+/// Error payload of a [`Frame::Error`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    /// Whether retrying the same request can possibly succeed (false
+    /// for client bugs: unknown model, invalid request, ...).
+    pub retryable: bool,
+    pub message: String,
+}
+
+impl WireError {
+    /// Admission-control rejection: the fleet refused to take the
+    /// request on; retry after backoff.
+    pub fn overloaded(message: impl Into<String>) -> Self {
+        WireError { code: ErrorCode::Overloaded, retryable: true, message: message.into() }
+    }
+
+    /// The server is draining connections.
+    pub fn shutting_down() -> Self {
+        WireError {
+            code: ErrorCode::ShuttingDown,
+            retryable: true,
+            message: "server is shutting down".into(),
+        }
+    }
+
+    /// The client sent bytes this protocol cannot parse.
+    pub fn malformed(message: impl Into<String>) -> Self {
+        WireError { code: ErrorCode::Malformed, retryable: false, message: message.into() }
+    }
+}
+
+impl From<&McCimError> for WireError {
+    fn from(e: &McCimError) -> Self {
+        let code = match e {
+            McCimError::UnknownModel { .. } => ErrorCode::UnknownModel,
+            McCimError::UnknownBackend { .. } => ErrorCode::UnknownBackend,
+            McCimError::BackendUnavailable { .. } => ErrorCode::BackendUnavailable,
+            McCimError::InvalidRequest { .. } => ErrorCode::InvalidRequest,
+            McCimError::Backend { .. } => ErrorCode::Backend,
+            McCimError::Execution { .. } => ErrorCode::Execution,
+            McCimError::WorkerPanic { .. } => ErrorCode::WorkerPanic,
+            McCimError::WorkerLost => ErrorCode::WorkerLost,
+            McCimError::ShuttingDown => ErrorCode::ShuttingDown,
+            McCimError::Overloaded { .. } => ErrorCode::Overloaded,
+        };
+        WireError { code, retryable: !e.is_invalid_request(), message: e.to_string() }
+    }
+}
+
+/// An inference call as it crosses the wire (classify or regress).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireCall {
+    /// Client-chosen correlation id, echoed on the response.
+    pub id: u64,
+    /// Model registry id.
+    pub model: String,
+    /// MC sample count.
+    pub samples: u32,
+    /// Deterministic mask-RNG seed (None = the worker's shared stream).
+    pub seed: Option<u64>,
+    /// Network input.
+    pub input: Vec<f32>,
+}
+
+/// One frame of a remote streaming session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireStreamCall {
+    pub call: WireCall,
+    /// Classify or regress — streams carry either workload.
+    pub kind: RequestKind,
+    /// Client-visible session id (the server namespaces it per
+    /// connection before routing).
+    pub session: String,
+    /// 0-based frame index.
+    pub frame: u64,
+    /// Input-delta tolerance (0.0 = bit-exact vs independent frames).
+    pub epsilon: f32,
+}
+
+/// Every message the protocol can carry.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Classify(WireCall),
+    Regress(WireCall),
+    StreamFrame(WireStreamCall),
+    Ping(u64),
+    Pong(u64),
+    ClassifyResp { id: u64, resp: ClassifyResponse },
+    PoseResp { id: u64, resp: PoseResponse },
+    Error { id: u64, err: WireError },
+}
+
+impl Frame {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Classify(_) => T_CLASSIFY,
+            Frame::Regress(_) => T_REGRESS,
+            Frame::StreamFrame(_) => T_STREAM_FRAME,
+            Frame::Ping(_) => T_PING,
+            Frame::Pong(_) => T_PONG,
+            Frame::ClassifyResp { .. } => T_CLASSIFY_RESP,
+            Frame::PoseResp { .. } => T_POSE_RESP,
+            Frame::Error { .. } => T_ERROR,
+        }
+    }
+}
+
+// ---- primitive encoders ------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_bool(out: &mut Vec<u8>, v: bool) {
+    out.push(v as u8);
+}
+
+/// Clip a string at a byte budget without splitting a UTF-8 scalar.
+fn clip(s: &str, max: usize) -> &str {
+    if s.len() <= max {
+        return s;
+    }
+    let mut end = max;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let s = clip(s, u16::MAX as usize);
+    put_u16(out, s.len() as u16);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f32(out, x);
+    }
+}
+
+fn put_f64s(out: &mut Vec<u8>, v: &[f64]) {
+    put_u32(out, v.len() as u32);
+    for &x in v {
+        put_f64(out, x);
+    }
+}
+
+// ---- primitive decoder -------------------------------------------------
+
+/// Bounded cursor over one complete payload. Running out of bytes here
+/// is `Malformed` (the header said the payload was complete), never
+/// `Truncated`.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(b: &'a [u8]) -> Self {
+        Cur { b, i: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireDecodeError> {
+        if n > self.remaining() {
+            return Err(WireDecodeError::Malformed(format!(
+                "payload ends {} bytes short",
+                n - self.remaining()
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireDecodeError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool, WireDecodeError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(WireDecodeError::Malformed(format!("bad bool tag {v}"))),
+        }
+    }
+
+    fn u16(&mut self) -> Result<u16, WireDecodeError> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireDecodeError> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireDecodeError> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireDecodeError> {
+        Ok(f32::from_be_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireDecodeError> {
+        Ok(f64::from_be_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn str(&mut self) -> Result<String, WireDecodeError> {
+        let n = self.u16()? as usize;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| WireDecodeError::Malformed("invalid utf-8 in string".into()))
+    }
+
+    /// Validate an element count against the bytes actually present
+    /// before allocating anything count-sized.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize, WireDecodeError> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(WireDecodeError::Malformed(format!(
+                "element count {n} exceeds the payload"
+            )));
+        }
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, WireDecodeError> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>, WireDecodeError> {
+        let n = self.count(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    fn usizes(&mut self) -> Result<Vec<usize>, WireDecodeError> {
+        let n = self.count(4)?;
+        (0..n).map(|_| self.u32().map(|v| v as usize)).collect()
+    }
+
+    fn finish(self) -> Result<(), WireDecodeError> {
+        if self.remaining() != 0 {
+            return Err(WireDecodeError::Malformed(format!(
+                "{} trailing bytes after the frame body",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---- composite codecs --------------------------------------------------
+
+fn enc_call(out: &mut Vec<u8>, c: &WireCall) {
+    put_u64(out, c.id);
+    put_str(out, &c.model);
+    put_u32(out, c.samples);
+    match c.seed {
+        Some(s) => {
+            put_bool(out, true);
+            put_u64(out, s);
+        }
+        None => put_bool(out, false),
+    }
+    put_f32s(out, &c.input);
+}
+
+fn dec_call(cur: &mut Cur) -> Result<WireCall, WireDecodeError> {
+    let id = cur.u64()?;
+    let model = cur.str()?;
+    let samples = cur.u32()?;
+    let seed = if cur.bool()? { Some(cur.u64()?) } else { None };
+    let input = cur.f32s()?;
+    Ok(WireCall { id, model, samples, seed, input })
+}
+
+fn enc_kind(out: &mut Vec<u8>, k: RequestKind) {
+    out.push(match k {
+        RequestKind::Classify => 0,
+        RequestKind::Regress => 1,
+    });
+}
+
+fn dec_kind(cur: &mut Cur) -> Result<RequestKind, WireDecodeError> {
+    match cur.u8()? {
+        0 => Ok(RequestKind::Classify),
+        1 => Ok(RequestKind::Regress),
+        v => Err(WireDecodeError::Malformed(format!("bad request kind {v}"))),
+    }
+}
+
+fn enc_verdict(out: &mut Vec<u8>, v: Verdict) {
+    out.push(match v {
+        Verdict::Accept => 0,
+        Verdict::Abstain => 1,
+        Verdict::Escalate => 2,
+    });
+}
+
+fn dec_verdict(cur: &mut Cur) -> Result<Verdict, WireDecodeError> {
+    match cur.u8()? {
+        0 => Ok(Verdict::Accept),
+        1 => Ok(Verdict::Abstain),
+        2 => Ok(Verdict::Escalate),
+        v => Err(WireDecodeError::Malformed(format!("bad verdict {v}"))),
+    }
+}
+
+fn enc_stream_info(out: &mut Vec<u8>, info: &Option<StreamFrameInfo>) {
+    match info {
+        None => put_bool(out, false),
+        Some(i) => {
+            put_bool(out, true);
+            put_str(out, &i.session);
+            put_u64(out, i.frame);
+            put_bool(out, i.schedule_reused);
+            put_u64(out, i.input_cols_updated);
+            put_u64(out, i.input_cols_skipped);
+            put_bool(out, i.input_full_recompute);
+        }
+    }
+}
+
+fn dec_stream_info(cur: &mut Cur) -> Result<Option<StreamFrameInfo>, WireDecodeError> {
+    if !cur.bool()? {
+        return Ok(None);
+    }
+    Ok(Some(StreamFrameInfo {
+        session: cur.str()?,
+        frame: cur.u64()?,
+        schedule_reused: cur.bool()?,
+        input_cols_updated: cur.u64()?,
+        input_cols_skipped: cur.u64()?,
+        input_full_recompute: cur.bool()?,
+    }))
+}
+
+fn enc_payload(f: &Frame) -> Vec<u8> {
+    let mut out = Vec::new();
+    match f {
+        Frame::Classify(c) | Frame::Regress(c) => enc_call(&mut out, c),
+        Frame::StreamFrame(s) => {
+            enc_call(&mut out, &s.call);
+            enc_kind(&mut out, s.kind);
+            put_str(&mut out, &s.session);
+            put_u64(&mut out, s.frame);
+            put_f32(&mut out, s.epsilon);
+        }
+        Frame::Ping(n) | Frame::Pong(n) => put_u64(&mut out, *n),
+        Frame::ClassifyResp { id, resp } => {
+            put_u64(&mut out, *id);
+            put_str(&mut out, &resp.model);
+            put_u32(&mut out, resp.prediction as u32);
+            put_f64(&mut out, resp.confidence);
+            put_f64(&mut out, resp.calibrated_confidence);
+            put_f64(&mut out, resp.entropy);
+            put_u32(&mut out, resp.votes.len() as u32);
+            for &v in &resp.votes {
+                put_u32(&mut out, v as u32);
+            }
+            put_f64(&mut out, resp.energy_pj);
+            put_bool(&mut out, resp.energy_measured);
+            put_u32(&mut out, resp.samples_used as u32);
+            enc_verdict(&mut out, resp.verdict);
+            enc_stream_info(&mut out, &resp.stream);
+        }
+        Frame::PoseResp { id, resp } => {
+            put_u64(&mut out, *id);
+            put_str(&mut out, &resp.model);
+            put_f64s(&mut out, &resp.mean);
+            put_f64s(&mut out, &resp.variance);
+            put_f64(&mut out, resp.energy_pj);
+            put_bool(&mut out, resp.energy_measured);
+            put_u32(&mut out, resp.samples_used as u32);
+            enc_verdict(&mut out, resp.verdict);
+            enc_stream_info(&mut out, &resp.stream);
+        }
+        Frame::Error { id, err } => {
+            put_u64(&mut out, *id);
+            out.push(err.code as u8);
+            put_bool(&mut out, err.retryable);
+            put_str(&mut out, &err.message);
+        }
+    }
+    out
+}
+
+fn dec_payload(ty: u8, payload: &[u8]) -> Result<Frame, WireDecodeError> {
+    let mut cur = Cur::new(payload);
+    let frame = match ty {
+        T_CLASSIFY => Frame::Classify(dec_call(&mut cur)?),
+        T_REGRESS => Frame::Regress(dec_call(&mut cur)?),
+        T_STREAM_FRAME => Frame::StreamFrame(WireStreamCall {
+            call: dec_call(&mut cur)?,
+            kind: dec_kind(&mut cur)?,
+            session: cur.str()?,
+            frame: cur.u64()?,
+            epsilon: cur.f32()?,
+        }),
+        T_PING => Frame::Ping(cur.u64()?),
+        T_PONG => Frame::Pong(cur.u64()?),
+        T_CLASSIFY_RESP => {
+            let id = cur.u64()?;
+            let model = cur.str()?;
+            let prediction = cur.u32()? as usize;
+            let confidence = cur.f64()?;
+            let calibrated_confidence = cur.f64()?;
+            let entropy = cur.f64()?;
+            let votes = cur.usizes()?;
+            let energy_pj = cur.f64()?;
+            let energy_measured = cur.bool()?;
+            let samples_used = cur.u32()? as usize;
+            let verdict = dec_verdict(&mut cur)?;
+            let stream = dec_stream_info(&mut cur)?;
+            Frame::ClassifyResp {
+                id,
+                resp: ClassifyResponse {
+                    model,
+                    prediction,
+                    confidence,
+                    calibrated_confidence,
+                    entropy,
+                    votes,
+                    energy_pj,
+                    energy_measured,
+                    samples_used,
+                    verdict,
+                    stream,
+                },
+            }
+        }
+        T_POSE_RESP => {
+            let id = cur.u64()?;
+            let model = cur.str()?;
+            let mean = cur.f64s()?;
+            let variance = cur.f64s()?;
+            let energy_pj = cur.f64()?;
+            let energy_measured = cur.bool()?;
+            let samples_used = cur.u32()? as usize;
+            let verdict = dec_verdict(&mut cur)?;
+            let stream = dec_stream_info(&mut cur)?;
+            Frame::PoseResp {
+                id,
+                resp: PoseResponse {
+                    model,
+                    mean,
+                    variance,
+                    energy_pj,
+                    energy_measured,
+                    samples_used,
+                    verdict,
+                    stream,
+                },
+            }
+        }
+        T_ERROR => {
+            let id = cur.u64()?;
+            let code = cur.u8()?;
+            let code = ErrorCode::from_u8(code)
+                .ok_or_else(|| WireDecodeError::Malformed(format!("bad error code {code}")))?;
+            let retryable = cur.bool()?;
+            let message = cur.str()?;
+            Frame::Error { id, err: WireError { code, retryable, message } }
+        }
+        other => return Err(WireDecodeError::UnknownFrameType(other)),
+    };
+    cur.finish()?;
+    Ok(frame)
+}
+
+/// Encode one frame (header + payload) into a fresh buffer.
+pub fn encode_frame(f: &Frame) -> Vec<u8> {
+    let payload = enc_payload(f);
+    debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "encoder produced an oversized frame");
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&WIRE_MAGIC);
+    out.push(WIRE_VERSION);
+    out.push(f.type_byte());
+    out.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Decode one frame from the head of `buf`, returning the frame and the
+/// bytes consumed. [`WireDecodeError::Truncated`] means "feed me more
+/// bytes"; every other error is fatal for the stream. Header fields are
+/// validated as soon as their bytes are present, so garbage is rejected
+/// without waiting for a (possibly bogus) full payload.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), WireDecodeError> {
+    if !buf.is_empty() && buf[0] != WIRE_MAGIC[0] {
+        return Err(WireDecodeError::BadMagic([buf[0], buf.get(1).copied().unwrap_or(0)]));
+    }
+    if buf.len() >= 2 && buf[1] != WIRE_MAGIC[1] {
+        return Err(WireDecodeError::BadMagic([buf[0], buf[1]]));
+    }
+    if buf.len() >= 3 && buf[2] != WIRE_VERSION {
+        return Err(WireDecodeError::BadVersion(buf[2]));
+    }
+    if buf.len() >= 4 && !is_known_type(buf[3]) {
+        return Err(WireDecodeError::UnknownFrameType(buf[3]));
+    }
+    if buf.len() < HEADER_LEN {
+        return Err(WireDecodeError::Truncated);
+    }
+    let len = u32::from_be_bytes([buf[4], buf[5], buf[6], buf[7]]);
+    if len > MAX_PAYLOAD {
+        return Err(WireDecodeError::Oversized(len));
+    }
+    let total = HEADER_LEN + len as usize;
+    if buf.len() < total {
+        return Err(WireDecodeError::Truncated);
+    }
+    let frame = dec_payload(buf[3], &buf[HEADER_LEN..total])?;
+    Ok((frame, total))
+}
+
+/// Encode + write one frame.
+pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode_frame(f))
+}
+
+/// What a [`FrameReader::next`] call produced.
+#[derive(Debug)]
+pub enum ReadEvent {
+    /// One complete frame.
+    Frame(Frame),
+    /// The read timed out (`WouldBlock`/`TimedOut`); any partial frame
+    /// stays buffered — call again.
+    Idle,
+    /// Clean end of stream on a frame boundary.
+    Eof,
+}
+
+/// Incremental frame reader over any byte stream: survives arbitrary
+/// fragmentation and read timeouts mid-frame (the buffered prefix is
+/// kept across calls).
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Return the next frame, reading from `r` as needed.
+    pub fn next(&mut self, r: &mut impl Read) -> Result<ReadEvent, WireDecodeError> {
+        loop {
+            match decode_frame(&self.buf) {
+                Ok((frame, used)) => {
+                    self.buf.drain(..used);
+                    return Ok(ReadEvent::Frame(frame));
+                }
+                Err(WireDecodeError::Truncated) => {} // need more bytes
+                Err(e) => return Err(e),
+            }
+            let mut tmp = [0u8; 8192];
+            match r.read(&mut tmp) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(ReadEvent::Eof)
+                    } else {
+                        Err(WireDecodeError::Malformed(
+                            "connection closed mid-frame".into(),
+                        ))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    return Ok(ReadEvent::Idle)
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => {
+                    return Err(WireDecodeError::Malformed(format!("read failed: {e}")))
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn classify_resp() -> ClassifyResponse {
+        ClassifyResponse {
+            model: "mnist".into(),
+            prediction: 7,
+            confidence: 0.9,
+            calibrated_confidence: 0.87,
+            entropy: 0.31,
+            votes: vec![0, 1, 0, 0, 0, 0, 0, 27, 2, 0],
+            energy_pj: 41.5,
+            energy_measured: true,
+            samples_used: 30,
+            verdict: Verdict::Accept,
+            stream: None,
+        }
+    }
+
+    fn pose_resp() -> PoseResponse {
+        PoseResponse {
+            model: "vo".into(),
+            mean: vec![0.1, -0.2, 0.3],
+            variance: vec![0.01, 0.02, 0.03],
+            energy_pj: 12.25,
+            energy_measured: false,
+            samples_used: 12,
+            verdict: Verdict::Abstain,
+            stream: Some(StreamFrameInfo {
+                session: "drone-7".into(),
+                frame: 3,
+                schedule_reused: true,
+                input_cols_updated: 4,
+                input_cols_skipped: 8,
+                input_full_recompute: false,
+            }),
+        }
+    }
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Classify(WireCall {
+                id: 1,
+                model: "mnist".into(),
+                samples: 30,
+                seed: Some(42),
+                input: vec![0.5, -1.0, 0.25],
+            }),
+            Frame::Regress(WireCall {
+                id: 2,
+                model: "vo".into(),
+                samples: 12,
+                seed: None,
+                input: vec![0.0; 12],
+            }),
+            Frame::StreamFrame(WireStreamCall {
+                call: WireCall {
+                    id: 3,
+                    model: "vo".into(),
+                    samples: 10,
+                    seed: Some(7),
+                    input: vec![1.0, 2.0],
+                },
+                kind: RequestKind::Regress,
+                session: "drone-7".into(),
+                frame: 5,
+                epsilon: 0.05,
+            }),
+            Frame::Ping(0xdead_beef),
+            Frame::Pong(0xdead_beef),
+            Frame::ClassifyResp { id: 1, resp: classify_resp() },
+            Frame::PoseResp { id: 2, resp: pose_resp() },
+            Frame::Error {
+                id: 9,
+                err: WireError::from(&McCimError::UnknownModel { model: "nope".into() }),
+            },
+        ]
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        for f in all_frames() {
+            let bytes = encode_frame(&f);
+            let (back, used) = decode_frame(&bytes).expect("decode");
+            assert_eq!(used, bytes.len());
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn every_truncation_reports_truncated_not_panic() {
+        for f in all_frames() {
+            let bytes = encode_frame(&f);
+            for cut in 0..bytes.len() {
+                assert_eq!(
+                    decode_frame(&bytes[..cut]).unwrap_err(),
+                    WireDecodeError::Truncated,
+                    "cut at {cut}/{}",
+                    bytes.len()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn header_garbage_is_rejected_early() {
+        assert!(matches!(decode_frame(b"XY"), Err(WireDecodeError::BadMagic(_))));
+        assert!(matches!(decode_frame(b"MX"), Err(WireDecodeError::BadMagic(_))));
+        let mut bad_ver = encode_frame(&Frame::Ping(1));
+        bad_ver[2] = 99;
+        assert_eq!(decode_frame(&bad_ver).unwrap_err(), WireDecodeError::BadVersion(99));
+        let mut bad_ty = encode_frame(&Frame::Ping(1));
+        bad_ty[3] = 200;
+        assert_eq!(
+            decode_frame(&bad_ty).unwrap_err(),
+            WireDecodeError::UnknownFrameType(200)
+        );
+        // a three-byte prefix with a bad type is rejected without
+        // waiting for the length field
+        assert!(matches!(
+            decode_frame(&[b'M', b'C', WIRE_VERSION, 250]),
+            Err(WireDecodeError::UnknownFrameType(250))
+        ));
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_rejected_before_allocation() {
+        let mut buf = encode_frame(&Frame::Ping(1));
+        buf[4..8].copy_from_slice(&(MAX_PAYLOAD + 1).to_be_bytes());
+        assert_eq!(
+            decode_frame(&buf).unwrap_err(),
+            WireDecodeError::Oversized(MAX_PAYLOAD + 1)
+        );
+    }
+
+    #[test]
+    fn bogus_element_counts_do_not_allocate_or_panic() {
+        // a classify call whose input count claims 2^30 floats inside
+        // a tiny payload must fail cleanly
+        let mut f = encode_frame(&Frame::Classify(WireCall {
+            id: 1,
+            model: "m".into(),
+            samples: 1,
+            seed: None,
+            input: vec![1.0],
+        }));
+        let count_at = f.len() - 8; // [count:u32][one f32] at the tail
+        f[count_at..count_at + 4].copy_from_slice(&(1u32 << 30).to_be_bytes());
+        assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let mut f = encode_frame(&Frame::Ping(4));
+        // grow the payload by one byte and fix the length prefix
+        f.push(0);
+        let len = (f.len() - HEADER_LEN) as u32;
+        f[4..8].copy_from_slice(&len.to_be_bytes());
+        assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn frame_reader_reassembles_fragmented_streams() {
+        let frames = all_frames();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend_from_slice(&encode_frame(f));
+        }
+        // feed the byte stream 3 bytes at a time through a reader
+        struct Dribble<'a> {
+            b: &'a [u8],
+            i: usize,
+        }
+        impl Read for Dribble<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                let n = 3.min(self.b.len() - self.i).min(out.len());
+                out[..n].copy_from_slice(&self.b[self.i..self.i + n]);
+                self.i += n;
+                Ok(n)
+            }
+        }
+        let mut r = Dribble { b: &stream, i: 0 };
+        let mut reader = FrameReader::new();
+        let mut got = Vec::new();
+        loop {
+            match reader.next(&mut r).expect("clean stream") {
+                ReadEvent::Frame(f) => got.push(f),
+                ReadEvent::Eof => break,
+                ReadEvent::Idle => unreachable!("no timeouts on a byte buffer"),
+            }
+        }
+        assert_eq!(got, frames);
+    }
+
+    #[test]
+    fn eof_mid_frame_is_an_error_not_a_hang() {
+        let bytes = encode_frame(&Frame::Ping(1));
+        let mut cut = &bytes[..bytes.len() - 2];
+        let mut reader = FrameReader::new();
+        assert!(matches!(reader.next(&mut cut), Err(WireDecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn error_code_mapping_is_total_and_stable() {
+        let errs = [
+            McCimError::UnknownModel { model: "m".into() },
+            McCimError::UnknownBackend { backend: "b".into() },
+            McCimError::BackendUnavailable { backend: "b".into(), reason: "r".into() },
+            McCimError::InvalidRequest {
+                model: "m".into(),
+                kind: RequestKind::Classify,
+                reason: "r".into(),
+            },
+            McCimError::Backend { backend: "b".into(), model: "m".into(), reason: "r".into() },
+            McCimError::Execution {
+                backend: "b".into(),
+                model: "m".into(),
+                kind: RequestKind::Regress,
+                reason: "r".into(),
+            },
+            McCimError::WorkerPanic {
+                model: "m".into(),
+                kind: RequestKind::Classify,
+                reason: "r".into(),
+            },
+            McCimError::WorkerLost,
+            McCimError::ShuttingDown,
+            McCimError::Overloaded { reason: "r".into() },
+        ];
+        for e in &errs {
+            let w = WireError::from(e);
+            // the code survives the wire
+            assert_eq!(ErrorCode::from_u8(w.code as u8), Some(w.code));
+            // client bugs are terminal; infrastructure failures retry
+            assert_eq!(w.retryable, !e.is_invalid_request(), "{e}");
+            assert!(!w.message.is_empty());
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(200), None);
+    }
+
+    #[test]
+    fn long_error_messages_clip_at_a_char_boundary() {
+        let msg = "é".repeat(40_000); // 80k bytes of 2-byte chars
+        let f = Frame::Error { id: 0, err: WireError::malformed(msg) };
+        let (back, _) = decode_frame(&encode_frame(&f)).expect("clip keeps it decodable");
+        match back {
+            Frame::Error { err, .. } => assert!(err.message.len() <= u16::MAX as usize),
+            other => panic!("expected error frame, got {other:?}"),
+        }
+    }
+}

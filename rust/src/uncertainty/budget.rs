@@ -92,6 +92,24 @@ impl SampleBudget {
         g
     }
 
+    /// All-or-nothing take used by admission control: succeed only
+    /// when the bucket holds at least `want` tokens, otherwise take
+    /// nothing. Unlike [`Self::grant`] there is no floor and no
+    /// deficit — an admission window must refuse crisply, not degrade.
+    /// Refusals are visible in the stats as degraded requests with no
+    /// grant.
+    pub fn try_take(&mut self, want: usize) -> bool {
+        self.stats.requested += want as u64;
+        if self.tokens >= want as f64 {
+            self.tokens -= want as f64;
+            self.stats.granted += want as u64;
+            true
+        } else {
+            self.stats.degraded_requests += 1;
+            false
+        }
+    }
+
     /// Return unspent samples (the stopper quit early): the energy was
     /// never spent, so the tokens go back. Accounting stats are NOT
     /// rewound — `granted` records what the bucket handed out at grant
@@ -136,6 +154,17 @@ impl SharedBudget {
         g.1 = now;
         g.0.refill(dt);
         g.0.grant(want, floor)
+    }
+
+    /// Refill by wall-clock elapsed time, then take all-or-nothing
+    /// (see [`SampleBudget::try_take`]).
+    pub fn try_take(&self, want: usize) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let dt = now.duration_since(g.1).as_secs_f64();
+        g.1 = now;
+        g.0.refill(dt);
+        g.0.try_take(want)
     }
 
     /// Return unspent samples.
@@ -229,6 +258,23 @@ mod tests {
         b.refill(0.001);
         assert_eq!(b.grant(30, 6), 30);
         assert_eq!(b.stats().degraded_requests, 0);
+    }
+
+    #[test]
+    fn try_take_is_all_or_nothing() {
+        let mut b = SampleBudget::new(10, 0.0);
+        assert!(b.try_take(6));
+        assert!(!b.try_take(6), "4 tokens left cannot cover 6");
+        // the refusal took nothing: 4 tokens still cover a smaller take
+        assert!(b.try_take(4));
+        assert!(!b.try_take(1));
+        let s = b.stats();
+        assert_eq!(s.granted, 10);
+        assert_eq!(s.degraded_requests, 2);
+        // refills restore the window
+        b.refill(0.0);
+        b.release(10);
+        assert!(b.try_take(10));
     }
 
     #[test]

@@ -13,7 +13,14 @@
 //!   persisted schedule (`schedule_reused`), interleaved sessions
 //!   don't cross-contaminate, and session metrics appear in the
 //!   pool's snapshot;
-//! * session identity is enforced across frames.
+//! * session identity is enforced across frames;
+//! * a caller that vanishes before its answer (dropped `Receiver`)
+//!   neither panics nor wedges the worker, and the job stays metered;
+//! * callback responders ([`Coordinator::submit_request_with`], the
+//!   network front door's path) deliver results;
+//! * shutdown drains gracefully: queued jobs flush within the
+//!   deadline, and stragglers past it are answered `ShuttingDown`
+//!   instead of being dropped on the floor.
 
 use mc_cim::backend::{BackendKind, CimSimBackend};
 use mc_cim::coordinator::{
@@ -267,5 +274,89 @@ fn session_identity_is_enforced_across_frames() {
         .unwrap_err();
     assert!(matches!(err, McCimError::InvalidRequest { .. }), "got: {err}");
     coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_dropped_response_receiver_does_not_wedge_the_worker() {
+    let dir = pool_dir("dropped-rx");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let coord = Coordinator::start(pool_config(&dir, 1)).unwrap();
+    // the caller vanishes before its answer: the worker's send lands
+    // on a closed channel, which must be ignored — not a panic, not a
+    // wedge — and the job must still run and be metered
+    drop(coord.submit_request(InferenceRequest::classify(image()).with_samples(6)));
+    // the single worker drains its lane in order, so these completing
+    // proves the orphaned job went through the full serve path first
+    for _ in 0..3 {
+        coord
+            .call_request(InferenceRequest::classify(image()).with_samples(4))
+            .unwrap();
+    }
+    assert_eq!(coord.metrics.requests(), 4, "the orphaned job must still be metered");
+    assert_eq!(coord.metrics.errors(), 0);
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn callback_responders_deliver_results() {
+    let dir = pool_dir("callback");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let coord = Coordinator::start(pool_config(&dir, 1)).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    coord.submit_request_with(
+        InferenceRequest::classify(image()).with_samples(5),
+        move |result| tx.send(result).unwrap(),
+    );
+    match rx.recv().unwrap().unwrap() {
+        InferenceResponse::Class(c) => assert_eq!(c.samples_used, 5),
+        other => panic!("expected a classification, got {other:?}"),
+    }
+    coord.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn graceful_drain_flushes_queued_jobs_within_the_deadline() {
+    let dir = pool_dir("drain");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let coord = Coordinator::start(pool_config(&dir, 1)).unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|_| coord.submit_request(InferenceRequest::classify(image()).with_samples(6)))
+        .collect();
+    // a generous deadline: every queued job must flush, none may be
+    // answered ShuttingDown
+    let missed = coord.shutdown_with_deadline(std::time::Duration::from_secs(60));
+    assert_eq!(missed, 0, "a generous deadline strands nothing");
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert!(resp.is_ok(), "request {i} was queued before drain: {resp:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn zero_deadline_drain_answers_shutting_down_instead_of_dropping() {
+    let dir = pool_dir("drain-zero");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let coord = Coordinator::start(pool_config(&dir, 1)).unwrap();
+    let rxs: Vec<_> = (0..12)
+        .map(|_| coord.submit_request(InferenceRequest::classify(image()).with_samples(20)))
+        .collect();
+    let missed = coord.shutdown_with_deadline(std::time::Duration::ZERO);
+    // one worker cannot burn 12×20-sample jobs before an immediate
+    // drain; the stragglers must be answered, not dropped
+    assert!(missed > 0, "expected stragglers past a zero deadline");
+    let mut refused = 0usize;
+    for rx in rxs {
+        // every receiver resolves — a dropped job would hang here
+        match rx.recv().unwrap() {
+            Ok(_) => {}
+            Err(McCimError::ShuttingDown) => refused += 1,
+            Err(e) => panic!("unexpected error during drain: {e}"),
+        }
+    }
+    assert_eq!(refused, missed, "shutdown's return value counts the refused jobs");
     let _ = std::fs::remove_dir_all(&dir);
 }
