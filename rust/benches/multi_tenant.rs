@@ -1,0 +1,393 @@
+//! Multi-tenant fleet acceptance bench.
+//!
+//!     cargo bench --bench multi_tenant
+//!
+//! Two models, mixed priorities, forced overload — the fleet
+//! scheduler's four acceptance checks in one run, with the headline
+//! numbers written to `BENCH_multi_tenant.json`:
+//!
+//! * **priority isolation** — a low-priority flood big enough to
+//!   outlast the measurement window moves the high-priority tenant's
+//!   p95 by at most 10% (lane claim order, not luck);
+//! * **shared beats dedicated** — at equal macro count, co-placing
+//!   two models with imbalanced traffic on one grid yields strictly
+//!   higher chip utilization (and a shorter busy span) than carving
+//!   the macros into one-model islands;
+//! * **hot-swap is priced** — evicted-then-reused tiles bill reload
+//!   pJ that reconciles exactly with the `ChipEnergyReport`;
+//! * **numerics never move** — co-placed and sharded execution stay
+//!   `to_bits`-identical to dedicated single-grid runs.
+
+mod harness;
+
+use harness::{BenchReport, Latencies};
+use mc_cim::backend::{
+    BackendKind, CimSimBackend, ExecutionBackend, GridConfig, LayerParams, Row,
+};
+use mc_cim::cim::grid::PlacementStrategy;
+use mc_cim::coordinator::{Coordinator, CoordinatorConfig, InferenceRequest};
+use mc_cim::energy::EnergyModel;
+use mc_cim::fleet::qos::Priority;
+use mc_cim::fleet::{run_sharded, FleetModelDef, FleetPlacement, ShardPlan};
+use mc_cim::model::ModelSpec;
+use mc_cim::util::testkit::{binary_masks, f32_vec};
+use mc_cim::util::Pcg32;
+use mc_cim::workloads::synthetic::{
+    write_synthetic_artifacts, SYNTH_MNIST_DIMS, SYNTH_VO_DIMS,
+};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const ARTIFACT_SEED: u64 = 11;
+const HIGH_TENANT: &str = "drone-fleet";
+const LOW_TENANT: &str = "batch-lab";
+/// High-priority jobs are deliberately much heavier than the flood's:
+/// the residual of one in-flight low job is then a small fraction of a
+/// high job, so head-of-line blocking stays inside the 10% envelope.
+const HIGH_SAMPLES: usize = 32;
+const LOW_SAMPLES: usize = 2;
+const HIGH_REQS: usize = 40;
+const FLOOD: usize = 1500;
+
+// two synthetic fleet models for the direct-placement phases
+const DIMS_A: [usize; 3] = [62, 32, 10]; // 6 tiles
+const DIMS_B: [usize; 3] = [31, 16, 4]; // 2 tiles
+
+fn bench_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("mc-cim-multi-tenant-{tag}-{}", std::process::id()))
+}
+
+fn mnist_input(rng: &mut Pcg32) -> Vec<f32> {
+    f32_vec(rng, SYNTH_MNIST_DIMS[0], 1.0)
+}
+
+fn vo_input(rng: &mut Pcg32) -> Vec<f32> {
+    f32_vec(rng, SYNTH_VO_DIMS[0], 1.0)
+}
+
+fn high_request(rng: &mut Pcg32) -> InferenceRequest {
+    InferenceRequest::classify(mnist_input(rng))
+        .with_samples(HIGH_SAMPLES)
+        .with_tenant(HIGH_TENANT)
+        .with_priority(Priority::High)
+}
+
+fn measure_high(coord: &Coordinator, rng: &mut Pcg32) -> Latencies {
+    let mut lat = Latencies::new();
+    for _ in 0..HIGH_REQS {
+        let t0 = Instant::now();
+        coord.call_request(high_request(rng)).unwrap();
+        lat.push_since(t0);
+    }
+    lat
+}
+
+/// Phase A: the high-priority tenant's latency under a low-priority
+/// flood, on a real worker pool with both models co-placed per worker.
+fn phase_priority_isolation(dir: &Path, report: &mut BenchReport) {
+    println!("== phase A: high-pri p95 alone vs under a {FLOOD}-request low-pri flood ==");
+    let coord = Coordinator::start(CoordinatorConfig {
+        artifacts: dir.to_string_lossy().into_owned(),
+        workers: 2,
+        backend: BackendKind::CimSim,
+        reuse: true,
+        fleet_models: vec!["mnist".into(), "vo".into()],
+        ..Default::default()
+    })
+    .unwrap();
+    let mut rng = Pcg32::seeded(5);
+    // warm the engines and the fleet residency before timing anything
+    for _ in 0..5 {
+        coord.call_request(high_request(&mut rng)).unwrap();
+    }
+    let base = measure_high(&coord, &mut rng);
+
+    // the flood: one tenant queues far more low-priority work than the
+    // measurement window can drain, alternating both co-placed models
+    let done = Arc::new(AtomicUsize::new(0));
+    let failed = Arc::new(AtomicUsize::new(0));
+    for i in 0..FLOOD {
+        let req = if i % 2 == 0 {
+            InferenceRequest::classify(mnist_input(&mut rng))
+        } else {
+            InferenceRequest::regress(vo_input(&mut rng))
+        }
+        .with_samples(LOW_SAMPLES)
+        .with_tenant(LOW_TENANT)
+        .with_priority(Priority::Low);
+        let done = Arc::clone(&done);
+        let failed = Arc::clone(&failed);
+        coord.submit_request_with(req, move |res| {
+            if res.is_err() {
+                failed.fetch_add(1, Ordering::Relaxed);
+            }
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+    }
+    let over = measure_high(&coord, &mut rng);
+    let drained = done.load(Ordering::Relaxed);
+    assert!(
+        drained < FLOOD,
+        "the flood must outlast the measurement window ({drained}/{FLOOD} drained)"
+    );
+    // let the backlog finish before reading the pool's ledger
+    let deadline = Instant::now() + Duration::from_secs(120);
+    while done.load(Ordering::Relaxed) < FLOOD {
+        assert!(Instant::now() < deadline, "flood never drained");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(failed.load(Ordering::Relaxed), 0, "flood requests must all succeed");
+
+    let (bp50, bp95) = (base.quantile_ms(0.50), base.quantile_ms(0.95));
+    let (op50, op95) = (over.quantile_ms(0.50), over.quantile_ms(0.95));
+    let delta_pct = 100.0 * (op95 - bp95) / bp95;
+    println!(
+        "  high-pri p95 {bp95:.2} ms alone -> {op95:.2} ms under flood ({delta_pct:+.1}%)"
+    );
+    println!("  {}", coord.metrics_summary());
+    // the QoS contract: claim order keeps the high lane's p95 within
+    // 10% (a small absolute cushion absorbs sub-ms scheduler jitter on
+    // these tiny synthetic models)
+    assert!(
+        op95 <= bp95 * 1.10 + 0.5,
+        "high-priority p95 moved too much under the flood: {bp95:.2} -> {op95:.2} ms"
+    );
+    // the server-side per-tenant ledger saw both tenants
+    let tenants = coord.metrics.tenants();
+    assert!(
+        tenants.iter().any(|t| t == HIGH_TENANT) && tenants.iter().any(|t| t == LOW_TENANT),
+        "both tenants must appear in the metrics ledger: {tenants:?}"
+    );
+    let hq = coord
+        .metrics
+        .tenant_latency_quantiles_ms(HIGH_TENANT, &[0.5, 0.95])
+        .expect("high tenant quantiles");
+    report
+        .int("high_requests", (2 * HIGH_REQS) as u64)
+        .int("flood_requests", FLOOD as u64)
+        .num("high_p50_alone_ms", bp50)
+        .num("high_p95_alone_ms", bp95)
+        .num("high_p50_flood_ms", op50)
+        .num("high_p95_flood_ms", op95)
+        .num("high_p95_delta_pct", delta_pct)
+        .num("high_tenant_server_p95_ms", hq[1]);
+    coord.shutdown();
+}
+
+fn layer_params(dims: &[usize], seed: u64) -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..dims.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (dims[l], dims[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.25; fo],
+            }
+        })
+        .collect()
+}
+
+fn def(id: &str, dims: &[usize], seed: u64) -> FleetModelDef {
+    FleetModelDef {
+        spec: ModelSpec::synthetic(id, dims.to_vec()),
+        layers: layer_params(dims, seed),
+    }
+}
+
+fn dedicated(id: &str, dims: &[usize], seed: u64, macros: usize, capacity: usize) -> CimSimBackend {
+    let cfg = GridConfig { macros, placement: PlacementStrategy::Packed, capacity };
+    let spec = ModelSpec::synthetic(id, dims.to_vec());
+    CimSimBackend::from_params_grid(&spec, layer_params(dims, seed), 6, cfg).unwrap()
+}
+
+fn mask_dims(dims: &[usize]) -> Vec<usize> {
+    dims[1..dims.len() - 1].to_vec()
+}
+
+/// A fixed 4-row MC batch for one model.
+fn batch(dims: &[usize], seed: u64) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut rng = Pcg32::seeded(seed);
+    let input = f32_vec(&mut rng, dims[0], 1.0);
+    let masks = binary_masks(&mut rng, &mask_dims(dims), 0.9);
+    (input, masks)
+}
+
+/// Phase B: chip utilization, shared grid vs one-model-per-grid
+/// islands at equal total macro count, under imbalanced traffic
+/// (model `a` gets 12 batches, model `b` gets 1 — the realistic case
+/// where static partitioning strands capacity).
+fn phase_shared_utilization(report: &mut BenchReport) {
+    println!("== phase B: shared 4-macro grid vs 2+2 dedicated islands ==");
+    const A_BATCHES: usize = 12;
+    let (ia, ma) = batch(&DIMS_A, 301);
+    let (ib, mb) = batch(&DIMS_B, 302);
+    let rows_a = vec![Row { input: &ia, masks: &ma, sampled_masks: true }; 4];
+    let rows_b = vec![Row { input: &ib, masks: &mb, sampled_masks: true }; 4];
+
+    let cfg = GridConfig { macros: 4, placement: PlacementStrategy::Packed, capacity: 64 };
+    let (fleet, shared) =
+        FleetPlacement::co_place(vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)], 6, cfg)
+            .unwrap();
+    for _ in 0..A_BATCHES {
+        shared[0].execute_rows(&rows_a).unwrap();
+    }
+    shared[1].execute_rows(&rows_b).unwrap();
+    let ss = fleet.stats();
+    let (util_shared, span_shared) = (ss.utilization(), ss.span_cycles());
+
+    let da = dedicated("a", &DIMS_A, 11, 2, 64);
+    let db = dedicated("b", &DIMS_B, 22, 2, 64);
+    for _ in 0..A_BATCHES {
+        da.execute_rows(&rows_a).unwrap();
+    }
+    db.execute_rows(&rows_b).unwrap();
+    let (sa, sb) = (da.grid().stats(), db.grid().stats());
+    assert_eq!(ss.macros(), sa.macros() + sb.macros(), "equal macro count");
+    // the islands run concurrently: combined busy over the slower
+    // island's span, across the same 4 macros
+    let span_ded = sa.span_cycles().max(sb.span_cycles());
+    let util_ded = (sa.total_busy_cycles() + sb.total_busy_cycles()) as f64
+        / (ss.macros() as f64 * span_ded as f64);
+    println!(
+        "  utilization {:.1}% shared vs {:.1}% dedicated; busy span {span_shared} vs {span_ded} cycles",
+        100.0 * util_shared,
+        100.0 * util_ded
+    );
+    assert!(
+        util_shared > util_ded,
+        "co-placement must beat one-model-per-grid at equal macros: \
+         {util_shared:.3} vs {util_ded:.3}"
+    );
+    assert!(
+        span_shared < span_ded,
+        "the shared grid spreads the hot model over every macro: \
+         span {span_shared} vs {span_ded}"
+    );
+    report
+        .num("util_shared_pct", 100.0 * util_shared)
+        .num("util_dedicated_pct", 100.0 * util_ded)
+        .int("span_shared_cycles", span_shared)
+        .int("span_dedicated_cycles", span_ded);
+}
+
+/// Phase C: hot-swap under declared SRAM pressure is never free —
+/// reload pJ reconciles exactly with the chip energy report.
+fn phase_eviction_pricing(report: &mut BenchReport) {
+    println!("== phase C: eviction/reload pricing under SRAM pressure ==");
+    // 2 macros x 3 slots = 6 declared slots; a(6) + b(2) = 8 tiles, so
+    // alternating traffic forces hot-swaps every step
+    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 3 };
+    let (fleet, backends) =
+        FleetPlacement::co_place(vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)], 6, cfg)
+            .unwrap();
+    let (ia, ma) = batch(&DIMS_A, 303);
+    let (ib, mb) = batch(&DIMS_B, 304);
+    let rows_a = vec![Row { input: &ia, masks: &ma, sampled_masks: true }; 4];
+    let rows_b = vec![Row { input: &ib, masks: &mb, sampled_masks: true }; 4];
+    let mut reloads = 0usize;
+    let mut reload_bits = 0u64;
+    for step in 0..60 {
+        let (id, backend, rows) = if step % 2 == 0 {
+            ("a", &backends[0], &rows_a)
+        } else {
+            ("b", &backends[1], &rows_b)
+        };
+        let t = fleet.touch_model(id).unwrap();
+        reloads += t.reloads;
+        reload_bits += t.reload_bits;
+        backend.execute_rows(rows).unwrap();
+    }
+    let stats = fleet.stats();
+    assert!(reloads > 0, "pressure must have forced hot-swaps");
+    assert_eq!(stats.weight_reloads, reloads as u64, "every reload is billed once");
+    let energy = EnergyModel::paper_default();
+    let chip = fleet.chip_report(&energy);
+    let want_reload = energy.weight_store_pj(reload_bits);
+    let want_load = energy.weight_store_pj(stats.weight_load_bits);
+    assert!(
+        (chip.weight_reload_pj - want_reload).abs() <= 1e-9 * want_reload.max(1.0),
+        "reload pJ must price exactly the re-stored bits: \
+         {} vs {want_reload}",
+        chip.weight_reload_pj
+    );
+    assert!((chip.weight_load_pj - want_load).abs() <= 1e-9 * want_load.max(1.0));
+    assert!(chip.total_pj() > 0.0);
+    println!(
+        "  {} evictions, {reloads} reloads -> {:.1} pJ reload energy (report agrees)",
+        fleet.evictions(),
+        chip.weight_reload_pj
+    );
+    report
+        .int("evictions", fleet.evictions())
+        .int("reloads", reloads as u64)
+        .num("reload_pj", chip.weight_reload_pj)
+        .num("chip_total_pj", chip.total_pj());
+}
+
+fn assert_rows_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: row count");
+    for (r, (ra, rb)) in a.iter().zip(b).enumerate() {
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: row {r} out[{j}] differs ({va} vs {vb})"
+            );
+        }
+    }
+}
+
+/// Phase D: sharing the chip never changes a single output bit —
+/// co-placed vs dedicated, and sharded vs single-grid.
+fn phase_bit_identity(report: &mut BenchReport) {
+    println!("== phase D: bit-identity, co-placed and sharded ==");
+    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 512 };
+    let (_, co) =
+        FleetPlacement::co_place(vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)], 6, cfg)
+            .unwrap();
+    let specs = [("a", &DIMS_A[..], 11u64), ("b", &DIMS_B[..], 22u64)];
+    for (k, (id, dims, seed)) in specs.iter().enumerate() {
+        let solo = dedicated(id, dims, *seed, 2, 512);
+        let (input, masks) = batch(dims, 500 + k as u64);
+        let rows = vec![Row { input: &input, masks: &masks, sampled_masks: true }; 4];
+        let out_co = co[k].execute_rows(&rows).unwrap();
+        let out_solo = solo.execute_rows(&rows).unwrap();
+        assert_rows_bit_equal(&out_co.outputs, &out_solo.outputs, id);
+    }
+
+    let g0 = dedicated("m", &DIMS_A, 11, 2, 512);
+    let g1 = dedicated("m", &DIMS_A, 11, 2, 512);
+    let reference = dedicated("m", &DIMS_A, 11, 2, 512);
+    let mut rng = Pcg32::seeded(601);
+    let input = f32_vec(&mut rng, DIMS_A[0], 1.0);
+    let mask_sets: Vec<_> =
+        (0..7).map(|_| binary_masks(&mut rng, &mask_dims(&DIMS_A), 0.9)).collect();
+    let rows: Vec<Row<'_>> = mask_sets
+        .iter()
+        .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+        .collect();
+    assert_eq!(ShardPlan::split(rows.len(), 2).shard_count(), 2);
+    let backends: [&dyn ExecutionBackend; 2] = [&g0, &g1];
+    let merged = run_sharded(&backends, &rows).unwrap();
+    let solo = reference.execute_rows(&rows).unwrap();
+    assert_rows_bit_equal(&merged.outputs, &solo.outputs, "sharded");
+    assert!(merged.energy_pj.expect("both shards measure") > 0.0);
+    println!("  co-placed and sharded outputs bit-identical to dedicated grids");
+    report.flag("bit_identical_coplaced", true).flag("bit_identical_sharded", true);
+}
+
+fn main() {
+    let dir = bench_dir("main");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let mut report = BenchReport::new("multi_tenant");
+    phase_priority_isolation(&dir, &mut report);
+    phase_shared_utilization(&mut report);
+    phase_eviction_pricing(&mut report);
+    phase_bit_identity(&mut report);
+    report.write();
+    let _ = std::fs::remove_dir_all(&dir);
+    println!("multi_tenant bench PASSED");
+}

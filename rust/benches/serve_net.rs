@@ -26,6 +26,7 @@ use harness::{BenchReport, Latencies};
 use mc_cim::backend::BackendKind;
 use mc_cim::coordinator::{Coordinator, CoordinatorConfig};
 use mc_cim::error::RequestKind;
+use mc_cim::fleet::qos::Priority;
 use mc_cim::net::{
     AdmissionConfig, ErrorCode, NetServer, NetServerConfig, WireCall, WireClient, WireReply,
     WireStreamCall,
@@ -106,6 +107,8 @@ fn drive_conn(addr: std::net::SocketAddr, idx: usize) -> (Latencies, usize, usiz
                         samples: SAMPLES,
                         seed: Some(1000 + idx as u64),
                         input: vo_input(&mut rng),
+                        tenant: None,
+                        priority: Priority::Normal,
                     },
                     kind: RequestKind::Regress,
                     session: "bench".into(),
@@ -196,6 +199,8 @@ fn phase_stream_saving(dir: &Path, report: &mut BenchReport) {
                     samples: 12,
                     seed: Some(SEED),
                     input: x.clone(),
+                    tenant: None,
+                    priority: Priority::Normal,
                 },
                 kind: RequestKind::Regress,
                 session: "drone".into(),

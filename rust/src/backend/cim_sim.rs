@@ -104,6 +104,7 @@ use crate::workloads::TensorFile;
 use crate::{MACRO_COLS, MACRO_ROWS};
 use anyhow::{ensure, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Raw parameters of one FC layer (`w` row-major `[fi, fo]`).
 #[derive(Clone, Debug)]
@@ -152,8 +153,13 @@ pub struct CimSimBackend {
     inv_keep: f32,
     layers: Vec<QuantLayer>,
     /// The simulated chip: `M` concurrent macros holding the model's
-    /// weight tiles stationary.
-    grid: MacroGrid,
+    /// weight tiles stationary. Shared (`Arc`) because a fleet
+    /// co-places several models' tiles on one grid
+    /// ([`Self::co_place`]); a solo backend holds the only handle.
+    grid: Arc<MacroGrid>,
+    /// First global layer index of this model's tiles on the grid —
+    /// 0 for a solo backend, the model's layer offset when co-placed.
+    layer_base: usize,
     /// Fans rows / tile calls across the grid, order-preserving.
     sched: TileScheduler,
     energy: EnergyModel,
@@ -175,6 +181,20 @@ impl CimSimBackend {
         bits: u8,
         grid_cfg: GridConfig,
     ) -> Result<Self> {
+        let (prepared, tile_sets) = Self::prepare_layers(spec, layers, bits)?;
+        let grid = Arc::new(MacroGrid::place(&grid_cfg, &tile_sets));
+        Ok(Self::assemble(spec, prepared, bits, grid, 0))
+    }
+
+    /// Quantize one model's layers and slice them into 31×16 weight
+    /// tiles (one shared delta per layer weight matrix). Returns the
+    /// digital-side layer parameters plus the tile sets handed to
+    /// [`MacroGrid::place`].
+    fn prepare_layers(
+        spec: &ModelSpec,
+        layers: Vec<LayerParams>,
+        bits: u8,
+    ) -> Result<(Vec<QuantLayer>, Vec<LayerTiles>)> {
         ensure!(spec.dims.len() >= 2, "model needs at least two dims");
         ensure!(
             layers.len() == spec.n_layers(),
@@ -209,19 +229,78 @@ impl CimSimBackend {
             tile_sets.push(LayerTiles { fo, tiles });
             prepared.push(QuantLayer { fi, fo, w_delta: wq.delta, b: lp.b, s: lp.s });
         }
-        let grid = MacroGrid::place(&grid_cfg, &tile_sets);
+        Ok((prepared, tile_sets))
+    }
+
+    fn assemble(
+        spec: &ModelSpec,
+        prepared: Vec<QuantLayer>,
+        bits: u8,
+        grid: Arc<MacroGrid>,
+        layer_base: usize,
+    ) -> Self {
         let sched = TileScheduler::new(grid.macros());
-        Ok(CimSimBackend {
+        CimSimBackend {
             model: spec.id.clone(),
             dims: spec.dims.clone(),
             bits,
-            quant,
+            quant: Quantizer::new(bits),
             inv_keep: (1.0 / (1.0 - spec.dropout_p)) as f32,
             layers: prepared,
             grid,
+            layer_base,
             sched,
             energy: EnergyModel::paper_default(),
-        })
+        }
+    }
+
+    /// Build one backend per model with every model's weight tiles
+    /// placed on **one shared** [`MacroGrid`] — the fleet substrate.
+    /// Each model's layers get a global layer offset (`layer_base`),
+    /// so a backend only ever addresses its own tiles; run_tile calls
+    /// from different backends contend for the same macros, which is
+    /// exactly the sharing the fleet scheduler arbitrates.
+    ///
+    /// The grid's per-macro capacity is raised so the combined tile
+    /// set fits without *static* spill: SRAM pressure between models
+    /// is modeled dynamically by the fleet residency ledger
+    /// (`fleet::FleetPlacement`), which prices evicted-then-reused
+    /// tiles as weight reloads — per-call spill reloads here would
+    /// double-bill the same traffic.
+    pub fn co_place(
+        models: Vec<(ModelSpec, Vec<LayerParams>)>,
+        bits: u8,
+        grid_cfg: GridConfig,
+    ) -> Result<Vec<CimSimBackend>> {
+        ensure!(!models.is_empty(), "co_place needs at least one model");
+        let mut specs = Vec::with_capacity(models.len());
+        let mut prepared_all = Vec::with_capacity(models.len());
+        let mut bases = Vec::with_capacity(models.len());
+        let mut tiles_all: Vec<LayerTiles> = Vec::new();
+        for (spec, layers) in models {
+            bases.push(tiles_all.len()); // layer offset: one LayerTiles per layer
+            let (prepared, tile_sets) = Self::prepare_layers(&spec, layers, bits)?;
+            tiles_all.extend(tile_sets);
+            prepared_all.push(prepared);
+            specs.push(spec);
+        }
+        let total_tiles: usize = tiles_all
+            .iter()
+            .map(|lt| lt.tiles.len() * lt.fo.div_ceil(MACRO_ROWS))
+            .sum();
+        // round-robin homes balance tiles within one slot of each
+        // other, so this capacity floor guarantees zero static spill
+        let mut cfg = grid_cfg;
+        cfg.capacity = cfg.capacity.max(total_tiles.div_ceil(cfg.macros.max(1)));
+        let grid = Arc::new(MacroGrid::place(&cfg, &tiles_all));
+        Ok(specs
+            .iter()
+            .zip(prepared_all)
+            .zip(bases)
+            .map(|((spec, prepared), base)| {
+                Self::assemble(spec, prepared, bits, Arc::clone(&grid), base)
+            })
+            .collect())
     }
 
     /// Load weights from the artifacts directory (no PJRT involved)
@@ -256,6 +335,18 @@ impl CimSimBackend {
     /// The simulated chip.
     pub fn grid(&self) -> &MacroGrid {
         &self.grid
+    }
+
+    /// Shared handle to the simulated chip — the *same* grid for every
+    /// backend built by one [`Self::co_place`] call.
+    pub fn grid_arc(&self) -> Arc<MacroGrid> {
+        Arc::clone(&self.grid)
+    }
+
+    /// First global layer index of this model's tiles on the grid
+    /// (0 unless co-placed).
+    pub fn layer_base(&self) -> usize {
+        self.layer_base
     }
 
     fn mask_dims(&self) -> Vec<usize> {
@@ -317,7 +408,7 @@ impl CimSimBackend {
             let (xt, col_active) = &blocks[cb];
             let r0 = rb * MACRO_ROWS;
             let r1 = (r0 + MACRO_ROWS).min(layer.fo);
-            self.grid.run_tile(l, cb, rb, xt, col_active, &row_active[r0..r1])
+            self.grid.run_tile(self.layer_base + l, cb, rb, xt, col_active, &row_active[r0..r1])
         };
         // `fan = false` keeps threading single-level when an outer
         // row fan is already running; small tile batches run inline
@@ -553,7 +644,7 @@ impl CimSimBackend {
             let r0 = rb * MACRO_ROWS;
             let r1 = (r0 + MACRO_ROWS).min(layer.fo);
             let all = vec![true; r1 - r0];
-            self.grid.run_tile(l, *cb, rb, &ps.xt[*cb], col_active, &all)
+            self.grid.run_tile(self.layer_base + l, *cb, rb, &ps.xt[*cb], col_active, &all)
         };
         // a warm stream frame's delta set can be a couple of columns —
         // not worth spawning threads for (see FAN_MIN_JOBS_PER_MACRO)

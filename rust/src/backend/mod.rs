@@ -249,6 +249,10 @@ pub struct BackendOptions {
     pub macros: usize,
     /// Weight-stationary tile placement strategy (cim-sim only).
     pub placement: PlacementStrategy,
+    /// Per-macro resident tile slots — the declared SRAM (cim-sim
+    /// only; `None` = the grid's roomy default). Fleet co-placement
+    /// reads the same knob to size its residency ledger.
+    pub capacity: Option<usize>,
 }
 
 impl Default for BackendOptions {
@@ -258,6 +262,7 @@ impl Default for BackendOptions {
             pallas: false,
             macros: 1,
             placement: PlacementStrategy::Packed,
+            capacity: None,
         }
     }
 }
@@ -289,7 +294,10 @@ pub fn make_backend(
             Ok(Box::new(b))
         }
         BackendKind::CimSim => {
-            let grid = GridConfig::with_macros(opts.macros, opts.placement);
+            let mut grid = GridConfig::with_macros(opts.macros, opts.placement);
+            if let Some(cap) = opts.capacity {
+                grid.capacity = cap.max(1);
+            }
             let b = CimSimBackend::load_with_grid(artifacts, spec, opts.bits.unwrap_or(6), grid)
                 .map_err(|e| McCimError::BackendUnavailable {
                     backend: "cim-sim".into(),

@@ -433,6 +433,13 @@ impl MacroGrid {
         &self.tiles[idx].replicas
     }
 
+    /// Stored weight bits of tile `idx` (codes × precision) — the unit
+    /// a load or reload of the tile prices. Fleet residency ledgers
+    /// read this to bill hot-swap traffic through the energy model.
+    pub fn tile_bits(&self, idx: usize) -> u64 {
+        self.tiles[idx].bits
+    }
+
     /// Tiles that lost residency to capacity overflow.
     pub fn spilled_tiles(&self) -> usize {
         self.spilled

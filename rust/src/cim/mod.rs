@@ -11,7 +11,9 @@
 //! * [`grid`] — the multi-macro chip: `M` concurrent macros with
 //!   weight-stationary tile placement (`packed`/`replicated`), the
 //!   order-preserving [`grid::TileScheduler`], per-macro cost ledgers,
-//!   and spill/reload accounting.
+//!   and spill/reload accounting. Multi-model co-placement on one grid
+//!   (LRU tile residency under the declared SRAM) lives a layer up, in
+//!   [`crate::fleet::placement`].
 
 pub mod array;
 pub mod cell;

@@ -16,6 +16,7 @@ use super::engine::StreamFrameStats;
 use crate::backend::GridExecStats;
 use crate::dropout::plan::PlanStats;
 use crate::uncertainty::Verdict;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -28,6 +29,14 @@ pub const SAMPLES_HIST_BINS: usize = 64;
 /// for stable p95s, small enough to clone + sort per snapshot without
 /// blinking.
 pub const LATENCY_WINDOW: usize = 4096;
+
+/// Distinct tenants tracked with their own latency ring; arrivals past
+/// the cap fold into [`TENANT_OVERFLOW`] so a tenant-id flood cannot
+/// grow the ledger without bound.
+pub const TENANT_LEDGER_CAP: usize = 64;
+
+/// The fold bucket for tenants past [`TENANT_LEDGER_CAP`].
+pub const TENANT_OVERFLOW: &str = "other";
 
 /// Fixed-capacity ring of the most recent latency samples.
 #[derive(Debug, Default)]
@@ -122,6 +131,17 @@ pub struct Metrics {
     /// Frames that failed to decode (the connection is torn down after
     /// the first one).
     malformed_frames: AtomicU64,
+    // -- fleet ledger (`fleet` module: multi-model, multi-tenant) --
+    /// Per-tenant latency rings (bounded, see [`TENANT_LEDGER_CAP`]).
+    tenant_latencies_us: Mutex<HashMap<String, LatencyRing>>,
+    /// Weight tiles evicted from shared grids by residency pressure.
+    fleet_evictions: AtomicU64,
+    /// Gauge: the schedule cache's cumulative eviction count (the
+    /// cache owns the counter; the pool mirrors it per snapshot).
+    sched_cache_evictions: AtomicU64,
+    /// Gauge: the work queue's cumulative fairness yields (starvation/
+    /// aging guards overriding strict priority; mirrored per snapshot).
+    queue_fairness_yields: AtomicU64,
 }
 
 impl Metrics {
@@ -251,6 +271,40 @@ impl Metrics {
     /// Record one undecodable frame from a client.
     pub fn record_malformed_frame(&self) {
         self.malformed_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Attribute one answered request's latency to `tenant` (in
+    /// addition to the global window recorded by
+    /// [`Self::record_request`]). Tenants past [`TENANT_LEDGER_CAP`]
+    /// fold into the [`TENANT_OVERFLOW`] bucket.
+    pub fn record_tenant_request(&self, tenant: &str, latency: Duration) {
+        let us = latency.as_micros() as u64;
+        let mut map = self.tenant_latencies_us.lock().unwrap_or_else(|p| p.into_inner());
+        let key = if map.contains_key(tenant) || map.len() < TENANT_LEDGER_CAP {
+            tenant
+        } else {
+            TENANT_OVERFLOW
+        };
+        map.entry(key.to_string()).or_default().push(us);
+    }
+
+    /// Record weight-tile evictions from shared fleet grids.
+    pub fn record_fleet_evictions(&self, n: u64) {
+        if n > 0 {
+            self.fleet_evictions.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Mirror the schedule cache's cumulative eviction count (gauge —
+    /// the cache owns the counter).
+    pub fn set_schedule_cache_evictions(&self, n: u64) {
+        self.sched_cache_evictions.store(n, Ordering::Relaxed);
+    }
+
+    /// Mirror the work queue's cumulative fairness-yield count (gauge
+    /// — the queue owns the counter).
+    pub fn set_queue_fairness_yields(&self, n: u64) {
+        self.queue_fairness_yields.store(n, Ordering::Relaxed);
     }
 
     pub fn requests(&self) -> u64 {
@@ -456,6 +510,41 @@ impl Metrics {
         self.malformed_frames.load(Ordering::Relaxed)
     }
 
+    /// Weight-tile evictions recorded across shared fleet grids.
+    pub fn fleet_evictions(&self) -> u64 {
+        self.fleet_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Schedule-cache evictions at the last snapshot (gauge).
+    pub fn schedule_cache_evictions(&self) -> u64 {
+        self.sched_cache_evictions.load(Ordering::Relaxed)
+    }
+
+    /// Queue fairness yields at the last snapshot (gauge).
+    pub fn queue_fairness_yields(&self) -> u64 {
+        self.queue_fairness_yields.load(Ordering::Relaxed)
+    }
+
+    /// Tenants with recorded latency, sorted (the fold bucket included
+    /// when it has samples).
+    pub fn tenants(&self) -> Vec<String> {
+        let map = self.tenant_latencies_us.lock().unwrap_or_else(|p| p.into_inner());
+        let mut t: Vec<String> = map.keys().cloned().collect();
+        t.sort_unstable();
+        t
+    }
+
+    /// Latency quantiles (ms) over one tenant's retained window; None
+    /// for a tenant with no recorded requests.
+    pub fn tenant_latency_quantiles_ms(&self, tenant: &str, qs: &[f64]) -> Option<Vec<f64>> {
+        let map = self.tenant_latencies_us.lock().unwrap_or_else(|p| p.into_inner());
+        let ring = map.get(tenant)?;
+        let mut sorted = ring.buf.clone();
+        drop(map);
+        sorted.sort_unstable();
+        Some(qs.iter().map(|&q| Self::quantile_ms(&sorted, q)).collect())
+    }
+
     /// Sorted snapshot of the retained latency window (µs).
     fn latency_snapshot_us(&self) -> Vec<u64> {
         let mut v = self
@@ -562,6 +651,25 @@ impl Metrics {
                 self.overload_rejections(),
                 self.malformed_frames(),
             ));
+        }
+        let tenants = self.tenants();
+        if !tenants.is_empty()
+            || self.fleet_evictions() > 0
+            || self.queue_fairness_yields() > 0
+            || self.schedule_cache_evictions() > 0
+        {
+            s.push_str(&format!(
+                " | fleet: tenants={} evictions={} fairness_yields={} sched_cache_evictions={}",
+                tenants.len(),
+                self.fleet_evictions(),
+                self.queue_fairness_yields(),
+                self.schedule_cache_evictions(),
+            ));
+            for t in &tenants {
+                if let Some(q) = self.tenant_latency_quantiles_ms(t, &[0.5, 0.95]) {
+                    s.push_str(&format!(" {t}:p50={:.2}ms,p95={:.2}ms", q[0], q[1]));
+                }
+            }
         }
         s
     }
@@ -738,6 +846,45 @@ mod tests {
         let snap = m.summary();
         assert!(snap.contains("net: conns=2 active=1"), "{snap}");
         assert!(snap.contains("overloaded=1"), "{snap}");
+    }
+
+    #[test]
+    fn fleet_ledger_tracks_tenants_and_evictions() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("fleet:"), "no fleet traffic, no fleet line");
+        for i in 1..=20u64 {
+            m.record_tenant_request("acme", Duration::from_millis(i));
+            m.record_tenant_request("zeta", Duration::from_millis(10 * i));
+        }
+        m.record_fleet_evictions(3);
+        m.record_fleet_evictions(0); // no-op
+        m.set_queue_fairness_yields(2);
+        m.set_schedule_cache_evictions(5);
+        assert_eq!(m.tenants(), vec!["acme".to_string(), "zeta".to_string()]);
+        let acme = m.tenant_latency_quantiles_ms("acme", &[0.5]).unwrap();
+        let zeta = m.tenant_latency_quantiles_ms("zeta", &[0.5]).unwrap();
+        assert!(zeta[0] > acme[0], "per-tenant windows are independent");
+        assert!(m.tenant_latency_quantiles_ms("ghost", &[0.5]).is_none());
+        assert_eq!(m.fleet_evictions(), 3);
+        assert_eq!(m.queue_fairness_yields(), 2);
+        assert_eq!(m.schedule_cache_evictions(), 5);
+        let snap = m.summary();
+        assert!(snap.contains("fleet: tenants=2 evictions=3"), "{snap}");
+        assert!(snap.contains("acme:p50="), "{snap}");
+    }
+
+    #[test]
+    fn tenant_ledger_is_bounded_and_folds_overflow() {
+        let m = Metrics::new();
+        for i in 0..(TENANT_LEDGER_CAP + 10) {
+            m.record_tenant_request(&format!("t{i}"), Duration::from_millis(1));
+        }
+        let tenants = m.tenants();
+        assert_eq!(tenants.len(), TENANT_LEDGER_CAP + 1, "cap + the fold bucket");
+        assert!(tenants.contains(&TENANT_OVERFLOW.to_string()));
+        // a known tenant keeps recording after the cap is hit
+        m.record_tenant_request("t0", Duration::from_millis(2));
+        assert_eq!(m.tenants().len(), TENANT_LEDGER_CAP + 1);
     }
 
     #[test]

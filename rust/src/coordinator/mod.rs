@@ -14,9 +14,12 @@
 //!   profile, seed, backend selection, streaming-session membership)
 //!   and typed responses (session frames echo a [`StreamFrameInfo`]);
 //!   errors are [`crate::error::McCimError`] values, never strings.
-//! * [`queue`] — the pool's work queue: a shared lane plus one pinned
-//!   lane per worker (session affinity), claimed-job requeue, and the
-//!   [`SessionRouter`] that pins streaming sessions to workers.
+//! * [`queue`] — the pool's work queue: priority-laned shared work
+//!   (one lane per [`crate::fleet::qos::Priority`], with aging so a
+//!   flooded high lane cannot starve the low ones) plus one pinned
+//!   lane per worker (session affinity, protected by a preemption
+//!   guard), claimed-job requeue, and the [`SessionRouter`] that pins
+//!   streaming sessions to workers.
 //! * [`batcher`] — row-granularity dynamic batcher: packs MC iterations
 //!   and deterministic requests into full executable batches, plus the
 //!   chunk plans of the adaptive path.
@@ -33,14 +36,23 @@
 //!   drains queued jobs against a deadline
 //!   ([`Coordinator::shutdown_with_deadline`]), answering stragglers
 //!   with `ShuttingDown` instead of dropping them. The legacy
-//!   `Request`/`Response` enums remain as shims.
+//!   `Request`/`Response` enums remain as shims. With
+//!   `CoordinatorConfig::fleet_models` set, each worker co-places the
+//!   listed models on ONE shared cim-sim grid
+//!   ([`crate::fleet::placement::FleetPlacement`]) with LRU tile
+//!   residency, and per-tenant token buckets
+//!   ([`crate::fleet::qos::TenantBudgets`]) layer under the aggregate
+//!   sample budget.
 //! * [`metrics`] — throughput/latency counters (bounded latency
 //!   window, one sort per snapshot), total request energy, the
 //!   adaptive ledger (samples used/saved, verdict counts, abstention
 //!   rate, samples-used histogram), the streaming ledger (frames,
-//!   schedule reuses, input columns skipped, per-frame pJ), and the
+//!   schedule reuses, input columns skipped, per-frame pJ), the
 //!   macro-grid ledger (chip utilization, spilled-tile weight
-//!   reloads; fed by `CoordinatorConfig::{macros, placement}`).
+//!   reloads; fed by `CoordinatorConfig::{macros, placement}`), and
+//!   the fleet ledger (per-tenant latency quantiles, fleet eviction
+//!   counts, queue fairness yields, schedule-cache evictions —
+//!   mirrored into the snapshot by [`Coordinator::metrics_summary`]).
 
 pub mod batcher;
 pub mod engine;

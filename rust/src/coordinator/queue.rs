@@ -1,26 +1,50 @@
-//! The coordinator's work queue: a shared lane every worker steals
-//! from, plus one pinned lane per worker for jobs with worker affinity
-//! (streaming-session frames must reach the worker holding their
-//! session state).
+//! The coordinator's work queue: prioritized shared lanes every worker
+//! steals from, plus one pinned lane per worker for jobs with worker
+//! affinity (streaming-session frames must reach the worker holding
+//! their session state).
 //!
-//! Built on a mutex + condvar instead of `mpsc` for three properties
-//! the serving loop needs and channels don't give:
+//! Built on a mutex + condvar instead of `mpsc` for properties the
+//! serving loop needs and channels don't give:
 //!
-//! * **affinity**: `push_to(worker, job)` targets one worker's lane;
-//!   `pop(worker)` drains that lane before stealing shared work;
+//! * **priority** ([`Priority`]): the shared queue is three lanes
+//!   (high / normal / low); `push_pri` files by lane and workers claim
+//!   the highest non-empty lane first. `push` stays the normal lane,
+//!   so unannotated traffic behaves exactly as before.
+//! * **affinity**: `push_to(worker, job)` targets one worker's pinned
+//!   lane; `pop(worker)` serves that lane ahead of normal/low shared
+//!   work. *High* shared work may preempt the pinned lane — that's
+//!   what the lane is for — but only [`PINNED_STARVATION_LIMIT`] times
+//!   in a row per worker; then the starvation guard serves the pinned
+//!   job regardless (counted in [`WorkQueue::fairness_yields`]), so a
+//!   stream frame is never starved indefinitely by a shared-lane
+//!   flood.
+//! * **aging**: a non-empty lower lane passed over
+//!   [`LANE_AGING_LIMIT`] times claims the next shared slot even with
+//!   higher work waiting (also a fairness yield) — low-priority
+//!   requests make progress under sustained high-priority load.
 //! * **requeue**: a worker that claimed an incompatible job during a
-//!   micro-batch drain can hand it back to the *front* of the shared
-//!   lane for any idle worker, instead of serving it serially after
-//!   its batch (the head-of-line-blocking fix);
+//!   micro-batch drain can hand it back to the *front* of the top
+//!   shared lane for any idle worker, instead of serving it serially
+//!   after its batch (the head-of-line-blocking fix).
 //! * **graceful close**: after [`WorkQueue::close`], workers finish
 //!   everything already queued (shared and pinned) before exiting.
 //!
 //! [`SessionRouter`] assigns sessions to workers round-robin on first
-//! sight and remembers the assignment (bounded, FIFO eviction) so
+//! sight and remembers the assignment (bounded, LRU eviction) so
 //! every later frame of the session lands on the same lane.
 
+use crate::fleet::qos::{Priority, PRIORITY_LANES};
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Condvar, Mutex};
+
+/// Consecutive times high-priority shared work may preempt one
+/// worker's non-empty pinned lane before the starvation guard serves
+/// the pinned job regardless.
+pub const PINNED_STARVATION_LIMIT: u32 = 4;
+
+/// Times a non-empty shared lane may be passed over before it claims
+/// the next shared slot ahead of higher lanes.
+pub const LANE_AGING_LIMIT: u32 = 8;
 
 /// Multi-lane MPMC job queue (see module docs).
 pub struct WorkQueue<T> {
@@ -29,18 +53,85 @@ pub struct WorkQueue<T> {
 }
 
 struct QueueState<T> {
-    shared: VecDeque<T>,
+    /// Shared lanes by [`Priority::lane`] (0 = high, claimed first).
+    shared: [VecDeque<T>; PRIORITY_LANES],
     lanes: Vec<VecDeque<T>>,
+    /// Per worker: consecutive times high shared work preempted its
+    /// non-empty pinned lane.
+    pinned_passed: Vec<u32>,
+    /// Per shared lane: consecutive times it was passed over while
+    /// non-empty.
+    lane_passed: [u32; PRIORITY_LANES],
+    /// Times a starvation/aging guard overrode strict priority.
+    fairness_yields: u64,
     closed: bool,
+}
+
+impl<T> QueueState<T> {
+    /// Claim the next job for `worker`: high shared work preempts the
+    /// pinned lane (bounded by the starvation guard), the pinned lane
+    /// beats normal/low shared work, shared lanes resolve by priority
+    /// + aging.
+    fn claim(&mut self, worker: usize) -> Option<T> {
+        let lane = worker % self.lanes.len();
+        if !self.lanes[lane].is_empty() {
+            if !self.shared[0].is_empty() {
+                if self.pinned_passed[lane] < PINNED_STARVATION_LIMIT {
+                    // preemption takes from the *high* lane only —
+                    // normal/low never jump a pinned job
+                    self.pinned_passed[lane] += 1;
+                    return self.take_shared(0);
+                }
+                // guard fires: pinned served despite high work waiting
+                self.fairness_yields += 1;
+            }
+            self.pinned_passed[lane] = 0;
+            return self.lanes[lane].pop_front();
+        }
+        self.pinned_passed[lane] = 0;
+        self.claim_shared()
+    }
+
+    /// Pop from the shared lanes: highest-priority non-empty lane,
+    /// unless a lower lane has aged past [`LANE_AGING_LIMIT`] — then
+    /// the longest-starved such lane claims the slot.
+    fn claim_shared(&mut self) -> Option<T> {
+        let aged = (0..PRIORITY_LANES)
+            .filter(|&l| !self.shared[l].is_empty() && self.lane_passed[l] >= LANE_AGING_LIMIT)
+            .max_by_key(|&l| self.lane_passed[l]);
+        let pick = aged.or_else(|| (0..PRIORITY_LANES).find(|&l| !self.shared[l].is_empty()))?;
+        if aged.is_some() && (0..pick).any(|l| !self.shared[l].is_empty()) {
+            self.fairness_yields += 1; // a higher lane actually waited
+        }
+        self.take_shared(pick)
+    }
+
+    /// Pop the front of shared lane `pick`, aging every other
+    /// non-empty lane (empty lanes reset — aging measures waiting
+    /// *work*, not idle time).
+    fn take_shared(&mut self, pick: usize) -> Option<T> {
+        for l in 0..PRIORITY_LANES {
+            if l == pick || self.shared[l].is_empty() {
+                self.lane_passed[l] = 0;
+            } else {
+                self.lane_passed[l] += 1;
+            }
+        }
+        self.shared[pick].pop_front()
+    }
 }
 
 impl<T> WorkQueue<T> {
     /// A queue with one pinned lane per worker.
     pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
         WorkQueue {
             state: Mutex::new(QueueState {
-                shared: VecDeque::new(),
-                lanes: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
+                shared: std::array::from_fn(|_| VecDeque::new()),
+                lanes: (0..workers).map(|_| VecDeque::new()).collect(),
+                pinned_passed: vec![0; workers],
+                lane_passed: [0; PRIORITY_LANES],
+                fairness_yields: 0,
                 closed: false,
             }),
             cv: Condvar::new(),
@@ -55,15 +146,21 @@ impl<T> WorkQueue<T> {
         self.state.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    /// Enqueue on the shared lane (any worker may take it). A closed
-    /// queue refuses the item and hands it back so the producer can
-    /// answer the caller instead of silently dropping the job.
+    /// Enqueue on the normal shared lane (any worker may take it). A
+    /// closed queue refuses the item and hands it back so the producer
+    /// can answer the caller instead of silently dropping the job.
     pub fn push(&self, item: T) -> Result<(), T> {
+        self.push_pri(item, Priority::Normal)
+    }
+
+    /// Enqueue on the shared lane for `priority`. Same close contract
+    /// as [`Self::push`].
+    pub fn push_pri(&self, item: T, priority: Priority) -> Result<(), T> {
         let mut s = self.lock();
         if s.closed {
             return Err(item);
         }
-        s.shared.push_back(item);
+        s.shared[priority.lane()].push_back(item);
         drop(s);
         self.cv.notify_one();
         Ok(())
@@ -85,27 +182,26 @@ impl<T> WorkQueue<T> {
         Ok(())
     }
 
-    /// Hand a claimed-but-unwanted job back to the *front* of the
-    /// shared lane so any idle worker picks it up next (accepted even
-    /// while closing — a claimed job must not be lost on shutdown).
+    /// Hand a claimed-but-unwanted job back to the *front* of the top
+    /// shared lane so any idle worker picks it up next, whatever lane
+    /// it originally waited in — a claimed job has already paid its
+    /// queueing, demoting it would re-queue it behind strangers
+    /// (accepted even while closing — a claimed job must not be lost
+    /// on shutdown).
     pub fn requeue(&self, item: T) {
         let mut s = self.lock();
-        s.shared.push_front(item);
+        s.shared[0].push_front(item);
         drop(s);
         self.cv.notify_one();
     }
 
-    /// Blocking pop for `worker`: pinned lane first, then the shared
-    /// lane. Returns None once the queue is closed *and* both lanes
-    /// this worker serves are drained.
+    /// Blocking pop for `worker` (see the claim order in the module
+    /// docs). Returns None once the queue is closed *and* every lane
+    /// this worker serves is drained.
     pub fn pop(&self, worker: usize) -> Option<T> {
         let mut s = self.lock();
-        let lane = worker % s.lanes.len();
         loop {
-            if let Some(item) = s.lanes[lane].pop_front() {
-                return Some(item);
-            }
-            if let Some(item) = s.shared.pop_front() {
+            if let Some(item) = s.claim(worker) {
                 return Some(item);
             }
             if s.closed {
@@ -115,10 +211,11 @@ impl<T> WorkQueue<T> {
         }
     }
 
-    /// Non-blocking pop from the shared lane only (the micro-batch
-    /// drain: pinned jobs are never co-batched).
+    /// Non-blocking pop from the shared lanes only (the micro-batch
+    /// drain: pinned jobs are never co-batched). Applies the same
+    /// priority + aging order as [`Self::pop`].
     pub fn try_pop_shared(&self) -> Option<T> {
-        self.lock().shared.pop_front()
+        self.lock().claim_shared()
     }
 
     /// Close the queue: producers are refused, consumers drain what is
@@ -129,12 +226,15 @@ impl<T> WorkQueue<T> {
     }
 
     /// Remove and return every queued job across all lanes (shared
-    /// first, then pinned lanes in worker order). The drain deadline
-    /// path uses this to answer stranded jobs explicitly instead of
-    /// dropping their responders on the floor.
+    /// lanes by priority, then pinned lanes in worker order). The
+    /// drain deadline path uses this to answer stranded jobs
+    /// explicitly instead of dropping their responders on the floor.
     pub fn drain_all(&self) -> Vec<T> {
         let mut s = self.lock();
-        let mut out: Vec<T> = s.shared.drain(..).collect();
+        let mut out: Vec<T> = Vec::new();
+        for lane in s.shared.iter_mut() {
+            out.extend(lane.drain(..));
+        }
         for lane in s.lanes.iter_mut() {
             out.extend(lane.drain(..));
         }
@@ -144,11 +244,18 @@ impl<T> WorkQueue<T> {
     /// Jobs currently queued across all lanes.
     pub fn len(&self) -> usize {
         let s = self.lock();
-        s.shared.len() + s.lanes.iter().map(|l| l.len()).sum::<usize>()
+        s.shared.iter().map(VecDeque::len).sum::<usize>()
+            + s.lanes.iter().map(VecDeque::len).sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Times a starvation/aging guard served a job over strictly
+    /// higher-priority waiting work (the fairness counter).
+    pub fn fairness_yields(&self) -> u64 {
+        self.lock().fairness_yields
     }
 }
 
@@ -308,6 +415,70 @@ mod tests {
             consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
         all.sort_unstable();
         assert_eq!(all, (0..3 * n_per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shared_lanes_serve_by_priority() {
+        let q = WorkQueue::new(1);
+        q.push_pri(30, Priority::Low).unwrap();
+        q.push(20).unwrap(); // plain push = normal lane
+        q.push_pri(10, Priority::High).unwrap();
+        q.push_pri(11, Priority::High).unwrap();
+        assert_eq!(q.pop(0), Some(10));
+        assert_eq!(q.pop(0), Some(11));
+        assert_eq!(q.pop(0), Some(20));
+        assert_eq!(q.pop(0), Some(30));
+        assert_eq!(q.fairness_yields(), 0, "strict priority needed no guard");
+    }
+
+    #[test]
+    fn aged_low_lane_claims_a_slot_under_high_flood() {
+        let q = WorkQueue::new(1);
+        q.push_pri(99, Priority::Low).unwrap();
+        for i in 0..(2 * LANE_AGING_LIMIT) {
+            q.push_pri(i, Priority::High).unwrap();
+        }
+        // the low job must surface within LANE_AGING_LIMIT + 1 pops
+        let mut served_after = None;
+        for n in 0..=LANE_AGING_LIMIT {
+            if q.pop(0) == Some(99) {
+                served_after = Some(n);
+                break;
+            }
+        }
+        assert_eq!(served_after, Some(LANE_AGING_LIMIT), "low lane aged past the limit");
+        assert_eq!(q.fairness_yields(), 1, "aging over waiting high work is a yield");
+    }
+
+    #[test]
+    fn high_preempts_pinned_but_cannot_starve_it() {
+        let q = WorkQueue::new(1);
+        q.push_to(0, 777).unwrap();
+        for i in 0..(2 * PINNED_STARVATION_LIMIT) {
+            q.push_pri(i, Priority::High).unwrap();
+        }
+        // high work preempts the pinned lane exactly LIMIT times...
+        for i in 0..PINNED_STARVATION_LIMIT {
+            assert_eq!(q.pop(0), Some(i));
+        }
+        // ...then the guard serves the pinned job despite waiting work
+        assert_eq!(q.pop(0), Some(777));
+        assert_eq!(q.fairness_yields(), 1);
+        // the guard reset the counter: the remaining high flood may
+        // preempt a fresh pinned job again
+        q.push_to(0, 888).unwrap();
+        assert_eq!(q.pop(0), Some(PINNED_STARVATION_LIMIT));
+    }
+
+    #[test]
+    fn normal_work_never_preempts_the_pinned_lane() {
+        let q = WorkQueue::new(1);
+        q.push_to(0, 1).unwrap();
+        q.push(2).unwrap();
+        q.push_pri(3, Priority::Low).unwrap();
+        assert_eq!(q.pop(0), Some(1), "normal/low shared work waits for pinned");
+        assert_eq!(q.pop(0), Some(2));
+        assert_eq!(q.pop(0), Some(3));
     }
 
     #[test]

@@ -23,6 +23,7 @@
 
 use crate::backend::BackendKind;
 use crate::error::{McCimError, RequestKind};
+use crate::fleet::qos::{Priority, Tenant};
 use crate::uncertainty::policy::{RiskProfile, Verdict};
 use crate::uncertainty::sequential::StopRule;
 
@@ -58,6 +59,12 @@ pub struct InferenceRequest {
     /// serves them on the fixed-T streaming path — adaptive overrides
     /// are rejected on session frames.
     pub session: Option<StreamSession>,
+    /// Who this request bills to: per-tenant sample budgets and
+    /// latency attribution key (defaults to the anonymous tenant).
+    pub tenant: Tenant,
+    /// Which shared queue lane the request waits in (defaults to
+    /// [`Priority::Normal`] — exactly the pre-QoS behavior).
+    pub priority: Priority,
 }
 
 /// Identifies one frame of a streaming inference session.
@@ -89,6 +96,8 @@ impl InferenceRequest {
             seed: None,
             backend: None,
             session: None,
+            tenant: Tenant::anonymous(),
+            priority: Priority::Normal,
         }
     }
 
@@ -155,6 +164,21 @@ impl InferenceRequest {
         if let Some(s) = &mut self.session {
             s.epsilon = epsilon.max(0.0);
         }
+        self
+    }
+
+    /// Bill this request to `tenant` (budget grants + latency
+    /// attribution; see `fleet::qos`).
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Self {
+        self.tenant = Tenant::new(tenant);
+        self
+    }
+
+    /// Queue-lane priority. QoS attributes don't make a request
+    /// non-plain: a high-priority plain request may still micro-batch
+    /// once claimed — priority governs *claim order*, not execution.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
         self
     }
 
@@ -332,6 +356,20 @@ mod tests {
         assert_eq!(r.backend, Some(BackendKind::CimSim));
         assert!(r.has_adaptive_overrides());
         assert!(!r.is_plain());
+    }
+
+    #[test]
+    fn qos_attributes_keep_requests_plain() {
+        let r = InferenceRequest::classify(vec![0.0; 4])
+            .with_tenant("acme")
+            .with_priority(Priority::High);
+        assert_eq!(r.tenant.name(), "acme");
+        assert_eq!(r.priority, Priority::High);
+        assert!(r.is_plain(), "priority steers the queue, not execution");
+        // defaults: anonymous tenant, normal lane
+        let d = InferenceRequest::classify(vec![]);
+        assert!(d.tenant.is_anonymous());
+        assert_eq!(d.priority, Priority::Normal);
     }
 
     #[test]

@@ -60,12 +60,14 @@ use super::request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
     StreamFrameInfo,
 };
-use crate::backend::{make_backend, BackendKind, BackendOptions, PlacementStrategy};
+use crate::backend::{make_backend, BackendKind, BackendOptions, GridConfig, PlacementStrategy};
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
 use crate::dropout::plan::{OrderingMode, ScheduleCache};
 use crate::energy::ModeConfig;
 use crate::error::{McCimError, RequestKind};
-use crate::model::ModelRegistry;
+use crate::fleet::placement::FleetPlacement;
+use crate::fleet::qos::{Tenant, TenantBudgetConfig, TenantBudgets};
+use crate::model::{ModelRegistry, ModelSpec};
 use crate::rng::{BetaPerturbedBernoulli, DropoutBitSource, IdealBernoulli};
 use crate::runtime::Runtime;
 use crate::uncertainty::policy::{DecisionPolicy, RiskProfile, Verdict};
@@ -191,6 +193,12 @@ pub struct AdaptiveConfig {
     pub temperature: f64,
     /// Aggregate sample budget shared by all workers (None = no cap).
     pub budget: Option<Arc<SharedBudget>>,
+    /// Per-tenant token buckets layered under the aggregate budget: a
+    /// request's ceiling is the *smaller* of the two grants, so one
+    /// tenant's overload degrades its own requests, not everyone's
+    /// (None = tenants share only the aggregate budget). Wired from
+    /// [`CoordinatorConfig::tenants`] by [`Coordinator::start`].
+    pub tenant_budgets: Option<Arc<TenantBudgets>>,
 }
 
 impl AdaptiveConfig {
@@ -203,6 +211,7 @@ impl AdaptiveConfig {
             pose_profile: RiskProfile::vo_pose(),
             temperature: 1.0,
             budget: None,
+            tenant_budgets: None,
         }
     }
 }
@@ -250,6 +259,19 @@ pub struct CoordinatorConfig {
     /// Ordered-schedule cache shared by all workers. Auto-created by
     /// [`Coordinator::start`] when `reuse` is set and none is given.
     pub schedule_cache: Option<Arc<ScheduleCache>>,
+    /// Per-tenant sample-budget configs (`--tenants`). Effective on
+    /// the adaptive path (like the aggregate budget): wired into
+    /// [`AdaptiveConfig::tenant_budgets`] by [`Coordinator::start`].
+    pub tenants: Vec<TenantBudgetConfig>,
+    /// Model ids to co-place on ONE shared cim-sim grid per worker
+    /// (`--fleet-models`): each gets an engine addressing the shared
+    /// chip, with LRU tile residency under the declared SRAM. Empty =
+    /// dedicated grid per engine, exactly as before.
+    pub fleet_models: Vec<String>,
+    /// Declared per-macro resident tile slots (cim-sim SRAM; None =
+    /// the grid's roomy default). Sizes both dedicated grids and the
+    /// fleet residency ledger.
+    pub capacity: Option<usize>,
     pub seed: u64,
 }
 
@@ -269,6 +291,9 @@ impl Default for CoordinatorConfig {
             reuse: false,
             ordering: OrderingMode::default(),
             schedule_cache: None,
+            tenants: Vec::new(),
+            fleet_models: Vec::new(),
+            capacity: None,
             seed: 7,
         }
     }
@@ -279,6 +304,8 @@ pub struct Coordinator {
     queue: Arc<WorkQueue<Job>>,
     router: Arc<SessionRouter>,
     workers: Vec<JoinHandle<()>>,
+    /// Kept for gauge mirroring (see [`Self::metrics_summary`]).
+    schedule_cache: Option<Arc<ScheduleCache>>,
     pub metrics: Arc<Metrics>,
 }
 
@@ -297,6 +324,17 @@ impl Coordinator {
             cfg.schedule_cache = Some(Arc::new(ScheduleCache::new()));
         }
 
+        // per-tenant token buckets layer under the aggregate budget on
+        // the adaptive path (same scope as `AdaptiveConfig::budget`)
+        if !cfg.tenants.is_empty() {
+            if let Some(ad) = cfg.adaptive.as_mut() {
+                if ad.tenant_budgets.is_none() {
+                    ad.tenant_budgets = Some(Arc::new(TenantBudgets::new(&cfg.tenants)));
+                }
+            }
+        }
+        let schedule_cache = cfg.schedule_cache.clone();
+
         let n = cfg.workers.max(1);
         let queue = Arc::new(WorkQueue::new(n));
         let router = Arc::new(SessionRouter::new(n));
@@ -312,25 +350,42 @@ impl Coordinator {
                 }
             }));
         }
-        Ok(Coordinator { queue, router, workers, metrics })
+        Ok(Coordinator { queue, router, workers, schedule_cache, metrics })
     }
 
     /// Dispatch one job: session frames are pinned to their session's
     /// worker (that worker holds the schedule + product-sum state);
-    /// everything else goes to the shared lane. A refused push (pool
-    /// shutting down) answers the job with [`McCimError::ShuttingDown`]
-    /// instead of dropping it silently.
+    /// everything else goes to the shared lane of the request's
+    /// priority. A refused push (pool shutting down) answers the job
+    /// with [`McCimError::ShuttingDown`] instead of dropping it
+    /// silently.
     fn dispatch(&self, job: Job) {
         let refused = match &job.request.session {
             Some(s) => {
                 let worker = self.router.route(&s.id);
                 self.queue.push_to(worker, job)
             }
-            None => self.queue.push(job),
+            None => {
+                let pri = job.request.priority;
+                self.queue.push_pri(job, pri)
+            }
         };
         if let Err(job) = refused {
             job.respond.send(Err(McCimError::ShuttingDown));
         }
+    }
+
+    /// Mirror the gauges owned by other components (queue fairness
+    /// yields, schedule-cache evictions) into the metrics sink and
+    /// return the one-line snapshot. Prefer this over calling
+    /// `metrics.summary()` directly — the gauges are only as fresh as
+    /// the last mirror.
+    pub fn metrics_summary(&self) -> String {
+        self.metrics.set_queue_fairness_yields(self.queue.fairness_yields());
+        if let Some(cache) = &self.schedule_cache {
+            self.metrics.set_schedule_cache_evictions(cache.evictions());
+        }
+        self.metrics.summary()
     }
 
     /// Submit a typed request; returns the response receiver
@@ -436,6 +491,10 @@ struct WorkerState {
     srcs: HashMap<(String, BackendKind), Box<dyn DropoutBitSource>>,
     sessions: HashMap<String, WorkerSession>,
     rt: Option<Runtime>,
+    /// This worker's shared-grid fleet (Some when `fleet_models` is
+    /// configured): the residency ledger touched before every request
+    /// for a co-placed model.
+    fleet: Option<FleetPlacement>,
     worker_id: usize,
 }
 
@@ -491,6 +550,7 @@ fn ensure_engine(
         pallas: cfg.pallas,
         macros: cfg.macros,
         placement: cfg.placement,
+        capacity: cfg.capacity,
     };
     let backend = make_backend(kind, state.rt.as_ref(), &cfg.artifacts, spec, &opts)?;
     let mut engine = McDropoutEngine::with_backend(
@@ -532,9 +592,82 @@ fn ensure_engine(
 }
 
 /// Micro-batching eligibility: a plain fixed-T classify on the default
-/// classifier with no per-request overrides.
+/// classifier with no per-request overrides. (QoS attributes keep a
+/// request plain — priority governed its claim order, which has
+/// already happened by now.)
 fn microbatchable(r: &InferenceRequest) -> bool {
     r.kind == RequestKind::Classify && r.model == "mnist" && r.is_plain()
+}
+
+/// Co-place `cfg.fleet_models` on ONE shared cim-sim grid for this
+/// worker: every listed model gets an engine addressing the same chip
+/// (keyed under [`BackendKind::CimSim`]), the placement's residency
+/// ledger enforces the declared SRAM, and an initial touch of every
+/// model prices the placement-time weight loads. The registry mirrors
+/// each model's residency.
+fn build_fleet(
+    state: &mut WorkerState,
+    cfg: &CoordinatorConfig,
+    registry: &mut ModelRegistry,
+    metrics: &Metrics,
+) -> Result<()> {
+    if cfg.fleet_models.is_empty() {
+        return Ok(());
+    }
+    let specs: Vec<ModelSpec> = cfg
+        .fleet_models
+        .iter()
+        .map(|id| registry.get(id).cloned())
+        .collect::<Result<_, McCimError>>()?;
+    let mut grid_cfg = GridConfig::with_macros(cfg.macros, cfg.placement);
+    if let Some(cap) = cfg.capacity {
+        grid_cfg.capacity = cap.max(1);
+    }
+    let (placement, backends) = FleetPlacement::load_co_placed(
+        &cfg.artifacts,
+        &specs,
+        cfg.bits.unwrap_or(6),
+        grid_cfg,
+    )
+    .context("fleet co-placement failed")?;
+    for (spec, backend) in specs.iter().zip(backends) {
+        let key = (spec.id.clone(), BackendKind::CimSim);
+        let mut engine = McDropoutEngine::with_backend(
+            Box::new(backend),
+            spec,
+            cfg.bits,
+            ModeConfig::mf_asym_reuse_ordered(),
+        )
+        .with_context(|| format!("fleet engine for '{}'", spec.id))?;
+        if cfg.reuse {
+            engine.set_delta_schedule(DeltaScheduleConfig {
+                reuse: true,
+                ordering: cfg.ordering,
+                cache: cfg.schedule_cache.clone(),
+            });
+        }
+        if !state.srcs.contains_key(&key) {
+            state.srcs.insert(
+                key.clone(),
+                make_source(
+                    cfg,
+                    engine.mask_keep(),
+                    cfg.seed + model_salt(&spec.id) + state.worker_id as u64,
+                ),
+            );
+        }
+        state.engines.insert(key, engine);
+    }
+    // placement-time warm load: first touches bill the one-time
+    // weight loads now, not inside the first request's latency
+    for spec in &specs {
+        if let Some(touch) = placement.touch_model(&spec.id) {
+            metrics.record_fleet_evictions(touch.evictions);
+        }
+    }
+    placement.sync_registry(registry);
+    state.fleet = Some(placement);
+    Ok(())
 }
 
 fn worker_loop(
@@ -544,14 +677,19 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) -> Result<()> {
     let meta = Meta::load(&cfg.artifacts)?;
-    let registry = ModelRegistry::builtin(&meta);
+    let mut registry = ModelRegistry::builtin(&meta);
     let mut state = WorkerState {
         engines: HashMap::new(),
         srcs: HashMap::new(),
         sessions: HashMap::new(),
         rt: None,
+        fleet: None,
         worker_id,
     };
+    // co-placed fleet engines first: they pre-seed the engine map, so
+    // the ensure_engine calls below (and per-request ones later) are
+    // no-ops for fleet models — requests route onto the shared grid
+    build_fleet(&mut state, &cfg, &mut registry, &metrics)?;
     // fail fast: default-backend engines for both builtin workloads
     ensure_engine(&mut state, &cfg, &registry, "mnist", cfg.backend)?;
     ensure_engine(&mut state, &cfg, &registry, "vo", cfg.backend)?;
@@ -634,6 +772,9 @@ fn process_job(
         Ok(r) => {
             metrics.record_request(t0.elapsed());
             metrics.record_energy(r.energy_pj());
+            if !job.request.tenant.is_anonymous() {
+                metrics.record_tenant_request(job.request.tenant.name(), t0.elapsed());
+            }
         }
         Err(_) => metrics.record_error(),
     }
@@ -649,6 +790,15 @@ fn execute_job(
 ) -> InferenceResult {
     let kind = request.backend.unwrap_or(cfg.backend);
     ensure_engine(state, cfg, registry, &request.model, kind)?;
+    if kind == BackendKind::CimSim {
+        // demand-page a co-placed model's tiles back in before serving;
+        // any evictions this forces are visible in the fleet metrics
+        if let Some(fleet) = &state.fleet {
+            if let Some(touch) = fleet.touch_model(&request.model) {
+                metrics.record_fleet_evictions(touch.evictions);
+            }
+        }
+    }
     if request.session.is_some() {
         return execute_session_frame(state, cfg, request, kind, metrics);
     }
@@ -1045,24 +1195,50 @@ fn regress_fixed(
 /// Grant a (possibly degraded) sample ceiling for one adaptive
 /// request; the shortfall vs `full_t` is load shedding and is
 /// recorded as such (distinct from early-stop savings).
-fn grant_ceiling(ad: &AdaptiveConfig, full_t: usize, floor: usize, metrics: &Metrics) -> usize {
-    let ceiling = match &ad.budget {
+///
+/// With per-tenant budgets configured the ceiling is the smaller of
+/// the aggregate grant and the tenant's grant: aggregate tokens the
+/// tenant cannot use are released straight back, so one throttled
+/// tenant never holds capacity away from the others.
+fn grant_ceiling(
+    ad: &AdaptiveConfig,
+    tenant: &Tenant,
+    full_t: usize,
+    floor: usize,
+    metrics: &Metrics,
+) -> usize {
+    let mut ceiling = match &ad.budget {
         Some(b) => b.grant(full_t, floor),
         None => full_t,
     };
+    if let Some(tb) = &ad.tenant_budgets {
+        let tenant_grant = tb.grant(tenant, ceiling, floor.min(ceiling));
+        if tenant_grant < ceiling {
+            if let Some(b) = &ad.budget {
+                b.release(ceiling - tenant_grant);
+            }
+            ceiling = tenant_grant;
+        }
+    }
     if ceiling < full_t {
         metrics.record_load_shed(full_t - ceiling);
     }
     ceiling
 }
 
-/// Return the unexecuted tail of a grant to the shared budget (on
-/// early stop *and* on error paths — grants must never leak).
-fn refund_unused(ad: &AdaptiveConfig, ceiling: usize, executed: usize) {
+/// Return the unexecuted tail of a grant to the shared budget — and
+/// to the tenant's own bucket — on early stop *and* on error paths;
+/// grants must never leak.
+fn refund_unused(ad: &AdaptiveConfig, tenant: &Tenant, ceiling: usize, executed: usize) {
+    if executed >= ceiling {
+        return;
+    }
+    let unused = ceiling - executed;
     if let Some(b) = &ad.budget {
-        if executed < ceiling {
-            b.release(ceiling - executed);
-        }
+        b.release(unused);
+    }
+    if let Some(tb) = &ad.tenant_budgets {
+        tb.release(tenant, unused);
     }
 }
 
@@ -1078,7 +1254,7 @@ fn classify_adaptive(
 ) -> InferenceResult {
     let full_t = request.samples.max(1);
     let mut seq = ad.sequential;
-    let ceiling = grant_ceiling(ad, full_t, seq.min_samples, metrics);
+    let ceiling = grant_ceiling(ad, &request.tenant, full_t, seq.min_samples, metrics);
     seq.max_samples = ceiling;
 
     let scaler = TemperatureScaler { temperature: ad.temperature };
@@ -1096,7 +1272,7 @@ fn classify_adaptive(
     let mut out = match run {
         Ok(o) => o,
         Err(e) => {
-            refund_unused(ad, ceiling, ens.iterations());
+            refund_unused(ad, &request.tenant, ceiling, ens.iterations());
             return Err(exec_error(engine, request, e));
         }
     };
@@ -1140,7 +1316,7 @@ fn classify_adaptive(
                 out.samples.extend(more.samples);
             }
             Err(e) => {
-                refund_unused(ad, ceiling, ens.iterations());
+                refund_unused(ad, &request.tenant, ceiling, ens.iterations());
                 return Err(exec_error(engine, request, e));
             }
         }
@@ -1150,7 +1326,7 @@ fn classify_adaptive(
     }
 
     let used = ens.iterations();
-    refund_unused(ad, ceiling, used);
+    refund_unused(ad, &request.tenant, ceiling, used);
     metrics.record_adaptive(used, ceiling, verdict);
     Ok(InferenceResponse::Class(ClassifyResponse {
         model: engine.model_id().to_string(),
@@ -1178,7 +1354,7 @@ fn regress_adaptive(
 ) -> InferenceResult {
     let full_t = request.samples.max(1);
     let mut seq = ad.sequential;
-    let ceiling = grant_ceiling(ad, full_t, seq.min_samples, metrics);
+    let ceiling = grant_ceiling(ad, &request.tenant, full_t, seq.min_samples, metrics);
     seq.max_samples = ceiling;
 
     let var_dims = engine.out_dim().min(3); // VO position block
@@ -1196,7 +1372,7 @@ fn regress_adaptive(
     let out = match run {
         Ok(o) => o,
         Err(e) => {
-            refund_unused(ad, ceiling, ens.iterations());
+            refund_unused(ad, &request.tenant, ceiling, ens.iterations());
             return Err(exec_error(engine, request, e));
         }
     };
@@ -1235,7 +1411,7 @@ fn regress_adaptive(
                 }
             }
             Err(e) => {
-                refund_unused(ad, ceiling, ens.iterations());
+                refund_unused(ad, &request.tenant, ceiling, ens.iterations());
                 return Err(exec_error(engine, request, e));
             }
         }
@@ -1243,7 +1419,7 @@ fn regress_adaptive(
     }
 
     let used = ens.iterations();
-    refund_unused(ad, ceiling, used);
+    refund_unused(ad, &request.tenant, ceiling, used);
     metrics.record_adaptive(used, ceiling, verdict);
     Ok(InferenceResponse::Pose(PoseResponse {
         model: engine.model_id().to_string(),
@@ -1345,6 +1521,9 @@ fn microbatch_classify(
                 };
                 metrics.record_request(t0.elapsed());
                 metrics.record_energy(energy_pj);
+                if !job.request.tenant.is_anonymous() {
+                    metrics.record_tenant_request(job.request.tenant.name(), t0.elapsed());
+                }
                 job.respond.send(Ok(InferenceResponse::Class(ClassifyResponse {
                     model: engine.model_id().to_string(),
                     prediction: ens.prediction(),

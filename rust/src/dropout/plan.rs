@@ -361,21 +361,39 @@ pub const SCHEDULE_CACHE_CAPACITY: usize = 1024;
 
 /// Per-model ordered-schedule cache (the paper computes schedules
 /// offline and stores them, §IV-B). Shared across workers via `Arc`.
-/// Bounded: once `capacity` entries are stored, the oldest insertion
-/// is evicted (FIFO) — seeded request streams with ever-fresh seeds
-/// must not grow worker memory without limit.
+/// Bounded: once `capacity` entries are stored, the least-recently
+/// *used* entry is evicted (a lookup hit refreshes recency) — seeded
+/// request streams with ever-fresh seeds must not grow worker memory
+/// without limit, and must not evict the hot shared-stream schedules
+/// while doing so.
 pub struct ScheduleCache {
     map: Mutex<CacheState>,
     capacity: usize,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 #[derive(Default)]
 struct CacheState {
-    entries: HashMap<ScheduleKey, Arc<CachedSchedule>>,
-    /// Insertion order for FIFO eviction.
-    order: std::collections::VecDeque<ScheduleKey>,
+    /// Entry + last-touched clock stamp (LRU eviction key).
+    entries: HashMap<ScheduleKey, (Arc<CachedSchedule>, u64)>,
+    /// Monotonic touch counter; bumped on every hit and insert.
+    clock: u64,
+}
+
+impl CacheState {
+    fn evict_lru(&mut self) -> bool {
+        let oldest = self
+            .entries
+            .iter()
+            .min_by_key(|(_, (_, stamp))| *stamp)
+            .map(|(key, _)| key.clone());
+        match oldest {
+            Some(key) => self.entries.remove(&key).is_some(),
+            None => false,
+        }
+    }
 }
 
 impl Default for ScheduleCache {
@@ -389,22 +407,27 @@ impl ScheduleCache {
         Self::default()
     }
 
-    /// A cache bounded to `capacity` schedules (FIFO eviction).
+    /// A cache bounded to `capacity` schedules (LRU eviction).
     pub fn with_capacity(capacity: usize) -> Self {
         ScheduleCache {
             map: Mutex::new(CacheState::default()),
             capacity: capacity.max(1),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
         }
     }
 
-    /// Look a schedule up, recording a hit or miss.
+    /// Look a schedule up, recording a hit or miss. A hit refreshes
+    /// the entry's recency.
     pub fn lookup(&self, key: &ScheduleKey) -> Option<Arc<CachedSchedule>> {
-        let state = self.map.lock().unwrap_or_else(|p| p.into_inner());
-        let found = state.entries.get(key).cloned();
-        match found {
-            Some(s) => {
+        let mut state = self.map.lock().unwrap_or_else(|p| p.into_inner());
+        state.clock += 1;
+        let stamp = state.clock;
+        match state.entries.get_mut(key) {
+            Some((schedule, last)) => {
+                *last = stamp;
+                let s = Arc::clone(schedule);
                 self.hits.fetch_add(1, AtomicOrdering::Relaxed);
                 Some(s)
             }
@@ -417,20 +440,18 @@ impl ScheduleCache {
 
     /// Store a freshly sampled schedule (last writer wins on races —
     /// both writers sampled identical masks by construction), evicting
-    /// the oldest entry when the cache is full.
+    /// the least-recently-used entry when the cache is full.
     pub fn insert(&self, key: ScheduleKey, schedule: CachedSchedule) -> Arc<CachedSchedule> {
         let entry = Arc::new(schedule);
         let mut state = self.map.lock().unwrap_or_else(|p| p.into_inner());
-        if state.entries.insert(key.clone(), Arc::clone(&entry)).is_none() {
-            state.order.push_back(key);
-            while state.entries.len() > self.capacity {
-                match state.order.pop_front() {
-                    Some(old) => {
-                        state.entries.remove(&old);
-                    }
-                    None => break,
-                }
+        state.clock += 1;
+        let stamp = state.clock;
+        state.entries.insert(key, (Arc::clone(&entry), stamp));
+        while state.entries.len() > self.capacity {
+            if !state.evict_lru() {
+                break;
             }
+            self.evictions.fetch_add(1, AtomicOrdering::Relaxed);
         }
         entry
     }
@@ -441,6 +462,13 @@ impl ScheduleCache {
 
     pub fn misses(&self) -> u64 {
         self.misses.load(AtomicOrdering::Relaxed)
+    }
+
+    /// Entries evicted to stay within capacity (an always-growing
+    /// number here means the working set outgrew the cache — check
+    /// `hit_rate` before raising capacity).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(AtomicOrdering::Relaxed)
     }
 
     /// Fraction of lookups served from the cache.
@@ -469,6 +497,7 @@ impl fmt::Debug for ScheduleCache {
             .field("entries", &self.len())
             .field("hits", &self.hits())
             .field("misses", &self.misses())
+            .field("evictions", &self.evictions())
             .finish()
     }
 }
@@ -620,7 +649,7 @@ mod tests {
     }
 
     #[test]
-    fn schedule_cache_is_bounded_with_fifo_eviction() {
+    fn schedule_cache_is_bounded_with_lru_eviction() {
         let cache = ScheduleCache::with_capacity(2);
         let mut src = IdealBernoulli::new(0.5, 1);
         let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed) };
@@ -628,12 +657,30 @@ mod tests {
             cache.insert(key(seed), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
         }
         assert_eq!(cache.len(), 2, "capacity must bound the cache");
-        assert!(cache.lookup(&key(0)).is_none(), "oldest entry evicted first");
+        assert_eq!(cache.evictions(), 1);
+        assert!(cache.lookup(&key(0)).is_none(), "least-recently-used entry evicted");
         assert!(cache.lookup(&key(1)).is_some());
         assert!(cache.lookup(&key(2)).is_some());
-        // re-inserting an existing key must not duplicate its FIFO slot
+        // re-inserting an existing key must not evict anyone
         cache.insert(key(2), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
         assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn schedule_cache_lookup_refreshes_recency() {
+        let cache = ScheduleCache::with_capacity(2);
+        let mut src = IdealBernoulli::new(0.5, 2);
+        let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed) };
+        cache.insert(key(0), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
+        cache.insert(key(1), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
+        // touch the older entry: a seeded-flood newcomer must evict
+        // the *cold* key(1), not the hot key(0) a FIFO would drop
+        assert!(cache.lookup(&key(0)).is_some());
+        cache.insert(key(2), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
+        assert!(cache.lookup(&key(0)).is_some(), "hot entry survives");
+        assert!(cache.lookup(&key(1)).is_none(), "cold entry evicted");
+        assert_eq!(cache.evictions(), 1);
     }
 
     #[test]

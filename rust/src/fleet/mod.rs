@@ -1,0 +1,35 @@
+//! Fleet scheduling: the macro grid as a shared, multi-tenant
+//! resource.
+//!
+//! PR-5's grid scaled one model across many macros; this subsystem
+//! turns that chip into a *fleet* substrate serving several models and
+//! tenants at once:
+//!
+//! * [`placement`] — co-place multiple models' weight tiles on one
+//!   [`MacroGrid`](crate::cim::grid::MacroGrid), with a demand-paged
+//!   LRU residency ledger under declared SRAM pressure. Hot-swap
+//!   traffic is priced through the energy model: first touches are
+//!   weight loads, evicted-then-reused tiles are weight reloads —
+//!   never free, never double-billed.
+//! * [`qos`] — [`Tenant`] identity and [`Priority`] lanes on
+//!   requests, plus per-tenant token-bucket sample budgets
+//!   ([`TenantBudgets`]) so one tenant's overload degrades its own
+//!   grants, not everyone's.
+//! * [`shard`] — split a large MC batch across multiple grids and
+//!   merge outputs back in sampling order with parallel-chip
+//!   accounting (`to_bits`-identical to the unsharded run).
+//!
+//! The coordinator wires these together: `--fleet-models` co-places
+//! models per worker, `--tenants` configures budgets, the work queue
+//! serves priority lanes with starvation guards, and the metrics
+//! snapshot reports per-tenant latency plus eviction counts.
+
+pub mod placement;
+pub mod qos;
+pub mod shard;
+
+pub use placement::{FleetModelDef, FleetPlacement, PlacedModel, TouchStats};
+pub use qos::{
+    Priority, Tenant, TenantBudgetConfig, TenantBudgets, ANONYMOUS_TENANT, PRIORITY_LANES,
+};
+pub use shard::{merge_grid_stats, merge_shards, run_sharded, ShardOutcome, ShardPlan, ShardRun};

@@ -1,0 +1,486 @@
+//! Multi-model placement on one shared macro grid, with an LRU
+//! residency ledger that prices hot-swap traffic honestly.
+//!
+//! [`FleetPlacement::co_place`] puts several models' weight tiles on
+//! **one** [`MacroGrid`] through the existing packed/replicated
+//! machinery (every backend built by
+//! [`CimSimBackend::co_place`] addresses its own tiles via a layer
+//! offset, so outputs stay `to_bits`-identical to each model on a
+//! dedicated grid — `rust/tests/fleet.rs` enforces this). The grid
+//! itself is built large enough to hold the combined tile set; the
+//! *declared* SRAM (`macros × capacity` slots of the original
+//! [`GridConfig`]) is enforced here instead, by a demand-paged LRU:
+//!
+//! * first touch of a tile = one weight **load** (its bits priced once
+//!   through [`EnergyModel::chip_report`]'s `weight_load_pj`);
+//! * touching a tile while every slot is full **evicts** the
+//!   least-recently-used resident tile;
+//! * touching an evicted tile again = exactly one weight **reload**
+//!   (priced via `weight_reload_pj`) — evicted-then-reused is never
+//!   free, and a tile that stays resident is never re-billed.
+//!
+//! [`Self::stats`] substitutes this ledger's load/reload accounting
+//! into the grid's counters (the enlarged grid never spills
+//! statically, so there is no double billing), which makes
+//! [`Self::chip_report`] the one place fleet energy is read from.
+
+use crate::backend::cim_sim::CimSimBackend;
+use crate::backend::{GridConfig, LayerParams};
+use crate::cim::grid::{GridRunStats, MacroGrid};
+use crate::cim::xadc::AdcKind;
+use crate::energy::{ChipEnergyReport, EnergyModel};
+use crate::model::{ModelRegistry, ModelSpec, Residency};
+use crate::operator::bitplane::OperatorKind;
+use crate::workloads::TensorFile;
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::ops::Range;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// One model joining the fleet: its spec plus raw layer parameters.
+pub struct FleetModelDef {
+    pub spec: ModelSpec,
+    pub layers: Vec<LayerParams>,
+}
+
+/// Where one model landed on the shared grid.
+#[derive(Clone, Debug)]
+pub struct PlacedModel {
+    pub id: String,
+    /// First global layer index of the model's tiles.
+    pub layer_base: usize,
+    /// FC layer count.
+    pub layers: usize,
+    /// Global tile-index range (contiguous: tiles are layer-major in
+    /// model order).
+    pub tiles: Range<usize>,
+    /// Total stored weight bits of the model's tiles (one copy).
+    pub weight_bits: u64,
+}
+
+/// Residency outcome of touching one model's tiles before a request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TouchStats {
+    /// Tiles the model owns.
+    pub tiles: usize,
+    /// Tiles already resident (free — the weight-stationary contract).
+    pub hits: usize,
+    /// First-ever loads this touch performed.
+    pub loads: usize,
+    /// Evicted-then-reused tiles this touch re-loaded.
+    pub reloads: usize,
+    /// Weight bits the loads stored.
+    pub load_bits: u64,
+    /// Weight bits the reloads re-stored.
+    pub reload_bits: u64,
+    /// Victim tiles this touch pushed out.
+    pub evictions: u64,
+}
+
+enum Touch {
+    Hit,
+    Load,
+    Reload,
+}
+
+/// The demand-paged SRAM model: which tiles hold a slot right now,
+/// lifetime load/reload/eviction counters.
+struct ResidencyLru {
+    /// Declared SRAM: total resident tile slots across the fleet.
+    slots: usize,
+    clock: u64,
+    /// tile index → last-touch clock.
+    resident: HashMap<usize, u64>,
+    /// Tiles that have ever held a slot (distinguishes load vs reload).
+    ever_loaded: HashSet<usize>,
+    loads: u64,
+    load_bits: u64,
+    reloads: u64,
+    reload_bits: u64,
+    evictions: u64,
+}
+
+impl ResidencyLru {
+    fn new(slots: usize) -> ResidencyLru {
+        ResidencyLru {
+            slots: slots.max(1),
+            clock: 0,
+            resident: HashMap::new(),
+            ever_loaded: HashSet::new(),
+            loads: 0,
+            load_bits: 0,
+            reloads: 0,
+            reload_bits: 0,
+            evictions: 0,
+        }
+    }
+
+    fn touch(&mut self, tile: usize, bits: u64) -> Touch {
+        self.clock += 1;
+        if let Some(stamp) = self.resident.get_mut(&tile) {
+            *stamp = self.clock;
+            return Touch::Hit;
+        }
+        if self.resident.len() >= self.slots {
+            let victim = self
+                .resident
+                .iter()
+                .min_by_key(|&(_, &stamp)| stamp)
+                .map(|(&idx, _)| idx)
+                .expect("full LRU is non-empty");
+            self.resident.remove(&victim);
+            self.evictions += 1;
+        }
+        self.resident.insert(tile, self.clock);
+        if self.ever_loaded.insert(tile) {
+            self.loads += 1;
+            self.load_bits += bits;
+            Touch::Load
+        } else {
+            self.reloads += 1;
+            self.reload_bits += bits;
+            Touch::Reload
+        }
+    }
+}
+
+/// The fleet's shared chip: one grid, many models, one residency
+/// ledger. Thread-safe (the ledger is behind a mutex); the grid's own
+/// execution counters stay per-macro as before.
+pub struct FleetPlacement {
+    grid: Arc<MacroGrid>,
+    models: Vec<PlacedModel>,
+    index: BTreeMap<String, usize>,
+    /// Stored bits per global tile index (from the grid's tiles).
+    tile_bits: Vec<u64>,
+    lru: Mutex<ResidencyLru>,
+}
+
+impl FleetPlacement {
+    /// Co-place `defs` on one shared grid. The returned backends (one
+    /// per model, same order) execute on that grid; the placement's
+    /// slot budget is `cfg.macros × cfg.capacity` — the SRAM the
+    /// caller *declared*, which the combined fleet may well exceed
+    /// (that pressure is the point).
+    pub fn co_place(
+        defs: Vec<FleetModelDef>,
+        bits: u8,
+        cfg: GridConfig,
+    ) -> Result<(FleetPlacement, Vec<CimSimBackend>)> {
+        ensure!(!defs.is_empty(), "fleet needs at least one model");
+        let mut seen = HashSet::new();
+        for def in &defs {
+            ensure!(
+                seen.insert(def.spec.id.clone()),
+                "duplicate fleet model id '{}'",
+                def.spec.id
+            );
+        }
+        let slots = cfg.macros.max(1) * cfg.capacity.max(1);
+        let specs: Vec<ModelSpec> = defs.iter().map(|d| d.spec.clone()).collect();
+        let backends = CimSimBackend::co_place(
+            defs.into_iter().map(|d| (d.spec, d.layers)).collect(),
+            bits,
+            cfg,
+        )?;
+        let grid = backends[0].grid_arc();
+        let tile_bits: Vec<u64> = (0..grid.tile_count()).map(|i| grid.tile_bits(i)).collect();
+        let mut models = Vec::with_capacity(specs.len());
+        let mut index = BTreeMap::new();
+        let mut cursor = 0usize;
+        for (k, (spec, backend)) in specs.iter().zip(&backends).enumerate() {
+            let layer_base = backend.layer_base();
+            let start = cursor;
+            while cursor < grid.tile_count()
+                && grid.tile_id(cursor).layer < layer_base + spec.n_layers()
+            {
+                cursor += 1;
+            }
+            let tiles = start..cursor;
+            let weight_bits = tile_bits[tiles.clone()].iter().sum();
+            index.insert(spec.id.clone(), k);
+            models.push(PlacedModel {
+                id: spec.id.clone(),
+                layer_base,
+                layers: spec.n_layers(),
+                tiles,
+                weight_bits,
+            });
+        }
+        debug_assert_eq!(cursor, grid.tile_count(), "every tile belongs to a model");
+        let placement = FleetPlacement {
+            grid,
+            models,
+            index,
+            tile_bits,
+            lru: Mutex::new(ResidencyLru::new(slots)),
+        };
+        Ok((placement, backends))
+    }
+
+    /// [`Self::co_place`] with weights loaded from the artifacts
+    /// directory (the serve path).
+    pub fn load_co_placed(
+        artifacts: impl AsRef<Path>,
+        specs: &[ModelSpec],
+        bits: u8,
+        cfg: GridConfig,
+    ) -> Result<(FleetPlacement, Vec<CimSimBackend>)> {
+        let dir = artifacts.as_ref();
+        let mut defs = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let tf = TensorFile::load(dir.join(&spec.weights))?;
+            let mut layers = Vec::with_capacity(spec.n_layers());
+            for i in 0..spec.n_layers() {
+                layers.push(LayerParams {
+                    w: tf.get(&format!("w{}", i + 1))?.f32s()?.to_vec(),
+                    b: tf.get(&format!("b{}", i + 1))?.f32s()?.to_vec(),
+                    s: tf.get(&format!("s{}", i + 1))?.f32s()?.to_vec(),
+                });
+            }
+            defs.push(FleetModelDef { spec: spec.clone(), layers });
+        }
+        Self::co_place(defs, bits, cfg)
+    }
+
+    /// Bring `id`'s tiles resident before serving it: hits are free,
+    /// first-ever touches bill loads, evicted-then-reused tiles bill
+    /// exactly one reload each, and any victims pushed out are counted.
+    /// Returns `None` for a model the fleet does not hold.
+    pub fn touch_model(&self, id: &str) -> Option<TouchStats> {
+        let &k = self.index.get(id)?;
+        let model = &self.models[k];
+        let mut lru = self.lru.lock().unwrap_or_else(|p| p.into_inner());
+        let evictions_before = lru.evictions;
+        let mut ts = TouchStats { tiles: model.tiles.len(), ..TouchStats::default() };
+        for tile in model.tiles.clone() {
+            match lru.touch(tile, self.tile_bits[tile]) {
+                Touch::Hit => ts.hits += 1,
+                Touch::Load => {
+                    ts.loads += 1;
+                    ts.load_bits += self.tile_bits[tile];
+                }
+                Touch::Reload => {
+                    ts.reloads += 1;
+                    ts.reload_bits += self.tile_bits[tile];
+                }
+            }
+        }
+        ts.evictions = lru.evictions - evictions_before;
+        Some(ts)
+    }
+
+    /// Grid counters with the fleet's demand-paged weight accounting
+    /// substituted in: `weight_load_bits` is what the LRU actually
+    /// loaded (not the enlarged grid's placement-time total),
+    /// reloads are the LRU's hot-swap traffic (the grid's own spill
+    /// reloads are zero by construction — [`CimSimBackend::co_place`]
+    /// sizes the grid to fit), and `spilled_tiles` counts tiles
+    /// currently without a slot.
+    pub fn stats(&self) -> GridRunStats {
+        let mut stats = self.grid.stats();
+        let lru = self.lru.lock().unwrap_or_else(|p| p.into_inner());
+        stats.weight_load_bits = lru.load_bits;
+        stats.weight_reloads += lru.reloads;
+        stats.weight_reload_bits += lru.reload_bits;
+        stats.spilled_tiles = self.grid.tile_count() - lru.resident.len();
+        stats
+    }
+
+    /// Chip-level energy of the whole fleet, hot-swap traffic
+    /// included — the acceptance surface for eviction pricing.
+    pub fn chip_report(&self, energy: &EnergyModel) -> ChipEnergyReport {
+        energy.chip_report(
+            &self.stats(),
+            OperatorKind::MultiplicationFree,
+            AdcKind::AsymmetricMedian,
+        )
+    }
+
+    /// Current placement state of `id`'s tiles.
+    pub fn residency_of(&self, id: &str) -> Residency {
+        let Some(&k) = self.index.get(id) else {
+            return Residency::Unplaced;
+        };
+        let model = &self.models[k];
+        let lru = self.lru.lock().unwrap_or_else(|p| p.into_inner());
+        let resident = model.tiles.clone().filter(|t| lru.resident.contains_key(t)).count();
+        let touched = model.tiles.clone().any(|t| lru.ever_loaded.contains(&t));
+        if resident == model.tiles.len() && resident > 0 {
+            Residency::Resident
+        } else if resident > 0 {
+            Residency::Partial
+        } else if touched {
+            Residency::Evicted
+        } else {
+            Residency::Unplaced
+        }
+    }
+
+    /// Push every fleet model's residency into the registry (the
+    /// metrics/introspection surface).
+    pub fn sync_registry(&self, registry: &mut ModelRegistry) {
+        for model in &self.models {
+            registry.set_residency(&model.id, self.residency_of(&model.id));
+        }
+    }
+
+    /// Lifetime eviction count.
+    pub fn evictions(&self) -> u64 {
+        self.lru.lock().unwrap_or_else(|p| p.into_inner()).evictions
+    }
+
+    /// Declared SRAM in resident tile slots.
+    pub fn slots(&self) -> usize {
+        self.lru.lock().unwrap_or_else(|p| p.into_inner()).slots
+    }
+
+    /// The models on this grid, placement order.
+    pub fn models(&self) -> &[PlacedModel] {
+        &self.models
+    }
+
+    /// The shared chip.
+    pub fn grid(&self) -> &MacroGrid {
+        &self.grid
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cim::grid::PlacementStrategy;
+    use crate::util::testkit::f32_vec;
+    use crate::util::Pcg32;
+
+    fn def(id: &str, dims: Vec<usize>, seed: u64) -> FleetModelDef {
+        let spec = ModelSpec::synthetic(id, dims.clone());
+        let mut rng = Pcg32::seeded(seed);
+        let layers = (0..dims.len() - 1)
+            .map(|l| {
+                let (fi, fo) = (dims[l], dims[l + 1]);
+                LayerParams {
+                    w: f32_vec(&mut rng, fi * fo, 1.0),
+                    b: f32_vec(&mut rng, fo, 0.1),
+                    s: vec![0.25; fo],
+                }
+            })
+            .collect();
+        FleetModelDef { spec, layers }
+    }
+
+    fn two_model_fleet(capacity: usize) -> (FleetPlacement, Vec<CimSimBackend>) {
+        let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity };
+        FleetPlacement::co_place(
+            vec![def("a", vec![40, 24, 6], 3), def("b", vec![33, 16, 4], 5)],
+            6,
+            cfg,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn co_placement_maps_contiguous_tile_ranges() {
+        let (fleet, backends) = two_model_fleet(512);
+        assert_eq!(backends.len(), 2);
+        assert_eq!(backends[0].layer_base(), 0);
+        assert_eq!(backends[1].layer_base(), 2);
+        let models = fleet.models();
+        assert_eq!(models[0].id, "a");
+        assert_eq!(models[0].tiles.start, 0);
+        assert_eq!(models[1].tiles.start, models[0].tiles.end);
+        assert_eq!(models[1].tiles.end, fleet.grid().tile_count());
+        assert!(models.iter().all(|m| m.weight_bits > 0));
+        // both backends share one grid object
+        assert!(Arc::ptr_eq(&backends[0].grid_arc(), &backends[1].grid_arc()));
+        // enlarged grid never spills statically
+        assert_eq!(fleet.grid().spilled_tiles(), 0);
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let cfg = GridConfig::default();
+        let err = FleetPlacement::co_place(
+            vec![def("a", vec![8, 6, 3], 1), def("a", vec![8, 6, 3], 2)],
+            6,
+            cfg,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn roomy_sram_loads_once_and_never_evicts() {
+        let (fleet, _) = two_model_fleet(512);
+        let total = fleet.grid().tile_count();
+        let first = fleet.touch_model("a").unwrap();
+        assert_eq!(first.loads, first.tiles);
+        assert_eq!(first.reloads, 0);
+        fleet.touch_model("b").unwrap();
+        // steady state: everything resident, all hits
+        for _ in 0..3 {
+            let again = fleet.touch_model("a").unwrap();
+            assert_eq!(again.hits, again.tiles);
+            assert_eq!(again.loads + again.reloads, 0);
+        }
+        assert_eq!(fleet.evictions(), 0);
+        let stats = fleet.stats();
+        assert_eq!(stats.weight_reloads, 0);
+        assert_eq!(stats.spilled_tiles, 0);
+        assert_eq!(
+            stats.weight_load_bits,
+            fleet.models().iter().map(|m| m.weight_bits).sum::<u64>()
+        );
+        assert_eq!(fleet.residency_of("a"), Residency::Resident);
+        assert_eq!(total, fleet.models()[0].tiles.len() + fleet.models()[1].tiles.len());
+    }
+
+    #[test]
+    fn sram_pressure_evicts_lru_and_bills_reloads() {
+        // 2 macros x 2 slots = 4 slots; each model alone needs more
+        let (fleet, _) = two_model_fleet(2);
+        assert_eq!(fleet.slots(), 4);
+        let a1 = fleet.touch_model("a").unwrap();
+        assert_eq!(a1.reloads, 0, "first touches are loads, never reloads");
+        let b1 = fleet.touch_model("b").unwrap();
+        assert!(b1.evictions > 0, "b displaces a under pressure");
+        // a comes back: its evicted tiles bill reloads, not loads
+        let a2 = fleet.touch_model("a").unwrap();
+        assert!(a2.reloads > 0);
+        assert_eq!(a2.loads, 0, "a tile is only ever *loaded* once");
+        assert!(a2.reload_bits > 0);
+        let stats = fleet.stats();
+        assert_eq!(stats.weight_reloads, a2.reloads as u64 + b1.reloads as u64);
+        assert!(stats.spilled_tiles > 0);
+        assert!(fleet.evictions() >= b1.evictions);
+        // energy: reload pJ prices exactly the re-stored bits
+        let energy = EnergyModel::paper_default();
+        let report = fleet.chip_report(&energy);
+        let want = energy.weight_store_pj(stats.weight_reload_bits);
+        assert!((report.weight_reload_pj - want).abs() < 1e-9);
+        assert!(report.weight_reload_pj > 0.0);
+    }
+
+    #[test]
+    fn residency_states_track_the_lru() {
+        // 6 slots: "a" (5 tiles) fits alone, the pair (8 tiles) does not
+        let (fleet, _) = two_model_fleet(3);
+        assert_eq!(fleet.residency_of("a"), Residency::Unplaced);
+        fleet.touch_model("a").unwrap();
+        assert_eq!(fleet.residency_of("a"), Residency::Resident);
+        fleet.touch_model("b").unwrap();
+        // a lost slots to b: partial or fully evicted, never "unplaced"
+        assert!(matches!(
+            fleet.residency_of("a"),
+            Residency::Partial | Residency::Evicted
+        ));
+        assert_eq!(fleet.residency_of("ghost"), Residency::Unplaced);
+        let mut registry = ModelRegistry::empty();
+        registry.register(ModelSpec::synthetic("a", vec![40, 24, 6]));
+        registry.register(ModelSpec::synthetic("b", vec![33, 16, 4]));
+        fleet.sync_registry(&mut registry);
+        assert_ne!(registry.residency("a"), Residency::Unplaced);
+        assert_eq!(registry.residency("b"), Residency::Resident);
+    }
+}

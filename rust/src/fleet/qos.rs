@@ -1,0 +1,308 @@
+//! Tenant identity, request priority, and per-tenant sample budgets.
+//!
+//! The fleet serves several parties from one chip, so two QoS levers
+//! ride on every request:
+//!
+//! * [`Priority`] — which [`WorkQueue`](crate::coordinator::WorkQueue)
+//!   lane the request waits in. `High` preempts (bounded by the
+//!   queue's starvation guards), `Low` yields; unannotated traffic is
+//!   `Normal`, exactly the pre-fleet behaviour.
+//! * [`Tenant`] + [`TenantBudgets`] — a per-tenant token bucket
+//!   (denominated in MC samples, like the global
+//!   [`SampleBudget`](crate::uncertainty::SampleBudget)) so one
+//!   tenant's flood degrades *its own* grants toward the floor instead
+//!   of draining the shared bucket for everyone.
+//!
+//! Both default to the open position: requests without a tenant are
+//! [`Tenant::anonymous`], tenants without a configured bucket are
+//! uncapped (the global budget still applies), and v1 wire frames —
+//! which predate these fields — decode to exactly that.
+
+use crate::uncertainty::{BudgetStats, SampleBudget, SharedBudget};
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Number of shared-queue priority lanes.
+pub const PRIORITY_LANES: usize = 3;
+
+/// Scheduling class of a request.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Claimed before normal/low work (bounded by the queue's
+    /// pinned-lane starvation guard).
+    High,
+    /// The default lane — unannotated requests and all v1 wire traffic.
+    #[default]
+    Normal,
+    /// Yields to everything; served by the aging guard under sustained
+    /// higher-priority load.
+    Low,
+}
+
+impl Priority {
+    /// Shared-queue lane index (0 = served first).
+    pub fn lane(&self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" | "default" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Wire encoding. `Normal` is 0 so a zeroed (v1-defaulted) field
+    /// means "no QoS asked for".
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            Priority::Normal => 0,
+            Priority::High => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    pub fn from_wire(code: u8) -> Option<Priority> {
+        match code {
+            0 => Some(Priority::Normal),
+            1 => Some(Priority::High),
+            2 => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
+
+/// Who a request is billed to. Compared case-sensitively; the empty
+/// string is normalized to [`Self::anonymous`] so "no tenant" has one
+/// spelling everywhere (metrics keys, wire frames, budget lookups).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Tenant(String);
+
+/// The tenant of requests that never named one.
+pub const ANONYMOUS_TENANT: &str = "anon";
+
+impl Tenant {
+    pub fn new(name: impl Into<String>) -> Tenant {
+        let name = name.into();
+        if name.is_empty() {
+            Tenant::anonymous()
+        } else {
+            Tenant(name)
+        }
+    }
+
+    pub fn anonymous() -> Tenant {
+        Tenant(ANONYMOUS_TENANT.to_string())
+    }
+
+    pub fn name(&self) -> &str {
+        &self.0
+    }
+
+    pub fn is_anonymous(&self) -> bool {
+        self.0 == ANONYMOUS_TENANT
+    }
+}
+
+impl Default for Tenant {
+    fn default() -> Tenant {
+        Tenant::anonymous()
+    }
+}
+
+impl fmt::Display for Tenant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// One tenant's bucket parameters, parsed from the CLI.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantBudgetConfig {
+    pub tenant: Tenant,
+    /// Bucket capacity in MC samples.
+    pub capacity: usize,
+    /// Refill rate in samples per second.
+    pub refill_per_sec: f64,
+}
+
+impl TenantBudgetConfig {
+    /// Parse a `--tenants` list: comma-separated
+    /// `name=capacity[:refill_per_sec]` entries, e.g.
+    /// `alice=600:120,bob=60`. A missing refill rate defaults to the
+    /// capacity per second (the bucket recovers from empty in ~1 s).
+    pub fn parse_list(s: &str) -> Result<Vec<TenantBudgetConfig>> {
+        let mut out = Vec::new();
+        for entry in s.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (name, rest) = match entry.split_once('=') {
+                Some(parts) => parts,
+                None => bail!("tenant entry '{entry}' must be name=capacity[:refill_per_sec]"),
+            };
+            if name.is_empty() {
+                bail!("tenant entry '{entry}' has an empty name");
+            }
+            let (cap_s, rate_s) = match rest.split_once(':') {
+                Some((c, r)) => (c, Some(r)),
+                None => (rest, None),
+            };
+            let capacity: usize = match cap_s.parse() {
+                Ok(c) if c > 0 => c,
+                _ => bail!("tenant '{name}': capacity '{cap_s}' must be a positive integer"),
+            };
+            let refill_per_sec = match rate_s {
+                Some(r) => match r.parse::<f64>() {
+                    Ok(v) if v >= 0.0 && v.is_finite() => v,
+                    _ => bail!("tenant '{name}': refill rate '{r}' must be a finite number >= 0"),
+                },
+                None => capacity as f64,
+            };
+            out.push(TenantBudgetConfig { tenant: Tenant::new(name), capacity, refill_per_sec });
+        }
+        Ok(out)
+    }
+}
+
+/// Per-tenant token buckets over the shared-budget machinery. A tenant
+/// without a configured bucket is uncapped here — the coordinator's
+/// global budget is still the outer limit, so "no tenant config" keeps
+/// the exact pre-fleet grant behaviour.
+#[derive(Debug, Default)]
+pub struct TenantBudgets {
+    buckets: BTreeMap<Tenant, SharedBudget>,
+}
+
+impl TenantBudgets {
+    pub fn new(configs: &[TenantBudgetConfig]) -> TenantBudgets {
+        let mut buckets = BTreeMap::new();
+        for cfg in configs {
+            buckets.insert(
+                cfg.tenant.clone(),
+                SharedBudget::new(SampleBudget::new(cfg.capacity, cfg.refill_per_sec)),
+            );
+        }
+        TenantBudgets { buckets }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Grant up to `want` samples from `tenant`'s bucket (degrading
+    /// toward `floor` when the tenant is over budget). Unconfigured
+    /// tenants get `want` untouched.
+    pub fn grant(&self, tenant: &Tenant, want: usize, floor: usize) -> usize {
+        match self.buckets.get(tenant) {
+            Some(bucket) => bucket.grant(want, floor),
+            None => want,
+        }
+    }
+
+    /// Return unspent samples to `tenant`'s bucket (no-op when the
+    /// tenant has none).
+    pub fn release(&self, tenant: &Tenant, unused: usize) {
+        if unused == 0 {
+            return;
+        }
+        if let Some(bucket) = self.buckets.get(tenant) {
+            bucket.release(unused);
+        }
+    }
+
+    /// Lifetime accounting of `tenant`'s bucket.
+    pub fn stats(&self, tenant: &Tenant) -> Option<BudgetStats> {
+        self.buckets.get(tenant).map(SharedBudget::stats)
+    }
+
+    /// Configured tenants, sorted.
+    pub fn tenants(&self) -> Vec<&Tenant> {
+        self.buckets.keys().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_lane_parse_and_wire_roundtrip() {
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.lane(), 0);
+        assert_eq!(Priority::Normal.lane(), 1);
+        assert_eq!(Priority::Low.lane(), 2);
+        assert_eq!(Priority::parse("high"), Some(Priority::High));
+        assert_eq!(Priority::parse("default"), Some(Priority::Normal));
+        assert_eq!(Priority::parse("urgent"), None);
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::from_wire(p.wire_code()), Some(p));
+            assert_eq!(Priority::parse(p.label()), Some(p));
+        }
+        assert_eq!(Priority::Normal.wire_code(), 0, "v1 zero-default must mean normal");
+        assert_eq!(Priority::from_wire(9), None);
+    }
+
+    #[test]
+    fn tenant_normalizes_empty_to_anonymous() {
+        assert_eq!(Tenant::new(""), Tenant::anonymous());
+        assert!(Tenant::default().is_anonymous());
+        let t = Tenant::new("alice");
+        assert_eq!(t.name(), "alice");
+        assert!(!t.is_anonymous());
+        assert_eq!(t.to_string(), "alice");
+    }
+
+    #[test]
+    fn budget_list_parses_and_rejects_malformed_entries() {
+        let cfgs = TenantBudgetConfig::parse_list("alice=600:120, bob=60").unwrap();
+        assert_eq!(cfgs.len(), 2);
+        assert_eq!(cfgs[0].tenant.name(), "alice");
+        assert_eq!(cfgs[0].capacity, 600);
+        assert_eq!(cfgs[0].refill_per_sec, 120.0);
+        assert_eq!(cfgs[1].capacity, 60);
+        assert_eq!(cfgs[1].refill_per_sec, 60.0, "missing rate defaults to capacity/sec");
+        assert!(TenantBudgetConfig::parse_list("alice").is_err());
+        assert!(TenantBudgetConfig::parse_list("=5").is_err());
+        assert!(TenantBudgetConfig::parse_list("alice=0").is_err());
+        assert!(TenantBudgetConfig::parse_list("alice=5:-1").is_err());
+        assert!(TenantBudgetConfig::parse_list("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn tenant_buckets_isolate_and_unknown_tenants_pass_through() {
+        let budgets = TenantBudgets::new(
+            &TenantBudgetConfig::parse_list("noisy=60:0,quiet=600:0").unwrap(),
+        );
+        let noisy = Tenant::new("noisy");
+        let quiet = Tenant::new("quiet");
+        // drain the noisy tenant
+        assert_eq!(budgets.grant(&noisy, 30, 6), 30);
+        assert_eq!(budgets.grant(&noisy, 30, 6), 30);
+        assert_eq!(budgets.grant(&noisy, 30, 6), 6, "over budget: floor grant");
+        // the quiet tenant is untouched by the noisy one's flood
+        assert_eq!(budgets.grant(&quiet, 30, 6), 30);
+        assert_eq!(budgets.stats(&noisy).unwrap().degraded_requests, 1);
+        assert_eq!(budgets.stats(&quiet).unwrap().degraded_requests, 0);
+        // refunds go back to the right bucket
+        budgets.release(&noisy, 24);
+        assert_eq!(budgets.grant(&noisy, 12, 6), 12);
+        // unconfigured tenant: uncapped, no stats
+        let ghost = Tenant::new("ghost");
+        assert_eq!(budgets.grant(&ghost, 1000, 6), 1000);
+        assert!(budgets.stats(&ghost).is_none());
+        assert_eq!(budgets.tenants().len(), 2);
+    }
+}

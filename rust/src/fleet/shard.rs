@@ -1,0 +1,248 @@
+//! Batch sharding: split one large MC batch across multiple grids and
+//! merge the accounting.
+//!
+//! MC rows are independent, so a `T`-sample request can run its rows
+//! on several chips at once. [`ShardPlan::split`] carves the batch
+//! into contiguous, near-equal shards; [`run_sharded`] executes shard
+//! `k` on backend `k` and [`merge_shards`] concatenates the outputs
+//! **in shard order** — shard ranges are contiguous and ordered, so
+//! the merged vector is exactly the original sampling order and every
+//! row's floats are `to_bits`-identical to the unsharded run (per-row
+//! results never depend on batch mates; `rust/tests/fleet.rs` holds
+//! the line).
+//!
+//! Accounting merges with *parallel-chip* semantics: busy cycles and
+//! reloads add, the merged span is the **max** shard span (independent
+//! grids overlap in time), the macro pool is the sum. Within one
+//! shard, chunked calls on the same grid merge sequentially
+//! ([`GridExecStats::merge`]: spans add). Measured pJ sum, and stay
+//! `Some` only when every shard measured — a fleet mixing measuring
+//! and non-measuring substrates reports no number rather than a wrong
+//! one.
+
+use crate::backend::{ExecutionBackend, GridExecStats, Row};
+use crate::cim::grid::GridRunStats;
+use crate::error::McCimError;
+use std::ops::Range;
+
+/// How one batch splits across grids.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Contiguous row ranges, in order; at most one per grid, never
+    /// empty (a 0-row batch has no shards).
+    pub shards: Vec<Range<usize>>,
+}
+
+impl ShardPlan {
+    /// Split `total` rows across up to `grids` shards, sizes within
+    /// one row of each other, earlier shards taking the remainder.
+    pub fn split(total: usize, grids: usize) -> ShardPlan {
+        if total == 0 {
+            return ShardPlan { shards: Vec::new() };
+        }
+        let n = grids.max(1).min(total);
+        let base = total / n;
+        let extra = total % n;
+        let mut shards = Vec::with_capacity(n);
+        let mut lo = 0usize;
+        for k in 0..n {
+            let len = base + usize::from(k < extra);
+            shards.push(lo..lo + len);
+            lo += len;
+        }
+        ShardPlan { shards }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// One shard's results (one grid's share of the batch).
+#[derive(Clone, Debug)]
+pub struct ShardRun {
+    pub outputs: Vec<Vec<f32>>,
+    /// Measured pJ, when the backend measures.
+    pub energy_pj: Option<f64>,
+    /// Grid accounting, when the backend runs on a grid.
+    pub grid: Option<GridExecStats>,
+}
+
+/// The merged batch: outputs restored to sampling order, accounting
+/// folded with parallel-chip semantics.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    pub outputs: Vec<Vec<f32>>,
+    /// Total measured pJ (`None` unless every shard measured).
+    pub energy_pj: Option<f64>,
+    /// Combined grid accounting: macros/busy/reloads summed, span =
+    /// max shard span (the grids ran concurrently).
+    pub grid: GridExecStats,
+    pub shards: usize,
+}
+
+/// Execute `rows` sharded across `backends` (shard `k` on backend
+/// `k`), respecting each backend's `max_batch` within its shard.
+pub fn run_sharded(
+    backends: &[&dyn ExecutionBackend],
+    rows: &[Row<'_>],
+) -> Result<ShardOutcome, McCimError> {
+    if backends.is_empty() {
+        return Err(McCimError::BackendUnavailable {
+            backend: "fleet-shard".into(),
+            reason: "no grids to shard across".into(),
+        });
+    }
+    let plan = ShardPlan::split(rows.len(), backends.len());
+    let mut runs = Vec::with_capacity(plan.shard_count());
+    for (k, range) in plan.shards.iter().enumerate() {
+        let backend = backends[k];
+        let shard_rows = &rows[range.clone()];
+        let cap = backend.caps().max_batch.max(1);
+        let mut outputs = Vec::with_capacity(shard_rows.len());
+        let mut pj = 0.0f64;
+        let mut measured = true;
+        let mut grid: Option<GridExecStats> = None;
+        for chunk in shard_rows.chunks(cap) {
+            let out = backend.execute_rows(chunk)?;
+            outputs.extend(out.outputs);
+            match out.energy_pj {
+                Some(e) => pj += e,
+                None => measured = false,
+            }
+            if let Some(g) = out.grid {
+                match grid.as_mut() {
+                    // sequential chunks on one grid: spans add
+                    Some(acc) => acc.merge(&g),
+                    None => grid = Some(g),
+                }
+            }
+        }
+        runs.push(ShardRun { outputs, energy_pj: measured.then_some(pj), grid });
+    }
+    Ok(merge_shards(runs))
+}
+
+/// Fold shard results back into one batch (see module docs for the
+/// ordering and accounting contracts).
+pub fn merge_shards(runs: Vec<ShardRun>) -> ShardOutcome {
+    let shards = runs.len();
+    let mut outputs = Vec::new();
+    let mut pj = 0.0f64;
+    let mut measured = !runs.is_empty();
+    let mut grid = GridExecStats::default();
+    for run in runs {
+        outputs.extend(run.outputs);
+        match run.energy_pj {
+            Some(e) => pj += e,
+            None => measured = false,
+        }
+        if let Some(g) = run.grid {
+            grid.macros += g.macros;
+            grid.busy_cycles += g.busy_cycles;
+            grid.span_cycles = grid.span_cycles.max(g.span_cycles);
+            grid.weight_reloads += g.weight_reloads;
+            grid.weight_reload_bits += g.weight_reload_bits;
+        }
+    }
+    ShardOutcome { outputs, energy_pj: measured.then_some(pj), grid, shards }
+}
+
+/// Merge cumulative per-grid counters into one combined chip view:
+/// the macro pools concatenate (so span = busiest macro anywhere and
+/// utilization averages over every macro), load/reload bits and spills
+/// add. Feed the result to
+/// [`EnergyModel::chip_report`](crate::energy::EnergyModel::chip_report)
+/// for whole-fleet energy across dedicated grids.
+pub fn merge_grid_stats(stats: &[GridRunStats]) -> GridRunStats {
+    let mut merged = GridRunStats::default();
+    for s in stats {
+        merged.per_macro.extend(s.per_macro.iter().cloned());
+        merged.weight_load_bits += s.weight_load_bits;
+        merged.weight_reloads += s.weight_reloads;
+        merged.weight_reload_bits += s.weight_reload_bits;
+        merged.spilled_tiles += s.spilled_tiles;
+    }
+    merged
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_balances_within_one_row() {
+        let plan = ShardPlan::split(10, 3);
+        assert_eq!(plan.shards, vec![0..4, 4..7, 7..10]);
+        assert_eq!(ShardPlan::split(6, 2).shards, vec![0..3, 3..6]);
+        // fewer rows than grids: one row per shard, no empty shards
+        assert_eq!(ShardPlan::split(2, 4).shards, vec![0..1, 1..2]);
+        assert_eq!(ShardPlan::split(0, 4).shard_count(), 0);
+        assert_eq!(ShardPlan::split(5, 1).shards, vec![0..5]);
+    }
+
+    fn run(outs: &[f32], pj: Option<f64>, grid: Option<GridExecStats>) -> ShardRun {
+        ShardRun {
+            outputs: outs.iter().map(|&v| vec![v]).collect(),
+            energy_pj: pj,
+            grid,
+        }
+    }
+
+    fn gx(macros: u32, busy: u64, span: u64, reloads: u64) -> GridExecStats {
+        GridExecStats {
+            macros,
+            busy_cycles: busy,
+            span_cycles: span,
+            weight_reloads: reloads,
+            weight_reload_bits: reloads * 10,
+        }
+    }
+
+    #[test]
+    fn merge_restores_order_and_uses_parallel_spans() {
+        let merged = merge_shards(vec![
+            run(&[1.0, 2.0], Some(5.0), Some(gx(2, 100, 60, 1))),
+            run(&[3.0], Some(2.5), Some(gx(2, 80, 80, 0))),
+        ]);
+        assert_eq!(merged.shards, 2);
+        assert_eq!(merged.outputs, vec![vec![1.0], vec![2.0], vec![3.0]]);
+        assert_eq!(merged.energy_pj, Some(7.5));
+        assert_eq!(merged.grid.macros, 4, "independent grids pool their macros");
+        assert_eq!(merged.grid.busy_cycles, 180);
+        assert_eq!(merged.grid.span_cycles, 80, "concurrent grids overlap: span is max");
+        assert_eq!(merged.grid.weight_reloads, 1);
+        assert_eq!(merged.grid.weight_reload_bits, 10);
+    }
+
+    #[test]
+    fn one_unmeasured_shard_withholds_the_total() {
+        let merged =
+            merge_shards(vec![run(&[1.0], Some(5.0), None), run(&[2.0], None, None)]);
+        assert_eq!(merged.energy_pj, None);
+        assert_eq!(merged.outputs.len(), 2);
+        // empty merge: no number rather than Some(0)
+        assert_eq!(merge_shards(Vec::new()).energy_pj, None);
+    }
+
+    #[test]
+    fn merged_grid_stats_concatenate_macro_pools() {
+        use crate::cim::macro_sim::MacroRunStats;
+        let mut a = GridRunStats::default();
+        a.per_macro.push(MacroRunStats { compute_cycles: 50, adc_cycles: 50, ..Default::default() });
+        a.weight_load_bits = 100;
+        a.weight_reloads = 2;
+        a.weight_reload_bits = 20;
+        let mut b = GridRunStats::default();
+        b.per_macro.push(MacroRunStats { compute_cycles: 10, adc_cycles: 10, ..Default::default() });
+        b.per_macro.push(MacroRunStats::default());
+        b.weight_load_bits = 40;
+        let merged = merge_grid_stats(&[a, b]);
+        assert_eq!(merged.macros(), 3);
+        assert_eq!(merged.span_cycles(), 100, "busiest macro anywhere");
+        assert_eq!(merged.total_busy_cycles(), 120);
+        assert_eq!(merged.weight_load_bits, 140);
+        assert_eq!(merged.weight_reloads, 2);
+        assert_eq!(merged.weight_reload_bits, 20);
+    }
+}

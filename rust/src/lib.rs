@@ -29,9 +29,10 @@
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
 //! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro-grid simulation (`--macros N --placement S`; measured energy + grid utilization, native delta-plan sessions with cross-frame input deltas for streaming), fail-fast stub; dense-only backends lower plans to rows |
-//! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob, builtin catalogue from `meta.json` |
+//! | [`fleet`] | — | the grid as a shared multi-tenant resource: multi-model co-placement with LRU hot-swap/eviction priced through the energy model (`fleet::placement`), tenant identity + priority lanes + per-tenant sample budgets (`fleet::qos`), MC-batch sharding across grids with order-preserving merge (`fleet::shard`) |
+//! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob + fleet residency state, builtin catalogue from `meta.json` |
 //! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |
-//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool with affinity lanes, streaming VO sessions (`StreamSession` → per-worker `EngineSession`: schedule + product-sums persist across frames), graceful drain with a deadline |
+//! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool with affinity + priority lanes (starvation/aging guards, per-tenant budgets), streaming VO sessions (`StreamSession` → per-worker `EngineSession`: schedule + product-sums persist across frames), graceful drain with a deadline |
 //! | [`net`] | — | network front door: versioned binary wire protocol, bounded acceptor with reader/writer-split connections, admission control (max-inflight, connection caps, per-connection credit windows) answering `Overloaded` instead of queueing, session-sticky remote streams, blocking pipelining client |
 //! | [`uncertainty`] | — | sequential early-stopping samplers, calibration (ECE / temperature scaling), risk-aware policies, sample budgets |
 //! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
@@ -46,6 +47,7 @@ pub mod coordinator;
 pub mod dropout;
 pub mod energy;
 pub mod error;
+pub mod fleet;
 pub mod model;
 pub mod net;
 pub mod operator;

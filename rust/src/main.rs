@@ -29,6 +29,7 @@ use mc_cim::dropout::plan::OrderingMode;
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use mc_cim::error::RequestKind;
+use mc_cim::fleet::qos::{Priority, TenantBudgetConfig};
 use mc_cim::model::ModelRegistry;
 use mc_cim::net::{
     AdmissionConfig, ErrorCode, NetServer, NetServerConfig, WireCall, WireClient, WireReply,
@@ -89,12 +90,13 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|client|energy|rng|adc|reuse> 
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --chunk N --min-samples N --budget-rate SAMPLES_PER_SEC
             --reuse=true --ordering MODE
+            --tenants LIST --fleet-models LIST --capacity N
             --listen ADDR --max-inflight N --max-conns N
             --conn-rate REQ_PER_SEC --conn-burst N --idle-ms MS
             --drain-secs S --duration-secs S
   client:   --connect ADDR --kind classify|regress|stream --requests N
             --samples N --model NAME --seed N --session ID --epsilon E
-            --dim N --timeout-ms MS
+            --dim N --timeout-ms MS --tenant NAME --priority LEVEL
   energy:   --bits B --iters N
   rng:      --instances N --cols N --target P
   adc:      (no flags)
@@ -108,6 +110,19 @@ adaptive serving (see README 'Adaptive serving'):
   --chunk N               samples per stopper consultation (default 5)
   --min-samples N         never stop before N samples      (default 6)
   --budget-rate R         aggregate sample budget, samples/s (0 = uncapped)
+  --tenants LIST          per-tenant sample budgets, e.g.
+                          \"acme=200:100,lab=50\" (name=capacity[:refill/s]);
+                          a request's ceiling is the smaller of the
+                          aggregate and its tenant's grant
+  --fleet-models LIST     comma-separated model ids to co-place on ONE
+                          shared cim-sim grid (LRU hot-swap under the
+                          declared SRAM; evicted tiles are re-billed as
+                          weight reloads)
+  --capacity N            declared resident tile slots per macro
+                          (cim-sim; default 512)
+  --tenant NAME           client: stamp requests with this tenant
+  --priority LEVEL        client: queue lane high|normal|low (default
+                          normal)
 
 delta-scheduled execution (see README 'Delta-scheduled MC execution'):
   --reuse=true            run MC rows as a delta schedule (§IV-A compute
@@ -231,6 +246,31 @@ fn grid_from_args(args: &Args) -> Result<(usize, PlacementStrategy)> {
     Ok((macros, placement))
 }
 
+/// Parse the fleet flags: `--tenants LIST --fleet-models LIST
+/// --capacity N` (all optional; empty = single-tenant behavior).
+fn fleet_from_args(
+    args: &Args,
+) -> Result<(Vec<TenantBudgetConfig>, Vec<String>, Option<usize>)> {
+    let tenants = match args.get("tenants") {
+        None => Vec::new(),
+        Some(spec) => TenantBudgetConfig::parse_list(spec)?,
+    };
+    let fleet_models: Vec<String> = match args.get("fleet-models") {
+        None => Vec::new(),
+        Some(spec) => spec
+            .split(',')
+            .map(str::trim)
+            .filter(|m| !m.is_empty())
+            .map(str::to_string)
+            .collect(),
+    };
+    let capacity = match args.get_usize("capacity", 0).map_err(|e| anyhow!(e))? {
+        0 => None,
+        n => Some(n),
+    };
+    Ok((tenants, fleet_models, capacity))
+}
+
 /// Grid half of the backend banner — only the cim-sim backend runs on
 /// the simulated macro grid; pjrt/stub silently ignore those options.
 fn grid_banner(kind: BackendKind, grid: (usize, PlacementStrategy)) -> String {
@@ -271,7 +311,13 @@ fn build_engine(
 ) -> Result<McDropoutEngine> {
     let registry = ModelRegistry::builtin(meta);
     let spec = registry.get(model)?;
-    let opts = BackendOptions { bits, pallas: false, macros: grid.0, placement: grid.1 };
+    let opts = BackendOptions {
+        bits,
+        pallas: false,
+        macros: grid.0,
+        placement: grid.1,
+        capacity: None,
+    };
     let backend = make_backend(kind, rt, dir, spec, &opts)?;
     let engine = McDropoutEngine::with_backend(
         backend,
@@ -516,9 +562,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend = backend_from_args(args)?;
     let (reuse, ordering) = delta_from_args(args)?;
     let (macros, placement) = grid_from_args(args)?;
+    let (tenants, fleet_models, capacity) = fleet_from_args(args)?;
     println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement)));
     if reuse {
         println!("delta schedule: reuse on, ordering {}", ordering.label());
+    }
+    if !fleet_models.is_empty() {
+        println!("fleet: co-placing [{}] on the shared grid", fleet_models.join(", "));
     }
     let cfg = CoordinatorConfig {
         artifacts: dir,
@@ -530,6 +580,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         adaptive,
         reuse,
         ordering,
+        tenants,
+        fleet_models,
+        capacity,
         ..Default::default()
     };
     let coord = Coordinator::start(cfg)?;
@@ -567,7 +620,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         requests as f64 / dt,
         correct as f64 / answered.max(1) as f64
     );
-    println!("{}", coord.metrics.summary());
+    println!("{}", coord.metrics_summary());
     if is_adaptive {
         let m = &coord.metrics;
         println!(
@@ -601,6 +654,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let backend = backend_from_args(args)?;
     let (reuse, ordering) = delta_from_args(args)?;
     let (macros, placement) = grid_from_args(args)?;
+    let (tenants, fleet_models, capacity) = fleet_from_args(args)?;
     let listen = args.get_or("listen", "127.0.0.1:7878");
     let admission = AdmissionConfig {
         max_inflight: args.get_usize("max-inflight", 256).map_err(|e| anyhow!(e))?,
@@ -626,6 +680,9 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         adaptive,
         reuse,
         ordering,
+        tenants,
+        fleet_models,
+        capacity,
         ..Default::default()
     };
     let coord = Coordinator::start(cfg)?;
@@ -696,6 +753,14 @@ fn cmd_client(args: &Args) -> Result<()> {
 
     let mut client = WireClient::connect(&addr)?;
     client.set_timeout(Some(Duration::from_millis(timeout_ms as u64)))?;
+    if let Some(t) = args.get("tenant") {
+        client.set_tenant(Some(t.to_string()));
+    }
+    if let Some(p) = args.get("priority") {
+        let pri = Priority::parse(p)
+            .ok_or_else(|| anyhow!("--priority: unknown level '{p}' (high|normal|low)"))?;
+        client.set_priority(pri);
+    }
     let t_ping = Instant::now();
     let nonce = client.send_ping()?;
     match client.recv_matching(nonce)? {
@@ -727,7 +792,15 @@ fn cmd_client(args: &Args) -> Result<()> {
             "classify" => client.send_classify(&model, samples, seed, input)?,
             "regress" => client.send_regress(&model, samples, seed, input)?,
             "stream" => client.send_stream_frame(WireStreamCall {
-                call: WireCall { id: 0, model: model.clone(), samples, seed, input },
+                call: WireCall {
+                    id: 0,
+                    model: model.clone(),
+                    samples,
+                    seed,
+                    input,
+                    tenant: None,
+                    priority: Priority::Normal,
+                },
                 kind: if model == "mnist" {
                     RequestKind::Classify
                 } else {

@@ -81,10 +81,40 @@ impl ModelSpec {
     }
 }
 
+/// Where a model's weight tiles currently live on a fleet's shared
+/// macro grid. Maintained by the fleet placement
+/// (`fleet::FleetPlacement::sync_registry`); stays [`Residency::Unplaced`]
+/// when no fleet is configured.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Residency {
+    /// Never placed on a shared grid (or no fleet configured).
+    #[default]
+    Unplaced,
+    /// Every weight tile resident in macro SRAM.
+    Resident,
+    /// Some tiles resident, the rest evicted under SRAM pressure.
+    Partial,
+    /// Placed before, currently fully evicted (next use pays reloads).
+    Evicted,
+}
+
+impl Residency {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Residency::Unplaced => "unplaced",
+            Residency::Resident => "resident",
+            Residency::Partial => "partial",
+            Residency::Evicted => "evicted",
+        }
+    }
+}
+
 /// Model id → [`ModelSpec`] lookup, the serving stack's catalogue.
 #[derive(Clone, Debug, Default)]
 pub struct ModelRegistry {
     models: BTreeMap<String, ModelSpec>,
+    /// Fleet placement state per model id (empty until a fleet syncs).
+    residency: BTreeMap<String, Residency>,
 }
 
 impl ModelRegistry {
@@ -165,6 +195,21 @@ impl ModelRegistry {
     pub fn is_empty(&self) -> bool {
         self.models.is_empty()
     }
+
+    /// Record where `id`'s weight tiles live on the fleet grid. Ids
+    /// outside the catalogue are ignored — residency is an attribute
+    /// of a registered model, not a registration side channel.
+    pub fn set_residency(&mut self, id: &str, residency: Residency) {
+        if self.models.contains_key(id) {
+            self.residency.insert(id.to_string(), residency);
+        }
+    }
+
+    /// Current fleet placement state of `id` ([`Residency::Unplaced`]
+    /// until a fleet places the model).
+    pub fn residency(&self, id: &str) -> Residency {
+        self.residency.get(id).copied().unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -224,5 +269,20 @@ mod tests {
     #[should_panic]
     fn degenerate_dims_rejected() {
         ModelSpec::synthetic("bad", vec![5]);
+    }
+
+    #[test]
+    fn residency_defaults_unplaced_and_tracks_registered_models() {
+        let mut r = ModelRegistry::empty();
+        r.register(ModelSpec::synthetic("tiny", vec![8, 6, 3]));
+        assert_eq!(r.residency("tiny"), Residency::Unplaced);
+        r.set_residency("tiny", Residency::Resident);
+        assert_eq!(r.residency("tiny"), Residency::Resident);
+        r.set_residency("tiny", Residency::Evicted);
+        assert_eq!(r.residency("tiny"), Residency::Evicted);
+        // unknown ids are ignored, not recorded
+        r.set_residency("ghost", Residency::Resident);
+        assert_eq!(r.residency("ghost"), Residency::Unplaced);
+        assert_eq!(Residency::Partial.label(), "partial");
     }
 }

@@ -10,6 +10,7 @@
 
 use super::wire::{write_frame, Frame, FrameReader, ReadEvent, WireError, WireStreamCall};
 use crate::coordinator::{ClassifyResponse, PoseResponse};
+use crate::fleet::qos::Priority;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
 use std::net::{TcpStream, ToSocketAddrs};
@@ -38,6 +39,10 @@ pub struct WireClient {
     next_id: u64,
     /// Replies received while waiting for a different id.
     stashed: VecDeque<(u64, WireReply)>,
+    /// Tenant stamped on every outgoing call (None = anonymous).
+    tenant: Option<String>,
+    /// Priority lane stamped on every outgoing call.
+    priority: Priority,
 }
 
 impl WireClient {
@@ -48,7 +53,19 @@ impl WireClient {
             reader: FrameReader::new(),
             next_id: 1,
             stashed: VecDeque::new(),
+            tenant: None,
+            priority: Priority::Normal,
         })
+    }
+
+    /// Stamp every subsequent call with this tenant (None = anonymous).
+    pub fn set_tenant(&mut self, tenant: Option<String>) {
+        self.tenant = tenant;
+    }
+
+    /// Stamp every subsequent call with this priority lane.
+    pub fn set_priority(&mut self, priority: Priority) {
+        self.priority = priority;
     }
 
     /// Bound every receive: [`Self::recv`] fails instead of blocking
@@ -72,8 +89,15 @@ impl WireClient {
         input: Vec<f32>,
     ) -> Result<u64> {
         let id = self.fresh_id();
-        let call =
-            super::wire::WireCall { id, model: model.to_string(), samples, seed, input };
+        let call = super::wire::WireCall {
+            id,
+            model: model.to_string(),
+            samples,
+            seed,
+            input,
+            tenant: self.tenant.clone(),
+            priority: self.priority,
+        };
         write_frame(&mut self.stream, &Frame::Classify(call)).context("sending classify")?;
         Ok(id)
     }
@@ -87,8 +111,15 @@ impl WireClient {
         input: Vec<f32>,
     ) -> Result<u64> {
         let id = self.fresh_id();
-        let call =
-            super::wire::WireCall { id, model: model.to_string(), samples, seed, input };
+        let call = super::wire::WireCall {
+            id,
+            model: model.to_string(),
+            samples,
+            seed,
+            input,
+            tenant: self.tenant.clone(),
+            priority: self.priority,
+        };
         write_frame(&mut self.stream, &Frame::Regress(call)).context("sending regress")?;
         Ok(id)
     }

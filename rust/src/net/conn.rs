@@ -370,7 +370,11 @@ fn handle_frame(ctx: &ConnCtx, frame: Frame) -> std::result::Result<(), String> 
 
 fn build_call(call: &WireCall, kind: RequestKind) -> InferenceRequest {
     let mut req = InferenceRequest::new(call.model.clone(), kind, call.input.clone())
-        .with_samples(call.samples as usize);
+        .with_samples(call.samples as usize)
+        .with_priority(call.priority);
+    if let Some(tenant) = &call.tenant {
+        req = req.with_tenant(tenant.clone());
+    }
     if let Some(seed) = call.seed {
         req = req.with_seed(seed);
     }

@@ -25,14 +25,20 @@
 
 use crate::coordinator::request::{ClassifyResponse, PoseResponse, StreamFrameInfo};
 use crate::error::{McCimError, RequestKind};
+use crate::fleet::qos::Priority;
 use crate::uncertainty::policy::Verdict;
 use std::fmt;
 use std::io::{ErrorKind, Read, Write};
 
 /// First two bytes of every frame.
 pub const WIRE_MAGIC: [u8; 2] = *b"MC";
-/// Protocol version this build speaks.
-pub const WIRE_VERSION: u8 = 1;
+/// Protocol version this build emits. Version 2 appends tenant +
+/// priority to every request call; version-1 peers are still accepted
+/// (their requests decode as anonymous / [`Priority::Normal`], exactly
+/// the pre-QoS behavior).
+pub const WIRE_VERSION: u8 = 2;
+/// Oldest protocol version this build still decodes.
+pub const WIRE_VERSION_MIN: u8 = 1;
 /// Fixed frame-header length (magic + version + type + payload len).
 pub const HEADER_LEN: usize = 8;
 /// Hard ceiling on a single frame's payload: a corrupt or hostile
@@ -90,7 +96,11 @@ impl fmt::Display for WireDecodeError {
                 write!(f, "bad frame magic {:02x}{:02x} (want \"MC\")", m[0], m[1])
             }
             WireDecodeError::BadVersion(v) => {
-                write!(f, "unsupported protocol version {v} (this build speaks {WIRE_VERSION})")
+                write!(
+                    f,
+                    "unsupported protocol version {v} (this build speaks \
+                     {WIRE_VERSION_MIN}..={WIRE_VERSION})"
+                )
             }
             WireDecodeError::UnknownFrameType(t) => write!(f, "unknown frame type {t}"),
             WireDecodeError::Oversized(n) => {
@@ -218,6 +228,12 @@ pub struct WireCall {
     pub seed: Option<u64>,
     /// Network input.
     pub input: Vec<f32>,
+    /// Tenant attribution for QoS budgets and per-tenant latency
+    /// ledgers (None = anonymous; version-1 peers never send one).
+    pub tenant: Option<String>,
+    /// Queue lane for this request (version-1 peers decode as
+    /// [`Priority::Normal`]).
+    pub priority: Priority,
 }
 
 /// One frame of a remote streaming session.
@@ -443,15 +459,27 @@ fn enc_call(out: &mut Vec<u8>, c: &WireCall) {
         None => put_bool(out, false),
     }
     put_f32s(out, &c.input);
+    // version-2 tail: tenant ("" = anonymous) + priority lane
+    put_str(out, c.tenant.as_deref().unwrap_or(""));
+    out.push(c.priority.wire_code());
 }
 
-fn dec_call(cur: &mut Cur) -> Result<WireCall, WireDecodeError> {
+fn dec_call(cur: &mut Cur, version: u8) -> Result<WireCall, WireDecodeError> {
     let id = cur.u64()?;
     let model = cur.str()?;
     let samples = cur.u32()?;
     let seed = if cur.bool()? { Some(cur.u64()?) } else { None };
     let input = cur.f32s()?;
-    Ok(WireCall { id, model, samples, seed, input })
+    let (tenant, priority) = if version >= 2 {
+        let t = cur.str()?;
+        let p = cur.u8()?;
+        let p = Priority::from_wire(p)
+            .ok_or_else(|| WireDecodeError::Malformed(format!("bad priority code {p}")))?;
+        (if t.is_empty() { None } else { Some(t) }, p)
+    } else {
+        (None, Priority::Normal)
+    };
+    Ok(WireCall { id, model, samples, seed, input, tenant, priority })
 }
 
 fn enc_kind(out: &mut Vec<u8>, k: RequestKind) {
@@ -565,13 +593,13 @@ fn enc_payload(f: &Frame) -> Vec<u8> {
     out
 }
 
-fn dec_payload(ty: u8, payload: &[u8]) -> Result<Frame, WireDecodeError> {
+fn dec_payload(ty: u8, version: u8, payload: &[u8]) -> Result<Frame, WireDecodeError> {
     let mut cur = Cur::new(payload);
     let frame = match ty {
-        T_CLASSIFY => Frame::Classify(dec_call(&mut cur)?),
-        T_REGRESS => Frame::Regress(dec_call(&mut cur)?),
+        T_CLASSIFY => Frame::Classify(dec_call(&mut cur, version)?),
+        T_REGRESS => Frame::Regress(dec_call(&mut cur, version)?),
         T_STREAM_FRAME => Frame::StreamFrame(WireStreamCall {
-            call: dec_call(&mut cur)?,
+            call: dec_call(&mut cur, version)?,
             kind: dec_kind(&mut cur)?,
             session: cur.str()?,
             frame: cur.u64()?,
@@ -673,7 +701,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), WireDecodeError> {
     if buf.len() >= 2 && buf[1] != WIRE_MAGIC[1] {
         return Err(WireDecodeError::BadMagic([buf[0], buf[1]]));
     }
-    if buf.len() >= 3 && buf[2] != WIRE_VERSION {
+    if buf.len() >= 3 && !(WIRE_VERSION_MIN..=WIRE_VERSION).contains(&buf[2]) {
         return Err(WireDecodeError::BadVersion(buf[2]));
     }
     if buf.len() >= 4 && !is_known_type(buf[3]) {
@@ -690,7 +718,7 @@ pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), WireDecodeError> {
     if buf.len() < total {
         return Err(WireDecodeError::Truncated);
     }
-    let frame = dec_payload(buf[3], &buf[HEADER_LEN..total])?;
+    let frame = dec_payload(buf[3], buf[2], &buf[HEADER_LEN..total])?;
     Ok((frame, total))
 }
 
@@ -807,6 +835,8 @@ mod tests {
                 samples: 30,
                 seed: Some(42),
                 input: vec![0.5, -1.0, 0.25],
+                tenant: Some("drone-fleet".into()),
+                priority: Priority::High,
             }),
             Frame::Regress(WireCall {
                 id: 2,
@@ -814,6 +844,8 @@ mod tests {
                 samples: 12,
                 seed: None,
                 input: vec![0.0; 12],
+                tenant: None,
+                priority: Priority::Low,
             }),
             Frame::StreamFrame(WireStreamCall {
                 call: WireCall {
@@ -822,6 +854,8 @@ mod tests {
                     samples: 10,
                     seed: Some(7),
                     input: vec![1.0, 2.0],
+                    tenant: Some("lab".into()),
+                    priority: Priority::Normal,
                 },
                 kind: RequestKind::Regress,
                 session: "drone-7".into(),
@@ -847,6 +881,52 @@ mod tests {
             assert_eq!(used, bytes.len());
             assert_eq!(back, f);
         }
+    }
+
+    #[test]
+    fn version_1_requests_decode_as_anonymous_normal() {
+        // hand-encode a v1 classify call: the pre-QoS payload layout
+        // (no tenant / priority tail), version byte 1
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 9);
+        put_str(&mut payload, "mnist");
+        put_u32(&mut payload, 30);
+        put_bool(&mut payload, false); // no seed
+        put_f32s(&mut payload, &[0.5, 0.25]);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.push(1); // WIRE_VERSION_MIN
+        buf.push(T_CLASSIFY);
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(&payload);
+        let (frame, used) = decode_frame(&buf).expect("v1 still decodes");
+        assert_eq!(used, buf.len());
+        match frame {
+            Frame::Classify(c) => {
+                assert_eq!(c.id, 9);
+                assert_eq!(c.model, "mnist");
+                assert_eq!(c.tenant, None);
+                assert_eq!(c.priority, Priority::Normal);
+            }
+            other => panic!("expected classify, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_priority_code_is_malformed() {
+        let f = encode_frame(&Frame::Classify(WireCall {
+            id: 1,
+            model: "m".into(),
+            samples: 1,
+            seed: None,
+            input: vec![1.0],
+            tenant: None,
+            priority: Priority::Normal,
+        }));
+        let mut f = f;
+        let last = f.len() - 1; // priority byte is the payload tail
+        f[last] = 200;
+        assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
     }
 
     #[test]
@@ -905,8 +985,12 @@ mod tests {
             samples: 1,
             seed: None,
             input: vec![1.0],
+            tenant: None,
+            priority: Priority::Normal,
         }));
-        let count_at = f.len() - 8; // [count:u32][one f32] at the tail
+        // [count:u32][one f32] sits before the 3-byte v2 tail
+        // (empty tenant str + priority)
+        let count_at = f.len() - 11;
         f[count_at..count_at + 4].copy_from_slice(&(1u32 << 30).to_be_bytes());
         assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
     }

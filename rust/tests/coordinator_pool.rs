@@ -20,7 +20,9 @@
 //!   network front door's path) deliver results;
 //! * shutdown drains gracefully: queued jobs flush within the
 //!   deadline, and stragglers past it are answered `ShuttingDown`
-//!   instead of being dropped on the floor.
+//!   instead of being dropped on the floor;
+//! * QoS fairness: a flood of high-priority shared work cannot starve
+//!   a worker's pinned (session) lane past the preemption guard.
 
 use mc_cim::backend::{BackendKind, CimSimBackend};
 use mc_cim::coordinator::{
@@ -359,4 +361,44 @@ fn zero_deadline_drain_answers_shutting_down_instead_of_dropping() {
     }
     assert_eq!(refused, missed, "shutdown's return value counts the refused jobs");
     let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn a_shared_flood_cannot_starve_the_pinned_lane() {
+    use mc_cim::coordinator::queue::{PINNED_STARVATION_LIMIT, LANE_AGING_LIMIT};
+    use mc_cim::coordinator::WorkQueue;
+    use mc_cim::fleet::qos::Priority;
+
+    let q: WorkQueue<i32> = WorkQueue::new(1);
+    // a session frame waits on worker 0's pinned lane...
+    q.push_to(0, 777).unwrap();
+    // ...behind a flood of high-priority shared work
+    for i in 0..100 {
+        q.push_pri(i, Priority::High).unwrap();
+    }
+    // the flood may preempt the pinned job, but only up to the guard:
+    // the pinned frame must surface within PINNED_STARVATION_LIMIT + 1
+    // pops, with the yield counted
+    let mut served_at = None;
+    for pops in 0..=PINNED_STARVATION_LIMIT {
+        if q.pop(0) == Some(777) {
+            served_at = Some(pops);
+            break;
+        }
+    }
+    assert_eq!(
+        served_at,
+        Some(PINNED_STARVATION_LIMIT),
+        "pinned job must be served after exactly {PINNED_STARVATION_LIMIT} preemptions"
+    );
+    assert_eq!(q.fairness_yields(), 1, "the guard records its intervention");
+
+    // normal-priority shared work, by contrast, never jumps a pinned job
+    let q2: WorkQueue<i32> = WorkQueue::new(1);
+    q2.push_to(0, 555).unwrap();
+    for i in 0..(LANE_AGING_LIMIT as i32 * 2) {
+        q2.push(i).unwrap();
+    }
+    assert_eq!(q2.pop(0), Some(555), "normal work does not preempt the pinned lane");
+    assert_eq!(q2.fairness_yields(), 0);
 }

@@ -1,0 +1,276 @@
+//! Fleet-scheduler property tests: co-placed models stay
+//! `to_bits`-identical to dedicated grids, the residency LRU bills
+//! every evicted-then-reused tile exactly one reload (never zero,
+//! never two), and batch sharding restores sampling order bit-exactly
+//! with additive accounting. No artifacts needed.
+
+use mc_cim::backend::{CimSimBackend, ExecutionBackend, GridConfig, LayerParams, Row};
+use mc_cim::cim::grid::PlacementStrategy;
+use mc_cim::coordinator::McDropoutEngine;
+use mc_cim::energy::{EnergyModel, ModeConfig};
+use mc_cim::fleet::{run_sharded, FleetModelDef, FleetPlacement, ShardPlan};
+use mc_cim::model::{ModelRegistry, ModelSpec, Residency};
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::{binary_masks, f32_vec};
+use mc_cim::util::Pcg32;
+
+const DIMS_A: [usize; 3] = [40, 24, 6]; // 5 tiles
+const DIMS_B: [usize; 3] = [33, 16, 4]; // 3 tiles
+
+fn layer_params(dims: &[usize], seed: u64) -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..dims.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (dims[l], dims[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.25; fo],
+            }
+        })
+        .collect()
+}
+
+fn def(id: &str, dims: &[usize], seed: u64) -> FleetModelDef {
+    FleetModelDef {
+        spec: ModelSpec::synthetic(id, dims.to_vec()),
+        layers: layer_params(dims, seed),
+    }
+}
+
+fn fleet(capacity: usize) -> (FleetPlacement, Vec<CimSimBackend>) {
+    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity };
+    FleetPlacement::co_place(
+        vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)],
+        6,
+        cfg,
+    )
+    .unwrap()
+}
+
+fn dedicated(id: &str, dims: &[usize], seed: u64, capacity: usize) -> CimSimBackend {
+    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity };
+    let spec = ModelSpec::synthetic(id, dims.to_vec());
+    CimSimBackend::from_params_grid(&spec, layer_params(dims, seed), 6, cfg).unwrap()
+}
+
+fn mask_dims(dims: &[usize]) -> Vec<usize> {
+    dims[1..dims.len() - 1].to_vec()
+}
+
+fn assert_rows_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: row count");
+    for (r, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{label}: row {r} width");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: row {r} out[{j}] differs ({va} vs {vb})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// 1. reload-billing property: the LRU's public contract holds over
+//    randomized touch sequences
+// ---------------------------------------------------------------
+
+/// Every touch decomposes exactly as hits + loads + reloads; a tile is
+/// *loaded* at most once in its lifetime (total loads == distinct tile
+/// count), a fully resident model touches for free, and an evicted
+/// model's return bills one reload per missing tile — never zero
+/// (hot-swap is not free) and never more (no double billing).
+#[test]
+fn every_evicted_then_reused_tile_bills_exactly_one_reload() {
+    // 2 macros x 3 slots = 6 declared slots; a(5) or b(3) fits alone,
+    // the pair (8 tiles) does not -> guaranteed hot-swap traffic
+    let (fleet, _) = fleet(3);
+    let mut rng = Pcg32::seeded(99);
+    let mut touched: Vec<&str> = Vec::new();
+    let mut total_loads = 0usize;
+    let mut total_reloads = 0usize;
+    let mut total_reload_bits = 0u64;
+    for step in 0..200 {
+        let id = if rng.uniform(0.0, 1.0) < 0.5 { "a" } else { "b" };
+        let before = fleet.residency_of(id);
+        let t = fleet.touch_model(id).unwrap();
+        assert_eq!(
+            t.hits + t.loads + t.reloads,
+            t.tiles,
+            "step {step}: every tile is exactly one of hit/load/reload"
+        );
+        match before {
+            Residency::Unplaced => {
+                assert!(!touched.contains(&id), "unplaced implies never touched");
+                assert_eq!(t.loads, t.tiles, "step {step}: first touch loads all");
+                assert_eq!(t.reloads, 0, "step {step}: nothing to reload yet");
+            }
+            Residency::Resident => {
+                assert_eq!(t.hits, t.tiles, "step {step}: resident model is free");
+                assert_eq!(t.evictions, 0, "step {step}: no pressure from hits");
+            }
+            Residency::Partial | Residency::Evicted => {
+                assert!(touched.contains(&id), "evicted implies touched before");
+                assert_eq!(t.loads, 0, "step {step}: a tile is only loaded once ever");
+                assert_eq!(
+                    t.reloads,
+                    t.tiles - t.hits,
+                    "step {step}: exactly one reload per non-resident tile"
+                );
+                assert!(t.reloads > 0, "step {step}: an evicted return is never free");
+            }
+        }
+        if !touched.contains(&id) {
+            touched.push(id);
+        }
+        total_loads += t.loads;
+        total_reloads += t.reloads;
+        total_reload_bits += t.reload_bits;
+    }
+    // lifetime load count == distinct tiles ever touched (both models
+    // were touched with overwhelming probability over 200 draws)
+    let expected_tiles: usize =
+        fleet.models().iter().filter(|m| touched.contains(&m.id.as_str())).map(|m| m.tiles.len()).sum();
+    assert_eq!(total_loads, expected_tiles, "each tile loads exactly once, ever");
+    assert!(total_reloads > 0, "pressure must have forced hot-swaps");
+
+    // the energy surface agrees: reload pJ prices exactly the re-stored
+    // bits, on top of the once-only load pricing
+    let stats = fleet.stats();
+    assert_eq!(stats.weight_reloads, total_reloads as u64);
+    assert_eq!(stats.weight_reload_bits, total_reload_bits);
+    let energy = EnergyModel::paper_default();
+    let report = fleet.chip_report(&energy);
+    let want_reload = energy.weight_store_pj(total_reload_bits);
+    assert!((report.weight_reload_pj - want_reload).abs() < 1e-9);
+    let want_load = energy.weight_store_pj(stats.weight_load_bits);
+    assert!((report.weight_load_pj - want_load).abs() < 1e-9);
+}
+
+// ---------------------------------------------------------------
+// 2. co-placement numerics: sharing a grid never changes outputs
+// ---------------------------------------------------------------
+
+#[test]
+fn co_placed_models_match_dedicated_grids_bit_for_bit() {
+    let (_, co) = fleet(512);
+    let specs = [("a", &DIMS_A[..], 11u64), ("b", &DIMS_B[..], 22u64)];
+    for (k, (id, dims, seed)) in specs.iter().enumerate() {
+        let solo = dedicated(id, dims, *seed, 512);
+        let mut rng = Pcg32::seeded(1234 + k as u64);
+        let input = f32_vec(&mut rng, dims[0], 1.0);
+        let masks = binary_masks(&mut rng, &mask_dims(dims), 0.9);
+        let rows =
+            vec![Row { input: &input, masks: &masks, sampled_masks: true }; 4];
+        let out_co = co[k].execute_rows(&rows).unwrap();
+        let out_solo = solo.execute_rows(&rows).unwrap();
+        assert_rows_bit_equal(&out_co.outputs, &out_solo.outputs, id);
+    }
+}
+
+/// The same invariant one layer up: whole MC runs through the engine,
+/// with interleaved traffic on the grid-mate, stay bit-identical.
+#[test]
+fn co_placed_engines_match_dedicated_engines_under_interleaving() {
+    let (_, mut co) = fleet(512);
+    let b_co = co.pop().unwrap();
+    let a_co = co.pop().unwrap();
+    let mk_engine = |backend: CimSimBackend, id: &str, dims: &[usize]| {
+        McDropoutEngine::with_backend(
+            Box::new(backend),
+            &ModelSpec::synthetic(id, dims.to_vec()),
+            Some(6),
+            ModeConfig::mf_asym_reuse_ordered(),
+        )
+        .unwrap()
+    };
+    let ea_co = mk_engine(a_co, "a", &DIMS_A);
+    let eb_co = mk_engine(b_co, "b", &DIMS_B);
+    let ea_solo = mk_engine(dedicated("a", &DIMS_A, 11, 512), "a", &DIMS_A);
+    let eb_solo = mk_engine(dedicated("b", &DIMS_B, 22, 512), "b", &DIMS_B);
+
+    let mut rng = Pcg32::seeded(7);
+    let xa = f32_vec(&mut rng, DIMS_A[0], 1.0);
+    let xb = f32_vec(&mut rng, DIMS_B[0], 1.0);
+    // interleave: a, b, a — shared-grid state from one model must not
+    // leak into the other
+    for round in 0..3 {
+        let (engine_co, engine_solo, x) = if round % 2 == 0 {
+            (&ea_co, &ea_solo, &xa)
+        } else {
+            (&eb_co, &eb_solo, &xb)
+        };
+        let seed = 4000 + round;
+        let mut src1 = IdealBernoulli::new(engine_co.mask_keep(), seed);
+        let mut src2 = IdealBernoulli::new(engine_solo.mask_keep(), seed);
+        let o1 = engine_co.infer_mc(x, 6, &mut src1).unwrap();
+        let o2 = engine_solo.infer_mc(x, 6, &mut src2).unwrap();
+        assert_rows_bit_equal(&o1.samples, &o2.samples, "round");
+    }
+}
+
+// ---------------------------------------------------------------
+// 3. sharding: order restored bit-exactly, accounting additive
+// ---------------------------------------------------------------
+
+#[test]
+fn sharded_batches_restore_sampling_order_bit_exactly() {
+    // two chips with identical weights = one model sharded across grids
+    let g0 = dedicated("m", &DIMS_A, 11, 512);
+    let g1 = dedicated("m", &DIMS_A, 11, 512);
+    let reference = dedicated("m", &DIMS_A, 11, 512);
+
+    let mut rng = Pcg32::seeded(31);
+    let input = f32_vec(&mut rng, DIMS_A[0], 1.0);
+    let mask_sets: Vec<_> =
+        (0..7).map(|_| binary_masks(&mut rng, &mask_dims(&DIMS_A), 0.9)).collect();
+    let rows: Vec<Row<'_>> = mask_sets
+        .iter()
+        .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+        .collect();
+
+    let plan = ShardPlan::split(rows.len(), 2);
+    assert_eq!(plan.shard_count(), 2);
+    let backends: [&dyn ExecutionBackend; 2] = [&g0, &g1];
+    let merged = run_sharded(&backends, &rows).unwrap();
+    let solo = reference.execute_rows(&rows).unwrap();
+    assert_rows_bit_equal(&merged.outputs, &solo.outputs, "sharded");
+
+    // parallel-chip accounting: macro pool and busy cycles add across
+    // the shards, the merged span is the slowest shard (not the sum).
+    // Each backend is fresh and served exactly one call, so its
+    // cumulative grid counters ARE that call's counters.
+    let (s0, s1) = (g0.grid().stats(), g1.grid().stats());
+    assert_eq!(merged.grid.macros as usize, s0.macros() + s1.macros());
+    assert_eq!(merged.grid.busy_cycles, s0.total_busy_cycles() + s1.total_busy_cycles());
+    assert_eq!(
+        merged.grid.span_cycles,
+        s0.span_cycles().max(s1.span_cycles()),
+        "independent grids overlap in time"
+    );
+    // both backends measure, so the merged energy is present and adds
+    let pj = merged.energy_pj.expect("both shards measured");
+    assert!(pj > 0.0);
+}
+
+// ---------------------------------------------------------------
+// 4. registry residency mirrors the fleet
+// ---------------------------------------------------------------
+
+#[test]
+fn registry_mirrors_fleet_residency() {
+    let (fleet, _) = fleet(3);
+    let mut registry = ModelRegistry::empty();
+    registry.register(ModelSpec::synthetic("a", DIMS_A.to_vec()));
+    registry.register(ModelSpec::synthetic("b", DIMS_B.to_vec()));
+    fleet.touch_model("a").unwrap();
+    fleet.touch_model("b").unwrap(); // displaces a under pressure
+    fleet.sync_registry(&mut registry);
+    assert_eq!(registry.residency("b"), Residency::Resident);
+    assert!(matches!(
+        registry.residency("a"),
+        Residency::Partial | Residency::Evicted
+    ));
+}

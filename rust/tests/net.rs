@@ -26,6 +26,7 @@ use mc_cim::coordinator::{
     ClassifyResponse, Coordinator, CoordinatorConfig, PoseResponse, StreamFrameInfo,
 };
 use mc_cim::error::RequestKind;
+use mc_cim::fleet::qos::Priority;
 use mc_cim::net::{
     decode_frame, encode_frame, AdmissionConfig, ErrorCode, Frame, NetServer, NetServerConfig,
     WireCall, WireClient, WireDecodeError, WireError, WireReply, WireStreamCall, HEADER_LEN,
@@ -103,6 +104,8 @@ fn exemplar_frames() -> Vec<Frame> {
         samples: 30,
         seed: Some(41),
         input: vec![0.25, -1.5, 3.0],
+        tenant: Some("acme".into()),
+        priority: Priority::High,
     };
     let stream_info = StreamFrameInfo {
         session: "drone-7".into(),
@@ -289,6 +292,8 @@ fn remote_streams_reuse_state_and_are_namespaced_per_connection() {
                         samples: 8,
                         seed: Some(seed),
                         input: vo_frame(seed + t),
+                        tenant: None,
+                        priority: Priority::Normal,
                     },
                     kind: RequestKind::Regress,
                     session: "shared-name".into(),
