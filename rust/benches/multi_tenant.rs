@@ -198,7 +198,12 @@ fn def(id: &str, dims: &[usize], seed: u64) -> FleetModelDef {
 }
 
 fn dedicated(id: &str, dims: &[usize], seed: u64, macros: usize, capacity: usize) -> CimSimBackend {
-    let cfg = GridConfig { macros, placement: PlacementStrategy::Packed, capacity };
+    let cfg = GridConfig {
+        macros,
+        placement: PlacementStrategy::Packed,
+        capacity,
+        ..GridConfig::default()
+    };
     let spec = ModelSpec::synthetic(id, dims.to_vec());
     CimSimBackend::from_params_grid(&spec, layer_params(dims, seed), 6, cfg).unwrap()
 }
@@ -227,7 +232,12 @@ fn phase_shared_utilization(report: &mut BenchReport) {
     let rows_a = vec![Row { input: &ia, masks: &ma, sampled_masks: true }; 4];
     let rows_b = vec![Row { input: &ib, masks: &mb, sampled_masks: true }; 4];
 
-    let cfg = GridConfig { macros: 4, placement: PlacementStrategy::Packed, capacity: 64 };
+    let cfg = GridConfig {
+        macros: 4,
+        placement: PlacementStrategy::Packed,
+        capacity: 64,
+        ..GridConfig::default()
+    };
     let (fleet, shared) =
         FleetPlacement::co_place(vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)], 6, cfg)
             .unwrap();
@@ -279,7 +289,12 @@ fn phase_eviction_pricing(report: &mut BenchReport) {
     println!("== phase C: eviction/reload pricing under SRAM pressure ==");
     // 2 macros x 3 slots = 6 declared slots; a(6) + b(2) = 8 tiles, so
     // alternating traffic forces hot-swaps every step
-    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 3 };
+    let cfg = GridConfig {
+        macros: 2,
+        placement: PlacementStrategy::Packed,
+        capacity: 3,
+        ..GridConfig::default()
+    };
     let (fleet, backends) =
         FleetPlacement::co_place(vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)], 6, cfg)
             .unwrap();
@@ -344,7 +359,12 @@ fn assert_rows_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], label: &str) {
 /// co-placed vs dedicated, and sharded vs single-grid.
 fn phase_bit_identity(report: &mut BenchReport) {
     println!("== phase D: bit-identity, co-placed and sharded ==");
-    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 512 };
+    let cfg = GridConfig {
+        macros: 2,
+        placement: PlacementStrategy::Packed,
+        capacity: 512,
+        ..GridConfig::default()
+    };
     let (_, co) =
         FleetPlacement::co_place(vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)], 6, cfg)
             .unwrap();

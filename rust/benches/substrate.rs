@@ -1,0 +1,195 @@
+//! Bit-parallel substrate acceptance bench.
+//!
+//!     cargo bench --bench substrate
+//!
+//! Runs the same 30-instance MC-Dropout request through the macro
+//! simulator twice — once on the scalar bit-serial reference inner
+//! loop, once on the word-packed bit-parallel substrate — and checks
+//! the contract:
+//!
+//! * outputs are **bit-identical** and the cost counters (compute
+//!   cycles, driven-column cycles, ADC conversions/cycles) and
+//!   measured energy are **exactly equal** — the substrate is a host
+//!   wall-clock choice, never a numerics or metering one;
+//! * the packed substrate **beats the scalar reference on
+//!   wall-clock**: ≥ 5x on bare metal, gated down to ≥ 2x under `CI`
+//!   (shared runners; override with `SUBSTRATE_MIN_SPEEDUP`);
+//! * headline numbers (per-substrate ms and MAC/s, speedup) land in
+//!   `BENCH_substrate.json` via the shared harness.
+//!
+//! Artifact-free: weights come from seeded PCG32 params.
+
+mod harness;
+
+use harness::BenchReport;
+use mc_cim::backend::{
+    CimSimBackend, ExecutionBackend, GridConfig, LayerParams, PlacementStrategy, Row,
+    Substrate,
+};
+use mc_cim::coordinator::{McDropoutEngine, McOutput};
+use mc_cim::energy::ModeConfig;
+use mc_cim::model::ModelSpec;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::{binary_masks, f32_vec};
+use mc_cim::util::Pcg32;
+use std::time::{Duration, Instant};
+
+const DIMS: [usize; 4] = [96, 64, 32, 10];
+const SAMPLES: usize = 30;
+const SEED: u64 = 7078;
+
+fn grid(substrate: Substrate) -> GridConfig {
+    GridConfig { substrate, ..GridConfig::with_macros(1, PlacementStrategy::Packed) }
+}
+
+fn layers() -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(23);
+    (0..DIMS.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.2; fo],
+            }
+        })
+        .collect()
+}
+
+fn build_backend(substrate: Substrate) -> CimSimBackend {
+    let spec = ModelSpec::synthetic("substrate-bench", DIMS.to_vec());
+    CimSimBackend::from_params_grid(&spec, layers(), 6, grid(substrate)).unwrap()
+}
+
+fn build_engine(substrate: Substrate) -> McDropoutEngine {
+    let spec = ModelSpec::synthetic("substrate-bench", DIMS.to_vec());
+    let backend = CimSimBackend::from_params_grid(&spec, layers(), 6, grid(substrate)).unwrap();
+    McDropoutEngine::with_backend(
+        Box::new(backend),
+        &spec,
+        Some(6),
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap()
+}
+
+fn run_request(engine: &McDropoutEngine, x: &[f32]) -> McOutput {
+    let mut src = IdealBernoulli::new(engine.mask_keep(), SEED);
+    engine.infer_mc(x, SAMPLES, &mut src).unwrap()
+}
+
+/// Best-of-n wall-clock of the request on this engine (warmup folded
+/// into the first rep).
+fn time_request(engine: &McDropoutEngine, x: &[f32], reps: usize) -> Duration {
+    let mut best = Duration::MAX;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = run_request(engine, x);
+        best = best.min(t0.elapsed());
+        assert_eq!(out.samples.len(), SAMPLES);
+    }
+    best
+}
+
+/// Nominal request MACs: one multiply-accumulate per weight per MC
+/// sample (what the bitplane schedules decompose into plane cycles).
+fn request_macs() -> u64 {
+    let per_sample: usize = (0..DIMS.len() - 1).map(|l| DIMS[l] * DIMS[l + 1]).sum();
+    (per_sample * SAMPLES) as u64
+}
+
+fn main() {
+    let mut rng = Pcg32::seeded(29);
+    let x = f32_vec(&mut rng, DIMS[0], 1.0);
+
+    // 1. numerics + metering: the backends must be indistinguishable
+    //    except for the substrate tag on the per-call grid accounting
+    let scalar_b = build_backend(Substrate::Scalar);
+    let packed_b = build_backend(Substrate::Packed);
+    let masks: Vec<Vec<Vec<f32>>> = {
+        let mut mrng = Pcg32::seeded(31);
+        (0..8).map(|_| binary_masks(&mut mrng, &[DIMS[1], DIMS[2]], 0.5)).collect()
+    };
+    let rows: Vec<Row<'_>> = masks
+        .iter()
+        .map(|ms| Row { input: &x, masks: ms, sampled_masks: true })
+        .collect();
+    let want = scalar_b.execute_rows(&rows).unwrap();
+    let got = packed_b.execute_rows(&rows).unwrap();
+    for (r, (ra, rb)) in want.outputs.iter().zip(&got.outputs).enumerate() {
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "row {r} out[{j}] must be bit-identical");
+        }
+    }
+    let (ws, gs) = (want.stats.as_ref().unwrap(), got.stats.as_ref().unwrap());
+    assert_eq!(ws.compute_cycles, gs.compute_cycles, "compute cycles must match exactly");
+    assert_eq!(ws.driven_col_cycles, gs.driven_col_cycles, "driven columns must match");
+    assert_eq!(ws.adc_conversions, gs.adc_conversions, "ADC conversions must match");
+    assert_eq!(ws.adc_cycles, gs.adc_cycles, "ADC cycles must match");
+    assert_eq!(
+        want.energy_pj.unwrap().to_bits(),
+        got.energy_pj.unwrap().to_bits(),
+        "measured energy must not depend on the substrate"
+    );
+    assert_eq!(want.grid.unwrap().substrate, Substrate::Scalar);
+    assert_eq!(got.grid.unwrap().substrate, Substrate::Packed);
+
+    // 2. end-to-end engine agreement on the timed request
+    let scalar_e = build_engine(Substrate::Scalar);
+    let packed_e = build_engine(Substrate::Packed);
+    let out_s = run_request(&scalar_e, &x);
+    let out_p = run_request(&packed_e, &x);
+    assert_eq!(out_s.samples.len(), out_p.samples.len());
+    for (r, (ra, rb)) in out_s.samples.iter().zip(&out_p.samples).enumerate() {
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(va.to_bits(), vb.to_bits(), "sample {r} out[{j}] must be bit-identical");
+        }
+    }
+    assert_eq!(out_s.energy_pj.to_bits(), out_p.energy_pj.to_bits());
+
+    // 3. wall-clock: the packed substrate must actually be faster
+    let t_scalar = time_request(&scalar_e, &x, 3);
+    let t_packed = time_request(&packed_e, &x, 5);
+    let speedup = t_scalar.as_secs_f64() / t_packed.as_secs_f64().max(1e-12);
+    let macs = request_macs();
+    let macs_s_scalar = macs as f64 / t_scalar.as_secs_f64().max(1e-12);
+    let macs_s_packed = macs as f64 / t_packed.as_secs_f64().max(1e-12);
+    println!("substrate bench — {SAMPLES}-instance request, dims {DIMS:?}, cim-sim M=1");
+    println!(
+        "  scalar (bit-serial)   : {:>9.2} ms  {:>10.2} MMAC/s",
+        t_scalar.as_secs_f64() * 1e3,
+        macs_s_scalar / 1e6
+    );
+    println!(
+        "  packed (bit-parallel) : {:>9.2} ms  {:>10.2} MMAC/s  ({speedup:.2}x)",
+        t_packed.as_secs_f64() * 1e3,
+        macs_s_packed / 1e6
+    );
+    // shared CI runners steal cycles and flatten turbo; bare metal
+    // must clear the real bar
+    let min_speedup: f64 = std::env::var("SUBSTRATE_MIN_SPEEDUP")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if std::env::var_os("CI").is_some() { 2.0 } else { 5.0 });
+    assert!(
+        speedup >= min_speedup,
+        "packed substrate must be >= {min_speedup}x faster than scalar (got {speedup:.2}x; \
+         {t_packed:?} vs {t_scalar:?})"
+    );
+
+    let mut report = BenchReport::new("substrate");
+    report
+        .text("default_substrate", Substrate::default().label())
+        .num("scalar_ms", t_scalar.as_secs_f64() * 1e3)
+        .num("packed_ms", t_packed.as_secs_f64() * 1e3)
+        .num("scalar_mmac_s", macs_s_scalar / 1e6)
+        .num("packed_mmac_s", macs_s_packed / 1e6)
+        .num("speedup", speedup)
+        .num("min_speedup", min_speedup)
+        .int("request_macs", macs)
+        .num("request_pj", out_s.energy_pj)
+        .flag("bit_identical", true);
+    report.write();
+
+    println!("substrate bench PASSED ({speedup:.2}x >= {min_speedup}x)");
+}

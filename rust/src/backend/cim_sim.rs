@@ -222,7 +222,7 @@ impl CimSimBackend {
                     for (k, i) in (lo..hi).enumerate() {
                         codes[k] = wq.codes[i * fo + j];
                     }
-                    rows.push(QuantTensor { codes, delta: wq.delta, bits });
+                    rows.push(QuantTensor::new(codes, wq.delta, bits));
                 }
                 tiles.push(rows);
             }
@@ -395,7 +395,7 @@ impl CimSimBackend {
                 let mut codes = vec![0i32; MACRO_COLS];
                 codes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
                 let col_active: Vec<bool> = codes.iter().map(|&c| c != 0).collect();
-                (QuantTensor { codes, delta: xq.delta, bits: self.bits }, col_active)
+                (QuantTensor::new(codes, xq.delta, self.bits), col_active)
             })
             .collect();
         let mut jobs = Vec::with_capacity(layer.col_blocks() * layer.row_blocks());
@@ -404,11 +404,21 @@ impl CimSimBackend {
                 jobs.push((cb, rb));
             }
         }
+        // counters-only tile runs: the dense path never reads the
+        // per-conversion trace, and this is the hottest loop in the
+        // simulator (tens of thousands of conversions per MNIST row)
         let run = |_: usize, &(cb, rb): &(usize, usize)| {
             let (xt, col_active) = &blocks[cb];
             let r0 = rb * MACRO_ROWS;
             let r1 = (r0 + MACRO_ROWS).min(layer.fo);
-            self.grid.run_tile(self.layer_base + l, cb, rb, xt, col_active, &row_active[r0..r1])
+            self.grid.run_tile_counts(
+                self.layer_base + l,
+                cb,
+                rb,
+                xt,
+                col_active,
+                &row_active[r0..r1],
+            )
         };
         // `fan = false` keeps threading single-level when an outer
         // row fan is already running; small tile batches run inline
@@ -571,7 +581,7 @@ impl CimSimBackend {
                 let hi = (lo + MACRO_COLS).min(layer.fi);
                 let mut codes = vec![0i32; MACRO_COLS];
                 codes[..hi - lo].copy_from_slice(&aq.codes[lo..hi]);
-                QuantTensor { codes, delta: aq.delta, bits: self.bits }
+                QuantTensor::new(codes, aq.delta, self.bits)
             })
             .collect();
         let scales = self.shift_add_scales(layer, aq.delta);
@@ -803,6 +813,9 @@ impl CimSimBackend {
             for &i in &changed {
                 l0.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] = xq.codes[i];
             }
+            for t in &mut l0.ps.xt {
+                t.invalidate_packed(); // codes mutated in place above
+            }
             if grid_rescaled {
                 l0.ps.scales = self.shift_add_scales(layer, xq.delta);
             }
@@ -865,6 +878,9 @@ impl CimSimBackend {
             for &i in &changed {
                 st.ps.xt[i / MACRO_COLS].codes[i % MACRO_COLS] = aq.codes[i];
                 st.nonzero[i] = aq.codes[i] != 0;
+            }
+            for t in &mut st.ps.xt {
+                t.invalidate_packed(); // codes mutated in place above
             }
             self.plane_apply(1, &mut st.ps, &add, 1, stats);
         } else {
@@ -1092,7 +1108,7 @@ impl ExecutionBackend for CimSimBackend {
         // masks came from a precomputed (cached) schedule (§IV-B)
         let mask_bits = plan.rows.len() as u64 * mask_dims.iter().sum::<usize>() as u64;
         let (rng_bits, sched_bits) = if plan.sampled { (mask_bits, 0) } else { (0, mask_bits) };
-        let gx = self.grid.stats().exec_delta(&grid_before);
+        let gx = self.grid.stats().exec_delta(&grid_before, self.grid.substrate());
         let mut breakdown = self.energy.measured_energy_scheduled(
             &stats,
             OperatorKind::MultiplicationFree,
@@ -1160,7 +1176,7 @@ impl ExecutionBackend for CimSimBackend {
                 rng_bits += mask_bits_per_row as u64;
             }
         }
-        let gx = self.grid.stats().exec_delta(&grid_before);
+        let gx = self.grid.stats().exec_delta(&grid_before, self.grid.substrate());
         let mut breakdown = self.energy.measured_energy(
             &stats,
             OperatorKind::MultiplicationFree,

@@ -31,6 +31,7 @@ pub use pjrt::PjrtBackend;
 pub use stub::StubBackend;
 
 pub use crate::cim::grid::{GridConfig, GridExecStats, PlacementStrategy};
+pub use crate::cim::macro_sim::Substrate;
 pub use crate::dropout::plan::{ExecutionPlan, PlanRow};
 
 use crate::cim::macro_sim::MacroRunStats;
@@ -253,6 +254,10 @@ pub struct BackendOptions {
     /// only; `None` = the grid's roomy default). Fleet co-placement
     /// reads the same knob to size its residency ledger.
     pub capacity: Option<usize>,
+    /// Macro inner-loop substrate (cim-sim only): bit-serial scalar
+    /// reference vs word-packed bit-parallel. Bit-identical outputs
+    /// and stats either way; packed is the fast default.
+    pub substrate: Substrate,
 }
 
 impl Default for BackendOptions {
@@ -263,6 +268,7 @@ impl Default for BackendOptions {
             macros: 1,
             placement: PlacementStrategy::Packed,
             capacity: None,
+            substrate: Substrate::default(),
         }
     }
 }
@@ -295,6 +301,7 @@ pub fn make_backend(
         }
         BackendKind::CimSim => {
             let mut grid = GridConfig::with_macros(opts.macros, opts.placement);
+            grid.substrate = opts.substrate;
             if let Some(cap) = opts.capacity {
                 grid.capacity = cap.max(1);
             }

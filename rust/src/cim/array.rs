@@ -17,7 +17,18 @@
 //! one conversion per cycle, matching the differential single-conversion
 //! design.
 
+//! Storage is word-packed (lane `c` = bit `c % 64` of word `c / 64`,
+//! one word run per row), which serves both substrates: the scalar
+//! [`CimArray::evaluate_row`] walks columns through the [`BitCell`]
+//! discharge model one lane at a time, the packed
+//! [`CimArray::evaluate_row_packed`] computes the same readout in bulk
+//! (`stored & drive & active` → `count_ones()`). The packed path IS
+//! the `pl_discharges` dynamic AND, applied 64 cells per word: a
+//! product line discharges iff its drive bit and stored bit are both
+//! one, and popcounting the ANDed words counts exactly those columns.
+
 use super::cell::BitCell;
+use crate::operator::packed::{words_for, WORD_BITS};
 
 /// Per-cycle electrical outcome of one row evaluation.
 #[derive(Clone, Copy, Debug, Default)]
@@ -38,18 +49,23 @@ impl CycleReadout {
     }
 }
 
-/// The CIM array: `rows x cols` bitcells plus dropout gating state.
+/// The CIM array: `rows x cols` bitcells, word-packed per row.
 #[derive(Clone, Debug)]
 pub struct CimArray {
     rows: usize,
     cols: usize,
-    cells: Vec<BitCell>,
+    /// Words per row: `ceil(cols / 64)`.
+    words: usize,
+    /// Stored bits, row-major word runs (`row r` =
+    /// `stored[r * words .. (r + 1) * words]`), padding bits zero.
+    stored: Vec<u64>,
 }
 
 impl CimArray {
     pub fn new(rows: usize, cols: usize) -> Self {
         assert!(rows > 0 && cols > 0);
-        CimArray { rows, cols, cells: vec![BitCell::default(); rows * cols] }
+        let words = words_for(cols);
+        CimArray { rows, cols, words, stored: vec![0u64; rows * words] }
     }
 
     /// The paper's geometry: 16 x 31.
@@ -65,20 +81,54 @@ impl CimArray {
         self.cols
     }
 
+    /// Words per packed row.
+    pub fn words_per_row(&self) -> usize {
+        self.words
+    }
+
     /// Write one weight bitplane into a row (WWL pulse per cell).
     /// Returns the number of write operations (for energy accounting).
     pub fn write_row(&mut self, row: usize, bits: &[bool]) -> usize {
         assert!(row < self.rows, "row {row} out of range");
         assert_eq!(bits.len(), self.cols, "bitplane width mismatch");
+        let base = row * self.words;
+        self.stored[base..base + self.words].fill(0);
         for (c, &b) in bits.iter().enumerate() {
-            self.cells[row * self.cols + c].write(b);
+            if b {
+                self.stored[base + c / WORD_BITS] |= 1u64 << (c % WORD_BITS);
+            }
         }
+        self.cols
+    }
+
+    /// Write one weight bitplane into a row from its packed words —
+    /// the same storage write as [`Self::write_row`] without the
+    /// per-column unpack. Padding bits must be zero (the electrical
+    /// array has no cells there). Returns the write-operation count.
+    pub fn write_row_words(&mut self, row: usize, words: &[u64]) -> usize {
+        assert!(row < self.rows, "row {row} out of range");
+        assert_eq!(words.len(), self.words, "packed bitplane width mismatch");
+        debug_assert!(
+            {
+                let tail = self.cols % WORD_BITS;
+                tail == 0 || words[self.words - 1] >> tail == 0
+            },
+            "padding bits past column {} must be zero",
+            self.cols
+        );
+        let base = row * self.words;
+        self.stored[base..base + self.words].copy_from_slice(words);
         self.cols
     }
 
     /// Stored bit at (row, col).
     pub fn stored(&self, row: usize, col: usize) -> bool {
-        self.cells[row * self.cols + col].stored()
+        (self.stored[row * self.words + col / WORD_BITS] >> (col % WORD_BITS)) & 1 == 1
+    }
+
+    /// Packed stored bits of one row.
+    pub fn row_words(&self, row: usize) -> &[u64] {
+        &self.stored[row * self.words..(row + 1) * self.words]
     }
 
     /// One compute cycle on `row`.
@@ -109,7 +159,8 @@ impl CimArray {
                 continue;
             }
             out.driven_cols += 1;
-            let cell = &self.cells[row * self.cols + c];
+            let mut cell = BitCell::default();
+            cell.write(self.stored(row, c));
             if cell.pl_discharges(true, true) {
                 if input_signs[c] > 0 {
                     out.pos_count += 1;
@@ -117,6 +168,43 @@ impl CimArray {
                     out.neg_count += 1;
                 }
             }
+        }
+        out
+    }
+
+    /// Packed compute cycle on `row`: the bulk form of
+    /// [`Self::evaluate_row`].
+    ///
+    /// * `drive_pos` / `drive_neg`: word-packed positive / negative
+    ///   drive masks — the caller pre-ANDs the dropout gate in, so a
+    ///   set bit *is* a driven column (`driven_cols` = popcount of
+    ///   their union); the masks must be disjoint;
+    /// * `row_active`: RL gate, identical to the scalar path.
+    ///
+    /// Per word, `stored & drive` is 64 simultaneous `pl_discharges`
+    /// dynamic ANDs; popcounting it yields the discharged-column count
+    /// of that sign. Counters match the scalar loop exactly.
+    pub fn evaluate_row_packed(
+        &self,
+        row: usize,
+        drive_pos: &[u64],
+        drive_neg: &[u64],
+        row_active: bool,
+    ) -> CycleReadout {
+        assert!(row < self.rows);
+        assert_eq!(drive_pos.len(), self.words);
+        assert_eq!(drive_neg.len(), self.words);
+        let mut out = CycleReadout::default();
+        if !row_active {
+            return out;
+        }
+        let stored = self.row_words(row);
+        for i in 0..self.words {
+            let (p, n) = (drive_pos[i], drive_neg[i]);
+            debug_assert_eq!(p & n, 0, "a column cannot drive both signs");
+            out.driven_cols += (p | n).count_ones();
+            out.pos_count += (stored[i] & p).count_ones();
+            out.neg_count += (stored[i] & n).count_ones();
         }
         out
     }
@@ -179,6 +267,44 @@ mod tests {
             let r = a.evaluate_row(0, &s, &act, true);
             let want = (0..31).filter(|&i| act[i] && s[i] != 0).count() as u32;
             r.driven_cols == want
+        });
+    }
+
+    #[test]
+    fn packed_readout_matches_scalar_bit_for_bit() {
+        use crate::operator::packed::pack_mask;
+        check("packed row eval == scalar", 100, |rng| {
+            let n = 1 + rng.below(100) as usize;
+            let mut a = CimArray::new(2, n);
+            a.write_row(1, &bool_mask(rng, n, 0.5));
+            let s = signs(rng, n);
+            let act = bool_mask(rng, n, 0.6);
+            let pos: Vec<bool> = (0..n).map(|i| act[i] && s[i] > 0).collect();
+            let neg: Vec<bool> = (0..n).map(|i| act[i] && s[i] < 0).collect();
+            let (dp, dn) = (pack_mask(&pos), pack_mask(&neg));
+            for row_active in [true, false] {
+                let want = a.evaluate_row(1, &s, &act, row_active);
+                let got = a.evaluate_row_packed(1, &dp, &dn, row_active);
+                if (got.pos_count, got.neg_count, got.driven_cols)
+                    != (want.pos_count, want.neg_count, want.driven_cols)
+                {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn word_writes_equal_bool_writes() {
+        use crate::operator::packed::pack_mask;
+        check("write_row_words == write_row", 60, |rng| {
+            let n = 1 + rng.below(100) as usize;
+            let bits = bool_mask(rng, n, 0.5);
+            let mut a = CimArray::new(1, n);
+            let mut b = CimArray::new(1, n);
+            assert_eq!(a.write_row(0, &bits), b.write_row_words(0, &pack_mask(&bits)));
+            a.row_words(0) == b.row_words(0) && (0..n).all(|c| a.stored(0, c) == bits[c])
         });
     }
 

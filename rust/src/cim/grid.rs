@@ -37,7 +37,7 @@
 //! therefore outputs, `to_bits`-exactly — independent of `M`, the
 //! strategy, and thread interleaving.
 
-use super::macro_sim::{CimMacro, MacroRunStats};
+use super::macro_sim::{CimMacro, MacroRunStats, Substrate};
 use crate::operator::quant::QuantTensor;
 use crate::MACRO_ROWS;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -89,7 +89,8 @@ impl PlacementStrategy {
     }
 }
 
-/// Grid construction knobs (CLI: `--macros N --placement STRATEGY`).
+/// Grid construction knobs (CLI: `--macros N --placement STRATEGY
+/// --substrate scalar|packed`).
 #[derive(Clone, Copy, Debug)]
 pub struct GridConfig {
     /// Number of concurrent macros (1 = the legacy single-macro chip).
@@ -97,6 +98,9 @@ pub struct GridConfig {
     pub placement: PlacementStrategy,
     /// Resident tile slots per macro (its local weight SRAM).
     pub capacity: usize,
+    /// Inner-loop substrate every macro on the grid runs
+    /// (bit-identical either way; packed is the fast default).
+    pub substrate: Substrate,
 }
 
 impl Default for GridConfig {
@@ -105,6 +109,7 @@ impl Default for GridConfig {
             macros: 1,
             placement: PlacementStrategy::Packed,
             capacity: DEFAULT_MACRO_TILE_SLOTS,
+            substrate: Substrate::default(),
         }
     }
 }
@@ -208,20 +213,25 @@ impl GridRunStats {
 
     /// The work between an `earlier` snapshot and this one, as the
     /// per-call accounting a backend attaches to its output.
-    pub fn exec_delta(&self, earlier: &GridRunStats) -> GridExecStats {
+    pub fn exec_delta(&self, earlier: &GridRunStats, substrate: Substrate) -> GridExecStats {
         let mut busy = 0u64;
         let mut span = 0u64;
+        let mut compute = 0u64;
         for m in 0..self.macros() {
             let b = self
                 .busy_cycles(m)
                 .saturating_sub(if m < earlier.macros() { earlier.busy_cycles(m) } else { 0 });
             busy += b;
             span = span.max(b);
+            let prior = if m < earlier.macros() { earlier.per_macro[m].compute_cycles } else { 0 };
+            compute += self.per_macro[m].compute_cycles.saturating_sub(prior);
         }
         GridExecStats {
             macros: self.macros() as u32,
             busy_cycles: busy,
             span_cycles: span,
+            compute_cycles: compute,
+            substrate,
             weight_reloads: self.weight_reloads.saturating_sub(earlier.weight_reloads),
             weight_reload_bits: self
                 .weight_reload_bits
@@ -242,6 +252,12 @@ pub struct GridExecStats {
     pub busy_cycles: u64,
     /// Busiest macro's cycles — the call's wall-clock on the chip.
     pub span_cycles: u64,
+    /// Plane-evaluation cycles within `busy_cycles` — the portion the
+    /// inner-loop substrate executes (SAR conversions stay scalar on
+    /// both substrates, so their cycles are excluded here).
+    pub compute_cycles: u64,
+    /// Which inner-loop substrate evaluated the compute cycles.
+    pub substrate: Substrate,
     /// Spilled-tile executions (each re-stored its bitplanes).
     pub weight_reloads: u64,
     /// Weight bits those reloads re-stored.
@@ -263,6 +279,8 @@ impl GridExecStats {
         self.macros = self.macros.max(other.macros);
         self.busy_cycles += other.busy_cycles;
         self.span_cycles += other.span_cycles;
+        self.compute_cycles += other.compute_cycles;
+        self.substrate = other.substrate;
         self.weight_reloads += other.weight_reloads;
         self.weight_reload_bits += other.weight_reload_bits;
     }
@@ -341,6 +359,7 @@ pub struct MacroGrid {
     units: Vec<Mutex<MacroUnit>>,
     tiles: Vec<GridTile>,
     placement: Placement,
+    substrate: Substrate,
     /// `tile_index(l, cb, rb) = layer_base[l] + cb * row_blocks[l] + rb`.
     layer_base: Vec<usize>,
     layer_row_blocks: Vec<usize>,
@@ -392,7 +411,7 @@ impl MacroGrid {
         let units = (0..m)
             .map(|_| {
                 Mutex::new(MacroUnit {
-                    mac: CimMacro::paper_default(),
+                    mac: CimMacro::paper_default_on(cfg.substrate),
                     ledger: MacroRunStats::default(),
                 })
             })
@@ -401,6 +420,7 @@ impl MacroGrid {
             units,
             tiles,
             placement,
+            substrate: cfg.substrate,
             layer_base,
             layer_row_blocks,
             weight_load_bits,
@@ -420,6 +440,11 @@ impl MacroGrid {
 
     pub fn placement(&self) -> &Placement {
         &self.placement
+    }
+
+    /// Inner-loop substrate every macro on this grid runs.
+    pub fn substrate(&self) -> Substrate {
+        self.substrate
     }
 
     /// Identity of tile `idx` (tiles are indexed layer-major, then
@@ -483,10 +508,40 @@ impl MacroGrid {
         col_active: &[bool],
         row_active: &[bool],
     ) -> (Vec<f32>, MacroRunStats) {
+        self.run_tile_with(layer, col_block, row_block, x, col_active, row_active, true)
+    }
+
+    /// [`Self::run_tile`] without the per-conversion trace — the hot
+    /// counter-only form the dense matvec path uses (the trace would
+    /// allocate one entry per conversion just to be dropped).
+    pub fn run_tile_counts(
+        &self,
+        layer: usize,
+        col_block: usize,
+        row_block: usize,
+        x: &QuantTensor,
+        col_active: &[bool],
+        row_active: &[bool],
+    ) -> (Vec<f32>, MacroRunStats) {
+        self.run_tile_with(layer, col_block, row_block, x, col_active, row_active, false)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_tile_with(
+        &self,
+        layer: usize,
+        col_block: usize,
+        row_block: usize,
+        x: &QuantTensor,
+        col_active: &[bool],
+        row_active: &[bool],
+        trace: bool,
+    ) -> (Vec<f32>, MacroRunStats) {
         let tile = &self.tiles[self.tile_index(layer, col_block, row_block)];
         debug_assert_eq!(row_active.len(), tile.rows.len(), "row gate must match the tile");
         let mut unit = self.lock_for(tile);
-        let (out, stats) = unit.mac.correlate(x, &tile.rows, col_active, row_active);
+        let (out, stats) =
+            unit.mac.correlate_with(x, &tile.rows, col_active, row_active, trace);
         unit.ledger.merge_counts(&stats);
         (out, stats)
     }
@@ -603,7 +658,7 @@ mod tests {
                                 for (k, i) in (lo..hi).enumerate() {
                                     codes[k] = wq.codes[i * fo + j];
                                 }
-                                QuantTensor { codes, delta: wq.delta, bits: 6 }
+                                QuantTensor::new(codes, wq.delta, 6)
                             })
                             .collect()
                     })
@@ -647,6 +702,7 @@ mod tests {
             macros: 4,
             placement: PlacementStrategy::Replicated,
             capacity: 2,
+            ..GridConfig::default()
         };
         let grid = MacroGrid::place(&cfg, &layers);
         assert_eq!(grid.spilled_tiles(), 0);
@@ -667,7 +723,12 @@ mod tests {
     #[test]
     fn overflow_tiles_spill_and_meter_reloads() {
         let layers = layer_tiles(&[62, 33, 6], 7); // 2x3 + 2x1 = 8 tiles
-        let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 2 };
+        let cfg = GridConfig {
+            macros: 2,
+            placement: PlacementStrategy::Packed,
+            capacity: 2,
+            ..GridConfig::default()
+        };
         let grid = MacroGrid::place(&cfg, &layers);
         assert_eq!(grid.spilled_tiles(), 8 - 4);
         let q = Quantizer::new(6);
@@ -737,9 +798,11 @@ mod tests {
         let mut rng = Pcg32::seeded(17);
         let x = q.quantize(&f32_vec(&mut rng, MACRO_COLS, 1.0));
         let (_, st) = grid.run_tile(0, 0, 0, &x, &vec![true; MACRO_COLS], &vec![true; 16]);
-        let gx = grid.stats().exec_delta(&before);
+        let gx = grid.stats().exec_delta(&before, grid.substrate());
         assert_eq!(gx.macros, 2);
         assert_eq!(gx.busy_cycles, st.compute_cycles + st.adc_cycles);
+        assert_eq!(gx.compute_cycles, st.compute_cycles, "delta excludes ADC cycles");
+        assert_eq!(gx.substrate, Substrate::Packed);
         assert_eq!(gx.span_cycles, gx.busy_cycles, "one tile runs on one macro");
         assert_eq!(gx.weight_reloads, 0);
         assert!(gx.utilization() > 0.0);
@@ -785,5 +848,29 @@ mod tests {
         for (g, w) in got.iter().zip(&want) {
             assert_eq!(g.to_bits(), w.to_bits());
         }
+    }
+
+    #[test]
+    fn counts_only_tile_run_skips_the_trace_not_the_ledger() {
+        let layers = layer_tiles(&[31, 16], 27);
+        let cfg = GridConfig {
+            substrate: Substrate::Scalar,
+            ..GridConfig::with_macros(1, PlacementStrategy::Packed)
+        };
+        let grid = MacroGrid::place(&cfg, &layers);
+        assert_eq!(grid.substrate(), Substrate::Scalar);
+        let q = Quantizer::new(6);
+        let mut rng = Pcg32::seeded(29);
+        let x = q.quantize(&f32_vec(&mut rng, MACRO_COLS, 1.0));
+        let col = vec![true; MACRO_COLS];
+        let (o1, traced) = grid.run_tile(0, 0, 0, &x, &col, &vec![true; 16]);
+        let (o2, bare) = grid.run_tile_counts(0, 0, 0, &x, &col, &vec![true; 16]);
+        assert!(!traced.plane_sums.is_empty());
+        assert!(bare.plane_sums.is_empty());
+        assert_eq!(traced.compute_cycles, bare.compute_cycles);
+        assert_eq!(traced.adc_cycles, bare.adc_cycles);
+        assert!(o1.iter().zip(&o2).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // both calls landed in the macro ledger
+        assert_eq!(grid.stats().total().compute_cycles, 2 * bare.compute_cycles);
     }
 }

@@ -22,7 +22,40 @@ use super::array::CimArray;
 use super::mav::MavModel;
 use super::xadc::{AdcKind, SarAdc};
 use crate::operator::bitplane::{BitplaneSchedule, CycleKind, OperatorKind};
+use crate::operator::packed::{ones_mask, pack_mask};
 use crate::operator::quant::QuantTensor;
+
+/// Which inner-loop implementation the macro's array evaluation runs.
+///
+/// Purely a performance choice: both substrates produce `to_bits`-
+/// identical outputs and identical [`MacroRunStats`] (enforced by
+/// `rust/tests/substrate.rs` across every execution path).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Substrate {
+    /// Bit-serial reference: one column `bool` at a time per cycle.
+    Scalar,
+    /// Word-packed bit-parallel: `u64` lane masks + `count_ones`,
+    /// counters metered in bulk.
+    #[default]
+    Packed,
+}
+
+impl Substrate {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" | "bitserial" | "bit-serial" => Some(Substrate::Scalar),
+            "packed" | "bitparallel" | "bit-parallel" => Some(Substrate::Packed),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Substrate::Scalar => "scalar",
+            Substrate::Packed => "packed",
+        }
+    }
+}
 
 /// Most plane-sum trace entries a **merged** accumulator retains (see
 /// [`MacroRunStats::merge`]). Per-call traces are never truncated —
@@ -79,11 +112,12 @@ impl MacroRunStats {
     }
 }
 
-/// The macro: array + ADC policy.
+/// The macro: array + ADC policy + inner-loop substrate.
 pub struct CimMacro {
     array: CimArray,
     adc: SarAdc,
     kind: OperatorKind,
+    substrate: Substrate,
 }
 
 impl CimMacro {
@@ -94,6 +128,7 @@ impl CimMacro {
             array: CimArray::paper_macro(),
             adc: SarAdc::new(adc_kind, mav),
             kind: operator,
+            substrate: Substrate::default(),
         }
     }
 
@@ -104,8 +139,25 @@ impl CimMacro {
         Self::new(AdcKind::AsymmetricMedian, OperatorKind::MultiplicationFree, &mav)
     }
 
+    /// [`Self::paper_default`] on an explicit substrate.
+    pub fn paper_default_on(substrate: Substrate) -> Self {
+        let mut mac = Self::paper_default();
+        mac.substrate = substrate;
+        mac
+    }
+
     pub fn operator(&self) -> OperatorKind {
         self.kind
+    }
+
+    pub fn substrate(&self) -> Substrate {
+        self.substrate
+    }
+
+    /// Switch the inner-loop substrate (A/B knob; never changes
+    /// numerics or counters).
+    pub fn set_substrate(&mut self, substrate: Substrate) {
+        self.substrate = substrate;
     }
 
     /// Correlate `x` (31 columns) against up to 16 weight rows.
@@ -113,13 +165,31 @@ impl CimMacro {
     /// * `col_active`: input-dropout mask over the 31 columns;
     /// * `row_active`: output-dropout mask over the weight rows.
     ///
-    /// Returns the per-row results and the cost counters.
+    /// Returns the per-row results and the cost counters, with the
+    /// per-conversion plane-sum trace recorded (the MAV-calibration and
+    /// delta-executor consumers read it). Hot counter-only callers use
+    /// [`Self::correlate_with`] with `trace = false`.
     pub fn correlate(
         &mut self,
         x: &QuantTensor,
         w_rows: &[QuantTensor],
         col_active: &[bool],
         row_active: &[bool],
+    ) -> (Vec<f32>, MacroRunStats) {
+        self.correlate_with(x, w_rows, col_active, row_active, true)
+    }
+
+    /// [`Self::correlate`] with an opt-in plane-sum trace. With
+    /// `trace = false` the returned [`MacroRunStats::plane_sums`] stays
+    /// empty and no per-conversion allocation happens; every counter is
+    /// identical either way, as is the numeric result.
+    pub fn correlate_with(
+        &mut self,
+        x: &QuantTensor,
+        w_rows: &[QuantTensor],
+        col_active: &[bool],
+        row_active: &[bool],
+        trace: bool,
     ) -> (Vec<f32>, MacroRunStats) {
         let cols = self.array.cols();
         assert_eq!(x.codes.len(), cols, "input width must match macro columns");
@@ -130,12 +200,45 @@ impl CimMacro {
             assert_eq!(w.codes.len(), cols);
             assert_eq!(w.bits, x.bits, "macro processes equal-precision operands");
         }
+        match self.substrate {
+            Substrate::Scalar => {
+                self.correlate_scalar(x, w_rows, col_active, row_active, trace)
+            }
+            Substrate::Packed => {
+                self.correlate_packed(x, w_rows, col_active, row_active, trace)
+            }
+        }
+    }
 
+    /// Bit-serial reference path: per cycle, unpack the drive signs and
+    /// stored bitplane one column at a time and walk the cell model.
+    fn correlate_scalar(
+        &mut self,
+        x: &QuantTensor,
+        w_rows: &[QuantTensor],
+        col_active: &[bool],
+        row_active: &[bool],
+        trace: bool,
+    ) -> (Vec<f32>, MacroRunStats) {
+        let cols = self.array.cols();
         let mut stats = MacroRunStats::default();
         let mut out = vec![0.0f32; w_rows.len()];
 
+        // The schedule depends on the row only through its delta; rows
+        // quantized together share one, so memoize on `w.delta` instead
+        // of rebuilding 2(n-1) cycle descriptors per row.
+        let mut sched_memo: Option<(u32, BitplaneSchedule)> = None;
         for (r, w) in w_rows.iter().enumerate() {
-            let sched = BitplaneSchedule::new(self.kind, x.bits, x.delta, w.delta);
+            if !row_active[r] {
+                continue; // gated row: no compute, no conversion
+            }
+            if sched_memo.as_ref().map(|(d, _)| *d) != Some(w.delta.to_bits()) {
+                sched_memo = Some((
+                    w.delta.to_bits(),
+                    BitplaneSchedule::new(self.kind, x.bits, x.delta, w.delta),
+                ));
+            }
+            let sched = &sched_memo.as_ref().expect("memo just filled").1;
             for cyc in &sched.cycles {
                 // Decompose the cycle into (drive signs, stored bits).
                 let (signs, bits): (Vec<i8>, Vec<bool>) = match cyc.kind {
@@ -170,17 +273,124 @@ impl CimMacro {
                     r % self.array.rows(),
                     &signs,
                     col_active,
-                    row_active[r],
+                    true,
                 );
-                if !row_active[r] {
-                    continue; // gated row: no compute, no conversion
-                }
                 stats.compute_cycles += 1;
                 stats.driven_col_cycles += readout.driven_cols as u64;
                 let (code, sar_cycles) = self.adc.convert(readout.signed_sum());
                 stats.adc_conversions += 1;
                 stats.adc_cycles += sar_cycles as u64;
-                stats.plane_sums.push(code);
+                if trace {
+                    stats.plane_sums.push(code);
+                }
+                out[r] += code as f32 * cyc.scale;
+            }
+        }
+        (out, stats)
+    }
+
+    /// Bit-parallel path: all per-cycle drive masks are word-level ANDs
+    /// of cached [`crate::operator::packed::PackedPlanes`], and the
+    /// array meters each cycle with popcounts
+    /// ([`CimArray::evaluate_row_packed`]). Same cycle order, same ADC
+    /// conversions, same f32 accumulation order as the scalar path —
+    /// outputs and stats are `to_bits`-identical, only the inner loop
+    /// changes.
+    fn correlate_packed(
+        &mut self,
+        x: &QuantTensor,
+        w_rows: &[QuantTensor],
+        col_active: &[bool],
+        row_active: &[bool],
+        trace: bool,
+    ) -> (Vec<f32>, MacroRunStats) {
+        let cols = self.array.cols();
+        let words = self.array.words_per_row();
+        let rows = self.array.rows();
+        let mut stats = MacroRunStats::default();
+        let mut out = vec![0.0f32; w_rows.len()];
+
+        let xp = x.packed();
+        let act = pack_mask(col_active);
+        // Dropout gate pre-ANDed into the input-side drive masks once
+        // per call: a set bit below IS a driven column.
+        let gated = |m: &[u64]| -> Vec<u64> {
+            m.iter().zip(&act).map(|(&v, &g)| v & g).collect()
+        };
+        let xpos_act = gated(&xp.pos);
+        let xneg_act = gated(&xp.neg);
+        let xmag_act: Vec<u64> = (0..xp.planes())
+            .flat_map(|p| gated(xp.mag_plane(p)))
+            .collect();
+        let xmag_act_plane =
+            |p: u8| &xmag_act[p as usize * words..(p as usize + 1) * words];
+        let ones = ones_mask(cols);
+
+        let (mut dp, mut dn) = (vec![0u64; words], vec![0u64; words]);
+        let (mut same, mut diff) = (vec![0u64; words], vec![0u64; words]);
+        let mut sched_memo: Option<(u32, BitplaneSchedule)> = None;
+        for (r, w) in w_rows.iter().enumerate() {
+            if !row_active[r] {
+                continue; // gated row: no compute, no conversion
+            }
+            if sched_memo.as_ref().map(|(d, _)| *d) != Some(w.delta.to_bits()) {
+                sched_memo = Some((
+                    w.delta.to_bits(),
+                    BitplaneSchedule::new(self.kind, x.bits, x.delta, w.delta),
+                ));
+            }
+            let sched = &sched_memo.as_ref().expect("memo just filled").1;
+            let wp = w.packed();
+            // Cross-sign agreement masks are per-row constants of the
+            // conventional schedule; build them lazily on first use.
+            let mut pair_masks_ready = false;
+            for cyc in &sched.cycles {
+                let readout = match cyc.kind {
+                    CycleKind::SignXWithWPlane(p) => {
+                        self.array.write_row_words(r % rows, wp.mag_plane(p));
+                        self.array.evaluate_row_packed(
+                            r % rows,
+                            &xpos_act,
+                            &xneg_act,
+                            true,
+                        )
+                    }
+                    CycleKind::SignWWithXPlane(p) => {
+                        let gate = xmag_act_plane(p);
+                        for i in 0..words {
+                            dp[i] = wp.pos[i] & gate[i];
+                            dn[i] = wp.neg[i] & gate[i];
+                        }
+                        self.array.write_row_words(r % rows, &ones);
+                        self.array.evaluate_row_packed(r % rows, &dp, &dn, true)
+                    }
+                    CycleKind::PlanePair { px, pw } => {
+                        if !pair_masks_ready {
+                            for i in 0..words {
+                                same[i] = (xp.pos[i] & wp.pos[i])
+                                    | (xp.neg[i] & wp.neg[i]);
+                                diff[i] = (xp.pos[i] & wp.neg[i])
+                                    | (xp.neg[i] & wp.pos[i]);
+                            }
+                            pair_masks_ready = true;
+                        }
+                        let gate = xmag_act_plane(px);
+                        for i in 0..words {
+                            dp[i] = same[i] & gate[i];
+                            dn[i] = diff[i] & gate[i];
+                        }
+                        self.array.write_row_words(r % rows, wp.mag_plane(pw));
+                        self.array.evaluate_row_packed(r % rows, &dp, &dn, true)
+                    }
+                };
+                stats.compute_cycles += 1;
+                stats.driven_col_cycles += readout.driven_cols as u64;
+                let (code, sar_cycles) = self.adc.convert(readout.signed_sum());
+                stats.adc_conversions += 1;
+                stats.adc_cycles += sar_cycles as u64;
+                if trace {
+                    stats.plane_sums.push(code);
+                }
                 out[r] += code as f32 * cyc.scale;
             }
         }
@@ -195,16 +405,15 @@ mod tests {
     use crate::util::testkit::{bool_mask, check, f32_vec};
 
     fn masked(t: &QuantTensor, active: &[bool]) -> QuantTensor {
-        QuantTensor {
-            codes: t
-                .codes
+        QuantTensor::new(
+            t.codes
                 .iter()
                 .zip(active)
                 .map(|(&c, &a)| if a { c } else { 0 })
                 .collect(),
-            delta: t.delta,
-            bits: t.bits,
-        }
+            t.delta,
+            t.bits,
+        )
     }
 
     #[test]
@@ -311,6 +520,94 @@ mod tests {
         counts.merge_counts(&chunk);
         assert_eq!(counts.compute_cycles, 10);
         assert!(counts.plane_sums.is_empty());
+    }
+
+    #[test]
+    fn substrates_agree_bit_for_bit_with_identical_stats() {
+        check("scalar macro == packed macro", 25, |rng| {
+            let bits = 2 + rng.below(6) as u8;
+            let q = Quantizer::new(bits);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let rows: Vec<QuantTensor> =
+                (0..16).map(|_| q.quantize(&f32_vec(rng, 31, 1.0))).collect();
+            let col_act = bool_mask(rng, 31, 0.5);
+            let row_act = bool_mask(rng, 16, 0.5);
+            for kind in [OperatorKind::MultiplicationFree, OperatorKind::Conventional] {
+                let mav = MavModel::trinomial(31, 0.125, 0.125);
+                let mut sc = CimMacro::new(AdcKind::AsymmetricMedian, kind, &mav);
+                sc.set_substrate(Substrate::Scalar);
+                let mut pk = CimMacro::new(AdcKind::AsymmetricMedian, kind, &mav);
+                assert_eq!(pk.substrate(), Substrate::Packed, "packed is the default");
+                let (o1, s1) = sc.correlate(&x, &rows, &col_act, &row_act);
+                let (o2, s2) = pk.correlate(&x, &rows, &col_act, &row_act);
+                let bits_eq = o1.iter().zip(&o2).all(|(a, b)| a.to_bits() == b.to_bits());
+                let stats_eq = s1.compute_cycles == s2.compute_cycles
+                    && s1.driven_col_cycles == s2.driven_col_cycles
+                    && s1.adc_conversions == s2.adc_conversions
+                    && s1.adc_cycles == s2.adc_cycles
+                    && s1.plane_sums == s2.plane_sums;
+                if !bits_eq || !stats_eq {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn trace_opt_out_keeps_counters_identical() {
+        let q = Quantizer::new(6);
+        let mut rng = crate::util::Pcg32::seeded(7);
+        let x = q.quantize(&f32_vec(&mut rng, 31, 1.0));
+        let rows: Vec<QuantTensor> =
+            (0..16).map(|_| q.quantize(&f32_vec(&mut rng, 31, 1.0))).collect();
+        let mut mac = CimMacro::paper_default();
+        let (o1, traced) =
+            mac.correlate(&x, &rows, &vec![true; 31], &vec![true; 16]);
+        let (o2, bare) =
+            mac.correlate_with(&x, &rows, &vec![true; 31], &vec![true; 16], false);
+        assert_eq!(traced.plane_sums.len(), 160);
+        assert!(bare.plane_sums.is_empty());
+        assert_eq!(traced.compute_cycles, bare.compute_cycles);
+        assert_eq!(traced.driven_col_cycles, bare.driven_col_cycles);
+        assert_eq!(traced.adc_conversions, bare.adc_conversions);
+        assert_eq!(traced.adc_cycles, bare.adc_cycles);
+        assert!(o1.iter().zip(&o2).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn hoisted_schedule_handles_per_row_deltas() {
+        // rows quantized independently carry distinct deltas — the
+        // delta-memoized schedule must rebuild, not reuse, when the
+        // delta changes mid-call (regression for the schedule hoist)
+        check("memoized schedule == per-row rebuild", 25, |rng| {
+            let q = Quantizer::new(5);
+            let x = q.quantize(&f32_vec(rng, 31, 1.0));
+            let rows: Vec<QuantTensor> = (0..8)
+                .map(|r| q.quantize(&f32_vec(rng, 31, 0.3 + 0.4 * r as f32)))
+                .collect();
+            let deltas: std::collections::HashSet<u32> =
+                rows.iter().map(|w| w.delta.to_bits()).collect();
+            assert!(deltas.len() > 1, "rows must exercise distinct deltas");
+            for sub in [Substrate::Scalar, Substrate::Packed] {
+                let mut mac = CimMacro::paper_default_on(sub);
+                let (out, _) =
+                    mac.correlate(&x, &rows, &vec![true; 31], &vec![true; 8]);
+                for (r, w) in rows.iter().enumerate() {
+                    let sched = BitplaneSchedule::new(
+                        OperatorKind::MultiplicationFree,
+                        5,
+                        x.delta,
+                        w.delta,
+                    );
+                    let want = sched.evaluate(&x, w, &vec![true; 31]);
+                    if (out[r] - want).abs() > 1e-3 {
+                        return false;
+                    }
+                }
+            }
+            true
+        });
     }
 
     #[test]

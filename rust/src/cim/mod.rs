@@ -7,7 +7,9 @@
 //! * [`xadc`] — SRAM-immersed SAR ADC: conventional symmetric binary
 //!   search vs the paper's MAV-statistics-driven asymmetric search.
 //! * [`macro_sim`] — the full macro: schedule-driven product-sum with
-//!   the array + ADC in the loop, cycle and energy event accounting.
+//!   the array + ADC in the loop, cycle and energy event accounting,
+//!   on a selectable inner-loop substrate ([`macro_sim::Substrate`]:
+//!   bit-serial reference vs word-packed bit-parallel, bit-identical).
 //! * [`grid`] — the multi-macro chip: `M` concurrent macros with
 //!   weight-stationary tile placement (`packed`/`replicated`), the
 //!   order-preserving [`grid::TileScheduler`], per-macro cost ledgers,
@@ -29,6 +31,6 @@ pub use grid::{
     GridConfig, GridExecStats, GridRunStats, LayerTiles, MacroGrid, PlacementStrategy,
     TileId, TileScheduler,
 };
-pub use macro_sim::{CimMacro, MacroRunStats};
+pub use macro_sim::{CimMacro, MacroRunStats, Substrate};
 pub use mav::MavModel;
 pub use xadc::{AdcKind, SarAdc};

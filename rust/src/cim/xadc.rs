@@ -41,6 +41,11 @@ pub struct SarAdc {
     /// indices), compare against `split` and recurse. Stored as a map
     /// from interval to split to keep construction simple.
     splits: std::collections::HashMap<(u16, u16), u16>,
+    /// Per-target-level SAR cycle count, materialized at build time by
+    /// walking the split tree once per level. Conversion is the packed
+    /// substrate's per-plane-sum hot path — one clamp and one indexed
+    /// load instead of a hash lookup per SAR step, identical counts.
+    cycles: Vec<u32>,
 }
 
 impl SarAdc {
@@ -52,12 +57,14 @@ impl SarAdc {
             kind,
             cols: model.cols(),
             splits: std::collections::HashMap::new(),
+            cycles: Vec::new(),
         };
         match kind {
             AdcKind::Symmetric => adc.build_midpoint(0, n - 1),
             AdcKind::AsymmetricMedian => adc.build_median(0, n - 1, model),
             AdcKind::AsymmetricOptimal => adc.build_optimal(model),
         }
+        adc.cycles = (0..n).map(|t| adc.walk_cycles(t)).collect();
         adc
     }
 
@@ -159,8 +166,15 @@ impl SarAdc {
     /// so the symmetric policy charges the fixed count even when the
     /// midpoint tree would isolate a value one cycle early.
     pub fn convert(&self, sum: i32) -> (i32, u32) {
+        let n_levels = (2 * self.cols + 1) as i32;
+        let target = (sum + self.cols as i32).clamp(0, n_levels - 1);
+        (target - self.cols as i32, self.cycles[target as usize])
+    }
+
+    /// Walk the split tree to `target`, counting comparator cycles —
+    /// the build-time source of the [`Self::cycles`] table.
+    fn walk_cycles(&self, target: u16) -> u32 {
         let n_levels = (2 * self.cols + 1) as u16;
-        let target = (sum + self.cols as i32).clamp(0, n_levels as i32 - 1) as u16;
         let (mut lo, mut hi) = (0u16, n_levels - 1);
         let mut cycles = 0u32;
         while lo < hi {
@@ -176,9 +190,11 @@ impl SarAdc {
             }
         }
         if self.kind == AdcKind::Symmetric {
+            // the register clocks every bit regardless of the
+            // comparator outcome — fixed count per conversion
             cycles = (n_levels as f64).log2().ceil() as u32;
         }
-        (lo as i32 - self.cols as i32, cycles)
+        cycles
     }
 
     /// Expected cycles under a (possibly different) usage distribution.

@@ -13,7 +13,7 @@
 //! snapshot per call (`summary()` sorts exactly once).
 
 use super::engine::StreamFrameStats;
-use crate::backend::GridExecStats;
+use crate::backend::{GridExecStats, Substrate};
 use crate::dropout::plan::PlanStats;
 use crate::uncertainty::Verdict;
 use std::collections::HashMap;
@@ -119,6 +119,11 @@ pub struct Metrics {
     grid_macro_span_cycles: AtomicU64,
     /// Spilled-tile weight reloads (0 when every model fits the grid).
     weight_reloads: AtomicU64,
+    // -- substrate ledger (macro inner-loop implementation) --
+    /// Compute cycles evaluated on the packed bit-parallel substrate.
+    substrate_packed_cycles: AtomicU64,
+    /// Compute cycles evaluated on the scalar bit-serial substrate.
+    substrate_scalar_cycles: AtomicU64,
     // -- network front-door ledger (`net` module) --
     /// TCP connections accepted onto a connection thread.
     conns_opened: AtomicU64,
@@ -251,6 +256,19 @@ impl Metrics {
         self.grid_macro_span_cycles
             .fetch_add(g.macros as u64 * g.span_cycles, Ordering::Relaxed);
         self.weight_reloads.fetch_add(g.weight_reloads, Ordering::Relaxed);
+        self.record_substrate(g.substrate, g.compute_cycles);
+    }
+
+    /// Record one request's macro-substrate accounting: which
+    /// inner-loop implementation evaluated its `compute_cycles`
+    /// (the counters are substrate-independent; this ledger shows how
+    /// many were metered through the packed bulk path).
+    pub fn record_substrate(&self, substrate: Substrate, compute_cycles: u64) {
+        let ctr = match substrate {
+            Substrate::Packed => &self.substrate_packed_cycles,
+            Substrate::Scalar => &self.substrate_scalar_cycles,
+        };
+        ctr.fetch_add(compute_cycles, Ordering::Relaxed);
     }
 
     /// Record one accepted network connection.
@@ -480,6 +498,27 @@ impl Metrics {
         self.weight_reloads.load(Ordering::Relaxed)
     }
 
+    /// Compute cycles evaluated on the packed bit-parallel substrate.
+    pub fn substrate_packed_cycles(&self) -> u64 {
+        self.substrate_packed_cycles.load(Ordering::Relaxed)
+    }
+
+    /// Compute cycles evaluated on the scalar bit-serial substrate.
+    pub fn substrate_scalar_cycles(&self) -> u64 {
+        self.substrate_scalar_cycles.load(Ordering::Relaxed)
+    }
+
+    /// Which substrate served the recorded cycles ("mixed" when a
+    /// process hosted both, e.g. an A/B comparison run).
+    pub fn substrate_kind(&self) -> &'static str {
+        match (self.substrate_packed_cycles() > 0, self.substrate_scalar_cycles() > 0) {
+            (true, false) => Substrate::Packed.label(),
+            (false, true) => Substrate::Scalar.label(),
+            (true, true) => "mixed",
+            (false, false) => "none",
+        }
+    }
+
     /// Mean measured/modeled energy per session frame (pJ).
     pub fn stream_frame_energy_pj(&self) -> f64 {
         let frames = self.stream_frames();
@@ -641,6 +680,14 @@ impl Metrics {
                 " | grid: macro_utilization={:.0}% weight_reloads={}",
                 100.0 * self.macro_utilization(),
                 self.weight_reloads(),
+            ));
+        }
+        if self.substrate_packed_cycles() + self.substrate_scalar_cycles() > 0 {
+            s.push_str(&format!(
+                " | substrate: kind={} packed_cycles={} scalar_cycles={}",
+                self.substrate_kind(),
+                self.substrate_packed_cycles(),
+                self.substrate_scalar_cycles(),
             ));
         }
         if self.conns_opened() > 0 {
@@ -810,6 +857,8 @@ mod tests {
             macros: 4,
             busy_cycles: 4000,
             span_cycles: 1000,
+            compute_cycles: 3200,
+            substrate: Substrate::Packed,
             weight_reloads: 0,
             weight_reload_bits: 0,
         });
@@ -818,6 +867,8 @@ mod tests {
             macros: 4,
             busy_cycles: 1000,
             span_cycles: 1000,
+            compute_cycles: 800,
+            substrate: Substrate::Packed,
             weight_reloads: 3,
             weight_reload_bits: 900,
         });
@@ -827,6 +878,27 @@ mod tests {
         let snap = m.summary();
         assert!(snap.contains("macro_utilization="), "snapshot missing utilization: {snap}");
         assert!(snap.contains("weight_reloads=3"), "snapshot missing reloads: {snap}");
+        // grid accounting feeds the substrate ledger automatically
+        assert_eq!(m.substrate_packed_cycles(), 4000);
+        assert!(snap.contains("substrate: kind=packed"), "missing substrate line: {snap}");
+    }
+
+    #[test]
+    fn substrate_ledger_appears_in_the_metrics_snapshot() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("substrate:"), "no traffic, no substrate line");
+        assert_eq!(m.substrate_kind(), "none");
+        m.record_substrate(Substrate::Packed, 1200);
+        m.record_substrate(Substrate::Packed, 300);
+        assert_eq!(m.substrate_packed_cycles(), 1500);
+        assert_eq!(m.substrate_kind(), Substrate::Packed.label());
+        let snap = m.summary();
+        assert!(snap.contains("substrate: kind=packed"), "missing kind: {snap}");
+        assert!(snap.contains("packed_cycles=1500"), "missing cycles: {snap}");
+        // an A/B process hosting both substrates reports "mixed"
+        m.record_substrate(Substrate::Scalar, 10);
+        assert_eq!(m.substrate_kind(), "mixed");
+        assert!(m.summary().contains("scalar_cycles=10"));
     }
 
     #[test]

@@ -60,7 +60,9 @@ use super::request::{
     ClassifyResponse, InferenceRequest, InferenceResponse, InferenceResult, PoseResponse,
     StreamFrameInfo,
 };
-use crate::backend::{make_backend, BackendKind, BackendOptions, GridConfig, PlacementStrategy};
+use crate::backend::{
+    make_backend, BackendKind, BackendOptions, GridConfig, PlacementStrategy, Substrate,
+};
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
 use crate::dropout::plan::{OrderingMode, ScheduleCache};
 use crate::energy::ModeConfig;
@@ -232,6 +234,10 @@ pub struct CoordinatorConfig {
     /// (cim-sim only; `replicated` lets independent MC samples of the
     /// same tile run on different macros concurrently).
     pub placement: PlacementStrategy,
+    /// Macro inner-loop substrate (cim-sim only): word-packed
+    /// bit-parallel (default) or the scalar bit-serial reference —
+    /// bit-identical outputs and identical cost counters either way.
+    pub substrate: Substrate,
     /// Dropout-bit source: None = ideal Bernoulli; Some(a) = Beta(a,a)
     /// perturbed (the Fig. 12(c)/13(f) non-ideality study).
     pub beta_a: Option<f64>,
@@ -284,6 +290,7 @@ impl Default for CoordinatorConfig {
             bits: None,
             macros: 1,
             placement: PlacementStrategy::default(),
+            substrate: Substrate::default(),
             beta_a: None,
             pallas: false,
             microbatch: true,
@@ -550,6 +557,7 @@ fn ensure_engine(
         pallas: cfg.pallas,
         macros: cfg.macros,
         placement: cfg.placement,
+        substrate: cfg.substrate,
         capacity: cfg.capacity,
     };
     let backend = make_backend(kind, state.rt.as_ref(), &cfg.artifacts, spec, &opts)?;
@@ -620,6 +628,7 @@ fn build_fleet(
         .map(|id| registry.get(id).cloned())
         .collect::<Result<_, McCimError>>()?;
     let mut grid_cfg = GridConfig::with_macros(cfg.macros, cfg.placement);
+    grid_cfg.substrate = cfg.substrate;
     if let Some(cap) = cfg.capacity {
         grid_cfg.capacity = cap.max(1);
     }
@@ -1576,6 +1585,9 @@ mod tests {
         // the legacy single-macro chip unless a grid is asked for
         assert_eq!(cfg.macros, 1);
         assert_eq!(cfg.placement, PlacementStrategy::Packed);
+        // the bit-parallel macro inner loop unless the scalar
+        // reference is asked for
+        assert_eq!(cfg.substrate, Substrate::Packed);
         // dense execution unless delta scheduling is asked for
         assert!(!cfg.reuse);
         assert_eq!(cfg.ordering, OrderingMode::Nn2Opt);

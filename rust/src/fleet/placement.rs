@@ -371,7 +371,12 @@ mod tests {
     }
 
     fn two_model_fleet(capacity: usize) -> (FleetPlacement, Vec<CimSimBackend>) {
-        let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity };
+        let cfg = GridConfig {
+            macros: 2,
+            placement: PlacementStrategy::Packed,
+            capacity,
+            ..GridConfig::default()
+        };
         FleetPlacement::co_place(
             vec![def("a", vec![40, 24, 6], 3), def("b", vec![33, 16, 4], 5)],
             6,

@@ -141,6 +141,8 @@ pub fn merge_shards(runs: Vec<ShardRun>) -> ShardOutcome {
             grid.macros += g.macros;
             grid.busy_cycles += g.busy_cycles;
             grid.span_cycles = grid.span_cycles.max(g.span_cycles);
+            grid.compute_cycles += g.compute_cycles;
+            grid.substrate = g.substrate;
             grid.weight_reloads += g.weight_reloads;
             grid.weight_reload_bits += g.weight_reload_bits;
         }
@@ -196,6 +198,7 @@ mod tests {
             span_cycles: span,
             weight_reloads: reloads,
             weight_reload_bits: reloads * 10,
+            ..GridExecStats::default()
         }
     }
 

@@ -21,14 +21,14 @@
 //!
 //! | module | paper section | contents |
 //! |---|---|---|
-//! | [`operator`] | §II-A | fixed-point quantizer, MF operator, bitplane schedules, conventional baseline |
-//! | [`cim`] | §II-B/C | 8T bitcell, 16×31 array, MAV statistics, symmetric + asymmetric SAR xADC, multi-macro grid (`cim::grid`: weight-stationary packed/replicated placement, tile scheduler, per-macro ledgers, spill/reload accounting) |
+//! | [`operator`] | §II-A | fixed-point quantizer, MF operator, bitplane schedules, conventional baseline, word-packed bitplane lanes (`operator::packed`, cached per tensor) for the bit-parallel substrate |
+//! | [`cim`] | §II-B/C | 8T bitcell, 16×31 array, MAV statistics, symmetric + asymmetric SAR xADC, selectable macro inner loop (`cim::Substrate`: packed bit-parallel vs scalar bit-serial, bit-identical), multi-macro grid (`cim::grid`: weight-stationary packed/replicated placement, tile scheduler, per-macro ledgers, spill/reload accounting) |
 //! | [`rng`] | §III-B | CCI electrical model, SRAM-embedded calibration, Beta-perturbed Bernoulli sources |
 //! | [`dropout`] | §III-A, §IV | masks, MC schedules, compute reuse, TSP sample ordering, delta-scheduled execution plans + ordered-schedule cache (`dropout::plan`) |
 //! | [`energy`] | §V | per-op energy parameters, the mode-matrix energy model, measured-vs-modeled delta-schedule reporting, chip-level grid report (per-macro dynamic pJ, one-time weight loads, idle-macro LSTP leakage) |
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |
-//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro-grid simulation (`--macros N --placement S`; measured energy + grid utilization, native delta-plan sessions with cross-frame input deltas for streaming), fail-fast stub; dense-only backends lower plans to rows |
+//! | [`backend`] | — | `ExecutionBackend` trait + substrates: PJRT graphs, bit-exact CIM macro-grid simulation (`--macros N --placement S --substrate packed|scalar`; measured energy + grid utilization, native delta-plan sessions with cross-frame input deltas for streaming), fail-fast stub; dense-only backends lower plans to rows |
 //! | [`fleet`] | — | the grid as a shared multi-tenant resource: multi-model co-placement with LRU hot-swap/eviction priced through the energy model (`fleet::placement`), tenant identity + priority lanes + per-tenant sample budgets (`fleet::qos`), MC-batch sharding across grids with order-preserving merge (`fleet::shard`) |
 //! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob + fleet residency state, builtin catalogue from `meta.json` |
 //! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |

@@ -16,7 +16,7 @@
 //! `cargo bench`; these subcommands are quick interactive slices.
 
 use anyhow::{anyhow, bail, Result};
-use mc_cim::backend::{make_backend, BackendKind, BackendOptions, PlacementStrategy};
+use mc_cim::backend::{make_backend, BackendKind, BackendOptions, PlacementStrategy, Substrate};
 use mc_cim::bayes::ClassEnsemble;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
@@ -81,6 +81,8 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|client|energy|rng|adc|reuse> 
   --macros N        concurrent macros of the simulated chip (cim-sim; default 1)
   --placement S     weight-stationary tile placement: packed | replicated
                     (cim-sim; replicated runs independent MC samples in parallel)
+  --substrate S     macro inner loop: packed (word-parallel, default) | scalar
+                    (bit-serial reference; outputs and counters identical)
   classify: --index N --samples N --bits B --rotate DEG
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --reuse=true --ordering MODE
@@ -137,6 +139,10 @@ macro-grid execution (see README 'Scaling out the simulated chip'):
   --placement S           packed (one copy per tile) | replicated (leftover
                           macro SRAM holds hot-tile replicas, so MC samples
                           fan out without serializing)
+  --substrate S           packed (default) evaluates bitplanes 64 columns
+                          per word; scalar walks cells one at a time.
+                          Bit-identical outputs, identical cost counters —
+                          only host wall-clock changes
 
 streaming VO sessions (see README 'Streaming inference sessions'):
   --stream=true           serve the frame sequence as ONE session: the
@@ -234,8 +240,9 @@ fn backend_from_args(args: &Args) -> Result<BackendKind> {
     }
 }
 
-/// Parse the macro-grid flags: `--macros N --placement STRATEGY`.
-fn grid_from_args(args: &Args) -> Result<(usize, PlacementStrategy)> {
+/// Parse the macro-grid flags: `--macros N --placement STRATEGY
+/// --substrate SUBSTRATE`.
+fn grid_from_args(args: &Args) -> Result<(usize, PlacementStrategy, Substrate)> {
     let macros = args.get_usize("macros", 1).map_err(|e| anyhow!(e))?.max(1);
     let placement = match args.get("placement") {
         None => PlacementStrategy::default(),
@@ -243,7 +250,13 @@ fn grid_from_args(args: &Args) -> Result<(usize, PlacementStrategy)> {
             anyhow!("--placement: unknown strategy '{s}' (packed|replicated)")
         })?,
     };
-    Ok((macros, placement))
+    let substrate = match args.get("substrate") {
+        None => Substrate::default(),
+        Some(s) => Substrate::parse(s).ok_or_else(|| {
+            anyhow!("--substrate: unknown substrate '{s}' (packed|scalar)")
+        })?,
+    };
+    Ok((macros, placement, substrate))
 }
 
 /// Parse the fleet flags: `--tenants LIST --fleet-models LIST
@@ -273,9 +286,9 @@ fn fleet_from_args(
 
 /// Grid half of the backend banner — only the cim-sim backend runs on
 /// the simulated macro grid; pjrt/stub silently ignore those options.
-fn grid_banner(kind: BackendKind, grid: (usize, PlacementStrategy)) -> String {
+fn grid_banner(kind: BackendKind, grid: (usize, PlacementStrategy, Substrate)) -> String {
     if kind == BackendKind::CimSim {
-        format!(" ({} macro(s), {})", grid.0, grid.1.label())
+        format!(" ({} macro(s), {}, {} substrate)", grid.0, grid.1.label(), grid.2.label())
     } else {
         String::new()
     }
@@ -307,7 +320,7 @@ fn build_engine(
     kind: BackendKind,
     bits: Option<u8>,
     rt: Option<&Runtime>,
-    grid: (usize, PlacementStrategy),
+    grid: (usize, PlacementStrategy, Substrate),
 ) -> Result<McDropoutEngine> {
     let registry = ModelRegistry::builtin(meta);
     let spec = registry.get(model)?;
@@ -316,6 +329,7 @@ fn build_engine(
         pallas: false,
         macros: grid.0,
         placement: grid.1,
+        substrate: grid.2,
         capacity: None,
     };
     let backend = make_backend(kind, rt, dir, spec, &opts)?;
@@ -561,9 +575,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let is_adaptive = adaptive.is_some();
     let backend = backend_from_args(args)?;
     let (reuse, ordering) = delta_from_args(args)?;
-    let (macros, placement) = grid_from_args(args)?;
+    let (macros, placement, substrate) = grid_from_args(args)?;
     let (tenants, fleet_models, capacity) = fleet_from_args(args)?;
-    println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement)));
+    println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement, substrate)));
     if reuse {
         println!("delta schedule: reuse on, ordering {}", ordering.label());
     }
@@ -577,6 +591,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         bits: (bits > 0).then_some(bits as u8),
         macros,
         placement,
+        substrate,
         adaptive,
         reuse,
         ordering,
@@ -653,7 +668,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let adaptive = adaptive_from_args(args)?;
     let backend = backend_from_args(args)?;
     let (reuse, ordering) = delta_from_args(args)?;
-    let (macros, placement) = grid_from_args(args)?;
+    let (macros, placement, substrate) = grid_from_args(args)?;
     let (tenants, fleet_models, capacity) = fleet_from_args(args)?;
     let listen = args.get_or("listen", "127.0.0.1:7878");
     let admission = AdmissionConfig {
@@ -666,7 +681,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let drain_secs = args.get_usize("drain-secs", 10).map_err(|e| anyhow!(e))?;
     let duration_secs = args.get_usize("duration-secs", 0).map_err(|e| anyhow!(e))?;
 
-    println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement)));
+    println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement, substrate)));
     if reuse {
         println!("delta schedule: reuse on, ordering {}", ordering.label());
     }
@@ -677,6 +692,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         bits: (bits > 0).then_some(bits as u8),
         macros,
         placement,
+        substrate,
         adaptive,
         reuse,
         ordering,

@@ -17,6 +17,7 @@
 //! ADC); `cim::macro_sim` reuses this schedule with the electrical MAV +
 //! SAR models in the loop and must reconstruct the same value.
 
+use super::packed::PackedPlanes;
 use super::quant::QuantTensor;
 
 /// Which operator the schedule implements.
@@ -126,12 +127,76 @@ impl BitplaneSchedule {
         s
     }
 
+    /// Packed fast path of [`Self::plane_sum`]: the same signed plane
+    /// sum computed over word-packed planes with `count_ones` instead
+    /// of a per-lane walk. `active` is the word-packed lane mask (see
+    /// [`crate::operator::packed::pack_mask`]). Bit-identical to the
+    /// scalar loop by construction — every popcounted mask transcribes
+    /// the scalar predicate exactly.
+    pub fn plane_sum_packed(
+        &self,
+        cycle: &Cycle,
+        x: &PackedPlanes,
+        w: &PackedPlanes,
+        active: &[u64],
+    ) -> i32 {
+        assert_eq!(x.lanes(), w.lanes());
+        assert_eq!(x.words(), active.len());
+        let words = x.words();
+        match cycle.kind {
+            CycleKind::SignXWithWPlane(p) => {
+                let wm = w.mag_plane(p);
+                let (mut pos, mut neg) = (0u32, 0u32);
+                for i in 0..words {
+                    let gate = wm[i] & active[i];
+                    pos += (x.pos[i] & gate).count_ones();
+                    neg += (x.neg[i] & gate).count_ones();
+                }
+                pos as i32 - neg as i32
+            }
+            CycleKind::SignWWithXPlane(p) => {
+                let xm = x.mag_plane(p);
+                let (mut pos, mut neg) = (0u32, 0u32);
+                for i in 0..words {
+                    let gate = xm[i] & active[i];
+                    pos += (w.pos[i] & gate).count_ones();
+                    neg += (w.neg[i] & gate).count_ones();
+                }
+                pos as i32 - neg as i32
+            }
+            CycleKind::PlanePair { px, pw } => {
+                let xm = x.mag_plane(px);
+                let wm = w.mag_plane(pw);
+                let (mut pos, mut neg) = (0u32, 0u32);
+                for i in 0..words {
+                    let gate = xm[i] & wm[i] & active[i];
+                    let same = (x.pos[i] & w.pos[i]) | (x.neg[i] & w.neg[i]);
+                    let diff = (x.pos[i] & w.neg[i]) | (x.neg[i] & w.pos[i]);
+                    pos += (same & gate).count_ones();
+                    neg += (diff & gate).count_ones();
+                }
+                pos as i32 - neg as i32
+            }
+        }
+    }
+
     /// Execute the whole schedule with ideal digitization and shift-add
     /// the plane sums back into the operator result.
     pub fn evaluate(&self, x: &QuantTensor, w: &QuantTensor, active: &[bool]) -> f32 {
         self.cycles
             .iter()
             .map(|c| self.plane_sum(c, x, w, active) as f32 * c.scale)
+            .sum()
+    }
+
+    /// Packed [`Self::evaluate`]: identical float accumulation order
+    /// (cycle-order sum), so results are `to_bits`-equal to the scalar
+    /// path, not merely close.
+    pub fn evaluate_packed(&self, x: &QuantTensor, w: &QuantTensor, active: &[u64]) -> f32 {
+        let (xp, wp) = (x.packed(), w.packed());
+        self.cycles
+            .iter()
+            .map(|c| self.plane_sum_packed(c, xp, wp, active) as f32 * c.scale)
             .sum()
     }
 }
@@ -144,16 +209,15 @@ mod tests {
     use crate::util::testkit::{bool_mask, check, f32_vec};
 
     fn masked(t: &QuantTensor, active: &[bool]) -> QuantTensor {
-        QuantTensor {
-            codes: t
-                .codes
+        QuantTensor::new(
+            t.codes
                 .iter()
                 .zip(active)
                 .map(|(&c, &a)| if a { c } else { 0 })
                 .collect(),
-            delta: t.delta,
-            bits: t.bits,
-        }
+            t.delta,
+            t.bits,
+        )
     }
 
     #[test]
@@ -200,6 +264,35 @@ mod tests {
             let got = sched.evaluate(&x, &w, &active);
             let want = conventional_dot_quant(&masked(&x, &active), &masked(&w, &active));
             (got - want).abs() < 1e-3
+        });
+    }
+
+    #[test]
+    fn packed_plane_sums_equal_scalar_bit_for_bit() {
+        use crate::operator::packed::pack_mask;
+        check("packed plane sums == scalar", 60, |rng| {
+            let bits = 2 + rng.below(6) as u8;
+            let n = 1 + rng.below(80) as usize;
+            let q = Quantizer::new(bits);
+            let x = q.quantize(&f32_vec(rng, n, 1.0));
+            let w = q.quantize(&f32_vec(rng, n, 1.0));
+            let active = bool_mask(rng, n, 0.6);
+            let act = pack_mask(&active);
+            for kind in [OperatorKind::MultiplicationFree, OperatorKind::Conventional] {
+                let sched = BitplaneSchedule::new(kind, bits, x.delta, w.delta);
+                for c in &sched.cycles {
+                    if sched.plane_sum(c, &x, &w, &active)
+                        != sched.plane_sum_packed(c, x.packed(), w.packed(), &act)
+                    {
+                        return false;
+                    }
+                }
+                let (a, b) = (sched.evaluate(&x, &w, &active), sched.evaluate_packed(&x, &w, &act));
+                if a.to_bits() != b.to_bits() {
+                    return false;
+                }
+            }
+            true
         });
     }
 

@@ -8,11 +8,17 @@
 //!   `2(n-1)` cycles for the MF operator vs `n^2` for the conventional
 //!   one, and the shift-add recombination that proves the schedule
 //!   computes the same number as the dense form.
+//! * [`packed`] — word-packed bitplane storage ([`packed::PackedPlanes`]):
+//!   sign + magnitude planes as `u64` lane masks, the data layout of the
+//!   bit-parallel substrate (plane sums via `count_ones`, bit-identical
+//!   to the scalar loops).
 
 pub mod bitplane;
 pub mod mf;
+pub mod packed;
 pub mod quant;
 
 pub use bitplane::{BitplaneSchedule, OperatorKind};
 pub use mf::{conventional_dot, mf_dot, mf_matmul, mf_term};
+pub use packed::PackedPlanes;
 pub use quant::{QuantTensor, Quantizer};

@@ -1,0 +1,201 @@
+//! Word-packed bitplane storage — the bit-parallel substrate's data
+//! layout.
+//!
+//! A sign-magnitude code vector decomposes into `bits - 1` magnitude
+//! planes plus a sign plane. The scalar machinery walks those planes
+//! one lane at a time; the packed substrate stores each plane as a run
+//! of `u64` words (lane `i` = bit `i % 64` of word `i / 64`) so a
+//! whole 31-column macro row is one word and a plane sum is a handful
+//! of `AND`s plus `count_ones()` calls.
+//!
+//! Exactness contract: every mask here is a *bit-faithful* transcription
+//! of the scalar predicates (`sign > 0`, `sign < 0`,
+//! `|code| >> p & 1`), so popcounts over packed words equal the scalar
+//! per-lane counts identically — the property `rust/tests/substrate.rs`
+//! drives across random widths, precisions, and dropout masks.
+
+/// Lanes per packed word.
+pub const WORD_BITS: usize = 64;
+
+/// Packed bitplane decomposition of one code vector: sign masks plus
+/// per-plane magnitude masks, padding bits zero by construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedPlanes {
+    /// Lane count (the unpacked vector length).
+    n: usize,
+    /// Words per mask: `ceil(n / 64)`.
+    words: usize,
+    /// Magnitude planes: `bits - 1`.
+    planes: u8,
+    /// Lane `i` set iff `code[i] > 0`.
+    pub pos: Vec<u64>,
+    /// Lane `i` set iff `code[i] < 0`.
+    pub neg: Vec<u64>,
+    /// Plane-major magnitude masks: plane `p` occupies
+    /// `mag[p * words .. (p + 1) * words]`; lane `i` of plane `p` set
+    /// iff `(|code[i]| >> p) & 1 == 1`.
+    pub mag: Vec<u64>,
+}
+
+impl PackedPlanes {
+    /// Decompose `codes` (precision `bits`) into packed planes.
+    pub fn build(codes: &[i32], bits: u8) -> Self {
+        assert!(bits >= 2, "sign-magnitude codes need at least 2 bits");
+        let n = codes.len();
+        let words = words_for(n);
+        let planes = bits - 1;
+        let mut pos = vec![0u64; words];
+        let mut neg = vec![0u64; words];
+        let mut mag = vec![0u64; words * planes as usize];
+        for (i, &c) in codes.iter().enumerate() {
+            let (w, b) = (i / WORD_BITS, i % WORD_BITS);
+            if c > 0 {
+                pos[w] |= 1u64 << b;
+            } else if c < 0 {
+                neg[w] |= 1u64 << b;
+            }
+            let m = c.unsigned_abs();
+            for p in 0..planes {
+                if (m >> p) & 1 == 1 {
+                    mag[p as usize * words + w] |= 1u64 << b;
+                }
+            }
+        }
+        PackedPlanes { n, words, planes, pos, neg, mag }
+    }
+
+    /// Lane count of the unpacked vector.
+    pub fn lanes(&self) -> usize {
+        self.n
+    }
+
+    /// Words per mask.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Magnitude planes carried: `bits - 1`.
+    pub fn planes(&self) -> u8 {
+        self.planes
+    }
+
+    /// Magnitude plane `p` as its word run.
+    #[inline]
+    pub fn mag_plane(&self, p: u8) -> &[u64] {
+        assert!(p < self.planes, "plane {p} out of range ({} planes)", self.planes);
+        let w = self.words;
+        &self.mag[p as usize * w..(p as usize + 1) * w]
+    }
+}
+
+/// Words needed to pack `n` lanes.
+#[inline]
+pub fn words_for(n: usize) -> usize {
+    n.div_ceil(WORD_BITS)
+}
+
+/// Pack a bool lane mask (e.g. `col_active`) into words, padding zero.
+pub fn pack_mask(mask: &[bool]) -> Vec<u64> {
+    let mut out = vec![0u64; words_for(mask.len())];
+    for (i, &m) in mask.iter().enumerate() {
+        if m {
+            out[i / WORD_BITS] |= 1u64 << (i % WORD_BITS);
+        }
+    }
+    out
+}
+
+/// All-ones over `n` lanes (padding bits zero) — the packed form of a
+/// stored-all-true macro row.
+pub fn ones_mask(n: usize) -> Vec<u64> {
+    let words = words_for(n);
+    let mut out = vec![u64::MAX; words];
+    let tail = n % WORD_BITS;
+    if tail != 0 {
+        out[words - 1] = (1u64 << tail) - 1;
+    }
+    if n == 0 {
+        out.clear();
+    }
+    out
+}
+
+/// Popcount of `a & b` over equal-length word runs.
+#[inline]
+pub fn and_count(a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operator::quant::Quantizer;
+    use crate::util::testkit::{bool_mask, check, f32_vec};
+
+    #[test]
+    fn planes_transcribe_scalar_predicates() {
+        check("packed == scalar predicates", 60, |rng| {
+            let bits = 2 + rng.below(7) as u8;
+            let n = 1 + rng.below(100) as usize;
+            let t = Quantizer::new(bits).quantize(&f32_vec(rng, n, 1.0));
+            let p = PackedPlanes::build(&t.codes, bits);
+            (0..n).all(|i| {
+                let (w, b) = (i / WORD_BITS, i % WORD_BITS);
+                let pos = (p.pos[w] >> b) & 1 == 1;
+                let neg = (p.neg[w] >> b) & 1 == 1;
+                if pos != (t.codes[i] > 0) || neg != (t.codes[i] < 0) {
+                    return false;
+                }
+                (0..bits - 1).all(|pl| {
+                    ((p.mag_plane(pl)[w] >> b) & 1 == 1) == (t.magnitude_bit(i, pl) == 1)
+                })
+            })
+        });
+    }
+
+    #[test]
+    fn padding_bits_stay_zero() {
+        check("padding zero", 40, |rng| {
+            let bits = 2 + rng.below(7) as u8;
+            let n = 1 + rng.below(130) as usize;
+            let t = Quantizer::new(bits).quantize(&f32_vec(rng, n, 1.0));
+            let p = PackedPlanes::build(&t.codes, bits);
+            let pad = ones_mask(n);
+            let clean = |v: &[u64]| v.iter().zip(&pad).all(|(&x, &m)| x & !m == 0);
+            clean(&p.pos) && clean(&p.neg) && p.mag.chunks(p.words()).all(clean)
+        });
+    }
+
+    #[test]
+    fn mask_helpers_round_trip() {
+        check("pack_mask round trip", 40, |rng| {
+            let n = 1 + rng.below(200) as usize;
+            let m = bool_mask(rng, n, 0.5);
+            let packed = pack_mask(&m);
+            let want = m.iter().filter(|&&b| b).count() as u32;
+            and_count(&packed, &ones_mask(n)) == want
+                && (0..n).all(|i| {
+                    ((packed[i / WORD_BITS] >> (i % WORD_BITS)) & 1 == 1) == m[i]
+                })
+        });
+    }
+
+    #[test]
+    fn ones_mask_counts_lanes() {
+        for n in [0usize, 1, 31, 63, 64, 65, 127, 128, 200] {
+            let m = ones_mask(n);
+            assert_eq!(m.iter().map(|w| w.count_ones()).sum::<u32>(), n as u32, "n={n}");
+            assert_eq!(m.len(), words_for(n));
+        }
+    }
+
+    #[test]
+    fn signs_are_disjoint() {
+        let t = Quantizer::new(4).quantize(&[0.9, -0.9, 0.0, 0.2, -0.1]);
+        let p = PackedPlanes::build(&t.codes, 4);
+        assert_eq!(and_count(&p.pos, &p.neg), 0, "a lane is never both signs");
+        assert_eq!(p.lanes(), 5);
+        assert_eq!(p.planes(), 3);
+    }
+}

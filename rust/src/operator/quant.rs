@@ -7,6 +7,9 @@
 //! `kernels.ref.quantize_ref` used when evaluating precision sweeps
 //! (Fig. 11, Fig. 12(e), Fig. 13(e)), so both layers agree bit-for-bit.
 
+use crate::operator::packed::PackedPlanes;
+use std::sync::OnceLock;
+
 /// Symmetric per-tensor quantizer for `bits >= 2`.
 #[derive(Clone, Copy, Debug)]
 pub struct Quantizer {
@@ -14,6 +17,12 @@ pub struct Quantizer {
 }
 
 /// A quantized tensor: integer codes plus the shared scale.
+///
+/// Carries a lazily-built word-packed bitplane decomposition
+/// ([`PackedPlanes`]) for the bit-parallel substrate — built once on
+/// first use and cached. Construct through [`QuantTensor::new`]; code
+/// that mutates `codes` in place afterwards must call
+/// [`QuantTensor::invalidate_packed`] or the cache goes stale.
 #[derive(Clone, Debug)]
 pub struct QuantTensor {
     /// Signed integer codes, |code| <= 2^(bits-1) - 1.
@@ -22,6 +31,8 @@ pub struct QuantTensor {
     pub delta: f32,
     /// Precision in bits (sign + magnitude).
     pub bits: u8,
+    /// Packed sign + magnitude planes of `codes` (delta-independent).
+    packed: OnceLock<PackedPlanes>,
 }
 
 impl Quantizer {
@@ -54,7 +65,7 @@ impl Quantizer {
             .iter()
             .map(|&x| (x / delta).round().clamp(-qmax, qmax) as i32)
             .collect();
-        QuantTensor { codes, delta, bits: self.bits }
+        QuantTensor::new(codes, delta, self.bits)
     }
 
     /// Fake-quantize in place: snap floats to the mid-tread grid (zero
@@ -94,6 +105,26 @@ impl Quantizer {
 }
 
 impl QuantTensor {
+    /// Wrap integer codes as a quantized tensor (packed planes built
+    /// lazily on first [`Self::packed`] call).
+    pub fn new(codes: Vec<i32>, delta: f32, bits: u8) -> Self {
+        QuantTensor { codes, delta, bits, packed: OnceLock::new() }
+    }
+
+    /// The word-packed bitplane decomposition of `codes`, built once
+    /// and cached (thread-safe: concurrent first calls race benignly
+    /// on identical values).
+    pub fn packed(&self) -> &PackedPlanes {
+        self.packed.get_or_init(|| PackedPlanes::build(&self.codes, self.bits))
+    }
+
+    /// Drop the cached packed planes. Must follow any in-place
+    /// mutation of `codes` (`delta`-only changes don't need it — the
+    /// packing is delta-independent).
+    pub fn invalidate_packed(&mut self) {
+        self.packed.take();
+    }
+
     /// Dequantize back to floats.
     pub fn dequantize(&self) -> Vec<f32> {
         self.codes.iter().map(|&c| c as f32 * self.delta).collect()
@@ -184,6 +215,19 @@ mod tests {
     #[should_panic]
     fn rejects_1_bit() {
         Quantizer::new(1);
+    }
+
+    #[test]
+    fn packed_cache_rebuilds_after_invalidation() {
+        let q = Quantizer::new(4);
+        let mut t = q.quantize(&[0.5, -0.5, 0.25, 0.0]);
+        let before = t.packed().clone();
+        assert_eq!(t.packed(), &before, "cache is stable across calls");
+        t.codes[3] = 3;
+        t.invalidate_packed();
+        let after = t.packed();
+        assert_ne!(&before, after, "mutation + invalidate must rebuild");
+        assert_eq!(after.lanes(), 4);
     }
 
     #[test]

@@ -111,7 +111,7 @@ fn reference_forward(
             let mut xcodes = vec![0i32; MACRO_COLS];
             xcodes[..hi - lo].copy_from_slice(&xq.codes[lo..hi]);
             let col_active: Vec<bool> = xcodes.iter().map(|&c| c != 0).collect();
-            let xt = QuantTensor { codes: xcodes, delta: xq.delta, bits };
+            let xt = QuantTensor::new(xcodes, xq.delta, bits);
             // same row-block iteration order as the macro tiling
             for rb in (0..fo).step_by(MACRO_ROWS) {
                 for j in rb..(rb + MACRO_ROWS).min(fo) {
@@ -122,7 +122,7 @@ fn reference_forward(
                     for (k, i) in (lo..hi).enumerate() {
                         wcodes[k] = wq.codes[i * fo + j];
                     }
-                    let wt = QuantTensor { codes: wcodes, delta: wq.delta, bits };
+                    let wt = QuantTensor::new(wcodes, wq.delta, bits);
                     let sched = BitplaneSchedule::new(
                         OperatorKind::MultiplicationFree,
                         bits,

@@ -39,7 +39,12 @@ fn def(id: &str, dims: &[usize], seed: u64) -> FleetModelDef {
 }
 
 fn fleet(capacity: usize) -> (FleetPlacement, Vec<CimSimBackend>) {
-    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity };
+    let cfg = GridConfig {
+        macros: 2,
+        placement: PlacementStrategy::Packed,
+        capacity,
+        ..GridConfig::default()
+    };
     FleetPlacement::co_place(
         vec![def("a", &DIMS_A, 11), def("b", &DIMS_B, 22)],
         6,
@@ -49,7 +54,12 @@ fn fleet(capacity: usize) -> (FleetPlacement, Vec<CimSimBackend>) {
 }
 
 fn dedicated(id: &str, dims: &[usize], seed: u64, capacity: usize) -> CimSimBackend {
-    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity };
+    let cfg = GridConfig {
+        macros: 2,
+        placement: PlacementStrategy::Packed,
+        capacity,
+        ..GridConfig::default()
+    };
     let spec = ModelSpec::synthetic(id, dims.to_vec());
     CimSimBackend::from_params_grid(&spec, layer_params(dims, seed), 6, cfg).unwrap()
 }

@@ -125,7 +125,12 @@ fn every_tile_is_placed_exactly_once_within_capacity() {
 
 #[test]
 fn capacity_overflow_spills_and_prices_reloads() {
-    let cfg = GridConfig { macros: 2, placement: PlacementStrategy::Packed, capacity: 1 };
+    let cfg = GridConfig {
+        macros: 2,
+        placement: PlacementStrategy::Packed,
+        capacity: 1,
+        ..GridConfig::default()
+    };
     let b = backend(&DIMS, cfg);
     assert_eq!(b.grid().spilled_tiles(), 6 - 2);
     let mut rng = Pcg32::seeded(5);

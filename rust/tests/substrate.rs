@@ -1,0 +1,232 @@
+//! Substrate A/B property tests: the packed bit-parallel macro inner
+//! loop must be indistinguishable from the scalar bit-serial reference
+//! everywhere — `to_bits`-identical outputs, identical cost counters
+//! and identical measured energy — across random geometries, bit
+//! depths and dropout masks, on all four execution paths (dense rows,
+//! delta plan, streaming session, multi-macro grid). No artifacts
+//! needed.
+
+use mc_cim::backend::{
+    CimSimBackend, ExecutionBackend, GridConfig, LayerParams, Row, Substrate,
+};
+use mc_cim::cim::grid::PlacementStrategy;
+use mc_cim::coordinator::{DeltaScheduleConfig, McDropoutEngine, McOutput};
+use mc_cim::dropout::plan::OrderingMode;
+use mc_cim::energy::ModeConfig;
+use mc_cim::model::ModelSpec;
+use mc_cim::rng::IdealBernoulli;
+use mc_cim::util::testkit::{binary_masks, f32_vec};
+use mc_cim::util::Pcg32;
+
+fn layer_params(dims: &[usize], seed: u64) -> Vec<LayerParams> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..dims.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (dims[l], dims[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.25; fo],
+            }
+        })
+        .collect()
+}
+
+fn grid_cfg(substrate: Substrate, macros: usize, placement: PlacementStrategy) -> GridConfig {
+    GridConfig { substrate, ..GridConfig::with_macros(macros, placement) }
+}
+
+fn backend(dims: &[usize], bits: u8, seed: u64, cfg: GridConfig) -> CimSimBackend {
+    let spec = ModelSpec::synthetic("substrate-test", dims.to_vec());
+    CimSimBackend::from_params_grid(&spec, layer_params(dims, seed), bits, cfg).unwrap()
+}
+
+fn engine(dims: &[usize], bits: u8, seed: u64, cfg: GridConfig, reuse: bool) -> McDropoutEngine {
+    let spec = ModelSpec::synthetic("substrate-test", dims.to_vec());
+    let b = CimSimBackend::from_params_grid(&spec, layer_params(dims, seed), bits, cfg).unwrap();
+    let mut e = McDropoutEngine::with_backend(
+        Box::new(b),
+        &spec,
+        Some(bits),
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    if reuse {
+        e.set_delta_schedule(DeltaScheduleConfig {
+            reuse: true,
+            ordering: OrderingMode::Nn2Opt,
+            cache: None,
+        });
+    }
+    e
+}
+
+fn mask_dims(dims: &[usize]) -> Vec<usize> {
+    dims[1..dims.len() - 1].to_vec()
+}
+
+fn assert_outputs_bit_equal(a: &[Vec<f32>], b: &[Vec<f32>], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: row count");
+    for (r, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{label}: row {r} width");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: row {r} out[{j}] differs ({va} vs {vb})"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------
+// 1. dense path — random geometry / bit depth / masks
+// ---------------------------------------------------------------
+
+#[test]
+fn dense_rows_agree_across_substrates_for_random_geometries() {
+    // widths straddle the 31-column tile and (packed) the word
+    // boundary after zero-padding; depths exercise both schedules'
+    // plane counts
+    let cases: [(&[usize], u8); 4] = [
+        (&[7, 5, 3], 3),
+        (&[31, 16, 4], 4),
+        (&[40, 24, 12, 6], 6),
+        (&[65, 33, 9], 5),
+    ];
+    for (case, (dims, bits)) in cases.into_iter().enumerate() {
+        let seed = 900 + case as u64;
+        let scalar =
+            backend(dims, bits, seed, grid_cfg(Substrate::Scalar, 1, PlacementStrategy::Packed));
+        let packed =
+            backend(dims, bits, seed, grid_cfg(Substrate::Packed, 1, PlacementStrategy::Packed));
+        let mut rng = Pcg32::seeded(seed);
+        let input = f32_vec(&mut rng, dims[0], 1.0);
+        let masks: Vec<Vec<Vec<f32>>> =
+            (0..6).map(|_| binary_masks(&mut rng, &mask_dims(dims), 0.5)).collect();
+        let rows: Vec<Row<'_>> = masks
+            .iter()
+            .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+            .collect();
+        let want = scalar.execute_rows(&rows).unwrap();
+        let got = packed.execute_rows(&rows).unwrap();
+        let label = format!("dense case {case} bits={bits}");
+        assert_outputs_bit_equal(&want.outputs, &got.outputs, &label);
+        let (ws, gs) = (want.stats.as_ref().unwrap(), got.stats.as_ref().unwrap());
+        assert_eq!(ws.compute_cycles, gs.compute_cycles, "{label}");
+        assert_eq!(ws.driven_col_cycles, gs.driven_col_cycles, "{label}");
+        assert_eq!(ws.adc_conversions, gs.adc_conversions, "{label}");
+        assert_eq!(ws.adc_cycles, gs.adc_cycles, "{label}");
+        assert_eq!(
+            want.energy_pj.unwrap().to_bits(),
+            got.energy_pj.unwrap().to_bits(),
+            "{label}: measured energy must not depend on the substrate"
+        );
+        // the per-call grid accounting tags the substrate that ran it
+        assert_eq!(want.grid.unwrap().substrate, Substrate::Scalar);
+        assert_eq!(got.grid.unwrap().substrate, Substrate::Packed);
+    }
+}
+
+// ---------------------------------------------------------------
+// 2. plan/delta path
+// ---------------------------------------------------------------
+
+fn run_planned(dims: &[usize], substrate: Substrate, samples: usize) -> McOutput {
+    let e = engine(dims, 6, 7, grid_cfg(substrate, 1, PlacementStrategy::Packed), true);
+    let mut rng = Pcg32::seeded(31);
+    let input = f32_vec(&mut rng, dims[0], 1.0);
+    let mut src = IdealBernoulli::new(e.mask_keep(), 4242);
+    e.infer_mc(&input, samples, &mut src).unwrap()
+}
+
+#[test]
+fn planned_outputs_agree_across_substrates() {
+    let dims = [40usize, 24, 12, 6];
+    let want = run_planned(&dims, Substrate::Scalar, 12);
+    let got = run_planned(&dims, Substrate::Packed, 12);
+    assert!(want.plan.is_some(), "reuse engine must run planned");
+    assert_outputs_bit_equal(&want.samples, &got.samples, "plan");
+    assert_eq!(
+        want.energy_pj.to_bits(),
+        got.energy_pj.to_bits(),
+        "plan: measured energy must not depend on the substrate"
+    );
+}
+
+// ---------------------------------------------------------------
+// 3. streaming path
+// ---------------------------------------------------------------
+
+#[test]
+fn stream_frames_agree_across_substrates() {
+    let dims = [40usize, 24, 12, 6];
+    let mut rng = Pcg32::seeded(51);
+    let mut x = f32_vec(&mut rng, dims[0], 1.0);
+    let mut frames = Vec::new();
+    for _ in 0..5 {
+        frames.push(x.clone());
+        for v in x.iter_mut() {
+            *v = (*v + 0.03 * (rng.uniform(-1.0, 1.0) as f32)).clamp(-1.0, 1.0);
+        }
+    }
+    let run = |substrate: Substrate| -> Vec<McOutput> {
+        let e = engine(&dims, 6, 7, grid_cfg(substrate, 1, PlacementStrategy::Packed), true);
+        let mut sess = e.begin_session(0.0);
+        let mut src = IdealBernoulli::new(e.mask_keep(), 4242);
+        frames.iter().map(|x| e.infer_mc_stream(x, 10, &mut src, &mut sess).unwrap()).collect()
+    };
+    let want = run(Substrate::Scalar);
+    let got = run(Substrate::Packed);
+    for (f, (w, g)) in want.iter().zip(&got).enumerate() {
+        assert_outputs_bit_equal(&w.samples, &g.samples, &format!("stream frame {f}"));
+    }
+    // warm frames really exercised the cross-frame delta sessions
+    assert!(got.last().unwrap().stream.as_ref().unwrap().schedule_reused);
+}
+
+// ---------------------------------------------------------------
+// 4. multi-macro grid path
+// ---------------------------------------------------------------
+
+#[test]
+fn grid_execution_agrees_across_substrates() {
+    let dims = [40usize, 24, 12, 6];
+    let mut rng = Pcg32::seeded(13);
+    let input = f32_vec(&mut rng, dims[0], 1.0);
+    let masks: Vec<Vec<Vec<f32>>> =
+        (0..8).map(|_| binary_masks(&mut rng, &mask_dims(&dims), 0.5)).collect();
+    let rows: Vec<Row<'_>> = masks
+        .iter()
+        .map(|ms| Row { input: &input, masks: ms, sampled_masks: true })
+        .collect();
+    for (macros, placement) in
+        [(2, PlacementStrategy::Packed), (4, PlacementStrategy::Replicated)]
+    {
+        let scalar = backend(&dims, 6, 7, grid_cfg(Substrate::Scalar, macros, placement));
+        let packed = backend(&dims, 6, 7, grid_cfg(Substrate::Packed, macros, placement));
+        assert_eq!(scalar.grid().substrate(), Substrate::Scalar);
+        assert_eq!(packed.grid().substrate(), Substrate::Packed);
+        let want = scalar.execute_rows(&rows).unwrap();
+        let got = packed.execute_rows(&rows).unwrap();
+        let label = format!("grid M={macros} {}", placement.label());
+        assert_outputs_bit_equal(&want.outputs, &got.outputs, &label);
+        // every macro's ledger matches, not just the totals
+        let (sg, pg) = (scalar.grid().stats(), packed.grid().stats());
+        assert_eq!(sg.macros(), pg.macros(), "{label}");
+        for m in 0..sg.macros() {
+            assert_eq!(
+                sg.per_macro[m].compute_cycles, pg.per_macro[m].compute_cycles,
+                "{label}: macro {m}"
+            );
+            assert_eq!(
+                sg.per_macro[m].adc_cycles, pg.per_macro[m].adc_cycles,
+                "{label}: macro {m}"
+            );
+            assert_eq!(
+                sg.per_macro[m].driven_col_cycles, pg.per_macro[m].driven_col_cycles,
+                "{label}: macro {m}"
+            );
+        }
+    }
+}
