@@ -10,6 +10,7 @@
 mod harness;
 
 use harness::BenchReport;
+use mc_cim::cim::NonIdealityConfig;
 use mc_cim::rng::{calibrate, estimate_p1, CciRng, SramEmbeddedRng};
 use mc_cim::util::stats::{histogram, mean, std_dev};
 
@@ -64,6 +65,32 @@ fn main() {
             .num(&format!("t{:02}_sigma", (target * 100.0) as u32), std_dev(&p1s));
         println!(
             "  target {target}: mean {:.3} sigma {:.3}",
+            mean(&p1s),
+            std_dev(&p1s)
+        );
+    }
+
+    println!("\n== §VI knob: calibrated population under --ni-rng-delta ==");
+    // the RNG-miscalibration ablation shares the stack-wide
+    // NonIdealityConfig (what the coordinator's mask source applies as
+    // `keep + rng_delta`) rather than bench-local offsets: calibrate
+    // each instance population to the *miscalibrated* firing point and
+    // report where it actually lands
+    for delta in [0.0, 0.05, 0.10] {
+        let ni = NonIdealityConfig { rng_delta: delta, ..Default::default() };
+        let target = (0.5 + ni.rng_delta).clamp(0.0, 1.0);
+        let p1s: Vec<f64> = (0..N)
+            .map(|i| {
+                let mut r = SramEmbeddedRng::sample_instance(16, 12_000 + i);
+                calibrate(&mut r, target, 0.06, 4).measured_p1
+            })
+            .collect();
+        report
+            .num(&format!("rngdelta{:02}_mean", (delta * 100.0) as u32), mean(&p1s))
+            .num(&format!("rngdelta{:02}_sigma", (delta * 100.0) as u32), std_dev(&p1s));
+        println!(
+            "  {} -> achieved mean {:.3} sigma {:.3}",
+            ni.label(),
             mean(&p1s),
             std_dev(&p1s)
         );

@@ -12,6 +12,7 @@ mod harness;
 use harness::BenchReport;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
+use mc_cim::cim::NonIdealityConfig;
 use mc_cim::energy::EnergyParams;
 use mc_cim::rng::{DropoutBitSource, IdealBernoulli};
 use mc_cim::util::Pcg32;
@@ -55,12 +56,22 @@ fn main() {
 
     println!("\n== Fig 5(d): expected SAR cycles per conversion ==");
     println!("  operating point        levels  sym   asym-median  asym-optimal  savings");
-    for (tag, label, p_each) in [
-        ("typical", "typical (p=0.5 drive)", 0.125),
-        ("reuse", "compute reuse", 0.08),
-        ("reuse_ordered", "reuse + ordering", 0.055),
+    // operating points expressed through the stack-wide §VI knob
+    // (NonIdealityConfig, the same struct `--ni-mav` / BackendOptions
+    // carry) instead of bench-local magic numbers; the last row is the
+    // skewed-device ablation point the dropout-zoo bench also sweeps
+    let op = |p_pos: f64, p_neg: f64| NonIdealityConfig {
+        mav_p_pos: p_pos,
+        mav_p_neg: p_neg,
+        ..Default::default()
+    };
+    for (tag, label, ni) in [
+        ("typical", "typical (p=0.5 drive)", op(0.125, 0.125)),
+        ("reuse", "compute reuse", op(0.08, 0.08)),
+        ("reuse_ordered", "reuse + ordering", op(0.055, 0.055)),
+        ("mav_skew", "§VI skewed device", op(0.25, 0.04)),
     ] {
-        let m = MavModel::trinomial(31, p_each, p_each);
+        let m = MavModel::trinomial(31, ni.mav_p_pos, ni.mav_p_neg);
         let sym = SarAdc::new(AdcKind::Symmetric, &m).expected_cycles(&m);
         let med = SarAdc::new(AdcKind::AsymmetricMedian, &m).expected_cycles(&m);
         let opt = SarAdc::new(AdcKind::AsymmetricOptimal, &m).expected_cycles(&m);

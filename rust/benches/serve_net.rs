@@ -109,6 +109,7 @@ fn drive_conn(addr: std::net::SocketAddr, idx: usize) -> (Latencies, usize, usiz
                         input: vo_input(&mut rng),
                         tenant: None,
                         priority: Priority::Normal,
+                        dropout_kind: None,
                     },
                     kind: RequestKind::Regress,
                     session: "bench".into(),
@@ -201,6 +202,7 @@ fn phase_stream_saving(dir: &Path, report: &mut BenchReport) {
                     input: x.clone(),
                     tenant: None,
                     priority: Priority::Normal,
+                    dropout_kind: None,
                 },
                 kind: RequestKind::Regress,
                 session: "drone".into(),

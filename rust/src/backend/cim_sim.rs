@@ -94,6 +94,8 @@ use super::{
 use crate::cim::grid::{LayerTiles, MacroGrid, TileScheduler};
 use crate::cim::macro_sim::MacroRunStats;
 use crate::cim::xadc::AdcKind;
+use crate::cim::NonIdealityConfig;
+use crate::dropout::kind::DropoutKind;
 use crate::dropout::mask::DropoutMask;
 use crate::energy::{ChipEnergyReport, EnergyModel};
 use crate::error::McCimError;
@@ -163,6 +165,20 @@ pub struct CimSimBackend {
     /// Fans rows / tile calls across the grid, order-preserving.
     sched: TileScheduler,
     energy: EnergyModel,
+    /// The served model's mask granularity. Prices dense-path RNG
+    /// draws (`execute_rows` masks arrive pre-expanded to unit space);
+    /// planned paths carry their own [`PlanMasking`]
+    /// (`crate::dropout::PlanMasking`) and ignore this.
+    kind: DropoutKind,
+    /// §VI device non-ideality point of the grid (MAV variation is
+    /// baked into every macro at grid build; `adc_sigma` applies here).
+    non_ideality: NonIdealityConfig,
+    /// Fixed-pattern xADC offsets, `N(0,1)` per (layer, output), drawn
+    /// once at build (empty when `adc_sigma == 0`). Converter offset
+    /// is a static mismatch, not per-conversion noise — modeling it as
+    /// a constant per output also keeps dense and delta paths
+    /// bit-identical: both add the same value at the same site.
+    adc_offsets: Vec<Vec<f32>>,
 }
 
 impl CimSimBackend {
@@ -240,6 +256,23 @@ impl CimSimBackend {
         layer_base: usize,
     ) -> Self {
         let sched = TileScheduler::new(grid.macros());
+        let non_ideality = grid.non_ideality();
+        // per-(layer, output) N(0,1) draws, seeded by geometry only, so
+        // every backend of this model (any macro count / substrate)
+        // sees the identical offset pattern
+        let adc_offsets: Vec<Vec<f32>> = if non_ideality.adc_sigma != 0.0 {
+            prepared
+                .iter()
+                .enumerate()
+                .map(|(l, layer)| {
+                    let mut rng =
+                        crate::util::Pcg32::seeded(0xADC0_0FF5 ^ ((l as u64) << 32 | layer.fo as u64));
+                    (0..layer.fo).map(|_| rng.normal() as f32).collect()
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
         CimSimBackend {
             model: spec.id.clone(),
             dims: spec.dims.clone(),
@@ -251,6 +284,9 @@ impl CimSimBackend {
             layer_base,
             sched,
             energy: EnergyModel::paper_default(),
+            kind: spec.dropout_kind,
+            non_ideality,
+            adc_offsets,
         }
     }
 
@@ -438,6 +474,24 @@ impl CimSimBackend {
         acc
     }
 
+    /// Add the xADC fixed-pattern offsets to one layer's macro
+    /// accumulator: `acc[j] += off[l][j] · sigma · lsb`, with one
+    /// product LSB (`x_delta · w_delta`) as the offset unit, so sigma
+    /// is "offset in LSBs" regardless of layer scaling. Dense and
+    /// delta paths call this at matched accumulator sites with the
+    /// same grid step, which keeps them `to_bits`-identical even with
+    /// noise on.
+    fn apply_adc_offsets(&self, l: usize, x_delta: f32, acc: &mut [f32]) {
+        if self.non_ideality.adc_sigma == 0.0 {
+            return;
+        }
+        let sigma = self.non_ideality.adc_sigma as f32;
+        let lsb = x_delta * self.layers[l].w_delta;
+        for (j, a) in acc.iter_mut().enumerate() {
+            *a += self.adc_offsets[l][j] * sigma * lsb;
+        }
+    }
+
     /// Gated-row mask for layer `l` (the output layer has no dropout).
     fn layer_row_active(&self, l: usize, masks: &[Vec<f32>]) -> Vec<bool> {
         let last = self.layers.len() - 1;
@@ -480,6 +534,7 @@ impl CimSimBackend {
             // no conversion (the §III energy win)
             let row_active = self.layer_row_active(l, masks);
             let mut acc = self.layer_matvec(l, &xq, &row_active, stats, fan_tiles);
+            self.apply_adc_offsets(l, xq.delta, &mut acc);
             self.digital_chain(l, &mut acc, masks);
             h = acc;
         }
@@ -917,9 +972,14 @@ impl CimSimBackend {
         let mut delta_cost = 0.0f64;
         let mut dense_cost = 0.0f64;
         for row in &plan.rows {
+            // masks live in the plan's group space: expand to the unit
+            // gates (dense work) and toggled unit columns (delta work).
+            // Scale gates nothing — its delta sets expand empty, so
+            // delta execution correctly prices near zero.
             let masks = row.masks();
-            let (full_blocks, full_cols) = profile(&masks[0]);
-            let rows_active = if 1 < last { masks[1].active_count() as f64 } else { fo };
+            let (full_blocks, full_cols) = profile(&plan.masking.gate(0, &masks[0]));
+            let rows_active =
+                if 1 < last { plan.masking.unit_active(1, &masks[1]) as f64 } else { fo };
             // dense layer_matvec runs correlate over EVERY column block
             // (the ADC converts per active row per cycle in each of
             // them, driven columns or not) — only the drives scale with
@@ -928,8 +988,8 @@ impl CimSimBackend {
             let (d_blocks, d_cols) = match row {
                 PlanRow::Full { .. } => (full_blocks, full_cols),
                 PlanRow::Delta { added, dropped, .. } => {
-                    let (ab, ac) = profile(&added[0]);
-                    let (db, dc) = profile(&dropped[0]);
+                    let (ab, ac) = profile(&plan.masking.delta_gate(0, &added[0]));
+                    let (db, dc) = profile(&plan.masking.delta_gate(0, &dropped[0]));
                     (ab + db, ac + dc)
                 }
             };
@@ -946,7 +1006,7 @@ impl CimSimBackend {
         row: &PlanRow,
         stats: &mut MacroRunStats,
     ) -> Result<Vec<f32>, McCimError> {
-        let masks_f32: Vec<Vec<f32>> = row.masks().iter().map(|m| m.to_f32()).collect();
+        let masks_f32: Vec<Vec<f32>> = plan.masking.masks_f32(row.masks());
         let last = self.layers.len() - 1;
 
         // layer 0: product-sums are frame-static — built (or synced to
@@ -973,11 +1033,14 @@ impl CimSimBackend {
         }
         let mut acc1 = if sess.l1_delta == Some(true) {
             let mut st = sess.l1.take().expect("delta state initialized with the decision");
-            // deltas are taken against the *maintained* mask (the
+            // deltas are taken against the *maintained* unit gate (the
             // previous row within a frame, the previous frame's last
             // row across a session boundary), not against the plan's
-            // precomputed sets — a replayed schedule chains exactly
-            let target = &row.masks()[0];
+            // precomputed sets — a replayed schedule chains exactly.
+            // The gate expansion makes this kind-agnostic: Scale's
+            // all-ones gate yields empty deltas after the first row,
+            // a spatial group toggle yields its whole channel block.
+            let target = plan.masking.gate(0, &row.masks()[0]);
             let added = target.newly_active(&st.cur);
             let dropped = target.newly_dropped(&st.cur);
             if added.active_count() > 0 {
@@ -986,14 +1049,18 @@ impl CimSimBackend {
             if dropped.active_count() > 0 {
                 self.plane_apply(1, &mut st.ps, &dropped, -1, stats);
             }
-            st.cur = target.clone();
-            let acc1 = Self::plane_reconstruct(&st.ps);
+            st.cur = target;
+            let x_delta = st.ps.xt[0].delta;
+            let mut acc1 = Self::plane_reconstruct(&st.ps);
+            self.apply_adc_offsets(1, x_delta, &mut acc1);
             sess.l1 = Some(st);
             acc1
         } else {
             let xq = self.quantize_layer_input(1, &h);
             let row_active = self.layer_row_active(1, &masks_f32);
-            self.layer_matvec(1, &xq, &row_active, stats, true)
+            let mut acc1 = self.layer_matvec(1, &xq, &row_active, stats, true);
+            self.apply_adc_offsets(1, xq.delta, &mut acc1);
+            acc1
         };
         self.digital_chain(1, &mut acc1, &masks_f32);
         h = acc1;
@@ -1004,6 +1071,7 @@ impl CimSimBackend {
             let xq = self.quantize_layer_input(l, &h);
             let row_active = self.layer_row_active(l, &masks_f32);
             let mut acc = self.layer_matvec(l, &xq, &row_active, stats, true);
+            self.apply_adc_offsets(l, xq.delta, &mut acc);
             self.digital_chain(l, &mut acc, &masks_f32);
             h = acc;
         }
@@ -1052,14 +1120,19 @@ impl ExecutionBackend for CimSimBackend {
         if plan.input.len() != self.dims[0] {
             return Err(self.err("input dim mismatch".into()));
         }
-        let mask_dims = self.mask_dims();
+        // plan masks live in the granularity's group space; the plan's
+        // own masking descriptor must agree with the model geometry
+        if plan.masking.unit_dims != self.mask_dims() {
+            return Err(self.err("plan masking does not match the model's hidden layers".into()));
+        }
+        let group_dims = plan.masking.group_dims();
         for row in &plan.rows {
             let masks = row.masks();
-            if masks.len() != mask_dims.len() {
+            if masks.len() != group_dims.len() {
                 return Err(self.err("mask count mismatch".into()));
             }
             for (l, m) in masks.iter().enumerate() {
-                if m.len() != mask_dims[l] {
+                if m.len() != group_dims[l] {
                     return Err(self.err("mask dim mismatch".into()));
                 }
             }
@@ -1084,14 +1157,20 @@ impl ExecutionBackend for CimSimBackend {
                     "plan session must start with a Full row (fresh state got a Delta)".into(),
                 ));
             }
-            let (l0, acc0) = self.l0_init(&plan.input, &mut stats);
+            let (l0, mut acc0) = self.l0_init(&plan.input, &mut stats);
+            // layer-0 offsets are baked into the session accumulator:
+            // it is cloned per row, so every instance (and the derived
+            // static layer-1 input) sees the same noisy value the
+            // dense path computes
+            self.apply_adc_offsets(0, l0.ps.xt[0].delta, &mut acc0);
             sess.l0 = Some(l0);
             sess.acc0 = Some(acc0);
         } else {
             let l0 = sess.l0.as_mut().expect("checked above");
             let (ds, acc0_stale) = self.l0_sync(l0, &plan.input, plan.epsilon, &mut stats);
             if acc0_stale {
-                let acc0 = Self::plane_reconstruct(&l0.ps);
+                let mut acc0 = Self::plane_reconstruct(&l0.ps);
+                self.apply_adc_offsets(0, l0.ps.xt[0].delta, &mut acc0);
                 if sess.l1_delta == Some(true) {
                     let st = sess.l1.as_mut().expect("delta state follows the decision");
                     self.l1_sync(st, &acc0, &mut stats);
@@ -1105,8 +1184,10 @@ impl ExecutionBackend for CimSimBackend {
             outputs.push(self.forward_row_planned(sess, plan, row, &mut stats)?);
         }
         // mask bits: online RNG draws, or SRAM schedule reads when the
-        // masks came from a precomputed (cached) schedule (§IV-B)
-        let mask_bits = plan.rows.len() as u64 * mask_dims.iter().sum::<usize>() as u64;
+        // masks came from a precomputed (cached) schedule (§IV-B) —
+        // priced in group space, so coarse kinds pay for exactly the
+        // bits they drew (Scale: one per layer per instance)
+        let mask_bits = plan.rows.len() as u64 * plan.masking.bits_per_instance();
         let (rng_bits, sched_bits) = if plan.sampled { (mask_bits, 0) } else { (0, mask_bits) };
         let gx = self.grid.stats().exec_delta(&grid_before, self.grid.substrate());
         let mut breakdown = self.energy.measured_energy_scheduled(
@@ -1135,7 +1216,10 @@ impl ExecutionBackend for CimSimBackend {
         }
         let in_dim = self.dims[0];
         let mask_dims = self.mask_dims();
-        let mask_bits_per_row: usize = mask_dims.iter().sum();
+        // dense rows arrive with unit-space f32 masks whatever the
+        // granularity; RNG pricing still follows the model's kind —
+        // the engine drew one bit per *group*, not per unit
+        let mask_bits_per_row: u64 = self.kind.bits_per_instance(&mask_dims);
         // validate everything up front: the parallel fan below must
         // only ever see well-formed rows
         for row in rows {
@@ -1173,7 +1257,7 @@ impl ExecutionBackend for CimSimBackend {
             // precomputed schedule); deterministic expected-value masks
             // cost no RNG events
             if row.sampled_masks {
-                rng_bits += mask_bits_per_row as u64;
+                rng_bits += mask_bits_per_row;
             }
         }
         let gx = self.grid.stats().exec_delta(&grid_before, self.grid.substrate());

@@ -32,6 +32,7 @@ pub use stub::StubBackend;
 
 pub use crate::cim::grid::{GridConfig, GridExecStats, PlacementStrategy};
 pub use crate::cim::macro_sim::Substrate;
+pub use crate::cim::NonIdealityConfig;
 pub use crate::dropout::plan::{ExecutionPlan, PlanRow};
 
 use crate::cim::macro_sim::MacroRunStats;
@@ -175,7 +176,7 @@ pub trait ExecutionBackend {
         let masks: Vec<Vec<Vec<f32>>> = plan
             .rows
             .iter()
-            .map(|r| r.masks().iter().map(|m| m.to_f32()).collect())
+            .map(|r| plan.masking.masks_f32(r.masks()))
             .collect();
         let rows: Vec<Row<'_>> = masks
             .iter()
@@ -258,6 +259,11 @@ pub struct BackendOptions {
     /// reference vs word-packed bit-parallel. Bit-identical outputs
     /// and stats either way; packed is the fast default.
     pub substrate: Substrate,
+    /// §VI device non-ideality point (cim-sim only): MAV trinomial
+    /// variation, xADC offset-noise sigma, RNG miscalibration. The
+    /// single knob the CLI `--ni-*` flags and the ablation benches
+    /// share — replaces the old per-bench ad-hoc wiring.
+    pub non_ideality: NonIdealityConfig,
 }
 
 impl Default for BackendOptions {
@@ -269,6 +275,7 @@ impl Default for BackendOptions {
             placement: PlacementStrategy::Packed,
             capacity: None,
             substrate: Substrate::default(),
+            non_ideality: NonIdealityConfig::default(),
         }
     }
 }
@@ -302,6 +309,7 @@ pub fn make_backend(
         BackendKind::CimSim => {
             let mut grid = GridConfig::with_macros(opts.macros, opts.placement);
             grid.substrate = opts.substrate;
+            grid.non_ideality = opts.non_ideality;
             if let Some(cap) = opts.capacity {
                 grid.capacity = cap.max(1);
             }

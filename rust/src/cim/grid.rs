@@ -38,6 +38,7 @@
 //! strategy, and thread interleaving.
 
 use super::macro_sim::{CimMacro, MacroRunStats, Substrate};
+use super::NonIdealityConfig;
 use crate::operator::quant::QuantTensor;
 use crate::MACRO_ROWS;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -101,6 +102,10 @@ pub struct GridConfig {
     /// Inner-loop substrate every macro on the grid runs
     /// (bit-identical either way; packed is the fast default).
     pub substrate: Substrate,
+    /// Device non-ideality point every macro is built at (MAV
+    /// variation feeds the ADC training; the other knobs are applied
+    /// by the backend / serving layer).
+    pub non_ideality: NonIdealityConfig,
 }
 
 impl Default for GridConfig {
@@ -110,6 +115,7 @@ impl Default for GridConfig {
             placement: PlacementStrategy::Packed,
             capacity: DEFAULT_MACRO_TILE_SLOTS,
             substrate: Substrate::default(),
+            non_ideality: NonIdealityConfig::default(),
         }
     }
 }
@@ -360,6 +366,7 @@ pub struct MacroGrid {
     tiles: Vec<GridTile>,
     placement: Placement,
     substrate: Substrate,
+    non_ideality: NonIdealityConfig,
     /// `tile_index(l, cb, rb) = layer_base[l] + cb * row_blocks[l] + rb`.
     layer_base: Vec<usize>,
     layer_row_blocks: Vec<usize>,
@@ -411,7 +418,11 @@ impl MacroGrid {
         let units = (0..m)
             .map(|_| {
                 Mutex::new(MacroUnit {
-                    mac: CimMacro::paper_default_on(cfg.substrate),
+                    mac: CimMacro::paper_default_mav(
+                        cfg.substrate,
+                        cfg.non_ideality.mav_p_pos,
+                        cfg.non_ideality.mav_p_neg,
+                    ),
                     ledger: MacroRunStats::default(),
                 })
             })
@@ -421,6 +432,7 @@ impl MacroGrid {
             tiles,
             placement,
             substrate: cfg.substrate,
+            non_ideality: cfg.non_ideality,
             layer_base,
             layer_row_blocks,
             weight_load_bits,
@@ -445,6 +457,11 @@ impl MacroGrid {
     /// Inner-loop substrate every macro on this grid runs.
     pub fn substrate(&self) -> Substrate {
         self.substrate
+    }
+
+    /// Device non-ideality point the grid's macros were built at.
+    pub fn non_ideality(&self) -> NonIdealityConfig {
+        self.non_ideality
     }
 
     /// Identity of tile `idx` (tiles are indexed layer-major, then

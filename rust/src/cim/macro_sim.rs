@@ -146,6 +146,17 @@ impl CimMacro {
         mac
     }
 
+    /// Paper-geometry macro with an explicit MAV trinomial variation
+    /// point (the §VI device-variation knob): the ADC is trained on the
+    /// *skewed* MAV statistics, so its asymmetric search cycles reflect
+    /// the device it actually serves.
+    pub fn paper_default_mav(substrate: Substrate, p_pos: f64, p_neg: f64) -> Self {
+        let mav = MavModel::trinomial(crate::MACRO_COLS, p_pos, p_neg);
+        let mut mac = Self::new(AdcKind::AsymmetricMedian, OperatorKind::MultiplicationFree, &mav);
+        mac.substrate = substrate;
+        mac
+    }
+
     pub fn operator(&self) -> OperatorKind {
         self.kind
     }

@@ -25,6 +25,51 @@ pub mod mav;
 pub mod timing;
 pub mod xadc;
 
+/// Device non-idealities of the §VI robustness study, as one knob the
+/// whole stack shares (CLI `--ni-*` flags → `BackendOptions` →
+/// [`grid::GridConfig`] → every macro; the RNG term perturbs the
+/// serving mask source). Default = the paper's nominal device.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NonIdealityConfig {
+    /// MAV trinomial variation probability, positive arm (nominal 1/8).
+    pub mav_p_pos: f64,
+    /// MAV trinomial variation probability, negative arm (nominal 1/8).
+    pub mav_p_neg: f64,
+    /// xADC offset-noise sigma in LSBs: a fixed-pattern per-output
+    /// offset drawn once per (layer, output), `N(0, sigma)` scaled by
+    /// the layer's accumulator LSB. 0 = noiseless.
+    pub adc_sigma: f64,
+    /// RNG miscalibration: the dropout-bit source fires at
+    /// `keep + delta` instead of `keep`. 0 = calibrated.
+    pub rng_delta: f64,
+}
+
+impl Default for NonIdealityConfig {
+    fn default() -> Self {
+        NonIdealityConfig {
+            mav_p_pos: 0.125,
+            mav_p_neg: 0.125,
+            adc_sigma: 0.0,
+            rng_delta: 0.0,
+        }
+    }
+}
+
+impl NonIdealityConfig {
+    /// Whether every knob sits at the paper's nominal device point.
+    pub fn is_ideal(&self) -> bool {
+        *self == NonIdealityConfig::default()
+    }
+
+    /// Compact ledger label, e.g. `mav=0.125/0.125 adc=0.30 rng=+0.05`.
+    pub fn label(&self) -> String {
+        format!(
+            "mav={}/{} adc={:.2} rng={:+.2}",
+            self.mav_p_pos, self.mav_p_neg, self.adc_sigma, self.rng_delta
+        )
+    }
+}
+
 pub use array::CimArray;
 pub use cell::BitCell;
 pub use grid::{
@@ -34,3 +79,16 @@ pub use grid::{
 pub use macro_sim::{CimMacro, MacroRunStats, Substrate};
 pub use mav::MavModel;
 pub use xadc::{AdcKind, SarAdc};
+
+#[cfg(test)]
+mod non_ideality_tests {
+    use super::NonIdealityConfig;
+
+    #[test]
+    fn default_is_ideal_and_deviations_are_not() {
+        assert!(NonIdealityConfig::default().is_ideal());
+        let skew = NonIdealityConfig { adc_sigma: 0.3, ..Default::default() };
+        assert!(!skew.is_ideal());
+        assert!(skew.label().contains("adc=0.30"));
+    }
+}

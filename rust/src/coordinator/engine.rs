@@ -25,6 +25,7 @@ use crate::backend::{
     Row,
 };
 use crate::cim::macro_sim::MacroRunStats;
+use crate::dropout::kind::DropoutKind;
 use crate::dropout::mask::DropoutMask;
 use crate::dropout::plan::{
     CachedSchedule, ExecutionPlan, OrderingMode, PlanBuilder, PlanStats, ScheduleCache,
@@ -257,15 +258,17 @@ impl EngineSession {
 }
 
 /// Draw `t` instances' masks in sampling order (the same draw sequence
-/// the dense path uses, so outputs stay comparable bit for bit).
+/// the dense path uses, so outputs stay comparable bit for bit). Masks
+/// live in `kind`'s *group* space — Unit draws one bit per neuron,
+/// Scale one per layer, Spatial one per channel group — so coarser
+/// kinds consume strictly fewer bits from `src` per instance.
 fn sample_schedule(
-    mask_dims: &[usize],
+    kind: DropoutKind,
+    unit_dims: &[usize],
     t: usize,
     src: &mut dyn DropoutBitSource,
 ) -> Vec<Vec<DropoutMask>> {
-    (0..t)
-        .map(|_| mask_dims.iter().map(|&d| DropoutMask::sample(d, src)).collect())
-        .collect()
+    (0..t).map(|_| kind.sample_layers(unit_dims, src)).collect()
 }
 
 /// The engine.
@@ -276,6 +279,10 @@ pub struct McDropoutEngine {
     mc_batch: usize,
     dropout_p: f64,
     mask_keep: f64,
+    /// Mask granularity (per-unit, per-layer scale, channel groups) —
+    /// fixed per engine; the spec's kind, or a request override's when
+    /// the serving layer built a kind-specific engine.
+    kind: DropoutKind,
     /// Input fake-quantization (pjrt path only; natively quantized
     /// backends handle precision themselves).
     quant: Option<Quantizer>,
@@ -315,6 +322,7 @@ impl McDropoutEngine {
             mc_batch: spec.mc_batch.clamp(1, caps.max_batch),
             dropout_p: spec.dropout_p,
             mask_keep: spec.mask_keep,
+            kind: spec.dropout_kind,
             quant,
             energy: EnergyModel::paper_default(),
             mode,
@@ -398,6 +406,23 @@ impl McDropoutEngine {
         self.mask_keep
     }
 
+    /// Mask granularity this engine samples and schedules at.
+    pub fn dropout_kind(&self) -> DropoutKind {
+        self.kind
+    }
+
+    /// RNG bits one MC instance draws under this engine's kind.
+    pub fn mask_bits_per_instance(&self) -> u64 {
+        self.kind.bits_per_instance(&self.mask_dims())
+    }
+
+    /// Expected keep probability (1 − dropout_p) — what the digital
+    /// chain's inverse-keep rescale assumes, and the `keep` argument
+    /// mask expansion wants.
+    pub fn keep_prob(&self) -> f64 {
+        1.0 - self.dropout_p
+    }
+
     fn mask_dims(&self) -> Vec<usize> {
         self.dims[1..self.dims.len() - 1].to_vec()
     }
@@ -470,11 +495,17 @@ impl McDropoutEngine {
         let mask_dims = self.mask_dims();
         // the input slice is shared by reference across the batch — no
         // per-row clones of the (same) input vector (EXPERIMENTS.md §Perf)
+        let keep = 1.0 - self.dropout_p;
         let mut masks: Vec<Vec<Vec<f32>>> = Vec::with_capacity(n);
         for _ in 0..n {
+            // group-space draw, unit-space expansion: coarse kinds pull
+            // fewer bits from `src` but hand the backend full-width rows
             let ms: Vec<Vec<f32>> = mask_dims
                 .iter()
-                .map(|&d| DropoutMask::sample(d, src).to_f32())
+                .map(|&d| {
+                    let m = self.kind.sample_layer(d, src);
+                    self.kind.expand_f32(&m, d, keep)
+                })
                 .collect();
             masks.push(ms);
         }
@@ -492,7 +523,12 @@ impl McDropoutEngine {
     /// Fresh plan-execution context for one request.
     fn begin_plan(&self) -> PlannedRun {
         PlannedRun {
-            builder: PlanBuilder::new(&self.dims, self.delta.ordering),
+            builder: PlanBuilder::with_kind(
+                &self.dims,
+                self.delta.ordering,
+                self.kind,
+                1.0 - self.dropout_p,
+            ),
             state: self.backend.new_plan_state(),
             stats: PlanStats::default(),
         }
@@ -538,15 +574,20 @@ impl McDropoutEngine {
         let mask_dims = self.mask_dims();
         match (cache_seed, &self.delta.cache) {
             (Some(seed), Some(cache)) => {
-                let key = (self.model_id.clone(), self.mask_keep.to_bits(), samples, seed);
+                let key =
+                    (self.model_id.clone(), self.mask_keep.to_bits(), samples, seed, self.kind);
                 if let Some(hit) = cache.lookup(&key) {
                     return (hit, Some(true));
                 }
-                let sched = CachedSchedule { masks: sample_schedule(&mask_dims, samples, src) };
+                let sched = CachedSchedule {
+                    masks: sample_schedule(self.kind, &mask_dims, samples, src),
+                };
                 (cache.insert(key, sched), Some(false))
             }
             _ => (
-                Arc::new(CachedSchedule { masks: sample_schedule(&mask_dims, samples, src) }),
+                Arc::new(CachedSchedule {
+                    masks: sample_schedule(self.kind, &mask_dims, samples, src),
+                }),
                 None,
             ),
         }
@@ -676,7 +717,7 @@ impl McDropoutEngine {
             let mask_dims = self.mask_dims();
             let mut run = self.begin_plan();
             for (i, &n) in plan.iter().enumerate() {
-                let rows = sample_schedule(&mask_dims, n, src);
+                let rows = sample_schedule(self.kind, &mask_dims, n, src);
                 self.run_plan_block(&mut run, &xq, rows, true, &mut outputs, &mut acc)?;
                 if i + 1 < blocks && !keep_going(&outputs) {
                     break;
@@ -778,11 +819,12 @@ impl McDropoutEngine {
                 OrderingMode::None
             };
             let mask_dims = self.mask_dims();
-            let mut builder = PlanBuilder::new(&self.dims, ordering);
+            let mut builder =
+                PlanBuilder::with_kind(&self.dims, ordering, self.kind, 1.0 - self.dropout_p);
             let mut done = 0usize;
             while done < samples {
                 let n = (samples - done).min(self.mc_batch);
-                let masks = sample_schedule(&mask_dims, n, src);
+                let masks = sample_schedule(self.kind, &mask_dims, n, src);
                 let mut plan = builder.chunk(&xq, masks, true);
                 plan.epsilon = sess.epsilon;
                 let out = self.backend.execute_plan(&plan, &mut sess.state)?;

@@ -15,6 +15,7 @@
 use super::engine::StreamFrameStats;
 use crate::backend::{GridExecStats, Substrate};
 use crate::dropout::plan::PlanStats;
+use crate::dropout::DropoutKind;
 use crate::uncertainty::Verdict;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -119,6 +120,16 @@ pub struct Metrics {
     grid_macro_span_cycles: AtomicU64,
     /// Spilled-tile weight reloads (0 when every model fits the grid).
     weight_reloads: AtomicU64,
+    // -- dropout-granularity ledger (the DropoutKind zoo) --
+    /// Requests answered per dropout-kind label. Bounded by nature:
+    /// the label space is unit / scale / spatial:g.
+    dropout_kind_requests: Mutex<HashMap<String, u64>>,
+    /// Mask RNG bits drawn, priced at each request's granularity
+    /// (group-space bits — the whole point of the coarser kinds).
+    /// Replayed stream schedules draw none.
+    dropout_rng_bits: AtomicU64,
+    /// MC instances (mask-schedule entries) across those requests.
+    dropout_instances: AtomicU64,
     // -- substrate ledger (macro inner-loop implementation) --
     /// Compute cycles evaluated on the packed bit-parallel substrate.
     substrate_packed_cycles: AtomicU64,
@@ -257,6 +268,20 @@ impl Metrics {
             .fetch_add(g.macros as u64 * g.span_cycles, Ordering::Relaxed);
         self.weight_reloads.fetch_add(g.weight_reloads, Ordering::Relaxed);
         self.record_substrate(g.substrate, g.compute_cycles);
+    }
+
+    /// Record one answered request's dropout-granularity accounting:
+    /// the kind it served at, the mask RNG bits its schedule drew
+    /// (pass 0 when a stored schedule was replayed — bits were paid as
+    /// SRAM reads, not draws), and the MC instances it executed.
+    pub fn record_dropout(&self, kind: DropoutKind, rng_bits: u64, instances: u64) {
+        self.dropout_rng_bits.fetch_add(rng_bits, Ordering::Relaxed);
+        self.dropout_instances.fetch_add(instances, Ordering::Relaxed);
+        let mut map = self
+            .dropout_kind_requests
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        *map.entry(kind.label()).or_insert(0) += 1;
     }
 
     /// Record one request's macro-substrate accounting: which
@@ -498,6 +523,27 @@ impl Metrics {
         self.weight_reloads.load(Ordering::Relaxed)
     }
 
+    /// Mask RNG bits drawn across answered requests (kind-priced).
+    pub fn dropout_rng_bits(&self) -> u64 {
+        self.dropout_rng_bits.load(Ordering::Relaxed)
+    }
+
+    /// MC instances executed across dropout-ledgered requests.
+    pub fn dropout_instances(&self) -> u64 {
+        self.dropout_instances.load(Ordering::Relaxed)
+    }
+
+    /// (kind label, requests) pairs, sorted by label.
+    pub fn dropout_kind_counts(&self) -> Vec<(String, u64)> {
+        let map = self
+            .dropout_kind_requests
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        let mut v: Vec<(String, u64)> = map.iter().map(|(k, n)| (k.clone(), *n)).collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Compute cycles evaluated on the packed bit-parallel substrate.
     pub fn substrate_packed_cycles(&self) -> u64 {
         self.substrate_packed_cycles.load(Ordering::Relaxed)
@@ -680,6 +726,16 @@ impl Metrics {
                 " | grid: macro_utilization={:.0}% weight_reloads={}",
                 100.0 * self.macro_utilization(),
                 self.weight_reloads(),
+            ));
+        }
+        let kinds = self.dropout_kind_counts();
+        if !kinds.is_empty() {
+            let per: Vec<String> = kinds.iter().map(|(k, n)| format!("{k}:{n}")).collect();
+            s.push_str(&format!(
+                " | dropout: kinds={} rng_bits={} instances={}",
+                per.join(","),
+                self.dropout_rng_bits(),
+                self.dropout_instances(),
             ));
         }
         if self.substrate_packed_cycles() + self.substrate_scalar_cycles() > 0 {
@@ -980,6 +1036,32 @@ mod tests {
         assert_eq!(h[30], 2);
         assert_eq!(h.iter().sum::<u64>(), 3);
         assert!(m.summary().contains("abstain=1"));
+    }
+
+    #[test]
+    fn dropout_ledger_accumulates_and_shows_in_summary() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("dropout:"), "no traffic, no dropout line");
+        // a unit request: 30 instances × 96 group bits
+        m.record_dropout(DropoutKind::Unit, 30 * 96, 30);
+        // a scale request: 30 instances × 2 layers × 1 bit
+        m.record_dropout(DropoutKind::Scale, 30 * 2, 30);
+        // a replayed stream frame: instances served, zero bits drawn
+        m.record_dropout(DropoutKind::Spatial { group: 4 }, 0, 30);
+        assert_eq!(m.dropout_rng_bits(), 30 * 96 + 30 * 2);
+        assert_eq!(m.dropout_instances(), 90);
+        assert_eq!(
+            m.dropout_kind_counts(),
+            vec![
+                ("scale".to_string(), 1),
+                ("spatial:4".to_string(), 1),
+                ("unit".to_string(), 1),
+            ]
+        );
+        let snap = m.summary();
+        assert!(snap.contains("dropout: kinds=scale:1,spatial:4:1,unit:1"), "{snap}");
+        assert!(snap.contains("rng_bits=2940"), "{snap}");
+        assert!(snap.contains("instances=90"), "{snap}");
     }
 
     #[test]

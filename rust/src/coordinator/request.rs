@@ -22,6 +22,7 @@
 //! `coordinator::server`.
 
 use crate::backend::BackendKind;
+use crate::dropout::DropoutKind;
 use crate::error::{McCimError, RequestKind};
 use crate::fleet::qos::{Priority, Tenant};
 use crate::uncertainty::policy::{RiskProfile, Verdict};
@@ -53,6 +54,10 @@ pub struct InferenceRequest {
     pub seed: Option<u64>,
     /// Backend override (None = the coordinator's default).
     pub backend: Option<BackendKind>,
+    /// Dropout-granularity override (None = the model spec's kind).
+    /// Overridden requests get a kind-specific engine and never
+    /// micro-batch with spec-kind traffic.
+    pub dropout_kind: Option<DropoutKind>,
     /// Streaming-session membership: this request is frame `frame` of
     /// session `id`. The coordinator pins all frames of a session to
     /// one worker (that worker holds the session's compute state) and
@@ -95,6 +100,7 @@ impl InferenceRequest {
             risk_profile: None,
             seed: None,
             backend: None,
+            dropout_kind: None,
             session: None,
             tenant: Tenant::anonymous(),
             priority: Priority::Normal,
@@ -151,6 +157,13 @@ impl InferenceRequest {
         self
     }
 
+    /// Serve this request at `kind` granularity instead of the model
+    /// spec's (per-unit masks, layer-wide scale, or channel groups).
+    pub fn with_dropout_kind(mut self, kind: DropoutKind) -> Self {
+        self.dropout_kind = Some(kind);
+        self
+    }
+
     /// Mark this request as frame `frame` of streaming session `id`
     /// (exact input-delta reuse, ε = 0; see [`StreamSession`]).
     pub fn with_session(mut self, id: impl Into<String>, frame: u64) -> Self {
@@ -197,6 +210,7 @@ impl InferenceRequest {
         !self.has_adaptive_overrides()
             && self.seed.is_none()
             && self.backend.is_none()
+            && self.dropout_kind.is_none()
             && self.session.is_none()
     }
 }
@@ -376,6 +390,14 @@ mod tests {
     fn seed_alone_disables_microbatching_only() {
         let r = InferenceRequest::classify(vec![0.0; 4]).with_seed(1);
         assert!(!r.is_plain());
+        assert!(!r.has_adaptive_overrides());
+    }
+
+    #[test]
+    fn dropout_kind_override_disables_microbatching_only() {
+        let r = InferenceRequest::classify(vec![0.0; 4]).with_dropout_kind(DropoutKind::Scale);
+        assert_eq!(r.dropout_kind, Some(DropoutKind::Scale));
+        assert!(!r.is_plain(), "kind-overridden requests need their own engine");
         assert!(!r.has_adaptive_overrides());
     }
 

@@ -61,10 +61,12 @@ use super::request::{
     StreamFrameInfo,
 };
 use crate::backend::{
-    make_backend, BackendKind, BackendOptions, GridConfig, PlacementStrategy, Substrate,
+    make_backend, BackendKind, BackendOptions, GridConfig, NonIdealityConfig,
+    PlacementStrategy, Substrate,
 };
 use crate::bayes::{ClassEnsemble, RegressionEnsemble};
 use crate::dropout::plan::{OrderingMode, ScheduleCache};
+use crate::dropout::DropoutKind;
 use crate::energy::ModeConfig;
 use crate::error::{McCimError, RequestKind};
 use crate::fleet::placement::FleetPlacement;
@@ -241,6 +243,11 @@ pub struct CoordinatorConfig {
     /// Dropout-bit source: None = ideal Bernoulli; Some(a) = Beta(a,a)
     /// perturbed (the Fig. 12(c)/13(f) non-ideality study).
     pub beta_a: Option<f64>,
+    /// Analog + RNG non-idealities injected pool-wide: MAV trinomial
+    /// statistics and ADC offset noise flow into every cim-sim grid,
+    /// and `rng_delta` miscalibrates every worker's mask sources
+    /// (the keep-probability each source *actually* emits).
+    pub non_ideality: NonIdealityConfig,
     /// Use the Pallas-kernel graph (pjrt backend only).
     pub pallas: bool,
     /// Pack classification rows from *multiple* queued requests into
@@ -292,6 +299,7 @@ impl Default for CoordinatorConfig {
             placement: PlacementStrategy::default(),
             substrate: Substrate::default(),
             beta_a: None,
+            non_ideality: NonIdealityConfig::default(),
             pallas: false,
             microbatch: true,
             adaptive: None,
@@ -483,19 +491,30 @@ struct WorkerSession {
     model: String,
     backend: BackendKind,
     samples: usize,
+    /// Dropout-granularity override the session was opened with (None
+    /// = the spec's kind): the stored schedule is only valid for it.
+    dropout_kind: Option<DropoutKind>,
     session: EngineSession,
     last_used: Instant,
 }
 
+/// Worker-local engine identity: (model, backend, dropout-granularity
+/// override). `None` = the model spec's own kind. A request that
+/// overrides the granularity gets its own engine *and* its own mask
+/// source: its schedules are sampled in a different group space, so
+/// sharing either would perturb the default stream or replay a
+/// schedule of the wrong shape.
+type EngineKey = (String, BackendKind, Option<DropoutKind>);
+
 /// Per-worker mutable state: lazily built engines keyed by (model,
-/// backend), mask sources keyed the same way — a request that
-/// overrides the backend must draw from its own engine's stream, not
-/// whichever backend's engine was built first — live streaming
-/// sessions, and the (lazily created) PJRT runtime. `engines` is
-/// declared before `rt` so engines drop first.
+/// backend, kind override), mask sources keyed the same way — a
+/// request that overrides the backend must draw from its own engine's
+/// stream, not whichever backend's engine was built first — live
+/// streaming sessions, and the (lazily created) PJRT runtime.
+/// `engines` is declared before `rt` so engines drop first.
 struct WorkerState {
-    engines: HashMap<(String, BackendKind), McDropoutEngine>,
-    srcs: HashMap<(String, BackendKind), Box<dyn DropoutBitSource>>,
+    engines: HashMap<EngineKey, McDropoutEngine>,
+    srcs: HashMap<EngineKey, Box<dyn DropoutBitSource>>,
     sessions: HashMap<String, WorkerSession>,
     rt: Option<Runtime>,
     /// This worker's shared-grid fleet (Some when `fleet_models` is
@@ -526,26 +545,40 @@ fn model_salt(model: &str) -> u64 {
 }
 
 fn make_source(cfg: &CoordinatorConfig, keep: f64, seed: u64) -> Box<dyn DropoutBitSource> {
+    // RNG miscalibration study: the serving path *believes* it samples
+    // `keep`, but a miscalibrated generator actually emits keep+delta
+    let p1 = (keep + cfg.non_ideality.rng_delta).clamp(0.0, 1.0);
     match cfg.beta_a {
-        None => Box::new(IdealBernoulli::new(keep, seed)),
-        Some(a) => Box::new(BetaPerturbedBernoulli::new(keep, a, seed)),
+        None => Box::new(IdealBernoulli::new(p1, seed)),
+        Some(a) => Box::new(BetaPerturbedBernoulli::new(p1, a, seed)),
     }
 }
 
-/// Build (once) the engine for (model, kind) plus the model's shared
-/// mask source.
+/// Build (once) the engine for (model, kind, dropout override) plus
+/// the model's shared mask source.
 fn ensure_engine(
     state: &mut WorkerState,
     cfg: &CoordinatorConfig,
     registry: &ModelRegistry,
     model: &str,
     kind: BackendKind,
+    dropout_kind: Option<DropoutKind>,
 ) -> Result<(), McCimError> {
-    let key = (model.to_string(), kind);
+    let key = (model.to_string(), kind, dropout_kind);
     if state.engines.contains_key(&key) {
         return Ok(());
     }
-    let spec = registry.get(model)?;
+    let base = registry.get(model)?;
+    // a granularity override serves from a clone of the spec with the
+    // requested kind; the base spec and its engines stay untouched
+    let overridden;
+    let spec = match dropout_kind {
+        Some(k) if k != base.dropout_kind => {
+            overridden = base.clone().with_kind(k);
+            &overridden
+        }
+        _ => base,
+    };
     if kind.needs_runtime() && state.rt.is_none() {
         state.rt = Some(Runtime::cpu().map_err(|e| McCimError::BackendUnavailable {
             backend: kind.label().into(),
@@ -559,6 +592,7 @@ fn ensure_engine(
         placement: cfg.placement,
         substrate: cfg.substrate,
         capacity: cfg.capacity,
+        non_ideality: cfg.non_ideality,
     };
     let backend = make_backend(kind, state.rt.as_ref(), &cfg.artifacts, spec, &opts)?;
     let mut engine = McDropoutEngine::with_backend(
@@ -629,6 +663,7 @@ fn build_fleet(
         .collect::<Result<_, McCimError>>()?;
     let mut grid_cfg = GridConfig::with_macros(cfg.macros, cfg.placement);
     grid_cfg.substrate = cfg.substrate;
+    grid_cfg.non_ideality = cfg.non_ideality;
     if let Some(cap) = cfg.capacity {
         grid_cfg.capacity = cap.max(1);
     }
@@ -640,7 +675,7 @@ fn build_fleet(
     )
     .context("fleet co-placement failed")?;
     for (spec, backend) in specs.iter().zip(backends) {
-        let key = (spec.id.clone(), BackendKind::CimSim);
+        let key = (spec.id.clone(), BackendKind::CimSim, None);
         let mut engine = McDropoutEngine::with_backend(
             Box::new(backend),
             spec,
@@ -700,8 +735,8 @@ fn worker_loop(
     // no-ops for fleet models — requests route onto the shared grid
     build_fleet(&mut state, &cfg, &mut registry, &metrics)?;
     // fail fast: default-backend engines for both builtin workloads
-    ensure_engine(&mut state, &cfg, &registry, "mnist", cfg.backend)?;
-    ensure_engine(&mut state, &cfg, &registry, "vo", cfg.backend)?;
+    ensure_engine(&mut state, &cfg, &registry, "mnist", cfg.backend, None)?;
+    ensure_engine(&mut state, &cfg, &registry, "vo", cfg.backend, None)?;
 
     // adaptive requests are variable-length: micro-batching their rows
     // would pin every co-batched request to the slowest stopper. On a
@@ -710,7 +745,7 @@ fn worker_loop(
     // its batch-mates, so those serve solo too.
     let mnist_engine = state
         .engines
-        .get(&("mnist".to_string(), cfg.backend))
+        .get(&("mnist".to_string(), cfg.backend, None))
         .expect("mnist engine built above");
     let microbatch =
         cfg.microbatch && cfg.adaptive.is_none() && !mnist_engine.measures_energy();
@@ -798,7 +833,8 @@ fn execute_job(
     metrics: &Metrics,
 ) -> InferenceResult {
     let kind = request.backend.unwrap_or(cfg.backend);
-    ensure_engine(state, cfg, registry, &request.model, kind)?;
+    let dkind = request.dropout_kind;
+    ensure_engine(state, cfg, registry, &request.model, kind, dkind)?;
     if kind == BackendKind::CimSim {
         // demand-page a co-placed model's tiles back in before serving;
         // any evictions this forces are visible in the fleet metrics
@@ -813,9 +849,9 @@ fn execute_job(
     }
     let engine = state
         .engines
-        .get(&(request.model.clone(), kind))
+        .get(&(request.model.clone(), kind, dkind))
         .expect("engine just ensured");
-    if let Some(seed) = request.seed {
+    let result = if let Some(seed) = request.seed {
         // per-request seed: a fresh deterministic stream, independent
         // of worker identity
         let mut src = make_source(cfg, engine.mask_keep(), seed);
@@ -823,10 +859,18 @@ fn execute_job(
     } else {
         let src = state
             .srcs
-            .get_mut(&(request.model.clone(), kind))
+            .get_mut(&(request.model.clone(), kind, dkind))
             .expect("source created with engine");
         serve_request(engine, src.as_mut(), request, cfg.adaptive.as_ref(), metrics)
+    };
+    if let Ok(resp) = &result {
+        metrics.record_dropout(
+            engine.dropout_kind(),
+            engine.mask_bits_per_instance() * resp.samples_used() as u64,
+            resp.samples_used() as u64,
+        );
     }
+    result
 }
 
 /// One frame of a streaming session on this worker: resolve (or open)
@@ -854,23 +898,30 @@ fn execute_session_frame(
     // split the borrows: engines (shared) vs sessions + srcs (mutable)
     let WorkerState { engines, srcs, sessions, .. } = state;
     let engine = engines
-        .get(&(request.model.clone(), kind))
+        .get(&(request.model.clone(), kind, request.dropout_kind))
         .expect("engine ensured by execute_job");
     if let Some(ws) = sessions.get(&stream.id) {
         // frames of one session must keep their identity — the stored
         // schedule and product-sums are only valid for it
-        if ws.model != request.model || ws.backend != kind || ws.samples != request.samples
+        if ws.model != request.model
+            || ws.backend != kind
+            || ws.samples != request.samples
+            || ws.dropout_kind != request.dropout_kind
         {
             return Err(McCimError::InvalidRequest {
                 model: request.model.clone(),
                 kind: request.kind,
                 reason: format!(
-                    "session '{}' was opened as (model {}, backend {}, {} samples); \
-                     frames cannot change it",
+                    "session '{}' was opened as (model {}, backend {}, {} samples, \
+                     dropout {}); frames cannot change it",
                     stream.id,
                     ws.model,
                     ws.backend.label(),
-                    ws.samples
+                    ws.samples,
+                    match ws.dropout_kind {
+                        Some(k) => k.label(),
+                        None => "model default".into(),
+                    },
                 ),
             });
         }
@@ -892,6 +943,7 @@ fn execute_session_frame(
                 model: request.model.clone(),
                 backend: kind,
                 samples: request.samples,
+                dropout_kind: request.dropout_kind,
                 session: engine.begin_session(stream.epsilon),
                 last_used: Instant::now(),
             },
@@ -904,7 +956,7 @@ fn execute_session_frame(
         serve_stream_request(engine, &mut ws.session, src.as_mut(), request, metrics)
     } else {
         let src = srcs
-            .get_mut(&(request.model.clone(), kind))
+            .get_mut(&(request.model.clone(), kind, request.dropout_kind))
             .expect("source created with engine");
         serve_stream_request(engine, &mut ws.session, src.as_mut(), request, metrics)
     };
@@ -912,6 +964,17 @@ fn execute_session_frame(
     // drop it so the id isn't bricked to the failed request's identity
     if result.is_err() && ws.session.frames() == 0 {
         sessions.remove(&stream.id);
+    }
+    if let Ok(resp) = &result {
+        // replayed schedules re-read stored masks instead of drawing
+        // RNG bits; only a fresh (first/rebuilt) frame pays the draws
+        let fresh = !resp.stream().map(|s| s.schedule_reused).unwrap_or(false);
+        let t = resp.samples_used() as u64;
+        metrics.record_dropout(
+            engine.dropout_kind(),
+            if fresh { engine.mask_bits_per_instance() * t } else { 0 },
+            t,
+        );
     }
     result
 }
@@ -1450,14 +1513,13 @@ fn microbatch_classify(
     jobs: Vec<Job>,
     metrics: &Metrics,
 ) {
-    use crate::dropout::mask::DropoutMask;
     let engine = state
         .engines
-        .get(&("mnist".to_string(), cfg.backend))
+        .get(&("mnist".to_string(), cfg.backend, None))
         .expect("mnist engine built at worker start");
     let src = state
         .srcs
-        .get_mut(&("mnist".to_string(), cfg.backend))
+        .get_mut(&("mnist".to_string(), cfg.backend, None))
         .expect("mnist source");
     let t0 = Instant::now();
     // malformed requests (zero samples, wrong input width) get the
@@ -1478,6 +1540,10 @@ fn microbatch_classify(
         return;
     }
     let mask_dims: Vec<usize> = engine.dims()[1..engine.dims().len() - 1].to_vec();
+    // sample at the engine's granularity (the builtin mnist spec is
+    // per-unit; a coarser registered spec batches correctly too)
+    let dkind = engine.dropout_kind();
+    let keep = engine.keep_prob();
     let mut rows: Vec<(Vec<f32>, Vec<Vec<f32>>)> = Vec::new();
     let mut spans = Vec::new(); // (start, len) per job
     for job in &jobs {
@@ -1485,7 +1551,10 @@ fn microbatch_classify(
         for _ in 0..job.request.samples {
             let masks: Vec<Vec<f32>> = mask_dims
                 .iter()
-                .map(|&d| DropoutMask::sample(d, src.as_mut()).to_f32())
+                .map(|&d| {
+                    let m = dkind.sample_layer(d, src.as_mut());
+                    dkind.expand_f32(&m, d, keep)
+                })
                 .collect();
             rows.push((job.request.input.clone(), masks));
         }
@@ -1530,6 +1599,11 @@ fn microbatch_classify(
                 };
                 metrics.record_request(t0.elapsed());
                 metrics.record_energy(energy_pj);
+                metrics.record_dropout(
+                    dkind,
+                    engine.mask_bits_per_instance() * len as u64,
+                    len as u64,
+                );
                 if !job.request.tenant.is_anonymous() {
                     metrics.record_tenant_request(job.request.tenant.name(), t0.elapsed());
                 }

@@ -1,0 +1,312 @@
+//! Dropout granularity zoo (ROADMAP item 3): the paper's per-unit
+//! Bernoulli masks (§III-A) generalized to coarser stochasticity from
+//! the follow-up literature — Scale-Dropout (one stochastic scalar per
+//! layer, arXiv:2311.15816) and Spatial/channel dropout
+//! (Spatial-SpinDrop, arXiv:2306.10185) — as one [`DropoutKind`]
+//! threaded from the model spec through mask sampling, delta planning,
+//! the macro executor, and the wire protocol.
+//!
+//! **Group space.** Every kind samples, orders, and delta-diffs its
+//! masks as a [`DropoutMask`] over *groups*, not units: `Unit` has one
+//! group per neuron (the legacy layout, unchanged), `Scale` exactly
+//! one group per layer (one Bernoulli draw decides the layer's gain),
+//! and `Spatial { group }` one group per contiguous channel block.
+//! The whole §IV machinery — Hamming distances, TSP ordering, the
+//! `I^A`/`I^D` delta algebra, the schedule cache — operates on these
+//! group-space masks untouched, so coarser kinds get combinatorially
+//! smaller tours and strictly fewer RNG draws for free. Expansion back
+//! to unit space happens only at execution boundaries, through
+//! [`DropoutKind::expand_f32`] (the digital-chain mask values) and
+//! [`DropoutKind::unit_gate`] (which macro columns/rows a mask
+//! actually gates).
+//!
+//! **Scale numerics.** Scale dropout never zeroes a neuron; the single
+//! Bernoulli(keep) bit picks a layer-wide gain `g ∈ {g_hi, g_lo}` with
+//! `g_lo = 1/2` (a right-shift in hardware) and
+//! `g_hi = (1 - (1-keep)/2) / keep`, so `E[g] = 1` and the layer's
+//! expected activation matches the per-unit kinds exactly. The stored
+//! f32 mask value is `g · keep`: the executor's digital chain
+//! multiplies by the graph's baked inverted-dropout scale `1/keep`,
+//! which cancels to the bare gain. Because no column is ever gated,
+//! consecutive Scale instances differ by *zero* macro work — the §IV-A
+//! delta is empty and only the digital re-scale changes.
+
+use super::mask::DropoutMask;
+use crate::rng::DropoutBitSource;
+
+/// Mask granularity of one model's MC-Dropout.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DropoutKind {
+    /// Per-unit Bernoulli masks — the paper's §III-A baseline.
+    #[default]
+    Unit,
+    /// One stochastic scalar per layer applied as a shift-add gain
+    /// (Scale-Dropout): 1 RNG bit per layer per instance.
+    Scale,
+    /// Contiguous channel groups dropped together (Spatial-SpinDrop):
+    /// `ceil(n / group)` RNG bits per layer of width `n`.
+    Spatial {
+        /// Channels per group (≥ 1; the last group may be partial).
+        group: usize,
+    },
+}
+
+impl DropoutKind {
+    /// Parse a CLI / meta.json spelling: `unit`, `scale`,
+    /// `spatial:G` (also `spatial-G` / `channel:G`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "unit" | "per-unit" | "bernoulli" => return Some(DropoutKind::Unit),
+            "scale" | "scale-dropout" => return Some(DropoutKind::Scale),
+            _ => {}
+        }
+        let rest = s
+            .strip_prefix("spatial:")
+            .or_else(|| s.strip_prefix("spatial-"))
+            .or_else(|| s.strip_prefix("channel:"))?;
+        let group: usize = rest.parse().ok()?;
+        if group == 0 {
+            return None;
+        }
+        Some(DropoutKind::Spatial { group })
+    }
+
+    /// Canonical spelling ([`Self::parse`] round-trips it).
+    pub fn label(&self) -> String {
+        match self {
+            DropoutKind::Unit => "unit".into(),
+            DropoutKind::Scale => "scale".into(),
+            DropoutKind::Spatial { group } => format!("spatial:{group}"),
+        }
+    }
+
+    /// Group-space mask length for a layer of `unit_dim` neurons — the
+    /// number of Bernoulli draws one instance spends on that layer.
+    pub fn group_dim(&self, unit_dim: usize) -> usize {
+        match self {
+            DropoutKind::Unit => unit_dim,
+            DropoutKind::Scale => 1,
+            DropoutKind::Spatial { group } => unit_dim.div_ceil(*group),
+        }
+    }
+
+    /// [`Self::group_dim`] over a model's hidden-layer widths.
+    pub fn group_dims(&self, unit_dims: &[usize]) -> Vec<usize> {
+        unit_dims.iter().map(|&d| self.group_dim(d)).collect()
+    }
+
+    /// Units covered by group `g` of a `unit_dim`-wide layer (the last
+    /// spatial group may be partial).
+    pub fn group_width(&self, unit_dim: usize, g: usize) -> usize {
+        match self {
+            DropoutKind::Unit => 1,
+            DropoutKind::Scale => unit_dim,
+            DropoutKind::Spatial { group } => {
+                let lo = g * group;
+                (lo + group).min(unit_dim).saturating_sub(lo)
+            }
+        }
+    }
+
+    /// RNG bits one MC instance draws across `unit_dims` — the
+    /// per-kind bits-drawn accounting the energy model prices.
+    pub fn bits_per_instance(&self, unit_dims: &[usize]) -> u64 {
+        unit_dims.iter().map(|&d| self.group_dim(d) as u64).sum()
+    }
+
+    /// Scale-dropout gain pair `(g_hi, g_lo)`: `g_lo = 1/2` and `g_hi`
+    /// chosen so `E[g] = keep·g_hi + (1-keep)·g_lo = 1`.
+    pub fn scale_gains(keep: f64) -> (f64, f64) {
+        let g_lo = 0.5;
+        let g_hi = (1.0 - (1.0 - keep) * g_lo) / keep;
+        (g_hi, g_lo)
+    }
+
+    /// Sample one layer's group-space mask (one bit per group).
+    pub fn sample_layer<S: DropoutBitSource + ?Sized>(
+        &self,
+        unit_dim: usize,
+        src: &mut S,
+    ) -> DropoutMask {
+        DropoutMask::sample(self.group_dim(unit_dim), src)
+    }
+
+    /// Sample one MC instance: a group-space mask per hidden layer.
+    pub fn sample_layers<S: DropoutBitSource + ?Sized>(
+        &self,
+        unit_dims: &[usize],
+        src: &mut S,
+    ) -> Vec<DropoutMask> {
+        unit_dims.iter().map(|&d| self.sample_layer(d, src)).collect()
+    }
+
+    /// Expand a group-space mask to the unit-space f32 mask the digital
+    /// chain multiplies in (values are pre-`1/keep`: per-unit kinds use
+    /// 1.0/0.0, Scale uses `g · keep` so the baked inverted-dropout
+    /// scale cancels to the bare gain).
+    pub fn expand_f32(&self, m: &DropoutMask, unit_dim: usize, keep: f64) -> Vec<f32> {
+        match self {
+            DropoutKind::Unit => {
+                debug_assert_eq!(m.len(), unit_dim);
+                m.to_f32()
+            }
+            DropoutKind::Scale => {
+                debug_assert_eq!(m.len(), 1);
+                let (g_hi, g_lo) = Self::scale_gains(keep);
+                let g = if m.get(0) { g_hi } else { g_lo };
+                vec![(g * keep) as f32; unit_dim]
+            }
+            DropoutKind::Spatial { group } => {
+                debug_assert_eq!(m.len(), unit_dim.div_ceil(*group));
+                let mut out = Vec::with_capacity(unit_dim);
+                for i in 0..unit_dim {
+                    out.push(if m.get(i / group) { 1.0 } else { 0.0 });
+                }
+                out
+            }
+        }
+    }
+
+    /// Expand a group-space mask (or delta set) to the unit-space
+    /// column/row gate: which macro lines the mask actually switches.
+    /// Scale gates nothing — every neuron stays active at a gain — so
+    /// its gate is all-ones and consecutive instances cost zero column
+    /// work.
+    pub fn unit_gate(&self, m: &DropoutMask, unit_dim: usize) -> DropoutMask {
+        match self {
+            DropoutKind::Unit => {
+                debug_assert_eq!(m.len(), unit_dim);
+                m.clone()
+            }
+            DropoutKind::Scale => DropoutMask::ones(unit_dim),
+            DropoutKind::Spatial { group } => {
+                let bits: Vec<bool> = (0..unit_dim).map(|i| m.get(i / group)).collect();
+                DropoutMask::from_bools(&bits)
+            }
+        }
+    }
+
+    /// Expand a group-space *delta* set (`I^A`/`I^D`) to the unit
+    /// columns it actually toggles. Identical to [`Self::unit_gate`]
+    /// for per-unit and spatial masks; always empty for Scale, whose
+    /// gain flip re-scales digitally and drives no columns.
+    pub fn unit_delta(&self, m: &DropoutMask, unit_dim: usize) -> DropoutMask {
+        match self {
+            DropoutKind::Scale => DropoutMask::zeros(unit_dim),
+            _ => self.unit_gate(m, unit_dim),
+        }
+    }
+
+    /// Active *units* under the gate (rows the macro actually runs).
+    pub fn unit_active(&self, m: &DropoutMask, unit_dim: usize) -> usize {
+        match self {
+            DropoutKind::Unit => m.active_count(),
+            DropoutKind::Scale => unit_dim,
+            DropoutKind::Spatial { .. } => {
+                (0..m.len()).filter(|&g| m.get(g)).map(|g| self.group_width(unit_dim, g)).sum()
+            }
+        }
+    }
+
+    /// Wire encoding: `(tag, group)` — tag 0 = Unit, 1 = Scale,
+    /// 2 = Spatial (group in the second slot, 0 otherwise).
+    pub fn wire_code(&self) -> (u8, u32) {
+        match self {
+            DropoutKind::Unit => (0, 0),
+            DropoutKind::Scale => (1, 0),
+            DropoutKind::Spatial { group } => (2, *group as u32),
+        }
+    }
+
+    /// Decode [`Self::wire_code`]; `None` on an unknown tag or a
+    /// zero spatial group.
+    pub fn from_wire(tag: u8, group: u32) -> Option<Self> {
+        match tag {
+            0 => Some(DropoutKind::Unit),
+            1 => Some(DropoutKind::Scale),
+            2 if group > 0 => Some(DropoutKind::Spatial { group: group as usize }),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::IdealBernoulli;
+
+    #[test]
+    fn parse_and_label_round_trip() {
+        for k in [DropoutKind::Unit, DropoutKind::Scale, DropoutKind::Spatial { group: 8 }] {
+            assert_eq!(DropoutKind::parse(&k.label()), Some(k));
+        }
+        assert_eq!(DropoutKind::parse("channel:4"), Some(DropoutKind::Spatial { group: 4 }));
+        assert_eq!(DropoutKind::parse("spatial-2"), Some(DropoutKind::Spatial { group: 2 }));
+        assert_eq!(DropoutKind::parse("spatial:0"), None);
+        assert_eq!(DropoutKind::parse("blockwise"), None);
+        assert_eq!(DropoutKind::default(), DropoutKind::Unit);
+    }
+
+    #[test]
+    fn group_geometry() {
+        let sp = DropoutKind::Spatial { group: 8 };
+        assert_eq!(sp.group_dim(96), 12);
+        assert_eq!(sp.group_dim(65), 9);
+        assert_eq!(sp.group_width(65, 8), 1, "last partial group");
+        assert_eq!(DropoutKind::Scale.group_dim(96), 1);
+        assert_eq!(DropoutKind::Unit.group_dim(96), 96);
+        assert_eq!(DropoutKind::Unit.bits_per_instance(&[96, 64]), 160);
+        assert_eq!(DropoutKind::Scale.bits_per_instance(&[96, 64]), 2);
+        assert_eq!(sp.bits_per_instance(&[96, 64]), 12 + 8);
+    }
+
+    #[test]
+    fn scale_gains_preserve_expectation() {
+        for keep in [0.3, 0.5, 0.8] {
+            let (hi, lo) = DropoutKind::scale_gains(keep);
+            assert!((keep * hi + (1.0 - keep) * lo - 1.0).abs() < 1e-12);
+        }
+        let (hi, lo) = DropoutKind::scale_gains(0.5);
+        assert_eq!((hi, lo), (1.5, 0.5), "keep = 1/2 gains are shift-adds");
+    }
+
+    #[test]
+    fn expansion_matches_kind_semantics() {
+        let keep = 0.5;
+        // unit: identity
+        let m = DropoutMask::from_bools(&[true, false, true]);
+        assert_eq!(DropoutKind::Unit.expand_f32(&m, 3, keep), vec![1.0, 0.0, 1.0]);
+        // scale: uniform gain, gate = all ones
+        let hi = DropoutMask::ones(1);
+        let lo = DropoutMask::zeros(1);
+        assert_eq!(DropoutKind::Scale.expand_f32(&hi, 4, keep), vec![0.75; 4]);
+        assert_eq!(DropoutKind::Scale.expand_f32(&lo, 4, keep), vec![0.25; 4]);
+        assert_eq!(DropoutKind::Scale.unit_gate(&lo, 4).active_count(), 4);
+        assert_eq!(DropoutKind::Scale.unit_active(&lo, 4), 4);
+        // spatial: group bits replicated over contiguous channels
+        let sp = DropoutKind::Spatial { group: 2 };
+        let g = DropoutMask::from_bools(&[true, false, true]);
+        assert_eq!(sp.expand_f32(&g, 5, keep), vec![1.0, 1.0, 0.0, 0.0, 1.0]);
+        assert_eq!(sp.unit_gate(&g, 5).to_bools(), vec![true, true, false, false, true]);
+        assert_eq!(sp.unit_active(&g, 5), 3);
+    }
+
+    #[test]
+    fn sampling_draws_group_dim_bits() {
+        let mut src = IdealBernoulli::new(0.5, 7);
+        let sp = DropoutKind::Spatial { group: 8 };
+        assert_eq!(sp.sample_layer(96, &mut src).len(), 12);
+        assert_eq!(DropoutKind::Scale.sample_layer(96, &mut src).len(), 1);
+        assert_eq!(DropoutKind::Unit.sample_layer(96, &mut src).len(), 96);
+    }
+
+    #[test]
+    fn wire_codes_round_trip() {
+        for k in [DropoutKind::Unit, DropoutKind::Scale, DropoutKind::Spatial { group: 4 }] {
+            let (tag, group) = k.wire_code();
+            assert_eq!(DropoutKind::from_wire(tag, group), Some(k));
+        }
+        assert_eq!(DropoutKind::from_wire(9, 0), None);
+        assert_eq!(DropoutKind::from_wire(2, 0), None, "spatial needs a group");
+    }
+}

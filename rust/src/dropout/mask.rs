@@ -26,15 +26,21 @@ impl DropoutMask {
         DropoutMask { words: vec![0u64; len.div_ceil(64)], len }
     }
 
-    /// From a bool slice (true = kept).
+    /// From a bool slice (true = kept). Packs 64 bits per word
+    /// directly — this is the hot constructor of every sampled mask
+    /// (synthetic workloads draw millions through it).
     pub fn from_bools(bits: &[bool]) -> Self {
-        let mut m = DropoutMask::zeros(bits.len());
-        for (i, &b) in bits.iter().enumerate() {
-            if b {
-                m.set(i, true);
-            }
-        }
-        m
+        let words = bits
+            .chunks(64)
+            .map(|chunk| {
+                let mut w = 0u64;
+                for (i, &b) in chunk.iter().enumerate() {
+                    w |= (b as u64) << i;
+                }
+                w
+            })
+            .collect();
+        DropoutMask { words, len: bits.len() }
     }
 
     /// Sample from a dropout-bit source (bit fired => neuron kept).

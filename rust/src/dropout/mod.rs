@@ -2,6 +2,10 @@
 //! optimal sample ordering.
 //!
 //! * [`mask`] — packed dropout masks with Hamming/overlap algebra.
+//! * [`kind`] — the dropout-granularity zoo ([`DropoutKind`]): per-unit
+//!   Bernoulli (§III-A), Scale-Dropout (one stochastic gain per layer)
+//!   and Spatial/channel dropout, all sampled/ordered/delta-diffed in
+//!   *group space* and expanded to unit space only at the executor.
 //! * [`schedule`] — a full MC-Dropout schedule: T iterations of
 //!   per-layer masks, with MAC-workload accounting for typical,
 //!   compute-reuse, and reuse+ordering execution (Fig. 6(b)).
@@ -14,15 +18,18 @@
 //!   rows, ReuseExecutor-equivalent MAC accounting, and the offline
 //!   ordered-schedule cache.
 
+pub mod kind;
 pub mod mask;
 pub mod ordering;
 pub mod plan;
 pub mod reuse;
 pub mod schedule;
 
+pub use kind::DropoutKind;
 pub use mask::DropoutMask;
 pub use plan::{
-    CachedSchedule, ExecutionPlan, OrderingMode, PlanBuilder, PlanRow, PlanStats, ScheduleCache,
+    CachedSchedule, ExecutionPlan, OrderingMode, PlanBuilder, PlanMasking, PlanRow, PlanStats,
+    ScheduleCache,
 };
 pub use reuse::ReuseExecutor;
 pub use schedule::{ExecutionMode, McSchedule, WorkloadReport};

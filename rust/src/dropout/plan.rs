@@ -22,6 +22,7 @@
 //! offline and reads them from SRAM (§IV-B), so a cache hit prices
 //! mask bits as schedule reads instead of online RNG draws.
 
+use super::kind::DropoutKind;
 use super::mask::DropoutMask;
 use super::ordering::tsp::{
     distance_matrix, held_karp_path, held_karp_path_from, nearest_neighbor_2opt,
@@ -61,6 +62,69 @@ impl OrderingMode {
             OrderingMode::Nn2Opt => "nn-2opt",
             OrderingMode::Exact => "exact",
         }
+    }
+}
+
+/// How a plan's group-space masks map back to unit space: the model's
+/// [`DropoutKind`], its keep-probability (feeds the Scale gain pair),
+/// and the hidden layers' *unit* widths. Carried on every
+/// [`ExecutionPlan`] so any backend — the native cim-sim session or a
+/// dense-lowering substrate — expands masks through the exact same
+/// arithmetic, which is what keeps planned outputs `to_bits`-equal to
+/// the kind's dense reference.
+#[derive(Clone, Debug)]
+pub struct PlanMasking {
+    pub kind: DropoutKind,
+    /// Bernoulli keep-probability the masks were drawn with.
+    pub keep: f64,
+    /// Hidden-layer unit widths (one mask per entry).
+    pub unit_dims: Vec<usize>,
+}
+
+impl PlanMasking {
+    pub fn new(kind: DropoutKind, keep: f64, unit_dims: Vec<usize>) -> Self {
+        PlanMasking { kind, keep, unit_dims }
+    }
+
+    /// Legacy per-unit masking (mask space == unit space).
+    pub fn unit(unit_dims: Vec<usize>, keep: f64) -> Self {
+        Self::new(DropoutKind::Unit, keep, unit_dims)
+    }
+
+    /// Group-space mask widths — what the sampler draws and the TSP
+    /// orders over.
+    pub fn group_dims(&self) -> Vec<usize> {
+        self.kind.group_dims(&self.unit_dims)
+    }
+
+    /// RNG bits one instance draws across the hidden layers.
+    pub fn bits_per_instance(&self) -> u64 {
+        self.kind.bits_per_instance(&self.unit_dims)
+    }
+
+    /// One instance's unit-space f32 masks for the digital chain.
+    pub fn masks_f32(&self, masks: &[DropoutMask]) -> Vec<Vec<f32>> {
+        masks
+            .iter()
+            .zip(&self.unit_dims)
+            .map(|(m, &d)| self.kind.expand_f32(m, d, self.keep))
+            .collect()
+    }
+
+    /// Layer `l`'s unit-space column/row gate for a group-space mask.
+    pub fn gate(&self, l: usize, m: &DropoutMask) -> DropoutMask {
+        self.kind.unit_gate(m, self.unit_dims[l])
+    }
+
+    /// Unit columns a group-space `I^A`/`I^D` delta set of layer `l`
+    /// actually toggles (empty for Scale — a gain flip drives nothing).
+    pub fn delta_gate(&self, l: usize, m: &DropoutMask) -> DropoutMask {
+        self.kind.unit_delta(m, self.unit_dims[l])
+    }
+
+    /// Active units of layer `l` under a group-space mask.
+    pub fn unit_active(&self, l: usize, m: &DropoutMask) -> usize {
+        self.kind.unit_active(m, self.unit_dims[l])
     }
 }
 
@@ -168,6 +232,8 @@ pub struct ExecutionPlan {
     /// whenever its quantized code changed at all, and session outputs
     /// are `to_bits`-identical to independent per-frame execution.
     pub epsilon: f32,
+    /// How the rows' group-space masks expand back to unit space.
+    pub masking: PlanMasking,
     pub stats: PlanStats,
 }
 
@@ -177,22 +243,46 @@ pub struct ExecutionPlan {
 pub struct PlanBuilder {
     dims: Vec<usize>,
     ordering: OrderingMode,
+    masking: PlanMasking,
     /// Masks of the last executed instance (None until the session's
-    /// first chunk is built).
+    /// first chunk is built). Group space, like everything the builder
+    /// orders and diffs.
     carry: Option<Vec<DropoutMask>>,
 }
 
 impl PlanBuilder {
     /// `dims` are the model's layer widths (input..output); masks are
-    /// expected one per hidden layer.
+    /// expected one per hidden layer. Per-unit masking (the legacy
+    /// default) — use [`Self::with_kind`] for the granularity zoo.
     pub fn new(dims: &[usize], ordering: OrderingMode) -> Self {
-        assert!(dims.len() >= 2, "a model needs at least two dims");
-        PlanBuilder { dims: dims.to_vec(), ordering, carry: None }
+        Self::with_kind(dims, ordering, DropoutKind::Unit, 1.0 - crate::DROPOUT_P)
     }
 
-    /// Hidden-layer widths (one mask per entry).
-    pub fn mask_dims(&self) -> &[usize] {
-        &self.dims[1..self.dims.len() - 1]
+    /// A builder ordering and delta-diffing in `kind`'s group space.
+    pub fn with_kind(
+        dims: &[usize],
+        ordering: OrderingMode,
+        kind: DropoutKind,
+        keep: f64,
+    ) -> Self {
+        assert!(dims.len() >= 2, "a model needs at least two dims");
+        let unit_dims = dims[1..dims.len() - 1].to_vec();
+        PlanBuilder {
+            dims: dims.to_vec(),
+            ordering,
+            masking: PlanMasking::new(kind, keep, unit_dims),
+            carry: None,
+        }
+    }
+
+    /// Group-space mask widths (one mask per hidden layer) — what a
+    /// chunk's sampled masks must measure.
+    pub fn mask_dims(&self) -> Vec<usize> {
+        self.masking.group_dims()
+    }
+
+    pub fn masking(&self) -> &PlanMasking {
+        &self.masking
     }
 
     /// Order one chunk of sampled masks and emit its plan. `masks` are
@@ -205,8 +295,12 @@ impl PlanBuilder {
         sampled: bool,
     ) -> ExecutionPlan {
         assert!(!masks.is_empty(), "a plan chunk needs at least one instance");
+        let group_dims = self.mask_dims();
         for m in &masks {
-            assert_eq!(m.len(), self.mask_dims().len(), "mask count mismatch");
+            assert_eq!(m.len(), group_dims.len(), "mask count mismatch");
+            for (mask, &d) in m.iter().zip(&group_dims) {
+                assert_eq!(mask.len(), d, "mask width must match the kind's group space");
+            }
         }
         let (order, planned_macs, identity_macs) = self.order_chunk(&masks);
         let stats = PlanStats {
@@ -234,7 +328,15 @@ impl PlanBuilder {
             prev = Some(cur.as_slice());
         }
         self.carry = Some(masks[*order.last().expect("chunk is non-empty")].clone());
-        ExecutionPlan { input: input.to_vec(), rows, order, sampled, epsilon: 0.0, stats }
+        ExecutionPlan {
+            input: input.to_vec(),
+            rows,
+            order,
+            sampled,
+            epsilon: 0.0,
+            masking: self.masking.clone(),
+            stats,
+        }
     }
 
     /// TSP order for the chunk, anchored at the carry mask when one
@@ -317,22 +419,29 @@ impl PlanBuilder {
     /// * each hidden mask gates the *input columns* of the next weight
     ///   matrix: the first instance pays its active columns, each
     ///   subsequent one the Hamming delta, times that layer's fan-out.
+    ///
+    /// Masks arrive in group space; the column work is counted over the
+    /// kind's *unit gates*, so coarse kinds are priced for what they
+    /// really switch: a toggled spatial group costs its full channel
+    /// width, and a Scale gain flip costs zero columns (nothing is
+    /// gated — the executor re-scales digitally).
     fn reuse_macs(&self, masks: &[Vec<DropoutMask>], order: &[usize]) -> u64 {
         let mut total = 0u64;
         if self.carry.is_none() {
             total += (self.dims[0] * self.dims[1]) as u64;
         }
-        for (l, _) in self.mask_dims().iter().enumerate() {
+        for l in 0..self.masking.unit_dims.len() {
             let fan_out = self.dims[l + 2] as u64;
-            let mut prev: Option<&DropoutMask> = self.carry.as_ref().map(|c| &c[l]);
+            let mut prev: Option<DropoutMask> =
+                self.carry.as_ref().map(|c| self.masking.gate(l, &c[l]));
             for &i in order {
-                let cur = &masks[i][l];
-                let cols = match prev {
-                    None => cur.active_count(),
-                    Some(p) => cur.hamming(p),
+                let gate = self.masking.gate(l, &masks[i][l]);
+                let cols = match &prev {
+                    None => gate.active_count(),
+                    Some(p) => gate.hamming(p),
                 } as u64;
                 total += cols * fan_out;
-                prev = Some(cur);
+                prev = Some(gate);
             }
         }
         total
@@ -340,11 +449,12 @@ impl PlanBuilder {
 }
 
 /// Key of one cached schedule: (model id, keep-prob bits, samples,
-/// request seed). The masks a seed produces are a pure function of the
-/// engine's model + source configuration, so two requests with the
-/// same key would sample the identical schedule anyway — the cache
-/// just skips the draws and prices them as SRAM schedule reads.
-pub type ScheduleKey = (String, u64, usize, u64);
+/// request seed, dropout kind). The masks a seed produces are a pure
+/// function of the engine's model + source configuration *and* the
+/// granularity they were drawn at, so two requests with the same key
+/// would sample the identical schedule anyway — the cache just skips
+/// the draws and prices them as SRAM schedule reads.
+pub type ScheduleKey = (String, u64, usize, u64, DropoutKind);
 
 /// A precomputed mask schedule in *sampling* order (ordering is
 /// recomputed deterministically per chunk when the plan is built).
@@ -636,7 +746,7 @@ mod tests {
     #[test]
     fn schedule_cache_counts_hits_and_misses() {
         let cache = ScheduleCache::new();
-        let key: ScheduleKey = ("mnist".into(), 0.5f64.to_bits(), 30, 7);
+        let key: ScheduleKey = ("mnist".into(), 0.5f64.to_bits(), 30, 7, DropoutKind::Unit);
         assert!(cache.lookup(&key).is_none());
         let mut src = IdealBernoulli::new(0.5, 7);
         cache.insert(key.clone(), CachedSchedule { masks: sample_chunk(&mut src, 3, &[4]) });
@@ -652,7 +762,7 @@ mod tests {
     fn schedule_cache_is_bounded_with_lru_eviction() {
         let cache = ScheduleCache::with_capacity(2);
         let mut src = IdealBernoulli::new(0.5, 1);
-        let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed) };
+        let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed, DropoutKind::Unit) };
         for seed in 0..3u64 {
             cache.insert(key(seed), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
         }
@@ -671,7 +781,7 @@ mod tests {
     fn schedule_cache_lookup_refreshes_recency() {
         let cache = ScheduleCache::with_capacity(2);
         let mut src = IdealBernoulli::new(0.5, 2);
-        let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed) };
+        let key = |seed: u64| -> ScheduleKey { ("m".into(), 0u64, 4, seed, DropoutKind::Unit) };
         cache.insert(key(0), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
         cache.insert(key(1), CachedSchedule { masks: sample_chunk(&mut src, 2, &[4]) });
         // touch the older entry: a seeded-flood newcomer must evict

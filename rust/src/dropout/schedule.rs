@@ -1,6 +1,7 @@
 //! MC-Dropout schedules: T iterations of per-layer masks plus the
 //! workload accounting that feeds Fig. 6(b) and the §V energy model.
 
+use super::kind::DropoutKind;
 use super::mask::DropoutMask;
 use super::ordering::order_masks;
 use crate::rng::DropoutBitSource;
@@ -33,11 +34,16 @@ impl ExecutionMode {
 }
 
 /// A full MC-Dropout schedule: `masks[t][l]` = mask of layer l at
-/// iteration t, in *execution order*.
+/// iteration t, in *execution order*. Masks live in the granularity's
+/// *group space* (`kind.group_dims(&layer_sizes)` wide); for
+/// [`DropoutKind::Unit`] that is unit space and nothing changes.
 #[derive(Clone, Debug)]
 pub struct McSchedule {
     pub masks: Vec<Vec<DropoutMask>>,
+    /// Unit widths of the masked (hidden) layers.
     pub layer_sizes: Vec<usize>,
+    /// Granularity the masks were drawn at.
+    pub kind: DropoutKind,
 }
 
 /// MAC workload of one schedule under each execution mode, for a stack
@@ -63,21 +69,29 @@ impl WorkloadReport {
 }
 
 impl McSchedule {
-    /// Sample a schedule of `t` iterations from a dropout-bit source.
+    /// Sample a per-unit schedule of `t` iterations from a dropout-bit
+    /// source (the paper's §III-A granularity).
     pub fn sample<S: DropoutBitSource + ?Sized>(
         t: usize,
         layer_sizes: &[usize],
         src: &mut S,
     ) -> Self {
+        Self::sample_kind(t, layer_sizes, DropoutKind::Unit, src)
+    }
+
+    /// Sample a schedule at an arbitrary granularity: each iteration
+    /// draws `kind.bits_per_instance(layer_sizes)` bits — one per unit,
+    /// one per layer (Scale), or one per channel group (Spatial).
+    pub fn sample_kind<S: DropoutBitSource + ?Sized>(
+        t: usize,
+        layer_sizes: &[usize],
+        kind: DropoutKind,
+        src: &mut S,
+    ) -> Self {
         let masks = (0..t)
-            .map(|_| {
-                layer_sizes
-                    .iter()
-                    .map(|&n| DropoutMask::sample(n, src))
-                    .collect()
-            })
+            .map(|_| kind.sample_layers(layer_sizes, src))
             .collect();
-        McSchedule { masks, layer_sizes: layer_sizes.to_vec() }
+        McSchedule { masks, layer_sizes: layer_sizes.to_vec(), kind }
     }
 
     pub fn iterations(&self) -> usize {
@@ -90,7 +104,7 @@ impl McSchedule {
         let order = order_masks(&self.masks);
         let masks = order.iter().map(|&i| self.masks[i].clone()).collect();
         (
-            McSchedule { masks, layer_sizes: self.layer_sizes.clone() },
+            McSchedule { masks, layer_sizes: self.layer_sizes.clone(), kind: self.kind },
             order,
         )
     }
@@ -121,18 +135,22 @@ impl McSchedule {
         let macs = match mode {
             ExecutionMode::Typical => dense_macs,
             _ => {
+                // Column work is counted over the kind's *unit gates*,
+                // so a toggled spatial group pays its channel width and
+                // Scale's empty gate deltas pay nothing (per-unit masks
+                // reduce to the legacy accounting verbatim).
                 let mut total = 0u64;
-                for l in 0..self.layer_sizes.len() {
+                for (l, &n) in self.layer_sizes.iter().enumerate() {
                     let m = out_sizes[l] as u64;
-                    let mut prev: Option<&DropoutMask> = None;
+                    let mut prev: Option<DropoutMask> = None;
                     for it in masks.iter() {
-                        let cur = &it[l];
-                        let cols = match prev {
-                            None => cur.active_count(),
-                            Some(p) => cur.hamming(p),
+                        let gate = self.kind.unit_gate(&it[l], n);
+                        let cols = match &prev {
+                            None => gate.active_count(),
+                            Some(p) => gate.hamming(p),
                         } as u64;
                         total += cols * m;
-                        prev = Some(cur);
+                        prev = Some(gate);
                     }
                 }
                 total
@@ -200,6 +218,30 @@ mod tests {
         for (new_t, &old_t) in order.iter().enumerate() {
             assert_eq!(ordered.masks[new_t], s.masks[old_t]);
         }
+    }
+
+    #[test]
+    fn scale_schedule_is_one_bit_per_layer_with_free_deltas() {
+        let mut src = IdealBernoulli::new(0.5, 9);
+        let s = McSchedule::sample_kind(10, &[64, 32], DropoutKind::Scale, &mut src);
+        assert_eq!(s.masks[0][0].len(), 1);
+        assert_eq!(s.masks[0][1].len(), 1);
+        // Scale gates nothing: the first instance pays the dense layer,
+        // every subsequent delta is zero columns.
+        let r = s.workload(&[32, 10], ExecutionMode::ComputeReuse);
+        assert_eq!(r.macs, (64 * 32 + 32 * 10) as u64);
+    }
+
+    #[test]
+    fn spatial_schedule_draws_group_space_masks() {
+        let mut src = IdealBernoulli::new(0.5, 10);
+        let sp = DropoutKind::Spatial { group: 8 };
+        let s = McSchedule::sample_kind(5, &[96, 20], sp, &mut src);
+        assert_eq!(s.masks[0][0].len(), 12);
+        assert_eq!(s.masks[0][1].len(), 3);
+        // gate-based workload never exceeds dense
+        let r = s.workload(&[20, 10], ExecutionMode::ComputeReuse);
+        assert!(r.macs <= r.dense_macs);
     }
 
     #[test]

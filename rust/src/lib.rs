@@ -22,9 +22,9 @@
 //! | module | paper section | contents |
 //! |---|---|---|
 //! | [`operator`] | §II-A | fixed-point quantizer, MF operator, bitplane schedules, conventional baseline, word-packed bitplane lanes (`operator::packed`, cached per tensor) for the bit-parallel substrate |
-//! | [`cim`] | §II-B/C | 8T bitcell, 16×31 array, MAV statistics, symmetric + asymmetric SAR xADC, selectable macro inner loop (`cim::Substrate`: packed bit-parallel vs scalar bit-serial, bit-identical), multi-macro grid (`cim::grid`: weight-stationary packed/replicated placement, tile scheduler, per-macro ledgers, spill/reload accounting) |
+//! | [`cim`] | §II-B/C | 8T bitcell, 16×31 array, MAV statistics, symmetric + asymmetric SAR xADC, selectable macro inner loop (`cim::Substrate`: packed bit-parallel vs scalar bit-serial, bit-identical), multi-macro grid (`cim::grid`: weight-stationary packed/replicated placement, tile scheduler, per-macro ledgers, spill/reload accounting), the stack-wide §VI device knob (`cim::NonIdealityConfig`: MAV skew, xADC offset noise, RNG miscalibration — one struct from CLI `--ni-*` to every macro) |
 //! | [`rng`] | §III-B | CCI electrical model, SRAM-embedded calibration, Beta-perturbed Bernoulli sources |
-//! | [`dropout`] | §III-A, §IV | masks, MC schedules, compute reuse, TSP sample ordering, delta-scheduled execution plans + ordered-schedule cache (`dropout::plan`) |
+//! | [`dropout`] | §III-A, §IV | granularity zoo (`dropout::DropoutKind`: per-unit Bernoulli, per-layer scale gains, spatial channel groups — sampled/ordered/delta-diffed in group space), masks, MC schedules, compute reuse, TSP sample ordering, delta-scheduled execution plans + ordered-schedule cache (`dropout::plan`) |
 //! | [`energy`] | §V | per-op energy parameters, the mode-matrix energy model, measured-vs-modeled delta-schedule reporting, chip-level grid report (per-macro dynamic pJ, one-time weight loads, idle-macro LSTP leakage) |
 //! | [`bayes`] | §VI | ensemble aggregation: votes, entropy, variance, Pearson correlation |
 //! | [`runtime`] | — | PJRT client wrapper: HLO-text loading, compilation, execution |

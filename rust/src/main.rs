@@ -16,17 +16,20 @@
 //! `cargo bench`; these subcommands are quick interactive slices.
 
 use anyhow::{anyhow, bail, Result};
-use mc_cim::backend::{make_backend, BackendKind, BackendOptions, PlacementStrategy, Substrate};
+use mc_cim::backend::{
+    make_backend, BackendKind, BackendOptions, NonIdealityConfig, PlacementStrategy, Substrate,
+};
 use mc_cim::bayes::ClassEnsemble;
 use mc_cim::cim::mav::MavModel;
 use mc_cim::cim::xadc::{AdcKind, SarAdc};
 use mc_cim::config::Args;
 use mc_cim::coordinator::{
-    AdaptiveConfig, Coordinator, CoordinatorConfig, DeltaScheduleConfig, McDropoutEngine,
-    Request, Response,
+    AdaptiveConfig, Coordinator, CoordinatorConfig, DeltaScheduleConfig, InferenceRequest,
+    InferenceResponse, McDropoutEngine,
 };
 use mc_cim::dropout::plan::OrderingMode;
 use mc_cim::dropout::schedule::{ExecutionMode, McSchedule};
+use mc_cim::dropout::DropoutKind;
 use mc_cim::energy::{EnergyModel, LayerWorkload, ModeConfig};
 use mc_cim::error::RequestKind;
 use mc_cim::fleet::qos::{Priority, TenantBudgetConfig};
@@ -83,6 +86,14 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|client|energy|rng|adc|reuse> 
                     (cim-sim; replicated runs independent MC samples in parallel)
   --substrate S     macro inner loop: packed (word-parallel, default) | scalar
                     (bit-serial reference; outputs and counters identical)
+  --dropout-kind K  dropout granularity: unit | scale | spatial:G
+                    (default: the model spec's kind; classify/vo rebuild the
+                     engine at K, serve/client stamp K on every request)
+  --ni-mav P[:PN]   MAV non-ideality: trinomial flip probabilities p+[:p-]
+                    (default 0.125:0.125, the paper's measured statistics)
+  --ni-adc-sigma S  fixed-pattern ADC offset noise, LSBs of spread (default 0)
+  --ni-rng-delta D  RNG keep-probability miscalibration: sources emit
+                    keep+D instead of keep (default 0)
   classify: --index N --samples N --bits B --rotate DEG
             --adaptive=true --rule RULE --confidence-level P --risk-profile NAME
             --reuse=true --ordering MODE
@@ -231,6 +242,43 @@ fn apply_delta(engine: &mut McDropoutEngine, reuse: bool, ordering: OrderingMode
     }
 }
 
+/// Parse `--dropout-kind` (None = serve at each model spec's own
+/// granularity).
+fn dropout_kind_from_args(args: &Args) -> Result<Option<DropoutKind>> {
+    match args.get("dropout-kind") {
+        None => Ok(None),
+        Some(s) => Ok(Some(DropoutKind::parse(s).ok_or_else(|| {
+            anyhow!("--dropout-kind: unknown kind '{s}' (unit|scale|spatial:G)")
+        })?)),
+    }
+}
+
+/// Parse the non-ideality flags into one config: `--ni-mav P` (or
+/// `P_POS:P_NEG`), `--ni-adc-sigma S`, `--ni-rng-delta D`. Absent
+/// flags keep the paper-default ideal/trinomial values.
+fn non_ideality_from_args(args: &Args) -> Result<NonIdealityConfig> {
+    let mut ni = NonIdealityConfig::default();
+    if let Some(s) = args.get("ni-mav") {
+        let parse = |t: &str| {
+            t.parse::<f64>()
+                .map_err(|_| anyhow!("--ni-mav: expected P or P_POS:P_NEG, got '{s}'"))
+        };
+        match s.split_once(':') {
+            Some((a, b)) => {
+                ni.mav_p_pos = parse(a)?;
+                ni.mav_p_neg = parse(b)?;
+            }
+            None => {
+                ni.mav_p_pos = parse(s)?;
+                ni.mav_p_neg = ni.mav_p_pos;
+            }
+        }
+    }
+    ni.adc_sigma = args.get_f64("ni-adc-sigma", ni.adc_sigma).map_err(|e| anyhow!(e))?;
+    ni.rng_delta = args.get_f64("ni-rng-delta", ni.rng_delta).map_err(|e| anyhow!(e))?;
+    Ok(ni)
+}
+
 /// Parse `--backend` (build default when absent).
 fn backend_from_args(args: &Args) -> Result<BackendKind> {
     match args.get("backend") {
@@ -321,9 +369,14 @@ fn build_engine(
     bits: Option<u8>,
     rt: Option<&Runtime>,
     grid: (usize, PlacementStrategy, Substrate),
+    dropout_kind: Option<DropoutKind>,
+    non_ideality: NonIdealityConfig,
 ) -> Result<McDropoutEngine> {
     let registry = ModelRegistry::builtin(meta);
-    let spec = registry.get(model)?;
+    let mut spec = registry.get(model)?.clone();
+    if let Some(k) = dropout_kind {
+        spec = spec.with_kind(k);
+    }
     let opts = BackendOptions {
         bits,
         pallas: false,
@@ -331,11 +384,12 @@ fn build_engine(
         placement: grid.1,
         substrate: grid.2,
         capacity: None,
+        non_ideality,
     };
-    let backend = make_backend(kind, rt, dir, spec, &opts)?;
+    let backend = make_backend(kind, rt, dir, &spec, &opts)?;
     let engine = McDropoutEngine::with_backend(
         backend,
-        spec,
+        &spec,
         bits,
         mc_cim::energy::ModeConfig::mf_asym_reuse_ordered(),
     )?;
@@ -390,6 +444,8 @@ fn cmd_classify(args: &Args) -> Result<()> {
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
     let grid = grid_from_args(args)?;
+    let dkind = dropout_kind_from_args(args)?;
+    let ni = non_ideality_from_args(args)?;
     let mut engine = build_engine(
         &dir,
         &meta,
@@ -398,10 +454,16 @@ fn cmd_classify(args: &Args) -> Result<()> {
         (bits > 0).then_some(bits as u8),
         rt.as_ref(),
         grid,
+        dkind,
+        ni,
     )?;
     let (reuse, ordering) = delta_from_args(args)?;
     apply_delta(&mut engine, reuse, ordering);
     println!("backend: {}{}", engine.backend_name(), grid_banner(kind, grid));
+    println!("dropout kind: {}", engine.dropout_kind().label());
+    if !ni.is_ideal() {
+        println!("non-ideality: {}", ni.label());
+    }
     let mut src = IdealBernoulli::new(1.0 - meta.dropout_p, 42);
 
     if let Some(ad) = adaptive_from_args(args)? {
@@ -504,10 +566,17 @@ fn cmd_vo(args: &Args) -> Result<()> {
     let kind = backend_from_args(args)?;
     let rt = runtime_for(kind)?;
     let grid = grid_from_args(args)?;
-    let mut engine = build_engine(&dir, &meta, "vo", kind, None, rt.as_ref(), grid)?;
+    let dkind = dropout_kind_from_args(args)?;
+    let ni = non_ideality_from_args(args)?;
+    let mut engine =
+        build_engine(&dir, &meta, "vo", kind, None, rt.as_ref(), grid, dkind, ni)?;
     let (reuse, ordering) = delta_from_args(args)?;
     apply_delta(&mut engine, reuse, ordering);
     println!("backend: {}{}", engine.backend_name(), grid_banner(kind, grid));
+    println!("dropout kind: {}", engine.dropout_kind().label());
+    if !ni.is_ideal() {
+        println!("non-ideality: {}", ni.label());
+    }
     if stream {
         println!(
             "streaming session: schedule + product-sums persist across frames (epsilon {epsilon})"
@@ -577,12 +646,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let (reuse, ordering) = delta_from_args(args)?;
     let (macros, placement, substrate) = grid_from_args(args)?;
     let (tenants, fleet_models, capacity) = fleet_from_args(args)?;
+    let dkind = dropout_kind_from_args(args)?;
+    let non_ideality = non_ideality_from_args(args)?;
     println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement, substrate)));
     if reuse {
         println!("delta schedule: reuse on, ordering {}", ordering.label());
     }
     if !fleet_models.is_empty() {
         println!("fleet: co-placing [{}] on the shared grid", fleet_models.join(", "));
+    }
+    if let Some(k) = dkind {
+        println!("dropout kind: {} (request override)", k.label());
+    }
+    if !non_ideality.is_ideal() {
+        println!("non-ideality: {}", non_ideality.label());
     }
     let cfg = CoordinatorConfig {
         artifacts: dir,
@@ -592,6 +669,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         macros,
         placement,
         substrate,
+        non_ideality,
         adaptive,
         reuse,
         ordering,
@@ -604,10 +682,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..requests)
         .map(|i| {
-            coord.submit(Request::Classify {
-                image: test.images[i % test.len()].clone(),
-                samples,
-            })
+            let mut req = InferenceRequest::classify(test.images[i % test.len()].clone())
+                .with_samples(samples);
+            if let Some(k) = dkind {
+                req = req.with_dropout_kind(k);
+            }
+            coord.submit_request(req)
         })
         .collect();
     let mut correct = 0usize;
@@ -615,7 +695,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut abstained = 0usize;
     for (i, rx) in rxs.into_iter().enumerate() {
         match rx.recv()? {
-            Response::Class(c) => {
+            Ok(InferenceResponse::Class(c)) => {
                 if c.verdict == Verdict::Abstain {
                     abstained += 1;
                     continue;
@@ -625,8 +705,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     correct += 1;
                 }
             }
-            Response::Error(e) => bail!("request {i}: {e}"),
-            _ => bail!("unexpected response type"),
+            Ok(_) => bail!("unexpected response type"),
+            Err(e) => bail!("request {i}: {e}"),
         }
     }
     let dt = t0.elapsed().as_secs_f64();
@@ -681,9 +761,13 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let drain_secs = args.get_usize("drain-secs", 10).map_err(|e| anyhow!(e))?;
     let duration_secs = args.get_usize("duration-secs", 0).map_err(|e| anyhow!(e))?;
 
+    let non_ideality = non_ideality_from_args(args)?;
     println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement, substrate)));
     if reuse {
         println!("delta schedule: reuse on, ordering {}", ordering.label());
+    }
+    if !non_ideality.is_ideal() {
+        println!("non-ideality: {}", non_ideality.label());
     }
     let cfg = CoordinatorConfig {
         artifacts: dir,
@@ -693,6 +777,7 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
         macros,
         placement,
         substrate,
+        non_ideality,
         adaptive,
         reuse,
         ordering,
@@ -777,6 +862,8 @@ fn cmd_client(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("--priority: unknown level '{p}' (high|normal|low)"))?;
         client.set_priority(pri);
     }
+    let dkind = dropout_kind_from_args(args)?;
+    client.set_dropout_kind(dkind);
     let t_ping = Instant::now();
     let nonce = client.send_ping()?;
     match client.recv_matching(nonce)? {
@@ -816,6 +903,7 @@ fn cmd_client(args: &Args) -> Result<()> {
                     input,
                     tenant: None,
                     priority: Priority::Normal,
+                    dropout_kind: dkind,
                 },
                 kind: if model == "mnist" {
                     RequestKind::Classify

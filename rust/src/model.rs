@@ -8,6 +8,7 @@
 //! new workloads — register at runtime with [`ModelRegistry::register`]
 //! without touching the engine or the serving loop.
 
+use crate::dropout::DropoutKind;
 use crate::error::McCimError;
 use crate::workloads::Meta;
 use anyhow::Result;
@@ -34,6 +35,9 @@ pub struct ModelSpec {
     pub dropout_p: f64,
     /// Rows per compiled executable call (the fixed MC batch B).
     pub mc_batch: usize,
+    /// Mask granularity the network serves with (meta.json
+    /// `dropout_kind`; per-unit Bernoulli when absent).
+    pub dropout_kind: DropoutKind,
 }
 
 impl ModelSpec {
@@ -48,6 +52,12 @@ impl ModelSpec {
     /// Hidden-layer widths — one dropout mask per entry.
     pub fn mask_dims(&self) -> Vec<usize> {
         self.dims[1..self.dims.len() - 1].to_vec()
+    }
+
+    /// Group-space mask widths under the spec's dropout kind — what the
+    /// sampler draws and the §IV planner orders over.
+    pub fn group_mask_dims(&self) -> Vec<usize> {
+        self.dropout_kind.group_dims(&self.mask_dims())
     }
 
     /// FC layer count.
@@ -77,7 +87,14 @@ impl ModelSpec {
             mask_keep: 1.0 - crate::DROPOUT_P,
             dropout_p: crate::DROPOUT_P,
             mc_batch: crate::MC_SAMPLES,
+            dropout_kind: DropoutKind::Unit,
         }
+    }
+
+    /// Same spec at a different mask granularity (zoo benches, tests).
+    pub fn with_kind(mut self, kind: DropoutKind) -> Self {
+        self.dropout_kind = kind;
+        self
     }
 }
 
@@ -136,6 +153,7 @@ impl ModelRegistry {
             mask_keep: meta.mnist_mask_keep,
             dropout_p: meta.dropout_p,
             mc_batch: meta.mc_batch,
+            dropout_kind: meta.dropout_kind,
         });
         r.register(ModelSpec {
             id: "vo".into(),
@@ -146,6 +164,7 @@ impl ModelRegistry {
             mask_keep: meta.vo_mask_keep,
             dropout_p: meta.dropout_p,
             mc_batch: meta.mc_batch,
+            dropout_kind: meta.dropout_kind,
         });
         r.register(ModelSpec {
             id: "vo-thin".into(),
@@ -156,6 +175,7 @@ impl ModelRegistry {
             mask_keep: meta.vo_mask_keep,
             dropout_p: meta.dropout_p,
             mc_batch: meta.mc_batch,
+            dropout_kind: meta.dropout_kind,
         });
         r
     }

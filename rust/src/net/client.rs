@@ -10,6 +10,7 @@
 
 use super::wire::{write_frame, Frame, FrameReader, ReadEvent, WireError, WireStreamCall};
 use crate::coordinator::{ClassifyResponse, PoseResponse};
+use crate::dropout::DropoutKind;
 use crate::fleet::qos::Priority;
 use anyhow::{bail, Context, Result};
 use std::collections::VecDeque;
@@ -43,6 +44,9 @@ pub struct WireClient {
     tenant: Option<String>,
     /// Priority lane stamped on every outgoing call.
     priority: Priority,
+    /// Dropout-granularity override stamped on every outgoing call
+    /// (None = the model spec's kind).
+    dropout_kind: Option<DropoutKind>,
 }
 
 impl WireClient {
@@ -55,6 +59,7 @@ impl WireClient {
             stashed: VecDeque::new(),
             tenant: None,
             priority: Priority::Normal,
+            dropout_kind: None,
         })
     }
 
@@ -66,6 +71,12 @@ impl WireClient {
     /// Stamp every subsequent call with this priority lane.
     pub fn set_priority(&mut self, priority: Priority) {
         self.priority = priority;
+    }
+
+    /// Stamp every subsequent call with this dropout-granularity
+    /// override (None = serve at the model spec's kind).
+    pub fn set_dropout_kind(&mut self, kind: Option<DropoutKind>) {
+        self.dropout_kind = kind;
     }
 
     /// Bound every receive: [`Self::recv`] fails instead of blocking
@@ -97,6 +108,7 @@ impl WireClient {
             input,
             tenant: self.tenant.clone(),
             priority: self.priority,
+            dropout_kind: self.dropout_kind,
         };
         write_frame(&mut self.stream, &Frame::Classify(call)).context("sending classify")?;
         Ok(id)
@@ -119,6 +131,7 @@ impl WireClient {
             input,
             tenant: self.tenant.clone(),
             priority: self.priority,
+            dropout_kind: self.dropout_kind,
         };
         write_frame(&mut self.stream, &Frame::Regress(call)).context("sending regress")?;
         Ok(id)

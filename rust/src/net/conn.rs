@@ -378,6 +378,9 @@ fn build_call(call: &WireCall, kind: RequestKind) -> InferenceRequest {
     if let Some(seed) = call.seed {
         req = req.with_seed(seed);
     }
+    if let Some(kind) = call.dropout_kind {
+        req = req.with_dropout_kind(kind);
+    }
     req
 }
 

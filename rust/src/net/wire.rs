@@ -24,6 +24,7 @@
 //! without losing a half-received frame.
 
 use crate::coordinator::request::{ClassifyResponse, PoseResponse, StreamFrameInfo};
+use crate::dropout::DropoutKind;
 use crate::error::{McCimError, RequestKind};
 use crate::fleet::qos::Priority;
 use crate::uncertainty::policy::Verdict;
@@ -32,11 +33,14 @@ use std::io::{ErrorKind, Read, Write};
 
 /// First two bytes of every frame.
 pub const WIRE_MAGIC: [u8; 2] = *b"MC";
-/// Protocol version this build emits. Version 2 appends tenant +
-/// priority to every request call; version-1 peers are still accepted
-/// (their requests decode as anonymous / [`Priority::Normal`], exactly
-/// the pre-QoS behavior).
-pub const WIRE_VERSION: u8 = 2;
+/// Protocol version this build emits. Version 2 appended tenant +
+/// priority to every request call; version 3 appends a
+/// dropout-granularity override (tag + spatial group). Older peers are
+/// still accepted: version-1 requests decode as anonymous /
+/// [`Priority::Normal`], and version-1/-2 requests decode with no kind
+/// override — the model spec's granularity, exactly the pre-zoo
+/// behavior.
+pub const WIRE_VERSION: u8 = 3;
 /// Oldest protocol version this build still decodes.
 pub const WIRE_VERSION_MIN: u8 = 1;
 /// Fixed frame-header length (magic + version + type + payload len).
@@ -234,6 +238,9 @@ pub struct WireCall {
     /// Queue lane for this request (version-1 peers decode as
     /// [`Priority::Normal`]).
     pub priority: Priority,
+    /// Dropout-granularity override (None = the model spec's kind;
+    /// version-1/-2 peers decode as None).
+    pub dropout_kind: Option<DropoutKind>,
 }
 
 /// One frame of a remote streaming session.
@@ -462,6 +469,19 @@ fn enc_call(out: &mut Vec<u8>, c: &WireCall) {
     // version-2 tail: tenant ("" = anonymous) + priority lane
     put_str(out, c.tenant.as_deref().unwrap_or(""));
     out.push(c.priority.wire_code());
+    // version-3 tail: dropout-kind override — one tag byte (0 = no
+    // override, else DropoutKind wire tag + 1) + u32 spatial group
+    match c.dropout_kind {
+        None => {
+            out.push(0);
+            put_u32(out, 0);
+        }
+        Some(k) => {
+            let (tag, group) = k.wire_code();
+            out.push(tag + 1);
+            put_u32(out, group);
+        }
+    }
 }
 
 fn dec_call(cur: &mut Cur, version: u8) -> Result<WireCall, WireDecodeError> {
@@ -479,7 +499,19 @@ fn dec_call(cur: &mut Cur, version: u8) -> Result<WireCall, WireDecodeError> {
     } else {
         (None, Priority::Normal)
     };
-    Ok(WireCall { id, model, samples, seed, input, tenant, priority })
+    let dropout_kind = if version >= 3 {
+        let tag = cur.u8()?;
+        let group = cur.u32()?;
+        match tag {
+            0 => None,
+            t => Some(DropoutKind::from_wire(t - 1, group).ok_or_else(|| {
+                WireDecodeError::Malformed(format!("bad dropout-kind tag {t} (group {group})"))
+            })?),
+        }
+    } else {
+        None
+    };
+    Ok(WireCall { id, model, samples, seed, input, tenant, priority, dropout_kind })
 }
 
 fn enc_kind(out: &mut Vec<u8>, k: RequestKind) {
@@ -837,6 +869,7 @@ mod tests {
                 input: vec![0.5, -1.0, 0.25],
                 tenant: Some("drone-fleet".into()),
                 priority: Priority::High,
+                dropout_kind: Some(DropoutKind::Spatial { group: 4 }),
             }),
             Frame::Regress(WireCall {
                 id: 2,
@@ -846,6 +879,7 @@ mod tests {
                 input: vec![0.0; 12],
                 tenant: None,
                 priority: Priority::Low,
+                dropout_kind: Some(DropoutKind::Scale),
             }),
             Frame::StreamFrame(WireStreamCall {
                 call: WireCall {
@@ -856,6 +890,7 @@ mod tests {
                     input: vec![1.0, 2.0],
                     tenant: Some("lab".into()),
                     priority: Priority::Normal,
+                    dropout_kind: None,
                 },
                 kind: RequestKind::Regress,
                 session: "drone-7".into(),
@@ -922,11 +957,63 @@ mod tests {
             input: vec![1.0],
             tenant: None,
             priority: Priority::Normal,
+            dropout_kind: None,
         }));
         let mut f = f;
-        let last = f.len() - 1; // priority byte is the payload tail
-        f[last] = 200;
+        // priority byte sits just before the 5-byte v3 kind tail
+        let at = f.len() - 6;
+        f[at] = 200;
         assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn bad_dropout_kind_tag_is_malformed() {
+        let mut f = encode_frame(&Frame::Classify(WireCall {
+            id: 1,
+            model: "m".into(),
+            samples: 1,
+            seed: None,
+            input: vec![1.0],
+            tenant: None,
+            priority: Priority::Normal,
+            dropout_kind: None,
+        }));
+        // kind tag is the first byte of the 5-byte v3 tail
+        let at = f.len() - 5;
+        f[at] = 9;
+        assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
+        // spatial (tag 3) with a zero group is equally invalid
+        f[at] = 3;
+        assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
+    }
+
+    #[test]
+    fn version_2_requests_decode_with_no_kind_override() {
+        // hand-encode a v2 classify call: QoS tail but no kind tail
+        let mut payload = Vec::new();
+        put_u64(&mut payload, 4);
+        put_str(&mut payload, "mnist");
+        put_u32(&mut payload, 30);
+        put_bool(&mut payload, false); // no seed
+        put_f32s(&mut payload, &[0.5, 0.25]);
+        put_str(&mut payload, "lab");
+        payload.push(Priority::High.wire_code());
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&WIRE_MAGIC);
+        buf.push(2);
+        buf.push(T_CLASSIFY);
+        buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        buf.extend_from_slice(&payload);
+        let (frame, used) = decode_frame(&buf).expect("v2 still decodes");
+        assert_eq!(used, buf.len());
+        match frame {
+            Frame::Classify(c) => {
+                assert_eq!(c.tenant.as_deref(), Some("lab"));
+                assert_eq!(c.priority, Priority::High);
+                assert_eq!(c.dropout_kind, None, "pre-zoo peers get the spec's kind");
+            }
+            other => panic!("expected classify, got {other:?}"),
+        }
     }
 
     #[test]
@@ -987,10 +1074,11 @@ mod tests {
             input: vec![1.0],
             tenant: None,
             priority: Priority::Normal,
+            dropout_kind: None,
         }));
-        // [count:u32][one f32] sits before the 3-byte v2 tail
-        // (empty tenant str + priority)
-        let count_at = f.len() - 11;
+        // [count:u32][one f32] sits before the 8-byte request tail
+        // (empty tenant str + priority + 5-byte kind override)
+        let count_at = f.len() - 16;
         f[count_at..count_at + 4].copy_from_slice(&(1u32 << 30).to_be_bytes());
         assert!(matches!(decode_frame(&f), Err(WireDecodeError::Malformed(_))));
     }

@@ -2,6 +2,7 @@
 //! and the rust coordinator (network dims, MC batch, dropout p, pose
 //! normalization, build-time training metrics).
 
+use crate::dropout::DropoutKind;
 use crate::util::json::Json;
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
@@ -11,6 +12,10 @@ use std::path::Path;
 pub struct Meta {
     pub mc_batch: usize,
     pub dropout_p: f64,
+    /// Mask granularity the networks trained with (optional
+    /// `dropout_kind` key: `unit` / `scale` / `spatial:G`; per-unit
+    /// Bernoulli when absent — the paper's §III-A setup).
+    pub dropout_kind: DropoutKind,
     /// Bernoulli keep-probability of the classifier masks (paper: 0.5).
     pub mnist_mask_keep: f64,
     /// Keep-probability of the VO regression head (PoseNet-style 0.8;
@@ -46,9 +51,15 @@ impl Meta {
         };
         let dropout_p = j.req_f64("dropout_p").map_err(|e| anyhow!("{e}"))?;
         let opt = |k: &str, dflt: f64| j.req_f64(k).unwrap_or(dflt);
+        let dropout_kind = match j.get("dropout_kind").and_then(Json::as_str) {
+            Some(s) => DropoutKind::parse(s)
+                .ok_or_else(|| anyhow!("meta.json: unknown dropout_kind '{s}'"))?,
+            None => DropoutKind::Unit,
+        };
         Ok(Meta {
             mc_batch: j.req_f64("mc_batch").map_err(|e| anyhow!("{e}"))? as usize,
             dropout_p,
+            dropout_kind,
             mnist_mask_keep: opt("mnist_mask_keep", 1.0 - dropout_p),
             vo_mask_keep: opt("vo_mask_keep", 1.0 - dropout_p),
             mnist_dims: dims("mnist_dims")?,
@@ -97,5 +108,17 @@ mod tests {
     #[test]
     fn missing_field_is_an_error() {
         assert!(Meta::parse("{}").is_err());
+    }
+
+    #[test]
+    fn dropout_kind_defaults_unit_and_parses() {
+        assert_eq!(Meta::parse(SAMPLE).unwrap().dropout_kind, DropoutKind::Unit);
+        let with_kind = SAMPLE.replacen('{', r#"{"dropout_kind": "spatial:8","#, 1);
+        assert_eq!(
+            Meta::parse(&with_kind).unwrap().dropout_kind,
+            DropoutKind::Spatial { group: 8 }
+        );
+        let bad = SAMPLE.replacen('{', r#"{"dropout_kind": "blockwise","#, 1);
+        assert!(Meta::parse(&bad).is_err());
     }
 }

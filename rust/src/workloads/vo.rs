@@ -191,6 +191,7 @@ mod tests {
         Meta {
             mc_batch: 30,
             dropout_p: 0.5,
+            dropout_kind: crate::dropout::DropoutKind::Unit,
             mnist_mask_keep: 0.5,
             vo_mask_keep: 0.8,
             mnist_dims: vec![784, 256, 128, 10],

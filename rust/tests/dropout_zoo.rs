@@ -1,0 +1,229 @@
+//! Dropout-granularity zoo — cross-layer property tests.
+//!
+//! The per-kind contract the refactor rests on:
+//!
+//! * every execution path (dense rows, §IV delta plan, streaming
+//!   session frame 0, multi-macro grid) produces **bit-identical**
+//!   outputs for the same (kind, seed) — granularity is a sampling
+//!   choice, never a numerics fork per path;
+//! * Scale draws exactly one RNG bit per hidden layer per instance;
+//! * Spatial group masks are group-aligned in unit space;
+//! * version-2 wire frames (pre-zoo peers) decode with no kind
+//!   override, version-3 round-trips preserve the override.
+
+use mc_cim::backend::{CimSimBackend, GridConfig, LayerParams, PlacementStrategy};
+use mc_cim::coordinator::{DeltaScheduleConfig, McDropoutEngine};
+use mc_cim::dropout::{DropoutKind, OrderingMode};
+use mc_cim::energy::ModeConfig;
+use mc_cim::model::ModelSpec;
+use mc_cim::net::{decode_frame, encode_frame, Frame, WireCall, WIRE_MAGIC};
+use mc_cim::rng::{CountingSource, IdealBernoulli};
+use mc_cim::util::testkit::f32_vec;
+use mc_cim::util::Pcg32;
+
+const DIMS: [usize; 4] = [24, 16, 12, 6];
+const SAMPLES: usize = 10;
+const SEED: u64 = 4242;
+
+fn all_kinds() -> Vec<DropoutKind> {
+    vec![
+        DropoutKind::Unit,
+        DropoutKind::Scale,
+        DropoutKind::Spatial { group: 4 },
+        DropoutKind::Spatial { group: 5 }, // ragged tail group
+    ]
+}
+
+fn build_engine(kind: DropoutKind, macros: usize, delta: bool) -> McDropoutEngine {
+    let spec = ModelSpec::synthetic("zoo-test", DIMS.to_vec()).with_kind(kind);
+    let mut rng = Pcg32::seeded(77);
+    let layers: Vec<LayerParams> = (0..DIMS.len() - 1)
+        .map(|l| {
+            let (fi, fo) = (DIMS[l], DIMS[l + 1]);
+            LayerParams {
+                w: f32_vec(&mut rng, fi * fo, 1.0),
+                b: f32_vec(&mut rng, fo, 0.1),
+                s: vec![0.2; fo],
+            }
+        })
+        .collect();
+    let grid = GridConfig::with_macros(macros, PlacementStrategy::Replicated);
+    let backend = CimSimBackend::from_params_grid(&spec, layers, 6, grid).unwrap();
+    let mut eng = McDropoutEngine::with_backend(
+        Box::new(backend),
+        &spec,
+        Some(6),
+        ModeConfig::mf_asym_reuse_ordered(),
+    )
+    .unwrap();
+    if delta {
+        eng.set_delta_schedule(DeltaScheduleConfig {
+            reuse: true,
+            ordering: OrderingMode::Nn2Opt,
+            cache: None,
+        });
+    }
+    eng
+}
+
+fn src() -> IdealBernoulli {
+    IdealBernoulli::new(0.5, SEED)
+}
+
+fn assert_bit_identical(a: &[Vec<f32>], b: &[Vec<f32>], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: sample count");
+    for (r, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{label}: row {r} width");
+        for (j, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: row {r} out[{j}] must be bit-identical"
+            );
+        }
+    }
+}
+
+#[test]
+fn per_kind_outputs_bit_identical_across_execution_paths() {
+    let mut rng = Pcg32::seeded(5);
+    let x = f32_vec(&mut rng, DIMS[0], 1.0);
+    for kind in all_kinds() {
+        let label = kind.label();
+        let dense = build_engine(kind, 1, false);
+        let base = dense.infer_mc(&x, SAMPLES, &mut src()).unwrap();
+        assert!(base.plan.is_none(), "{label}: dense path must not plan");
+
+        // §IV delta plan (reuse + TSP ordering in group space)
+        let planned = build_engine(kind, 1, true);
+        let out = planned.infer_mc(&x, SAMPLES, &mut src()).unwrap();
+        assert!(out.plan.is_some(), "{label}: delta path must report plan stats");
+        assert_bit_identical(&base.samples, &out.samples, &format!("{label}: planned"));
+
+        // streaming session, cold frame
+        let stream = build_engine(kind, 1, true);
+        let mut sess = stream.begin_session(0.0);
+        let out = stream.infer_mc_stream(&x, SAMPLES, &mut src(), &mut sess).unwrap();
+        assert_bit_identical(&base.samples, &out.samples, &format!("{label}: stream"));
+
+        // 4-macro grid, dense rows fanned across macros
+        let grid = build_engine(kind, 4, false);
+        let out = grid.infer_mc(&x, SAMPLES, &mut src()).unwrap();
+        assert_bit_identical(&base.samples, &out.samples, &format!("{label}: grid"));
+    }
+}
+
+#[test]
+fn scale_draws_exactly_one_bit_per_layer_per_instance() {
+    let mut rng = Pcg32::seeded(6);
+    let x = f32_vec(&mut rng, DIMS[0], 1.0);
+    let hidden_layers = (DIMS.len() - 2) as u64;
+    for delta in [false, true] {
+        let eng = build_engine(DropoutKind::Scale, 1, delta);
+        assert_eq!(eng.mask_bits_per_instance(), hidden_layers);
+        let mut counting = CountingSource::new(src());
+        eng.infer_mc(&x, SAMPLES, &mut counting).unwrap();
+        assert_eq!(
+            counting.bits_drawn(),
+            hidden_layers * SAMPLES as u64,
+            "scale must draw one stochastic scalar per layer per instance (delta={delta})"
+        );
+    }
+    // and per-unit really does pay the full unit-space price
+    let eng = build_engine(DropoutKind::Unit, 1, false);
+    let mut counting = CountingSource::new(src());
+    eng.infer_mc(&x, SAMPLES, &mut counting).unwrap();
+    let unit_bits: u64 = DIMS[1..DIMS.len() - 1].iter().map(|&d| d as u64).sum();
+    assert_eq!(counting.bits_drawn(), unit_bits * SAMPLES as u64);
+}
+
+#[test]
+fn spatial_masks_are_group_aligned_in_unit_space() {
+    let mut s = src();
+    for group in [2usize, 4, 5] {
+        let kind = DropoutKind::Spatial { group };
+        for &d in &[12usize, 16, 31] {
+            for _ in 0..20 {
+                let m = kind.sample_layer(d, &mut s);
+                assert_eq!(m.len(), kind.group_dim(d));
+                let gate = kind.unit_gate(&m, d);
+                assert_eq!(gate.len(), d);
+                // every unit in a group carries its group's bit
+                for g in 0..m.len() {
+                    for u in 0..kind.group_width(d, g) {
+                        assert_eq!(
+                            gate.get(g * group + u),
+                            m.get(g),
+                            "group {g} unit {u} of dim {d} (group size {group})"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Hand-encode a version-2 classify frame (QoS tail, no kind tail) the
+/// way a pre-zoo peer would emit it, through the public codec surface.
+fn v2_classify_frame(model: &str, input: &[f32]) -> Vec<u8> {
+    let mut p = Vec::new();
+    p.extend_from_slice(&7u64.to_be_bytes()); // id
+    p.extend_from_slice(&(model.len() as u16).to_be_bytes());
+    p.extend_from_slice(model.as_bytes());
+    p.extend_from_slice(&(SAMPLES as u32).to_be_bytes());
+    p.push(0); // no seed
+    p.extend_from_slice(&(input.len() as u32).to_be_bytes());
+    for &v in input {
+        p.extend_from_slice(&v.to_be_bytes());
+    }
+    p.extend_from_slice(&0u16.to_be_bytes()); // empty tenant
+    p.push(0); // Priority::Normal
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&WIRE_MAGIC);
+    buf.push(2); // version 2: predates the kind tail
+    buf.push(1); // T_CLASSIFY
+    buf.extend_from_slice(&(p.len() as u32).to_be_bytes());
+    buf.extend_from_slice(&p);
+    buf
+}
+
+#[test]
+fn v2_wire_frames_decode_with_model_default_kind() {
+    let buf = v2_classify_frame("mnist", &[0.5, 0.25, 0.125]);
+    let (frame, used) = decode_frame(&buf).expect("v2 frames must keep decoding");
+    assert_eq!(used, buf.len());
+    match frame {
+        Frame::Classify(c) => {
+            assert_eq!(c.id, 7);
+            assert_eq!(c.model, "mnist");
+            assert_eq!(c.samples, SAMPLES as u32);
+            assert_eq!(c.input, vec![0.5, 0.25, 0.125]);
+            assert_eq!(
+                c.dropout_kind, None,
+                "pre-zoo peers must get the model spec's granularity"
+            );
+        }
+        other => panic!("expected classify, got {other:?}"),
+    }
+}
+
+#[test]
+fn v3_round_trip_preserves_kind_override() {
+    for kind in all_kinds() {
+        let call = WireCall {
+            id: 9,
+            model: "mnist".into(),
+            samples: SAMPLES as u32,
+            seed: Some(3),
+            input: vec![1.0, 2.0],
+            tenant: None,
+            priority: Default::default(),
+            dropout_kind: Some(kind),
+        };
+        let bytes = encode_frame(&Frame::Classify(call));
+        match decode_frame(&bytes).expect("v3 round-trip").0 {
+            Frame::Classify(c) => assert_eq!(c.dropout_kind, Some(kind)),
+            other => panic!("expected classify, got {other:?}"),
+        }
+    }
+}

@@ -25,6 +25,7 @@ use mc_cim::backend::BackendKind;
 use mc_cim::coordinator::{
     ClassifyResponse, Coordinator, CoordinatorConfig, PoseResponse, StreamFrameInfo,
 };
+use mc_cim::dropout::DropoutKind;
 use mc_cim::error::RequestKind;
 use mc_cim::fleet::qos::Priority;
 use mc_cim::net::{
@@ -106,6 +107,7 @@ fn exemplar_frames() -> Vec<Frame> {
         input: vec![0.25, -1.5, 3.0],
         tenant: Some("acme".into()),
         priority: Priority::High,
+        dropout_kind: Some(DropoutKind::Spatial { group: 4 }),
     };
     let stream_info = StreamFrameInfo {
         session: "drone-7".into(),
@@ -294,6 +296,7 @@ fn remote_streams_reuse_state_and_are_namespaced_per_connection() {
                         input: vo_frame(seed + t),
                         tenant: None,
                         priority: Priority::Normal,
+                        dropout_kind: None,
                     },
                     kind: RequestKind::Regress,
                     session: "shared-name".into(),
