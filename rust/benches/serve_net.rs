@@ -65,6 +65,7 @@ fn start_server(dir: &Path, workers: usize, admission: AdmissionConfig) -> NetSe
             admission,
             idle_timeout: Duration::from_secs(60),
             drain_deadline: Duration::from_secs(30),
+            ..Default::default()
         },
     )
     .unwrap()

@@ -147,6 +147,27 @@ pub struct Metrics {
     /// Frames that failed to decode (the connection is torn down after
     /// the first one).
     malformed_frames: AtomicU64,
+    // -- reactor ledger (`net/reactor.rs` event loops) --
+    /// Gauge: reactor shards serving connections (0 = the thread-per-
+    /// connection transport is in use and the reactor line is omitted).
+    reactor_shards: AtomicU64,
+    /// Eventfd wakeups delivered into reactor poll loops (one per
+    /// batch of cross-thread completions/accepts, not one per frame).
+    reactor_wakeups: AtomicU64,
+    /// `read(2)` calls issued by reactor shards on connection sockets.
+    net_read_syscalls: AtomicU64,
+    /// `write(2)` calls issued by reactor shards on connection sockets.
+    net_write_syscalls: AtomicU64,
+    /// Times a connection crossed its write high-water mark and had
+    /// its read interest dropped (backpressure engaged).
+    backpressure_stalls: AtomicU64,
+    /// Connections disconnected (with a goodbye) for crossing the
+    /// write-queue hard cap — slow readers that backpressure alone
+    /// could not save.
+    slow_reader_disconnects: AtomicU64,
+    /// Unix micros of the first accepted connection (0 = none yet);
+    /// denominator of the snapshot's accept rate.
+    net_first_accept_us: AtomicU64,
     // -- fleet ledger (`fleet` module: multi-model, multi-tenant) --
     /// Per-tenant latency rings (bounded, see [`TENANT_LEDGER_CAP`]).
     tenant_latencies_us: Mutex<HashMap<String, LatencyRing>>,
@@ -299,6 +320,51 @@ impl Metrics {
     /// Record one accepted network connection.
     pub fn record_conn_open(&self) {
         self.conns_opened.fetch_add(1, Ordering::Relaxed);
+        if self.net_first_accept_us.load(Ordering::Relaxed) == 0 {
+            let now_us = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_micros() as u64)
+                .unwrap_or(0)
+                .max(1);
+            // only the first accept wins; later racers are no-ops
+            let _ = self.net_first_accept_us.compare_exchange(
+                0,
+                now_us,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// Gauge: the number of reactor shards the front door started.
+    pub fn set_reactor_shards(&self, shards: usize) {
+        self.reactor_shards.store(shards as u64, Ordering::Relaxed);
+    }
+
+    /// Record one eventfd wakeup delivered into a reactor poll loop.
+    pub fn record_reactor_wakeup(&self) {
+        self.reactor_wakeups.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record `n` socket `read(2)` calls issued by a reactor shard.
+    pub fn record_net_read_syscalls(&self, n: u64) {
+        self.net_read_syscalls.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record `n` socket `write(2)` calls issued by a reactor shard.
+    pub fn record_net_write_syscalls(&self, n: u64) {
+        self.net_write_syscalls.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Record one backpressure engagement (write high-water mark hit;
+    /// read interest dropped until the queue drains).
+    pub fn record_backpressure_stall(&self) {
+        self.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one slow-reader disconnect (write-queue hard cap).
+    pub fn record_slow_reader_disconnect(&self) {
+        self.slow_reader_disconnects.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Record one network connection teardown.
@@ -595,6 +661,46 @@ impl Metrics {
         self.malformed_frames.load(Ordering::Relaxed)
     }
 
+    /// Reactor shards serving connections (0 = thread transport).
+    pub fn reactor_shards(&self) -> u64 {
+        self.reactor_shards.load(Ordering::Relaxed)
+    }
+
+    pub fn reactor_wakeups(&self) -> u64 {
+        self.reactor_wakeups.load(Ordering::Relaxed)
+    }
+
+    pub fn net_read_syscalls(&self) -> u64 {
+        self.net_read_syscalls.load(Ordering::Relaxed)
+    }
+
+    pub fn net_write_syscalls(&self) -> u64 {
+        self.net_write_syscalls.load(Ordering::Relaxed)
+    }
+
+    pub fn backpressure_stalls(&self) -> u64 {
+        self.backpressure_stalls.load(Ordering::Relaxed)
+    }
+
+    pub fn slow_reader_disconnects(&self) -> u64 {
+        self.slow_reader_disconnects.load(Ordering::Relaxed)
+    }
+
+    /// Accepted connections per second since the first accept (0.0
+    /// before any connection arrived).
+    pub fn accept_rate(&self) -> f64 {
+        let first = self.net_first_accept_us.load(Ordering::Relaxed);
+        if first == 0 {
+            return 0.0;
+        }
+        let now_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(first);
+        let elapsed_s = (now_us.saturating_sub(first) as f64 / 1e6).max(1e-6);
+        self.conns_opened() as f64 / elapsed_s
+    }
+
     /// Weight-tile evictions recorded across shared fleet grids.
     pub fn fleet_evictions(&self) -> u64 {
         self.fleet_evictions.load(Ordering::Relaxed)
@@ -753,6 +859,21 @@ impl Metrics {
                 self.conns_active(),
                 self.overload_rejections(),
                 self.malformed_frames(),
+            ));
+        }
+        if self.reactor_shards() > 0 {
+            let shards = self.reactor_shards();
+            let per_shard = (self.conns_active() as f64 / shards as f64 * 10.0).round() / 10.0;
+            s.push_str(&format!(
+                " | reactor: shards={} conns_per_shard={per_shard} wakeups={} reads={} \
+                 writes={} stalls={} slow_disconnects={} accept_rate={:.1}/s",
+                shards,
+                self.reactor_wakeups(),
+                self.net_read_syscalls(),
+                self.net_write_syscalls(),
+                self.backpressure_stalls(),
+                self.slow_reader_disconnects(),
+                self.accept_rate(),
             ));
         }
         let tenants = self.tenants();
@@ -974,6 +1095,34 @@ mod tests {
         let snap = m.summary();
         assert!(snap.contains("net: conns=2 active=1"), "{snap}");
         assert!(snap.contains("overloaded=1"), "{snap}");
+    }
+
+    #[test]
+    fn reactor_ledger_accumulates_and_shows_in_summary() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("reactor:"), "thread transport, no reactor line");
+        m.set_reactor_shards(4);
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_reactor_wakeup();
+        m.record_reactor_wakeup();
+        m.record_reactor_wakeup();
+        m.record_net_read_syscalls(10);
+        m.record_net_write_syscalls(7);
+        m.record_backpressure_stall();
+        m.record_slow_reader_disconnect();
+        assert_eq!(m.reactor_shards(), 4);
+        assert_eq!(m.reactor_wakeups(), 3);
+        assert_eq!(m.net_read_syscalls(), 10);
+        assert_eq!(m.net_write_syscalls(), 7);
+        assert_eq!(m.backpressure_stalls(), 1);
+        assert_eq!(m.slow_reader_disconnects(), 1);
+        assert!(m.accept_rate() > 0.0, "accepts happened, the rate has a denominator");
+        let snap = m.summary();
+        assert!(snap.contains("reactor: shards=4 conns_per_shard=0.5"), "{snap}");
+        assert!(snap.contains("wakeups=3 reads=10 writes=7"), "{snap}");
+        assert!(snap.contains("stalls=1 slow_disconnects=1"), "{snap}");
+        assert!(snap.contains("accept_rate="), "{snap}");
     }
 
     #[test]

@@ -33,7 +33,7 @@
 //! | [`model`] | — | `ModelRegistry`: model id → dims/artifacts/keep-prob + fleet residency state, builtin catalogue from `meta.json` |
 //! | [`error`] | — | typed serving errors (`McCimError`) carrying model id, request kind, backend |
 //! | [`coordinator`] | — | MC-Dropout engine, typed request/response surface, dynamic batcher, worker pool with affinity + priority lanes (starvation/aging guards, per-tenant budgets), streaming VO sessions (`StreamSession` → per-worker `EngineSession`: schedule + product-sums persist across frames), graceful drain with a deadline |
-//! | [`net`] | — | network front door: versioned binary wire protocol, bounded acceptor with reader/writer-split connections, admission control (max-inflight, connection caps, per-connection credit windows) answering `Overloaded` instead of queueing, session-sticky remote streams, blocking pipelining client |
+//! | [`net`] | — | network front door: versioned binary wire protocol with incremental frame reassembly, sharded `epoll` reactor serving all connections from N event-loop threads (raw FFI, no async runtime; thread-per-connection retained as `Transport::Threads`), bounded write queues with read-throttling backpressure, admission control (max-inflight, per-tenant caps, connection caps, per-connection credit windows) answering `Overloaded` instead of queueing, session-sticky remote streams, blocking pipelining client |
 //! | [`uncertainty`] | — | sequential early-stopping samplers, calibration (ECE / temperature scaling), risk-aware policies, sample budgets |
 //! | [`workloads`] | §VI | artifact loaders, image rotation, VO utilities, deterministic baseline |
 //! | [`config`] | — | CLI/flag parsing and run configuration (no external deps) |

@@ -107,6 +107,7 @@ const HELP: &str = "mc-cim <info|classify|vo|serve|client|energy|rng|adc|reuse> 
             --listen ADDR --max-inflight N --max-conns N
             --conn-rate REQ_PER_SEC --conn-burst N --idle-ms MS
             --drain-secs S --duration-secs S
+            --reactors N --write-buf BYTES --tenant-inflight LIST
   client:   --connect ADDR --kind classify|regress|stream --requests N
             --samples N --model NAME --seed N --session ID --epsilon E
             --dim N --timeout-ms MS --tenant NAME --priority LEVEL
@@ -175,6 +176,16 @@ serving over the network (see README 'Serving over the network'):
   --idle-ms MS            idle-connection timeout              (default 30000)
   --drain-secs S          shutdown drain deadline              (default 10)
   --duration-secs S       serve for S seconds then drain (0 = until killed)
+  --reactors N            event-loop shard threads serving ALL connections
+                          (default 0 = one per CPU; Linux only — elsewhere
+                          the server falls back to thread-per-connection)
+  --write-buf BYTES       per-connection write-queue high-water mark
+                          (default 262144); past it the reactor stops
+                          reading from that client, and at 4x it the slow
+                          reader is disconnected with a goodbye frame
+  --tenant-inflight LIST  per-tenant in-flight request caps, e.g.
+                          \"acme=64,lab=8\"; a tenant at its cap gets a
+                          retryable 'overloaded' naming the tenant
   client: --connect ADDR, --kind classify|regress|stream; stream sends
   --requests frames of one session so the server reuses cross-frame state";
 
@@ -330,6 +341,27 @@ fn fleet_from_args(
         n => Some(n),
     };
     Ok((tenants, fleet_models, capacity))
+}
+
+/// Parse `--tenant-inflight "acme=64,lab=8"` into per-tenant in-flight
+/// caps for the admission controller.
+fn parse_tenant_inflight(spec: &str) -> Result<Vec<(String, usize)>> {
+    let mut out = Vec::new();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, cap) = entry
+            .split_once('=')
+            .ok_or_else(|| anyhow!("--tenant-inflight entry '{entry}' must be name=cap"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            bail!("--tenant-inflight entry '{entry}' has an empty tenant name");
+        }
+        let cap: usize = cap
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("--tenant-inflight '{entry}': cap must be an integer"))?;
+        out.push((name.to_string(), cap));
+    }
+    Ok(out)
 }
 
 /// Grid half of the backend banner — only the cim-sim backend runs on
@@ -751,15 +783,22 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
     let (macros, placement, substrate) = grid_from_args(args)?;
     let (tenants, fleet_models, capacity) = fleet_from_args(args)?;
     let listen = args.get_or("listen", "127.0.0.1:7878");
+    let tenant_inflight = match args.get("tenant-inflight") {
+        None => Vec::new(),
+        Some(spec) => parse_tenant_inflight(spec)?,
+    };
     let admission = AdmissionConfig {
         max_inflight: args.get_usize("max-inflight", 256).map_err(|e| anyhow!(e))?,
         max_connections: args.get_usize("max-conns", 1024).map_err(|e| anyhow!(e))?,
         conn_rate: args.get_f64("conn-rate", 0.0).map_err(|e| anyhow!(e))?,
         conn_burst: args.get_usize("conn-burst", 0).map_err(|e| anyhow!(e))?,
+        tenant_inflight,
     };
     let idle_ms = args.get_usize("idle-ms", 30_000).map_err(|e| anyhow!(e))?;
     let drain_secs = args.get_usize("drain-secs", 10).map_err(|e| anyhow!(e))?;
     let duration_secs = args.get_usize("duration-secs", 0).map_err(|e| anyhow!(e))?;
+    let reactors = args.get_usize("reactors", 0).map_err(|e| anyhow!(e))?;
+    let write_buf = args.get_usize("write-buf", 0).map_err(|e| anyhow!(e))?;
 
     let non_ideality = non_ideality_from_args(args)?;
     println!("backend: {}{}", backend.label(), grid_banner(backend, (macros, placement, substrate)));
@@ -794,12 +833,21 @@ fn cmd_serve_net(args: &Args) -> Result<()> {
             admission: admission.clone(),
             idle_timeout: Duration::from_millis(idle_ms as u64),
             drain_deadline: Duration::from_secs(drain_secs as u64),
+            reactors,
+            write_buf,
+            ..Default::default()
         },
     )?;
+    let shards = server.shard_conns().len();
     println!(
-        "listening on {} ({} workers; max inflight {}, max conns {}{})",
+        "listening on {} ({} workers; {}; max inflight {}, max conns {}{})",
         server.local_addr(),
         workers,
+        if shards > 0 {
+            format!("{shards} reactor shard(s)")
+        } else {
+            "thread-per-connection".to_string()
+        },
         admission.max_inflight,
         admission.max_connections,
         if admission.conn_rate > 0.0 {

@@ -23,6 +23,7 @@
 //! inflight slot, and dropping a [`ConnSlot`] releases the connection.
 
 use crate::uncertainty::{SampleBudget, SharedBudget};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 
@@ -39,6 +40,12 @@ pub struct AdmissionConfig {
     /// Burst size of the per-connection window (0 = derive from
     /// `conn_rate`, minimum 1).
     pub conn_burst: usize,
+    /// Per-tenant in-flight caps (`(tenant, cap)`), enforced at the
+    /// front door *before* a frame reaches the queue — one tenant's
+    /// flood sheds as `Overloaded` for that tenant only, under the
+    /// global `max_inflight`. Tenants not listed (and anonymous
+    /// requests) ride the global cap alone.
+    pub tenant_inflight: Vec<(String, usize)>,
 }
 
 impl Default for AdmissionConfig {
@@ -48,6 +55,7 @@ impl Default for AdmissionConfig {
             max_connections: 1024,
             conn_rate: 0.0,
             conn_burst: 0,
+            tenant_inflight: Vec::new(),
         }
     }
 }
@@ -59,6 +67,8 @@ pub enum AdmissionRejection {
     Inflight,
     /// This connection's credit window is exhausted.
     CreditWindow,
+    /// The request's tenant is at its configured in-flight cap.
+    TenantInflight,
 }
 
 impl AdmissionRejection {
@@ -67,8 +77,28 @@ impl AdmissionRejection {
         match self {
             AdmissionRejection::Inflight => "max inflight requests reached",
             AdmissionRejection::CreditWindow => "per-connection credit window exhausted",
+            AdmissionRejection::TenantInflight => "tenant in-flight cap reached",
         }
     }
+
+    /// The `Overloaded` frame's message — tenant rejections name the
+    /// tenant so a shared client library can back off per tenant.
+    pub fn message(&self, tenant: Option<&str>) -> String {
+        match (self, tenant) {
+            (AdmissionRejection::TenantInflight, Some(t)) => {
+                format!("tenant '{t}' in-flight cap reached")
+            }
+            _ => self.reason().to_string(),
+        }
+    }
+}
+
+/// One tenant's in-flight ledger (built once at startup; admission is
+/// lock-free after that).
+#[derive(Debug)]
+struct TenantGate {
+    cap: usize,
+    inflight: AtomicUsize,
 }
 
 /// Shared admission state (one per server, shared by all connections).
@@ -79,16 +109,29 @@ pub struct AdmissionController {
     connections: AtomicUsize,
     admitted: AtomicU64,
     rejected: AtomicU64,
+    /// Per-tenant gates, keyed by tenant name (read-only after `new`).
+    tenants: HashMap<String, Arc<TenantGate>>,
 }
 
 impl AdmissionController {
     pub fn new(cfg: AdmissionConfig) -> Arc<Self> {
+        let tenants = cfg
+            .tenant_inflight
+            .iter()
+            .map(|(name, cap)| {
+                (
+                    name.clone(),
+                    Arc::new(TenantGate { cap: *cap, inflight: AtomicUsize::new(0) }),
+                )
+            })
+            .collect();
         Arc::new(AdmissionController {
             cfg,
             inflight: AtomicUsize::new(0),
             connections: AtomicUsize::new(0),
             admitted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            tenants,
         })
     }
 
@@ -112,11 +155,13 @@ impl AdmissionController {
     }
 
     /// Try to admit one request: global inflight gate first, then the
+    /// request's tenant gate (if that tenant is capped), then the
     /// connection's credit window (one credit per request). On success
-    /// the returned [`Permit`] holds the inflight slot until dropped.
+    /// the returned [`Permit`] holds every claimed slot until dropped.
     pub fn try_admit(
         self: &Arc<Self>,
         window: Option<&SharedBudget>,
+        tenant: Option<&str>,
     ) -> Result<Permit, AdmissionRejection> {
         let prev = self.inflight.fetch_add(1, Ordering::AcqRel);
         if prev >= self.cfg.max_inflight {
@@ -124,15 +169,34 @@ impl AdmissionController {
             self.rejected.fetch_add(1, Ordering::Relaxed);
             return Err(AdmissionRejection::Inflight);
         }
+        let gate = tenant.and_then(|t| self.tenants.get(t));
+        if let Some(g) = gate {
+            let prev = g.inflight.fetch_add(1, Ordering::AcqRel);
+            if prev >= g.cap {
+                g.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.inflight.fetch_sub(1, Ordering::AcqRel);
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(AdmissionRejection::TenantInflight);
+            }
+        }
         if let Some(w) = window {
             if !w.try_take(1) {
+                if let Some(g) = gate {
+                    g.inflight.fetch_sub(1, Ordering::AcqRel);
+                }
                 self.inflight.fetch_sub(1, Ordering::AcqRel);
                 self.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err(AdmissionRejection::CreditWindow);
             }
         }
         self.admitted.fetch_add(1, Ordering::Relaxed);
-        Ok(Permit { ctl: Arc::clone(self) })
+        Ok(Permit { ctl: Arc::clone(self), tenant: gate.cloned() })
+    }
+
+    /// A tenant's requests currently admitted and unanswered (None =
+    /// that tenant has no configured cap).
+    pub fn tenant_inflight(&self, tenant: &str) -> Option<usize> {
+        self.tenants.get(tenant).map(|g| g.inflight.load(Ordering::Acquire))
     }
 
     /// Try to claim a connection slot (None = at the connection cap).
@@ -165,14 +229,19 @@ impl AdmissionController {
 }
 
 /// RAII inflight slot: dropping it (response sent, client vanished,
-/// encode failed — any path) releases the admission.
+/// encode failed — any path) releases the admission — the global slot
+/// and, when the request was tenant-capped, the tenant's slot.
 #[derive(Debug)]
 pub struct Permit {
     ctl: Arc<AdmissionController>,
+    tenant: Option<Arc<TenantGate>>,
 }
 
 impl Drop for Permit {
     fn drop(&mut self) {
+        if let Some(g) = &self.tenant {
+            g.inflight.fetch_sub(1, Ordering::AcqRel);
+        }
         self.ctl.inflight.fetch_sub(1, Ordering::AcqRel);
     }
 }
@@ -203,13 +272,13 @@ mod tests {
     #[test]
     fn inflight_cap_is_enforced_and_released_on_drop() {
         let c = ctl(2);
-        let p1 = c.try_admit(None).unwrap();
-        let p2 = c.try_admit(None).unwrap();
+        let p1 = c.try_admit(None, None).unwrap();
+        let p2 = c.try_admit(None, None).unwrap();
         assert_eq!(c.inflight(), 2);
-        assert_eq!(c.try_admit(None).unwrap_err(), AdmissionRejection::Inflight);
+        assert_eq!(c.try_admit(None, None).unwrap_err(), AdmissionRejection::Inflight);
         drop(p1);
         // a released slot is immediately reusable
-        let p3 = c.try_admit(None).unwrap();
+        let p3 = c.try_admit(None, None).unwrap();
         assert_eq!(c.inflight(), 2);
         drop(p2);
         drop(p3);
@@ -221,7 +290,7 @@ mod tests {
     #[test]
     fn zero_inflight_rejects_everything() {
         let c = ctl(0);
-        assert!(c.try_admit(None).is_err());
+        assert!(c.try_admit(None, None).is_err());
         assert_eq!(c.inflight(), 0, "a refused admit must not leak a slot");
     }
 
@@ -234,18 +303,18 @@ mod tests {
             ..AdmissionConfig::default()
         });
         let w = c.conn_window().expect("windows enabled");
-        let _p1 = c.try_admit(Some(&w)).unwrap();
-        let _p2 = c.try_admit(Some(&w)).unwrap();
+        let _p1 = c.try_admit(Some(&w), None).unwrap();
+        let _p2 = c.try_admit(Some(&w), None).unwrap();
         // burst exhausted: the window refuses, and the global inflight
         // slot taken during the attempt is given back
         assert_eq!(
-            c.try_admit(Some(&w)).unwrap_err(),
+            c.try_admit(Some(&w), None).unwrap_err(),
             AdmissionRejection::CreditWindow
         );
         assert_eq!(c.inflight(), 2);
         // a different connection's window is unaffected
         let w2 = c.conn_window().unwrap();
-        assert!(c.try_admit(Some(&w2)).is_ok());
+        assert!(c.try_admit(Some(&w2), None).is_ok());
     }
 
     #[test]
@@ -278,7 +347,7 @@ mod tests {
                 let peak = Arc::clone(&peak);
                 std::thread::spawn(move || {
                     for _ in 0..500 {
-                        if let Ok(p) = c.try_admit(None) {
+                        if let Ok(p) = c.try_admit(None, None) {
                             peak.fetch_max(c.inflight(), Ordering::AcqRel);
                             drop(p);
                         }
@@ -291,5 +360,48 @@ mod tests {
         }
         assert!(peak.load(Ordering::Acquire) <= 8);
         assert_eq!(c.inflight(), 0);
+    }
+
+    #[test]
+    fn tenant_caps_bind_only_their_tenant_and_release_on_drop() {
+        let c = AdmissionController::new(AdmissionConfig {
+            max_inflight: 100,
+            tenant_inflight: vec![("acme".into(), 2)],
+            ..AdmissionConfig::default()
+        });
+        let p1 = c.try_admit(None, Some("acme")).unwrap();
+        let _p2 = c.try_admit(None, Some("acme")).unwrap();
+        assert_eq!(c.tenant_inflight("acme"), Some(2));
+        let rej = c.try_admit(None, Some("acme")).unwrap_err();
+        assert_eq!(rej, AdmissionRejection::TenantInflight);
+        assert_eq!(rej.message(Some("acme")), "tenant 'acme' in-flight cap reached");
+        // the refused attempt leaks neither the tenant nor the global slot
+        assert_eq!(c.tenant_inflight("acme"), Some(2));
+        assert_eq!(c.inflight(), 2);
+        // an uncapped tenant and anonymous traffic sail through
+        assert!(c.try_admit(None, Some("lab")).is_ok());
+        assert!(c.try_admit(None, None).is_ok());
+        // dropping a permit frees the tenant slot too
+        drop(p1);
+        assert_eq!(c.tenant_inflight("acme"), Some(1));
+        assert!(c.try_admit(None, Some("acme")).is_ok());
+    }
+
+    #[test]
+    fn tenant_gate_releases_when_the_credit_window_refuses() {
+        let c = AdmissionController::new(AdmissionConfig {
+            max_inflight: 100,
+            conn_rate: 1.0,
+            conn_burst: 1,
+            tenant_inflight: vec![("acme".into(), 8)],
+            ..AdmissionConfig::default()
+        });
+        let w = c.conn_window().unwrap();
+        let _p = c.try_admit(Some(&w), Some("acme")).unwrap();
+        assert_eq!(
+            c.try_admit(Some(&w), Some("acme")).unwrap_err(),
+            AdmissionRejection::CreditWindow
+        );
+        assert_eq!(c.tenant_inflight("acme"), Some(1), "window refusal must back out the gate");
     }
 }

@@ -191,6 +191,17 @@ impl WireClient {
         }
     }
 
+    /// Convenience: one ping/pong round trip (used by the scale bench's
+    /// idle-connection holders and as a cheap liveness probe).
+    pub fn ping(&mut self) -> Result<()> {
+        let nonce = self.send_ping()?;
+        match self.recv_matching(nonce)? {
+            WireReply::Pong(echo) if echo == nonce => Ok(()),
+            WireReply::Error(e) => bail!("server error ({}): {}", e.code.label(), e.message),
+            other => bail!("unexpected reply to a ping: {other:?}"),
+        }
+    }
+
     /// Convenience: send one classify and wait for its reply.
     pub fn classify(
         &mut self,

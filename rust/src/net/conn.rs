@@ -1,12 +1,22 @@
 //! Connection management: the TCP front door in front of the
 //! coordinator's worker pool.
 //!
-//! One acceptor thread owns the listener; every accepted socket gets a
-//! **reader thread** (owns the stream, decodes frames, submits jobs)
-//! and a **writer thread** (owns a cloned handle, serializes response
-//! frames from an mpsc channel — workers finish jobs in arbitrary
-//! order, so responses are funneled through one writer instead of
-//! letting worker threads interleave partial writes on the socket).
+//! One acceptor thread owns the listener. What happens to an accepted
+//! socket depends on the configured [`Transport`]:
+//!
+//! * [`Transport::Reactor`] (default on Linux) — the socket is made
+//!   nonblocking and handed to one of N sharded event loops
+//!   (`net/reactor.rs`, epoll via `net/poll.rs`). N reactor threads
+//!   serve *all* connections: thousands of mostly-idle sockets cost no
+//!   threads and no stacks beyond the fixed N.
+//! * [`Transport::Threads`] — PR 6's transport, kept as the measured
+//!   baseline for `benches/serve_scale.rs` (and the only transport on
+//!   non-Linux hosts): every socket gets a **reader thread** (owns the
+//!   stream, decodes frames, submits jobs) and a **writer thread**
+//!   (serializes response frames from an mpsc channel — workers finish
+//!   jobs in arbitrary order, so responses are funneled through one
+//!   writer instead of letting worker threads interleave partial
+//!   writes on the socket).
 //!
 //! Every request frame passes the [`AdmissionController`] *before*
 //! touching the pool's queue; refusals answer with a retryable
@@ -33,8 +43,12 @@
 //! flushed before the socket dies.
 
 use super::admission::{AdmissionConfig, AdmissionController};
+#[cfg(target_os = "linux")]
+use super::reactor::{ReactorConfig, ReactorPool};
 use super::wire::{encode_frame, Frame, FrameReader, ReadEvent, WireCall, WireError};
-use crate::coordinator::{Coordinator, InferenceRequest, InferenceResponse, Metrics};
+use crate::coordinator::{
+    Coordinator, InferenceRequest, InferenceResponse, InferenceResult, Metrics,
+};
 use crate::error::RequestKind;
 use crate::uncertainty::SharedBudget;
 use anyhow::{Context, Result};
@@ -50,6 +64,30 @@ use std::time::{Duration, Instant};
 /// nothing (a waiting read wakes early the moment bytes arrive).
 const READ_TIMEOUT: Duration = Duration::from_millis(50);
 
+/// Default write-queue high-water mark per connection (bytes).
+pub const DEFAULT_WRITE_BUF: usize = 256 * 1024;
+
+/// How an accepted socket is served (see the module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transport {
+    /// Sharded epoll event loops: N reactor threads for all
+    /// connections. Linux-only; configuring it elsewhere falls back to
+    /// [`Transport::Threads`].
+    Reactor,
+    /// Thread-per-connection (reader + writer pair), PR 6's transport.
+    Threads,
+}
+
+impl Default for Transport {
+    fn default() -> Self {
+        if cfg!(target_os = "linux") {
+            Transport::Reactor
+        } else {
+            Transport::Threads
+        }
+    }
+}
+
 /// Network front-door configuration.
 #[derive(Clone, Debug)]
 pub struct NetServerConfig {
@@ -62,8 +100,19 @@ pub struct NetServerConfig {
     /// requests in flight.
     pub idle_timeout: Duration,
     /// Forwarded to [`Coordinator::shutdown_with_deadline`] when the
-    /// server shuts down.
+    /// server shuts down (and bounds the reactor shards' own
+    /// connection-flush drain).
     pub drain_deadline: Duration,
+    /// Connection engine to serve accepted sockets with.
+    pub transport: Transport,
+    /// Reactor shard count (0 = `available_parallelism`). Ignored by
+    /// [`Transport::Threads`].
+    pub reactors: usize,
+    /// Per-connection write-queue high-water mark in bytes (0 =
+    /// [`DEFAULT_WRITE_BUF`]); the hard disconnect cap is 4x this.
+    /// Ignored by [`Transport::Threads`] (whose writer queue is the
+    /// unbounded mpsc this PR retires).
+    pub write_buf: usize,
 }
 
 impl Default for NetServerConfig {
@@ -73,6 +122,9 @@ impl Default for NetServerConfig {
             admission: AdmissionConfig::default(),
             idle_timeout: Duration::from_secs(30),
             drain_deadline: crate::coordinator::DEFAULT_DRAIN_DEADLINE,
+            transport: Transport::default(),
+            reactors: 0,
+            write_buf: DEFAULT_WRITE_BUF,
         }
     }
 }
@@ -101,14 +153,17 @@ impl ConnCtx {
     }
 }
 
-/// The running TCP front door. Owns the acceptor, every connection
-/// thread, and the coordinator itself (shutting the server down drains
-/// the pool).
+/// The running TCP front door. Owns the acceptor, the connection
+/// engine (reactor shards or per-connection threads), and the
+/// coordinator itself (shutting the server down drains the pool).
 pub struct NetServer {
     addr: SocketAddr,
     shutting_down: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    /// Thread-transport connection threads (empty under the reactor).
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    #[cfg(target_os = "linux")]
+    pool: Option<Arc<ReactorPool>>,
     coord: Arc<Coordinator>,
     admission: Arc<AdmissionController>,
     drain_deadline: Duration,
@@ -127,12 +182,42 @@ impl NetServer {
         let shutting_down = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
 
+        // build the reactor pool up front so a failure surfaces here,
+        // not in the acceptor thread
+        #[cfg(target_os = "linux")]
+        let pool = if cfg.transport == Transport::Reactor {
+            let shards = if cfg.reactors > 0 {
+                cfg.reactors
+            } else {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+            };
+            let hwm = if cfg.write_buf > 0 { cfg.write_buf } else { DEFAULT_WRITE_BUF };
+            Some(
+                ReactorPool::start(
+                    Arc::clone(&coord),
+                    Arc::clone(&admission),
+                    ReactorConfig {
+                        shards,
+                        idle_timeout: cfg.idle_timeout,
+                        drain_deadline: cfg.drain_deadline,
+                        write_hwm: hwm,
+                        write_hard_cap: hwm.saturating_mul(4),
+                    },
+                )
+                .context("starting the reactor shards")?,
+            )
+        } else {
+            None
+        };
+
         let acceptor = {
             let coord = Arc::clone(&coord);
             let admission = Arc::clone(&admission);
             let shutting_down = Arc::clone(&shutting_down);
             let conns = Arc::clone(&conns);
             let idle_timeout = cfg.idle_timeout;
+            #[cfg(target_os = "linux")]
+            let pool = pool.clone();
             std::thread::spawn(move || {
                 let mut next_conn: u64 = 0;
                 for stream in listener.incoming() {
@@ -145,7 +230,7 @@ impl NetServer {
                     };
                     let Some(slot) = admission.try_open_conn() else {
                         // connection cap: answer and hang up without
-                        // spending a thread
+                        // spending a thread (or a shard slot)
                         coord.metrics.record_overload_rejection();
                         let mut s = stream;
                         let goodbye = Frame::Error {
@@ -159,6 +244,11 @@ impl NetServer {
                     let conn_id = next_conn;
                     next_conn += 1;
                     coord.metrics.record_conn_open();
+                    #[cfg(target_os = "linux")]
+                    if let Some(pool) = &pool {
+                        pool.dispatch(stream, conn_id, slot);
+                        continue;
+                    }
                     let ctx_coord = Arc::clone(&coord);
                     let ctx_admission = Arc::clone(&admission);
                     let ctx_shutdown = Arc::clone(&shutting_down);
@@ -183,6 +273,8 @@ impl NetServer {
             shutting_down,
             acceptor: Some(acceptor),
             conns,
+            #[cfg(target_os = "linux")]
+            pool,
             coord,
             admission,
             drain_deadline: cfg.drain_deadline,
@@ -204,6 +296,16 @@ impl NetServer {
         &self.admission
     }
 
+    /// Connections currently owned by each reactor shard (empty under
+    /// the thread transport).
+    pub fn shard_conns(&self) -> Vec<usize> {
+        #[cfg(target_os = "linux")]
+        if let Some(pool) = &self.pool {
+            return pool.shard_conns();
+        }
+        Vec::new()
+    }
+
     /// Graceful shutdown: stop accepting, let every connection notice
     /// the drain (each sends a `ShuttingDown` goodbye and flushes its
     /// in-flight responses), then drain the coordinator with the
@@ -221,6 +323,10 @@ impl NetServer {
             self.conns.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
         for h in handles {
             let _ = h.join();
+        }
+        #[cfg(target_os = "linux")]
+        if let Some(pool) = self.pool.take() {
+            pool.shutdown();
         }
         let coord = Arc::try_unwrap(self.coord).unwrap_or_else(|_| {
             panic!("all connection threads joined; the coordinator must have one owner")
@@ -341,12 +447,12 @@ fn handle_frame(ctx: &ConnCtx, frame: Frame) -> std::result::Result<(), String> 
         }
         Frame::Classify(call) => {
             let req = build_call(&call, RequestKind::Classify);
-            submit(ctx, call.id, req, None);
+            submit(ctx, call.id, call.tenant.clone(), req, None);
             Ok(())
         }
         Frame::Regress(call) => {
             let req = build_call(&call, RequestKind::Regress);
-            submit(ctx, call.id, req, None);
+            submit(ctx, call.id, call.tenant.clone(), req, None);
             Ok(())
         }
         Frame::StreamFrame(s) => {
@@ -356,7 +462,7 @@ fn handle_frame(ctx: &ConnCtx, frame: Frame) -> std::result::Result<(), String> 
             let req = build_call(&s.call, s.kind)
                 .with_session(namespaced, s.frame)
                 .with_stream_epsilon(s.epsilon);
-            submit(ctx, s.call.id, req, Some(s.session));
+            submit(ctx, s.call.id, s.call.tenant.clone(), req, Some(s.session));
             Ok(())
         }
         Frame::Pong(_) | Frame::ClassifyResp { .. } | Frame::PoseResp { .. } => {
@@ -368,7 +474,9 @@ fn handle_frame(ctx: &ConnCtx, frame: Frame) -> std::result::Result<(), String> 
     }
 }
 
-fn build_call(call: &WireCall, kind: RequestKind) -> InferenceRequest {
+/// Translate a wire call into a typed pool request (shared by both
+/// transports).
+pub(crate) fn build_call(call: &WireCall, kind: RequestKind) -> InferenceRequest {
     let mut req = InferenceRequest::new(call.model.clone(), kind, call.input.clone())
         .with_samples(call.samples as usize)
         .with_priority(call.priority);
@@ -384,18 +492,49 @@ fn build_call(call: &WireCall, kind: RequestKind) -> InferenceRequest {
     req
 }
 
+/// Translate a worker's result into the response frame, rewriting the
+/// stream echo back to the client's own session id (shared by both
+/// transports).
+pub(crate) fn response_frame(
+    id: u64,
+    result: InferenceResult,
+    client_session: Option<&String>,
+) -> Frame {
+    match result {
+        Ok(InferenceResponse::Class(mut c)) => {
+            if let (Some(s), Some(orig)) = (c.stream.as_mut(), client_session) {
+                s.session = orig.clone();
+            }
+            Frame::ClassifyResp { id, resp: c }
+        }
+        Ok(InferenceResponse::Pose(mut p)) => {
+            if let (Some(s), Some(orig)) = (p.stream.as_mut(), client_session) {
+                s.session = orig.clone();
+            }
+            Frame::PoseResp { id, resp: p }
+        }
+        Err(e) => Frame::Error { id, err: WireError::from(&e) },
+    }
+}
+
 /// Admission-gate one request and submit it to the pool. The response
 /// callback runs on a worker thread: it rewrites the stream echo back
 /// to the client's own session id, encodes the frame, and hands it to
 /// the connection's writer.
-fn submit(ctx: &ConnCtx, id: u64, req: InferenceRequest, client_session: Option<String>) {
-    let permit = match ctx.admission.try_admit(ctx.window.as_ref()) {
+fn submit(
+    ctx: &ConnCtx,
+    id: u64,
+    tenant: Option<String>,
+    req: InferenceRequest,
+    client_session: Option<String>,
+) {
+    let permit = match ctx.admission.try_admit(ctx.window.as_ref(), tenant.as_deref()) {
         Ok(p) => p,
         Err(rejection) => {
             ctx.metrics().record_overload_rejection();
             ctx.send_frame(&Frame::Error {
                 id,
-                err: WireError::overloaded(rejection.reason()),
+                err: WireError::overloaded(rejection.message(tenant.as_deref())),
             });
             return;
         }
@@ -404,21 +543,7 @@ fn submit(ctx: &ConnCtx, id: u64, req: InferenceRequest, client_session: Option<
     let wtx = ctx.wtx.clone();
     let inflight = Arc::clone(&ctx.inflight);
     ctx.coord.submit_request_with(req, move |result| {
-        let frame = match result {
-            Ok(InferenceResponse::Class(mut c)) => {
-                if let (Some(s), Some(orig)) = (c.stream.as_mut(), client_session.as_ref()) {
-                    s.session = orig.clone();
-                }
-                Frame::ClassifyResp { id, resp: c }
-            }
-            Ok(InferenceResponse::Pose(mut p)) => {
-                if let (Some(s), Some(orig)) = (p.stream.as_mut(), client_session.as_ref()) {
-                    s.session = orig.clone();
-                }
-                Frame::PoseResp { id, resp: p }
-            }
-            Err(e) => Frame::Error { id, err: WireError::from(&e) },
-        };
+        let frame = response_frame(id, result, client_session.as_ref());
         // a vanished client means a closed channel — ignored, the job
         // stays metered and the permit still releases
         let _ = wtx.send(encode_frame(&frame));

@@ -3,10 +3,12 @@
 //!
 //! | Piece | What it owns |
 //! |---|---|
-//! | [`wire`] | versioned length-prefixed binary protocol: typed frames, defensive codec, incremental [`FrameReader`] |
-//! | [`admission`] | max-inflight + connection caps + per-connection credit windows (token buckets from `uncertainty/budget.rs`); RAII permits |
-//! | [`conn`] | acceptor, per-connection reader/writer threads, idle timeouts, graceful drain ([`NetServer`]) |
-//! | [`client`] | blocking pipelining client ([`WireClient`]) for the CLI, tests, and the load-generator bench |
+//! | [`wire`] | versioned length-prefixed binary protocol: typed frames, defensive codec, push-based [`FrameDecoder`] state machine + blocking [`FrameReader`] adapter over it |
+//! | [`poll`] | thin Linux `epoll` + `eventfd` wrapper (raw C-library FFI, no `libc` crate): [`Poller`], cross-thread [`Waker`], `RLIMIT_NOFILE` helper |
+//! | [`admission`] | max-inflight + per-tenant in-flight caps + connection caps + per-connection credit windows (token buckets from `uncertainty/budget.rs`); RAII permits |
+//! | `reactor` | sharded event loops: N fixed threads serve every connection — nonblocking sockets, frame reassembly from partial reads, bounded write queues with high-water-mark backpressure and slow-reader disconnects, eventfd completion routing from worker callbacks |
+//! | [`conn`] | acceptor + [`NetServer`] lifecycle over a selectable [`Transport`]: the sharded reactor (default on Linux) or the PR 6 thread-per-connection baseline; idle timeouts, graceful drain |
+//! | [`client`] | blocking pipelining client ([`WireClient`]) for the CLI, tests, and the load-generator benches |
 //!
 //! The wire surface *is* the serving surface: responses carry verdict,
 //! samples used, measured energy and the streaming echo exactly as the
@@ -14,22 +16,33 @@
 //! onto the coordinator's `SessionRouter` pinned lanes (namespaced per
 //! connection), so a drone streaming VO frames over TCP keeps the
 //! cross-frame compute reuse of PR 4. Overload answers with explicit
-//! retryable `Overloaded` frames instead of unbounded queueing.
+//! retryable `Overloaded` frames instead of unbounded queueing, and a
+//! slow reader is throttled (read interest dropped at the write
+//! high-water mark) then disconnected (hard cap) instead of growing an
+//! unbounded writer buffer.
 //!
-//! `std::net` + threads only — the crate stays anyhow-only.
+//! `std::net` + threads + raw `epoll` FFI only — the crate stays
+//! anyhow-only.
+//!
+//! [`Poller`]: poll::Poller
+//! [`Waker`]: poll::Waker
 
 pub mod admission;
 pub mod client;
 pub mod conn;
+#[cfg(target_os = "linux")]
+pub mod poll;
+#[cfg(target_os = "linux")]
+pub(crate) mod reactor;
 pub mod wire;
 
 pub use admission::{
     AdmissionConfig, AdmissionController, AdmissionRejection, ConnSlot, Permit,
 };
 pub use client::{WireClient, WireReply};
-pub use conn::{NetServer, NetServerConfig};
+pub use conn::{NetServer, NetServerConfig, Transport, DEFAULT_WRITE_BUF};
 pub use wire::{
-    decode_frame, encode_frame, write_frame, ErrorCode, Frame, FrameReader, ReadEvent,
-    WireCall, WireDecodeError, WireError, WireStreamCall, HEADER_LEN, MAX_PAYLOAD,
-    WIRE_MAGIC, WIRE_VERSION,
+    decode_frame, encode_frame, write_frame, ErrorCode, Frame, FrameDecoder, FrameReader,
+    ReadEvent, WireCall, WireDecodeError, WireError, WireStreamCall, HEADER_LEN,
+    MAX_PAYLOAD, WIRE_MAGIC, WIRE_VERSION,
 };

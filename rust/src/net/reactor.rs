@@ -1,0 +1,683 @@
+//! Sharded event-loop reactor: the front door's connection engine.
+//!
+//! PR 6's transport spent **2 threads + 2 stacks per connection**
+//! (reader + writer) — fine at hundreds of sockets, a hard wall at
+//! thousands. This module serves every connection from a *fixed* pool
+//! of N reactor threads (N = `available_parallelism` by default,
+//! `--reactors` to override): each shard owns one [`Poller`] (epoll),
+//! one [`Waker`] (eventfd), and a disjoint set of nonblocking sockets.
+//!
+//! Per connection the shard keeps a small state machine:
+//!
+//! * a push-based [`FrameDecoder`] reassembling length-prefixed frames
+//!   from whatever fragments `read(2)` returns (the same state machine
+//!   the blocking path uses, so the two decode identically);
+//! * a bounded write queue with a **high-water mark** — crossing it
+//!   drops the connection's read interest (real backpressure: a slow
+//!   reader stops being served new requests instead of growing an
+//!   unbounded writer buffer) — and a **hard cap** past which the
+//!   connection is disconnected with a retryable `Overloaded` goodbye
+//!   (counted as a slow-reader disconnect, never OOM);
+//! * an `awaiting` count of admitted-but-unanswered requests, which
+//!   gates idle reaping and teardown flushing exactly like the thread
+//!   transport's writer join did.
+//!
+//! Coordinator workers finish jobs on their own threads; the response
+//! callback encodes the frame, pushes a [`Cmd::Complete`] into the
+//! owning shard's inbox and rings its eventfd — the shard wakes, maps
+//! the token back to the connection (dropping the bytes if the client
+//! vanished meanwhile) and queues the write. Admission control, tenant
+//! caps, credit windows, session namespacing and graceful drain all
+//! run unchanged inside the shard thread.
+
+use super::admission::AdmissionController;
+use super::conn::{build_call, response_frame};
+use super::poll::{Interest, PollEvent, Poller, Waker, WAKER_TOKEN};
+use super::wire::{encode_frame, Frame, FrameDecoder, WireError};
+use crate::coordinator::{Coordinator, InferenceRequest, Metrics};
+use crate::error::RequestKind;
+use crate::uncertainty::SharedBudget;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Poll-loop tick: idle expiry and drain deadlines are checked at this
+/// cadence (a waiting shard still wakes instantly on I/O or eventfd).
+const TICK: Duration = Duration::from_millis(25);
+
+/// Reactor-side configuration (carved out of `NetServerConfig`).
+#[derive(Clone, Debug)]
+pub(crate) struct ReactorConfig {
+    /// Shard (reactor thread) count.
+    pub shards: usize,
+    /// Tear a connection down after this long with no frames and no
+    /// requests in flight.
+    pub idle_timeout: Duration,
+    /// How long a draining shard waits for in-flight responses to
+    /// flush before force-closing its connections.
+    pub drain_deadline: Duration,
+    /// Write-queue high-water mark (bytes): past it, read interest is
+    /// dropped until the queue drains below half of it.
+    pub write_hwm: usize,
+    /// Write-queue hard cap (bytes): past it, the connection is cut
+    /// with a goodbye.
+    pub write_hard_cap: usize,
+}
+
+/// A shard's cross-thread mailbox: worker callbacks and the acceptor
+/// push commands and ring the eventfd; the shard drains it on wakeup.
+pub(crate) struct ShardSender {
+    inbox: Mutex<Vec<Cmd>>,
+    waker: Waker,
+}
+
+impl ShardSender {
+    fn push(&self, cmd: Cmd) {
+        self.inbox.lock().unwrap_or_else(|p| p.into_inner()).push(cmd);
+        self.waker.wake();
+    }
+
+    fn drain(&self) -> Vec<Cmd> {
+        self.waker.drain();
+        std::mem::take(&mut *self.inbox.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+}
+
+pub(crate) enum Cmd {
+    /// A freshly accepted socket (the acceptor already claimed its
+    /// `ConnSlot` and recorded `conn_open`).
+    Accept {
+        stream: TcpStream,
+        conn_id: u64,
+        slot: super::admission::ConnSlot,
+    },
+    /// A finished request's pre-encoded response frame, addressed by
+    /// the owning shard's connection token.
+    Complete { token: u64, bytes: Vec<u8> },
+    /// Begin graceful drain: goodbye every connection, stop reading,
+    /// flush in-flight responses, then exit the shard thread.
+    Shutdown,
+}
+
+/// The running shard pool. `dispatch` hands sockets to the least-
+/// loaded shard; `shutdown` drains and joins every shard thread.
+pub(crate) struct ReactorPool {
+    senders: Vec<Arc<ShardSender>>,
+    loads: Vec<Arc<AtomicUsize>>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ReactorPool {
+    pub fn start(
+        coord: Arc<Coordinator>,
+        admission: Arc<AdmissionController>,
+        cfg: ReactorConfig,
+    ) -> io::Result<Arc<ReactorPool>> {
+        let shards = cfg.shards.max(1);
+        coord.metrics.set_reactor_shards(shards);
+        let mut senders = Vec::with_capacity(shards);
+        let mut loads = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for idx in 0..shards {
+            let poller = Poller::new()?;
+            let waker = Waker::new(&poller)?;
+            let sender = Arc::new(ShardSender { inbox: Mutex::new(Vec::new()), waker });
+            let load = Arc::new(AtomicUsize::new(0));
+            let shard = Shard {
+                idx,
+                poller,
+                sender: Arc::clone(&sender),
+                load: Arc::clone(&load),
+                coord: Arc::clone(&coord),
+                admission: Arc::clone(&admission),
+                cfg: cfg.clone(),
+            };
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mc-cim-reactor-{idx}"))
+                    .spawn(move || shard.run())?,
+            );
+            senders.push(sender);
+            loads.push(load);
+        }
+        Ok(Arc::new(ReactorPool { senders, loads, handles: Mutex::new(handles) }))
+    }
+
+    /// Hand an accepted socket to the least-loaded shard.
+    pub fn dispatch(&self, stream: TcpStream, conn_id: u64, slot: super::admission::ConnSlot) {
+        let shard = (0..self.senders.len())
+            .min_by_key(|&i| self.loads[i].load(Ordering::Relaxed))
+            .unwrap_or(0);
+        self.senders[shard].push(Cmd::Accept { stream, conn_id, slot });
+    }
+
+    /// Connections currently owned by each shard (observability).
+    pub fn shard_conns(&self) -> Vec<usize> {
+        self.loads.iter().map(|l| l.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Drain every shard (goodbyes, in-flight flush bounded by the
+    /// drain deadline) and join the reactor threads.
+    pub fn shutdown(&self) {
+        for s in &self.senders {
+            s.push(Cmd::Shutdown);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.handles.lock().unwrap_or_else(|p| p.into_inner()).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One connection's reactor-side state machine.
+struct Conn {
+    stream: TcpStream,
+    fd: RawFd,
+    /// Poller token and `conns` map key (unique per shard).
+    token: u64,
+    conn_id: u64,
+    decoder: FrameDecoder,
+    /// Pre-encoded frames waiting for the socket to accept them
+    /// (`woff` = bytes of the front frame already written).
+    wq: VecDeque<Vec<u8>>,
+    woff: usize,
+    wq_bytes: usize,
+    /// The interest set currently registered in the poller (None =
+    /// deregistered: nothing to wait for until state changes).
+    registered: Option<Interest>,
+    /// Read interest dropped by write-queue backpressure.
+    reads_paused: bool,
+    /// No more reads ever (EOF, protocol violation, drain).
+    read_shut: bool,
+    /// Close as soon as the write queue flushes (goodbye sent).
+    closing: bool,
+    /// Socket failed — drop all writes, close once `awaiting` drains.
+    dead: bool,
+    /// Admitted requests whose responses have not yet come back.
+    awaiting: usize,
+    window: Option<SharedBudget>,
+    last_activity: Instant,
+    /// RAII connection-cap slot (released on drop).
+    _slot: super::admission::ConnSlot,
+}
+
+struct Shard {
+    idx: usize,
+    poller: Poller,
+    sender: Arc<ShardSender>,
+    load: Arc<AtomicUsize>,
+    coord: Arc<Coordinator>,
+    admission: Arc<AdmissionController>,
+    cfg: ReactorConfig,
+}
+
+impl Shard {
+    fn metrics(&self) -> &Metrics {
+        &self.coord.metrics
+    }
+
+    fn run(self) {
+        let mut conns: HashMap<u64, Conn> = HashMap::new();
+        let mut next_token: u64 = 0;
+        let mut events: Vec<PollEvent> = Vec::new();
+        let mut draining: Option<Instant> = None;
+
+        loop {
+            if self.poller.wait(&mut events, Some(TICK)).is_err() {
+                // an unusable epoll fd is unrecoverable for this shard;
+                // closing its connections beats spinning
+                break;
+            }
+            let batch = std::mem::take(&mut events);
+            for ev in &batch {
+                if ev.token == WAKER_TOKEN {
+                    self.metrics().record_reactor_wakeup();
+                    for cmd in self.sender.drain() {
+                        match cmd {
+                            Cmd::Accept { stream, conn_id, slot } => {
+                                self.accept(
+                                    &mut conns,
+                                    &mut next_token,
+                                    stream,
+                                    conn_id,
+                                    slot,
+                                    draining.is_some(),
+                                );
+                            }
+                            Cmd::Complete { token, bytes } => {
+                                if let Some(conn) = conns.get_mut(&token) {
+                                    conn.awaiting = conn.awaiting.saturating_sub(1);
+                                    conn.last_activity = Instant::now();
+                                    self.queue_write(conn, bytes);
+                                }
+                                // unknown token: the client vanished —
+                                // the bytes are dropped, the permit was
+                                // already released by the callback
+                            }
+                            Cmd::Shutdown => {
+                                if draining.is_none() {
+                                    draining = Some(Instant::now());
+                                    for conn in conns.values_mut() {
+                                        self.begin_drain(conn);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let Some(conn) = conns.get_mut(&ev.token) else { continue };
+                if ev.readable || ev.hangup {
+                    self.read_ready(conn);
+                }
+                if ev.writable {
+                    self.flush(conn);
+                    self.after_flush(conn);
+                }
+                self.update_interest(conn);
+                if closable(conn) {
+                    self.close(&mut conns, ev.token);
+                }
+            }
+            events = batch;
+
+            // tick work: idle reaping, drain deadline, close sweeps
+            let now = Instant::now();
+            let force = draining.is_some_and(|t| now.duration_since(t) >= self.cfg.drain_deadline);
+            let doomed: Vec<u64> = conns
+                .iter()
+                .filter(|(_, c)| {
+                    force
+                        || closable(c)
+                        || (!c.read_shut
+                            && c.awaiting == 0
+                            && c.wq.is_empty()
+                            && now.duration_since(c.last_activity) >= self.cfg.idle_timeout)
+                })
+                .map(|(t, _)| *t)
+                .collect();
+            for token in doomed {
+                self.close(&mut conns, token);
+            }
+            self.load.store(conns.len(), Ordering::Relaxed);
+            if draining.is_some() && conns.is_empty() {
+                break;
+            }
+        }
+    }
+
+    fn accept(
+        &self,
+        conns: &mut HashMap<u64, Conn>,
+        next_token: &mut u64,
+        stream: TcpStream,
+        conn_id: u64,
+        slot: super::admission::ConnSlot,
+        draining: bool,
+    ) {
+        if draining {
+            // raced the drain: best-effort goodbye, no state kept
+            let mut s = stream;
+            let _ = s.write_all(&encode_frame(&Frame::Error {
+                id: 0,
+                err: WireError::shutting_down(),
+            }));
+            self.metrics().record_conn_close();
+            drop(slot);
+            return;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            self.metrics().record_conn_close();
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let fd = stream.as_raw_fd();
+        let token = *next_token;
+        *next_token += 1;
+        let mut conn = Conn {
+            stream,
+            fd,
+            token,
+            conn_id,
+            decoder: FrameDecoder::new(),
+            wq: VecDeque::new(),
+            woff: 0,
+            wq_bytes: 0,
+            registered: None,
+            reads_paused: false,
+            read_shut: false,
+            closing: false,
+            dead: false,
+            awaiting: 0,
+            window: self.admission.conn_window(),
+            last_activity: Instant::now(),
+            _slot: slot,
+        };
+        if self.poller.register(fd, token, Interest::READ).is_err() {
+            self.metrics().record_conn_close();
+            return; // conn (stream + slot) drops here
+        }
+        conn.registered = Some(Interest::READ);
+        conns.insert(token, conn);
+        self.load.store(conns.len(), Ordering::Relaxed);
+    }
+
+    /// Level-triggered read pump: read until `WouldBlock`, EOF, or the
+    /// connection pauses/poisons itself while handling frames.
+    fn read_ready(&self, conn: &mut Conn) {
+        let mut buf = [0u8; 16 * 1024];
+        let mut syscalls = 0u64;
+        while !conn.read_shut && !conn.reads_paused && !conn.dead {
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    syscalls += 1;
+                    conn.read_shut = true;
+                    if conn.decoder.buffered() > 0 {
+                        // hangup mid-frame: same verdict as the
+                        // blocking path's FrameReader
+                        self.metrics().record_malformed_frame();
+                        self.goodbye(
+                            conn,
+                            WireError::malformed("connection closed mid-frame"),
+                        );
+                    }
+                    break;
+                }
+                Ok(n) => {
+                    syscalls += 1;
+                    conn.decoder.feed(&buf[..n]);
+                    conn.last_activity = Instant::now();
+                    self.pump_decoder(conn);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    syscalls += 1;
+                    break;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    syscalls += 1;
+                    self.mark_dead(conn);
+                    break;
+                }
+            }
+        }
+        self.metrics().record_net_read_syscalls(syscalls);
+    }
+
+    /// Decode and handle every complete buffered frame (called on read
+    /// and on backpressure release — unpausing must replay frames that
+    /// were already buffered when the pause hit).
+    fn pump_decoder(&self, conn: &mut Conn) {
+        while !conn.read_shut && !conn.reads_paused && !conn.dead {
+            match conn.decoder.next() {
+                Ok(Some(frame)) => {
+                    conn.last_activity = Instant::now();
+                    if let Err(violation) = self.handle_frame(conn, frame) {
+                        self.metrics().record_malformed_frame();
+                        self.goodbye(conn, WireError::malformed(violation));
+                        conn.read_shut = true;
+                    }
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    self.metrics().record_malformed_frame();
+                    self.goodbye(conn, WireError::malformed(e.to_string()));
+                    conn.read_shut = true;
+                }
+            }
+        }
+    }
+
+    /// One decoded frame. `Err` is a protocol violation (mirrors the
+    /// thread transport's contract exactly).
+    fn handle_frame(&self, conn: &mut Conn, frame: Frame) -> Result<(), String> {
+        match frame {
+            Frame::Ping(nonce) => {
+                self.queue_write(conn, encode_frame(&Frame::Pong(nonce)));
+                Ok(())
+            }
+            Frame::Classify(call) => {
+                let req = build_call(&call, RequestKind::Classify);
+                self.submit(conn, call.id, call.tenant.clone(), req, None);
+                Ok(())
+            }
+            Frame::Regress(call) => {
+                let req = build_call(&call, RequestKind::Regress);
+                self.submit(conn, call.id, call.tenant.clone(), req, None);
+                Ok(())
+            }
+            Frame::StreamFrame(s) => {
+                let namespaced = format!("c{}:{}", conn.conn_id, s.session);
+                let req = build_call(&s.call, s.kind)
+                    .with_session(namespaced, s.frame)
+                    .with_stream_epsilon(s.epsilon);
+                self.submit(conn, s.call.id, s.call.tenant.clone(), req, Some(s.session));
+                Ok(())
+            }
+            Frame::Pong(_) | Frame::ClassifyResp { .. } | Frame::PoseResp { .. } => {
+                Err("client sent a server-only frame".into())
+            }
+            Frame::Error { err, .. } => {
+                Err(format!("client sent an error frame ({})", err.code.label()))
+            }
+        }
+    }
+
+    /// Admission-gate one request and submit it to the pool. The
+    /// worker's callback routes the encoded response back into this
+    /// shard through the eventfd mailbox.
+    fn submit(
+        &self,
+        conn: &mut Conn,
+        id: u64,
+        tenant: Option<String>,
+        req: InferenceRequest,
+        client_session: Option<String>,
+    ) {
+        let permit = match self.admission.try_admit(conn.window.as_ref(), tenant.as_deref()) {
+            Ok(p) => p,
+            Err(rejection) => {
+                self.metrics().record_overload_rejection();
+                self.queue_write(
+                    conn,
+                    encode_frame(&Frame::Error {
+                        id,
+                        err: WireError::overloaded(rejection.message(tenant.as_deref())),
+                    }),
+                );
+                return;
+            }
+        };
+        conn.awaiting += 1;
+        let token = conn.token;
+        let sender = Arc::clone(&self.sender);
+        self.coord.submit_request_with(req, move |result| {
+            let frame = response_frame(id, result, client_session.as_ref());
+            sender.push(Cmd::Complete { token, bytes: encode_frame(&frame) });
+            drop(permit);
+        });
+    }
+
+    /// Queue a pre-encoded frame, attempt an immediate flush, then
+    /// apply the backpressure ladder: high-water mark pauses reads,
+    /// the hard cap cuts the connection with a goodbye.
+    fn queue_write(&self, conn: &mut Conn, bytes: Vec<u8>) {
+        if conn.dead || conn.closing {
+            return;
+        }
+        conn.wq_bytes += bytes.len();
+        conn.wq.push_back(bytes);
+        self.flush(conn);
+        if conn.dead {
+            return;
+        }
+        if conn.wq_bytes > self.cfg.write_hard_cap {
+            // slow reader past saving: drop the backlog, say goodbye
+            self.metrics().record_slow_reader_disconnect();
+            conn.wq.clear();
+            conn.woff = 0;
+            conn.wq_bytes = 0;
+            self.goodbye(
+                conn,
+                WireError::overloaded("write buffer overflow: slow reader disconnected"),
+            );
+            conn.read_shut = true;
+        } else if conn.wq_bytes > self.cfg.write_hwm && !conn.reads_paused && !conn.read_shut {
+            conn.reads_paused = true;
+            self.metrics().record_backpressure_stall();
+        }
+        self.update_interest(conn);
+    }
+
+    /// Queue a goodbye frame and mark the connection to close once it
+    /// flushes.
+    fn goodbye(&self, conn: &mut Conn, err: WireError) {
+        if conn.dead || conn.closing {
+            return;
+        }
+        conn.wq_bytes += {
+            let bytes = encode_frame(&Frame::Error { id: 0, err });
+            let n = bytes.len();
+            conn.wq.push_back(bytes);
+            n
+        };
+        conn.closing = true;
+        self.flush(conn);
+        self.update_interest(conn);
+    }
+
+    /// Drain semantics: stop reading, send the `ShuttingDown` goodbye,
+    /// but keep the connection until its in-flight responses flush
+    /// (`closable` holds it open while `awaiting > 0`).
+    fn begin_drain(&self, conn: &mut Conn) {
+        if conn.dead {
+            return;
+        }
+        conn.read_shut = true;
+        if !conn.closing {
+            conn.wq_bytes += {
+                let bytes =
+                    encode_frame(&Frame::Error { id: 0, err: WireError::shutting_down() });
+                let n = bytes.len();
+                conn.wq.push_back(bytes);
+                n
+            };
+            self.flush(conn);
+        }
+        self.update_interest(conn);
+    }
+
+    /// Write the queue onto the socket until it empties or the socket
+    /// stops accepting.
+    fn flush(&self, conn: &mut Conn) {
+        if conn.dead {
+            return;
+        }
+        let mut syscalls = 0u64;
+        while let Some(front) = conn.wq.front() {
+            match conn.stream.write(&front[conn.woff..]) {
+                Ok(n) => {
+                    syscalls += 1;
+                    conn.woff += n;
+                    conn.wq_bytes = conn.wq_bytes.saturating_sub(n);
+                    if conn.woff >= front.len() {
+                        conn.wq.pop_front();
+                        conn.woff = 0;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    syscalls += 1;
+                    break;
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    syscalls += 1;
+                    self.mark_dead(conn);
+                    break;
+                }
+            }
+        }
+        if syscalls > 0 {
+            self.metrics().record_net_write_syscalls(syscalls);
+        }
+    }
+
+    /// Post-flush bookkeeping: release backpressure once the queue
+    /// drains below the low-water mark (half the HWM), replaying any
+    /// frames that were buffered while paused.
+    fn after_flush(&self, conn: &mut Conn) {
+        if conn.reads_paused && conn.wq_bytes <= self.cfg.write_hwm / 2 {
+            conn.reads_paused = false;
+            self.pump_decoder(conn);
+        }
+    }
+
+    /// The client's socket failed — no more I/O will ever succeed.
+    /// Writes are dropped; the connection lingers (invisible to epoll)
+    /// only until its in-flight worker responses come back.
+    fn mark_dead(&self, conn: &mut Conn) {
+        conn.dead = true;
+        conn.read_shut = true;
+        conn.wq.clear();
+        conn.woff = 0;
+        conn.wq_bytes = 0;
+    }
+
+    /// Reconcile the poller's interest set with the connection state;
+    /// fully quiescent connections are deregistered so a hung-up fd
+    /// cannot spin the shard at level trigger.
+    fn update_interest(&self, conn: &mut Conn) {
+        let want = Interest {
+            read: !conn.read_shut && !conn.reads_paused && !conn.dead,
+            write: !conn.wq.is_empty() && !conn.dead,
+        };
+        if conn.registered == Some(want) {
+            return;
+        }
+        let r = if want == Interest::NONE {
+            conn.registered = None;
+            self.poller.deregister(conn.fd)
+        } else {
+            let r = match conn.registered {
+                Some(_) => self.poller.modify(conn.fd, conn.token, want),
+                None => self.poller.register(conn.fd, conn.token, want),
+            };
+            conn.registered = Some(want);
+            r
+        };
+        if r.is_err() {
+            self.mark_dead(conn);
+            conn.registered = None;
+        }
+    }
+
+    fn close(&self, conns: &mut HashMap<u64, Conn>, token: u64) {
+        if let Some(conn) = conns.remove(&token) {
+            if conn.registered.is_some() {
+                let _ = self.poller.deregister(conn.fd);
+            }
+            self.metrics().record_conn_close();
+            // dropping `conn` closes the socket and releases the slot
+        }
+        self.load.store(conns.len(), Ordering::Relaxed);
+    }
+}
+
+/// Whether a connection has nothing left to do and should be torn
+/// down: its socket died, or it will never read again and every
+/// admitted response has been flushed.
+fn closable(conn: &Conn) -> bool {
+    if conn.dead {
+        return conn.awaiting == 0;
+    }
+    if conn.closing {
+        return conn.wq.is_empty();
+    }
+    conn.read_shut && conn.awaiting == 0 && conn.wq.is_empty()
+}

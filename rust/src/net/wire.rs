@@ -759,6 +759,57 @@ pub fn write_frame(w: &mut impl Write, f: &Frame) -> std::io::Result<()> {
     w.write_all(&encode_frame(f))
 }
 
+/// Push-based incremental frame decoder: the reassembly state machine
+/// of the reactor path (`net/reactor.rs`), where bytes arrive from
+/// nonblocking reads in arbitrary fragments and there is no `Read` to
+/// pull from. [`Self::feed`] appends whatever arrived (a single byte
+/// is fine); [`Self::next`] yields complete frames until the buffered
+/// prefix is exhausted.
+///
+/// Header fields are validated as soon as their bytes are present (via
+/// [`decode_frame`]), so a garbage prefix is rejected after at most
+/// [`HEADER_LEN`] buffered bytes — a hostile peer cannot make the
+/// decoder buffer an unbounded "payload". The blocking [`FrameReader`]
+/// is a thin pull adapter over this same state machine, which is what
+/// makes "byte-identical decode vs the blocking path" a structural
+/// property rather than a test hope.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append freshly-read bytes (any fragmentation, including 1 byte
+    /// at a time).
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Decode the next complete frame out of the buffered prefix.
+    /// `Ok(None)` means "feed me more bytes"; any `Err` is fatal for
+    /// the stream.
+    pub fn next(&mut self) -> Result<Option<Frame>, WireDecodeError> {
+        match decode_frame(&self.buf) {
+            Ok((frame, used)) => {
+                self.buf.drain(..used);
+                Ok(Some(frame))
+            }
+            Err(WireDecodeError::Truncated) => Ok(None),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Bytes buffered but not yet decoded (a non-empty value at EOF
+    /// means the peer hung up mid-frame).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+}
+
 /// What a [`FrameReader::next`] call produced.
 #[derive(Debug)]
 pub enum ReadEvent {
@@ -773,10 +824,10 @@ pub enum ReadEvent {
 
 /// Incremental frame reader over any byte stream: survives arbitrary
 /// fragmentation and read timeouts mid-frame (the buffered prefix is
-/// kept across calls).
+/// kept across calls). Pull adapter over [`FrameDecoder`].
 #[derive(Default)]
 pub struct FrameReader {
-    buf: Vec<u8>,
+    dec: FrameDecoder,
 }
 
 impl FrameReader {
@@ -787,18 +838,13 @@ impl FrameReader {
     /// Return the next frame, reading from `r` as needed.
     pub fn next(&mut self, r: &mut impl Read) -> Result<ReadEvent, WireDecodeError> {
         loop {
-            match decode_frame(&self.buf) {
-                Ok((frame, used)) => {
-                    self.buf.drain(..used);
-                    return Ok(ReadEvent::Frame(frame));
-                }
-                Err(WireDecodeError::Truncated) => {} // need more bytes
-                Err(e) => return Err(e),
+            if let Some(frame) = self.dec.next()? {
+                return Ok(ReadEvent::Frame(frame));
             }
             let mut tmp = [0u8; 8192];
             match r.read(&mut tmp) {
                 Ok(0) => {
-                    return if self.buf.is_empty() {
+                    return if self.dec.buffered() == 0 {
                         Ok(ReadEvent::Eof)
                     } else {
                         Err(WireDecodeError::Malformed(
@@ -806,7 +852,7 @@ impl FrameReader {
                         ))
                     };
                 }
-                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Ok(n) => self.dec.feed(&tmp[..n]),
                 Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
                     return Ok(ReadEvent::Idle)
                 }

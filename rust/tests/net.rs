@@ -29,9 +29,9 @@ use mc_cim::dropout::DropoutKind;
 use mc_cim::error::RequestKind;
 use mc_cim::fleet::qos::Priority;
 use mc_cim::net::{
-    decode_frame, encode_frame, AdmissionConfig, ErrorCode, Frame, NetServer, NetServerConfig,
-    WireCall, WireClient, WireDecodeError, WireError, WireReply, WireStreamCall, HEADER_LEN,
-    MAX_PAYLOAD, WIRE_MAGIC, WIRE_VERSION,
+    decode_frame, encode_frame, AdmissionConfig, ErrorCode, Frame, FrameDecoder, NetServer,
+    NetServerConfig, Transport, WireCall, WireClient, WireDecodeError, WireError, WireReply,
+    WireStreamCall, HEADER_LEN, MAX_PAYLOAD, WIRE_MAGIC, WIRE_VERSION,
 };
 use mc_cim::uncertainty::policy::Verdict;
 use mc_cim::util::testkit::f32_vec;
@@ -61,6 +61,20 @@ fn start_server_idle(
     admission: AdmissionConfig,
     idle_timeout: Duration,
 ) -> NetServer {
+    start_server_cfg(
+        dir,
+        workers,
+        NetServerConfig {
+            listen: "127.0.0.1:0".into(),
+            admission,
+            idle_timeout,
+            drain_deadline: Duration::from_secs(5),
+            ..Default::default()
+        },
+    )
+}
+
+fn start_server_cfg(dir: &Path, workers: usize, cfg: NetServerConfig) -> NetServer {
     let coord = Coordinator::start(CoordinatorConfig {
         artifacts: dir.to_string_lossy().into_owned(),
         workers,
@@ -69,16 +83,7 @@ fn start_server_idle(
         ..Default::default()
     })
     .unwrap();
-    NetServer::start(
-        coord,
-        NetServerConfig {
-            listen: "127.0.0.1:0".into(),
-            admission,
-            idle_timeout,
-            drain_deadline: Duration::from_secs(5),
-        },
-    )
-    .unwrap()
+    NetServer::start(coord, cfg).unwrap()
 }
 
 fn client_for(server: &NetServer) -> WireClient {
@@ -485,6 +490,215 @@ fn shutdown_flushes_inflight_responses() {
         other => panic!("unexpected reply: {other:?}"),
     }
     assert_eq!(h.join().unwrap(), 0, "nothing may miss the drain deadline");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite of the reactor PR: the push-based [`FrameDecoder`] the
+/// reactor reassembles partial reads with must agree byte-for-byte
+/// with the one-shot `decode_frame` path, for every frame type, under
+/// 1-byte-at-a-time delivery and seeded random read splits — and never
+/// panic on garbage.
+#[test]
+fn reactor_decoder_matches_the_blocking_path_under_any_read_split() {
+    let frames = exemplar_frames();
+    let stream: Vec<u8> = frames.iter().flat_map(encode_frame).collect();
+
+    // worst case: the kernel hands the reactor one byte per readiness
+    let mut dec = FrameDecoder::new();
+    let mut got = Vec::new();
+    for b in &stream {
+        dec.feed(std::slice::from_ref(b));
+        while let Some(f) = dec.next().unwrap() {
+            got.push(f);
+        }
+    }
+    assert_eq!(got, frames, "1-byte feed must reproduce every frame");
+    assert_eq!(dec.buffered(), 0, "nothing may linger after the last frame");
+
+    // seeded random split points over the same multi-frame stream
+    let mut rng = Pcg32::seeded(0xF00D);
+    for round in 0..200 {
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        let mut off = 0;
+        while off < stream.len() {
+            let n = 1 + rng.below(stream.len() - off);
+            dec.feed(&stream[off..off + n]);
+            off += n;
+            while let Some(f) = dec.next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames, "round {round}: split reads changed the decode");
+    }
+
+    // garbage: the push decoder must answer exactly like the one-shot
+    // decoder (modulo Truncated, which the push side reports as "feed
+    // me more"), and neither may panic
+    for _ in 0..400 {
+        let n = rng.below(96);
+        let garbage: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let mut dec = FrameDecoder::new();
+        dec.feed(&garbage);
+        match (dec.next(), decode_frame(&garbage)) {
+            (Ok(None), Err(WireDecodeError::Truncated)) => {}
+            (Ok(Some(f)), Ok((g, _))) => assert_eq!(f, g),
+            (Err(e), Err(g)) => assert_eq!(e, g),
+            (push, pull) => panic!("decoder paths disagree: push={push:?} pull={pull:?}"),
+        }
+    }
+}
+
+/// Satellite of the reactor PR: a tenant at its in-flight cap gets a
+/// retryable `Overloaded` that NAMES the tenant, while other tenants
+/// (and tenant-less requests) sail through.
+#[test]
+fn tenant_inflight_caps_shed_by_name_over_loopback() {
+    let dir = net_dir("tenantcap");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    // cap 0: every "acme" request is deterministically refused
+    let server = start_server(
+        &dir,
+        1,
+        AdmissionConfig {
+            tenant_inflight: vec![("acme".into(), 0)],
+            ..AdmissionConfig::default()
+        },
+    );
+    let mut client = client_for(&server);
+    client.set_tenant(Some("acme".into()));
+    let id = client.send_classify("mnist", 4, None, image(70)).unwrap();
+    match client.recv_matching(id).unwrap() {
+        WireReply::Error(e) => {
+            assert_eq!(e.code, ErrorCode::Overloaded);
+            assert!(e.retryable, "a tenant cap must invite a retry");
+            assert!(
+                e.message.contains("acme"),
+                "the rejection must name the tenant, got: {}",
+                e.message
+            );
+        }
+        other => panic!("expected a tenant Overloaded, got {other:?}"),
+    }
+    // the same connection serving a different tenant is unaffected
+    client.set_tenant(Some("lab".into()));
+    client.classify("mnist", 4, None, image(71)).unwrap();
+    client.set_tenant(None);
+    client.classify("mnist", 4, None, image(72)).unwrap();
+    assert_eq!(server.metrics().overload_rejections(), 1);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite of the reactor PR: a client that floods requests but
+/// never reads responses is first throttled (read interest parked at
+/// the write high-water mark) and then disconnected at the hard cap —
+/// the server never buffers without bound and keeps serving others.
+#[cfg(target_os = "linux")]
+#[test]
+fn a_slow_reader_is_throttled_then_disconnected() {
+    let dir = net_dir("slowreader");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let server = start_server_cfg(
+        &dir,
+        1,
+        NetServerConfig {
+            listen: "127.0.0.1:0".into(),
+            admission: AdmissionConfig::default(),
+            idle_timeout: Duration::from_secs(30),
+            drain_deadline: Duration::from_secs(5),
+            // tiny queue so loopback socket buffers overflow fast:
+            // stall at 1 KiB queued, disconnect at 4 KiB
+            write_buf: 1024,
+            ..Default::default()
+        },
+    );
+    assert!(
+        !server.shard_conns().is_empty(),
+        "the Linux default transport must be the sharded reactor"
+    );
+    // flood pings (to fill the socket buffers fast) interleaved with
+    // classifies (whose worker completions keep arriving AFTER reads
+    // pause, which is the only road past the hard cap) — and never
+    // read a single response
+    let mut hog = TcpStream::connect(server.local_addr()).unwrap();
+    hog.set_write_timeout(Some(Duration::from_millis(200))).unwrap();
+    let ping = encode_frame(&Frame::Ping(1));
+    let classify = encode_frame(&Frame::Classify(WireCall {
+        id: 5,
+        model: "mnist".into(),
+        samples: 4,
+        seed: Some(1),
+        input: image(80),
+        tenant: None,
+        priority: Priority::Normal,
+        dropout_kind: None,
+    }));
+    let mut batch = Vec::new();
+    for _ in 0..64 {
+        batch.extend_from_slice(&ping);
+    }
+    batch.extend_from_slice(&classify);
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while server.metrics().slow_reader_disconnects() == 0 {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "the write hard cap never tripped"
+        );
+        // write errors just mean the server already gave up on us;
+        // keep pumping until the metric shows it
+        let _ = hog.write_all(&batch);
+    }
+    assert!(
+        server.metrics().backpressure_stalls() >= 1,
+        "the high-water mark must stall reads before the disconnect"
+    );
+    drop(hog);
+    // the reactor ledger is visible in the human summary
+    let summary = server.metrics().summary();
+    assert!(summary.contains("reactor: shards="), "missing ledger in: {summary}");
+    // let the hog's admitted backlog finish so the polite client is
+    // not shed by the inflight cap the flood saturated
+    let drained = std::time::Instant::now() + Duration::from_secs(30);
+    while server.admission().inflight() > 0 {
+        assert!(
+            std::time::Instant::now() < drained,
+            "the flood's admitted requests never completed"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // ...and the server still serves well-behaved clients
+    let mut polite = client_for(&server);
+    polite.ping().unwrap();
+    polite.classify("mnist", 4, None, image(80)).unwrap();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The PR 6 thread-per-connection engine stays alive as an explicit
+/// [`Transport::Threads`] choice (it is the measured baseline in
+/// `benches/serve_scale.rs` and the non-Linux fallback).
+#[test]
+fn the_thread_per_connection_baseline_still_serves() {
+    let dir = net_dir("threads");
+    write_synthetic_artifacts(&dir, ARTIFACT_SEED).unwrap();
+    let server = start_server_cfg(
+        &dir,
+        1,
+        NetServerConfig {
+            listen: "127.0.0.1:0".into(),
+            transport: Transport::Threads,
+            drain_deadline: Duration::from_secs(5),
+            ..Default::default()
+        },
+    );
+    assert!(server.shard_conns().is_empty(), "Threads transport has no shards");
+    let mut client = client_for(&server);
+    client.ping().unwrap();
+    let a = client.classify("mnist", 8, Some(77), image(21)).unwrap();
+    let b = client.classify("mnist", 8, Some(77), image(21)).unwrap();
+    assert_eq!(a, b, "both transports serve the same deterministic surface");
+    server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
 
